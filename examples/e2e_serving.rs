@@ -1,0 +1,100 @@
+//! End-to-end serving driver (the repo's headline validation run,
+//! EXPERIMENTS.md §E2E): load the real AOT face-detection artifacts,
+//! serve batched detection requests through the **full live stack**
+//! (client socket → edge IS → APe/DDS → device APr → PJRT container →
+//! result relay), and report latency/throughput per image-size variant.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --offline --example e2e_serving
+//! ```
+
+use std::time::{Duration, Instant};
+
+use edge_dds::sim::ArrivalPattern;
+use edge_dds::config::{SystemConfig, WorkloadConfig};
+use edge_dds::core::NodeId;
+use edge_dds::live::LiveCluster;
+use edge_dds::runtime::RuntimeService;
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::ImageStream;
+use edge_dds::util::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    edge_dds::util::logger::init();
+    let artifacts = std::env::var("EDGE_DDS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // --- Stage 1: raw model serving (no scheduler) — Table II analogue ---
+    println!("== stage 1: raw PJRT serving, per image-size variant ==");
+    let runtime = RuntimeService::spawn(&artifacts)?;
+    println!("{:>6} {:>12} {:>12} {:>12}", "side", "mean ms", "min ms", "imgs/s");
+    for &side in runtime.sides().to_vec().iter() {
+        let mut times = Vec::new();
+        for i in 0..10u64 {
+            let (_det, ms) = runtime.detect_synth(side, i)?;
+            times.push(ms);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        println!("{:>6} {:>12.2} {:>12.2} {:>12.1}", side, mean, min, 1e3 / mean);
+    }
+
+    // --- Stage 2: full-stack batched serving through the live cluster ---
+    println!("\n== stage 2: full-stack serving (client→edge→device→PJRT) ==");
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    cfg.workload = WorkloadConfig {
+        n_images: 60,
+        interval_ms: 50.0,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms: 5_000.0,
+        side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+    };
+
+    let cluster = LiveCluster::start(&cfg, RuntimeService::spawn(&artifacts)?)?;
+    std::thread::sleep(Duration::from_millis(200)); // joins settle
+
+    let frames = ImageStream::new(cfg.workload, NodeId(1), SplitMix64::new(99)).generate();
+    let n = frames.len();
+    let t0 = Instant::now();
+    cluster.stream(frames)?;
+    let summary = cluster.wait(Duration::from_secs(180));
+    let wall = t0.elapsed().as_secs_f64();
+
+    let lat = summary.latency.as_ref().expect("completed tasks");
+    println!(
+        "served {n} requests in {wall:.1} s → {:.1} req/s sustained",
+        summary.total as f64 / wall
+    );
+    println!(
+        "e2e latency: mean {:.1} ms  p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
+        lat.mean, lat.p50, lat.p90, lat.p99, lat.max
+    );
+    println!(
+        "met {}/{} within {} ms; {:.0}% executed at the camera device",
+        summary.met,
+        summary.total,
+        cfg.workload.deadline_ms,
+        summary.local_fraction * 100.0
+    );
+    if let Some(p) = &summary.process {
+        println!("container (PJRT) time: mean {:.1} ms  p90 {:.1} ms", p.mean, p.p90);
+    }
+    cluster.shutdown();
+
+    // --- Stage 3: the same workload in virtual mode for comparison ---
+    println!("\n== stage 3: same workload, virtual mode (calibrated sim) ==");
+    let report = edge_dds::sim::ScenarioBuilder::new(cfg).run();
+    let s = &report.summary;
+    println!(
+        "sim: met {}/{}; mean e2e {:.1} ms (paper-calibrated container model)",
+        s.met,
+        s.total,
+        s.latency.as_ref().map(|l| l.mean).unwrap_or(0.0)
+    );
+    println!("\ne2e serving driver done — record these numbers in EXPERIMENTS.md §E2E");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: run the paper's testbed (edge server + 2 Raspberry Pis) in
+//! virtual mode under all four scheduling algorithms and print who meets
+//! the 5-second constraint.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use edge_dds::sim::ArrivalPattern;
+use edge_dds::config::WorkloadConfig;
+use edge_dds::metrics::writer::summary_json;
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::ScenarioBuilder;
+
+fn main() {
+    edge_dds::util::logger::init();
+
+    // The paper's Fig. 5 style workload: 50 frames every 100 ms, 5 s
+    // end-to-end constraint, 29 KB test image.
+    let workload = WorkloadConfig {
+        n_images: 50,
+        interval_ms: 100.0,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms: 5_000.0,
+        side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+    };
+
+    println!("edge-dds quickstart — 50 images @100 ms, 5 s constraint\n");
+    println!("{:<8} {:>6} {:>8} {:>10} {:>12} {:>12}", "policy", "met", "missed", "local%", "mean ms", "p90 ms");
+
+    for policy in PolicyKind::PAPER {
+        let report = ScenarioBuilder::paper_testbed(policy).workload(workload).run();
+        let s = &report.summary;
+        let (mean, p90) = s
+            .latency
+            .as_ref()
+            .map(|l| (l.mean, l.p90))
+            .unwrap_or((0.0, 0.0));
+        println!(
+            "{:<8} {:>6} {:>8} {:>9.0}% {:>12.1} {:>12.1}",
+            policy.as_str(),
+            s.met,
+            s.missed,
+            s.local_fraction * 100.0,
+            mean,
+            p90
+        );
+    }
+
+    // Machine-readable single-run output.
+    let dds = ScenarioBuilder::paper_testbed(PolicyKind::Dds).workload(workload).run();
+    println!("\n{}", summary_json("dds", &dds.summary));
+    println!(
+        "\nsimulated {:.1} s of cluster time in {:.1} ms of wall time ({} events)",
+        dds.virtual_ms / 1e3,
+        dds.wall_us as f64 / 1e3,
+        dds.events
+    );
+}

@@ -1,0 +1,75 @@
+"""AOT compile path: lower the L2 detect graph to HLO **text** artifacts.
+
+HLO text (NOT `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the runtime's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). Lowered with return_tuple=True —
+the Rust side unwraps the tuple.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts --sizes 64 128 256
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_size(side: int) -> str:
+    fn = model.make_detect_fn(interpret=True)
+    spec = jax.ShapeDtypeStruct((side, side, 3), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", type=int, nargs="+", default=[64, 128, 256])
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"model": "haar-face-detect", "entries": []}
+    for side in args.sizes:
+        text = lower_size(side)
+        name = f"face_{side}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "side": side,
+                "file": name,
+                "input": {"shape": [side, side, 3], "dtype": "f32"},
+                "outputs": [
+                    {"name": "counts", "shape": [model.MAX_LEVELS], "dtype": "f32"},
+                    {"name": "max_score", "shape": [], "dtype": "f32"},
+                    {"name": "hist", "shape": [model.N_BINS], "dtype": "f32"},
+                ],
+                "levels": model.n_levels(side),
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

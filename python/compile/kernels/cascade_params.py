@@ -1,0 +1,213 @@
+"""Procedurally generated Haar-like cascade parameters.
+
+The paper runs OpenCV's trained Viola-Jones cascade inside its face-detection
+container. A trained cascade file is proprietary-ish data we do not ship;
+what the *system* needs is a compute graph with the same shape: multi-stage
+box-feature evaluation over sliding windows on an integral image. We generate
+a deterministic synthetic cascade (fixed seed) with the same structure
+(stages of increasing feature count, per-feature weighted rectangle sums,
+per-stage accept thresholds). DESIGN.md documents this substitution.
+
+All parameters are plain Python ints/floats so they bake into the kernel
+closure as constants and lower into the HLO (no runtime parameter traffic).
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+# Window side (paper's Viola-Jones uses 24; 16 keeps the smallest pyramid
+# level (32 px) meaningful and all position counts multiples of 16).
+WIN = 16
+
+# Haar kinds: each is a list of (dx, dy, w, h, weight) sub-rectangles
+# relative to the window origin, in *units of the feature cell*.
+_KINDS = (
+    "edge_h",   # 2-rect horizontal edge
+    "edge_v",   # 2-rect vertical edge
+    "line_h",   # 3-rect horizontal line
+    "line_v",   # 3-rect vertical line
+    "center",   # 4-rect center-surround (checker)
+)
+
+
+@dataclass(frozen=True)
+class Rect:
+    x: int
+    y: int
+    w: int
+    h: int
+    weight: float
+
+
+@dataclass(frozen=True)
+class Feature:
+    rects: Tuple[Rect, ...]
+    # post-sum shaping: score contribution = amp * tanh(v - shift)
+    amp: float
+    shift: float
+
+
+@dataclass(frozen=True)
+class Stage:
+    features: Tuple[Feature, ...]
+    threshold: float
+
+
+class _SplitMix:
+    """Tiny deterministic PRNG (SplitMix64) — mirrored by rust/src/util/rng.rs
+    so both sides can generate identical synthetic data."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return (z ^ (z >> 31)) & self.MASK
+
+    def uniform(self) -> float:
+        return self.next_u64() / float(1 << 64)
+
+    def randint(self, lo: int, hi: int) -> int:
+        """Inclusive range [lo, hi]."""
+        return lo + self.next_u64() % (hi - lo + 1)
+
+    def choice(self, seq):
+        return seq[self.randint(0, len(seq) - 1)]
+
+
+def _make_feature(rng: _SplitMix) -> Feature:
+    kind = rng.choice(_KINDS)
+    # Feature cell geometry, constrained inside the WIN x WIN window.
+    if kind == "edge_h":
+        cw = rng.randint(2, WIN // 2)
+        ch = rng.randint(2, WIN - 1)
+        x = rng.randint(0, WIN - 2 * cw)
+        y = rng.randint(0, WIN - ch)
+        rects = (Rect(x, y, cw, ch, +1.0), Rect(x + cw, y, cw, ch, -1.0))
+    elif kind == "edge_v":
+        cw = rng.randint(2, WIN - 1)
+        ch = rng.randint(2, WIN // 2)
+        x = rng.randint(0, WIN - cw)
+        y = rng.randint(0, WIN - 2 * ch)
+        rects = (Rect(x, y, cw, ch, +1.0), Rect(x, y + ch, cw, ch, -1.0))
+    elif kind == "line_h":
+        cw = rng.randint(2, WIN // 3)
+        ch = rng.randint(2, WIN - 1)
+        x = rng.randint(0, WIN - 3 * cw)
+        y = rng.randint(0, WIN - ch)
+        rects = (
+            Rect(x, y, cw, ch, -1.0),
+            Rect(x + cw, y, cw, ch, +2.0),
+            Rect(x + 2 * cw, y, cw, ch, -1.0),
+        )
+    elif kind == "line_v":
+        cw = rng.randint(2, WIN - 1)
+        ch = rng.randint(2, WIN // 3)
+        x = rng.randint(0, WIN - cw)
+        y = rng.randint(0, WIN - 3 * ch)
+        rects = (
+            Rect(x, y, cw, ch, -1.0),
+            Rect(x, y + ch, cw, ch, +2.0),
+            Rect(x, y + 2 * ch, cw, ch, -1.0),
+        )
+    else:  # center-surround
+        cw = rng.randint(2, WIN // 2 - 1)
+        ch = rng.randint(2, WIN // 2 - 1)
+        x = rng.randint(1, WIN - 2 * cw)
+        y = rng.randint(1, WIN - 2 * ch)
+        rects = (
+            Rect(x - 1, y - 1, 2 * cw + 1, 2 * ch + 1, -1.0),
+            Rect(x, y, cw * 2 - 1, ch * 2 - 1, +2.0),
+        )
+    amp = 0.5 + rng.uniform()          # in [0.5, 1.5)
+    shift = (rng.uniform() - 0.5) * 0.2
+    return Feature(rects=rects, amp=amp, shift=shift)
+
+
+def _stage_scores_np(stage: Stage, windows) -> "np.ndarray":
+    """Stage score for a batch of (K, WIN, WIN) windows — numpy, build-time
+    calibration only."""
+    import numpy as np
+
+    k = windows.shape[0]
+    # Zero-padded integral images, batched.
+    s = np.cumsum(np.cumsum(windows.astype(np.float64), axis=1), axis=2)
+    ii = np.pad(s, ((0, 0), (1, 0), (1, 0)))
+    win_sum = ii[:, WIN, WIN]
+    norm = win_sum / float(WIN * WIN) + 1.0
+    score = np.zeros(k)
+    for feat in stage.features:
+        v = np.zeros(k)
+        for r in feat.rects:
+            v += r.weight * (
+                ii[:, r.y + r.h, r.x + r.w]
+                - ii[:, r.y, r.x + r.w]
+                - ii[:, r.y + r.h, r.x]
+                + ii[:, r.y, r.x]
+            )
+        v = v / (norm * float(WIN * WIN))
+        score += feat.amp * np.tanh(v - feat.shift)
+    return score
+
+
+def make_cascade(
+    seed: int = 7,
+    feats_per_stage: Tuple[int, ...] = (2, 3, 5, 8, 10, 14),
+    pass_rate: float = 0.5,
+    calib_windows: int = 4096,
+) -> Tuple[Stage, ...]:
+    """Build the deterministic synthetic cascade.
+
+    A trained cascade is tuned so each stage rejects a large fraction of
+    non-faces. We reproduce that *shape* by calibrating every stage's
+    threshold to the (1 - pass_rate) quantile of its score distribution on
+    random noise windows: each stage passes ~pass_rate of random windows, so
+    the 6-stage cascade passes ~pass_rate**6 — the early-reject funnel of
+    Viola-Jones without trained weights. Fully deterministic (SplitMix seed).
+    """
+    import numpy as np
+
+    rng = _SplitMix(seed)
+    stages: List[Stage] = []
+    for nf in feats_per_stage:
+        feats = tuple(_make_feature(rng) for _ in range(nf))
+        stages.append(Stage(features=feats, threshold=0.0))
+
+    # Deterministic calibration noise (SplitMix-seeded numpy Philox).
+    np_rng = np.random.Generator(np.random.Philox(rng.next_u64()))
+    windows = np_rng.random((calib_windows, WIN, WIN))
+    calibrated: List[Stage] = []
+    for st in stages:
+        scores = _stage_scores_np(st, windows)
+        thr = float(np.quantile(scores, 1.0 - pass_rate))
+        calibrated.append(Stage(features=st.features, threshold=thr))
+    return tuple(calibrated)
+
+
+def face_patch(scale: float = 2.0) -> "np.ndarray":
+    """A canonical WIN×WIN patch that excites the cascade — the repo's
+    stand-in for a face. Built by stamping each feature's positive rects
+    bright and negative rects dark, so every stage scores far above its
+    calibrated random-noise threshold.
+    """
+    import numpy as np
+
+    patch = np.full((WIN, WIN), 0.5)
+    for st in CASCADE:
+        for feat in st.features:
+            for r in feat.rects:
+                delta = 0.5 if r.weight > 0 else -0.5
+                patch[r.y : r.y + r.h, r.x : r.x + r.w] += delta * scale / len(CASCADE)
+    return np.clip(patch, 0.0, 1.0)
+
+
+#: The cascade every layer (kernel, ref oracle, tests, docs) shares.
+CASCADE: Tuple[Stage, ...] = make_cascade()
+
+#: Total feature count — used in FLOP estimates (DESIGN.md §Perf).
+N_FEATURES: int = sum(len(s.features) for s in CASCADE)

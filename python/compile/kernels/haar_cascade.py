@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: dense Haar-cascade evaluation over sliding windows.
+
+The paper's hot spot is Viola-Jones face detection. The classical algorithm
+is a *sequential* early-exit cascade per window — branch-heavy and GPU/TPU
+hostile. The TPU re-think (DESIGN.md §Hardware-Adaptation): evaluate every
+stage densely over a *block of window positions* as vector arithmetic on
+integral-image slices, and replace per-window early exit with a survivor
+mask. Rejected windows still flow through the lanes (wasted lanes ≈ the
+price of vectorization) but every op is a VPU-friendly fused
+multiply-add over contiguous tiles.
+
+Each grid program owns a (BLOCK_P, PW) tile of window origins. It reads the
+(BLOCK_P + WIN, W+1) slab of the padded integral image it needs via a
+dynamic row slice (the whole `ii` is mapped into the program; on real TPU the
+slab is what streams into VMEM: for W=256 that is (16+16)x257x4 ≈ 33 KB).
+Rectangle sums are 4 shifted static slices of the slab — no gathers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cascade_params import CASCADE, WIN
+
+# Rows of window positions evaluated per grid program.
+BLOCK_P = 16
+
+
+def _box_sums(tile, y, x, h, w, n_rows, n_cols):
+    """Sum over rect (x..x+w, y..y+h) for every window origin in the tile.
+
+    ``tile`` is the zero-padded integral image slab; origin (r, c) of the
+    rect for window (r, c) is (r + y, c + x) in image coords == the same in
+    padded-ii coords for the top-left corner.
+    """
+    a = tile[y : y + n_rows, x : x + n_cols]                      # top-left
+    b = tile[y : y + n_rows, x + w : x + w + n_cols]              # top-right
+    c = tile[y + h : y + h + n_rows, x : x + n_cols]              # bottom-left
+    d = tile[y + h : y + h + n_rows, x + w : x + w + n_cols]      # bottom-right
+    return d - b - c + a
+
+
+def _cascade_block(tile, n_rows, n_cols):
+    """Evaluate the full cascade for an (n_rows, n_cols) block of windows.
+
+    Returns (score, alive): total accumulated stage score and the 0/1
+    survivor mask after all stages.
+    """
+    win_sum = _box_sums(tile, 0, 0, WIN, WIN, n_rows, n_cols)
+    # Illumination normalization: the paper's Viola-Jones normalizes by
+    # window variance; we normalize rect sums by mean window energy.
+    norm = win_sum / float(WIN * WIN) + 1.0
+
+    alive = jnp.ones((n_rows, n_cols), dtype=jnp.float32)
+    total = jnp.zeros((n_rows, n_cols), dtype=jnp.float32)
+    for stage in CASCADE:
+        score = jnp.zeros((n_rows, n_cols), dtype=jnp.float32)
+        for feat in stage.features:
+            v = jnp.zeros((n_rows, n_cols), dtype=jnp.float32)
+            for r in feat.rects:
+                v += r.weight * _box_sums(tile, r.y, r.x, r.h, r.w, n_rows, n_cols)
+            v = v / (norm * float(WIN * WIN))
+            score += feat.amp * jnp.tanh(v - feat.shift)
+        # Survivor mask update — dense replacement for early exit.
+        alive = alive * (score > stage.threshold).astype(jnp.float32)
+        total = total + alive * score
+    return total, alive
+
+
+def _cascade_kernel(ii_ref, score_ref, mask_ref, *, n_cols):
+    i = pl.program_id(0)
+    # Slab of the padded integral image backing this block of windows:
+    # rows [i*BLOCK_P, i*BLOCK_P + BLOCK_P + WIN), all columns.
+    tile = ii_ref[pl.ds(i * BLOCK_P, BLOCK_P + WIN), :]
+    score, alive = _cascade_block(tile, BLOCK_P, n_cols)
+    score_ref[...] = score
+    mask_ref[...] = alive
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cascade_scores(ii_padded: jax.Array, interpret: bool = True):
+    """Dense cascade evaluation.
+
+    Args:
+      ii_padded: (H+1, W+1) zero-padded integral image (f32).
+
+    Returns:
+      (score, mask): each (H - WIN, W - WIN) f32 — accumulated stage score
+      and the survivor mask for every window origin. The last WIN-1..WIN
+      rows/cols of origins are intentionally dropped so the position grid
+      stays a multiple of BLOCK_P (documented in DESIGN.md).
+    """
+    hp, wp = ii_padded.shape
+    h, w = hp - 1, wp - 1
+    n_rows, n_cols = h - WIN, w - WIN
+    assert n_rows % BLOCK_P == 0, f"{n_rows} positions not a multiple of {BLOCK_P}"
+
+    kernel = functools.partial(_cascade_kernel, n_cols=n_cols)
+    score, mask = pl.pallas_call(
+        kernel,
+        grid=(n_rows // BLOCK_P,),
+        # The whole padded ii is visible to each program; the kernel takes
+        # the dynamic row slab it needs (overlapping reads — BlockSpec
+        # cannot express halos directly).
+        in_specs=[pl.BlockSpec((hp, wp), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((BLOCK_P, n_cols), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_P, n_cols), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, n_cols), jnp.float32),
+            jax.ShapeDtypeStruct((n_rows, n_cols), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ii_padded)
+    return score, mask

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: integral image (summed-area table).
+
+Two tiled passes: a row-scan kernel (each program owns a block of rows and
+scans the full width) followed by a column-scan kernel (block of columns,
+full height). Because each block spans the entire scanned axis there is no
+cross-block carry, so the grid is embarrassingly parallel.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each pass streams HBM→VMEM one
+row/column block at a time; the scan itself is a VPU op. Block heights are
+chosen so a (BR, W) f32 tile stays well under VMEM (16 MB): for W=256,
+BR=16 → 16 KB per tile. `interpret=True` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row/column block sizes. All supported image sides (32..256) are multiples.
+BLOCK_ROWS = 16
+BLOCK_COLS = 16
+
+
+def _row_scan_kernel(x_ref, o_ref):
+    # x_ref: (BLOCK_ROWS, W) — cumulative sum along the full row.
+    o_ref[...] = jnp.cumsum(x_ref[...], axis=1)
+
+
+def _col_scan_kernel(x_ref, o_ref):
+    # x_ref: (H, BLOCK_COLS) — cumulative sum along the full column.
+    o_ref[...] = jnp.cumsum(x_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def integral_image(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """Inclusive 2-D prefix sum of ``x`` (H, W) → (H, W), f32.
+
+    The caller pads with a leading zero row/column to get the conventional
+    exclusive summed-area table (see model.pad_integral).
+    """
+    h, w = x.shape
+    assert h % BLOCK_ROWS == 0, f"height {h} not a multiple of {BLOCK_ROWS}"
+    assert w % BLOCK_COLS == 0, f"width {w} not a multiple of {BLOCK_COLS}"
+    x = x.astype(jnp.float32)
+
+    rows = pl.pallas_call(
+        _row_scan_kernel,
+        grid=(h // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+    cols = pl.pallas_call(
+        _col_scan_kernel,
+        grid=(w // BLOCK_COLS,),
+        in_specs=[pl.BlockSpec((h, BLOCK_COLS), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((h, BLOCK_COLS), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=interpret,
+    )(rows)
+
+    return cols

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+No Pallas, no tiling — direct whole-array formulations. pytest compares the
+kernels against these with assert_allclose (the CORE correctness signal for
+the compute layer).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .cascade_params import CASCADE, WIN
+
+
+def integral_image_ref(x: jax.Array) -> jax.Array:
+    """Inclusive 2-D prefix sum, whole-array."""
+    return jnp.cumsum(jnp.cumsum(x.astype(jnp.float32), axis=0), axis=1)
+
+
+def pad_integral_ref(s: jax.Array) -> jax.Array:
+    """Inclusive table → conventional zero-padded summed-area table."""
+    return jnp.pad(s, ((1, 0), (1, 0)))
+
+
+def _box(ii, y, x, h, w, n_rows, n_cols):
+    return (
+        ii[y + h : y + h + n_rows, x + w : x + w + n_cols]
+        - ii[y : y + n_rows, x + w : x + w + n_cols]
+        - ii[y + h : y + h + n_rows, x : x + n_cols]
+        + ii[y : y + n_rows, x : x + n_cols]
+    )
+
+
+def cascade_scores_ref(ii_padded: jax.Array):
+    """Dense cascade over all window origins — same math as the kernel,
+    but whole-array (no position blocking)."""
+    hp, wp = ii_padded.shape
+    n_rows, n_cols = (hp - 1) - WIN, (wp - 1) - WIN
+
+    win_sum = _box(ii_padded, 0, 0, WIN, WIN, n_rows, n_cols)
+    norm = win_sum / float(WIN * WIN) + 1.0
+
+    alive = jnp.ones((n_rows, n_cols), dtype=jnp.float32)
+    total = jnp.zeros((n_rows, n_cols), dtype=jnp.float32)
+    for stage in CASCADE:
+        score = jnp.zeros((n_rows, n_cols), dtype=jnp.float32)
+        for feat in stage.features:
+            v = jnp.zeros((n_rows, n_cols), dtype=jnp.float32)
+            for r in feat.rects:
+                v += r.weight * _box(ii_padded, r.y, r.x, r.h, r.w, n_rows, n_cols)
+            v = v / (norm * float(WIN * WIN))
+            score += feat.amp * jnp.tanh(v - feat.shift)
+        alive = alive * (score > stage.threshold).astype(jnp.float32)
+        total = total + alive * score
+    return total, alive

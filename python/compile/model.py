@@ -1,0 +1,104 @@
+"""L2: the face-detection compute graph the containers run.
+
+Mirrors the paper's container workload (Viola-Jones face detection over an
+image) as a JAX pipeline calling the L1 Pallas kernels:
+
+    grayscale → multi-scale pyramid → integral image (pallas)
+              → dense Haar cascade (pallas) → fixed-shape summary outputs
+
+Outputs are fixed-shape regardless of image size so the Rust runtime can
+decode them uniformly:
+    counts[MAX_LEVELS]  — detections (survivor windows) per pyramid level,
+                          zero-padded for unused levels
+    max_score           — best window score across all levels
+    hist[N_BINS]        — histogram of surviving-window scores
+
+This module is build-time only; `aot.py` lowers `detect` once per supported
+image size and the Rust L3 never imports Python.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.haar_cascade import cascade_scores
+from .kernels.integral_image import integral_image
+
+#: Pyramid levels are halvings down to the smallest side that still fits a
+#: window block grid (32 px). 256→4 levels, 128→3, 64→2, 32→1.
+MIN_SIDE = 32
+MAX_LEVELS = 4
+N_BINS = 16
+HIST_LO, HIST_HI = 0.0, 8.0
+
+# Grayscale weights (ITU-R BT.601), same as OpenCV's cvtColor default.
+_GRAY = jnp.array([0.299, 0.587, 0.114], dtype=jnp.float32)
+
+
+def n_levels(side: int) -> int:
+    n = 0
+    while side >= MIN_SIDE and n < MAX_LEVELS:
+        n += 1
+        side //= 2
+    return n
+
+
+def grayscale(img: jax.Array) -> jax.Array:
+    """(H, W, 3) f32 in [0,1] → (H, W) luminance."""
+    return jnp.tensordot(img, _GRAY, axes=([-1], [0]))
+
+
+def downsample2(x: jax.Array) -> jax.Array:
+    """2× average-pool downsample (H, W) → (H/2, W/2)."""
+    h, w = x.shape
+    return x.reshape(h // 2, 2, w // 2, 2).mean(axis=(1, 3))
+
+
+def _level_summary(score, mask):
+    count = jnp.sum(mask)
+    max_score = jnp.max(jnp.where(mask > 0, score, -jnp.inf))
+    max_score = jnp.where(count > 0, max_score, 0.0)
+    s = jnp.clip(score, HIST_LO, HIST_HI - 1e-6)
+    idx = jnp.floor((s - HIST_LO) / (HIST_HI - HIST_LO) * N_BINS).astype(jnp.int32)
+    onehot = jax.nn.one_hot(idx, N_BINS, dtype=jnp.float32) * mask[..., None]
+    hist = jnp.sum(onehot, axis=(0, 1))
+    return count, max_score, hist
+
+
+def detect(img: jax.Array, interpret: bool = True):
+    """Full detection pipeline for a square (S, S, 3) image in [0,1].
+
+    Returns (counts[MAX_LEVELS], max_score, hist[N_BINS]) — all f32.
+    """
+    side = img.shape[0]
+    levels = n_levels(side)
+    gray = grayscale(img)
+
+    counts = []
+    max_scores = []
+    hist = jnp.zeros((N_BINS,), dtype=jnp.float32)
+    x = gray
+    for _ in range(levels):
+        s = integral_image(x, interpret=interpret)
+        ii = jnp.pad(s, ((1, 0), (1, 0)))
+        score, mask = cascade_scores(ii, interpret=interpret)
+        c, m, h = _level_summary(score, mask)
+        counts.append(c)
+        max_scores.append(m)
+        hist = hist + h
+        x = downsample2(x)
+
+    counts = jnp.stack(counts + [jnp.zeros(())] * (MAX_LEVELS - levels))
+    max_score = jnp.max(jnp.stack(max_scores))
+    return counts, max_score, hist
+
+
+def make_detect_fn(interpret: bool = True):
+    """A jit-able detect closure (shape specialization happens at lower)."""
+
+    @functools.partial(jax.jit)
+    def fn(img):
+        return detect(img, interpret=interpret)
+
+    return fn

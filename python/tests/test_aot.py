@@ -1,0 +1,41 @@
+"""AOT path: HLO text is produced, parseable-looking, and manifest-complete."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_64_produces_hlo_text():
+    text = aot.lower_size(64)
+    assert "ENTRY" in text and "HloModule" in text
+    # Tuple return (return_tuple=True) — rust unwraps a 3-tuple.
+    assert "tuple(" in text.lower() or "(f32[4]" in text
+
+
+def test_lowered_io_shapes():
+    text = aot.lower_size(64)
+    # Input: 64x64x3 f32; outputs: f32[4], f32[], f32[16].
+    assert "f32[64,64,3]" in text
+    assert "f32[4]" in text
+    assert "f32[16]" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_matches_artifacts():
+    adir = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(adir, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["model"] == "haar-face-detect"
+    for entry in manifest["entries"]:
+        path = os.path.join(adir, entry["file"])
+        assert os.path.exists(path), entry["file"]
+        assert os.path.getsize(path) == entry["bytes"]
+        assert entry["levels"] == model.n_levels(entry["side"])
+        assert entry["outputs"][0]["shape"] == [model.MAX_LEVELS]
+        assert entry["outputs"][2]["shape"] == [model.N_BINS]

@@ -1,0 +1,71 @@
+"""L1 integral-image kernel vs pure-jnp oracle (hypothesis shape sweep)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.integral_image import BLOCK_COLS, BLOCK_ROWS, integral_image
+from compile.kernels.ref import integral_image_ref, pad_integral_ref
+
+# Sides must be multiples of the block sizes (model guarantees this).
+SIDES = st.sampled_from([16, 32, 48, 64, 96, 128])
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=SIDES, w=SIDES, seed=st.integers(0, 2**31 - 1))
+def test_matches_ref_random(h, w, seed):
+    x = jnp.array(np.random.RandomState(seed).rand(h, w), jnp.float32)
+    got = integral_image(x)
+    want = integral_image_ref(x)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=SIDES,
+    w=SIDES,
+    dtype=st.sampled_from([np.float32, np.float64, np.int32, np.uint8]),
+)
+def test_dtype_sweep(h, w, dtype):
+    """Kernel accepts any numeric dtype and produces f32."""
+    x = (np.random.RandomState(0).rand(h, w) * 10).astype(dtype)
+    got = integral_image(jnp.asarray(x))
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(
+        got, integral_image_ref(jnp.asarray(x)), rtol=3e-5, atol=1e-3
+    )
+
+
+def test_constant_image():
+    """ii[i,j] of all-ones = (i+1)*(j+1)."""
+    x = jnp.ones((32, 32), jnp.float32)
+    got = np.asarray(integral_image(x))
+    i, j = np.meshgrid(np.arange(32), np.arange(32), indexing="ij")
+    np.testing.assert_allclose(got, (i + 1.0) * (j + 1.0), rtol=1e-6)
+
+
+def test_monotone_rows_cols():
+    """Prefix sums of nonnegative input are monotone along both axes."""
+    x = jnp.array(np.random.RandomState(3).rand(48, 64), jnp.float32)
+    s = np.asarray(integral_image(x))
+    assert (np.diff(s, axis=0) >= -1e-6).all()
+    assert (np.diff(s, axis=1) >= -1e-6).all()
+
+
+def test_pad_integral():
+    x = jnp.array(np.random.RandomState(4).rand(32, 32), jnp.float32)
+    ii = np.asarray(pad_integral_ref(integral_image_ref(x)))
+    assert ii.shape == (33, 33)
+    assert (ii[0, :] == 0).all() and (ii[:, 0] == 0).all()
+    # Box-sum identity: sum of any rect equals direct sum.
+    xs = np.asarray(x)
+    for (y, x0, h, w) in [(0, 0, 5, 7), (3, 9, 11, 2), (20, 20, 12, 12)]:
+        box = ii[y + h, x0 + w] - ii[y, x0 + w] - ii[y + h, x0] + ii[y, x0]
+        np.testing.assert_allclose(box, xs[y : y + h, x0 : x0 + w].sum(), rtol=1e-5)
+
+
+def test_rejects_unaligned_shape():
+    with pytest.raises(AssertionError):
+        integral_image(jnp.ones((17, 32), jnp.float32))
+    assert BLOCK_ROWS == BLOCK_COLS == 16  # documented invariant

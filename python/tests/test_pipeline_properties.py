@@ -1,0 +1,56 @@
+"""Property-based tests over the full L2 pipeline (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.cascade_params import WIN
+
+
+def _img(side, seed, lo=0.0, hi=1.0):
+    r = np.random.RandomState(seed).rand(side, side, 3)
+    return jnp.asarray(lo + (hi - lo) * r, jnp.float32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(side=st.sampled_from([32, 64, 128]), seed=st.integers(0, 2**31 - 1))
+def test_counts_bounded_by_window_grid(side, seed):
+    """Survivor count can never exceed the number of evaluated windows."""
+    counts, max_score, hist = model.detect(_img(side, seed))
+    total_windows = sum(
+        (side // (2**l) - WIN) ** 2 for l in range(model.n_levels(side))
+    )
+    assert 0 <= float(np.asarray(counts).sum()) <= total_windows
+    assert float(max_score) >= 0.0
+    assert (np.asarray(hist) >= 0).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.3, 1.0))
+def test_contrast_scaling_keeps_outputs_finite(seed, scale):
+    """Arbitrary contrast compression never produces NaN/inf anywhere."""
+    counts, max_score, hist = model.detect(_img(64, seed, hi=scale))
+    for out in (counts, max_score, hist):
+        assert np.isfinite(np.asarray(out)).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_channel_permutation_changes_little_on_gray_content(seed):
+    """For a grayscale image (equal channels), channel order is irrelevant."""
+    r = np.random.RandomState(seed).rand(64, 64, 1)
+    img = np.repeat(r, 3, axis=2)
+    a = model.detect(jnp.asarray(img, jnp.float32))
+    b = model.detect(jnp.asarray(img[..., ::-1].copy(), jnp.float32))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-5)
+
+
+def test_black_and_white_images_have_no_detections():
+    """Featureless images excite nothing (calibrated thresholds > flat
+    response)."""
+    for value in (0.0, 1.0):
+        img = jnp.full((64, 64, 3), value, jnp.float32)
+        counts, _, _ = model.detect(img)
+        assert float(np.asarray(counts).sum()) == 0.0, f"value={value}"

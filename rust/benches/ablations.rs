@@ -1,0 +1,122 @@
+//! Bench target: ablations of the DDS design choices called out in
+//! DESIGN.md:
+//!
+//! 1. **Availability check** (DDS vs DDS-no-avail) — the paper's staleness
+//!    compensation ("only offloads the task to that device if containers
+//!    are available").
+//! 2. **Profile-driven vs blind** (DDS vs round-robin vs random).
+//! 3. **UP push cadence** (profile_period_ms sweep — the paper uses 20 ms).
+//! 4. **Staleness tolerance** (max_staleness_ms sweep).
+//! 5. **Network loss** (UDP image pushes dropped with probability p).
+//!
+//! Run: `cargo bench --bench ablations`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::section;
+use edge_dds::sim::ArrivalPattern;
+use edge_dds::config::WorkloadConfig;
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::ScenarioBuilder;
+
+fn wl(n: u32, interval: f64, deadline: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        n_images: n,
+        interval_ms: interval,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms: deadline,
+        side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+    }
+}
+
+fn main() {
+    let base = ScenarioBuilder::paper_testbed(PolicyKind::Dds).workload(wl(1_000, 50.0, 5_000.0));
+
+    section("ablation 1+2: policy family at 1000 imgs @50ms, 5s deadline");
+    println!("{:<16} {:>8} {:>8} {:>8} {:>10} {:>12}", "policy", "met", "missed", "dropped", "local%", "p90 ms");
+    let mut dds_met = 0;
+    let mut noavail_met = 0;
+    for r in base.sweep_policies(&PolicyKind::ALL) {
+        let p90 = r.summary.latency.as_ref().map(|l| l.p90).unwrap_or(0.0);
+        println!(
+            "{:<16} {:>8} {:>8} {:>8} {:>9.1}% {:>12.1}",
+            r.policy.as_str(),
+            r.summary.met,
+            r.summary.missed,
+            r.summary.dropped,
+            r.summary.local_fraction * 100.0,
+            p90
+        );
+        match r.policy {
+            PolicyKind::Dds => dds_met = r.summary.met,
+            PolicyKind::DdsNoAvail => noavail_met = r.summary.met,
+            _ => {}
+        }
+    }
+    println!(
+        "availability check gain: {dds_met} vs {noavail_met} met ({:+})",
+        dds_met as i64 - noavail_met as i64
+    );
+
+    section("ablation 3: UP push cadence (paper: 20 ms)");
+    println!("{:>14} {:>8}", "period ms", "met");
+    for period in [5.0, 20.0, 100.0, 500.0, 2_000.0] {
+        let mut b = base.clone();
+        b.config_mut().profile_period_ms = period;
+        // Staleness cap must admit at least one period.
+        b.config_mut().max_staleness_ms = b.config_mut().max_staleness_ms.max(period * 2.0);
+        println!("{:>14} {:>8}", period, b.run().met());
+    }
+
+    section("ablation 4: staleness tolerance for offload decisions");
+    println!("{:>14} {:>8}", "staleness ms", "met");
+    for staleness in [25.0, 50.0, 100.0, 200.0, 1_000.0, 10_000.0] {
+        let mut b = base.clone();
+        b.config_mut().max_staleness_ms = staleness;
+        println!("{:>14} {:>8}", staleness, b.run().met());
+    }
+
+    section("extension: energy-aware scheduling (battery-powered R2)");
+    // R2 runs on a battery; compare plain DDS vs dds-energy on met count
+    // and energy drawn from the pack (paper §VI future work).
+    println!("{:<14} {:>8} {:>14} {:>12}", "policy", "met", "consumed mWh", "battery %");
+    for policy in [PolicyKind::Dds, PolicyKind::DdsEnergy] {
+        let mut b = base.clone().policy(policy);
+        b.config_mut().devices[1].battery = true;
+        let r = b.run();
+        let (_, pct, mwh) = r.batteries[0];
+        println!("{:<14} {:>8} {:>14.2} {:>11.2}%", policy.as_str(), r.summary.met, mwh, pct);
+    }
+
+    section("ablation 5: UDP image loss");
+    println!("{:>10} {:>8} {:>8}", "loss", "met", "dropped");
+    for loss in [0.0, 0.01, 0.05, 0.1, 0.25] {
+        let mut b = base.clone();
+        b.config_mut().network.loss_prob = loss;
+        let r = b.run();
+        println!("{:>10} {:>8} {:>8}", loss, r.summary.met, r.summary.dropped);
+    }
+
+    section("extension: arrival processes (same long-run rate)");
+    println!("{:<12} {:>8} {:>12}", "pattern", "met", "p90 ms");
+    for (name, pattern) in [
+        ("uniform", ArrivalPattern::Uniform),
+        ("poisson", ArrivalPattern::Poisson),
+        ("bursty:10", ArrivalPattern::Bursty { burst: 10 }),
+    ] {
+        let mut b = base.clone();
+        b.config_mut().workload.pattern = pattern;
+        let r = b.run();
+        println!(
+            "{:<12} {:>8} {:>12.0}",
+            name,
+            r.summary.met,
+            r.summary.latency.as_ref().map(|l| l.p90).unwrap_or(0.0)
+        );
+    }
+
+    println!("\nablations done");
+}

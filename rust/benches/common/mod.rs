@@ -1,0 +1,67 @@
+//! Shared mini-harness for the `harness = false` bench targets (criterion
+//! is not in the offline crate set). Provides warmup + repeated timing with
+//! mean/p50/min reporting, and a tiny black_box.
+#![allow(dead_code)] // each bench binary uses a different subset
+
+use std::hint;
+use std::time::Instant;
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub min_us: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>8} iters  mean {:>12.2} us  p50 {:>12.2} us  min {:>12.2} us",
+            self.name, self.iters, self.mean_us, self.p50_us, self.min_us
+        );
+    }
+
+    /// Throughput helper for per-item benches.
+    pub fn print_throughput(&self, items_per_iter: f64, unit: &str) {
+        let per_sec = items_per_iter / (self.mean_us / 1e6);
+        println!(
+            "{:<44} {:>8} iters  mean {:>12.2} us  {:>14.0} {unit}/s",
+            self.name, self.iters, self.mean_us, per_sec
+        );
+    }
+}
+
+/// Run `f` `iters` times after `warmup` runs; report per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: mean,
+        p50_us: samples[samples.len() / 2],
+        min_us: samples[0],
+    }
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

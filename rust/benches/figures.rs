@@ -1,0 +1,112 @@
+//! Bench target: regenerate **Figures 5–8** of the paper (whole-system
+//! scenario sweeps) and report the paper-shape checks.
+//!
+//! Run: `cargo bench --bench figures`
+//! Fast subset: `cargo bench --bench figures -- --quick` (fig5 single
+//! interval + fig7 + fig8 single load row).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::section;
+use edge_dds::experiments::figures::{render_fig8, render_policy_grid};
+use edge_dds::experiments::{fig5, fig6, fig7, fig8, render_comparisons};
+use edge_dds::scheduler::PolicyKind;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let seed = 42;
+
+    section("Fig 7: CPU load vs container processing time");
+    let f7: Vec<_> = fig7().into_iter().map(|r| r.comparison).collect();
+    print!("{}", render_comparisons("Fig 7", "load %", &f7));
+    assert!(f7.iter().all(|c| c.rel_err() < 1e-6), "Fig 7 must match exactly");
+
+    section("Fig 5: 50 images, 4 intervals x constraint sweep x 4 policies");
+    let t = std::time::Instant::now();
+    let rows5 = fig5(seed);
+    print!("{}", render_policy_grid("Fig 5", &rows5));
+    println!("fig5 regenerated in {:.2} s", t.elapsed().as_secs_f64());
+    check_shapes(&rows5, 50);
+
+    if !quick {
+        section("Fig 6: 1000 images, 2 intervals x constraint sweep x 4 policies");
+        let t = std::time::Instant::now();
+        let rows6 = fig6(seed);
+        print!("{}", render_policy_grid("Fig 6", &rows6));
+        println!("fig6 regenerated in {:.2} s", t.elapsed().as_secs_f64());
+        check_shapes(&rows6, 1000);
+        check_fig6_crossover(&rows6);
+    }
+
+    section("Fig 8: DDS vs DDS+R2 under edge CPU stress");
+    let t = std::time::Instant::now();
+    let rows8 = fig8(seed);
+    print!("{}", render_fig8(&rows8));
+    println!("fig8 regenerated in {:.2} s", t.elapsed().as_secs_f64());
+    // Paper shapes: load hurts; the extra device helps.
+    for d in [5_000.0, 10_000.0] {
+        let series: Vec<_> = rows8.iter().filter(|r| r.deadline_ms == d).collect();
+        let first = series.first().unwrap();
+        let last = series.last().unwrap();
+        assert!(
+            last.dds_met <= first.dds_met,
+            "load should not increase met count (deadline {d})"
+        );
+        assert!(
+            first.dds_with_r2_met > first.dds_met,
+            "R2 must help at load 0 (deadline {d})"
+        );
+    }
+
+    println!("\nall figures regenerated");
+}
+
+/// The paper's qualitative claims, asserted over a regenerated grid.
+fn check_shapes(rows: &[edge_dds::experiments::Fig5Row], total: usize) {
+    let get = |r: &edge_dds::experiments::Fig5Row, k: PolicyKind| {
+        r.met.iter().find(|(p, _)| *p == k).map(|(_, m)| *m).unwrap_or(0)
+    };
+    let mut dds_wins = 0usize;
+    let mut cells = 0usize;
+    for r in rows {
+        let (aor, aoe, eods, dds) = (
+            get(r, PolicyKind::Aor),
+            get(r, PolicyKind::Aoe),
+            get(r, PolicyKind::Eods),
+            get(r, PolicyKind::Dds),
+        );
+        assert!(aor <= total && aoe <= total && eods <= total && dds <= total);
+        // "the edge server always performs better than the end device"
+        assert!(aoe + 2 >= aor, "AOE should not lose badly to AOR: {r:?}");
+        // Sub-200 ms constraints are infeasible for everyone.
+        if r.deadline_ms < 200.0 {
+            assert_eq!(aor + aoe + eods + dds, 0, "sub-200ms must all fail");
+        }
+        cells += 1;
+        if dds >= eods {
+            dds_wins += 1;
+        }
+    }
+    // "The Dynamic Distributed Scheduler is better than the Even Odd
+    // Distributed Scheduler, except when the edge server is heavily
+    // loaded" — DDS should win or tie in the majority of cells.
+    assert!(
+        dds_wins * 2 > cells,
+        "DDS should beat EODS in most cells: {dds_wins}/{cells}"
+    );
+}
+
+/// Fig. 6's second observation: with loose constraints EODS can overtake
+/// DDS (queue hoarding) — verify the crossover exists at interval 50 ms.
+fn check_fig6_crossover(rows: &[edge_dds::experiments::Fig5Row]) {
+    let get = |r: &edge_dds::experiments::Fig5Row, k: PolicyKind| {
+        r.met.iter().find(|(p, _)| *p == k).map(|(_, m)| *m).unwrap_or(0)
+    };
+    let tight_dds_wins = rows.iter().any(|r| {
+        r.interval_ms == 50.0
+            && r.deadline_ms <= 10_000.0
+            && get(r, PolicyKind::Dds) > get(r, PolicyKind::Eods)
+    });
+    assert!(tight_dds_wins, "DDS should win somewhere in the tight regime");
+}

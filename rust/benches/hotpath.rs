@@ -1,0 +1,121 @@
+//! Bench target: L3 hot paths — scheduler decision latency, container-pool
+//! operations, predictor evaluation, wire codec, and whole-engine event
+//! throughput. These are the §Perf numbers in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench, black_box, section};
+use edge_dds::sim::ArrivalPattern;
+use edge_dds::config::WorkloadConfig;
+use edge_dds::container::ContainerPool;
+use edge_dds::core::wire;
+use edge_dds::core::{Constraint, ImageMeta, Message, NodeClass, NodeId, TaskId};
+use edge_dds::profile::{profile_for, PredictInput, Predictor};
+use edge_dds::scheduler::{DeviceCtx, LocalSnapshot, PolicyKind, SchedulerPolicy};
+use edge_dds::sim::ScenarioBuilder;
+
+fn img(task: u64) -> ImageMeta {
+    ImageMeta {
+        task: TaskId(task),
+        origin: NodeId(1),
+        size_kb: 29.0,
+        side_px: 64,
+        created_ms: 0.0,
+        constraint: Constraint::deadline(5_000.0),
+        seq: task,
+    }
+}
+
+fn main() {
+    section("predictor");
+    let pred = Predictor::new(profile_for(NodeClass::RaspberryPi));
+    let inp = PredictInput {
+        size_kb: 87.0,
+        link: None,
+        busy_containers: 1,
+        warm_containers: 2,
+        queued_images: 3,
+        cpu_load_pct: 25.0,
+    };
+    const PRED_BATCH: u32 = 10_000;
+    bench("predict_total_ms x10k", 3, 30, || {
+        for _ in 0..PRED_BATCH {
+            black_box(pred.predict_total_ms(black_box(&inp)));
+        }
+    })
+    .print_throughput(PRED_BATCH as f64, "predictions");
+
+    section("device-level DDS decision");
+    let mut dds = PolicyKind::Dds.build(1);
+    let frame = img(1);
+    let ctx = DeviceCtx {
+        now_ms: 10.0,
+        img: &frame,
+        local: LocalSnapshot {
+            node: NodeId(1),
+            busy_containers: 1,
+            warm_containers: 2,
+            queued_images: 1,
+            cpu_load_pct: 10.0,
+            battery_pct: None,
+        },
+        predictor: &pred,
+    };
+    const DEC_BATCH: u32 = 10_000;
+    bench("decide_device x10k", 3, 30, || {
+        for _ in 0..DEC_BATCH {
+            black_box(dds.decide_device(black_box(&ctx)));
+        }
+    })
+    .print_throughput(DEC_BATCH as f64, "decisions");
+
+    section("container pool");
+    bench("submit+complete cycle x1k", 3, 30, || {
+        let mut pool = ContainerPool::new(profile_for(NodeClass::EdgeServer), 4);
+        let mut now = 0.0;
+        for t in 0..1_000u64 {
+            if let Some(a) = pool.submit(img(t), now) {
+                now = a.done_at_ms;
+                pool.complete(a.container, now);
+            }
+        }
+        black_box(pool.stats());
+    })
+    .print_throughput(1_000.0, "cycles");
+
+    section("wire codec");
+    let msg = Message::Image(img(42));
+    let mut buf = Vec::with_capacity(256);
+    const CODEC_BATCH: u32 = 10_000;
+    bench("encode+decode x10k", 3, 30, || {
+        for _ in 0..CODEC_BATCH {
+            wire::encode(black_box(&msg), &mut buf);
+            black_box(wire::decode(&buf).unwrap());
+        }
+    })
+    .print_throughput(CODEC_BATCH as f64, "roundtrips");
+
+    section("whole-engine event throughput");
+    for (n, interval) in [(1_000u32, 50.0), (1_000, 100.0)] {
+        let builder = ScenarioBuilder::paper_testbed(PolicyKind::Dds).workload(WorkloadConfig {
+            n_images: n,
+            interval_ms: interval,
+            size_kb: 29.0,
+            size_jitter_kb: 0.0,
+            deadline_ms: 5_000.0,
+            side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+        });
+        let probe = builder.run();
+        let events = probe.events as f64;
+        let r = bench(&format!("sim {n} imgs @{interval}ms ({} events)", probe.events), 1, 10, || {
+            black_box(builder.run());
+        });
+        r.print_throughput(events, "events");
+    }
+
+    println!("\nhotpath bench done");
+}

@@ -1,0 +1,49 @@
+//! Bench target: regenerate **Tables II–VI** of the paper (container
+//! profiles) and time the regeneration itself.
+//!
+//! Run: `cargo bench --bench tables`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench, black_box, section};
+use edge_dds::experiments::{table2, table3, table4, table5, table6};
+
+fn main() {
+    section("Table II: runtime vs image size (edge server)");
+    let t2 = table2();
+    print!("{}", t2.render());
+    assert!(t2.max_rel_err() < 1e-6, "Table II must match exactly");
+
+    section("Table III: cold-start profile (edge server)");
+    let (t3a, t3b) = table3();
+    print!("{}\n{}", t3a.render(), t3b.render());
+
+    section("Table IV: cold-start profile (Raspberry Pi)");
+    let (t4a, t4b) = table4();
+    print!("{}\n{}", t4a.render(), t4b.render());
+
+    section("Table V: warm-container profile (edge server)");
+    let (t5a, t5b) = table5();
+    print!("{}\n{}", t5a.render(), t5b.render());
+
+    section("Table VI: warm-container profile (Raspberry Pi)");
+    let (t6a, t6b) = table6();
+    print!("{}\n{}", t6a.render(), t6b.render());
+
+    section("regeneration cost");
+    bench("table2 regen", 2, 20, || {
+        black_box(table2());
+    })
+    .print();
+    bench("table5 regen (50-image micro-sim x8)", 2, 20, || {
+        black_box(table5());
+    })
+    .print();
+    bench("table6 regen (50-image micro-sim x6)", 2, 20, || {
+        black_box(table6());
+    })
+    .print();
+
+    println!("\nall tables regenerated");
+}

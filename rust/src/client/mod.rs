@@ -1,0 +1,74 @@
+//! Mobile-user client (the paper's Android app, §III-C.3): connects to the
+//! edge server over a socket, submits an application request (app id,
+//! location, constraints) and receives results.
+
+use std::net::ToSocketAddrs;
+
+use anyhow::Result;
+
+use crate::core::message::{Message, UserRequest};
+use crate::core::Constraint;
+use crate::net::transport::FramedConn;
+
+/// A connected mobile user.
+pub struct UserClient {
+    conn: FramedConn,
+}
+
+impl UserClient {
+    /// "Connect" button: dial the edge server's Interface Server.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        Ok(Self { conn: FramedConn::connect(addr)? })
+    }
+
+    /// "Send" button: submit an application request.
+    pub fn request(
+        &mut self,
+        app_id: u32,
+        location: (f64, f64),
+        deadline_ms: f64,
+        n_images: u32,
+        interval_ms: f64,
+    ) -> Result<()> {
+        self.conn.send(&Message::User(UserRequest {
+            app_id,
+            location,
+            constraint: Constraint::deadline(deadline_ms),
+            n_images,
+            interval_ms,
+        }))
+    }
+
+    /// Block for the next message from the edge (results, acks).
+    pub fn recv(&mut self) -> Result<Message> {
+        self.conn.recv()
+    }
+
+    pub fn shutdown(&self) {
+        self.conn.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::serve;
+
+    #[test]
+    fn client_request_reaches_server() {
+        let server = serve("127.0.0.1:0", |mut conn| {
+            if let Ok(Message::User(req)) = conn.recv() {
+                assert_eq!(req.app_id, 7);
+                assert_eq!(req.n_images, 50);
+                let _ = conn.send(&Message::JoinAck {
+                    assigned: crate::core::NodeId(0),
+                });
+            }
+        })
+        .unwrap();
+        let mut c = UserClient::connect(server.local_addr).unwrap();
+        c.request(7, (1.0, 2.0), 5000.0, 50, 100.0).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::JoinAck { .. }));
+        server.stop();
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration system: a TOML-subset parser (`toml_lite`) and the typed
+//! [`SystemConfig`] the launcher consumes.
+//!
+//! serde/toml are not in the offline crate set; the subset implemented here
+//! covers what experiment configs need: `[section]`, `[[array-of-tables]]`,
+//! and scalar `key = value` (string / int / float / bool), with `#`
+//! comments.
+
+pub mod schema;
+pub mod toml_lite;
+
+pub use schema::{DeviceConfig, NetworkConfig, RunMode, SystemConfig, WorkloadConfig};
+pub use toml_lite::{parse_document, Document, Value};

@@ -1,0 +1,347 @@
+//! Typed experiment configuration and its mapping from `toml_lite`
+//! documents.
+
+use anyhow::{bail, Context, Result};
+
+use super::toml_lite::{parse_document, Document};
+use crate::core::NodeClass;
+use crate::net::LinkModel;
+use crate::scheduler::PolicyKind;
+use crate::sim::workload::ArrivalPattern;
+
+/// Execution mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// Discrete-event simulation on a virtual clock (default; used by all
+    /// figure/table reproductions).
+    Virtual,
+    /// Real threads + sockets + PJRT execution on localhost.
+    Live,
+}
+
+/// Workload generator parameters (the paper's buffer module: a stream of
+/// `n_images` images every `interval_ms`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadConfig {
+    pub n_images: u32,
+    pub interval_ms: f64,
+    /// Mean payload size (KB); per-image sizes are uniform in
+    /// `size_kb ± size_jitter_kb`.
+    pub size_kb: f64,
+    pub size_jitter_kb: f64,
+    /// End-to-end deadline applied to every image.
+    pub deadline_ms: f64,
+    /// Pixel side for the compute artifact variant (live mode).
+    pub side_px: u32,
+    /// Arrival process (uniform | poisson | bursty:N).
+    pub pattern: ArrivalPattern,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            n_images: 50,
+            interval_ms: 100.0,
+            size_kb: 29.0,
+            size_jitter_kb: 0.0,
+            deadline_ms: 5_000.0,
+            side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+        }
+    }
+}
+
+/// Uniform star-network parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkConfig {
+    pub latency_ms: f64,
+    pub bandwidth_mbps: f64,
+    pub loss_prob: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig { latency_ms: 2.0, bandwidth_mbps: 100.0, loss_prob: 0.0 }
+    }
+}
+
+impl NetworkConfig {
+    pub fn link(&self) -> LinkModel {
+        LinkModel::new(self.latency_ms, self.bandwidth_mbps, self.loss_prob)
+    }
+}
+
+/// One end device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceConfig {
+    pub class: NodeClass,
+    pub warm_containers: u32,
+    pub camera: bool,
+    pub cpu_load_pct: f64,
+    pub location: (f64, f64),
+    /// Battery-powered (true) vs mains (false). Battery devices drain and
+    /// are handled specially by the `dds-energy` policy.
+    pub battery: bool,
+}
+
+/// The full system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub seed: u64,
+    pub mode: RunMode,
+    pub policy: PolicyKind,
+    pub workload: WorkloadConfig,
+    pub network: NetworkConfig,
+    pub edge_warm_containers: u32,
+    pub edge_cpu_load_pct: f64,
+    /// UP push period (the paper uses 20 ms).
+    pub profile_period_ms: f64,
+    /// Maximum profile staleness DDS accepts when offloading.
+    pub max_staleness_ms: f64,
+    pub devices: Vec<DeviceConfig>,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            seed: 42,
+            mode: RunMode::Virtual,
+            policy: PolicyKind::Dds,
+            workload: WorkloadConfig::default(),
+            network: NetworkConfig::default(),
+            edge_warm_containers: 4,
+            edge_cpu_load_pct: 0.0,
+            profile_period_ms: 20.0,
+            max_staleness_ms: 200.0,
+            devices: vec![
+                DeviceConfig {
+                    class: NodeClass::RaspberryPi,
+                    warm_containers: 2,
+                    camera: true,
+                    cpu_load_pct: 0.0,
+                    location: (1.0, 0.0),
+                    battery: false,
+                },
+                DeviceConfig {
+                    class: NodeClass::RaspberryPi,
+                    warm_containers: 2,
+                    camera: false,
+                    cpu_load_pct: 0.0,
+                    location: (2.0, 0.0),
+                    battery: false,
+                },
+            ],
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<SystemConfig> {
+        let doc = parse_document(text).context("parsing config")?;
+        Self::from_document(&doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<SystemConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_document(doc: &Document) -> Result<SystemConfig> {
+        let d = SystemConfig::default();
+
+        let mode = match doc.str_or("run", "mode", "virtual") {
+            "virtual" => RunMode::Virtual,
+            "live" => RunMode::Live,
+            other => bail!("unknown run.mode `{other}`"),
+        };
+        let policy_name = doc.str_or("run", "policy", "dds");
+        let policy = PolicyKind::parse(policy_name)
+            .with_context(|| format!("unknown run.policy `{policy_name}`"))?;
+
+        let workload = WorkloadConfig {
+            n_images: doc.i64_or("workload", "n_images", d.workload.n_images as i64) as u32,
+            interval_ms: doc.f64_or("workload", "interval_ms", d.workload.interval_ms),
+            size_kb: doc.f64_or("workload", "size_kb", d.workload.size_kb),
+            size_jitter_kb: doc.f64_or("workload", "size_jitter_kb", d.workload.size_jitter_kb),
+            deadline_ms: doc.f64_or("workload", "deadline_ms", d.workload.deadline_ms),
+            side_px: doc.i64_or("workload", "side_px", d.workload.side_px as i64) as u32,
+            pattern: {
+                let name = doc.str_or("workload", "pattern", "uniform");
+                ArrivalPattern::parse(name)
+                    .with_context(|| format!("unknown workload.pattern `{name}`"))?
+            },
+        };
+        let network = NetworkConfig {
+            latency_ms: doc.f64_or("network", "latency_ms", d.network.latency_ms),
+            bandwidth_mbps: doc.f64_or("network", "bandwidth_mbps", d.network.bandwidth_mbps),
+            loss_prob: doc.f64_or("network", "loss_prob", d.network.loss_prob),
+        };
+
+        let mut devices = Vec::new();
+        if let Some(list) = doc.arrays.get("device") {
+            for (i, t) in list.iter().enumerate() {
+                let class_name = t
+                    .get("class")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("raspberry-pi");
+                let Some(class) = NodeClass::parse(class_name) else {
+                    bail!("device[{i}]: unknown class `{class_name}`");
+                };
+                if class == NodeClass::EdgeServer {
+                    bail!("device[{i}]: edge-server belongs in [edge], not [[device]]");
+                }
+                devices.push(DeviceConfig {
+                    class,
+                    warm_containers: t
+                        .get("warm_containers")
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(2) as u32,
+                    camera: t.get("camera").and_then(|v| v.as_bool()).unwrap_or(i == 0),
+                    cpu_load_pct: t.get("cpu_load_pct").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    location: (
+                        t.get("x").and_then(|v| v.as_f64()).unwrap_or(1.0 + i as f64),
+                        t.get("y").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    ),
+                    battery: t.get("battery").and_then(|v| v.as_bool()).unwrap_or(false),
+                });
+            }
+        } else {
+            devices = d.devices.clone();
+        }
+
+        let cfg = SystemConfig {
+            seed: doc.i64_or("run", "seed", d.seed as i64) as u64,
+            mode,
+            policy,
+            workload,
+            network,
+            edge_warm_containers: doc.i64_or("edge", "warm_containers", d.edge_warm_containers as i64)
+                as u32,
+            edge_cpu_load_pct: doc.f64_or("edge", "cpu_load_pct", d.edge_cpu_load_pct),
+            profile_period_ms: doc.f64_or("run", "profile_period_ms", d.profile_period_ms),
+            max_staleness_ms: doc.f64_or("run", "max_staleness_ms", d.max_staleness_ms),
+            devices,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks (fail fast on nonsense experiments).
+    pub fn validate(&self) -> Result<()> {
+        if self.workload.n_images == 0 {
+            bail!("workload.n_images must be positive");
+        }
+        if self.workload.interval_ms < 0.0 || self.workload.deadline_ms <= 0.0 {
+            bail!("workload intervals/deadlines must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.network.loss_prob) {
+            bail!("network.loss_prob must be in [0,1]");
+        }
+        if self.devices.is_empty() {
+            bail!("at least one end device required");
+        }
+        if !self.devices.iter().any(|d| d.camera) {
+            bail!("at least one device needs a camera (image source)");
+        }
+        if self.profile_period_ms <= 0.0 {
+            bail!("run.profile_period_ms must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_paper_testbed() {
+        let c = SystemConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.devices.len(), 2);
+        assert!(c.devices[0].camera);
+        assert_eq!(c.profile_period_ms, 20.0);
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let text = r#"
+[run]
+seed = 7
+mode = "virtual"
+policy = "eods"
+
+[workload]
+n_images = 1000
+interval_ms = 50
+deadline_ms = 10000
+size_kb = 87
+
+[network]
+latency_ms = 5
+bandwidth_mbps = 54
+loss_prob = 0.01
+
+[edge]
+warm_containers = 6
+cpu_load_pct = 25
+
+[[device]]
+class = "rpi"
+warm_containers = 3
+camera = true
+
+[[device]]
+class = "phone"
+warm_containers = 1
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.policy, PolicyKind::Eods);
+        assert_eq!(c.workload.n_images, 1000);
+        assert_eq!(c.network.loss_prob, 0.01);
+        assert_eq!(c.edge_warm_containers, 6);
+        assert_eq!(c.devices[1].class, NodeClass::SmartPhone);
+        assert!(c.devices[0].camera);
+        assert!(!c.devices[1].camera);
+    }
+
+    #[test]
+    fn rejects_unknown_policy() {
+        assert!(SystemConfig::from_toml("[run]\npolicy = \"magic\"").is_err());
+    }
+
+    #[test]
+    fn rejects_no_camera() {
+        let text = r#"
+[[device]]
+class = "rpi"
+camera = false
+"#;
+        assert!(SystemConfig::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn rejects_edge_in_device_list() {
+        let text = r#"
+[[device]]
+class = "edge-server"
+"#;
+        assert!(SystemConfig::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_loss() {
+        let text = "[network]\nloss_prob = 1.5";
+        assert!(SystemConfig::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn first_device_defaults_to_camera() {
+        let c = SystemConfig::from_toml("[[device]]\nclass = \"rpi\"").unwrap();
+        assert!(c.devices[0].camera);
+    }
+}

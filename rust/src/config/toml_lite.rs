@@ -1,0 +1,291 @@
+//! A small TOML-subset parser.
+//!
+//! Supported: `[section]` headers, `[[array-of-tables]]` headers, scalar
+//! assignments (`key = "str" | 123 | 4.5 | true`), full-line and trailing
+//! `#` comments, blank lines. Unsupported (rejected loudly): nested keys,
+//! inline tables, arrays of scalars, multi-line strings, datetimes.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (TOML would distinguish; configs
+    /// shouldn't care whether someone wrote `5` or `5.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One `key = value` table.
+pub type Table = HashMap<String, Value>;
+
+/// A parsed document: singleton tables + arrays of tables.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    /// Keys at the document root (before any header).
+    pub root: Table,
+    /// `[name]` tables.
+    pub tables: HashMap<String, Table>,
+    /// `[[name]]` arrays, in file order.
+    pub arrays: HashMap<String, Vec<Table>>,
+}
+
+impl Document {
+    /// Fetch `section.key` as f64 with a default.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.tables
+            .get(section)
+            .and_then(|t| t.get(key))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.tables
+            .get(section)
+            .and_then(|t| t.get(key))
+            .and_then(|v| v.as_i64())
+            .unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.tables
+            .get(section)
+            .and_then(|t| t.get(key))
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.tables
+            .get(section)
+            .and_then(|t| t.get(key))
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+}
+
+enum Cursor {
+    Root,
+    Table(String),
+    ArrayElem(String),
+}
+
+/// Parse a document from text.
+pub fn parse_document(text: &str) -> Result<Document> {
+    let mut doc = Document::default();
+    let mut cursor = Cursor::Root;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let at = |msg: &str| format!("line {}: {}: `{}`", lineno + 1, msg, raw.trim());
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = inner.trim();
+            validate_name(name).with_context(|| at("bad array-of-tables name"))?;
+            doc.arrays.entry(name.to_string()).or_default().push(Table::new());
+            cursor = Cursor::ArrayElem(name.to_string());
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = inner.trim();
+            validate_name(name).with_context(|| at("bad section name"))?;
+            if doc.tables.contains_key(name) {
+                bail!(at("duplicate section"));
+            }
+            doc.tables.insert(name.to_string(), Table::new());
+            cursor = Cursor::Table(name.to_string());
+        } else if let Some(eq) = line.find('=') {
+            let key = line[..eq].trim();
+            validate_name(key).with_context(|| at("bad key"))?;
+            let value = parse_value(line[eq + 1..].trim()).with_context(|| at("bad value"))?;
+            let table = match &cursor {
+                Cursor::Root => &mut doc.root,
+                Cursor::Table(name) => doc.tables.get_mut(name).unwrap(),
+                Cursor::ArrayElem(name) => {
+                    doc.arrays.get_mut(name).unwrap().last_mut().unwrap()
+                }
+            };
+            if table.insert(key.to_string(), value).is_some() {
+                bail!(at("duplicate key"));
+            }
+        } else {
+            bail!(at("unrecognized line"));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+    {
+        bail!("invalid identifier `{name}`");
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        if inner.contains('"') {
+            bail!("embedded quote in string");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        if f.is_finite() {
+            return Ok(Value::Float(f));
+        }
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "fig5"
+
+[run]
+seed = 42
+mode = "virtual"   # trailing comment
+strict = true
+
+[workload]
+interval_ms = 50.5
+n_images = 50
+
+[[device]]
+class = "rpi"
+warm_containers = 2
+
+[[device]]
+class = "rpi"
+warm_containers = 1
+"#;
+
+    #[test]
+    fn parses_sections_and_arrays() {
+        let doc = parse_document(SAMPLE).unwrap();
+        assert_eq!(doc.root.get("title"), Some(&Value::Str("fig5".into())));
+        assert_eq!(doc.i64_or("run", "seed", 0), 42);
+        assert_eq!(doc.str_or("run", "mode", ""), "virtual");
+        assert!(doc.bool_or("run", "strict", false));
+        assert_eq!(doc.f64_or("workload", "interval_ms", 0.0), 50.5);
+        // Int promoted to f64 on request.
+        assert_eq!(doc.f64_or("workload", "n_images", 0.0), 50.0);
+        let devices = &doc.arrays["device"];
+        assert_eq!(devices.len(), 2);
+        assert_eq!(devices[0]["warm_containers"], Value::Int(2));
+        assert_eq!(devices[1]["warm_containers"], Value::Int(1));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = parse_document("[a]\nx = 1").unwrap();
+        assert_eq!(doc.f64_or("a", "missing", 9.5), 9.5);
+        assert_eq!(doc.str_or("missing", "x", "d"), "d");
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = parse_document(r##"[s]
+v = "a#b"  # real comment"##)
+        .unwrap();
+        assert_eq!(doc.str_or("s", "v", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_duplicate_key() {
+        assert!(parse_document("[a]\nx = 1\nx = 2").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_section() {
+        assert!(parse_document("[a]\n[a]").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_line() {
+        assert!(parse_document("[a]\nnot a kv line").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_string() {
+        assert!(parse_document("[a]\nx = \"oops").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_number() {
+        assert!(parse_document("[a]\nx = 1.2.3").is_err());
+        assert!(parse_document("[a]\nx = nan").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let doc = parse_document("[a]\nx = -5\ny = -2.5e3").unwrap();
+        assert_eq!(doc.i64_or("a", "x", 0), -5);
+        assert_eq!(doc.f64_or("a", "y", 0.0), -2500.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Container substrate: the lifecycle + timing model of the paper's Docker
+//! face-detection containers.
+//!
+//! The paper's scheduler never sees inside a container — it sees *when
+//! containers finish* under different concurrency, CPU load and image
+//! sizes, which §IV measures exhaustively. [`ContainerPool`] reproduces
+//! exactly those measured dynamics (calibration in
+//! [`crate::profile::calibration`]): warm pools, FIFO `q_image` overflow
+//! queues, per-dispatch contention, background-load slowdown, and the
+//! prohibitive cold-start curve that justifies the paper's pre-warming.
+//!
+//! Virtual mode assigns durations from the model; live mode replaces the
+//! duration source with real PJRT execution (see [`crate::live`]), reusing
+//! the same pool bookkeeping.
+
+pub mod pool;
+
+pub use pool::{Assignment, ContainerPool, ContainerState, PoolStats};

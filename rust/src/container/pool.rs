@@ -1,0 +1,305 @@
+//! The container pool state machine (virtual-time).
+
+use std::collections::VecDeque;
+
+use crate::core::{ImageMeta, TaskId};
+use crate::profile::ClassProfile;
+
+/// One container's state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ContainerState {
+    /// Warm and idle — in the paper's available-port queue `q`.
+    Idle,
+    /// Processing a task until `done_at_ms`.
+    Busy { task: TaskId, done_at_ms: f64 },
+    /// Cold-starting; becomes Idle at `ready_at_ms`.
+    ColdStarting { ready_at_ms: f64 },
+}
+
+/// A dispatch decision: which container runs the task and until when.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Assignment {
+    pub container: usize,
+    pub task: TaskId,
+    pub start_ms: f64,
+    pub done_at_ms: f64,
+    pub process_ms: f64,
+}
+
+/// Aggregate pool counters (feeds UP profile pushes and metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PoolStats {
+    pub dispatched: u64,
+    pub queued_peak: usize,
+    pub cold_starts: u64,
+}
+
+/// Warm-container pool with an overflow FIFO (`q_image` in the paper).
+#[derive(Debug, Clone)]
+pub struct ContainerPool {
+    profile: ClassProfile,
+    containers: Vec<ContainerState>,
+    /// Images waiting for a container (the paper's `q_image` queue).
+    queue: VecDeque<ImageMeta>,
+    /// Background (non-container) CPU load in [0, 100].
+    bg_load_pct: f64,
+    stats: PoolStats,
+}
+
+impl ContainerPool {
+    /// A pool with `warm` pre-warmed containers (the paper pre-warms: cold
+    /// starts take 52+ s, "not practical ... upon receiving a request").
+    pub fn new(profile: ClassProfile, warm: u32) -> Self {
+        Self {
+            profile,
+            containers: vec![ContainerState::Idle; warm as usize],
+            queue: VecDeque::new(),
+            bg_load_pct: 0.0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn profile(&self) -> &ClassProfile {
+        &self.profile
+    }
+
+    pub fn set_bg_load(&mut self, pct: f64) {
+        self.bg_load_pct = pct.clamp(0.0, 100.0);
+    }
+
+    pub fn bg_load(&self) -> f64 {
+        self.bg_load_pct
+    }
+
+    pub fn warm_count(&self) -> u32 {
+        self.containers
+            .iter()
+            .filter(|c| !matches!(c, ContainerState::ColdStarting { .. }))
+            .count() as u32
+    }
+
+    pub fn busy_count(&self) -> u32 {
+        self.containers
+            .iter()
+            .filter(|c| matches!(c, ContainerState::Busy { .. }))
+            .count() as u32
+    }
+
+    pub fn idle_count(&self) -> u32 {
+        self.containers
+            .iter()
+            .filter(|c| matches!(c, ContainerState::Idle))
+            .count() as u32
+    }
+
+    pub fn queued_count(&self) -> u32 {
+        self.queue.len() as u32
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    pub fn state(&self, idx: usize) -> ContainerState {
+        self.containers[idx]
+    }
+
+    /// Submit a task at `now_ms`: dispatch to an idle container if any,
+    /// else push to `q_image` and return `None`.
+    pub fn submit(&mut self, img: ImageMeta, now_ms: f64) -> Option<Assignment> {
+        if let Some(idx) = self.containers.iter().position(|c| matches!(c, ContainerState::Idle)) {
+            Some(self.dispatch(idx, img, now_ms))
+        } else {
+            self.queue.push_back(img);
+            self.stats.queued_peak = self.stats.queued_peak.max(self.queue.len());
+            None
+        }
+    }
+
+    /// Mark container `idx` finished at `now_ms`; if `q_image` is nonempty
+    /// the container immediately continues with the next image (the paper's
+    /// feedback thread), returning the follow-on assignment.
+    pub fn complete(&mut self, idx: usize, now_ms: f64) -> Option<Assignment> {
+        debug_assert!(matches!(self.containers[idx], ContainerState::Busy { .. }));
+        self.containers[idx] = ContainerState::Idle;
+        let next = self.queue.pop_front()?;
+        Some(self.dispatch(idx, next, now_ms))
+    }
+
+    /// Begin a cold start at `now_ms`; the new container becomes idle at
+    /// the returned time (Table III/IV calibration: cost grows with the
+    /// number of containers already present).
+    pub fn start_cold(&mut self, now_ms: f64) -> f64 {
+        let n_existing = self.containers.len().max(1) as u32;
+        let ready_at = now_ms + self.profile.cold_start_ms(n_existing);
+        self.containers.push(ContainerState::ColdStarting { ready_at_ms: ready_at });
+        self.stats.cold_starts += 1;
+        ready_at
+    }
+
+    /// Transition any finished cold starts to Idle (call when time passes),
+    /// then drain the queue into newly idle containers. Returns the
+    /// assignments made.
+    pub fn tick(&mut self, now_ms: f64) -> Vec<Assignment> {
+        for c in &mut self.containers {
+            if let ContainerState::ColdStarting { ready_at_ms } = *c {
+                if ready_at_ms <= now_ms {
+                    *c = ContainerState::Idle;
+                }
+            }
+        }
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let Some(idx) =
+                self.containers.iter().position(|c| matches!(c, ContainerState::Idle))
+            else {
+                break;
+            };
+            let img = self.queue.pop_front().unwrap();
+            out.push(self.dispatch(idx, img, now_ms));
+        }
+        out
+    }
+
+    /// The model's processing time for an image dispatched right now
+    /// (used by the pool itself and by live mode for comparison metrics).
+    pub fn model_process_ms(&self, size_kb: f64, concurrency: u32) -> f64 {
+        self.profile.process_ms(size_kb, concurrency, self.bg_load_pct)
+    }
+
+    fn dispatch(&mut self, idx: usize, img: ImageMeta, now_ms: f64) -> Assignment {
+        // Contention counts this task itself: dispatching onto a pool with
+        // b busy containers runs at concurrency b+1 (Table V semantics —
+        // "average processing time of one image in a container" with n
+        // containers all running).
+        let concurrency = self.busy_count() + 1;
+        let process_ms = self.model_process_ms(img.size_kb, concurrency);
+        let done = now_ms + process_ms;
+        self.containers[idx] = ContainerState::Busy { task: img.task, done_at_ms: done };
+        self.stats.dispatched += 1;
+        Assignment {
+            container: idx,
+            task: img.task,
+            start_ms: now_ms,
+            done_at_ms: done,
+            process_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Constraint, NodeClass, NodeId};
+    use crate::profile::profile_for;
+
+    fn img(task: u64, size_kb: f64) -> ImageMeta {
+        ImageMeta {
+            task: TaskId(task),
+            origin: NodeId(1),
+            size_kb,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(5000.0),
+            seq: task,
+        }
+    }
+
+    fn edge_pool(warm: u32) -> ContainerPool {
+        ContainerPool::new(profile_for(NodeClass::EdgeServer), warm)
+    }
+
+    #[test]
+    fn single_dispatch_is_table2_time() {
+        let mut p = edge_pool(1);
+        let a = p.submit(img(1, 29.0), 0.0).unwrap();
+        assert!((a.process_ms - 223.0).abs() < 1e-9);
+        assert_eq!(p.busy_count(), 1);
+        assert_eq!(p.idle_count(), 0);
+    }
+
+    #[test]
+    fn overflow_queues_fifo() {
+        let mut p = edge_pool(1);
+        assert!(p.submit(img(1, 29.0), 0.0).is_some());
+        assert!(p.submit(img(2, 29.0), 1.0).is_none());
+        assert!(p.submit(img(3, 29.0), 2.0).is_none());
+        assert_eq!(p.queued_count(), 2);
+        // Completion pulls task 2 first (FIFO).
+        let next = p.complete(0, 223.0).unwrap();
+        assert_eq!(next.task, TaskId(2));
+        assert_eq!(p.queued_count(), 1);
+    }
+
+    #[test]
+    fn contention_scales_with_busy() {
+        let mut p = edge_pool(4);
+        let a1 = p.submit(img(1, 29.0), 0.0).unwrap();
+        let a2 = p.submit(img(2, 29.0), 0.0).unwrap();
+        let a3 = p.submit(img(3, 29.0), 0.0).unwrap();
+        let a4 = p.submit(img(4, 29.0), 0.0).unwrap();
+        // Table V: 223, 273, 366, 464 for n = 1..4.
+        assert!((a1.process_ms - 223.0).abs() < 1e-9);
+        assert!((a2.process_ms - 273.0).abs() < 1e-9);
+        assert!((a3.process_ms - 366.0).abs() < 1e-9);
+        assert!((a4.process_ms - 464.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bg_load_slows_processing() {
+        let mut p = edge_pool(1);
+        p.set_bg_load(100.0);
+        let a = p.submit(img(1, 29.0), 0.0).unwrap();
+        assert!((a.process_ms - 374.0).abs() < 1e-9); // Fig. 7 @ 100 %
+    }
+
+    #[test]
+    fn cold_start_times_from_table3() {
+        let mut p = edge_pool(1);
+        let ready = p.start_cold(0.0);
+        assert!((ready - 52_554.0).abs() < 1e-9);
+        assert_eq!(p.warm_count(), 1); // cold one not yet warm
+        let mut ticked = p.tick(60_000.0);
+        assert!(ticked.is_empty());
+        assert_eq!(p.warm_count(), 2);
+        ticked = p.tick(60_000.0);
+        assert!(ticked.is_empty());
+    }
+
+    #[test]
+    fn tick_drains_queue_after_cold_start() {
+        let mut p = edge_pool(1);
+        p.submit(img(1, 29.0), 0.0).unwrap();
+        assert!(p.submit(img(2, 29.0), 0.0).is_none());
+        p.start_cold(0.0);
+        let assigns = p.tick(52_554.0);
+        assert_eq!(assigns.len(), 1);
+        assert_eq!(assigns[0].task, TaskId(2));
+    }
+
+    #[test]
+    fn stats_track_activity() {
+        let mut p = edge_pool(1);
+        p.submit(img(1, 29.0), 0.0);
+        p.submit(img(2, 29.0), 0.0);
+        p.submit(img(3, 29.0), 0.0);
+        let s = p.stats();
+        assert_eq!(s.dispatched, 1);
+        assert_eq!(s.queued_peak, 2);
+    }
+
+    #[test]
+    fn rpi_pool_uses_rpi_profile() {
+        let mut p = ContainerPool::new(profile_for(NodeClass::RaspberryPi), 1);
+        let a = p.submit(img(1, 29.0), 0.0).unwrap();
+        assert!((a.process_ms - 597.0).abs() < 1e-9); // Table VI n=1
+    }
+
+    #[test]
+    fn complete_empty_queue_returns_none() {
+        let mut p = edge_pool(1);
+        p.submit(img(1, 29.0), 0.0).unwrap();
+        assert!(p.complete(0, 223.0).is_none());
+        assert_eq!(p.idle_count(), 1);
+    }
+}

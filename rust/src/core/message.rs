@@ -1,0 +1,145 @@
+//! The message set exchanged between nodes.
+//!
+//! Mirrors the paper's component interactions (Fig. 1/2): user → IS
+//! requests, APe ↔ IR/APr image forwarding, UP → MP profile pushes, and
+//! result returns. The same enum is delivered through the simulated network
+//! (virtual mode) and the byte-framed socket codec in [`super::wire`]
+//! (live mode) — the paper distinguishes request kinds "through different
+//! byte types", which `wire` reproduces literally with a tag byte.
+
+use super::{Constraint, ImageMeta, NodeId, TaskId};
+
+/// A device profile snapshot pushed by UP and held in the MP table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfileUpdate {
+    pub node: NodeId,
+    /// Containers currently processing an image.
+    pub busy_containers: u32,
+    /// Warm containers (busy + idle).
+    pub warm_containers: u32,
+    /// Locally queued images not yet dispatched to a container.
+    pub queued_images: u32,
+    /// Background (non-container) CPU load in [0, 100].
+    pub cpu_load_pct: f64,
+    /// Remaining battery in [0, 100]; `None` for mains-powered nodes.
+    pub battery_pct: Option<f64>,
+    /// Sender-side timestamp (ms since run start).
+    pub sent_ms: f64,
+}
+
+/// An application request from a mobile user (Fig. 2: app id + location +
+/// constraint over the client socket).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UserRequest {
+    pub app_id: u32,
+    /// User position; the edge server picks the nearest camera device.
+    pub location: (f64, f64),
+    pub constraint: Constraint,
+    /// How many frames the activated camera should stream.
+    pub n_images: u32,
+    /// Inter-frame interval in ms.
+    pub interval_ms: f64,
+}
+
+/// Everything that can travel between nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// User → edge IS: start an application session.
+    User(UserRequest),
+    /// Edge APe → device IR: activate the camera and stream frames.
+    Activate { request: UserRequest, reply_to: NodeId },
+    /// An image task (metadata in virtual mode, + payload bytes in live).
+    Image(ImageMeta),
+    /// Device APr/edge APe → origin: detection result for a task.
+    Result {
+        task: TaskId,
+        /// Node that executed the task.
+        processed_by: NodeId,
+        /// Detections found (survivor windows).
+        detections: u32,
+        /// Best cascade score.
+        max_score: f32,
+        /// Execution wall/virtual time inside the container (ms).
+        process_ms: f64,
+    },
+    /// UP → MP periodic profile push (the paper's 20 ms cadence).
+    Profile(ProfileUpdate),
+    /// Device → edge: join handshake (certification step in §III-C.2).
+    Join { node: NodeId, class_tag: u8, warm_containers: u32 },
+    /// Edge → device: join accepted.
+    JoinAck { assigned: NodeId },
+}
+
+impl Message {
+    /// The wire tag byte for this message kind (the paper's "byte types").
+    pub fn tag(&self) -> u8 {
+        match self {
+            Message::User(_) => 0x01,
+            Message::Activate { .. } => 0x02,
+            Message::Image(_) => 0x03,
+            Message::Result { .. } => 0x04,
+            Message::Profile(_) => 0x05,
+            Message::Join { .. } => 0x06,
+            Message::JoinAck { .. } => 0x07,
+        }
+    }
+
+    /// Approximate on-wire size in KB for the network timing model.
+    /// Images dominate (their `size_kb`); control messages are small.
+    pub fn wire_kb(&self) -> f64 {
+        match self {
+            Message::Image(meta) => meta.size_kb,
+            Message::Result { .. } => 1.0,
+            _ => 0.25,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Constraint;
+
+    fn meta() -> ImageMeta {
+        ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 87.0,
+            side_px: 128,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(1000.0),
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn tags_unique() {
+        let msgs: Vec<Message> = vec![
+            Message::Image(meta()),
+            Message::Result { task: TaskId(1), processed_by: NodeId(0), detections: 0, max_score: 0.0, process_ms: 1.0 },
+            Message::Profile(ProfileUpdate {
+                node: NodeId(1),
+                busy_containers: 0,
+                warm_containers: 2,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+                sent_ms: 0.0,
+            }),
+            Message::Join { node: NodeId(1), class_tag: 1, warm_containers: 2 },
+            Message::JoinAck { assigned: NodeId(1) },
+        ];
+        let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), msgs.len());
+    }
+
+    #[test]
+    fn image_wire_size_is_payload() {
+        let m = Message::Image(meta());
+        assert_eq!(m.wire_kb(), 87.0);
+        let r = Message::Result { task: TaskId(1), processed_by: NodeId(0), detections: 1, max_score: 1.0, process_ms: 5.0 };
+        assert!(r.wire_kb() < 87.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Core domain types shared by every layer: node/task identities, image
+//! metadata, constraints, scheduling decisions, and the wire message set.
+
+pub mod message;
+pub mod wire;
+
+pub use message::Message;
+
+/// Identity of a node in the topology (edge server, end device, cloud).
+///
+/// Dense index — nodes live in a `Vec` inside the engine; `NodeId(0)` is by
+/// convention the edge server in a single-edge topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// Monotone per-run task identity (one per image in the stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Hardware class of a node — selects the profile calibration curves
+/// (Table I of the paper: edge server, Raspberry Pi 4, smartphone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeClass {
+    /// 2.3 GHz dual-core i5, 8 GB (the paper's edge server).
+    EdgeServer,
+    /// Quad-core Cortex-A72, 8 GB (Raspberry Pi 4).
+    RaspberryPi,
+    /// Octa-core big.LITTLE, 4 GB (Samsung-class phone).
+    SmartPhone,
+}
+
+impl NodeClass {
+    /// Number of usable cores for container contention modeling.
+    pub fn cores(&self) -> u32 {
+        match self {
+            // The i5 is dual-core/4-thread; the paper's Table V shows
+            // saturation at ~4 concurrent containers — model 4 slots.
+            NodeClass::EdgeServer => 4,
+            NodeClass::RaspberryPi => 4,
+            NodeClass::SmartPhone => 4,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NodeClass::EdgeServer => "edge-server",
+            NodeClass::RaspberryPi => "raspberry-pi",
+            NodeClass::SmartPhone => "smart-phone",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NodeClass> {
+        match s {
+            "edge-server" | "edge" => Some(NodeClass::EdgeServer),
+            "raspberry-pi" | "rpi" => Some(NodeClass::RaspberryPi),
+            "smart-phone" | "phone" => Some(NodeClass::SmartPhone),
+            _ => None,
+        }
+    }
+}
+
+/// A user-supplied task constraint (the paper evaluates time constraints;
+/// §VI names privacy/energy as future work — `pinned_node` models the
+/// paper's "task and trust constraints" where a task may only run on
+/// specific nodes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Constraint {
+    /// End-to-end deadline in milliseconds (generation → result).
+    pub deadline_ms: f64,
+    /// If set, the task must not leave this node (privacy/trust constraint).
+    pub pinned_node: Option<NodeId>,
+}
+
+impl Constraint {
+    pub fn deadline(deadline_ms: f64) -> Self {
+        Constraint { deadline_ms, pinned_node: None }
+    }
+
+    pub fn pinned(deadline_ms: f64, node: NodeId) -> Self {
+        Constraint { deadline_ms, pinned_node: Some(node) }
+    }
+}
+
+/// Metadata of one image task flowing through the system.
+///
+/// Virtual mode carries only metadata (the timing model consumes size);
+/// live mode additionally ships the pixel payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ImageMeta {
+    pub task: TaskId,
+    /// Capture site (the camera's device).
+    pub origin: NodeId,
+    /// Payload size in KB — drives T_trans and T_process (paper Table II).
+    pub size_kb: f64,
+    /// Square pixel side for the compute artifact variant (64/128/256).
+    pub side_px: u32,
+    /// Virtual/real creation timestamp (ms since run start).
+    pub created_ms: f64,
+    pub constraint: Constraint,
+    /// Stream sequence number (EODS splits on its parity).
+    pub seq: u64,
+}
+
+/// Where a scheduling decision sends a task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Placement {
+    /// Run in the local container pool (enqueue if none idle).
+    Local,
+    /// Forward to the edge server for a global decision.
+    ToEdge,
+    /// Edge-level decision: offload to this end device.
+    Offload(NodeId),
+}
+
+/// Outcome record for one completed (or dropped) task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Verdict {
+    /// Completed within its deadline.
+    Met,
+    /// Completed but missed the deadline.
+    Missed,
+    /// Never completed (network loss / node failure / run ended).
+    Dropped,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_class_roundtrip() {
+        for c in [NodeClass::EdgeServer, NodeClass::RaspberryPi, NodeClass::SmartPhone] {
+            assert_eq!(NodeClass::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(NodeClass::parse("rpi"), Some(NodeClass::RaspberryPi));
+        assert_eq!(NodeClass::parse("toaster"), None);
+    }
+
+    #[test]
+    fn constraint_constructors() {
+        let c = Constraint::deadline(500.0);
+        assert_eq!(c.deadline_ms, 500.0);
+        assert!(c.pinned_node.is_none());
+        let p = Constraint::pinned(500.0, NodeId(3));
+        assert_eq!(p.pinned_node, Some(NodeId(3)));
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(NodeId(4).to_string(), "n4");
+        assert_eq!(TaskId(9).to_string(), "t9");
+    }
+
+    #[test]
+    fn cores_positive() {
+        for c in [NodeClass::EdgeServer, NodeClass::RaspberryPi, NodeClass::SmartPhone] {
+            assert!(c.cores() >= 1);
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Byte-framed wire codec for live (socket) mode.
+//!
+//! Frame layout: `[tag: u8][len: u32 le][body: len bytes]`. The tag byte is
+//! the paper's mechanism for distinguishing request kinds on a shared
+//! socket ("The APe and APr distinguish among different requests through
+//! different byte types"). Bodies are fixed-layout little-endian — no serde
+//! in the offline crate set, and a hand-rolled codec keeps the live hot
+//! path allocation-free on the encode side (caller-provided buffer).
+
+use anyhow::{bail, Context, Result};
+
+use super::message::{Message, ProfileUpdate, UserRequest};
+use super::{Constraint, ImageMeta, NodeId, TaskId};
+
+/// Encode `msg` into `buf` (cleared first). Returns the frame length.
+pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
+    buf.clear();
+    buf.push(msg.tag());
+    buf.extend_from_slice(&[0u8; 4]); // length backpatched below
+    match msg {
+        Message::User(r) => put_user(buf, r),
+        Message::Activate { request, reply_to } => {
+            put_user(buf, request);
+            put_u32(buf, reply_to.0);
+        }
+        Message::Image(m) => put_image(buf, m),
+        Message::Result { task, processed_by, detections, max_score, process_ms } => {
+            put_u64(buf, task.0);
+            put_u32(buf, processed_by.0);
+            put_u32(buf, *detections);
+            put_f32(buf, *max_score);
+            put_f64(buf, *process_ms);
+        }
+        Message::Profile(p) => {
+            put_u32(buf, p.node.0);
+            put_u32(buf, p.busy_containers);
+            put_u32(buf, p.warm_containers);
+            put_u32(buf, p.queued_images);
+            put_f64(buf, p.cpu_load_pct);
+            match p.battery_pct {
+                Some(b) => {
+                    buf.push(1);
+                    put_f64(buf, b);
+                }
+                None => buf.push(0),
+            }
+            put_f64(buf, p.sent_ms);
+        }
+        Message::Join { node, class_tag, warm_containers } => {
+            put_u32(buf, node.0);
+            buf.push(*class_tag);
+            put_u32(buf, *warm_containers);
+        }
+        Message::JoinAck { assigned } => put_u32(buf, assigned.0),
+    }
+    let body_len = (buf.len() - 5) as u32;
+    buf[1..5].copy_from_slice(&body_len.to_le_bytes());
+    buf.len()
+}
+
+/// Decode one frame previously produced by [`encode`].
+pub fn decode(frame: &[u8]) -> Result<Message> {
+    if frame.len() < 5 {
+        bail!("frame too short: {} bytes", frame.len());
+    }
+    let tag = frame[0];
+    let len = u32::from_le_bytes(frame[1..5].try_into().unwrap()) as usize;
+    let body = &frame[5..];
+    if body.len() != len {
+        bail!("length mismatch: header {} vs body {}", len, body.len());
+    }
+    let mut r = Reader { b: body, off: 0 };
+    let msg = match tag {
+        0x01 => Message::User(get_user(&mut r)?),
+        0x02 => {
+            let request = get_user(&mut r)?;
+            let reply_to = NodeId(r.u32()?);
+            Message::Activate { request, reply_to }
+        }
+        0x03 => Message::Image(get_image(&mut r)?),
+        0x04 => Message::Result {
+            task: TaskId(r.u64()?),
+            processed_by: NodeId(r.u32()?),
+            detections: r.u32()?,
+            max_score: r.f32()?,
+            process_ms: r.f64()?,
+        },
+        0x05 => {
+            let node = NodeId(r.u32()?);
+            let busy_containers = r.u32()?;
+            let warm_containers = r.u32()?;
+            let queued_images = r.u32()?;
+            let cpu_load_pct = r.f64()?;
+            let battery_pct = if r.u8()? == 1 { Some(r.f64()?) } else { None };
+            let sent_ms = r.f64()?;
+            Message::Profile(ProfileUpdate {
+                node,
+                busy_containers,
+                warm_containers,
+                queued_images,
+                cpu_load_pct,
+                battery_pct,
+                sent_ms,
+            })
+        }
+        0x06 => Message::Join {
+            node: NodeId(r.u32()?),
+            class_tag: r.u8()?,
+            warm_containers: r.u32()?,
+        },
+        0x07 => Message::JoinAck { assigned: NodeId(r.u32()?) },
+        t => bail!("unknown tag byte 0x{t:02x}"),
+    };
+    if r.off != body.len() {
+        bail!("trailing bytes in frame: {} of {}", body.len() - r.off, body.len());
+    }
+    Ok(msg)
+}
+
+/// Read one length-prefixed frame from a blocking reader (live mode).
+pub fn read_frame(stream: &mut impl std::io::Read) -> Result<Vec<u8>> {
+    let mut head = [0u8; 5];
+    stream.read_exact(&mut head).context("reading frame header")?;
+    let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
+    if len > 64 << 20 {
+        bail!("frame body {} bytes exceeds 64 MiB cap", len);
+    }
+    let mut frame = vec![0u8; 5 + len];
+    frame[..5].copy_from_slice(&head);
+    stream.read_exact(&mut frame[5..]).context("reading frame body")?;
+    Ok(frame)
+}
+
+// ---- body field helpers -------------------------------------------------
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_constraint(b: &mut Vec<u8>, c: &Constraint) {
+    put_f64(b, c.deadline_ms);
+    match c.pinned_node {
+        Some(n) => {
+            b.push(1);
+            put_u32(b, n.0);
+        }
+        None => b.push(0),
+    }
+}
+
+fn put_user(b: &mut Vec<u8>, r: &UserRequest) {
+    put_u32(b, r.app_id);
+    put_f64(b, r.location.0);
+    put_f64(b, r.location.1);
+    put_constraint(b, &r.constraint);
+    put_u32(b, r.n_images);
+    put_f64(b, r.interval_ms);
+}
+
+fn put_image(b: &mut Vec<u8>, m: &ImageMeta) {
+    put_u64(b, m.task.0);
+    put_u32(b, m.origin.0);
+    put_f64(b, m.size_kb);
+    put_u32(b, m.side_px);
+    put_f64(b, m.created_ms);
+    put_constraint(b, &m.constraint);
+    put_u64(b, m.seq);
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.b.len() {
+            bail!("frame body truncated at offset {}", self.off);
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn get_constraint(r: &mut Reader) -> Result<Constraint> {
+    let deadline_ms = r.f64()?;
+    let pinned_node = if r.u8()? == 1 { Some(NodeId(r.u32()?)) } else { None };
+    Ok(Constraint { deadline_ms, pinned_node })
+}
+
+fn get_user(r: &mut Reader) -> Result<UserRequest> {
+    Ok(UserRequest {
+        app_id: r.u32()?,
+        location: (r.f64()?, r.f64()?),
+        constraint: get_constraint(r)?,
+        n_images: r.u32()?,
+        interval_ms: r.f64()?,
+    })
+}
+
+fn get_image(r: &mut Reader) -> Result<ImageMeta> {
+    Ok(ImageMeta {
+        task: TaskId(r.u64()?),
+        origin: NodeId(r.u32()?),
+        size_kb: r.f64()?,
+        side_px: r.u32()?,
+        created_ms: r.f64()?,
+        constraint: get_constraint(r)?,
+        seq: r.u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::message::{ProfileUpdate, UserRequest};
+
+    fn roundtrip(msg: Message) {
+        let mut buf = Vec::new();
+        encode(&msg, &mut buf);
+        let got = decode(&buf).expect("decode");
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(Message::User(UserRequest {
+            app_id: 3,
+            location: (1.5, -2.5),
+            constraint: Constraint::deadline(5000.0),
+            n_images: 50,
+            interval_ms: 100.0,
+        }));
+        roundtrip(Message::Activate {
+            request: UserRequest {
+                app_id: 1,
+                location: (0.0, 0.0),
+                constraint: Constraint::pinned(100.0, NodeId(2)),
+                n_images: 10,
+                interval_ms: 50.0,
+            },
+            reply_to: NodeId(0),
+        });
+        roundtrip(Message::Image(ImageMeta {
+            task: TaskId(99),
+            origin: NodeId(1),
+            size_kb: 259.0,
+            side_px: 256,
+            created_ms: 123.75,
+            constraint: Constraint::deadline(1000.0),
+            seq: 7,
+        }));
+        roundtrip(Message::Result {
+            task: TaskId(99),
+            processed_by: NodeId(2),
+            detections: 4,
+            max_score: 1.25,
+            process_ms: 223.0,
+        });
+        roundtrip(Message::Profile(ProfileUpdate {
+            node: NodeId(2),
+            busy_containers: 1,
+            warm_containers: 3,
+            queued_images: 5,
+            cpu_load_pct: 42.5,
+            battery_pct: Some(88.0),
+            sent_ms: 2000.0,
+        }));
+        roundtrip(Message::Join { node: NodeId(5), class_tag: 2, warm_containers: 2 });
+        roundtrip(Message::JoinAck { assigned: NodeId(5) });
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        let frame = [0xEE, 0, 0, 0, 0];
+        assert!(decode(&frame).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_body() {
+        let mut buf = Vec::new();
+        encode(
+            &Message::JoinAck { assigned: NodeId(1) },
+            &mut buf,
+        );
+        // Chop a byte off the body but keep the header length → mismatch.
+        let bad = &buf[..buf.len() - 1];
+        assert!(decode(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let mut buf = Vec::new();
+        encode(&Message::JoinAck { assigned: NodeId(1) }, &mut buf);
+        buf.push(0xFF);
+        let len = (buf.len() - 5) as u32;
+        buf[1..5].copy_from_slice(&len.to_le_bytes());
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn read_frame_from_stream() {
+        let mut buf = Vec::new();
+        encode(&Message::JoinAck { assigned: NodeId(9) }, &mut buf);
+        let mut cursor = std::io::Cursor::new(buf.clone());
+        let frame = read_frame(&mut cursor).unwrap();
+        assert_eq!(frame, buf);
+        assert_eq!(decode(&frame).unwrap(), Message::JoinAck { assigned: NodeId(9) });
+    }
+}

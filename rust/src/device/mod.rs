@@ -1,0 +1,402 @@
+//! End-device node: the paper's APr + UP + IR as a *sans-IO* state machine.
+//!
+//! The paper structures the device as three threads (image intake, decision
+//! making, container feedback) plus the Update-Profile module. Here those
+//! are handler methods that consume an input (camera frame, network
+//! message, container completion, profile timer) and emit [`Action`]s; the
+//! discrete-event engine (virtual mode) and the socket runtime (live mode)
+//! both drive the *same* state machine — scheduling behaviour cannot
+//! diverge between simulation and deployment.
+
+use std::collections::HashMap;
+
+use crate::container::ContainerPool;
+use crate::core::message::{Message, ProfileUpdate};
+use crate::core::{ImageMeta, NodeId, Placement, TaskId};
+use crate::energy::Battery;
+use crate::profile::Predictor;
+use crate::scheduler::{DeviceCtx, LocalSnapshot, SchedulerPolicy};
+
+/// Effects a node handler requests from its driver.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Send a message toward another node. `reliable` selects TCP-like
+    /// (control) vs UDP-like (image push, may be dropped) semantics.
+    Send { to: NodeId, msg: Message, reliable: bool },
+    /// A container will finish at `at_ms` (virtual mode schedules an event;
+    /// live mode's worker thread reports completion itself).
+    ContainerBusyUntil { container: usize, task: TaskId, at_ms: f64 },
+    /// Recorder hook: task placed.
+    RecordPlaced { task: TaskId, placement: Placement },
+    /// Recorder hook: task started executing on this node.
+    RecordStarted { task: TaskId, at_ms: f64 },
+    /// Recorder hook: task completed (result available at its origin).
+    RecordCompleted { task: TaskId, at_ms: f64, process_ms: f64 },
+}
+
+/// An end device (Raspberry Pi / smartphone).
+pub struct DeviceNode {
+    pub id: NodeId,
+    pub edge: NodeId,
+    pool: ContainerPool,
+    predictor: Predictor,
+    policy: Box<dyn SchedulerPolicy>,
+    /// Metadata of tasks currently in the local pool or queue.
+    inflight: HashMap<TaskId, ImageMeta>,
+    /// Tasks this device originated and is awaiting results for.
+    awaiting: HashMap<TaskId, ImageMeta>,
+    /// Battery model (None = mains-powered). Advanced on every handler
+    /// call; reported in UP pushes for energy-aware scheduling.
+    battery: Option<Battery>,
+}
+
+impl DeviceNode {
+    pub fn new(
+        id: NodeId,
+        edge: NodeId,
+        pool: ContainerPool,
+        predictor: Predictor,
+        policy: Box<dyn SchedulerPolicy>,
+    ) -> Self {
+        Self {
+            id,
+            edge,
+            pool,
+            predictor,
+            policy,
+            inflight: HashMap::new(),
+            awaiting: HashMap::new(),
+            battery: None,
+        }
+    }
+
+    /// Attach a battery model (builder style).
+    pub fn with_battery(mut self, battery: Battery) -> Self {
+        self.battery = Some(battery);
+        self
+    }
+
+    pub fn battery(&self) -> Option<&Battery> {
+        self.battery.as_ref()
+    }
+
+    /// Advance the battery drain integral to `now_ms`.
+    fn tick_battery(&mut self, now_ms: f64) {
+        let busy = self.pool.busy_count();
+        if let Some(b) = self.battery.as_mut() {
+            b.advance(now_ms, busy);
+        }
+    }
+
+    pub fn pool(&self) -> &ContainerPool {
+        &self.pool
+    }
+
+    pub fn pool_mut(&mut self) -> &mut ContainerPool {
+        &mut self.pool
+    }
+
+    fn snapshot(&self) -> LocalSnapshot {
+        LocalSnapshot {
+            node: self.id,
+            busy_containers: self.pool.busy_count(),
+            warm_containers: self.pool.warm_count(),
+            queued_images: self.pool.queued_count(),
+            cpu_load_pct: self.pool.bg_load(),
+            battery_pct: self.battery.as_ref().map(|b| b.pct()),
+        }
+    }
+
+    /// The UP push (every 20 ms in the paper).
+    pub fn profile_update(&self, now_ms: f64) -> ProfileUpdate {
+        let s = self.snapshot();
+        ProfileUpdate {
+            node: self.id,
+            busy_containers: s.busy_containers,
+            warm_containers: s.warm_containers,
+            queued_images: s.queued_images,
+            cpu_load_pct: s.cpu_load_pct,
+            battery_pct: self.battery.as_ref().map(|b| b.pct()),
+            sent_ms: now_ms,
+        }
+    }
+
+    /// Camera produced a frame (the paper's first APr thread receives it
+    /// into the original-image queue; the second thread decides).
+    pub fn on_camera_frame(&mut self, img: ImageMeta, now_ms: f64, out: &mut Vec<Action>) {
+        debug_assert_eq!(img.origin, self.id);
+        self.tick_battery(now_ms);
+        self.awaiting.insert(img.task, img);
+        // A depleted device cannot compute at all — forward everything.
+        if self.battery.as_ref().is_some_and(|b| b.depleted()) {
+            out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
+            out.push(Action::Send { to: self.edge, msg: Message::Image(img), reliable: false });
+            return;
+        }
+        let placement = {
+            let ctx = DeviceCtx { now_ms, img: &img, local: self.snapshot(), predictor: &self.predictor };
+            self.policy.decide_device(&ctx)
+        };
+        match placement {
+            Placement::Local => {
+                out.push(Action::RecordPlaced { task: img.task, placement: Placement::Local });
+                self.run_local(img, now_ms, out);
+            }
+            Placement::ToEdge | Placement::Offload(_) => {
+                out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
+                // Image push is UDP-like in the paper ("we use UDP to send
+                // the requests" to simulate loss).
+                out.push(Action::Send { to: self.edge, msg: Message::Image(img), reliable: false });
+            }
+        }
+    }
+
+    /// Network delivery.
+    pub fn on_message(&mut self, msg: Message, now_ms: f64, out: &mut Vec<Action>) {
+        self.tick_battery(now_ms);
+        match msg {
+            // The edge offloaded somebody's image to us: APr's decision
+            // thread "processes them locally" unconditionally.
+            Message::Image(img) => {
+                self.run_local(img, now_ms, out);
+            }
+            // Result for a task we originated but was processed elsewhere.
+            Message::Result { task, process_ms, .. } => {
+                if self.awaiting.remove(&task).is_some() {
+                    out.push(Action::RecordCompleted { task, at_ms: now_ms, process_ms });
+                }
+            }
+            Message::JoinAck { .. } => {}
+            other => {
+                log::debug!("{}: ignoring unexpected message {:?}", self.id, other.tag());
+            }
+        }
+    }
+
+    /// A local container finished its task.
+    pub fn on_container_done(
+        &mut self,
+        container: usize,
+        task: TaskId,
+        process_ms: f64,
+        now_ms: f64,
+        out: &mut Vec<Action>,
+    ) {
+        self.tick_battery(now_ms);
+        let img = self.inflight.remove(&task);
+        match img {
+            Some(img) if img.origin == self.id => {
+                // Our own frame, done locally: result is immediately
+                // available to the local application.
+                self.awaiting.remove(&task);
+                out.push(Action::RecordCompleted { task, at_ms: now_ms, process_ms });
+            }
+            Some(_img) => {
+                // Offloaded to us — return the result to the origin via the
+                // edge relay (star topology; results are small & reliable).
+                out.push(Action::Send {
+                    to: self.edge,
+                    msg: Message::Result {
+                        task,
+                        processed_by: self.id,
+                        detections: 0,
+                        max_score: 0.0,
+                        process_ms,
+                    },
+                    reliable: true,
+                });
+            }
+            None => log::warn!("{}: completion for unknown task {}", self.id, task),
+        }
+        // Feedback thread: idle container pulls the next queued image.
+        if let Some(next) = self.pool.complete(container, now_ms) {
+            self.note_assignment(next, now_ms, out);
+        }
+    }
+
+    /// Join handshake message for the edge server.
+    pub fn join_message(&self) -> Message {
+        Message::Join {
+            node: self.id,
+            class_tag: match self.pool.profile().class {
+                crate::core::NodeClass::EdgeServer => 0,
+                crate::core::NodeClass::RaspberryPi => 1,
+                crate::core::NodeClass::SmartPhone => 2,
+            },
+            warm_containers: self.pool.warm_count(),
+        }
+    }
+
+    fn run_local(&mut self, img: ImageMeta, now_ms: f64, out: &mut Vec<Action>) {
+        self.inflight.insert(img.task, img);
+        if let Some(assign) = self.pool.submit(img, now_ms) {
+            self.note_assignment(assign, now_ms, out);
+        }
+        // else: queued in q_image; dispatched on a future completion.
+    }
+
+    fn note_assignment(
+        &mut self,
+        assign: crate::container::Assignment,
+        _now_ms: f64,
+        out: &mut Vec<Action>,
+    ) {
+        out.push(Action::RecordStarted { task: assign.task, at_ms: assign.start_ms });
+        out.push(Action::ContainerBusyUntil {
+            container: assign.container,
+            task: assign.task,
+            at_ms: assign.done_at_ms,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Constraint, NodeClass};
+    use crate::profile::profile_for;
+    use crate::scheduler::PolicyKind;
+
+    fn device(policy: PolicyKind, warm: u32) -> DeviceNode {
+        DeviceNode::new(
+            NodeId(1),
+            NodeId(0),
+            ContainerPool::new(profile_for(NodeClass::RaspberryPi), warm),
+            Predictor::new(profile_for(NodeClass::RaspberryPi)),
+            policy.build(1),
+        )
+    }
+
+    fn frame(task: u64, deadline: f64) -> ImageMeta {
+        ImageMeta {
+            task: TaskId(task),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(deadline),
+            seq: task,
+        }
+    }
+
+    #[test]
+    fn aor_frame_runs_locally() {
+        let mut d = device(PolicyKind::Aor, 1);
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 100.0), 0.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::RecordStarted { .. })));
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::ContainerBusyUntil { at_ms, .. } if (*at_ms - 597.0).abs() < 1e-9)));
+        assert!(!out.iter().any(|a| matches!(a, Action::Send { .. })));
+    }
+
+    #[test]
+    fn aoe_frame_forwarded_unreliably() {
+        let mut d = device(PolicyKind::Aoe, 1);
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 5000.0), 0.0, &mut out);
+        let send = out.iter().find_map(|a| match a {
+            Action::Send { to, msg: Message::Image(_), reliable } => Some((*to, *reliable)),
+            _ => None,
+        });
+        assert_eq!(send, Some((NodeId(0), false)));
+    }
+
+    #[test]
+    fn local_completion_records_e2e() {
+        let mut d = device(PolicyKind::Aor, 1);
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 1000.0), 0.0, &mut out);
+        out.clear();
+        d.on_container_done(0, TaskId(1), 597.0, 597.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordCompleted { task: TaskId(1), at_ms, .. } if *at_ms == 597.0
+        )));
+    }
+
+    #[test]
+    fn offloaded_image_processed_and_result_relayed() {
+        let mut d = device(PolicyKind::Dds, 1);
+        let mut out = Vec::new();
+        // An image originated at node 2, offloaded to us by the edge.
+        let mut img = frame(9, 5000.0);
+        img.origin = NodeId(2);
+        d.on_message(Message::Image(img), 10.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::RecordStarted { .. })));
+        out.clear();
+        d.on_container_done(0, TaskId(9), 597.0, 607.0, &mut out);
+        // Result relayed via the edge, reliably.
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(0), msg: Message::Result { task: TaskId(9), .. }, reliable: true }
+        )));
+        // Not recorded as completed here (origin records on delivery).
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordCompleted { .. })));
+    }
+
+    #[test]
+    fn result_message_completes_awaiting_task() {
+        let mut d = device(PolicyKind::Aoe, 1);
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(3, 5000.0), 0.0, &mut out);
+        out.clear();
+        d.on_message(
+            Message::Result {
+                task: TaskId(3),
+                processed_by: NodeId(0),
+                detections: 1,
+                max_score: 1.0,
+                process_ms: 223.0,
+            },
+            400.0,
+            &mut out,
+        );
+        assert_eq!(
+            out,
+            vec![Action::RecordCompleted { task: TaskId(3), at_ms: 400.0, process_ms: 223.0 }]
+        );
+        // Duplicate result is ignored (UDP world).
+        out.clear();
+        d.on_message(
+            Message::Result {
+                task: TaskId(3),
+                processed_by: NodeId(0),
+                detections: 1,
+                max_score: 1.0,
+                process_ms: 223.0,
+            },
+            410.0,
+            &mut out,
+        );
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn queue_overflow_dispatches_on_completion() {
+        let mut d = device(PolicyKind::Aor, 1);
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 1e9), 0.0, &mut out);
+        d.on_camera_frame(frame(2, 1e9), 1.0, &mut out);
+        assert_eq!(d.pool().queued_count(), 1);
+        out.clear();
+        d.on_container_done(0, TaskId(1), 597.0, 597.0, &mut out);
+        // Task 2 starts right away on the freed container.
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::ContainerBusyUntil { task: TaskId(2), .. }
+        )));
+    }
+
+    #[test]
+    fn profile_update_reflects_pool() {
+        let mut d = device(PolicyKind::Aor, 2);
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 1e9), 0.0, &mut out);
+        let up = d.profile_update(20.0);
+        assert_eq!(up.busy_containers, 1);
+        assert_eq!(up.warm_containers, 2);
+        assert_eq!(up.sent_ms, 20.0);
+    }
+}

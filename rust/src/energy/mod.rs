@@ -1,0 +1,141 @@
+//! Energy substrate — the paper's §VI future-work constraint ("there are
+//! other constraints, such as privacy concerns, energy efficiency, ...").
+//!
+//! Battery-powered end devices (phones, untethered Pis) drain per unit of
+//! busy-container time plus a small idle floor; mains-powered nodes report
+//! no battery. The UP profile already carries `battery_pct`, so the MP
+//! table sees device energy state with the same 20 ms cadence/staleness as
+//! everything else, and the [`crate::scheduler::DdsEnergy`] policy can
+//! schedule against it.
+
+/// Battery state of one device.
+///
+/// The model is deliberately simple (linear drain in busy-time — the
+/// dominant term for CPU-bound vision containers) and fully deterministic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Battery {
+    /// Full capacity in milliwatt-hours.
+    pub capacity_mwh: f64,
+    /// Remaining charge in milliwatt-hours.
+    pub remaining_mwh: f64,
+    /// Active-processing power draw (mW) while a container is busy.
+    pub busy_mw: f64,
+    /// Idle floor draw (mW) — radios, OS, the UP module.
+    pub idle_mw: f64,
+    /// Last time the drain integral was advanced (ms since run start).
+    last_update_ms: f64,
+}
+
+/// Typical parameters: a 5000 mAh / 3.7 V pack ≈ 18 500 mWh; a Pi 4 pulls
+/// ~6 W under vision load and ~2.5 W idle.
+pub const RPI_PACK: (f64, f64, f64) = (18_500.0, 6_000.0, 2_500.0);
+/// A phone throttles harder: ~4 W busy, ~1 W idle, 15 500 mWh pack.
+pub const PHONE_PACK: (f64, f64, f64) = (15_500.0, 4_000.0, 1_000.0);
+
+impl Battery {
+    pub fn new(capacity_mwh: f64, busy_mw: f64, idle_mw: f64) -> Self {
+        assert!(capacity_mwh > 0.0 && busy_mw >= 0.0 && idle_mw >= 0.0);
+        Battery {
+            capacity_mwh,
+            remaining_mwh: capacity_mwh,
+            busy_mw,
+            idle_mw,
+            last_update_ms: 0.0,
+        }
+    }
+
+    pub fn rpi() -> Self {
+        Battery::new(RPI_PACK.0, RPI_PACK.1, RPI_PACK.2)
+    }
+
+    pub fn phone() -> Self {
+        Battery::new(PHONE_PACK.0, PHONE_PACK.1, PHONE_PACK.2)
+    }
+
+    /// Remaining charge in percent [0, 100].
+    pub fn pct(&self) -> f64 {
+        (self.remaining_mwh / self.capacity_mwh * 100.0).clamp(0.0, 100.0)
+    }
+
+    pub fn depleted(&self) -> bool {
+        self.remaining_mwh <= 0.0
+    }
+
+    /// Advance the idle-drain integral to `now_ms` with `busy` containers
+    /// running (busy containers replace the idle floor for their share).
+    pub fn advance(&mut self, now_ms: f64, busy: u32) {
+        debug_assert!(now_ms + 1e-9 >= self.last_update_ms);
+        let dt_h = (now_ms - self.last_update_ms).max(0.0) / 3_600_000.0;
+        let mw = self.idle_mw + self.busy_mw * busy as f64;
+        self.remaining_mwh = (self.remaining_mwh - mw * dt_h).max(0.0);
+        self.last_update_ms = now_ms;
+    }
+
+    /// Energy cost of one processed image of `process_ms` busy time (mWh).
+    pub fn image_cost_mwh(&self, process_ms: f64) -> f64 {
+        self.busy_mw * process_ms / 3_600_000.0
+    }
+
+    /// Consumed since full, in mWh.
+    pub fn consumed_mwh(&self) -> f64 {
+        self.capacity_mwh - self.remaining_mwh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_at_start() {
+        let b = Battery::rpi();
+        assert_eq!(b.pct(), 100.0);
+        assert!(!b.depleted());
+    }
+
+    #[test]
+    fn idle_drain_over_an_hour() {
+        let mut b = Battery::new(10_000.0, 6_000.0, 2_500.0);
+        b.advance(3_600_000.0, 0); // one hour idle
+        assert!((b.remaining_mwh - 7_500.0).abs() < 1e-6);
+        assert!((b.pct() - 75.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn busy_drain_scales_with_containers() {
+        let mut a = Battery::new(10_000.0, 6_000.0, 0.0);
+        let mut b = Battery::new(10_000.0, 6_000.0, 0.0);
+        a.advance(1_800_000.0, 1); // 30 min, 1 busy
+        b.advance(1_800_000.0, 2); // 30 min, 2 busy
+        assert!((a.consumed_mwh() - 3_000.0).abs() < 1e-6);
+        assert!((b.consumed_mwh() - 6_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn never_goes_negative() {
+        let mut b = Battery::new(1.0, 6_000.0, 2_500.0);
+        b.advance(3_600_000.0, 4);
+        assert_eq!(b.remaining_mwh, 0.0);
+        assert!(b.depleted());
+        assert_eq!(b.pct(), 0.0);
+    }
+
+    #[test]
+    fn image_cost_is_linear() {
+        let b = Battery::rpi();
+        let one = b.image_cost_mwh(597.0);
+        let two = b.image_cost_mwh(1_194.0);
+        assert!((two - 2.0 * one).abs() < 1e-12);
+        // 597 ms at 6 W ≈ 1 mWh — sane magnitude.
+        assert!(one > 0.5 && one < 2.0, "cost {one}");
+    }
+
+    #[test]
+    fn advance_is_monotone_and_idempotent() {
+        let mut b = Battery::rpi();
+        b.advance(1_000.0, 1);
+        let r = b.remaining_mwh;
+        b.advance(1_000.0, 1); // same instant — no further drain
+        assert_eq!(b.remaining_mwh, r);
+    }
+}

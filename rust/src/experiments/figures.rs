@@ -1,0 +1,231 @@
+//! Figure 5–8 regenerators: whole-system scenario sweeps.
+
+use crate::sim::workload::ArrivalPattern;
+use crate::config::WorkloadConfig;
+use crate::container::ContainerPool;
+use crate::core::{NodeClass, NodeId};
+use crate::profile::calibration::{profile_for, FIG7_LOAD_RUNTIME};
+use crate::scheduler::PolicyKind;
+use crate::sim::ScenarioBuilder;
+
+use super::Comparison;
+
+/// Constraint sweeps used by the paper's x-axes.
+pub const FIG5_DEADLINES: [f64; 9] =
+    [200.0, 500.0, 1_000.0, 2_000.0, 3_000.0, 5_000.0, 10_000.0, 20_000.0, 30_000.0];
+pub const FIG5_INTERVALS: [f64; 4] = [50.0, 100.0, 200.0, 500.0];
+pub const FIG6_DEADLINES: [f64; 11] = [
+    200.0, 500.0, 1_000.0, 2_000.0, 5_000.0, 10_000.0, 20_000.0, 30_000.0, 40_000.0, 60_000.0,
+    80_000.0,
+];
+pub const FIG6_INTERVALS: [f64; 2] = [50.0, 100.0];
+pub const FIG8_LOADS: [f64; 5] = [0.0, 25.0, 50.0, 75.0, 100.0];
+pub const FIG8_DEADLINES: [f64; 2] = [5_000.0, 10_000.0];
+
+/// One (interval, deadline) cell: met counts per policy.
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub interval_ms: f64,
+    pub deadline_ms: f64,
+    /// (policy, images meeting the constraint).
+    pub met: Vec<(PolicyKind, usize)>,
+}
+
+fn workload(n: u32, interval: f64, deadline: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        n_images: n,
+        interval_ms: interval,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms: deadline,
+        side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+    }
+}
+
+fn sweep(n_images: u32, intervals: &[f64], deadlines: &[f64], seed: u64) -> Vec<Fig5Row> {
+    let mut rows = Vec::new();
+    for &interval in intervals {
+        for &deadline in deadlines {
+            let builder = ScenarioBuilder::paper_testbed(PolicyKind::Dds)
+                .workload(workload(n_images, interval, deadline))
+                .seed(seed);
+            let met = PolicyKind::PAPER
+                .iter()
+                .map(|&p| (p, builder.clone().policy(p).run().met()))
+                .collect();
+            rows.push(Fig5Row { interval_ms: interval, deadline_ms: deadline, met });
+        }
+    }
+    rows
+}
+
+/// Fig. 5: 50 images, four inter-frame intervals, constraint sweep, four
+/// scheduling algorithms on the paper testbed.
+pub fn fig5(seed: u64) -> Vec<Fig5Row> {
+    sweep(50, &FIG5_INTERVALS, &FIG5_DEADLINES, seed)
+}
+
+/// Fig. 6: 1000 images at 50/100 ms intervals.
+pub fn fig6(seed: u64) -> Vec<Fig5Row> {
+    sweep(1_000, &FIG6_INTERVALS, &FIG6_DEADLINES, seed)
+}
+
+/// Fig. 7 row: CPU load vs average container processing time.
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub comparison: Comparison,
+}
+
+/// Fig. 7: measured via the container pool under a background-load sweep
+/// (paper: 223 → 284 → 312 → 350 → 374 ms at 0/25/50/75/100 %).
+pub fn fig7() -> Vec<Fig7Row> {
+    FIG7_LOAD_RUNTIME
+        .iter()
+        .map(|&(load, paper_ms)| {
+            let mut pool = ContainerPool::new(profile_for(NodeClass::EdgeServer), 1);
+            pool.set_bg_load(load);
+            let a = pool
+                .submit(
+                    crate::core::ImageMeta {
+                        task: crate::core::TaskId(0),
+                        origin: NodeId(1),
+                        size_kb: 29.0,
+                        side_px: 64,
+                        created_ms: 0.0,
+                        constraint: crate::core::Constraint::deadline(f64::INFINITY),
+                        seq: 0,
+                    },
+                    0.0,
+                )
+                .expect("idle");
+            Fig7Row { comparison: Comparison { x: load, paper: paper_ms, measured: a.process_ms } }
+        })
+        .collect()
+}
+
+/// Fig. 8 cell: met counts for DDS vs DDS+R2 under edge CPU stress.
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub deadline_ms: f64,
+    pub edge_load_pct: f64,
+    pub dds_met: usize,
+    pub dds_with_r2_met: usize,
+}
+
+/// Fig. 8: 1000 images at 50 ms; the baseline topology has only R1 (camera)
+/// + the edge server; the extension adds R2 as an offload target.
+pub fn fig8(seed: u64) -> Vec<Fig8Row> {
+    let mut rows = Vec::new();
+    for &deadline in &FIG8_DEADLINES {
+        for &load in &FIG8_LOADS {
+            let wl = workload(1_000, 50.0, deadline);
+
+            let mut base_cfg = crate::config::SystemConfig::default();
+            base_cfg.policy = PolicyKind::Dds;
+            base_cfg.devices.truncate(1); // R1 only
+            let dds = ScenarioBuilder::new(base_cfg)
+                .workload(wl)
+                .edge_load(load)
+                .seed(seed)
+                .run();
+
+            let ext = ScenarioBuilder::paper_testbed(PolicyKind::Dds) // R1 + R2
+                .workload(wl)
+                .edge_load(load)
+                .seed(seed)
+                .run();
+
+            rows.push(Fig8Row {
+                deadline_ms: deadline,
+                edge_load_pct: load,
+                dds_met: dds.met(),
+                dds_with_r2_met: ext.met(),
+            });
+        }
+    }
+    rows
+}
+
+/// Render fig5/fig6 rows as an aligned text grid.
+pub fn render_policy_grid(title: &str, rows: &[Fig5Row]) -> String {
+    let mut out = format!(
+        "## {title}\n{:>10} {:>12} {:>8} {:>8} {:>8} {:>8}\n",
+        "interval", "deadline", "AOR", "AOE", "EODS", "DDS"
+    );
+    for r in rows {
+        let get = |k: PolicyKind| r.met.iter().find(|(p, _)| *p == k).map(|(_, m)| *m).unwrap_or(0);
+        out.push_str(&format!(
+            "{:>10} {:>12} {:>8} {:>8} {:>8} {:>8}\n",
+            r.interval_ms,
+            r.deadline_ms,
+            get(PolicyKind::Aor),
+            get(PolicyKind::Aoe),
+            get(PolicyKind::Eods),
+            get(PolicyKind::Dds),
+        ));
+    }
+    out
+}
+
+/// Render fig8 rows.
+pub fn render_fig8(rows: &[Fig8Row]) -> String {
+    let mut out = format!(
+        "## Fig 8: DDS vs DDS+R2 under edge CPU load (1000 imgs @50ms)\n{:>12} {:>8} {:>10} {:>12} {:>8}\n",
+        "deadline", "load%", "DDS", "DDS+R2", "gain%"
+    );
+    for r in rows {
+        let gain = if r.dds_met > 0 {
+            100.0 * (r.dds_with_r2_met as f64 - r.dds_met as f64) / r.dds_met as f64
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "{:>12} {:>8} {:>10} {:>12} {:>7.0}%\n",
+            r.deadline_ms, r.edge_load_pct, r.dds_met, r.dds_with_r2_met, gain
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_exact_match() {
+        for row in fig7() {
+            assert!(row.comparison.rel_err() < 1e-9, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn fig5_single_cell_shapes() {
+        // One representative cell to keep unit tests fast (full grids run
+        // in the bench harness): 50 imgs @ 50 ms, 2 s constraint.
+        let rows = sweep(50, &[50.0], &[2_000.0], 42);
+        let r = &rows[0];
+        let get = |k: PolicyKind| r.met.iter().find(|(p, _)| *p == k).unwrap().1;
+        // Distributed beats single-node (paper's headline observation).
+        assert!(get(PolicyKind::Dds) >= get(PolicyKind::Aor));
+        assert!(get(PolicyKind::Dds) + 5 >= get(PolicyKind::Eods));
+        // Edge beats RPi under pressure.
+        assert!(get(PolicyKind::Aoe) >= get(PolicyKind::Aor));
+    }
+
+    #[test]
+    fn fig8_extension_helps() {
+        // Single cell: load 0, 5 s constraint.
+        let wl = workload(1_000, 50.0, 5_000.0);
+        let mut base_cfg = crate::config::SystemConfig::default();
+        base_cfg.policy = PolicyKind::Dds;
+        base_cfg.devices.truncate(1);
+        let dds = ScenarioBuilder::new(base_cfg).workload(wl).seed(1).run().met();
+        let ext = ScenarioBuilder::paper_testbed(PolicyKind::Dds)
+            .workload(wl)
+            .seed(1)
+            .run()
+            .met();
+        assert!(ext > dds, "adding R2 must help: {ext} vs {dds}");
+    }
+}

@@ -1,0 +1,67 @@
+//! Experiment harness: one generator per table/figure in the paper's
+//! evaluation (§IV–§V). The `benches/` targets and the `repro` CLI
+//! subcommand both call these — a single source of truth for what each
+//! experiment means.
+//!
+//! Every generator returns structured rows plus the paper's reference
+//! numbers so reports can print paper-vs-measured side by side.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{fig5, fig6, fig7, fig8, Fig5Row, Fig7Row, Fig8Row};
+pub use tables::{table2, table3, table4, table5, table6, TableRow};
+
+/// A paper-vs-measured comparison row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Comparison {
+    pub x: f64,
+    pub paper: f64,
+    pub measured: f64,
+}
+
+impl Comparison {
+    pub fn rel_err(&self) -> f64 {
+        if self.paper == 0.0 {
+            0.0
+        } else {
+            (self.measured - self.paper).abs() / self.paper
+        }
+    }
+}
+
+/// Render comparisons as an aligned text table.
+pub fn render_comparisons(title: &str, x_label: &str, rows: &[Comparison]) -> String {
+    let mut out = format!("## {title}\n{:>12} {:>14} {:>14} {:>8}\n", x_label, "paper", "measured", "err%");
+    for r in rows {
+        out.push_str(&format!(
+            "{:>12} {:>14.1} {:>14.1} {:>7.1}%\n",
+            r.x,
+            r.paper,
+            r.measured,
+            r.rel_err() * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_err_basics() {
+        let c = Comparison { x: 1.0, paper: 100.0, measured: 110.0 };
+        assert!((c.rel_err() - 0.1).abs() < 1e-12);
+        let z = Comparison { x: 1.0, paper: 0.0, measured: 5.0 };
+        assert_eq!(z.rel_err(), 0.0);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let rows = vec![Comparison { x: 2.0, paper: 10.0, measured: 12.0 }];
+        let s = render_comparisons("T", "n", &rows);
+        assert!(s.contains("## T"));
+        assert!(s.contains("20.0%"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Table II–VI regenerators: container-pool micro-experiments against the
+//! paper's measured rows.
+
+use crate::container::ContainerPool;
+use crate::core::{Constraint, ImageMeta, NodeClass, NodeId, TaskId};
+use crate::profile::calibration::{
+    profile_for, TABLE2_SIZE_RUNTIME, TABLE3_EDGE_COLD_EXISTING, TABLE3_EDGE_COLD_NEW,
+    TABLE4_RPI_COLD_EXISTING, TABLE4_RPI_COLD_NEW, TABLE5_EDGE_WARM, TABLE6_RPI_WARM,
+};
+
+use super::Comparison;
+
+/// A regenerated table: title + column label + comparison rows.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub title: &'static str,
+    pub x_label: &'static str,
+    pub rows: Vec<Comparison>,
+}
+
+impl TableRow {
+    pub fn render(&self) -> String {
+        super::render_comparisons(self.title, self.x_label, &self.rows)
+    }
+
+    pub fn max_rel_err(&self) -> f64 {
+        self.rows.iter().map(|r| r.rel_err()).fold(0.0, f64::max)
+    }
+}
+
+fn img(task: u64, size_kb: f64) -> ImageMeta {
+    ImageMeta {
+        task: TaskId(task),
+        origin: NodeId(1),
+        size_kb,
+        side_px: 64,
+        created_ms: 0.0,
+        constraint: Constraint::deadline(f64::INFINITY),
+        seq: task,
+    }
+}
+
+/// Table II: single warm container runtime vs image size on the edge.
+pub fn table2() -> TableRow {
+    let mut rows = Vec::new();
+    for (kb, paper_ms) in TABLE2_SIZE_RUNTIME {
+        let mut pool = ContainerPool::new(profile_for(NodeClass::EdgeServer), 1);
+        let a = pool.submit(img(0, kb), 0.0).expect("idle container");
+        rows.push(Comparison { x: kb, paper: paper_ms, measured: a.process_ms });
+    }
+    TableRow { title: "Table II: runtime vs image size (edge server)", x_label: "size KB", rows }
+}
+
+/// Warm-container profile: stream `images` images through `n` warm
+/// containers, reporting (average processing ms, total ms). This is the
+/// paper's Scenario 1/3 micro-experiment.
+pub fn warm_profile(class: NodeClass, n: u32, images: u64) -> (f64, f64) {
+    let mut pool = ContainerPool::new(profile_for(class), n);
+    let mut assignments = Vec::new();
+    let mut pending: Vec<(usize, f64)> = Vec::new(); // (container, done_at)
+    for t in 0..images {
+        if let Some(a) = pool.submit(img(t, 29.0), 0.0) {
+            pending.push((a.container, a.done_at_ms));
+            assignments.push(a.process_ms);
+        }
+    }
+    // Drain: repeatedly complete the earliest finisher.
+    let mut last_done: f64 = 0.0;
+    while let Some(idx) =
+        pending.iter().enumerate().min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap()).map(|(i, _)| i)
+    {
+        let (container, done_at) = pending.swap_remove(idx);
+        last_done = last_done.max(done_at);
+        if let Some(a) = pool.complete(container, done_at) {
+            pending.push((a.container, a.done_at_ms));
+            assignments.push(a.process_ms);
+        }
+    }
+    let avg = assignments.iter().sum::<f64>() / assignments.len() as f64;
+    (avg, last_done)
+}
+
+/// Table V: warm-container average time on the edge server, n = 1..8.
+pub fn table5() -> (TableRow, TableRow) {
+    let mut avg_rows = Vec::new();
+    let mut total_rows = Vec::new();
+    // Paper's total-time row (50 images).
+    const TOTALS: [f64; 8] = [11_193.0, 6_930.0, 6_216.0, 5_951.0, 5_794.0, 5_507.0, 6_020.0, 6_099.0];
+    for (i, (n, paper_avg)) in TABLE5_EDGE_WARM.iter().enumerate() {
+        let (avg, total) = warm_profile(NodeClass::EdgeServer, *n as u32, 50);
+        avg_rows.push(Comparison { x: *n, paper: *paper_avg, measured: avg });
+        total_rows.push(Comparison { x: *n, paper: TOTALS[i], measured: total });
+    }
+    (
+        TableRow { title: "Table V: warm avg time (edge)", x_label: "containers", rows: avg_rows },
+        TableRow { title: "Table V: warm total, 50 imgs (edge)", x_label: "containers", rows: total_rows },
+    )
+}
+
+/// Table VI: warm-container average time on the Raspberry Pi, n = 1..6.
+pub fn table6() -> (TableRow, TableRow) {
+    let mut avg_rows = Vec::new();
+    let mut total_rows = Vec::new();
+    const TOTALS: [f64; 6] = [29_934.0, 15_399.0, 11_072.0, 11_042.0, 11_043.0, 11_074.0];
+    for (i, (n, paper_avg)) in TABLE6_RPI_WARM.iter().enumerate() {
+        let (avg, total) = warm_profile(NodeClass::RaspberryPi, *n as u32, 50);
+        avg_rows.push(Comparison { x: *n, paper: *paper_avg, measured: avg });
+        total_rows.push(Comparison { x: *n, paper: TOTALS[i], measured: total });
+    }
+    (
+        TableRow { title: "Table VI: warm avg time (RPi)", x_label: "containers", rows: avg_rows },
+        TableRow { title: "Table VI: warm total, 50 imgs (RPi)", x_label: "containers", rows: total_rows },
+    )
+}
+
+/// Cold-start profile for a class: batch-start `n` containers and one
+/// late-arriving extra (the paper's Scenario 2 and 4).
+fn cold_profile(class: NodeClass, n: u32) -> (f64, f64) {
+    let profile = profile_for(class);
+    // Scenario 2 (existing): n containers cold-started together.
+    let existing = profile.cold_batch_ms(n);
+    // Scenario 4 (new): one more container started on top of n.
+    let extra = profile.cold_start_ms(n);
+    (existing, extra)
+}
+
+/// Table III: cold containers on the edge server.
+pub fn table3() -> (TableRow, TableRow) {
+    let mut existing_rows = Vec::new();
+    let mut new_rows = Vec::new();
+    for ((n, paper_existing), (_, paper_new)) in
+        TABLE3_EDGE_COLD_EXISTING.iter().zip(TABLE3_EDGE_COLD_NEW.iter())
+    {
+        let (existing, extra) = cold_profile(NodeClass::EdgeServer, *n as u32);
+        existing_rows.push(Comparison { x: *n, paper: *paper_existing, measured: existing });
+        new_rows.push(Comparison { x: *n, paper: *paper_new, measured: extra });
+    }
+    (
+        TableRow { title: "Table III: cold existing (edge)", x_label: "containers", rows: existing_rows },
+        TableRow { title: "Table III: cold new (edge)", x_label: "containers", rows: new_rows },
+    )
+}
+
+/// Table IV: cold containers on the Raspberry Pi.
+pub fn table4() -> (TableRow, TableRow) {
+    let mut existing_rows = Vec::new();
+    let mut new_rows = Vec::new();
+    for ((n, paper_existing), (_, paper_new)) in
+        TABLE4_RPI_COLD_EXISTING.iter().zip(TABLE4_RPI_COLD_NEW.iter())
+    {
+        let (existing, extra) = cold_profile(NodeClass::RaspberryPi, *n as u32);
+        existing_rows.push(Comparison { x: *n, paper: *paper_existing, measured: existing });
+        new_rows.push(Comparison { x: *n, paper: *paper_new, measured: extra });
+    }
+    (
+        TableRow { title: "Table IV: cold existing (RPi)", x_label: "containers", rows: existing_rows },
+        TableRow { title: "Table IV: cold new (RPi)", x_label: "containers", rows: new_rows },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_exact() {
+        // Base curve is fit directly from Table II — must match exactly.
+        assert!(table2().max_rel_err() < 1e-9);
+    }
+
+    #[test]
+    fn table5_shape_holds() {
+        let (avg, total) = table5();
+        // Averages come from the calibrated contention curve; the micro-sim
+        // warms up through lower concurrencies so means sit slightly below
+        // the steady-state paper numbers. Accept < 15 %.
+        assert!(avg.max_rel_err() < 0.15, "avg err {}", avg.max_rel_err());
+        // Headline shape: total time halves from 1→2 containers, then
+        // flattens around the core count.
+        let t = &total.rows;
+        assert!(t[0].measured > 1.5 * t[1].measured);
+        let min_total = t.iter().map(|r| r.measured).fold(f64::INFINITY, f64::min);
+        assert!(t[3].measured < 1.2 * min_total, "4-container total near the floor");
+        assert!(total.max_rel_err() < 0.25, "total err {}", total.max_rel_err());
+    }
+
+    #[test]
+    fn table6_shape_holds() {
+        let (avg, total) = table6();
+        assert!(avg.max_rel_err() < 0.15, "avg err {}", avg.max_rel_err());
+        let t = &total.rows;
+        // RPi saturates at ~4 containers (paper: totals flatten ≈ 11 s).
+        assert!(t[0].measured > 1.8 * t[1].measured);
+        assert!(total.max_rel_err() < 0.25, "total err {}", total.max_rel_err());
+    }
+
+    #[test]
+    fn cold_tables_exact() {
+        let (e3, n3) = table3();
+        assert!(e3.max_rel_err() < 1e-9);
+        assert!(n3.max_rel_err() < 1e-9);
+        let (e4, n4) = table4();
+        assert!(e4.max_rel_err() < 1e-9);
+        assert!(n4.max_rel_err() < 1e-9);
+    }
+
+    #[test]
+    fn warm_profile_monotone_avg() {
+        let mut prev = 0.0;
+        for n in 1..=6 {
+            let (avg, _) = warm_profile(NodeClass::EdgeServer, n, 50);
+            assert!(avg >= prev);
+            prev = avg;
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! # edge-dds — Dynamic Distributed Scheduler for Computing on the Edge
+//!
+//! Full-system reproduction of Hu, Mehta, Mishra & AlMutawa (CS.DC 2023):
+//! a two-level distributed scheduler for edge AI. End devices and an edge
+//! server each run a scheduler component; devices push periodic *profile*
+//! updates (running containers, CPU load, network state) to the edge
+//! server's Maintain-Profile table, and scheduling is **local-first** with
+//! profile-predicted end-to-end times.
+//!
+//! Layering (see DESIGN.md):
+//! - **L3 (this crate)** — coordination: nodes, profiles, policies (DDS +
+//!   baselines), the discrete-event simulator (virtual mode) and the
+//!   thread/socket deployment (live mode), metrics, config, CLI.
+//! - **L2/L1 (python/, build-time only)** — the face-detection compute graph
+//!   (JAX + Pallas kernels) AOT-lowered to HLO text in `artifacts/`.
+//! - **runtime** — loads the artifacts via the PJRT C API (`xla` crate) so
+//!   *live-mode* containers execute the real model; Python is never on the
+//!   request path.
+
+pub mod client;
+pub mod config;
+pub mod container;
+pub mod core;
+pub mod device;
+pub mod energy;
+pub mod experiments;
+pub mod live;
+pub mod metrics;
+pub mod net;
+pub mod profile;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod util;
+
+pub use crate::core::{Constraint, ImageMeta, NodeClass, NodeId, TaskId};
+pub use crate::scheduler::{PolicyKind, SchedulerPolicy};
+pub use crate::sim::{RunReport, ScenarioBuilder};

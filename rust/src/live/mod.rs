@@ -1,0 +1,547 @@
+//! Live deployment: the same node state machines as the simulator, driven
+//! by real threads, real localhost sockets, and real PJRT execution.
+//!
+//! Differences from virtual mode (by design, documented in DESIGN.md):
+//! - **Containers execute the real model.** `ContainerBusyUntil` from the
+//!   node logic is interpreted as "start real execution now"; the model's
+//!   predicted completion time is used only for the scheduler's decisions.
+//!   Completion is reported when PJRT actually finishes.
+//! - **Frames are content-addressed synthetic images**: the executing node
+//!   regenerates the deterministic pixel buffer from the task id, so the
+//!   wire protocol stays compact while the compute path stays real.
+//! - Clock is wall time (ms since cluster start).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::SystemConfig;
+use crate::container::ContainerPool;
+use crate::core::{ImageMeta, Message, NodeClass, NodeId, TaskId};
+use crate::device::{Action, DeviceNode};
+use crate::metrics::{Recorder, RunSummary};
+use crate::net::transport::{serve, FramedConn, Server};
+use crate::profile::{profile_for, Predictor};
+use crate::runtime::RuntimeService;
+use crate::server::EdgeNode;
+
+/// Shared wall clock.
+#[derive(Clone)]
+pub struct Clock(Arc<Instant>);
+
+impl Clock {
+    pub fn start() -> Self {
+        Clock(Arc::new(Instant::now()))
+    }
+    pub fn now_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Execution request handed to a container worker.
+struct Job {
+    container: usize,
+    task: TaskId,
+    side: u32,
+}
+
+/// Events driving one live node's main loop.
+enum LiveEvent {
+    Net(Message),
+    Frame(ImageMeta),
+    ContainerDone { container: usize, task: TaskId, process_ms: f64 },
+    ProfileTick,
+    Stop,
+}
+
+/// Outcome handle shared across the cluster.
+#[derive(Clone)]
+pub struct SharedRecorder {
+    inner: Arc<Mutex<Recorder>>,
+    created: Arc<AtomicUsize>,
+    resolved: Arc<AtomicUsize>,
+}
+
+impl SharedRecorder {
+    fn new() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Recorder::new())),
+            created: Arc::new(AtomicUsize::new(0)),
+            resolved: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn summarize(&self) -> RunSummary {
+        self.inner.lock().unwrap().summarize()
+    }
+
+    pub fn all_resolved(&self) -> bool {
+        let c = self.created.load(Ordering::SeqCst);
+        c > 0 && self.resolved.load(Ordering::SeqCst) >= c
+    }
+}
+
+/// A full in-process cluster: edge server + devices + container workers.
+pub struct LiveCluster {
+    pub edge_addr: std::net::SocketAddr,
+    clock: Clock,
+    recorder: SharedRecorder,
+    camera_tx: mpsc::Sender<LiveEvent>,
+    device_txs: Vec<mpsc::Sender<LiveEvent>>,
+    stop: Arc<AtomicBool>,
+    server: Option<Server>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl LiveCluster {
+    /// Start the cluster described by `cfg` with the compiled model.
+    pub fn start(cfg: &SystemConfig, runtime: RuntimeService) -> Result<Self> {
+        let clock = Clock::start();
+        let recorder = SharedRecorder::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // ---------- Edge server ----------
+        let topo = crate::sim::ScenarioBuilder::new(cfg.clone()).topology();
+        let edge_id = topo.edge();
+        let mut edge_pool =
+            ContainerPool::new(profile_for(NodeClass::EdgeServer), cfg.edge_warm_containers);
+        edge_pool.set_bg_load(cfg.edge_cpu_load_pct);
+        let edge_node = Arc::new(Mutex::new(EdgeNode::new(
+            edge_id,
+            edge_pool,
+            cfg.policy.build(cfg.seed),
+            topo.clone(),
+            cfg.max_staleness_ms,
+        )));
+
+        // Writers to devices, filled in as they join.
+        let writers: Arc<Mutex<HashMap<NodeId, FramedConn>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+
+        // Edge container workers.
+        let (edge_job_tx, edge_job_rx) = mpsc::channel::<Job>();
+        let edge_job_rx = Arc::new(Mutex::new(edge_job_rx));
+        let (edge_done_tx, edge_done_rx) = mpsc::channel::<LiveEvent>();
+        for w in 0..cfg.edge_warm_containers.max(1) {
+            let rx = edge_job_rx.clone();
+            let tx = edge_done_tx.clone();
+            let rt = runtime.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("edge-container-{w}"))
+                    .spawn(move || container_worker(rx, tx, rt))
+                    .context("spawning edge container worker")?,
+            );
+        }
+
+        // Edge action applier (shared by socket handlers + done pump).
+        let apply_edge = {
+            let writers = writers.clone();
+            let recorder = recorder.clone();
+            let job_tx = edge_job_tx.clone();
+            let clock = clock.clone();
+            Arc::new(move |actions: Vec<Action>, side_of: &dyn Fn(TaskId) -> u32| {
+                for a in actions {
+                    apply_live_action(a, &writers, &recorder, &job_tx, &clock, side_of);
+                }
+            })
+        };
+
+        // Track image sides for jobs (task → side). Images carry side_px.
+        let sides: Arc<Mutex<HashMap<TaskId, u32>>> = Arc::new(Mutex::new(HashMap::new()));
+
+        // TCP accept loop: one connection per device.
+        let edge_for_conn = edge_node.clone();
+        let apply_for_conn = apply_edge.clone();
+        let writers_for_conn = writers.clone();
+        let clock_for_conn = clock.clone();
+        let sides_for_conn = sides.clone();
+        let server = serve("127.0.0.1:0", move |mut conn| {
+            loop {
+                let msg = match conn.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                };
+                if let Message::Image(img) = &msg {
+                    sides_for_conn.lock().unwrap().insert(img.task, img.side_px);
+                }
+                // A Join registers the write-half for this device.
+                if let Message::Join { node, .. } = &msg {
+                    if let Ok(w) = conn.try_clone() {
+                        writers_for_conn.lock().unwrap().insert(*node, w);
+                    }
+                }
+                let mut out = Vec::new();
+                {
+                    let mut edge = edge_for_conn.lock().unwrap();
+                    edge.on_message(msg, clock_for_conn.now_ms(), &mut out);
+                }
+                let sides2 = sides_for_conn.clone();
+                apply_for_conn(out, &move |t| {
+                    sides2.lock().unwrap().get(&t).copied().unwrap_or(64)
+                });
+            }
+        })?;
+        let edge_addr = server.local_addr;
+
+        // Edge completion pump.
+        {
+            let edge = edge_node.clone();
+            let apply = apply_edge.clone();
+            let clock = clock.clone();
+            let stop = stop.clone();
+            let sides = sides.clone();
+            threads.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match edge_done_rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(LiveEvent::ContainerDone { container, task, process_ms }) => {
+                            let mut out = Vec::new();
+                            {
+                                let mut e = edge.lock().unwrap();
+                                e.on_container_done(
+                                    container,
+                                    task,
+                                    process_ms,
+                                    clock.now_ms(),
+                                    &mut out,
+                                );
+                            }
+                            let sides2 = sides.clone();
+                            apply(out, &move |t| {
+                                sides2.lock().unwrap().get(&t).copied().unwrap_or(64)
+                            });
+                        }
+                        Ok(_) => {}
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            }));
+        }
+
+        // ---------- Devices ----------
+        let mut device_txs = Vec::new();
+        let mut camera_tx: Option<mpsc::Sender<LiveEvent>> = None;
+        for (i, dcfg) in cfg.devices.iter().enumerate() {
+            let id = NodeId(1 + i as u32);
+            let (tx, rx) = mpsc::channel::<LiveEvent>();
+            if dcfg.camera && camera_tx.is_none() {
+                camera_tx = Some(tx.clone());
+            }
+            device_txs.push(tx.clone());
+
+            let mut pool = ContainerPool::new(profile_for(dcfg.class), dcfg.warm_containers);
+            pool.set_bg_load(dcfg.cpu_load_pct);
+            let node = DeviceNode::new(
+                id,
+                edge_id,
+                pool,
+                Predictor::new(profile_for(dcfg.class)),
+                cfg.policy.build(cfg.seed.wrapping_add(1 + i as u64)),
+            );
+
+            let clock = clock.clone();
+            let recorder = recorder.clone();
+            let runtime = runtime.clone();
+            let stop = stop.clone();
+            let profile_period = Duration::from_secs_f64(cfg.profile_period_ms / 1e3);
+            let warm = dcfg.warm_containers;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("device-{}", id.0))
+                    .spawn(move || {
+                        if let Err(e) = device_main(
+                            node, id, edge_addr, rx, tx, clock, recorder, runtime, stop,
+                            profile_period, warm,
+                        ) {
+                            log::error!("device {id} failed: {e:#}");
+                        }
+                    })
+                    .context("spawning device thread")?,
+            );
+        }
+
+        Ok(Self {
+            edge_addr,
+            clock,
+            recorder,
+            camera_tx: camera_tx.context("no camera device configured")?,
+            device_txs,
+            stop,
+            server: Some(server),
+            threads,
+        })
+    }
+
+    pub fn clock(&self) -> Clock {
+        self.clock.clone()
+    }
+
+    /// Inject a frame stream into the camera device, pacing in real time.
+    ///
+    /// The `created` count is bumped upfront (so `wait` knows the target),
+    /// but each frame's creation *timestamp* is recorded at its paced
+    /// generation instant — e2e latency must not include pacing waits.
+    pub fn stream(&self, frames: Vec<ImageMeta>) -> Result<()> {
+        self.recorder.created.fetch_add(frames.len(), Ordering::SeqCst);
+        let tx = self.camera_tx.clone();
+        let clock = self.clock.clone();
+        let recorder = self.recorder.clone();
+        std::thread::spawn(move || {
+            let base = clock.now_ms();
+            for mut f in frames {
+                let due = base + f.created_ms;
+                let now = clock.now_ms();
+                if due > now {
+                    std::thread::sleep(Duration::from_secs_f64((due - now) / 1e3));
+                }
+                f.created_ms = clock.now_ms();
+                recorder.inner.lock().unwrap().created(
+                    f.task,
+                    f.origin,
+                    f.size_kb,
+                    f.constraint.deadline_ms,
+                    f.created_ms,
+                );
+                let _ = tx.send(LiveEvent::Frame(f));
+            }
+        });
+        Ok(())
+    }
+
+    /// Wait until all injected frames resolve or `timeout` passes.
+    pub fn wait(&self, timeout: Duration) -> RunSummary {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.recorder.all_resolved() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.recorder.summarize()
+    }
+
+    pub fn recorder(&self) -> SharedRecorder {
+        self.recorder.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for tx in &self.device_txs {
+            let _ = tx.send(LiveEvent::Stop);
+        }
+        if let Some(s) = self.server.take() {
+            s.stop();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Container worker: real PJRT execution on synthetic content-addressed
+/// frames.
+fn container_worker(
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    done: mpsc::Sender<LiveEvent>,
+    rt: RuntimeService,
+) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return,
+            }
+        };
+        // Content-addressed synthetic frame: regenerate pixels from the
+        // task id on the executing node (see module docs).
+        let process_ms = match rt.detect_synth(job.side, job.task.0) {
+            Ok((_det, ms)) => ms,
+            Err(e) => {
+                log::error!("container execution failed: {e:#}");
+                0.0
+            }
+        };
+        if done
+            .send(LiveEvent::ContainerDone { container: job.container, task: job.task, process_ms })
+            .is_err()
+        {
+            return;
+        }
+    }
+}
+
+/// Apply a node's actions in the live world (edge side).
+fn apply_live_action(
+    a: Action,
+    writers: &Arc<Mutex<HashMap<NodeId, FramedConn>>>,
+    recorder: &SharedRecorder,
+    job_tx: &mpsc::Sender<Job>,
+    clock: &Clock,
+    side_of: &dyn Fn(TaskId) -> u32,
+) {
+    match a {
+        Action::Send { to, msg, .. } => {
+            let mut ws = writers.lock().unwrap();
+            if let Some(conn) = ws.get_mut(&to) {
+                if let Err(e) = conn.send(&msg) {
+                    log::warn!("edge→{to} send failed: {e}");
+                }
+            } else {
+                log::warn!("edge: no connection to {to}");
+            }
+        }
+        Action::ContainerBusyUntil { container, task, .. } => {
+            recorder.inner.lock().unwrap().started(task, NodeId(0), clock.now_ms());
+            let _ = job_tx.send(Job { container, task, side: side_of(task) });
+        }
+        Action::RecordPlaced { task, placement } => {
+            recorder.inner.lock().unwrap().placed(task, placement);
+        }
+        Action::RecordStarted { task, at_ms } => {
+            recorder.inner.lock().unwrap().started(task, NodeId(0), at_ms);
+        }
+        Action::RecordCompleted { task, at_ms, process_ms } => {
+            recorder.inner.lock().unwrap().completed(task, at_ms, process_ms);
+            recorder.resolved.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Device main loop.
+#[allow(clippy::too_many_arguments)]
+fn device_main(
+    mut node: DeviceNode,
+    id: NodeId,
+    edge_addr: std::net::SocketAddr,
+    rx: mpsc::Receiver<LiveEvent>,
+    self_tx: mpsc::Sender<LiveEvent>,
+    clock: Clock,
+    recorder: SharedRecorder,
+    runtime: RuntimeService,
+    stop: Arc<AtomicBool>,
+    profile_period: Duration,
+    warm: u32,
+) -> Result<()> {
+    let mut conn = FramedConn::connect(edge_addr).context("device dialing edge")?;
+    conn.send(&node.join_message())?;
+
+    // Reader thread: edge → device messages.
+    {
+        let tx = self_tx.clone();
+        let mut rconn = conn.try_clone()?;
+        std::thread::spawn(move || {
+            while let Ok(m) = rconn.recv() {
+                if tx.send(LiveEvent::Net(m)).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+    // Profile timer thread.
+    {
+        let tx = self_tx.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(profile_period);
+                if tx.send(LiveEvent::ProfileTick).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+    // Container workers.
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    for _ in 0..warm.max(1) {
+        let rx = job_rx.clone();
+        let tx = self_tx.clone();
+        let rt = runtime.clone();
+        std::thread::spawn(move || {
+            container_worker(
+                rx,
+                map_done_sender(tx),
+                rt,
+            )
+        });
+    }
+
+    let mut sides: HashMap<TaskId, u32> = HashMap::new();
+    loop {
+        let ev = match rx.recv() {
+            Ok(e) => e,
+            Err(_) => break,
+        };
+        let now = clock.now_ms();
+        let mut out = Vec::new();
+        match ev {
+            LiveEvent::Stop => break,
+            LiveEvent::Frame(img) => {
+                sides.insert(img.task, img.side_px);
+                node.on_camera_frame(img, now, &mut out);
+            }
+            LiveEvent::Net(msg) => {
+                if let Message::Image(img) = &msg {
+                    sides.insert(img.task, img.side_px);
+                }
+                node.on_message(msg, now, &mut out);
+            }
+            LiveEvent::ContainerDone { container, task, process_ms } => {
+                node.on_container_done(container, task, process_ms, now, &mut out);
+            }
+            LiveEvent::ProfileTick => {
+                let up = node.profile_update(now);
+                out.push(Action::Send {
+                    to: node.edge,
+                    msg: Message::Profile(up),
+                    reliable: true,
+                });
+            }
+        }
+        for a in out {
+            match a {
+                Action::Send { msg, .. } => {
+                    // Star topology: every device send goes to the edge.
+                    if let Err(e) = conn.send(&msg) {
+                        log::warn!("{id}→edge send failed: {e}");
+                    }
+                }
+                Action::ContainerBusyUntil { container, task, .. } => {
+                    recorder.inner.lock().unwrap().started(task, id, clock.now_ms());
+                    let side = sides.get(&task).copied().unwrap_or(64);
+                    let _ = job_tx.send(Job { container, task, side });
+                }
+                Action::RecordPlaced { task, placement } => {
+                    recorder.inner.lock().unwrap().placed(task, placement);
+                }
+                Action::RecordStarted { task, at_ms } => {
+                    recorder.inner.lock().unwrap().started(task, id, at_ms);
+                }
+                Action::RecordCompleted { task, at_ms, process_ms } => {
+                    recorder.inner.lock().unwrap().completed(task, at_ms, process_ms);
+                    recorder.resolved.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    // Shut the socket down explicitly: the reader thread holds a clone of
+    // the fd, so a plain drop would keep the edge-side connection (and
+    // through it the edge container workers' job channel) alive forever —
+    // LiveCluster::shutdown would deadlock on join.
+    conn.shutdown();
+    Ok(())
+}
+
+/// Adapt a device inbox sender into the worker's done-sender shape.
+fn map_done_sender(tx: mpsc::Sender<LiveEvent>) -> mpsc::Sender<LiveEvent> {
+    tx
+}

@@ -1,0 +1,239 @@
+//! edge-dds launcher.
+//!
+//! Subcommands (hand-rolled parser — clap is not in the offline crate set):
+//!
+//! ```text
+//! edge-dds sim    [--config cfg.toml] [--policy dds] [--images N]
+//!                 [--interval MS] [--deadline MS] [--seed S] [--csv out.csv]
+//! edge-dds sweep  [--config cfg.toml] [--images N] [--interval MS]
+//!                 [--deadline MS]                  # all paper policies
+//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|all
+//! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
+//!                 [--interval MS] [--deadline MS] [--side PX]
+//! ```
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use edge_dds::config::{RunMode, SystemConfig};
+use edge_dds::experiments;
+use edge_dds::live::LiveCluster;
+use edge_dds::metrics::{write_csv, writer::summary_json};
+use edge_dds::runtime::RuntimeService;
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::{ImageStream, ScenarioBuilder};
+use edge_dds::util::SplitMix64;
+
+fn main() {
+    edge_dds::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "sim" => cmd_sim(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "repro" => cmd_repro(&flags),
+        "live" => cmd_live(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `edge-dds help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "edge-dds — Dynamic Distributed Scheduler for Computing on the Edge\n\
+         \n\
+         USAGE:\n\
+         \x20 edge-dds sim    [--config F] [--policy P] [--images N] [--interval MS]\n\
+         \x20                 [--deadline MS] [--seed S] [--csv OUT]\n\
+         \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
+         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|all\n\
+         \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
+         \x20                 [--interval MS] [--deadline MS] [--side PX]\n\
+         \n\
+         POLICIES: aor aoe eods dds dds-no-avail round-robin random"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(args: &[String]) -> Result<Flags> {
+    let mut flags = Flags::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("expected --flag, got `{a}`");
+        };
+        let Some(val) = it.next() else {
+            bail!("flag --{key} needs a value");
+        };
+        flags.insert(key.to_string(), val.clone());
+    }
+    Ok(flags)
+}
+
+fn load_config(flags: &Flags) -> Result<SystemConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => SystemConfig::load(std::path::Path::new(path))?,
+        None => SystemConfig::default(),
+    };
+    if let Some(p) = flags.get("policy") {
+        cfg.policy = PolicyKind::parse(p)?;
+    }
+    if let Some(n) = flags.get("images") {
+        cfg.workload.n_images = n.parse().context("--images")?;
+    }
+    if let Some(i) = flags.get("interval") {
+        cfg.workload.interval_ms = i.parse().context("--interval")?;
+    }
+    if let Some(d) = flags.get("deadline") {
+        cfg.workload.deadline_ms = d.parse().context("--deadline")?;
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    if let Some(s) = flags.get("side") {
+        cfg.workload.side_px = s.parse().context("--side")?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_sim(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    if cfg.mode == RunMode::Live {
+        return cmd_live(flags);
+    }
+    let report = ScenarioBuilder::new(cfg).run();
+    println!("{}", summary_json(report.policy.as_str(), &report.summary));
+    println!(
+        "virtual time: {:.1} ms | events: {} | wall: {:.1} ms",
+        report.virtual_ms,
+        report.events,
+        report.wall_us as f64 / 1e3
+    );
+    if let Some(path) = flags.get("csv") {
+        write_csv(std::path::Path::new(path), &report.records)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let builder = ScenarioBuilder::new(cfg);
+    for report in builder.sweep_policies(&PolicyKind::PAPER) {
+        println!("{}", summary_json(report.policy.as_str(), &report.summary));
+    }
+    Ok(())
+}
+
+fn cmd_repro(flags: &Flags) -> Result<()> {
+    let exp = flags.get("exp").map(String::as_str).unwrap_or("all");
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let all = exp == "all";
+    let mut matched = all;
+
+    if all || exp == "table2" {
+        matched = true;
+        println!("{}", experiments::table2().render());
+    }
+    if all || exp == "table3" {
+        matched = true;
+        let (a, b) = experiments::table3();
+        println!("{}\n{}", a.render(), b.render());
+    }
+    if all || exp == "table4" {
+        matched = true;
+        let (a, b) = experiments::table4();
+        println!("{}\n{}", a.render(), b.render());
+    }
+    if all || exp == "table5" {
+        matched = true;
+        let (a, b) = experiments::table5();
+        println!("{}\n{}", a.render(), b.render());
+    }
+    if all || exp == "table6" {
+        matched = true;
+        let (a, b) = experiments::table6();
+        println!("{}\n{}", a.render(), b.render());
+    }
+    if all || exp == "fig5" {
+        matched = true;
+        let rows = experiments::fig5(seed);
+        println!(
+            "{}",
+            experiments::figures::render_policy_grid("Fig 5: 50 images, met-vs-constraint", &rows)
+        );
+    }
+    if all || exp == "fig6" {
+        matched = true;
+        let rows = experiments::fig6(seed);
+        println!(
+            "{}",
+            experiments::figures::render_policy_grid("Fig 6: 1000 images, met-vs-constraint", &rows)
+        );
+    }
+    if all || exp == "fig7" {
+        matched = true;
+        let rows: Vec<_> = experiments::fig7().into_iter().map(|r| r.comparison).collect();
+        println!(
+            "{}",
+            experiments::render_comparisons("Fig 7: CPU load vs container time", "load %", &rows)
+        );
+    }
+    if all || exp == "fig8" {
+        matched = true;
+        let rows = experiments::fig8(seed);
+        println!("{}", experiments::figures::render_fig8(&rows));
+    }
+    if !matched {
+        bail!("unknown experiment `{exp}`");
+    }
+    Ok(())
+}
+
+fn cmd_live(flags: &Flags) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let artifacts = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let runtime = RuntimeService::spawn(artifacts)?;
+    println!(
+        "live cluster: policy={} devices={} variants={:?}",
+        cfg.policy,
+        cfg.devices.len(),
+        runtime.sides()
+    );
+    let cluster = LiveCluster::start(&cfg, runtime)?;
+    // Session setup settles (joins + first profile pushes).
+    std::thread::sleep(Duration::from_millis(100));
+
+    let camera = edge_dds::core::NodeId(
+        1 + cfg.devices.iter().position(|d| d.camera).unwrap_or(0) as u32,
+    );
+    let frames =
+        ImageStream::new(cfg.workload, camera, SplitMix64::new(cfg.seed ^ 0xFEED)).generate();
+    let n = frames.len();
+    cluster.stream(frames)?;
+
+    let span = cfg.workload.n_images as f64 * cfg.workload.interval_ms;
+    let timeout = Duration::from_secs_f64((span + 60_000.0) / 1e3);
+    let summary = cluster.wait(timeout);
+    println!("{}", summary_json(&format!("live-{}", cfg.policy), &summary));
+    println!("streamed {n} frames; met {}/{}", summary.met, summary.total);
+    cluster.shutdown();
+    Ok(())
+}

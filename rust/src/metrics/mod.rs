@@ -1,0 +1,51 @@
+//! Metrics: per-task latency records, constraint-satisfaction counting,
+//! and CSV/JSON writers for the experiment harness.
+
+pub mod recorder;
+pub mod writer;
+
+pub use recorder::{Recorder, TaskRecord};
+pub use writer::{csv_line, write_csv, write_json_summary};
+
+use crate::core::Verdict;
+use crate::util::Summary;
+
+/// Aggregated outcome of one run (one policy × one workload).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub total: usize,
+    pub met: usize,
+    pub missed: usize,
+    pub dropped: usize,
+    /// End-to-end latency summary over *completed* tasks.
+    pub latency: Option<Summary>,
+    /// Processing-only latency summary.
+    pub process: Option<Summary>,
+    /// Fraction of completed tasks processed at their origin device.
+    pub local_fraction: f64,
+}
+
+impl RunSummary {
+    pub fn met_fraction(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.met as f64 / self.total as f64
+        }
+    }
+}
+
+/// Count verdicts in a record set.
+pub fn count_verdicts(records: &[recorder::TaskRecord]) -> (usize, usize, usize) {
+    let mut met = 0;
+    let mut missed = 0;
+    let mut dropped = 0;
+    for r in records {
+        match r.verdict {
+            Verdict::Met => met += 1,
+            Verdict::Missed => missed += 1,
+            Verdict::Dropped => dropped += 1,
+        }
+    }
+    (met, missed, dropped)
+}

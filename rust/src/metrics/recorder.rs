@@ -1,0 +1,206 @@
+//! Per-task lifecycle recording.
+
+use std::collections::HashMap;
+
+use crate::core::{NodeId, Placement, TaskId, Verdict};
+use crate::util::Summary;
+
+use super::RunSummary;
+
+/// Full lifecycle of one image task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskRecord {
+    pub task: TaskId,
+    pub origin: NodeId,
+    pub size_kb: f64,
+    pub deadline_ms: f64,
+    pub created_ms: f64,
+    /// Final placement (where it actually executed).
+    pub placement: Placement,
+    pub executed_on: Option<NodeId>,
+    pub started_ms: Option<f64>,
+    pub completed_ms: Option<f64>,
+    /// Container-internal processing time.
+    pub process_ms: Option<f64>,
+    pub verdict: Verdict,
+}
+
+impl TaskRecord {
+    pub fn e2e_ms(&self) -> Option<f64> {
+        self.completed_ms.map(|c| c - self.created_ms)
+    }
+}
+
+/// Collects task records during a run; finalizes into a [`RunSummary`].
+#[derive(Debug, Default)]
+pub struct Recorder {
+    records: HashMap<TaskId, TaskRecord>,
+    order: Vec<TaskId>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register task creation (workload generator).
+    pub fn created(
+        &mut self,
+        task: TaskId,
+        origin: NodeId,
+        size_kb: f64,
+        deadline_ms: f64,
+        created_ms: f64,
+    ) {
+        self.order.push(task);
+        self.records.insert(
+            task,
+            TaskRecord {
+                task,
+                origin,
+                size_kb,
+                deadline_ms,
+                created_ms,
+                placement: Placement::Local,
+                executed_on: None,
+                started_ms: None,
+                completed_ms: None,
+                process_ms: None,
+                verdict: Verdict::Dropped, // until completed
+            },
+        );
+    }
+
+    pub fn placed(&mut self, task: TaskId, placement: Placement) {
+        if let Some(r) = self.records.get_mut(&task) {
+            r.placement = placement;
+        }
+    }
+
+    pub fn started(&mut self, task: TaskId, on: NodeId, at_ms: f64) {
+        if let Some(r) = self.records.get_mut(&task) {
+            r.executed_on = Some(on);
+            r.started_ms = Some(at_ms);
+        }
+    }
+
+    /// Mark completion; the verdict compares end-to-end latency with the
+    /// task's deadline (the paper's "images that meet the requirements").
+    pub fn completed(&mut self, task: TaskId, at_ms: f64, process_ms: f64) {
+        if let Some(r) = self.records.get_mut(&task) {
+            r.completed_ms = Some(at_ms);
+            r.process_ms = Some(process_ms);
+            r.verdict = if at_ms - r.created_ms <= r.deadline_ms {
+                Verdict::Met
+            } else {
+                Verdict::Missed
+            };
+        }
+    }
+
+    pub fn get(&self, task: TaskId) -> Option<&TaskRecord> {
+        self.records.get(&task)
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Records in creation order.
+    pub fn records(&self) -> Vec<TaskRecord> {
+        self.order.iter().filter_map(|t| self.records.get(t)).copied().collect()
+    }
+
+    /// Finalize into an aggregate summary.
+    pub fn summarize(&self) -> RunSummary {
+        let records = self.records();
+        let (met, missed, dropped) = super::count_verdicts(&records);
+        let latencies: Vec<f64> = records.iter().filter_map(|r| r.e2e_ms()).collect();
+        let processes: Vec<f64> = records.iter().filter_map(|r| r.process_ms).collect();
+        let completed = records.iter().filter(|r| r.completed_ms.is_some());
+        let local = completed
+            .clone()
+            .filter(|r| r.executed_on == Some(r.origin))
+            .count();
+        let n_completed = completed.count();
+        RunSummary {
+            total: records.len(),
+            met,
+            missed,
+            dropped,
+            latency: Summary::of(&latencies),
+            process: Summary::of(&processes),
+            local_fraction: if n_completed == 0 {
+                0.0
+            } else {
+                local as f64 / n_completed as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_met() {
+        let mut rec = Recorder::new();
+        rec.created(TaskId(1), NodeId(1), 87.0, 1000.0, 0.0);
+        rec.placed(TaskId(1), Placement::ToEdge);
+        rec.started(TaskId(1), NodeId(0), 10.0);
+        rec.completed(TaskId(1), 500.0, 400.0);
+        let r = rec.get(TaskId(1)).unwrap();
+        assert_eq!(r.verdict, Verdict::Met);
+        assert_eq!(r.e2e_ms(), Some(500.0));
+        assert_eq!(r.executed_on, Some(NodeId(0)));
+    }
+
+    #[test]
+    fn lifecycle_missed_and_dropped() {
+        let mut rec = Recorder::new();
+        rec.created(TaskId(1), NodeId(1), 87.0, 100.0, 0.0);
+        rec.completed(TaskId(1), 500.0, 400.0);
+        rec.created(TaskId(2), NodeId(1), 87.0, 100.0, 0.0);
+        let s = rec.summarize();
+        assert_eq!(s.met, 0);
+        assert_eq!(s.missed, 1);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.total, 2);
+    }
+
+    #[test]
+    fn boundary_exactly_on_deadline_is_met() {
+        let mut rec = Recorder::new();
+        rec.created(TaskId(1), NodeId(1), 29.0, 100.0, 50.0);
+        rec.completed(TaskId(1), 150.0, 80.0);
+        assert_eq!(rec.get(TaskId(1)).unwrap().verdict, Verdict::Met);
+    }
+
+    #[test]
+    fn local_fraction() {
+        let mut rec = Recorder::new();
+        rec.created(TaskId(1), NodeId(1), 29.0, 9999.0, 0.0);
+        rec.started(TaskId(1), NodeId(1), 1.0);
+        rec.completed(TaskId(1), 2.0, 1.0);
+        rec.created(TaskId(2), NodeId(1), 29.0, 9999.0, 0.0);
+        rec.started(TaskId(2), NodeId(0), 1.0);
+        rec.completed(TaskId(2), 2.0, 1.0);
+        let s = rec.summarize();
+        assert_eq!(s.local_fraction, 0.5);
+    }
+
+    #[test]
+    fn records_in_creation_order() {
+        let mut rec = Recorder::new();
+        for i in [5u64, 2, 9] {
+            rec.created(TaskId(i), NodeId(1), 29.0, 1.0, 0.0);
+        }
+        let ids: Vec<u64> = rec.records().iter().map(|r| r.task.0).collect();
+        assert_eq!(ids, vec![5, 2, 9]);
+    }
+}

@@ -1,0 +1,146 @@
+//! CSV / JSON output for the experiment harness (no serde offline — the
+//! formats are simple enough to emit by hand).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::recorder::TaskRecord;
+use super::RunSummary;
+use crate::core::{Placement, Verdict};
+
+/// One CSV line for a task record (see [`CSV_HEADER`]).
+pub const CSV_HEADER: &str =
+    "task,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,verdict";
+
+pub fn csv_line(r: &TaskRecord) -> String {
+    let placement = match r.placement {
+        Placement::Local => "local".to_string(),
+        Placement::ToEdge => "edge".to_string(),
+        Placement::Offload(n) => format!("offload:{n}"),
+    };
+    let verdict = match r.verdict {
+        Verdict::Met => "met",
+        Verdict::Missed => "missed",
+        Verdict::Dropped => "dropped",
+    };
+    let opt = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_default();
+    format!(
+        "{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{}",
+        r.task.0,
+        r.origin.0,
+        r.size_kb,
+        r.deadline_ms,
+        r.created_ms,
+        placement,
+        r.executed_on.map(|n| n.0.to_string()).unwrap_or_default(),
+        opt(r.started_ms),
+        opt(r.completed_ms),
+        opt(r.process_ms),
+        opt(r.e2e_ms()),
+        verdict,
+    )
+}
+
+/// Write a full record set as CSV.
+pub fn write_csv(path: &Path, records: &[TaskRecord]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "{CSV_HEADER}")?;
+    for r in records {
+        writeln!(f, "{}", csv_line(r))?;
+    }
+    Ok(())
+}
+
+/// Serialize a run summary as a small JSON object (hand-rolled).
+pub fn summary_json(name: &str, s: &RunSummary) -> String {
+    let lat = s
+        .latency
+        .as_ref()
+        .map(|l| {
+            format!(
+                r#"{{"mean":{:.3},"p50":{:.3},"p90":{:.3},"p99":{:.3},"max":{:.3}}}"#,
+                l.mean, l.p50, l.p90, l.p99, l.max
+            )
+        })
+        .unwrap_or_else(|| "null".into());
+    format!(
+        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"latency":{}}}"#,
+        name,
+        s.total,
+        s.met,
+        s.missed,
+        s.dropped,
+        s.met_fraction(),
+        s.local_fraction,
+        lat
+    )
+}
+
+/// Write a set of named summaries as a JSON array.
+pub fn write_json_summary(path: &Path, entries: &[(String, RunSummary)]) -> Result<()> {
+    let body: Vec<String> =
+        entries.iter().map(|(n, s)| summary_json(n, s)).collect();
+    std::fs::write(path, format!("[\n  {}\n]\n", body.join(",\n  ")))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{NodeId, TaskId};
+    use crate::metrics::Recorder;
+
+    fn record() -> TaskRecord {
+        let mut rec = Recorder::new();
+        rec.created(TaskId(1), NodeId(1), 87.0, 1000.0, 0.0);
+        rec.placed(TaskId(1), Placement::Offload(NodeId(2)));
+        rec.started(TaskId(1), NodeId(2), 10.0);
+        rec.completed(TaskId(1), 500.0, 400.0);
+        rec.records()[0]
+    }
+
+    #[test]
+    fn csv_line_fields() {
+        let line = csv_line(&record());
+        let fields: Vec<&str> = line.split(',').collect();
+        assert_eq!(fields.len(), CSV_HEADER.split(',').count());
+        assert_eq!(fields[0], "1");
+        assert_eq!(fields[5], "offload:n2");
+        assert_eq!(fields[11], "met");
+    }
+
+    #[test]
+    fn csv_roundtrip_file() {
+        let dir = std::env::temp_dir().join("edge_dds_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("records.csv");
+        write_csv(&path, &[record()]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("task,"));
+        assert_eq!(content.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let mut rec = Recorder::new();
+        rec.created(TaskId(1), NodeId(1), 87.0, 1000.0, 0.0);
+        rec.started(TaskId(1), NodeId(1), 1.0);
+        rec.completed(TaskId(1), 500.0, 400.0);
+        let js = summary_json("dds", &rec.summarize());
+        assert!(js.contains(r#""name":"dds""#));
+        assert!(js.contains(r#""met":1"#));
+        assert!(js.contains(r#""latency":{"#));
+    }
+
+    #[test]
+    fn summary_json_empty_latency_is_null() {
+        let rec = Recorder::new();
+        let js = summary_json("empty", &rec.summarize());
+        assert!(js.contains(r#""latency":null"#));
+    }
+}

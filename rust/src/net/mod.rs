@@ -1,0 +1,75 @@
+//! Network substrate.
+//!
+//! Virtual mode uses [`LinkModel`] (latency + bandwidth + i.i.d. loss — the
+//! paper streams images over UDP precisely so "some requests may not be
+//! received successfully") and a star [`Topology`] of links. Live mode uses
+//! real localhost sockets ([`transport`]) speaking the [`crate::core::wire`]
+//! framing.
+
+pub mod topology;
+pub mod transport;
+
+pub use topology::Topology;
+
+/// A point-to-point link's timing/loss model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// One-way propagation latency (ms).
+    pub latency_ms: f64,
+    /// Usable bandwidth (Mbit/s).
+    pub bandwidth_mbps: f64,
+    /// Probability an (unreliable-transport) message is lost.
+    pub loss_prob: f64,
+}
+
+impl LinkModel {
+    pub fn new(latency_ms: f64, bandwidth_mbps: f64, loss_prob: f64) -> Self {
+        assert!(latency_ms >= 0.0 && bandwidth_mbps > 0.0);
+        assert!((0.0..=1.0).contains(&loss_prob));
+        LinkModel { latency_ms, bandwidth_mbps, loss_prob }
+    }
+
+    /// Default edge Wi-Fi link: 2 ms one-way, 100 Mbit/s, lossless.
+    pub fn wifi() -> Self {
+        LinkModel::new(2.0, 100.0, 0.0)
+    }
+
+    /// One-way transfer time for a `size_kb` payload:
+    /// `latency + size_kb * 8 / bandwidth_mbps` (KB→Kbit over Mbit/s = ms).
+    pub fn transfer_ms(&self, size_kb: f64) -> f64 {
+        self.latency_ms + size_kb * 8.0 / self.bandwidth_mbps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_formula() {
+        let l = LinkModel::new(2.0, 100.0, 0.0);
+        // 100 KB = 800 Kbit over 100 Mbit/s = 8 ms + 2 ms latency.
+        assert!((l.transfer_ms(100.0) - 10.0).abs() < 1e-12);
+        // Zero-size message still pays propagation latency.
+        assert_eq!(l.transfer_ms(0.0), 2.0);
+    }
+
+    #[test]
+    fn faster_link_is_faster() {
+        let slow = LinkModel::new(2.0, 10.0, 0.0);
+        let fast = LinkModel::new(2.0, 1000.0, 0.0);
+        assert!(fast.transfer_ms(250.0) < slow.transfer_ms(250.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_bandwidth() {
+        LinkModel::new(1.0, 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_loss() {
+        LinkModel::new(1.0, 1.0, 1.5);
+    }
+}

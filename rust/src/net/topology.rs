@@ -1,0 +1,219 @@
+//! Topology: node inventory plus the link table.
+//!
+//! The paper's deployment is a star — every end device talks to the edge
+//! server; device↔device traffic is relayed through the edge (APr → APe →
+//! APr). The topology stores per-pair links so meshes are expressible, but
+//! the builders produce stars.
+
+use std::collections::HashMap;
+
+use crate::core::{NodeClass, NodeId};
+use crate::net::LinkModel;
+
+/// Static description of one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeSpec {
+    pub id: NodeId,
+    pub class: NodeClass,
+    /// Warm containers kept alive (the paper pre-warms — cold starts take
+    /// 52+ s and are "not practical ... upon receiving a request").
+    pub warm_containers: u32,
+    /// Background CPU load in [0, 100] (Fig. 7/8 stress).
+    pub cpu_load_pct: f64,
+    /// Physical position for nearest-device selection (§III-C).
+    pub location: (f64, f64),
+    /// Has a camera (can originate image streams).
+    pub has_camera: bool,
+}
+
+/// Node inventory + link table.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    nodes: Vec<NodeSpec>,
+    links: HashMap<(NodeId, NodeId), LinkModel>,
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a node; ids must be dense and in order (enforced).
+    pub fn add_node(&mut self, spec: NodeSpec) -> NodeId {
+        assert_eq!(
+            spec.id.0 as usize,
+            self.nodes.len(),
+            "node ids must be added densely in order"
+        );
+        self.nodes.push(spec);
+        spec.id
+    }
+
+    /// Install a symmetric link.
+    pub fn add_link(&mut self, a: NodeId, b: NodeId, link: LinkModel) {
+        assert!(a != b, "no self links");
+        self.links.insert((a, b), link);
+        self.links.insert((b, a), link);
+    }
+
+    pub fn link(&self, a: NodeId, b: NodeId) -> Option<LinkModel> {
+        if a == b {
+            // Local "transfer" is free — predictor expects None-like zero.
+            return Some(LinkModel::new(0.0, f64::INFINITY.min(1e9), 0.0));
+        }
+        self.links.get(&(a, b)).copied()
+    }
+
+    pub fn node(&self, id: NodeId) -> &NodeSpec {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut NodeSpec {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    pub fn nodes(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// All end devices (non-edge nodes).
+    pub fn devices(&self) -> impl Iterator<Item = &NodeSpec> {
+        self.nodes.iter().filter(|n| n.class != NodeClass::EdgeServer)
+    }
+
+    /// The edge server (single-edge topologies; first edge node).
+    pub fn edge(&self) -> NodeId {
+        self.nodes
+            .iter()
+            .find(|n| n.class == NodeClass::EdgeServer)
+            .map(|n| n.id)
+            .expect("topology has no edge server")
+    }
+
+    /// Camera device nearest to `loc` (the paper's location-based
+    /// activation: "the edge server identifies the nearby end devices").
+    pub fn nearest_camera(&self, loc: (f64, f64)) -> Option<NodeId> {
+        self.devices()
+            .filter(|n| n.has_camera)
+            .min_by(|a, b| {
+                let da = dist2(a.location, loc);
+                let db = dist2(b.location, loc);
+                da.partial_cmp(&db).unwrap()
+            })
+            .map(|n| n.id)
+    }
+
+    /// Star builder: one edge server + the given devices, uniform link.
+    pub fn star(
+        edge_warm: u32,
+        devices: &[(NodeClass, u32, bool)],
+        link: LinkModel,
+    ) -> Topology {
+        let mut t = Topology::new();
+        let edge = t.add_node(NodeSpec {
+            id: NodeId(0),
+            class: NodeClass::EdgeServer,
+            warm_containers: edge_warm,
+            cpu_load_pct: 0.0,
+            location: (0.0, 0.0),
+            has_camera: false,
+        });
+        for (i, &(class, warm, has_camera)) in devices.iter().enumerate() {
+            let id = t.add_node(NodeSpec {
+                id: NodeId(1 + i as u32),
+                class,
+                warm_containers: warm,
+                cpu_load_pct: 0.0,
+                location: (1.0 + i as f64, 0.0),
+                has_camera,
+            });
+            t.add_link(edge, id, link);
+        }
+        t
+    }
+
+    /// The paper's testbed (Fig. 4): edge server + RPi 1 (camera) + RPi 2.
+    pub fn paper_testbed(edge_warm: u32, rpi_warm: u32) -> Topology {
+        Topology::star(
+            edge_warm,
+            &[
+                (NodeClass::RaspberryPi, rpi_warm, true),
+                (NodeClass::RaspberryPi, rpi_warm, false),
+            ],
+            LinkModel::wifi(),
+        )
+    }
+}
+
+fn dist2(a: (f64, f64), b: (f64, f64)) -> f64 {
+    let dx = a.0 - b.0;
+    let dy = a.1 - b.1;
+    dx * dx + dy * dy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star_shape() {
+        let t = Topology::paper_testbed(4, 2);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.edge(), NodeId(0));
+        assert_eq!(t.devices().count(), 2);
+        assert!(t.link(NodeId(0), NodeId(1)).is_some());
+        assert!(t.link(NodeId(0), NodeId(2)).is_some());
+        // Devices are not directly linked in a star.
+        assert!(t.link(NodeId(1), NodeId(2)).is_none());
+    }
+
+    #[test]
+    fn self_link_is_free() {
+        let t = Topology::paper_testbed(4, 2);
+        let l = t.link(NodeId(1), NodeId(1)).unwrap();
+        assert_eq!(l.latency_ms, 0.0);
+    }
+
+    #[test]
+    fn nearest_camera_picks_closest() {
+        let mut t = Topology::star(
+            4,
+            &[
+                (NodeClass::RaspberryPi, 2, true),
+                (NodeClass::RaspberryPi, 2, true),
+            ],
+            LinkModel::wifi(),
+        );
+        t.node_mut(NodeId(1)).location = (10.0, 0.0);
+        t.node_mut(NodeId(2)).location = (1.0, 1.0);
+        assert_eq!(t.nearest_camera((0.0, 0.0)), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn nearest_camera_none_without_cameras() {
+        let t = Topology::star(4, &[(NodeClass::RaspberryPi, 2, false)], LinkModel::wifi());
+        assert_eq!(t.nearest_camera((0.0, 0.0)), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dense_ids_enforced() {
+        let mut t = Topology::new();
+        t.add_node(NodeSpec {
+            id: NodeId(5),
+            class: NodeClass::EdgeServer,
+            warm_containers: 1,
+            cpu_load_pct: 0.0,
+            location: (0.0, 0.0),
+            has_camera: false,
+        });
+    }
+}

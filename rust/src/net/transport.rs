@@ -1,0 +1,186 @@
+//! Live-mode transport: framed messages over std TCP sockets.
+//!
+//! The paper's client/server use plain socket programming ("it does not
+//! rely on external environments"); we do the same with the byte-typed
+//! framing from [`crate::core::wire`]. One `FramedConn` per peer; a
+//! `serve` helper accepts connections and hands each to a handler thread
+//! (the paper: "We create a separate thread to run our server, which
+//! accepts incoming connections").
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::core::wire;
+use crate::core::Message;
+
+/// A framed, blocking, bidirectional message connection.
+pub struct FramedConn {
+    stream: TcpStream,
+    /// Reused encode buffer — no per-message allocation on the hot path.
+    buf: Vec<u8>,
+}
+
+impl FramedConn {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream, buf: Vec::with_capacity(4096) })
+    }
+
+    pub fn from_stream(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream, buf: Vec::with_capacity(4096) })
+    }
+
+    /// Clone the underlying stream for a reader/writer split.
+    pub fn try_clone(&self) -> Result<Self> {
+        Ok(Self {
+            stream: self.stream.try_clone().context("cloning stream")?,
+            buf: Vec::with_capacity(4096),
+        })
+    }
+
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        wire::encode(msg, &mut self.buf);
+        self.stream.write_all(&self.buf).context("writing frame")?;
+        Ok(())
+    }
+
+    pub fn recv(&mut self) -> Result<Message> {
+        let frame = wire::read_frame(&mut self.stream)?;
+        wire::decode(&frame)
+    }
+
+    pub fn peer_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.stream.peer_addr()?)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Handle to a running accept loop.
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the listener so accept() returns.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Bind `addr` (use port 0 for an ephemeral port) and spawn an accept loop
+/// that hands each connection to `handler` on its own thread.
+pub fn serve<F>(addr: impl ToSocketAddrs, handler: F) -> Result<Server>
+where
+    F: Fn(FramedConn) + Send + Sync + 'static,
+{
+    let listener = TcpListener::bind(addr).context("binding listener")?;
+    let local_addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handler = Arc::new(handler);
+
+    let join = std::thread::Builder::new()
+        .name("edge-dds-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let h = handler.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("edge-dds-conn".into())
+                            .spawn(move || {
+                                if let Ok(fc) = FramedConn::from_stream(stream) {
+                                    h(fc);
+                                }
+                            });
+                    }
+                    Err(e) => {
+                        log::warn!("accept error: {e}");
+                    }
+                }
+            }
+        })
+        .context("spawning accept thread")?;
+
+    Ok(Server { local_addr, stop, join: Some(join) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::NodeId;
+    use std::sync::mpsc;
+
+    #[test]
+    fn echo_roundtrip() {
+        let server = serve("127.0.0.1:0", |mut conn| {
+            // Echo every message back.
+            while let Ok(msg) = conn.recv() {
+                if conn.send(&msg).is_err() {
+                    break;
+                }
+            }
+        })
+        .unwrap();
+
+        let mut c = FramedConn::connect(server.local_addr).unwrap();
+        let msg = Message::JoinAck { assigned: NodeId(7) };
+        c.send(&msg).unwrap();
+        assert_eq!(c.recv().unwrap(), msg);
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let (tx, rx) = mpsc::channel::<Message>();
+        let tx = std::sync::Mutex::new(tx);
+        let server = serve("127.0.0.1:0", move |mut conn| {
+            if let Ok(m) = conn.recv() {
+                let _ = tx.lock().unwrap().send(m);
+            }
+        })
+        .unwrap();
+
+        for i in 0..4u32 {
+            let mut c = FramedConn::connect(server.local_addr).unwrap();
+            c.send(&Message::JoinAck { assigned: NodeId(i) }).unwrap();
+        }
+        let mut got: Vec<u32> = (0..4)
+            .map(|_| match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+                Message::JoinAck { assigned } => assigned.0,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        server.stop();
+    }
+}

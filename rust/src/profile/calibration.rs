@@ -1,0 +1,282 @@
+//! The paper's measured profiles (Tables II–VI, Fig. 7) as calibration
+//! curves, plus the per-class timing model derived from them.
+//!
+//! Every constant below is copied from the paper; the fitted curves are
+//! piecewise-linear interpolations of those measurements (the paper itself
+//! schedules off the measured tables, not an analytic model — §II "all of
+//! that research is based on mathematical modeling, ... we propose ... a
+//! dynamic distributed scheduling algorithm based on real-world
+//! evaluation").
+
+use crate::core::NodeClass;
+use crate::util::stats::interp;
+
+// ---------------------------------------------------------------------
+// Raw measurements from the paper.
+// ---------------------------------------------------------------------
+
+/// Table II: face-detection runtime vs image size on the edge server
+/// (single warm container, no background load). (KB, ms).
+pub const TABLE2_SIZE_RUNTIME: [(f64, f64); 5] =
+    [(29.0, 223.0), (87.0, 417.0), (133.0, 615.0), (172.0, 798.0), (259.0, 1163.0)];
+
+/// Table V: warm-container average processing time on the edge server vs
+/// concurrent container count. (n, ms).
+pub const TABLE5_EDGE_WARM: [(f64, f64); 8] = [
+    (1.0, 223.0),
+    (2.0, 273.0),
+    (3.0, 366.0),
+    (4.0, 464.0),
+    (5.0, 540.0),
+    (6.0, 644.0),
+    (7.0, 837.0),
+    (8.0, 947.0),
+];
+
+/// Table VI: warm-container average processing time on the Raspberry Pi.
+pub const TABLE6_RPI_WARM: [(f64, f64); 6] = [
+    (1.0, 597.0),
+    (2.0, 613.0),
+    (3.0, 651.0),
+    (4.0, 860.0),
+    (5.0, 1071.0),
+    (6.0, 1290.0),
+];
+
+/// Table III: cold-start time of one *new* container while n containers are
+/// (also cold-)starting on the edge server. (n existing, ms).
+pub const TABLE3_EDGE_COLD_NEW: [(f64, f64); 5] = [
+    (1.0, 52_554.0),
+    (3.0, 71_788.0),
+    (5.0, 106_596.0),
+    (8.0, 165_717.0),
+    (11.0, 437_846.0),
+];
+
+/// Table III row 1: run time of the existing containers (batch cold start).
+pub const TABLE3_EDGE_COLD_EXISTING: [(f64, f64); 5] = [
+    (1.0, 63_887.0),
+    (3.0, 121_766.0),
+    (5.0, 226_044.0),
+    (8.0, 328_269.0),
+    (11.0, 716_767.0),
+];
+
+/// Table IV: the same cold-start profile on the Raspberry Pi.
+pub const TABLE4_RPI_COLD_NEW: [(f64, f64); 6] = [
+    (1.0, 168_279.0),
+    (2.0, 179_280.0),
+    (3.0, 188_633.0),
+    (4.0, 211_136.0),
+    (5.0, 241_222.0),
+    (6.0, 249_413.0),
+];
+
+/// Table IV row 1: processing time of existing containers, batch cold start.
+pub const TABLE4_RPI_COLD_EXISTING: [(f64, f64); 6] = [
+    (1.0, 160_802.0),
+    (2.0, 198_529.0),
+    (3.0, 248_812.0),
+    (4.0, 313_466.0),
+    (5.0, 424_130.0),
+    (6.0, 520_442.0),
+];
+
+/// Fig. 7: average container processing time vs background CPU load on the
+/// edge server (29 KB reference image). (load %, ms).
+pub const FIG7_LOAD_RUNTIME: [(f64, f64); 5] = [
+    (0.0, 223.0),
+    (25.0, 284.0),
+    (50.0, 312.0),
+    (75.0, 350.0),
+    (100.0, 374.0),
+];
+
+// ---------------------------------------------------------------------
+// Fitted per-class model.
+// ---------------------------------------------------------------------
+
+/// Reference image size for the normalized curves (Table II row 1 and the
+/// warm-container tables all use the 29 KB test image).
+pub const REF_SIZE_KB: f64 = 29.0;
+
+/// Calibrated timing profile for one hardware class.
+///
+/// `process_ms = base(size) * speed * contention(n_busy) * load(cpu_pct)`
+/// where `base` is the Table II size curve normalized to the edge server,
+/// `speed` the class's relative slowdown, `contention` the class's warm
+/// table normalized to n=1, and `load` the Fig. 7 curve normalized to 0 %.
+#[derive(Debug, Clone)]
+pub struct ClassProfile {
+    pub class: NodeClass,
+    /// Relative single-container speed vs the edge server (1.0 = edge).
+    pub speed_factor: f64,
+    /// (n concurrent, slowdown ≥ 1) breakpoints, normalized to n = 1.
+    contention: Vec<(f64, f64)>,
+    /// (cpu load %, slowdown ≥ 1) breakpoints, normalized to 0 %.
+    load: Vec<(f64, f64)>,
+    /// (n existing, ms) cold-start cost of a new container.
+    cold_new: Vec<(f64, f64)>,
+    /// (n, ms) batch cold-start run time of existing containers.
+    cold_existing: Vec<(f64, f64)>,
+}
+
+impl ClassProfile {
+    /// Base processing time of a `size_kb` image on an otherwise idle
+    /// node of this class (Table II scaled by the class speed factor).
+    pub fn base_ms(&self, size_kb: f64) -> f64 {
+        interp(&TABLE2_SIZE_RUNTIME, size_kb, true).max(1.0) * self.speed_factor
+    }
+
+    /// Contention slowdown with `n_busy` containers concurrently
+    /// processing (≥ 1; extrapolates past the measured range — the paper's
+    /// Table V stops at 8).
+    pub fn contention_factor(&self, n_busy: u32) -> f64 {
+        interp(&self.contention, n_busy.max(1) as f64, true).max(1.0)
+    }
+
+    /// Background-CPU-load slowdown (Fig. 7), load in [0, 100].
+    pub fn load_factor(&self, cpu_pct: f64) -> f64 {
+        interp(&self.load, cpu_pct.clamp(0.0, 100.0), false).max(1.0)
+    }
+
+    /// Cold-start latency of a new container when `n_existing` containers
+    /// already exist (Table III/IV row 2).
+    pub fn cold_start_ms(&self, n_existing: u32) -> f64 {
+        interp(&self.cold_new, n_existing.max(1) as f64, true).max(0.0)
+    }
+
+    /// Batch cold start: run time of `n` containers all started cold
+    /// (Table III/IV row 1).
+    pub fn cold_batch_ms(&self, n: u32) -> f64 {
+        interp(&self.cold_existing, n.max(1) as f64, true).max(0.0)
+    }
+
+    /// Full processing-time model.
+    pub fn process_ms(&self, size_kb: f64, n_busy: u32, cpu_pct: f64) -> f64 {
+        self.base_ms(size_kb) * self.contention_factor(n_busy) * self.load_factor(cpu_pct)
+    }
+}
+
+fn normalize_to_first(points: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let y0 = points[0].1;
+    points.iter().map(|&(x, y)| (x, y / y0)).collect()
+}
+
+/// Build the calibrated profile for a hardware class.
+pub fn profile_for(class: NodeClass) -> ClassProfile {
+    let load = normalize_to_first(&FIG7_LOAD_RUNTIME);
+    match class {
+        NodeClass::EdgeServer => ClassProfile {
+            class,
+            speed_factor: 1.0,
+            contention: normalize_to_first(&TABLE5_EDGE_WARM),
+            load: load.clone(),
+            cold_new: TABLE3_EDGE_COLD_NEW.to_vec(),
+            cold_existing: TABLE3_EDGE_COLD_EXISTING.to_vec(),
+        },
+        NodeClass::RaspberryPi => ClassProfile {
+            class,
+            // Table VI n=1 (597 ms) vs Table V n=1 (223 ms).
+            speed_factor: TABLE6_RPI_WARM[0].1 / TABLE5_EDGE_WARM[0].1,
+            contention: normalize_to_first(&TABLE6_RPI_WARM),
+            load,
+            cold_new: TABLE4_RPI_COLD_NEW.to_vec(),
+            cold_existing: TABLE4_RPI_COLD_EXISTING.to_vec(),
+        },
+        NodeClass::SmartPhone => ClassProfile {
+            class,
+            // Not measured in the paper (the phone is a client there);
+            // between edge and RPi — an octa-core big.LITTLE mobile SoC.
+            speed_factor: 1.8,
+            contention: normalize_to_first(&TABLE6_RPI_WARM),
+            load,
+            cold_new: TABLE4_RPI_COLD_NEW.to_vec(),
+            cold_existing: TABLE4_RPI_COLD_EXISTING.to_vec(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_base_matches_table2() {
+        let p = profile_for(NodeClass::EdgeServer);
+        for (kb, ms) in TABLE2_SIZE_RUNTIME {
+            assert!((p.base_ms(kb) - ms).abs() < 1e-9, "{kb} KB");
+        }
+        // Interpolated midpoint lies between neighbors.
+        let mid = p.base_ms(60.0);
+        assert!(mid > 223.0 && mid < 417.0);
+    }
+
+    #[test]
+    fn edge_warm_contention_matches_table5() {
+        let p = profile_for(NodeClass::EdgeServer);
+        for (n, ms) in TABLE5_EDGE_WARM {
+            let got = p.process_ms(REF_SIZE_KB, n as u32, 0.0);
+            assert!((got - ms).abs() / ms < 1e-9, "n={n}: got {got}, want {ms}");
+        }
+    }
+
+    #[test]
+    fn rpi_warm_matches_table6() {
+        let p = profile_for(NodeClass::RaspberryPi);
+        for (n, ms) in TABLE6_RPI_WARM {
+            let got = p.process_ms(REF_SIZE_KB, n as u32, 0.0);
+            assert!((got - ms).abs() / ms < 1e-9, "n={n}: got {got}, want {ms}");
+        }
+    }
+
+    #[test]
+    fn load_factor_matches_fig7() {
+        let p = profile_for(NodeClass::EdgeServer);
+        for (pct, ms) in FIG7_LOAD_RUNTIME {
+            let got = p.process_ms(REF_SIZE_KB, 1, pct);
+            assert!((got - ms).abs() / ms < 1e-9, "load={pct}: got {got}, want {ms}");
+        }
+    }
+
+    #[test]
+    fn cold_start_matches_table3_table4() {
+        let e = profile_for(NodeClass::EdgeServer);
+        assert_eq!(e.cold_start_ms(1), 52_554.0);
+        assert_eq!(e.cold_start_ms(8), 165_717.0);
+        let r = profile_for(NodeClass::RaspberryPi);
+        assert_eq!(r.cold_start_ms(6), 249_413.0);
+        assert_eq!(r.cold_batch_ms(3), 248_812.0);
+    }
+
+    #[test]
+    fn contention_monotone_and_extrapolates() {
+        let p = profile_for(NodeClass::EdgeServer);
+        let mut prev = 0.0;
+        for n in 1..=12 {
+            let f = p.contention_factor(n);
+            assert!(f >= prev, "contention must be monotone at n={n}");
+            prev = f;
+        }
+        // Past the measured 8, extrapolation keeps growing.
+        assert!(p.contention_factor(12) > p.contention_factor(8));
+    }
+
+    #[test]
+    fn rpi_slower_than_edge() {
+        let e = profile_for(NodeClass::EdgeServer);
+        let r = profile_for(NodeClass::RaspberryPi);
+        let ph = profile_for(NodeClass::SmartPhone);
+        assert!(r.base_ms(87.0) > ph.base_ms(87.0));
+        assert!(ph.base_ms(87.0) > e.base_ms(87.0));
+    }
+
+    #[test]
+    fn size_extrapolation_is_linear_not_flat() {
+        let p = profile_for(NodeClass::EdgeServer);
+        // Beyond Table II's 259 KB the fit continues with the edge slope.
+        assert!(p.base_ms(400.0) > p.base_ms(259.0) * 1.3);
+        // And tiny sizes stay positive.
+        assert!(p.base_ms(1.0) > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Device profiling: the paper's measured calibration data and the
+//! predictors built on it.
+//!
+//! §III-B: "our scheduler is based on evaluation results that reflect the
+//! computation capacity of different devices". The tables in §IV are the
+//! paper's measurements of its face-detection container; they are the
+//! ground truth this reproduction calibrates its container timing model to,
+//! and simultaneously the data the DDS predictor consults at decision time
+//! (the paper's devices "know their own capabilities").
+
+pub mod calibration;
+pub mod predictor;
+pub mod table;
+
+pub use calibration::{ClassProfile, profile_for};
+pub use predictor::{PredictInput, Predictor};
+pub use table::{DeviceState, ProfileTable};

@@ -1,0 +1,204 @@
+//! The paper's end-to-end time predictor:
+//!
+//! `T_task(x, e) = T_trans(x, e) + T_que(x, e) + T_process(x, e) + T_re(x, es)`
+//!
+//! Built from the calibrated class profiles and a device-state snapshot
+//! (possibly stale — the caller decides how much staleness to accept).
+
+use super::calibration::ClassProfile;
+use super::table::DeviceState;
+use crate::net::LinkModel;
+
+/// Inputs to one prediction.
+#[derive(Debug, Clone, Copy)]
+pub struct PredictInput {
+    /// Image payload size (KB) — drives T_trans and T_process.
+    pub size_kb: f64,
+    /// Link used to reach the executing node (None = already local).
+    pub link: Option<LinkModel>,
+    /// Snapshot of the candidate node.
+    pub busy_containers: u32,
+    pub warm_containers: u32,
+    pub queued_images: u32,
+    pub cpu_load_pct: f64,
+}
+
+impl PredictInput {
+    pub fn from_state(s: &DeviceState, size_kb: f64, link: Option<LinkModel>) -> Self {
+        PredictInput {
+            size_kb,
+            link,
+            busy_containers: s.busy_containers,
+            warm_containers: s.warm_containers,
+            queued_images: s.queued_images,
+            cpu_load_pct: s.cpu_load_pct,
+        }
+    }
+}
+
+/// Breakdown of a predicted end-to-end latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    pub trans_ms: f64,
+    pub queue_ms: f64,
+    pub process_ms: f64,
+    pub ret_ms: f64,
+}
+
+impl Prediction {
+    pub fn total_ms(&self) -> f64 {
+        self.trans_ms + self.queue_ms + self.process_ms + self.ret_ms
+    }
+}
+
+/// Predictor for one hardware class (owns its calibration curves).
+#[derive(Debug, Clone)]
+pub struct Predictor {
+    profile: ClassProfile,
+}
+
+/// Result-return payload size (KB) — detection metadata, not pixels.
+pub const RESULT_KB: f64 = 1.0;
+
+impl Predictor {
+    pub fn new(profile: ClassProfile) -> Self {
+        Self { profile }
+    }
+
+    pub fn profile(&self) -> &ClassProfile {
+        &self.profile
+    }
+
+    /// Predict the end-to-end time of running one image on the candidate.
+    ///
+    /// The queue term follows the paper's queue-list reasoning: with `q`
+    /// images ahead and `w` warm containers, the new image waits roughly
+    /// `ceil(q / w)` service quanta; each quantum is the contended
+    /// processing time with all warm containers busy (the conservative
+    /// assumption — a backlog keeps every container occupied).
+    pub fn predict(&self, inp: &PredictInput) -> Prediction {
+        let (trans_ms, ret_ms) = match &inp.link {
+            Some(link) => (link.transfer_ms(inp.size_kb), link.transfer_ms(RESULT_KB)),
+            None => (0.0, 0.0),
+        };
+
+        let warm = inp.warm_containers.max(1);
+        // The image itself will run alongside the other busy containers:
+        // if there is an idle container it starts with busy+1 concurrent,
+        // otherwise (queued) it eventually runs with all warm busy.
+        let has_idle = inp.busy_containers < inp.warm_containers;
+        let concurrency = if has_idle { inp.busy_containers + 1 } else { warm };
+        let process_ms =
+            self.profile.process_ms(inp.size_kb, concurrency, inp.cpu_load_pct);
+
+        let queue_ms = if has_idle && inp.queued_images == 0 {
+            0.0
+        } else {
+            let service_ms = self.profile.process_ms(inp.size_kb, warm, inp.cpu_load_pct);
+            let rounds = (inp.queued_images as f64 / warm as f64).ceil().max(1.0);
+            rounds * service_ms
+        };
+
+        Prediction { trans_ms, queue_ms, process_ms, ret_ms }
+    }
+
+    /// Convenience: total predicted ms.
+    pub fn predict_total_ms(&self, inp: &PredictInput) -> f64 {
+        self.predict(inp).total_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::NodeClass;
+    use crate::net::LinkModel;
+    use crate::profile::calibration::profile_for;
+
+    fn edge_predictor() -> Predictor {
+        Predictor::new(profile_for(NodeClass::EdgeServer))
+    }
+
+    fn idle_input(size_kb: f64) -> PredictInput {
+        PredictInput {
+            size_kb,
+            link: None,
+            busy_containers: 0,
+            warm_containers: 1,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+        }
+    }
+
+    #[test]
+    fn idle_local_prediction_is_table2() {
+        let p = edge_predictor();
+        let pred = p.predict(&idle_input(29.0));
+        assert_eq!(pred.trans_ms, 0.0);
+        assert_eq!(pred.queue_ms, 0.0);
+        assert!((pred.process_ms - 223.0).abs() < 1e-9);
+        assert_eq!(pred.ret_ms, 0.0);
+    }
+
+    #[test]
+    fn link_adds_transfer_both_ways() {
+        let p = edge_predictor();
+        let link = LinkModel::new(2.0, 100.0, 0.0);
+        let mut inp = idle_input(100.0);
+        inp.link = Some(link);
+        let pred = p.predict(&inp);
+        assert!(pred.trans_ms > pred.ret_ms, "image out > result back");
+        assert!((pred.trans_ms - (2.0 + 100.0 * 8.0 / 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_grows_prediction() {
+        let p = edge_predictor();
+        let mut inp = idle_input(29.0);
+        inp.warm_containers = 2;
+        inp.busy_containers = 2; // saturated
+        inp.queued_images = 4;
+        let pred = p.predict(&inp);
+        // 4 queued / 2 containers = 2 service rounds of contended time.
+        let service = 273.0; // Table V @ n=2
+        assert!((pred.queue_ms - 2.0 * service).abs() < 1e-6);
+        assert!((pred.process_ms - service).abs() < 1e-6);
+    }
+
+    #[test]
+    fn busy_but_idle_slot_uses_incremented_concurrency() {
+        let p = edge_predictor();
+        let mut inp = idle_input(29.0);
+        inp.warm_containers = 4;
+        inp.busy_containers = 2;
+        let pred = p.predict(&inp);
+        // Runs as the third concurrent container → Table V @ n=3.
+        assert!((pred.process_ms - 366.0).abs() < 1e-6);
+        assert_eq!(pred.queue_ms, 0.0);
+    }
+
+    #[test]
+    fn load_inflates_prediction() {
+        let p = edge_predictor();
+        let mut inp = idle_input(29.0);
+        inp.cpu_load_pct = 100.0;
+        let pred = p.predict(&inp);
+        assert!((pred.process_ms - 374.0).abs() < 1e-6); // Fig. 7 @ 100 %
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let p = edge_predictor();
+        let mut inp = idle_input(87.0);
+        inp.link = Some(LinkModel::new(5.0, 50.0, 0.0));
+        inp.queued_images = 3;
+        inp.busy_containers = 1;
+        inp.warm_containers = 1;
+        let pred = p.predict(&inp);
+        assert!(
+            (pred.total_ms() - (pred.trans_ms + pred.queue_ms + pred.process_ms + pred.ret_ms))
+                .abs()
+                < 1e-12
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! The Maintain-Profile (MP) table: the edge server's view of every
+//! device's current state, fed by periodic Update-Profile (UP) pushes.
+//!
+//! The paper's MP "connects with other Update Profile modules to collect
+//! profile information of all other end devices and maintain a global
+//! profile table"; APr/APe "get this data through shared memory when making
+//! decisions". Decisions therefore run on *snapshots that may be slightly
+//! stale* — staleness is first-class here (`age_ms`, `fresh_within`).
+
+use std::collections::HashMap;
+
+use crate::core::message::ProfileUpdate;
+use crate::core::{NodeClass, NodeId};
+
+/// Last-known state of one device, as seen by the MP table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceState {
+    pub node: NodeId,
+    pub class: NodeClass,
+    pub busy_containers: u32,
+    pub warm_containers: u32,
+    pub queued_images: u32,
+    pub cpu_load_pct: f64,
+    pub battery_pct: Option<f64>,
+    /// When the underlying UP message was sent (ms since run start).
+    pub updated_ms: f64,
+}
+
+impl DeviceState {
+    /// Idle warm containers — the DDS availability check ("the scheduler
+    /// checks whether the end device has available containers").
+    pub fn idle_containers(&self) -> u32 {
+        self.warm_containers.saturating_sub(self.busy_containers)
+    }
+}
+
+/// The MP table. Owned by the edge server; device membership is established
+/// by the Join handshake, state by Profile pushes.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileTable {
+    devices: HashMap<NodeId, DeviceState>,
+    /// Insertion order — deterministic candidate iteration for the
+    /// scheduler (HashMap order is not).
+    order: Vec<NodeId>,
+}
+
+impl ProfileTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a device at Join time.
+    pub fn register(&mut self, node: NodeId, class: NodeClass, warm: u32, now_ms: f64) {
+        if !self.devices.contains_key(&node) {
+            self.order.push(node);
+        }
+        self.devices.insert(
+            node,
+            DeviceState {
+                node,
+                class,
+                busy_containers: 0,
+                warm_containers: warm,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+                updated_ms: now_ms,
+            },
+        );
+    }
+
+    /// Remove a device (churn / failure injection).
+    pub fn deregister(&mut self, node: NodeId) {
+        self.devices.remove(&node);
+        self.order.retain(|&n| n != node);
+    }
+
+    /// Apply a UP push. Unknown senders are ignored (not yet joined —
+    /// the paper requires certification before participation).
+    pub fn apply(&mut self, update: &ProfileUpdate) {
+        if let Some(s) = self.devices.get_mut(&update.node) {
+            s.busy_containers = update.busy_containers;
+            s.warm_containers = update.warm_containers;
+            s.queued_images = update.queued_images;
+            s.cpu_load_pct = update.cpu_load_pct;
+            s.battery_pct = update.battery_pct;
+            s.updated_ms = update.sent_ms;
+        }
+    }
+
+    pub fn get(&self, node: NodeId) -> Option<&DeviceState> {
+        self.devices.get(&node)
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Devices in registration order (deterministic).
+    pub fn iter(&self) -> impl Iterator<Item = &DeviceState> {
+        self.order.iter().filter_map(|n| self.devices.get(n))
+    }
+
+    /// Devices whose last update is at most `max_age_ms` old at `now_ms`.
+    /// DDS only offloads onto state it can trust.
+    pub fn fresh_within(&self, now_ms: f64, max_age_ms: f64) -> impl Iterator<Item = &DeviceState> {
+        self.iter().filter(move |s| now_ms - s.updated_ms <= max_age_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn up(node: u32, busy: u32, warm: u32, sent: f64) -> ProfileUpdate {
+        ProfileUpdate {
+            node: NodeId(node),
+            busy_containers: busy,
+            warm_containers: warm,
+            queued_images: 0,
+            cpu_load_pct: 10.0,
+            battery_pct: None,
+            sent_ms: sent,
+        }
+    }
+
+    #[test]
+    fn register_apply_get() {
+        let mut t = ProfileTable::new();
+        t.register(NodeId(1), NodeClass::RaspberryPi, 2, 0.0);
+        t.apply(&up(1, 1, 2, 40.0));
+        let s = t.get(NodeId(1)).unwrap();
+        assert_eq!(s.busy_containers, 1);
+        assert_eq!(s.idle_containers(), 1);
+        assert_eq!(s.updated_ms, 40.0);
+    }
+
+    #[test]
+    fn unknown_sender_ignored() {
+        let mut t = ProfileTable::new();
+        t.apply(&up(9, 1, 1, 0.0));
+        assert!(t.get(NodeId(9)).is_none());
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn iteration_order_is_registration_order() {
+        let mut t = ProfileTable::new();
+        for i in [3u32, 1, 2] {
+            t.register(NodeId(i), NodeClass::RaspberryPi, 1, 0.0);
+        }
+        let order: Vec<u32> = t.iter().map(|s| s.node.0).collect();
+        assert_eq!(order, vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn staleness_filter() {
+        let mut t = ProfileTable::new();
+        t.register(NodeId(1), NodeClass::RaspberryPi, 1, 0.0);
+        t.register(NodeId(2), NodeClass::RaspberryPi, 1, 0.0);
+        t.apply(&up(1, 0, 1, 100.0));
+        t.apply(&up(2, 0, 1, 10.0));
+        let fresh: Vec<u32> = t.fresh_within(110.0, 20.0).map(|s| s.node.0).collect();
+        assert_eq!(fresh, vec![1]);
+    }
+
+    #[test]
+    fn deregister_removes() {
+        let mut t = ProfileTable::new();
+        t.register(NodeId(1), NodeClass::RaspberryPi, 1, 0.0);
+        t.deregister(NodeId(1));
+        assert!(t.is_empty());
+        assert_eq!(t.iter().count(), 0);
+    }
+
+    #[test]
+    fn idle_saturates_at_zero() {
+        let s = DeviceState {
+            node: NodeId(1),
+            class: NodeClass::RaspberryPi,
+            busy_containers: 5,
+            warm_containers: 2,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            battery_pct: None,
+            updated_ms: 0.0,
+        };
+        assert_eq!(s.idle_containers(), 0);
+    }
+}

@@ -1,0 +1,241 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/face_<side>.hlo.txt`)
+//! and execute them on the CPU PJRT client from the live hot path.
+//!
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids — see
+//! DESIGN.md §8 and /opt/xla-example/README.md). The L2 graph was lowered
+//! with `return_tuple=True`, so each execution returns a 3-tuple
+//! `(counts[4], max_score, hist[16])`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Outputs of the face-detection graph (fixed shape for every image size).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    /// Survivor-window count per pyramid level (zero-padded to 4).
+    pub counts: Vec<f32>,
+    /// Best window score across levels.
+    pub max_score: f32,
+    /// Histogram of surviving scores (16 bins over [0, 8)).
+    pub hist: Vec<f32>,
+}
+
+impl Detection {
+    /// Total detections across levels.
+    pub fn total(&self) -> f32 {
+        self.counts.iter().sum()
+    }
+}
+
+/// One compiled model variant.
+struct Variant {
+    exe: xla::PjRtLoadedExecutable,
+    side: u32,
+}
+
+/// The model runtime: a PJRT CPU client plus one compiled executable per
+/// image-size variant. Compilation happens once at startup; execution is
+/// synchronous and allocation-light.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    variants: HashMap<u32, Variant>,
+    dir: PathBuf,
+}
+
+impl ModelRuntime {
+    /// Discover and compile every `face_<side>.hlo.txt` under `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut rt = Self { client, variants: HashMap::new(), dir: dir.clone() };
+
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if let Some(side) = parse_artifact_name(name) {
+                rt.compile_variant(side, &path)
+                    .with_context(|| format!("compiling {}", path.display()))?;
+            }
+        }
+        if rt.variants.is_empty() {
+            bail!(
+                "no face_<side>.hlo.txt artifacts in {} — run `make artifacts`",
+                dir.display()
+            );
+        }
+        Ok(rt)
+    }
+
+    fn compile_variant(&mut self, side: u32, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.variants.insert(side, Variant { exe, side });
+        log::info!("compiled face-detect variant side={side} from {}", path.display());
+        Ok(())
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Available image sides, ascending.
+    pub fn sides(&self) -> Vec<u32> {
+        let mut s: Vec<u32> = self.variants.keys().copied().collect();
+        s.sort_unstable();
+        s
+    }
+
+    /// The best variant for a requested side (exact, else the smallest
+    /// variant that fits, else the largest available).
+    pub fn pick_side(&self, requested: u32) -> u32 {
+        let sides = self.sides();
+        *sides
+            .iter()
+            .find(|&&s| s >= requested)
+            .unwrap_or_else(|| sides.last().expect("nonempty"))
+    }
+
+    /// Run detection on an `(side, side, 3)` f32 image in [0, 1],
+    /// row-major flattened.
+    pub fn detect(&self, side: u32, pixels: &[f32]) -> Result<Detection> {
+        let Some(variant) = self.variants.get(&side) else {
+            bail!("no compiled variant for side {side} (have {:?})", self.sides());
+        };
+        let expect = (side * side * 3) as usize;
+        if pixels.len() != expect {
+            bail!("pixel buffer has {} floats, expected {}", pixels.len(), expect);
+        }
+        let input = xla::Literal::vec1(pixels)
+            .reshape(&[side as i64, side as i64, 3])
+            .context("reshaping input literal")?;
+        let result = variant.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let (counts_l, max_l, hist_l) = result.to_tuple3().context("unpacking 3-tuple")?;
+        Ok(Detection {
+            counts: counts_l.to_vec::<f32>()?,
+            max_score: max_l.to_vec::<f32>()?[0],
+            hist: hist_l.to_vec::<f32>()?,
+        })
+    }
+
+    /// Run detection and time it (live-mode container processing).
+    pub fn detect_timed(&self, side: u32, pixels: &[f32]) -> Result<(Detection, f64)> {
+        let start = std::time::Instant::now();
+        let det = self.detect(side, pixels)?;
+        Ok((det, start.elapsed().as_secs_f64() * 1e3))
+    }
+
+    pub fn variant_count(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// Placeholder image generator (deterministic noise) for drivers that
+    /// do not ship real pixels.
+    pub fn synth_image(side: u32, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::SplitMix64::new(seed);
+        (0..(side * side * 3) as usize).map(|_| rng.uniform() as f32).collect()
+    }
+}
+
+fn parse_artifact_name(name: &str) -> Option<u32> {
+    name.strip_prefix("face_")?.strip_suffix(".hlo.txt")?.parse().ok()
+}
+
+// ---------------------------------------------------------------------
+// RuntimeService: thread-owned runtime behind a channel.
+// ---------------------------------------------------------------------
+
+/// The `xla` crate's client/executable types are `Rc`-based (not `Send`),
+/// so they cannot be shared across container worker threads directly.
+/// `RuntimeService` owns the whole [`ModelRuntime`] on one dedicated thread
+/// and serves blocking execution requests over a channel — the same
+/// pattern a GPU-serving system uses for a single-stream device.
+#[derive(Clone)]
+pub struct RuntimeService {
+    tx: std::sync::mpsc::Sender<ExecRequest>,
+    sides: Vec<u32>,
+}
+
+struct ExecRequest {
+    side: u32,
+    seed: u64,
+    reply: std::sync::mpsc::Sender<Result<(Detection, f64)>>,
+}
+
+impl RuntimeService {
+    /// Spawn the service thread; returns once artifacts are compiled.
+    pub fn spawn(dir: impl AsRef<Path>) -> Result<RuntimeService> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = std::sync::mpsc::channel::<ExecRequest>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<Vec<u32>>>();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let rt = match ModelRuntime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(rt.sides()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let side = rt.pick_side(req.side);
+                    let pixels = ModelRuntime::synth_image(side, req.seed);
+                    let _ = req.reply.send(rt.detect_timed(side, &pixels));
+                }
+            })
+            .context("spawning runtime thread")?;
+        let sides = ready_rx
+            .recv()
+            .context("runtime thread died during startup")??;
+        Ok(RuntimeService { tx, sides })
+    }
+
+    pub fn sides(&self) -> &[u32] {
+        &self.sides
+    }
+
+    /// Execute detection on the content-addressed synthetic frame
+    /// `(side, seed)`. Blocking; returns (detection, process_ms).
+    pub fn detect_synth(&self, side: u32, seed: u64) -> Result<(Detection, f64)> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(ExecRequest { side, seed, reply })
+            .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
+        rx.recv().context("runtime thread dropped the request")?
+    }
+}
+
+// Keep `Variant.side` used even in builds where logging is stripped.
+impl std::fmt::Debug for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Variant(side={})", self.side)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_parsing() {
+        assert_eq!(parse_artifact_name("face_64.hlo.txt"), Some(64));
+        assert_eq!(parse_artifact_name("face_256.hlo.txt"), Some(256));
+        assert_eq!(parse_artifact_name("manifest.json"), None);
+        assert_eq!(parse_artifact_name("face_x.hlo.txt"), None);
+        assert_eq!(parse_artifact_name("face_64.hlo"), None);
+    }
+
+    // Integration tests that execute real artifacts live in
+    // rust/tests/runtime_integration.rs (they need `make artifacts`).
+}

@@ -1,0 +1,236 @@
+//! Scheduling policies — the paper's DDS and its comparison groups.
+//!
+//! Policies are *pure decision logic* shared verbatim by the discrete-event
+//! simulator and the live socket deployment: both construct the same
+//! [`DeviceCtx`]/[`EdgeCtx`] views and call the same `decide_*` methods.
+//!
+//! Two decision points, mirroring the paper's two levels:
+//! - **device-level** (APr decision thread): keep the image local or
+//!   forward it to the edge server;
+//! - **edge-level** (APe decision thread): run in the edge pool or offload
+//!   to another end device.
+
+pub mod policies;
+
+use anyhow::{bail, Result};
+
+pub use policies::{Aoe, Aor, Dds, DdsEnergy, DdsNoAvail, Eods, RandomPolicy, RoundRobin};
+
+use crate::core::{ImageMeta, NodeClass, NodeId, Placement};
+use crate::net::LinkModel;
+use crate::profile::{profile_for, Predictor, ProfileTable};
+use crate::util::SplitMix64;
+
+/// Battery reserve below which [`DdsEnergy`] conserves energy (percent).
+pub const DEFAULT_ENERGY_RESERVE_PCT: f64 = 20.0;
+
+/// Predictors for every hardware class (built once, shared by contexts).
+#[derive(Debug, Clone)]
+pub struct PredictorSet {
+    edge: Predictor,
+    rpi: Predictor,
+    phone: Predictor,
+}
+
+impl PredictorSet {
+    pub fn new() -> Self {
+        PredictorSet {
+            edge: Predictor::new(profile_for(NodeClass::EdgeServer)),
+            rpi: Predictor::new(profile_for(NodeClass::RaspberryPi)),
+            phone: Predictor::new(profile_for(NodeClass::SmartPhone)),
+        }
+    }
+
+    pub fn for_class(&self, class: NodeClass) -> &Predictor {
+        match class {
+            NodeClass::EdgeServer => &self.edge,
+            NodeClass::RaspberryPi => &self.rpi,
+            NodeClass::SmartPhone => &self.phone,
+        }
+    }
+}
+
+impl Default for PredictorSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Snapshot of the *local* node for a device-level decision.
+#[derive(Debug, Clone, Copy)]
+pub struct LocalSnapshot {
+    pub node: NodeId,
+    pub busy_containers: u32,
+    pub warm_containers: u32,
+    pub queued_images: u32,
+    pub cpu_load_pct: f64,
+    /// Remaining battery [0, 100]; `None` for mains-powered nodes.
+    pub battery_pct: Option<f64>,
+}
+
+/// Context for the device-level decision.
+pub struct DeviceCtx<'a> {
+    pub now_ms: f64,
+    pub img: &'a ImageMeta,
+    pub local: LocalSnapshot,
+    /// Predictor for the local node's hardware class.
+    pub predictor: &'a Predictor,
+}
+
+impl DeviceCtx<'_> {
+    /// Deadline budget still available at decision time.
+    pub fn remaining_ms(&self) -> f64 {
+        self.img.constraint.deadline_ms - (self.now_ms - self.img.created_ms)
+    }
+}
+
+/// Context for the edge-level decision.
+pub struct EdgeCtx<'a> {
+    pub now_ms: f64,
+    pub img: &'a ImageMeta,
+    pub edge: LocalSnapshot,
+    /// Per-class predictors (edge's own class + offload candidates).
+    pub predictors: &'a PredictorSet,
+    /// The MP table (device states from UP pushes, possibly stale).
+    pub table: &'a ProfileTable,
+    /// Link from the edge to a device.
+    pub link_to: &'a dyn Fn(NodeId) -> Option<LinkModel>,
+    /// Maximum acceptable profile age for offload decisions.
+    pub max_staleness_ms: f64,
+}
+
+impl EdgeCtx<'_> {
+    pub fn remaining_ms(&self) -> f64 {
+        self.img.constraint.deadline_ms - (self.now_ms - self.img.created_ms)
+    }
+}
+
+/// A scheduling policy. Implementations must be deterministic given their
+/// seed (reproducible experiments).
+pub trait SchedulerPolicy: Send {
+    /// Name used in reports.
+    fn name(&self) -> &'static str;
+
+    /// Device-level decision: `Local` or `ToEdge` (returning `Offload` here
+    /// is a contract violation — devices cannot talk to each other
+    /// directly in the star topology).
+    fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement;
+
+    /// Edge-level decision: `Local` (edge pool) or `Offload(device)`.
+    fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement;
+}
+
+/// Policy selector (config string → constructor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// All-On-Raspberry-Pi: never leave the origin device.
+    Aor,
+    /// All-On-Edge: every image goes to the edge server.
+    Aoe,
+    /// Even-Odd Distributed Scheduling: static parity split.
+    Eods,
+    /// The paper's Dynamic Distributed Scheduler.
+    Dds,
+    /// Ablation: DDS without the idle-container availability check.
+    DdsNoAvail,
+    /// Extension (paper §VI future work): DDS with battery awareness —
+    /// low-battery devices conserve energy and are skipped as offload
+    /// targets.
+    DdsEnergy,
+    /// Ablation baseline: alternate local/edge ignoring profiles.
+    RoundRobin,
+    /// Ablation baseline: uniformly random placement.
+    Random,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        Ok(match s {
+            "aor" => PolicyKind::Aor,
+            "aoe" => PolicyKind::Aoe,
+            "eods" => PolicyKind::Eods,
+            "dds" => PolicyKind::Dds,
+            "dds-no-avail" => PolicyKind::DdsNoAvail,
+            "dds-energy" => PolicyKind::DdsEnergy,
+            "round-robin" => PolicyKind::RoundRobin,
+            "random" => PolicyKind::Random,
+            other => bail!("unknown policy `{other}`"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::Aor => "aor",
+            PolicyKind::Aoe => "aoe",
+            PolicyKind::Eods => "eods",
+            PolicyKind::Dds => "dds",
+            PolicyKind::DdsNoAvail => "dds-no-avail",
+            PolicyKind::DdsEnergy => "dds-energy",
+            PolicyKind::RoundRobin => "round-robin",
+            PolicyKind::Random => "random",
+        }
+    }
+
+    /// Instantiate. `seed` only matters for randomized policies.
+    pub fn build(&self, seed: u64) -> Box<dyn SchedulerPolicy> {
+        match self {
+            PolicyKind::Aor => Box::new(Aor),
+            PolicyKind::Aoe => Box::new(Aoe),
+            PolicyKind::Eods => Box::new(Eods),
+            PolicyKind::Dds => Box::new(Dds::new()),
+            PolicyKind::DdsNoAvail => Box::new(DdsNoAvail::new()),
+            PolicyKind::DdsEnergy => Box::new(DdsEnergy::new(DEFAULT_ENERGY_RESERVE_PCT)),
+            PolicyKind::RoundRobin => Box::new(RoundRobin::default()),
+            PolicyKind::Random => Box::new(RandomPolicy::new(SplitMix64::new(seed))),
+        }
+    }
+
+    /// All policy kinds (sweeps).
+    pub const ALL: [PolicyKind; 8] = [
+        PolicyKind::Aor,
+        PolicyKind::Aoe,
+        PolicyKind::Eods,
+        PolicyKind::Dds,
+        PolicyKind::DdsNoAvail,
+        PolicyKind::DdsEnergy,
+        PolicyKind::RoundRobin,
+        PolicyKind::Random,
+    ];
+
+    /// The paper's four comparison groups (Figs. 5/6).
+    pub const PAPER: [PolicyKind; 4] =
+        [PolicyKind::Aor, PolicyKind::Aoe, PolicyKind::Eods, PolicyKind::Dds];
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(PolicyKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn build_names_match() {
+        for k in PolicyKind::ALL {
+            let p = k.build(1);
+            assert_eq!(p.name(), k.as_str());
+        }
+    }
+
+    #[test]
+    fn paper_subset() {
+        assert_eq!(PolicyKind::PAPER.len(), 4);
+        assert!(PolicyKind::PAPER.contains(&PolicyKind::Dds));
+    }
+}

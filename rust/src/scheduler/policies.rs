@@ -1,0 +1,633 @@
+//! Policy implementations: DDS (§V.B.3 of the paper) and the comparison
+//! groups AOR / AOE / EODS, plus ablations.
+
+use crate::core::Placement;
+use crate::profile::PredictInput;
+use crate::util::SplitMix64;
+
+use super::{DeviceCtx, EdgeCtx, SchedulerPolicy};
+
+// ---------------------------------------------------------------------
+// Pinned-constraint handling shared by all policies: a task pinned to a
+// node (privacy/trust constraint, §II "Task and Trust Constraints") is
+// routed there unconditionally.
+// ---------------------------------------------------------------------
+
+fn pinned_device(ctx: &DeviceCtx) -> Option<Placement> {
+    let pin = ctx.img.constraint.pinned_node?;
+    Some(if pin == ctx.local.node { Placement::Local } else { Placement::ToEdge })
+}
+
+fn pinned_edge(ctx: &EdgeCtx) -> Option<Placement> {
+    let pin = ctx.img.constraint.pinned_node?;
+    Some(if pin == ctx.edge.node { Placement::Local } else { Placement::Offload(pin) })
+}
+
+// ---------------------------------------------------------------------
+// AOR — All On the Raspberry Pi (comparison group 1).
+// ---------------------------------------------------------------------
+
+/// Never uses the edge server: every image is processed at its origin.
+pub struct Aor;
+
+impl SchedulerPolicy for Aor {
+    fn name(&self) -> &'static str {
+        "aor"
+    }
+
+    fn decide_device(&mut self, _ctx: &DeviceCtx) -> Placement {
+        Placement::Local
+    }
+
+    fn decide_edge(&mut self, _ctx: &EdgeCtx) -> Placement {
+        // AOR tasks never reach the edge; if one does (pinned elsewhere),
+        // run it in the edge pool.
+        Placement::Local
+    }
+}
+
+// ---------------------------------------------------------------------
+// AOE — All On the Edge server (comparison group 2).
+// ---------------------------------------------------------------------
+
+/// Every image is transmitted to and processed on the edge server.
+pub struct Aoe;
+
+impl SchedulerPolicy for Aoe {
+    fn name(&self) -> &'static str {
+        "aoe"
+    }
+
+    fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement {
+        pinned_device(ctx).unwrap_or(Placement::ToEdge)
+    }
+
+    fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement {
+        pinned_edge(ctx).unwrap_or(Placement::Local)
+    }
+}
+
+// ---------------------------------------------------------------------
+// EODS — Even-Odd Distributed Scheduling (comparison group 3).
+// ---------------------------------------------------------------------
+
+/// Static split: odd sequence numbers stay on the device, even ones go to
+/// the edge server ("the Raspberry Pi was responsible for processing
+/// images with odd-numbered sequences").
+pub struct Eods;
+
+impl SchedulerPolicy for Eods {
+    fn name(&self) -> &'static str {
+        "eods"
+    }
+
+    fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement {
+        if let Some(p) = pinned_device(ctx) {
+            return p;
+        }
+        if ctx.img.seq % 2 == 1 {
+            Placement::Local
+        } else {
+            Placement::ToEdge
+        }
+    }
+
+    fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement {
+        pinned_edge(ctx).unwrap_or(Placement::Local)
+    }
+}
+
+// ---------------------------------------------------------------------
+// DDS — the paper's Dynamic Distributed Scheduler.
+// ---------------------------------------------------------------------
+
+/// The paper's two-level dynamic policy:
+///
+/// 1. **Device level** (local-first, §III-A): predict the end-to-end local
+///    time from the profile model; if it fits the remaining deadline
+///    budget, keep the task local, otherwise forward it to the edge.
+/// 2. **Edge level** (§V.B.3): prefer offloading to an end device that
+///    (a) predicts in-budget *and* (b) reports an idle warm container —
+///    the availability check that compensates for decision-to-execution
+///    staleness ("only offloads the task to that device if containers are
+///    available"). Otherwise run in the edge pool.
+pub struct Dds {
+    /// Whether the availability check is enforced (disabled by the
+    /// `DdsNoAvail` ablation).
+    require_idle: bool,
+}
+
+impl Dds {
+    pub fn new() -> Self {
+        Dds { require_idle: true }
+    }
+}
+
+impl Default for Dds {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SchedulerPolicy for Dds {
+    fn name(&self) -> &'static str {
+        if self.require_idle {
+            "dds"
+        } else {
+            "dds-no-avail"
+        }
+    }
+
+    fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement {
+        if let Some(p) = pinned_device(ctx) {
+            return p;
+        }
+        let inp = PredictInput {
+            size_kb: ctx.img.size_kb,
+            link: None,
+            busy_containers: ctx.local.busy_containers,
+            warm_containers: ctx.local.warm_containers,
+            queued_images: ctx.local.queued_images,
+            cpu_load_pct: ctx.local.cpu_load_pct,
+        };
+        let predicted = ctx.predictor.predict_total_ms(&inp);
+        if predicted <= ctx.remaining_ms() {
+            Placement::Local
+        } else {
+            Placement::ToEdge
+        }
+    }
+
+    fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement {
+        if let Some(p) = pinned_edge(ctx) {
+            return p;
+        }
+        let budget = ctx.remaining_ms();
+
+        // Candidate end devices, by predicted total time; only fresh
+        // profiles are trusted.
+        let mut best: Option<(f64, crate::core::NodeId)> = None;
+        for dev in ctx.table.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
+            // Never offload back through a dead link, and never to the
+            // image's origin (it already declined the task).
+            if dev.node == ctx.img.origin {
+                continue;
+            }
+            let Some(link) = (ctx.link_to)(dev.node) else { continue };
+            if self.require_idle && dev.idle_containers() == 0 {
+                continue;
+            }
+            let predictor = ctx.predictors.for_class(dev.class);
+            let inp = PredictInput::from_state(dev, ctx.img.size_kb, Some(link));
+            let t = predictor.predict_total_ms(&inp);
+            if t <= budget && best.map_or(true, |(bt, _)| t < bt) {
+                best = Some((t, dev.node));
+            }
+        }
+        if let Some((_, node)) = best {
+            return Placement::Offload(node);
+        }
+        Placement::Local
+    }
+}
+
+/// Ablation: DDS without the idle-container availability check — measures
+/// how much the paper's staleness compensation matters (DESIGN.md
+/// ablations).
+pub struct DdsNoAvail(Dds);
+
+impl DdsNoAvail {
+    pub fn new() -> Self {
+        DdsNoAvail(Dds { require_idle: false })
+    }
+}
+
+impl Default for DdsNoAvail {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SchedulerPolicy for DdsNoAvail {
+    fn name(&self) -> &'static str {
+        "dds-no-avail"
+    }
+
+    fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement {
+        self.0.decide_device(ctx)
+    }
+
+    fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement {
+        self.0.decide_edge(ctx)
+    }
+}
+
+/// Extension policy (the paper's §VI future work): DDS with battery
+/// awareness.
+///
+/// Device level: a battery-powered device below its reserve threshold
+/// conserves energy — it forwards frames to the edge even when the time
+/// prediction fits (compute costs ~1 mWh/image; radios are far cheaper).
+/// Edge level: candidates below the reserve are skipped, and among
+/// feasible candidates mains-powered nodes win; battery-powered ties break
+/// toward the fuller battery, then the faster prediction.
+pub struct DdsEnergy {
+    inner: Dds,
+    reserve_pct: f64,
+}
+
+impl DdsEnergy {
+    pub fn new(reserve_pct: f64) -> Self {
+        DdsEnergy { inner: Dds::new(), reserve_pct }
+    }
+}
+
+impl SchedulerPolicy for DdsEnergy {
+    fn name(&self) -> &'static str {
+        "dds-energy"
+    }
+
+    fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement {
+        if let Some(p) = pinned_device(ctx) {
+            return p;
+        }
+        if let Some(batt) = ctx.local.battery_pct {
+            if batt < self.reserve_pct {
+                return Placement::ToEdge;
+            }
+        }
+        self.inner.decide_device(ctx)
+    }
+
+    fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement {
+        if let Some(p) = pinned_edge(ctx) {
+            return p;
+        }
+        let budget = ctx.remaining_ms();
+        // Score: (battery class, battery level, predicted time). Mains
+        // (None) sorts best via the 200.0 sentinel > any real percent.
+        let mut best: Option<(f64, f64, crate::core::NodeId)> = None;
+        for dev in ctx.table.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
+            if dev.node == ctx.img.origin {
+                continue;
+            }
+            let Some(link) = (ctx.link_to)(dev.node) else { continue };
+            if dev.idle_containers() == 0 {
+                continue;
+            }
+            let batt = dev.battery_pct.unwrap_or(200.0);
+            if batt < self.reserve_pct {
+                continue; // preserve low-battery devices
+            }
+            let predictor = ctx.predictors.for_class(dev.class);
+            let inp = PredictInput::from_state(dev, ctx.img.size_kb, Some(link));
+            let t = predictor.predict_total_ms(&inp);
+            if t > budget {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bb, bt, _)) => batt > bb || (batt == bb && t < bt),
+            };
+            if better {
+                best = Some((batt, t, dev.node));
+            }
+        }
+        if let Some((_, _, node)) = best {
+            return Placement::Offload(node);
+        }
+        Placement::Local
+    }
+}
+
+// ---------------------------------------------------------------------
+// Profile-blind ablation baselines.
+// ---------------------------------------------------------------------
+
+/// Alternates local/edge at the device, and round-robins offload targets
+/// (including the edge itself) at the edge — dynamic but profile-blind.
+#[derive(Default)]
+pub struct RoundRobin {
+    device_flip: bool,
+    edge_idx: usize,
+}
+
+impl SchedulerPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement {
+        if let Some(p) = pinned_device(ctx) {
+            return p;
+        }
+        self.device_flip = !self.device_flip;
+        if self.device_flip {
+            Placement::Local
+        } else {
+            Placement::ToEdge
+        }
+    }
+
+    fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement {
+        if let Some(p) = pinned_edge(ctx) {
+            return p;
+        }
+        let candidates: Vec<_> = ctx
+            .table
+            .iter()
+            .filter(|d| d.node != ctx.img.origin && (ctx.link_to)(d.node).is_some())
+            .map(|d| d.node)
+            .collect();
+        // Slot 0 = edge itself, then the candidates in table order.
+        let n = candidates.len() + 1;
+        let pick = self.edge_idx % n;
+        self.edge_idx += 1;
+        if pick == 0 {
+            Placement::Local
+        } else {
+            Placement::Offload(candidates[pick - 1])
+        }
+    }
+}
+
+/// Uniformly random placement (seeded — deterministic per run).
+pub struct RandomPolicy {
+    rng: SplitMix64,
+}
+
+impl RandomPolicy {
+    pub fn new(rng: SplitMix64) -> Self {
+        RandomPolicy { rng }
+    }
+}
+
+impl SchedulerPolicy for RandomPolicy {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement {
+        if let Some(p) = pinned_device(ctx) {
+            return p;
+        }
+        if self.rng.chance(0.5) {
+            Placement::Local
+        } else {
+            Placement::ToEdge
+        }
+    }
+
+    fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement {
+        if let Some(p) = pinned_edge(ctx) {
+            return p;
+        }
+        let candidates: Vec<_> = ctx
+            .table
+            .iter()
+            .filter(|d| d.node != ctx.img.origin && (ctx.link_to)(d.node).is_some())
+            .map(|d| d.node)
+            .collect();
+        let n = candidates.len() + 1;
+        let pick = self.rng.choice_index(n);
+        if pick == 0 {
+            Placement::Local
+        } else {
+            Placement::Offload(candidates[pick - 1])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::message::ProfileUpdate;
+    use crate::core::{Constraint, ImageMeta, NodeClass, NodeId, TaskId};
+    use crate::net::LinkModel;
+    use crate::profile::{profile_for, Predictor, ProfileTable};
+    use crate::scheduler::{LocalSnapshot, PredictorSet};
+    use once_cell::sync::Lazy;
+
+    static RPI_PRED: Lazy<Predictor> =
+        Lazy::new(|| Predictor::new(profile_for(NodeClass::RaspberryPi)));
+    static PREDICTORS: Lazy<PredictorSet> = Lazy::new(PredictorSet::new);
+
+    fn img(seq: u64, deadline: f64) -> ImageMeta {
+        ImageMeta {
+            task: TaskId(seq),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(deadline),
+            seq,
+        }
+    }
+
+    fn device_ctx<'a>(img: &'a ImageMeta, busy: u32, warm: u32, queued: u32) -> DeviceCtx<'a> {
+        DeviceCtx {
+            now_ms: 0.0,
+            img,
+            local: LocalSnapshot {
+                node: NodeId(1),
+                busy_containers: busy,
+                warm_containers: warm,
+                queued_images: queued,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+            },
+            predictor: &RPI_PRED,
+        }
+    }
+
+    fn table_with_r2(busy: u32, warm: u32) -> ProfileTable {
+        let mut t = ProfileTable::new();
+        t.register(NodeId(2), NodeClass::RaspberryPi, warm, 0.0);
+        t.apply(&ProfileUpdate {
+            node: NodeId(2),
+            busy_containers: busy,
+            warm_containers: warm,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            battery_pct: None,
+            sent_ms: 0.0,
+        });
+        t
+    }
+
+    fn edge_ctx<'a>(
+        img: &'a ImageMeta,
+        table: &'a ProfileTable,
+        link_to: &'a dyn Fn(NodeId) -> Option<LinkModel>,
+    ) -> EdgeCtx<'a> {
+        EdgeCtx {
+            now_ms: 5.0,
+            img,
+            edge: LocalSnapshot {
+                node: NodeId(0),
+                busy_containers: 0,
+                warm_containers: 4,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+            },
+            predictors: &PREDICTORS,
+            table,
+            link_to,
+            max_staleness_ms: 200.0,
+        }
+    }
+
+    fn wifi(_: NodeId) -> Option<LinkModel> {
+        Some(LinkModel::wifi())
+    }
+
+    #[test]
+    fn aor_always_local() {
+        let im = img(0, 1.0); // impossible deadline — AOR doesn't care
+        assert_eq!(Aor.decide_device(&device_ctx(&im, 4, 4, 10)), Placement::Local);
+    }
+
+    #[test]
+    fn aoe_always_edge() {
+        let im = img(0, 1e9);
+        assert_eq!(Aoe.decide_device(&device_ctx(&im, 0, 4, 0)), Placement::ToEdge);
+        let t = table_with_r2(0, 2);
+        assert_eq!(
+            Aoe.decide_edge(&edge_ctx(&im, &t, &wifi)),
+            Placement::Local
+        );
+    }
+
+    #[test]
+    fn eods_parity_split() {
+        let mut p = Eods;
+        let odd = img(1, 1e9);
+        let even = img(2, 1e9);
+        assert_eq!(p.decide_device(&device_ctx(&odd, 0, 2, 0)), Placement::Local);
+        assert_eq!(p.decide_device(&device_ctx(&even, 0, 2, 0)), Placement::ToEdge);
+    }
+
+    #[test]
+    fn dds_local_when_budget_allows() {
+        let mut p = Dds::new();
+        // RPi idle single container: 597 ms predicted. Budget 1000 → local.
+        let im = img(0, 1000.0);
+        assert_eq!(p.decide_device(&device_ctx(&im, 0, 1, 0)), Placement::Local);
+        // Budget 500 < 597 → forward to edge (the paper's exact example:
+        // "if a job's running time is 597 ms ... and the time constraint is
+        // less than this number, the task is sent to the edge server").
+        let im = img(0, 500.0);
+        assert_eq!(p.decide_device(&device_ctx(&im, 0, 1, 0)), Placement::ToEdge);
+    }
+
+    #[test]
+    fn dds_accounts_for_queue() {
+        let mut p = Dds::new();
+        // Saturated pool + queue → predicted way beyond 1000 ms budget.
+        let im = img(0, 1000.0);
+        assert_eq!(p.decide_device(&device_ctx(&im, 2, 2, 6)), Placement::ToEdge);
+    }
+
+    #[test]
+    fn dds_edge_offloads_to_idle_device() {
+        let mut p = Dds::new();
+        let im = img(0, 5000.0);
+        let t = table_with_r2(0, 2);
+        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        assert_eq!(got, Placement::Offload(NodeId(2)));
+    }
+
+    #[test]
+    fn dds_edge_keeps_local_when_device_busy() {
+        let mut p = Dds::new();
+        let im = img(0, 5000.0);
+        let t = table_with_r2(2, 2); // no idle containers on R2
+        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        assert_eq!(got, Placement::Local);
+    }
+
+    #[test]
+    fn dds_no_avail_ignores_busy() {
+        let mut p = DdsNoAvail::new();
+        let im = img(0, 50_000.0);
+        let t = table_with_r2(2, 2);
+        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        assert_eq!(got, Placement::Offload(NodeId(2)));
+    }
+
+    #[test]
+    fn dds_edge_local_when_budget_too_tight_for_device() {
+        let mut p = Dds::new();
+        // 300 ms budget: RPi needs 597+ — edge must keep it.
+        let im = img(0, 300.0);
+        let t = table_with_r2(0, 2);
+        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        assert_eq!(got, Placement::Local);
+    }
+
+    #[test]
+    fn dds_edge_skips_stale_profiles() {
+        let mut p = Dds::new();
+        let im = img(0, 5000.0);
+        let mut t = table_with_r2(0, 2);
+        // Make the profile ancient relative to ctx.now_ms = 5.0.
+        t.apply(&ProfileUpdate {
+            node: NodeId(2),
+            busy_containers: 0,
+            warm_containers: 2,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            battery_pct: None,
+            sent_ms: -10_000.0,
+        });
+        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        assert_eq!(got, Placement::Local);
+    }
+
+    #[test]
+    fn dds_never_offloads_to_origin() {
+        let mut p = Dds::new();
+        let im = img(0, 5000.0);
+        let mut t = ProfileTable::new();
+        t.register(NodeId(1), NodeClass::RaspberryPi, 2, 0.0); // origin itself
+        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        assert_eq!(got, Placement::Local);
+    }
+
+    #[test]
+    fn pinned_constraint_overrides_everything() {
+        let mut dds = Dds::new();
+        let mut im = img(0, 1.0);
+        im.constraint = Constraint::pinned(1.0, NodeId(1));
+        assert_eq!(dds.decide_device(&device_ctx(&im, 4, 4, 50)), Placement::Local);
+        im.constraint = Constraint::pinned(1.0, NodeId(2));
+        let t = table_with_r2(2, 2);
+        assert_eq!(
+            dds.decide_edge(&edge_ctx(&im, &t, &wifi)),
+            Placement::Offload(NodeId(2))
+        );
+    }
+
+    #[test]
+    fn round_robin_alternates() {
+        let mut p = RoundRobin::default();
+        let im = img(0, 1e9);
+        let a = p.decide_device(&device_ctx(&im, 0, 1, 0));
+        let b = p.decide_device(&device_ctx(&im, 0, 1, 0));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let im = img(0, 1e9);
+        let run = |seed| {
+            let mut p = RandomPolicy::new(SplitMix64::new(seed));
+            (0..16)
+                .map(|_| matches!(p.decide_device(&device_ctx(&im, 0, 1, 0)), Placement::Local))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

@@ -1,0 +1,412 @@
+//! Edge-server node: IS + APe + MP + container pool, sans-IO.
+//!
+//! The edge server is the coordinator of the paper's two-level design: it
+//! accepts user requests (IS), activates the nearest camera device,
+//! receives images that devices could not handle, and makes the *global*
+//! decision — run in its own container pool or offload to another end
+//! device — against the MP profile table.
+
+use std::collections::HashMap;
+
+use crate::container::ContainerPool;
+use crate::core::message::{Message, UserRequest};
+use crate::core::{ImageMeta, NodeClass, NodeId, Placement, TaskId};
+use crate::device::Action;
+use crate::net::Topology;
+use crate::profile::ProfileTable;
+use crate::scheduler::{EdgeCtx, LocalSnapshot, PredictorSet, SchedulerPolicy};
+
+/// The edge server state machine.
+pub struct EdgeNode {
+    pub id: NodeId,
+    pool: ContainerPool,
+    table: ProfileTable,
+    policy: Box<dyn SchedulerPolicy>,
+    /// Per-class predictors (edge + offload candidates), built once.
+    predictors: PredictorSet,
+    /// Topology view for links and camera lookup.
+    topology: Topology,
+    /// Maximum MP staleness accepted for offload decisions.
+    max_staleness_ms: f64,
+    /// Tasks executing in the local pool.
+    inflight: HashMap<TaskId, ImageMeta>,
+}
+
+impl EdgeNode {
+    pub fn new(
+        id: NodeId,
+        pool: ContainerPool,
+        policy: Box<dyn SchedulerPolicy>,
+        topology: Topology,
+        max_staleness_ms: f64,
+    ) -> Self {
+        Self {
+            id,
+            pool,
+            table: ProfileTable::new(),
+            policy,
+            predictors: PredictorSet::new(),
+            topology,
+            max_staleness_ms,
+            inflight: HashMap::new(),
+        }
+    }
+
+    pub fn pool(&self) -> &ContainerPool {
+        &self.pool
+    }
+
+    pub fn pool_mut(&mut self) -> &mut ContainerPool {
+        &mut self.pool
+    }
+
+    pub fn table(&self) -> &ProfileTable {
+        &self.table
+    }
+
+    fn snapshot(&self) -> LocalSnapshot {
+        LocalSnapshot {
+            node: self.id,
+            busy_containers: self.pool.busy_count(),
+            warm_containers: self.pool.warm_count(),
+            queued_images: self.pool.queued_count(),
+            cpu_load_pct: self.pool.bg_load(),
+            battery_pct: None, // the edge server is mains-powered
+        }
+    }
+
+    /// Network delivery.
+    pub fn on_message(&mut self, msg: Message, now_ms: f64, out: &mut Vec<Action>) {
+        match msg {
+            Message::User(req) => self.on_user(req, now_ms, out),
+            Message::Image(img) => self.on_image(img, now_ms, out),
+            Message::Profile(up) => self.table.apply(&up),
+            Message::Join { node, class_tag, warm_containers } => {
+                let class = match class_tag {
+                    1 => NodeClass::RaspberryPi,
+                    2 => NodeClass::SmartPhone,
+                    _ => NodeClass::RaspberryPi,
+                };
+                self.table.register(node, class, warm_containers, now_ms);
+                out.push(Action::Send {
+                    to: node,
+                    msg: Message::JoinAck { assigned: node },
+                    reliable: true,
+                });
+            }
+            Message::Result { task, processed_by, detections, max_score, process_ms } => {
+                // Relay: a device finished somebody else's image; route the
+                // result to the origin.
+                if let Some(img) = self.inflight.remove(&task) {
+                    out.push(Action::Send {
+                        to: img.origin,
+                        msg: Message::Result { task, processed_by, detections, max_score, process_ms },
+                        reliable: true,
+                    });
+                } else {
+                    log::warn!("edge: result for unknown task {task}");
+                }
+            }
+            other => log::debug!("edge: ignoring message tag {}", other.tag()),
+        }
+    }
+
+    /// IS: user request → activate the nearest camera (the paper's mall
+    /// scenario: "the edge server will stimulate end devices that are in
+    /// close proximity to the user").
+    fn on_user(&mut self, req: UserRequest, _now_ms: f64, out: &mut Vec<Action>) {
+        match self.topology.nearest_camera(req.location) {
+            Some(device) => {
+                out.push(Action::Send {
+                    to: device,
+                    msg: Message::Activate { request: req, reply_to: self.id },
+                    reliable: true,
+                });
+            }
+            None => log::warn!("edge: no camera device available for user request"),
+        }
+    }
+
+    /// APe: an image a device declined (or AOE/EODS sent) — global decision.
+    fn on_image(&mut self, img: ImageMeta, now_ms: f64, out: &mut Vec<Action>) {
+        let placement = {
+            let topology = &self.topology;
+            let edge_id = self.id;
+            let link_to = move |n: NodeId| topology.link(edge_id, n);
+            let ctx = EdgeCtx {
+                now_ms,
+                img: &img,
+                edge: self.snapshot(),
+                predictors: &self.predictors,
+                table: &self.table,
+                link_to: &link_to,
+                max_staleness_ms: self.max_staleness_ms,
+            };
+            self.policy.decide_edge(&ctx)
+        };
+
+        match placement {
+            Placement::Offload(target) => {
+                out.push(Action::RecordPlaced { task: img.task, placement });
+                // Track for result relay.
+                self.inflight.insert(img.task, img);
+                // Optimistic MP bump: the offloaded image will occupy a
+                // container before the next 20 ms UP push arrives —
+                // prevents a burst from all picking the same device.
+                self.bump_busy(target);
+                out.push(Action::Send { to: target, msg: Message::Image(img), reliable: false });
+            }
+            _ => {
+                out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
+                self.run_local(img, now_ms, out);
+            }
+        }
+    }
+
+    /// A local container finished.
+    pub fn on_container_done(
+        &mut self,
+        container: usize,
+        task: TaskId,
+        process_ms: f64,
+        now_ms: f64,
+        out: &mut Vec<Action>,
+    ) {
+        match self.inflight.remove(&task) {
+            Some(img) if img.origin != self.id => {
+                out.push(Action::Send {
+                    to: img.origin,
+                    msg: Message::Result {
+                        task,
+                        processed_by: self.id,
+                        detections: 0,
+                        max_score: 0.0,
+                        process_ms,
+                    },
+                    reliable: true,
+                });
+            }
+            Some(_) => {
+                out.push(Action::RecordCompleted { task, at_ms: now_ms, process_ms });
+            }
+            None => log::warn!("edge: completion for unknown task {task}"),
+        }
+        if let Some(next) = self.pool.complete(container, now_ms) {
+            out.push(Action::RecordStarted { task: next.task, at_ms: next.start_ms });
+            out.push(Action::ContainerBusyUntil {
+                container: next.container,
+                task: next.task,
+                at_ms: next.done_at_ms,
+            });
+        }
+    }
+
+    fn run_local(&mut self, img: ImageMeta, now_ms: f64, out: &mut Vec<Action>) {
+        self.inflight.insert(img.task, img);
+        if let Some(assign) = self.pool.submit(img, now_ms) {
+            out.push(Action::RecordStarted { task: assign.task, at_ms: assign.start_ms });
+            out.push(Action::ContainerBusyUntil {
+                container: assign.container,
+                task: assign.task,
+                at_ms: assign.done_at_ms,
+            });
+        }
+    }
+
+    fn bump_busy(&mut self, node: NodeId) {
+        if let Some(s) = self.table.get(node) {
+            let mut s = *s;
+            s.busy_containers += 1;
+            // Re-apply through the normal path to keep one mutation point.
+            self.table.apply(&crate::core::message::ProfileUpdate {
+                node: s.node,
+                busy_containers: s.busy_containers,
+                warm_containers: s.warm_containers,
+                queued_images: s.queued_images,
+                cpu_load_pct: s.cpu_load_pct,
+                battery_pct: s.battery_pct,
+                sent_ms: s.updated_ms,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::message::ProfileUpdate;
+    use crate::core::Constraint;
+    use crate::profile::profile_for;
+    use crate::scheduler::PolicyKind;
+
+    fn edge(policy: PolicyKind) -> EdgeNode {
+        let topo = Topology::paper_testbed(4, 2);
+        EdgeNode::new(
+            NodeId(0),
+            ContainerPool::new(profile_for(NodeClass::EdgeServer), 4),
+            policy.build(1),
+            topo,
+            200.0,
+        )
+    }
+
+    fn join(e: &mut EdgeNode, node: u32, warm: u32, now: f64) {
+        let mut out = Vec::new();
+        e.on_message(
+            Message::Join { node: NodeId(node), class_tag: 1, warm_containers: warm },
+            now,
+            &mut out,
+        );
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::JoinAck { .. }, .. })));
+    }
+
+    fn img(task: u64, deadline: f64, origin: u32) -> ImageMeta {
+        ImageMeta {
+            task: TaskId(task),
+            origin: NodeId(origin),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(deadline),
+            seq: task,
+        }
+    }
+
+    #[test]
+    fn join_registers_in_table() {
+        let mut e = edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        assert_eq!(e.table().len(), 2);
+    }
+
+    #[test]
+    fn aoe_image_runs_in_edge_pool() {
+        let mut e = edge(PolicyKind::Aoe);
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        e.on_message(Message::Image(img(1, 5000.0, 1)), 10.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::RecordStarted { .. })));
+        assert_eq!(e.pool().busy_count(), 1);
+    }
+
+    #[test]
+    fn dds_offloads_to_idle_r2() {
+        let mut e = edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        let mut out = Vec::new();
+        // Image from R1 (origin 1) — R2 is idle → offload there.
+        e.on_message(Message::Image(img(1, 5000.0, 1)), 10.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(2), msg: Message::Image(_), reliable: false }
+        )));
+        assert_eq!(e.pool().busy_count(), 0);
+    }
+
+    #[test]
+    fn optimistic_bump_prevents_burst_offload() {
+        let mut e = edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 1, 0.0); // single container on R2
+        let mut out = Vec::new();
+        e.on_message(Message::Image(img(1, 5000.0, 1)), 10.0, &mut out);
+        out.clear();
+        // Second image in the same burst: R2 now looks busy → run local.
+        e.on_message(Message::Image(img(2, 5000.0, 1)), 11.0, &mut out);
+        assert!(!out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::Image(_), .. })));
+        assert_eq!(e.pool().busy_count(), 1);
+    }
+
+    #[test]
+    fn result_relayed_to_origin() {
+        let mut e = edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        let mut out = Vec::new();
+        e.on_message(Message::Image(img(1, 5000.0, 1)), 10.0, &mut out);
+        out.clear();
+        e.on_message(
+            Message::Result {
+                task: TaskId(1),
+                processed_by: NodeId(2),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 597.0,
+            },
+            700.0,
+            &mut out,
+        );
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Result { .. }, reliable: true }
+        )));
+    }
+
+    #[test]
+    fn local_completion_for_offloaded_origin_sends_result_back() {
+        let mut e = edge(PolicyKind::Aoe);
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        e.on_message(Message::Image(img(1, 5000.0, 1)), 10.0, &mut out);
+        out.clear();
+        e.on_container_done(0, TaskId(1), 223.0, 233.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Result { .. }, .. }
+        )));
+    }
+
+    #[test]
+    fn user_request_activates_nearest_camera() {
+        let mut e = edge(PolicyKind::Dds);
+        let mut out = Vec::new();
+        e.on_message(
+            Message::User(UserRequest {
+                app_id: 1,
+                location: (1.1, 0.0),
+                constraint: Constraint::deadline(5000.0),
+                n_images: 50,
+                interval_ms: 100.0,
+            }),
+            0.0,
+            &mut out,
+        );
+        // Paper testbed: node 1 has the camera at (1, 0).
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Activate { .. }, .. }
+        )));
+    }
+
+    #[test]
+    fn stale_profiles_block_offload() {
+        let mut e = edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        // R2's profile is 500 ms old vs staleness cap 200 ms.
+        let mut out = Vec::new();
+        e.on_message(
+            Message::Profile(ProfileUpdate {
+                node: NodeId(2),
+                busy_containers: 0,
+                warm_containers: 2,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+                sent_ms: 0.0,
+            }),
+            0.0,
+            &mut out,
+        );
+        e.on_message(Message::Image(img(1, 5000.0, 1)), 500.1, &mut out);
+        assert!(!out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::Image(_), .. })));
+    }
+}

@@ -1,0 +1,446 @@
+//! The discrete-event engine.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::core::{ImageMeta, Message, NodeId, TaskId};
+use crate::device::{Action, DeviceNode};
+use crate::metrics::Recorder;
+use crate::net::Topology;
+use crate::server::EdgeNode;
+use crate::util::SplitMix64;
+
+/// Event payloads.
+#[derive(Debug, Clone)]
+pub enum Ev {
+    /// Camera frame materializes at its origin device.
+    CameraFrame(ImageMeta),
+    /// Network delivery of a message.
+    Deliver { to: NodeId, msg: Message },
+    /// A container on `node` finishes `task`.
+    ContainerDone { node: NodeId, container: usize, task: TaskId, process_ms: f64 },
+    /// UP profile push timer on a device.
+    ProfileTick { node: NodeId },
+    /// Change a node's background CPU load (stress schedule, Fig. 8).
+    SetLoad { node: NodeId, pct: f64 },
+}
+
+struct Scheduled {
+    at_ms: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_ms == other.at_ms && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earliest time first, then insertion order (CRITICAL for
+        // determinism of same-timestamp events).
+        other
+            .at_ms
+            .partial_cmp(&self.at_ms)
+            .expect("NaN time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One simulated node.
+pub enum SimNode {
+    Edge(EdgeNode),
+    Device(DeviceNode),
+}
+
+/// The discrete-event simulator.
+pub struct Engine {
+    now_ms: f64,
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    nodes: Vec<SimNode>,
+    topology: Topology,
+    pub recorder: Recorder,
+    rng: SplitMix64,
+    /// UP push period; ticks stop after `horizon_ms`.
+    profile_period_ms: f64,
+    horizon_ms: f64,
+    /// Count of tasks created / completed — the run ends early when all
+    /// created tasks have resolved.
+    created: usize,
+    resolved: usize,
+    events_processed: u64,
+    /// Reusable per-event action buffer (perf: avoids one Vec allocation
+    /// per event — EXPERIMENTS.md §Perf change 2).
+    scratch: Vec<Action>,
+}
+
+impl Engine {
+    pub fn new(
+        nodes: Vec<SimNode>,
+        topology: Topology,
+        seed: u64,
+        profile_period_ms: f64,
+        horizon_ms: f64,
+    ) -> Self {
+        Self {
+            now_ms: 0.0,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            nodes,
+            topology,
+            recorder: Recorder::new(),
+            rng: SplitMix64::new(seed ^ 0x9D5F_1CE4),
+            profile_period_ms,
+            horizon_ms,
+            created: 0,
+            resolved: 0,
+            events_processed: 0,
+            scratch: Vec::with_capacity(16),
+        }
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Battery state of every battery-powered device:
+    /// (node, remaining %, consumed mWh).
+    pub fn battery_report(&self) -> Vec<(NodeId, f64, f64)> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                SimNode::Device(d) => {
+                    d.battery().map(|b| (d.id, b.pct(), b.consumed_mwh()))
+                }
+                SimNode::Edge(_) => None,
+            })
+            .collect()
+    }
+
+    pub fn schedule(&mut self, at_ms: f64, ev: Ev) {
+        debug_assert!(at_ms >= self.now_ms, "cannot schedule into the past");
+        self.seq += 1;
+        self.heap.push(Scheduled { at_ms, seq: self.seq, ev });
+    }
+
+    /// Seed the workload: register every frame with the recorder and
+    /// schedule its camera event.
+    pub fn push_stream(&mut self, frames: &[ImageMeta]) {
+        // Perf (EXPERIMENTS.md §Perf change 1): pre-reserve the event heap
+        // for the whole stream plus per-image follow-on events, avoiding
+        // repeated reallocation during the arrival burst.
+        self.heap.reserve(frames.len() * 4);
+        for img in frames {
+            self.recorder.created(
+                img.task,
+                img.origin,
+                img.size_kb,
+                img.constraint.deadline_ms,
+                img.created_ms,
+            );
+            self.created += 1;
+            self.schedule(img.created_ms, Ev::CameraFrame(*img));
+        }
+    }
+
+    /// Kick off UP profile timers for all devices.
+    pub fn start_profile_timers(&mut self) {
+        let ids: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter_map(|n| match n {
+                SimNode::Device(d) => Some(d.id),
+                SimNode::Edge(_) => None,
+            })
+            .collect();
+        for id in ids {
+            self.schedule(self.profile_period_ms, Ev::ProfileTick { node: id });
+        }
+    }
+
+    /// Join handshake for all devices at t=0 (the paper's initial stage).
+    pub fn join_all(&mut self) {
+        let edge = self.topology.edge();
+        let joins: Vec<(NodeId, Message)> = self
+            .nodes
+            .iter()
+            .filter_map(|n| match n {
+                SimNode::Device(d) => Some((d.id, d.join_message())),
+                SimNode::Edge(_) => None,
+            })
+            .collect();
+        for (_from, msg) in joins {
+            // Delivered instantly at t=0 — session setup precedes the run.
+            self.deliver_now(edge, msg);
+        }
+    }
+
+    fn deliver_now(&mut self, to: NodeId, msg: Message) {
+        self.schedule(self.now_ms, Ev::Deliver { to, msg });
+    }
+
+    /// Run until every task resolves or the horizon passes. Returns the
+    /// number of events processed.
+    pub fn run(&mut self) -> u64 {
+        while let Some(Scheduled { at_ms, ev, .. }) = self.heap.pop() {
+            debug_assert!(at_ms + 1e-9 >= self.now_ms);
+            self.now_ms = at_ms;
+            self.events_processed += 1;
+            if self.now_ms > self.horizon_ms {
+                break;
+            }
+            self.handle(ev);
+            if self.created > 0 && self.resolved == self.created {
+                // All workload resolved; drain nothing further.
+                break;
+            }
+        }
+        self.events_processed
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        let mut out = std::mem::take(&mut self.scratch);
+        out.clear();
+        let now = self.now_ms;
+        match ev {
+            Ev::CameraFrame(img) => {
+                let node = img.origin;
+                match &mut self.nodes[node.0 as usize] {
+                    SimNode::Device(d) => d.on_camera_frame(img, now, &mut out),
+                    SimNode::Edge(_) => panic!("camera frame at edge node"),
+                }
+                self.apply(node, out);
+            }
+            Ev::Deliver { to, msg } => {
+                match &mut self.nodes[to.0 as usize] {
+                    SimNode::Device(d) => d.on_message(msg, now, &mut out),
+                    SimNode::Edge(e) => e.on_message(msg, now, &mut out),
+                }
+                self.apply(to, out);
+            }
+            Ev::ContainerDone { node, container, task, process_ms } => {
+                match &mut self.nodes[node.0 as usize] {
+                    SimNode::Device(d) => {
+                        d.on_container_done(container, task, process_ms, now, &mut out)
+                    }
+                    SimNode::Edge(e) => {
+                        e.on_container_done(container, task, process_ms, now, &mut out)
+                    }
+                }
+                self.apply(node, out);
+            }
+            Ev::ProfileTick { node } => {
+                let edge = self.topology.edge();
+                if let SimNode::Device(d) = &mut self.nodes[node.0 as usize] {
+                    let up = d.profile_update(now);
+                    out.push(Action::Send {
+                        to: edge,
+                        msg: Message::Profile(up),
+                        reliable: true,
+                    });
+                }
+                self.apply(node, out);
+                if now + self.profile_period_ms <= self.horizon_ms {
+                    self.schedule(now + self.profile_period_ms, Ev::ProfileTick { node });
+                }
+            }
+            Ev::SetLoad { node, pct } => {
+                match &mut self.nodes[node.0 as usize] {
+                    SimNode::Device(d) => d.pool_mut().set_bg_load(pct),
+                    SimNode::Edge(e) => e.pool_mut().set_bg_load(pct),
+                }
+            }
+        }
+    }
+
+    fn apply(&mut self, from: NodeId, mut actions: Vec<Action>) {
+        for a in actions.drain(..) {
+            match a {
+                Action::Send { to, msg, reliable } => {
+                    let Some(link) = self.topology.link(from, to) else {
+                        log::warn!("no link {from}->{to}; dropping {}", msg.tag());
+                        continue;
+                    };
+                    // UDP-like image pushes may be lost (§III-B).
+                    if !reliable && link.loss_prob > 0.0 && self.rng.chance(link.loss_prob) {
+                        if let Message::Image(img) = &msg {
+                            log::debug!("lost image {} on {from}->{to}", img.task);
+                            self.resolved += 1; // dropped tasks still resolve
+                        }
+                        continue;
+                    }
+                    let at = self.now_ms + link.transfer_ms(msg.wire_kb());
+                    self.schedule(at, Ev::Deliver { to, msg });
+                }
+                Action::ContainerBusyUntil { container, task, at_ms } => {
+                    // Recover process_ms for the record from the pool state.
+                    let process_ms = at_ms - self.now_ms;
+                    self.recorder.started(task, from, self.now_ms);
+                    self.schedule(
+                        at_ms,
+                        Ev::ContainerDone { node: from, container, task, process_ms },
+                    );
+                }
+                Action::RecordPlaced { task, placement } => {
+                    self.recorder.placed(task, placement);
+                }
+                Action::RecordStarted { task, at_ms } => {
+                    self.recorder.started(task, from, at_ms);
+                }
+                Action::RecordCompleted { task, at_ms, process_ms } => {
+                    self.recorder.completed(task, at_ms, process_ms);
+                    self.resolved += 1;
+                }
+            }
+        }
+        // Return the (now empty) buffer for reuse.
+        self.scratch = actions;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::ArrivalPattern;
+use crate::config::WorkloadConfig;
+    use crate::container::ContainerPool;
+    use crate::core::NodeClass;
+    use crate::profile::{profile_for, Predictor};
+    use crate::scheduler::PolicyKind;
+    use crate::sim::workload::ImageStream;
+
+    fn build(policy: PolicyKind, n_images: u32, interval: f64, deadline: f64) -> Engine {
+        let topo = Topology::paper_testbed(4, 2);
+        let edge = EdgeNode::new(
+            NodeId(0),
+            ContainerPool::new(profile_for(NodeClass::EdgeServer), 4),
+            policy.build(1),
+            topo.clone(),
+            200.0,
+        );
+        let mk_dev = |id: u32| {
+            DeviceNode::new(
+                NodeId(id),
+                NodeId(0),
+                ContainerPool::new(profile_for(NodeClass::RaspberryPi), 2),
+                Predictor::new(profile_for(NodeClass::RaspberryPi)),
+                policy.build(1),
+            )
+        };
+        let nodes = vec![
+            SimNode::Edge(edge),
+            SimNode::Device(mk_dev(1)),
+            SimNode::Device(mk_dev(2)),
+        ];
+        let mut eng = Engine::new(nodes, topo, 42, 20.0, 600_000.0);
+        eng.join_all();
+        eng.start_profile_timers();
+        let frames = ImageStream::new(
+            WorkloadConfig {
+                n_images,
+                interval_ms: interval,
+                size_kb: 29.0,
+                size_jitter_kb: 0.0,
+                deadline_ms: deadline,
+                side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+            },
+            NodeId(1),
+            SplitMix64::new(1),
+        )
+        .generate();
+        eng.push_stream(&frames);
+        eng
+    }
+
+    #[test]
+    fn aor_single_image_completes_at_597() {
+        let mut eng = build(PolicyKind::Aor, 1, 100.0, 5000.0);
+        eng.run();
+        let s = eng.recorder.summarize();
+        assert_eq!(s.total, 1);
+        assert_eq!(s.met, 1);
+        let lat = s.latency.unwrap();
+        assert!((lat.mean - 597.0).abs() < 1e-6, "mean={}", lat.mean);
+    }
+
+    #[test]
+    fn aoe_single_image_includes_network() {
+        let mut eng = build(PolicyKind::Aoe, 1, 100.0, 5000.0);
+        eng.run();
+        let s = eng.recorder.summarize();
+        assert_eq!(s.met, 1);
+        let lat = s.latency.unwrap().mean;
+        // transfer out (2 + 29*8/100 = 4.32) + 223 + result back (2.08)
+        assert!((lat - (4.32 + 223.0 + 2.08)).abs() < 1e-6, "lat={lat}");
+    }
+
+    #[test]
+    fn all_tasks_resolve() {
+        for policy in PolicyKind::ALL {
+            let mut eng = build(policy, 50, 50.0, 5000.0);
+            eng.run();
+            let s = eng.recorder.summarize();
+            assert_eq!(s.total, 50, "{policy}");
+            assert_eq!(s.met + s.missed + s.dropped, 50, "{policy}");
+            assert_eq!(s.dropped, 0, "{policy}: lossless network drops nothing");
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let run = |seed| {
+            let mut eng = build(PolicyKind::Dds, 50, 50.0, 2000.0);
+            eng.rng = SplitMix64::new(seed);
+            eng.run();
+            let s = eng.recorder.summarize();
+            (s.met, s.missed, s.dropped)
+        };
+        assert_eq!(run(1), run(1));
+    }
+
+    #[test]
+    fn dds_beats_aor_under_pressure() {
+        // 50 images at 50 ms with a 2 s deadline: a lone RPi falls behind;
+        // DDS must meet strictly more deadlines (paper Fig. 5a shape).
+        let mut aor = build(PolicyKind::Aor, 50, 50.0, 2000.0);
+        aor.run();
+        let mut dds = build(PolicyKind::Dds, 50, 50.0, 2000.0);
+        dds.run();
+        let a = aor.recorder.summarize().met;
+        let d = dds.recorder.summarize().met;
+        assert!(d > a, "dds {d} should beat aor {a}");
+    }
+
+    #[test]
+    fn tight_deadline_unmeetable_by_anyone() {
+        // Below ~200 ms nothing can finish (paper: "when the time
+        // constraint is less than 200 ms, none of the four scheduling
+        // algorithms meet the image processing requirements").
+        for policy in PolicyKind::PAPER {
+            let mut eng = build(policy, 10, 100.0, 150.0);
+            eng.run();
+            assert_eq!(eng.recorder.summarize().met, 0, "{policy}");
+        }
+    }
+
+    #[test]
+    fn horizon_stops_runaway() {
+        let mut eng = build(PolicyKind::Aor, 50, 10.0, 1e9);
+        eng.horizon_ms = 1_000.0;
+        eng.run();
+        assert!(eng.now_ms() <= 1_100.0);
+    }
+}

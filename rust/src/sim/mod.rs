@@ -1,0 +1,19 @@
+//! Virtual-mode execution: a discrete-event simulator over the sans-IO
+//! node state machines.
+//!
+//! Design: the engine owns every node, an event heap keyed by virtual
+//! milliseconds, the network model (latency/bandwidth/loss per link) and
+//! the global [`crate::metrics::Recorder`]. Node handlers return
+//! [`crate::device::Action`]s, which the engine turns into future events —
+//! identical node logic runs under the live socket runtime.
+//!
+//! Determinism: events at equal timestamps are ordered by insertion
+//! sequence; all randomness flows from the scenario seed.
+
+pub mod engine;
+pub mod scenario;
+pub mod workload;
+
+pub use engine::Engine;
+pub use scenario::{RunReport, ScenarioBuilder};
+pub use workload::{ArrivalPattern, ImageStream};

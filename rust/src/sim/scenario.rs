@@ -1,0 +1,314 @@
+//! Scenario assembly: [`SystemConfig`] → engine → [`RunReport`].
+
+use crate::sim::workload::ArrivalPattern;
+use crate::config::{SystemConfig, WorkloadConfig};
+use crate::container::ContainerPool;
+use crate::core::{NodeClass, NodeId};
+use crate::device::DeviceNode;
+use crate::metrics::{RunSummary, TaskRecord};
+use crate::net::Topology;
+use crate::profile::{profile_for, Predictor};
+use crate::scheduler::PolicyKind;
+use crate::server::EdgeNode;
+use crate::sim::engine::{Engine, Ev, SimNode};
+use crate::sim::workload::ImageStream;
+use crate::util::SplitMix64;
+
+/// Outcome of one scenario run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub policy: PolicyKind,
+    pub summary: RunSummary,
+    pub records: Vec<TaskRecord>,
+    pub virtual_ms: f64,
+    pub events: u64,
+    pub wall_us: u128,
+    /// Battery state per battery-powered device at run end:
+    /// (node, remaining %, consumed mWh).
+    pub batteries: Vec<(NodeId, f64, f64)>,
+}
+
+impl RunReport {
+    pub fn met(&self) -> usize {
+        self.summary.met
+    }
+}
+
+/// Builds and runs scenarios. All figure/table benches use this.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    cfg: SystemConfig,
+    /// Background-load schedule: (at_ms, node, pct).
+    load_schedule: Vec<(f64, NodeId, f64)>,
+}
+
+impl ScenarioBuilder {
+    pub fn new(cfg: SystemConfig) -> Self {
+        Self { cfg, load_schedule: Vec::new() }
+    }
+
+    /// The paper's Fig. 4 testbed with a given policy.
+    pub fn paper_testbed(policy: PolicyKind) -> Self {
+        let mut cfg = SystemConfig::default();
+        cfg.policy = policy;
+        Self::new(cfg)
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub fn config_mut(&mut self) -> &mut SystemConfig {
+        &mut self.cfg
+    }
+
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn workload(mut self, wl: WorkloadConfig) -> Self {
+        self.cfg.workload = wl;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Fixed edge-server background CPU load (Fig. 8 stress).
+    pub fn edge_load(mut self, pct: f64) -> Self {
+        self.cfg.edge_cpu_load_pct = pct;
+        self
+    }
+
+    /// Schedule a load change mid-run.
+    pub fn load_at(mut self, at_ms: f64, node: NodeId, pct: f64) -> Self {
+        self.load_schedule.push((at_ms, node, pct));
+        self
+    }
+
+    /// Construct the topology implied by the config.
+    pub fn topology(&self) -> Topology {
+        let link = self.cfg.network.link();
+        let devices: Vec<(NodeClass, u32, bool)> = self
+            .cfg
+            .devices
+            .iter()
+            .map(|d| (d.class, d.warm_containers, d.camera))
+            .collect();
+        let mut topo = Topology::star(self.cfg.edge_warm_containers, &devices, link);
+        for (i, d) in self.cfg.devices.iter().enumerate() {
+            let id = NodeId(1 + i as u32);
+            topo.node_mut(id).cpu_load_pct = d.cpu_load_pct;
+            topo.node_mut(id).location = d.location;
+        }
+        topo
+    }
+
+    /// Build the engine (exposed for tests and custom drivers).
+    pub fn build(&self) -> Engine {
+        let cfg = &self.cfg;
+        let topo = self.topology();
+        let edge_id = topo.edge();
+
+        let mut edge_pool =
+            ContainerPool::new(profile_for(NodeClass::EdgeServer), cfg.edge_warm_containers);
+        edge_pool.set_bg_load(cfg.edge_cpu_load_pct);
+        let edge = EdgeNode::new(
+            edge_id,
+            edge_pool,
+            cfg.policy.build(cfg.seed),
+            topo.clone(),
+            cfg.max_staleness_ms,
+        );
+
+        let mut nodes = vec![SimNode::Edge(edge)];
+        for (i, d) in cfg.devices.iter().enumerate() {
+            let id = NodeId(1 + i as u32);
+            let mut pool = ContainerPool::new(profile_for(d.class), d.warm_containers);
+            pool.set_bg_load(d.cpu_load_pct);
+            let mut node = DeviceNode::new(
+                id,
+                edge_id,
+                pool,
+                Predictor::new(profile_for(d.class)),
+                cfg.policy.build(cfg.seed.wrapping_add(1 + i as u64)),
+            );
+            if d.battery {
+                node = node.with_battery(match d.class {
+                    NodeClass::SmartPhone => crate::energy::Battery::phone(),
+                    _ => crate::energy::Battery::rpi(),
+                });
+            }
+            nodes.push(SimNode::Device(node));
+        }
+
+        // Horizon: generously past the last arrival plus queue drain time.
+        let wl = &cfg.workload;
+        let span = wl.n_images as f64 * wl.interval_ms;
+        let horizon = span + wl.deadline_ms.max(1_000.0) * 20.0 + 600_000.0;
+
+        let mut eng = Engine::new(nodes, topo, cfg.seed, cfg.profile_period_ms, horizon);
+        eng.join_all();
+        eng.start_profile_timers();
+
+        // Stream originates at the first camera device.
+        let camera = self
+            .cfg
+            .devices
+            .iter()
+            .position(|d| d.camera)
+            .map(|i| NodeId(1 + i as u32))
+            .expect("validated config has a camera");
+        let frames = ImageStream::new(*wl, camera, SplitMix64::new(cfg.seed ^ 0xFEED))
+            .pattern(wl.pattern)
+            .generate();
+        eng.push_stream(&frames);
+
+        for &(at, node, pct) in &self.load_schedule {
+            eng.schedule(at, Ev::SetLoad { node, pct });
+        }
+        eng
+    }
+
+    /// Build, run, and report.
+    pub fn run(&self) -> RunReport {
+        let start = std::time::Instant::now();
+        let mut eng = self.build();
+        let events = eng.run();
+        RunReport {
+            policy: self.cfg.policy,
+            summary: eng.recorder.summarize(),
+            records: eng.recorder.records(),
+            virtual_ms: eng.now_ms(),
+            events,
+            wall_us: start.elapsed().as_micros(),
+            batteries: eng.battery_report(),
+        }
+    }
+
+    /// Run the same scenario under several policies.
+    pub fn sweep_policies(&self, policies: &[PolicyKind]) -> Vec<RunReport> {
+        policies
+            .iter()
+            .map(|&p| self.clone().policy(p).run())
+            .collect()
+    }
+
+    /// Run a deadline sweep for one policy: returns (deadline, met).
+    pub fn sweep_deadlines(&self, deadlines_ms: &[f64]) -> Vec<(f64, usize)> {
+        deadlines_ms
+            .iter()
+            .map(|&d| {
+                let mut b = self.clone();
+                b.cfg.workload.deadline_ms = d;
+                (d, b.run().met())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(n: u32, interval: f64, deadline: f64) -> WorkloadConfig {
+        WorkloadConfig {
+            n_images: n,
+            interval_ms: interval,
+            size_kb: 29.0,
+            size_jitter_kb: 0.0,
+            deadline_ms: deadline,
+            side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+        }
+    }
+
+    #[test]
+    fn paper_testbed_runs_all_policies() {
+        for policy in PolicyKind::PAPER {
+            let r = ScenarioBuilder::paper_testbed(policy)
+                .workload(wl(50, 100.0, 5000.0))
+                .run();
+            assert_eq!(r.summary.total, 50);
+            assert_eq!(r.policy, policy);
+            assert!(r.virtual_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn reports_are_deterministic() {
+        let mk = || {
+            ScenarioBuilder::paper_testbed(PolicyKind::Dds)
+                .workload(wl(100, 50.0, 2000.0))
+                .seed(7)
+                .run()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.summary.met, b.summary.met);
+        assert_eq!(a.summary.missed, b.summary.missed);
+        assert_eq!(a.virtual_ms, b.virtual_ms);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn deadline_sweep_monotone_for_static_policies() {
+        // AOE/AOR/EODS placement ignores the deadline, so met counts must
+        // be monotone in it. (DDS is deliberately NOT monotone — §V.B.2 of
+        // the paper: loose constraints make the device hoard images
+        // locally, growing its queue; see `dds_hoards_under_loose_deadlines`.)
+        for policy in [PolicyKind::Aoe, PolicyKind::Aor, PolicyKind::Eods] {
+            let sweep = ScenarioBuilder::paper_testbed(policy)
+                .workload(wl(50, 100.0, 0.0))
+                .sweep_deadlines(&[500.0, 1000.0, 2000.0, 5000.0, 10_000.0]);
+            for w in sweep.windows(2) {
+                assert!(w[1].1 >= w[0].1, "{policy}: met must rise: {sweep:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dds_hoards_under_loose_deadlines() {
+        // The paper's Fig. 6 observation, reproduced: between a moderate
+        // and a very loose constraint, DDS keeps more images local.
+        let moderate = ScenarioBuilder::paper_testbed(PolicyKind::Dds)
+            .workload(wl(50, 100.0, 1_000.0))
+            .run();
+        let loose = ScenarioBuilder::paper_testbed(PolicyKind::Dds)
+            .workload(wl(50, 100.0, 60_000.0))
+            .run();
+        assert!(
+            loose.summary.local_fraction > moderate.summary.local_fraction,
+            "loose {} vs moderate {}",
+            loose.summary.local_fraction,
+            moderate.summary.local_fraction
+        );
+    }
+
+    #[test]
+    fn load_schedule_applies() {
+        // 100% edge load slows AOE processing (Fig. 7: 223 → 374 ms).
+        let base = ScenarioBuilder::paper_testbed(PolicyKind::Aoe)
+            .workload(wl(1, 100.0, 5000.0))
+            .run();
+        let loaded = ScenarioBuilder::paper_testbed(PolicyKind::Aoe)
+            .workload(wl(1, 100.0, 5000.0))
+            .edge_load(100.0)
+            .run();
+        let lb = base.summary.latency.unwrap().mean;
+        let ll = loaded.summary.latency.unwrap().mean;
+        assert!(ll > lb + 100.0, "loaded {ll} vs base {lb}");
+    }
+
+    #[test]
+    fn policy_sweep_covers_all() {
+        let reports = ScenarioBuilder::paper_testbed(PolicyKind::Dds)
+            .workload(wl(20, 100.0, 3000.0))
+            .sweep_policies(&PolicyKind::PAPER);
+        assert_eq!(reports.len(), 4);
+        let names: Vec<_> = reports.iter().map(|r| r.policy).collect();
+        assert_eq!(names, PolicyKind::PAPER.to_vec());
+    }
+}

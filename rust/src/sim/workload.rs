@@ -1,0 +1,218 @@
+//! Workload generation: the paper's buffer module streaming images from
+//! the camera device at a fixed interval, plus arrival-process extensions
+//! for the "dynamic environment" the paper motivates (Poisson traffic,
+//! event-driven bursts).
+
+use crate::config::WorkloadConfig;
+use crate::core::{Constraint, ImageMeta, NodeId, TaskId};
+use crate::util::SplitMix64;
+
+/// How image arrivals are spaced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Fixed spacing `interval_ms` (the paper's buffer module).
+    Uniform,
+    /// Exponential gaps with mean `interval_ms` (Poisson process) — open-
+    /// loop traffic from uncoordinated users.
+    Poisson,
+    /// Bursts of `burst` back-to-back frames (1 ms apart), bursts spaced so
+    /// the long-run rate matches `interval_ms` — motion-triggered cameras.
+    Bursty { burst: u32 },
+}
+
+impl ArrivalPattern {
+    pub fn parse(s: &str) -> Option<ArrivalPattern> {
+        match s {
+            "uniform" => Some(ArrivalPattern::Uniform),
+            "poisson" => Some(ArrivalPattern::Poisson),
+            _ => s
+                .strip_prefix("bursty:")
+                .and_then(|n| n.parse().ok())
+                .map(|burst| ArrivalPattern::Bursty { burst }),
+        }
+    }
+}
+
+/// A deterministic stream of image tasks.
+#[derive(Debug, Clone)]
+pub struct ImageStream {
+    cfg: WorkloadConfig,
+    origin: NodeId,
+    rng: SplitMix64,
+    next_seq: u64,
+    start_ms: f64,
+    pattern: ArrivalPattern,
+}
+
+impl ImageStream {
+    pub fn new(cfg: WorkloadConfig, origin: NodeId, rng: SplitMix64) -> Self {
+        Self { cfg, origin, rng, next_seq: 0, start_ms: 0.0, pattern: ArrivalPattern::Uniform }
+    }
+
+    /// Offset all arrivals by `start_ms` (e.g. session establishment time).
+    pub fn starting_at(mut self, start_ms: f64) -> Self {
+        self.start_ms = start_ms;
+        self
+    }
+
+    /// Choose an arrival process (default uniform).
+    pub fn pattern(mut self, pattern: ArrivalPattern) -> Self {
+        self.pattern = pattern;
+        self
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.cfg.n_images - self.next_seq as u32
+    }
+
+    fn arrival_times(&mut self) -> Vec<f64> {
+        let n = self.cfg.n_images as usize;
+        let i = self.cfg.interval_ms;
+        let mut times = Vec::with_capacity(n);
+        match self.pattern {
+            ArrivalPattern::Uniform => {
+                for k in 0..n {
+                    times.push(k as f64 * i);
+                }
+            }
+            ArrivalPattern::Poisson => {
+                // Exponential inter-arrival gaps with mean `interval_ms`.
+                let mut t = 0.0;
+                for _ in 0..n {
+                    times.push(t);
+                    let u = self.rng.uniform().max(1e-12);
+                    t += -i * u.ln();
+                }
+            }
+            ArrivalPattern::Bursty { burst } => {
+                let burst = burst.max(1) as usize;
+                // Long-run rate preserved: each burst of b frames occupies
+                // the window b * interval.
+                let mut t = 0.0;
+                let mut in_burst = 0;
+                for _ in 0..n {
+                    times.push(t + in_burst as f64 * 1.0);
+                    in_burst += 1;
+                    if in_burst == burst {
+                        in_burst = 0;
+                        t += burst as f64 * i;
+                    }
+                }
+            }
+        }
+        times
+    }
+
+    /// Generate the full stream. Sizes are uniform in
+    /// `size_kb ± size_jitter_kb` (the paper streams one fixed test image;
+    /// jitter is an extension used by the size-sweep benches).
+    pub fn generate(mut self) -> Vec<ImageMeta> {
+        let times = self.arrival_times();
+        let mut out = Vec::with_capacity(self.cfg.n_images as usize);
+        for (seq, &t) in times.iter().enumerate() {
+            let seq = seq as u64;
+            let jitter = if self.cfg.size_jitter_kb > 0.0 {
+                self.rng.range(-self.cfg.size_jitter_kb, self.cfg.size_jitter_kb)
+            } else {
+                0.0
+            };
+            out.push(ImageMeta {
+                task: TaskId(seq),
+                origin: self.origin,
+                size_kb: (self.cfg.size_kb + jitter).max(1.0),
+                side_px: self.cfg.side_px,
+                created_ms: self.start_ms + t,
+                constraint: Constraint::deadline(self.cfg.deadline_ms),
+                seq,
+            });
+        }
+        self.next_seq = self.cfg.n_images as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: u32, interval: f64) -> WorkloadConfig {
+        WorkloadConfig {
+            n_images: n,
+            interval_ms: interval,
+            size_kb: 29.0,
+            size_jitter_kb: 0.0,
+            deadline_ms: 5000.0,
+            side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+        }
+    }
+
+    #[test]
+    fn arrivals_evenly_spaced() {
+        let s = ImageStream::new(cfg(5, 100.0), NodeId(1), SplitMix64::new(1));
+        let imgs = s.generate();
+        assert_eq!(imgs.len(), 5);
+        for (i, img) in imgs.iter().enumerate() {
+            assert_eq!(img.created_ms, i as f64 * 100.0);
+            assert_eq!(img.seq, i as u64);
+            assert_eq!(img.size_kb, 29.0);
+        }
+    }
+
+    #[test]
+    fn start_offset_applies() {
+        let s = ImageStream::new(cfg(2, 50.0), NodeId(1), SplitMix64::new(1)).starting_at(10.0);
+        let imgs = s.generate();
+        assert_eq!(imgs[0].created_ms, 10.0);
+        assert_eq!(imgs[1].created_ms, 60.0);
+    }
+
+    #[test]
+    fn poisson_mean_rate_close() {
+        let s = ImageStream::new(cfg(2000, 50.0), NodeId(1), SplitMix64::new(3))
+            .pattern(ArrivalPattern::Poisson);
+        let imgs = s.generate();
+        let span = imgs.last().unwrap().created_ms;
+        let mean_gap = span / (imgs.len() - 1) as f64;
+        assert!((mean_gap - 50.0).abs() < 5.0, "mean gap {mean_gap}");
+        // Arrival times are sorted.
+        assert!(imgs.windows(2).all(|w| w[1].created_ms >= w[0].created_ms));
+    }
+
+    #[test]
+    fn bursty_preserves_long_run_rate() {
+        let s = ImageStream::new(cfg(100, 50.0), NodeId(1), SplitMix64::new(3))
+            .pattern(ArrivalPattern::Bursty { burst: 10 });
+        let imgs = s.generate();
+        // First 10 frames within ~10 ms of each other; next burst 500 ms on.
+        assert!(imgs[9].created_ms - imgs[0].created_ms < 20.0);
+        assert!((imgs[10].created_ms - 500.0).abs() < 1e-9);
+        // Long-run rate ≈ uniform's.
+        assert!((imgs.last().unwrap().created_ms - 4509.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(ArrivalPattern::parse("uniform"), Some(ArrivalPattern::Uniform));
+        assert_eq!(ArrivalPattern::parse("poisson"), Some(ArrivalPattern::Poisson));
+        assert_eq!(
+            ArrivalPattern::parse("bursty:8"),
+            Some(ArrivalPattern::Bursty { burst: 8 })
+        );
+        assert_eq!(ArrivalPattern::parse("bursty:x"), None);
+        assert_eq!(ArrivalPattern::parse("nope"), None);
+    }
+
+    #[test]
+    fn jitter_bounded_and_deterministic() {
+        let mut c = cfg(100, 50.0);
+        c.size_jitter_kb = 10.0;
+        let a = ImageStream::new(c, NodeId(1), SplitMix64::new(7)).generate();
+        let b = ImageStream::new(c, NodeId(1), SplitMix64::new(7)).generate();
+        assert_eq!(a, b);
+        for img in &a {
+            assert!(img.size_kb >= 19.0 && img.size_kb <= 39.0);
+        }
+        assert!(a.iter().any(|i| i.size_kb != 29.0));
+    }
+}

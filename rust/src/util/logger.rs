@@ -1,0 +1,62 @@
+//! Minimal `log` facade backend (env_logger is not in the offline crate set).
+//!
+//! Level comes from `EDGE_DDS_LOG` (error|warn|info|debug|trace), default
+//! `info`. Install once with [`init`]; later calls are no-ops.
+
+use std::io::Write;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:5} {}] {}",
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceCell<StderrLogger> = OnceCell::new();
+
+/// Install the stderr logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("EDGE_DDS_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { max: level });
+    // set_logger fails if already set (e.g. by a test harness) — fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(LevelFilter::Trace.min(level.to_level_filter()));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,13 @@
+//! Small shared utilities: deterministic PRNG, statistics, logging.
+//!
+//! The offline crate set has no `rand`/`env_logger`; these hand-rolled
+//! equivalents are deliberately tiny and fully deterministic (reproducible
+//! experiments are a deliverable — every figure regenerates bit-identically
+//! for a given config seed).
+
+pub mod logger;
+pub mod rng;
+pub mod stats;
+
+pub use rng::SplitMix64;
+pub use stats::Summary;

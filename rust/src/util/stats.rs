@@ -1,0 +1,133 @@
+//! Descriptive statistics over latency samples (no external deps).
+
+/// Summary statistics of a sample set (milliseconds, typically).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Some(Summary {
+            count: n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        })
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Linear interpolation over (x, y) breakpoints; clamps outside the domain
+/// unless `extrapolate`, in which case the edge segment's slope continues.
+///
+/// The profile models (contention, CPU-load factor) are piecewise-linear
+/// fits of the paper's measured tables — this is their evaluator.
+pub fn interp(points: &[(f64, f64)], x: f64, extrapolate: bool) -> f64 {
+    assert!(points.len() >= 2, "need at least two breakpoints");
+    debug_assert!(points.windows(2).all(|w| w[0].0 < w[1].0), "x must ascend");
+    let (x0, y0) = points[0];
+    let (xn, yn) = points[points.len() - 1];
+    if x <= x0 {
+        if extrapolate {
+            let (x1, y1) = points[1];
+            return y0 + (x - x0) * (y1 - y0) / (x1 - x0);
+        }
+        return y0;
+    }
+    if x >= xn {
+        if extrapolate {
+            let (xm, ym) = points[points.len() - 2];
+            return yn + (x - xn) * (yn - ym) / (xn - xm);
+        }
+        return yn;
+    }
+    for w in points.windows(2) {
+        let ((xa, ya), (xb, yb)) = (w[0], w[1]);
+        if x >= xa && x <= xb {
+            return ya + (x - xa) * (yb - ya) / (xb - xa);
+        }
+    }
+    unreachable!("x within domain but no segment matched")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[5.0]).unwrap();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 5.0);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&v, 50.0), 50.0);
+        assert_eq!(percentile_sorted(&v, 90.0), 90.0);
+        assert_eq!(percentile_sorted(&v, 99.0), 99.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 100.0);
+    }
+
+    #[test]
+    fn interp_within_and_clamped() {
+        let pts = [(0.0, 1.0), (50.0, 2.0), (100.0, 4.0)];
+        assert_eq!(interp(&pts, 0.0, false), 1.0);
+        assert_eq!(interp(&pts, 25.0, false), 1.5);
+        assert_eq!(interp(&pts, 75.0, false), 3.0);
+        assert_eq!(interp(&pts, 200.0, false), 4.0); // clamped
+    }
+
+    #[test]
+    fn interp_extrapolates_edge_slope() {
+        let pts = [(0.0, 0.0), (1.0, 1.0)];
+        assert_eq!(interp(&pts, 3.0, true), 3.0);
+        assert_eq!(interp(&pts, -1.0, true), -1.0);
+    }
+}

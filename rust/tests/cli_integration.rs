@@ -1,0 +1,125 @@
+//! Integration: the `edge-dds` CLI binary (spawned as a subprocess).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_edge-dds"))
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = bin().arg("help").output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("repro"));
+}
+
+#[test]
+fn sim_runs_and_emits_json() {
+    let out = bin()
+        .args(["sim", "--policy", "dds", "--images", "20", "--interval", "50", "--deadline", "3000"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains(r#""name":"dds""#));
+    assert!(text.contains(r#""total":20"#));
+}
+
+#[test]
+fn sweep_covers_paper_policies() {
+    let out = bin()
+        .args(["sweep", "--images", "10", "--interval", "100", "--deadline", "5000"])
+        .output()
+        .expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for p in ["aor", "aoe", "eods", "dds"] {
+        assert!(text.contains(&format!(r#""name":"{p}""#)), "missing {p}");
+    }
+}
+
+#[test]
+fn repro_table2_matches_paper() {
+    let out = bin().args(["repro", "--exp", "table2"]).output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Table II"));
+    assert!(text.contains("223.0"));
+    assert!(text.contains("1163.0"));
+}
+
+#[test]
+fn repro_fig7_matches_paper() {
+    let out = bin().args(["repro", "--exp", "fig7"]).output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("374"));
+}
+
+#[test]
+fn unknown_flags_and_commands_fail_cleanly() {
+    let out = bin().arg("frobnicate").output().expect("run");
+    assert!(!out.status.success());
+    let out = bin().args(["sim", "--images"]).output().expect("run");
+    assert!(!out.status.success());
+    let out = bin().args(["repro", "--exp", "fig99"]).output().expect("run");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn sim_writes_csv() {
+    let dir = std::env::temp_dir().join("edge_dds_cli_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("out.csv");
+    let out = bin()
+        .args([
+            "sim", "--policy", "eods", "--images", "8", "--interval", "100", "--deadline", "5000",
+            "--csv",
+        ])
+        .arg(&path)
+        .output()
+        .expect("run");
+    assert!(out.status.success());
+    let csv = std::fs::read_to_string(&path).expect("csv written");
+    assert!(csv.starts_with("task,"));
+    assert_eq!(csv.lines().count(), 9); // header + 8 tasks
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_file_roundtrip() {
+    let dir = std::env::temp_dir().join("edge_dds_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        r#"
+[run]
+seed = 9
+policy = "eods"
+
+[workload]
+n_images = 15
+interval_ms = 100
+deadline_ms = 4000
+
+[[device]]
+class = "rpi"
+warm_containers = 2
+camera = true
+
+[[device]]
+class = "rpi"
+warm_containers = 2
+"#,
+    )
+    .unwrap();
+    let out = bin().args(["sim", "--config"]).arg(&path).output().expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains(r#""name":"eods""#));
+    assert!(text.contains(r#""total":15"#));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,83 @@
+//! Integration: the live socket deployment (threads + TCP + PJRT).
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use std::time::Duration;
+
+use edge_dds::sim::ArrivalPattern;
+use edge_dds::config::{SystemConfig, WorkloadConfig};
+use edge_dds::core::NodeId;
+use edge_dds::live::LiveCluster;
+use edge_dds::runtime::RuntimeService;
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::ImageStream;
+use edge_dds::util::SplitMix64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("face_64.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn small_workload(n: u32) -> WorkloadConfig {
+    WorkloadConfig {
+        n_images: n,
+        interval_ms: 40.0,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms: 10_000.0,
+        side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+    }
+}
+
+#[test]
+fn live_cluster_serves_stream_dds() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    cfg.workload = small_workload(12);
+
+    let cluster =
+        LiveCluster::start(&cfg, RuntimeService::spawn(&dir).expect("spawn")).expect("start");
+    std::thread::sleep(Duration::from_millis(300)); // joins + profiles settle
+
+    let frames = ImageStream::new(cfg.workload, NodeId(1), SplitMix64::new(5)).generate();
+    cluster.stream(frames).expect("stream");
+    let summary = cluster.wait(Duration::from_secs(90));
+    cluster.shutdown();
+
+    assert_eq!(summary.total, 12);
+    assert_eq!(summary.met + summary.missed + summary.dropped, 12);
+    // Localhost + 64px model (a few ms per image): everything should land
+    // well inside 10 s.
+    assert!(summary.met >= 10, "live met {}/12", summary.met);
+    let lat = summary.latency.expect("completed tasks");
+    assert!(lat.mean > 0.0 && lat.mean < 10_000.0);
+    let proc = summary.process.expect("process times recorded");
+    assert!(proc.mean > 0.0, "PJRT execution must take measurable time");
+}
+
+#[test]
+fn live_cluster_aoe_routes_to_edge() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Aoe;
+    cfg.workload = small_workload(6);
+
+    let cluster =
+        LiveCluster::start(&cfg, RuntimeService::spawn(&dir).expect("spawn")).expect("start");
+    std::thread::sleep(Duration::from_millis(300));
+    let frames = ImageStream::new(cfg.workload, NodeId(1), SplitMix64::new(6)).generate();
+    cluster.stream(frames).expect("stream");
+    let summary = cluster.wait(Duration::from_secs(60));
+    cluster.shutdown();
+
+    assert_eq!(summary.total, 6);
+    assert!(summary.met >= 5, "AOE on localhost should meet ~all: {}", summary.met);
+    // AOE executes everything at the edge → local fraction 0.
+    assert_eq!(summary.local_fraction, 0.0);
+}

@@ -1,0 +1,101 @@
+//! Integration: the PJRT runtime against real AOT artifacts.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! visible message) if `artifacts/` is absent so `cargo test` stays green
+//! on a fresh checkout.
+
+use edge_dds::runtime::{ModelRuntime, RuntimeService};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("face_64.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn loads_and_compiles_all_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+    assert!(rt.variant_count() >= 3, "expected 64/128/256 variants");
+    assert_eq!(rt.sides(), vec![64, 128, 256]);
+}
+
+#[test]
+fn detect_shapes_and_determinism() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+    let img = ModelRuntime::synth_image(64, 7);
+    let a = rt.detect(64, &img).expect("detect");
+    let b = rt.detect(64, &img).expect("detect");
+    assert_eq!(a, b, "PJRT execution must be deterministic");
+    assert_eq!(a.counts.len(), 4);
+    assert_eq!(a.hist.len(), 16);
+    // 64 px → 2 pyramid levels; unused level counts must be zero.
+    assert_eq!(a.counts[2], 0.0);
+    assert_eq!(a.counts[3], 0.0);
+    // Histogram total equals total survivors (model invariant).
+    let hist_sum: f32 = a.hist.iter().sum();
+    assert!((hist_sum - a.total()).abs() < 1e-3, "hist {hist_sum} vs counts {}", a.total());
+}
+
+#[test]
+fn detect_rejects_bad_input() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+    assert!(rt.detect(64, &[0.0; 7]).is_err(), "wrong pixel count");
+    assert!(rt.detect(96, &ModelRuntime::synth_image(96, 0)).is_err(), "unknown side");
+}
+
+#[test]
+fn pick_side_prefers_fitting_variant() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+    assert_eq!(rt.pick_side(64), 64);
+    assert_eq!(rt.pick_side(100), 128);
+    assert_eq!(rt.pick_side(999), 256);
+    assert_eq!(rt.pick_side(1), 64);
+}
+
+#[test]
+fn bigger_images_do_more_work() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+    // Time 3 runs each; the 256 variant must be slower than the 64 one
+    // (Table II's size→runtime effect on the real compute path).
+    let time = |side: u32| {
+        let img = ModelRuntime::synth_image(side, 1);
+        (0..3)
+            .map(|_| rt.detect_timed(side, &img).expect("detect").1)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let t64 = time(64);
+    let t256 = time(256);
+    assert!(
+        t256 > 2.0 * t64,
+        "256 px ({t256:.1} ms) should be well above 64 px ({t64:.1} ms)"
+    );
+}
+
+#[test]
+fn runtime_service_concurrent_clients() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::spawn(&dir).expect("spawn service");
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let (det, ms) = svc.detect_synth(64, i).expect("detect");
+            assert!(ms > 0.0);
+            det
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Different seeds ⇒ (almost surely) different detections; same seed
+    // re-run matches.
+    let (again, _ms) = svc.detect_synth(64, 0).expect("detect");
+    assert_eq!(results[0], again);
+}

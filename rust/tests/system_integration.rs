@@ -1,0 +1,408 @@
+//! Whole-system integration tests over the virtual engine: cross-module
+//! behaviour, paper-shape assertions, failure injection, and property-style
+//! randomized invariants (proptest is not in the offline crate set — cases
+//! are generated with the deterministic SplitMix64 PRNG and failures print
+//! the offending seed).
+
+use edge_dds::sim::ArrivalPattern;
+use edge_dds::config::{DeviceConfig, SystemConfig, WorkloadConfig};
+use edge_dds::core::{NodeClass, NodeId, Placement, Verdict};
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::ScenarioBuilder;
+use edge_dds::util::SplitMix64;
+
+fn wl(n: u32, interval: f64, deadline: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        n_images: n,
+        interval_ms: interval,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms: deadline,
+        side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Paper-shape assertions (Figs. 5/6/8 headline claims).
+// ---------------------------------------------------------------------
+
+#[test]
+fn distributed_beats_single_node_under_pressure() {
+    // 50 imgs @50 ms, 2 s deadline (Fig. 5a regime).
+    let b = ScenarioBuilder::paper_testbed(PolicyKind::Dds).workload(wl(50, 50.0, 2_000.0));
+    let met = |p: PolicyKind| b.clone().policy(p).run().met();
+    let (aor, aoe, eods, dds) = (
+        met(PolicyKind::Aor),
+        met(PolicyKind::Aoe),
+        met(PolicyKind::Eods),
+        met(PolicyKind::Dds),
+    );
+    assert!(dds > aor, "dds {dds} vs aor {aor}");
+    assert!(eods > aor, "eods {eods} vs aor {aor}");
+    assert!(aoe >= aor, "aoe {aoe} vs aor {aor}");
+}
+
+#[test]
+fn min_feasible_constraint_about_200ms() {
+    // The paper: below ~200 ms nothing is schedulable; at 500 ms the edge
+    // can already serve some images.
+    let b = ScenarioBuilder::paper_testbed(PolicyKind::Aoe).workload(wl(10, 500.0, 150.0));
+    assert_eq!(b.run().met(), 0);
+    let b = ScenarioBuilder::paper_testbed(PolicyKind::Aoe).workload(wl(10, 500.0, 500.0));
+    assert!(b.run().met() > 0);
+}
+
+#[test]
+fn adding_r2_improves_dds() {
+    let wl1 = wl(500, 50.0, 5_000.0);
+    let mut solo = SystemConfig::default();
+    solo.policy = PolicyKind::Dds;
+    solo.devices.truncate(1);
+    let base = ScenarioBuilder::new(solo).workload(wl1).run().met();
+    let ext = ScenarioBuilder::paper_testbed(PolicyKind::Dds).workload(wl1).run().met();
+    assert!(ext > base, "R2 must raise met count: {ext} vs {base}");
+}
+
+#[test]
+fn edge_load_degrades_throughput() {
+    let wl1 = wl(300, 50.0, 5_000.0);
+    let unloaded = ScenarioBuilder::paper_testbed(PolicyKind::Dds).workload(wl1).run().met();
+    let loaded = ScenarioBuilder::paper_testbed(PolicyKind::Dds)
+        .workload(wl1)
+        .edge_load(100.0)
+        .run()
+        .met();
+    assert!(loaded <= unloaded, "load can't help: {loaded} vs {unloaded}");
+}
+
+// ---------------------------------------------------------------------
+// Failure injection.
+// ---------------------------------------------------------------------
+
+#[test]
+fn udp_loss_drops_tasks_but_never_wedges() {
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Aoe; // every image crosses the lossy link
+    cfg.network.loss_prob = 0.2;
+    cfg.workload = wl(200, 50.0, 5_000.0);
+    let r = ScenarioBuilder::new(cfg).run();
+    assert_eq!(r.summary.total, 200);
+    assert!(r.summary.dropped > 10, "20% loss must drop tasks: {}", r.summary.dropped);
+    assert!(r.summary.dropped < 100, "loss rate should be ~20%: {}", r.summary.dropped);
+    assert_eq!(
+        r.summary.met + r.summary.missed + r.summary.dropped,
+        200,
+        "conservation of tasks"
+    );
+}
+
+#[test]
+fn full_loss_drops_everything_forwarded() {
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Aoe;
+    cfg.network.loss_prob = 1.0;
+    cfg.workload = wl(20, 50.0, 5_000.0);
+    let r = ScenarioBuilder::new(cfg).run();
+    assert_eq!(r.summary.dropped, 20);
+    assert_eq!(r.summary.met, 0);
+}
+
+#[test]
+fn heterogeneous_devices_still_schedulable() {
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    cfg.devices = vec![
+        DeviceConfig {
+            class: NodeClass::RaspberryPi,
+            warm_containers: 1,
+            camera: true,
+            cpu_load_pct: 50.0,
+            location: (1.0, 0.0),
+            battery: false,
+        },
+        DeviceConfig {
+            class: NodeClass::SmartPhone,
+            warm_containers: 2,
+            camera: false,
+            cpu_load_pct: 0.0,
+            location: (2.0, 0.0),
+            battery: false,
+        },
+        DeviceConfig {
+            class: NodeClass::RaspberryPi,
+            warm_containers: 3,
+            camera: false,
+            cpu_load_pct: 25.0,
+            location: (3.0, 0.0),
+            battery: false,
+        },
+    ];
+    cfg.workload = wl(100, 50.0, 5_000.0);
+    let r = ScenarioBuilder::new(cfg).run();
+    assert_eq!(r.summary.total, 100);
+    assert!(r.summary.met > 50, "heterogeneous cluster should serve most: {}", r.summary.met);
+}
+
+// ---------------------------------------------------------------------
+// Property-style randomized invariants.
+// ---------------------------------------------------------------------
+
+/// Every task is created exactly once and ends in exactly one verdict;
+/// completed tasks have consistent timestamps; placements are legal.
+#[test]
+fn prop_task_conservation_and_timestamps() {
+    let mut rng = SplitMix64::new(0xE2E);
+    for case in 0..25 {
+        let seed = rng.next_u64();
+        let policy = PolicyKind::ALL[rng.choice_index(PolicyKind::ALL.len())];
+        let n = 20 + rng.randint(0, 80) as u32;
+        let interval = [20.0, 50.0, 100.0, 250.0][rng.choice_index(4)];
+        let deadline = [300.0, 1_000.0, 5_000.0, 30_000.0][rng.choice_index(4)];
+        let loss = [0.0, 0.0, 0.05][rng.choice_index(3)];
+
+        let mut cfg = SystemConfig::default();
+        cfg.policy = policy;
+        cfg.seed = seed;
+        cfg.network.loss_prob = loss;
+        cfg.workload = wl(n, interval, deadline);
+        let r = ScenarioBuilder::new(cfg).run();
+        let ctx = format!("case {case}: seed={seed} policy={policy} n={n} interval={interval} deadline={deadline} loss={loss}");
+
+        assert_eq!(r.summary.total, n as usize, "{ctx}");
+        assert_eq!(
+            r.summary.met + r.summary.missed + r.summary.dropped,
+            n as usize,
+            "{ctx}"
+        );
+        assert_eq!(r.records.len(), n as usize, "{ctx}");
+        for rec in &r.records {
+            match rec.verdict {
+                Verdict::Met | Verdict::Missed => {
+                    let done = rec.completed_ms.expect("completed has timestamp");
+                    assert!(done >= rec.created_ms, "{ctx}: time goes forward");
+                    let started = rec.started_ms.expect("completed has start");
+                    assert!(started + 1e-9 >= rec.created_ms, "{ctx}");
+                    assert!(rec.process_ms.unwrap() > 0.0, "{ctx}");
+                    let e2e = rec.e2e_ms().unwrap();
+                    match rec.verdict {
+                        Verdict::Met => assert!(e2e <= rec.deadline_ms + 1e-9, "{ctx}"),
+                        Verdict::Missed => assert!(e2e > rec.deadline_ms, "{ctx}"),
+                        _ => unreachable!(),
+                    }
+                }
+                Verdict::Dropped => {
+                    assert!(loss > 0.0, "{ctx}: lossless nets must not drop");
+                }
+            }
+            // Legal placements only.
+            match rec.placement {
+                Placement::Local | Placement::ToEdge => {}
+                Placement::Offload(node) => {
+                    assert_ne!(node, rec.origin, "{ctx}: offload target != origin");
+                    assert_ne!(node, NodeId(0), "{ctx}: offload target is a device");
+                }
+            }
+        }
+    }
+}
+
+/// AOR must never execute anywhere but the origin; AOE never at it.
+#[test]
+fn prop_policy_placement_contracts() {
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    for _ in 0..10 {
+        let n = 10 + rng.randint(0, 40) as u32;
+        let interval = [20.0, 100.0][rng.choice_index(2)];
+        let b = ScenarioBuilder::paper_testbed(PolicyKind::Aor)
+            .workload(wl(n, interval, 10_000.0))
+            .seed(rng.next_u64());
+        for rec in b.run().records {
+            assert_eq!(rec.executed_on, Some(rec.origin), "AOR stays local");
+        }
+        let b = ScenarioBuilder::paper_testbed(PolicyKind::Aoe)
+            .workload(wl(n, interval, 10_000.0))
+            .seed(rng.next_u64());
+        for rec in b.run().records {
+            assert_eq!(rec.executed_on, Some(NodeId(0)), "AOE runs at the edge");
+        }
+    }
+}
+
+/// EODS: odd sequence numbers stay at the origin, even go to the edge.
+#[test]
+fn prop_eods_parity() {
+    let b = ScenarioBuilder::paper_testbed(PolicyKind::Eods).workload(wl(40, 100.0, 60_000.0));
+    for rec in b.run().records {
+        let expect = if rec.task.0 % 2 == 1 { Some(rec.origin) } else { Some(NodeId(0)) };
+        assert_eq!(rec.executed_on, expect, "task {}", rec.task.0);
+    }
+}
+
+/// Determinism: identical configs produce identical record streams.
+#[test]
+fn prop_bitwise_determinism() {
+    let mut rng = SplitMix64::new(77);
+    for _ in 0..5 {
+        let seed = rng.next_u64();
+        let policy = PolicyKind::ALL[rng.choice_index(PolicyKind::ALL.len())];
+        let mk = || {
+            let mut cfg = SystemConfig::default();
+            cfg.policy = policy;
+            cfg.seed = seed;
+            cfg.network.loss_prob = 0.05;
+            cfg.workload = wl(60, 50.0, 3_000.0);
+            ScenarioBuilder::new(cfg).run()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.records.len(), b.records.len());
+        for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!(ra, rb, "seed {seed} policy {policy}");
+        }
+    }
+}
+
+/// The engine never goes back in time and never loses events.
+#[test]
+fn prop_virtual_time_monotone() {
+    let mut rng = SplitMix64::new(123);
+    for _ in 0..10 {
+        let mut cfg = SystemConfig::default();
+        cfg.policy = PolicyKind::Dds;
+        cfg.seed = rng.next_u64();
+        cfg.workload = wl(50, 30.0, 2_000.0);
+        let r = ScenarioBuilder::new(cfg).run();
+        assert!(r.virtual_ms.is_finite() && r.virtual_ms >= 0.0);
+        assert!(r.events > 0);
+        // Completion times never precede start times.
+        for rec in &r.records {
+            if let (Some(s), Some(c)) = (rec.started_ms, rec.completed_ms) {
+                assert!(c + 1e-9 >= s);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Energy extension (paper §VI future work).
+// ---------------------------------------------------------------------
+
+fn battery_testbed(policy: PolicyKind) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.policy = policy;
+    // R1 (camera, mains) + R2 (battery-powered helper).
+    cfg.devices[1].battery = true;
+    cfg
+}
+
+#[test]
+fn batteries_drain_when_offloaded_to() {
+    let mut cfg = battery_testbed(PolicyKind::Dds);
+    cfg.workload = wl(500, 50.0, 5_000.0);
+    let r = ScenarioBuilder::new(cfg).run();
+    assert_eq!(r.batteries.len(), 1, "one battery-powered device");
+    let (node, pct, consumed) = r.batteries[0];
+    assert_eq!(node, NodeId(2));
+    assert!(pct < 100.0, "battery must drain: {pct}%");
+    assert!(consumed > 0.0);
+}
+
+#[test]
+fn dds_energy_spares_battery_devices() {
+    let mut cfg = battery_testbed(PolicyKind::Dds);
+    cfg.workload = wl(500, 50.0, 5_000.0);
+    let plain = ScenarioBuilder::new(cfg).run();
+
+    let mut cfg = battery_testbed(PolicyKind::DdsEnergy);
+    cfg.workload = wl(500, 50.0, 5_000.0);
+    let energy = ScenarioBuilder::new(cfg).run();
+
+    let consumed = |r: &edge_dds::sim::RunReport| r.batteries[0].2;
+    // Both policies may use R2 (it is above the 20% reserve the whole
+    // run), but dds-energy must not consume *more*, and both must still
+    // schedule successfully.
+    assert!(consumed(&energy) <= consumed(&plain) + 1e-9,
+        "energy {} vs plain {}", consumed(&energy), consumed(&plain));
+    assert!(energy.met() > 0);
+}
+
+#[test]
+fn depleted_device_forwards_everything() {
+    // Give R1 (the camera) a battery and run a stream long enough that an
+    // artificially tiny pack empties: once depleted, every frame goes to
+    // the edge. We emulate depletion by checking behaviour via policy:
+    // a dds-energy device below reserve forwards even feasible work.
+    use edge_dds::core::{Constraint, ImageMeta, TaskId};
+    use edge_dds::profile::{profile_for, Predictor};
+    use edge_dds::scheduler::{DeviceCtx, LocalSnapshot, SchedulerPolicy};
+
+    let mut policy = PolicyKind::DdsEnergy.build(1);
+    let img = ImageMeta {
+        task: TaskId(1),
+        origin: NodeId(1),
+        size_kb: 29.0,
+        side_px: 64,
+        created_ms: 0.0,
+        constraint: Constraint::deadline(1e9), // trivially feasible locally
+        seq: 1,
+    };
+    let pred = Predictor::new(profile_for(NodeClass::RaspberryPi));
+    let mk = |batt: Option<f64>| LocalSnapshot {
+        node: NodeId(1),
+        busy_containers: 0,
+        warm_containers: 2,
+        queued_images: 0,
+        cpu_load_pct: 0.0,
+        battery_pct: batt,
+    };
+    // Healthy battery: local (time feasible).
+    let ctx = DeviceCtx { now_ms: 0.0, img: &img, local: mk(Some(80.0)), predictor: &pred };
+    assert_eq!(policy.decide_device(&ctx), Placement::Local);
+    // Below the 20% reserve: conserve → forward.
+    let ctx = DeviceCtx { now_ms: 0.0, img: &img, local: mk(Some(10.0)), predictor: &pred };
+    assert_eq!(policy.decide_device(&ctx), Placement::ToEdge);
+    // Mains-powered: unaffected.
+    let ctx = DeviceCtx { now_ms: 0.0, img: &img, local: mk(None), predictor: &pred };
+    assert_eq!(policy.decide_device(&ctx), Placement::Local);
+}
+
+#[test]
+fn dds_energy_behaves_like_dds_without_batteries() {
+    // On the all-mains paper testbed the energy policy must degenerate to
+    // plain DDS (same met counts).
+    let wl1 = wl(200, 50.0, 5_000.0);
+    let dds = ScenarioBuilder::paper_testbed(PolicyKind::Dds).workload(wl1).run();
+    let ene = ScenarioBuilder::paper_testbed(PolicyKind::DdsEnergy).workload(wl1).run();
+    assert_eq!(dds.met(), ene.met());
+    assert!(ene.batteries.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Arrival-process extension.
+// ---------------------------------------------------------------------
+
+#[test]
+fn arrival_patterns_run_and_order_sensibly() {
+    use edge_dds::sim::ArrivalPattern;
+    let mut met = std::collections::HashMap::new();
+    for (name, pattern) in [
+        ("uniform", ArrivalPattern::Uniform),
+        ("poisson", ArrivalPattern::Poisson),
+        ("bursty", ArrivalPattern::Bursty { burst: 10 }),
+    ] {
+        let mut cfg = SystemConfig::default();
+        cfg.policy = PolicyKind::Dds;
+        cfg.workload = wl(300, 50.0, 3_000.0);
+        cfg.workload.pattern = pattern;
+        let r = ScenarioBuilder::new(cfg).run();
+        assert_eq!(r.summary.total, 300, "{name}");
+        assert_eq!(
+            r.summary.met + r.summary.missed + r.summary.dropped,
+            300,
+            "{name}"
+        );
+        met.insert(name, r.summary.met);
+    }
+    // Bursty traffic stresses queues: it must not beat smooth arrivals.
+    assert!(met["bursty"] <= met["uniform"] + 10, "{met:?}");
+}
