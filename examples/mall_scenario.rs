@@ -33,6 +33,7 @@ fn main() {
             cpu_load_pct: 0.0,
             location: (0.0, 0.0), // north entrance
             battery: false,
+            cell: 0,
         },
         DeviceConfig {
             class: NodeClass::RaspberryPi,
@@ -41,6 +42,7 @@ fn main() {
             cpu_load_pct: 20.0,
             location: (50.0, 0.0), // food court
             battery: false,
+            cell: 0,
         },
         DeviceConfig {
             class: NodeClass::RaspberryPi,
@@ -49,6 +51,7 @@ fn main() {
             cpu_load_pct: 0.0,
             location: (25.0, 40.0), // cinema
             battery: false,
+            cell: 0,
         },
         DeviceConfig {
             class: NodeClass::SmartPhone,
@@ -57,6 +60,7 @@ fn main() {
             cpu_load_pct: 10.0,
             location: (25.0, 10.0), // security staff phone
             battery: true, // untethered — energy-aware DDS protects it
+            cell: 0,
         },
     ];
     cfg.workload = WorkloadConfig {

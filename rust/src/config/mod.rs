@@ -9,5 +9,8 @@
 pub mod schema;
 pub mod toml_lite;
 
-pub use schema::{DeviceConfig, NetworkConfig, RunMode, SystemConfig, WorkloadConfig};
+pub use schema::{
+    CellConfig, DeviceConfig, FederationConfig, NetworkConfig, RunMode, SystemConfig,
+    WorkloadConfig,
+};
 pub use toml_lite::{parse_document, Document, Value};

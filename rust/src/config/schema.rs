@@ -82,6 +82,46 @@ pub struct DeviceConfig {
     /// Battery-powered (true) vs mains (false). Battery devices drain and
     /// are handled specially by the `dds-energy` policy.
     pub battery: bool,
+    /// Index of the cell this device belongs to (federation). Always 0 in
+    /// single-cell configs.
+    pub cell: u32,
+}
+
+/// One federation cell's edge server (`[[cell]]` in config files). The
+/// legacy `[edge]` fields describe cell 0 when no `[[cell]]` tables exist.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellConfig {
+    pub warm_containers: u32,
+    pub cpu_load_pct: f64,
+}
+
+impl Default for CellConfig {
+    fn default() -> Self {
+        CellConfig { warm_containers: 4, cpu_load_pct: 0.0 }
+    }
+}
+
+/// Edge↔edge federation parameters (`[federation]` in config files).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FederationConfig {
+    /// Backhaul link between every pair of edge servers. Loss is always
+    /// 0: all backhaul traffic (gossip, forwards, results) is sent over
+    /// reliable transport — wired infrastructure, TCP in live mode — so a
+    /// loss knob would have no effect and is deliberately not exposed.
+    pub backhaul: NetworkConfig,
+    /// Inter-edge MP-summary gossip period.
+    pub gossip_period_ms: f64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            // Wired metro backhaul: lower latency variance than the cell
+            // Wi-Fi, much higher bandwidth, lossless.
+            backhaul: NetworkConfig { latency_ms: 5.0, bandwidth_mbps: 1_000.0, loss_prob: 0.0 },
+            gossip_period_ms: 100.0,
+        }
+    }
 }
 
 /// The full system configuration.
@@ -99,6 +139,13 @@ pub struct SystemConfig {
     /// Maximum profile staleness DDS accepts when offloading.
     pub max_staleness_ms: f64,
     pub devices: Vec<DeviceConfig>,
+    /// Federation cells. Empty = classic single-cell deployment driven by
+    /// the `edge_*` fields above (the single-cell shim: all existing
+    /// configs and scenarios behave exactly as before).
+    pub cells: Vec<CellConfig>,
+    /// Backhaul + gossip parameters (only consulted when `cells` has ≥2
+    /// entries).
+    pub federation: FederationConfig,
 }
 
 impl Default for SystemConfig {
@@ -121,6 +168,7 @@ impl Default for SystemConfig {
                     cpu_load_pct: 0.0,
                     location: (1.0, 0.0),
                     battery: false,
+                    cell: 0,
                 },
                 DeviceConfig {
                     class: NodeClass::RaspberryPi,
@@ -129,8 +177,11 @@ impl Default for SystemConfig {
                     cpu_load_pct: 0.0,
                     location: (2.0, 0.0),
                     battery: false,
+                    cell: 0,
                 },
             ],
+            cells: Vec::new(),
+            federation: FederationConfig::default(),
         }
     }
 }
@@ -206,11 +257,41 @@ impl SystemConfig {
                         t.get("y").and_then(|v| v.as_f64()).unwrap_or(0.0),
                     ),
                     battery: t.get("battery").and_then(|v| v.as_bool()).unwrap_or(false),
+                    cell: t.get("cell").and_then(|v| v.as_i64()).unwrap_or(0) as u32,
                 });
             }
         } else {
             devices = d.devices.clone();
         }
+
+        let mut cells = Vec::new();
+        if let Some(list) = doc.arrays.get("cell") {
+            for t in list {
+                cells.push(CellConfig {
+                    warm_containers: t
+                        .get("warm_containers")
+                        .and_then(|v| v.as_i64())
+                        .unwrap_or(d.edge_warm_containers as i64)
+                        as u32,
+                    cpu_load_pct: t.get("cpu_load_pct").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                });
+            }
+        }
+        let fd = FederationConfig::default();
+        let federation = FederationConfig {
+            backhaul: NetworkConfig {
+                latency_ms: doc.f64_or("federation", "backhaul_latency_ms", fd.backhaul.latency_ms),
+                bandwidth_mbps: doc.f64_or(
+                    "federation",
+                    "backhaul_bandwidth_mbps",
+                    fd.backhaul.bandwidth_mbps,
+                ),
+                // Backhaul traffic is reliable end to end (see
+                // FederationConfig docs) — no loss knob.
+                loss_prob: 0.0,
+            },
+            gossip_period_ms: doc.f64_or("federation", "gossip_period_ms", fd.gossip_period_ms),
+        };
 
         let cfg = SystemConfig {
             seed: doc.i64_or("run", "seed", d.seed as i64) as u64,
@@ -224,9 +305,44 @@ impl SystemConfig {
             profile_period_ms: doc.f64_or("run", "profile_period_ms", d.profile_period_ms),
             max_staleness_ms: doc.f64_or("run", "max_staleness_ms", d.max_staleness_ms),
             devices,
+            cells,
+            federation,
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Number of cells this config describes (the single-cell shim counts
+    /// as one).
+    pub fn n_cells(&self) -> usize {
+        self.cells.len().max(1)
+    }
+
+    /// True when the config describes a federation of ≥2 cells.
+    pub fn is_multi_cell(&self) -> bool {
+        self.cells.len() >= 2
+    }
+
+    /// Edge pool size of cell `c`: the `[[cell]]` entry if present, else
+    /// the legacy `[edge]` value (single-cell shim). Shared by the sim
+    /// and live drivers — one derivation, two drivers.
+    pub fn cell_warm_containers(&self, c: usize) -> u32 {
+        self.cells
+            .get(c)
+            .map(|x| x.warm_containers)
+            .unwrap_or(self.edge_warm_containers)
+    }
+
+    /// Background CPU load on cell `c`'s edge. The legacy
+    /// `edge_cpu_load_pct` (the `edge_load()` builder / Fig. 8 stress)
+    /// targets cell 0.
+    pub fn cell_edge_load(&self, c: usize) -> f64 {
+        let base = self.cells.get(c).map(|x| x.cpu_load_pct).unwrap_or(0.0);
+        if c == 0 {
+            base.max(self.edge_cpu_load_pct)
+        } else {
+            base
+        }
     }
 
     /// Sanity checks (fail fast on nonsense experiments).
@@ -248,6 +364,19 @@ impl SystemConfig {
         }
         if self.profile_period_ms <= 0.0 {
             bail!("run.profile_period_ms must be positive");
+        }
+        let n_cells = self.n_cells() as u32;
+        for (i, dev) in self.devices.iter().enumerate() {
+            if dev.cell >= n_cells {
+                bail!(
+                    "device[{i}]: cell {} out of range (config has {} cell(s))",
+                    dev.cell,
+                    n_cells
+                );
+            }
+        }
+        if self.federation.gossip_period_ms <= 0.0 {
+            bail!("federation.gossip_period_ms must be positive");
         }
         Ok(())
     }
@@ -343,5 +472,99 @@ class = "edge-server"
     fn first_device_defaults_to_camera() {
         let c = SystemConfig::from_toml("[[device]]\nclass = \"rpi\"").unwrap();
         assert!(c.devices[0].camera);
+    }
+
+    #[test]
+    fn multi_cell_roundtrip() {
+        let text = r#"
+[run]
+policy = "dds"
+
+[federation]
+backhaul_latency_ms = 8
+backhaul_bandwidth_mbps = 500
+gossip_period_ms = 50
+
+[[cell]]
+warm_containers = 4
+
+[[cell]]
+warm_containers = 2
+cpu_load_pct = 25
+
+[[device]]
+class = "rpi"
+camera = true
+cell = 0
+
+[[device]]
+class = "rpi"
+cell = 1
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert!(c.is_multi_cell());
+        assert_eq!(c.n_cells(), 2);
+        assert_eq!(c.cells[0].warm_containers, 4);
+        assert_eq!(c.cells[1].warm_containers, 2);
+        assert_eq!(c.cells[1].cpu_load_pct, 25.0);
+        assert_eq!(c.federation.backhaul.latency_ms, 8.0);
+        assert_eq!(c.federation.backhaul.bandwidth_mbps, 500.0);
+        assert_eq!(c.federation.gossip_period_ms, 50.0);
+        assert_eq!(c.devices[0].cell, 0);
+        assert_eq!(c.devices[1].cell, 1);
+    }
+
+    #[test]
+    fn default_is_single_cell_shim() {
+        let c = SystemConfig::default();
+        assert!(!c.is_multi_cell());
+        assert_eq!(c.n_cells(), 1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn cell_accessors_shared_by_both_drivers() {
+        // Shim: no [[cell]] tables → legacy [edge] values for cell 0.
+        let mut c = SystemConfig::default();
+        c.edge_cpu_load_pct = 50.0;
+        assert_eq!(c.cell_warm_containers(0), c.edge_warm_containers);
+        assert_eq!(c.cell_edge_load(0), 50.0);
+        // Explicit cells: [[cell]] wins; edge_cpu_load_pct still stresses
+        // cell 0 (Fig. 8 `edge_load()` semantics), never cell 1.
+        c.cells = vec![
+            CellConfig { warm_containers: 2, cpu_load_pct: 25.0 },
+            CellConfig { warm_containers: 6, cpu_load_pct: 10.0 },
+        ];
+        assert_eq!(c.cell_warm_containers(0), 2);
+        assert_eq!(c.cell_warm_containers(1), 6);
+        assert_eq!(c.cell_edge_load(0), 50.0); // max(25, 50)
+        assert_eq!(c.cell_edge_load(1), 10.0);
+    }
+
+    #[test]
+    fn rejects_device_in_unknown_cell() {
+        let text = r#"
+[[cell]]
+warm_containers = 4
+
+[[device]]
+class = "rpi"
+camera = true
+cell = 3
+"#;
+        assert!(SystemConfig::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_gossip_period() {
+        let text = r#"
+[federation]
+gossip_period_ms = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(text).is_err());
     }
 }

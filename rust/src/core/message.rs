@@ -27,6 +27,29 @@ pub struct ProfileUpdate {
     pub sent_ms: f64,
 }
 
+/// A condensed MP-table summary one edge server gossips to its peers
+/// (federation extension, DESIGN.md §Federation): enough state for a peer
+/// to judge this cell as a forwarding target without seeing its per-device
+/// table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeSummary {
+    pub edge: NodeId,
+    /// Containers busy in the edge's own pool.
+    pub busy_containers: u32,
+    /// Warm containers in the edge's own pool (busy + idle).
+    pub warm_containers: u32,
+    /// Images queued at the edge pool, not yet in a container.
+    pub queued_images: u32,
+    /// Edge background CPU load in [0, 100].
+    pub cpu_load_pct: f64,
+    /// Idle warm containers summed over the cell's end devices (fresh MP
+    /// entries only) — lets a peer see spare device capacity behind the
+    /// edge without per-device detail.
+    pub device_idle_containers: u32,
+    /// Sender-side timestamp (ms since run start).
+    pub sent_ms: f64,
+}
+
 /// An application request from a mobile user (Fig. 2: app id + location +
 /// constraint over the client socket).
 #[derive(Debug, Clone, PartialEq)]
@@ -65,9 +88,17 @@ pub enum Message {
     /// UP → MP periodic profile push (the paper's 20 ms cadence).
     Profile(ProfileUpdate),
     /// Device → edge: join handshake (certification step in §III-C.2).
+    /// `class_tag` 0 marks a *peer edge server* joining the federation
+    /// rather than an end device joining a cell.
     Join { node: NodeId, class_tag: u8, warm_containers: u32 },
     /// Edge → device: join accepted.
     JoinAck { assigned: NodeId },
+    /// Edge → peer edge: an image forwarded across the backhaul because
+    /// the sending cell was exhausted. `from_edge` is the originating edge
+    /// so the result can be routed back through it to the image's origin.
+    Forward { img: ImageMeta, from_edge: NodeId },
+    /// Edge → peer edges: periodic MP-summary gossip (federation).
+    EdgeSummary(EdgeSummary),
 }
 
 impl Message {
@@ -81,6 +112,8 @@ impl Message {
             Message::Profile(_) => 0x05,
             Message::Join { .. } => 0x06,
             Message::JoinAck { .. } => 0x07,
+            Message::Forward { .. } => 0x08,
+            Message::EdgeSummary(_) => 0x09,
         }
     }
 
@@ -89,6 +122,7 @@ impl Message {
     pub fn wire_kb(&self) -> f64 {
         match self {
             Message::Image(meta) => meta.size_kb,
+            Message::Forward { img, .. } => img.size_kb,
             Message::Result { .. } => 1.0,
             _ => 0.25,
         }
@@ -128,6 +162,16 @@ mod tests {
             }),
             Message::Join { node: NodeId(1), class_tag: 1, warm_containers: 2 },
             Message::JoinAck { assigned: NodeId(1) },
+            Message::Forward { img: meta(), from_edge: NodeId(0) },
+            Message::EdgeSummary(EdgeSummary {
+                edge: NodeId(0),
+                busy_containers: 1,
+                warm_containers: 4,
+                queued_images: 0,
+                cpu_load_pct: 25.0,
+                device_idle_containers: 3,
+                sent_ms: 40.0,
+            }),
         ];
         let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
         tags.sort_unstable();
@@ -141,5 +185,11 @@ mod tests {
         assert_eq!(m.wire_kb(), 87.0);
         let r = Message::Result { task: TaskId(1), processed_by: NodeId(0), detections: 1, max_score: 1.0, process_ms: 5.0 };
         assert!(r.wire_kb() < 87.0);
+    }
+
+    #[test]
+    fn forwarded_image_pays_payload_on_backhaul() {
+        let f = Message::Forward { img: meta(), from_edge: NodeId(0) };
+        assert_eq!(f.wire_kb(), 87.0);
     }
 }

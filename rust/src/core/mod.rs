@@ -122,6 +122,10 @@ pub enum Placement {
     ToEdge,
     /// Edge-level decision: offload to this end device.
     Offload(NodeId),
+    /// Edge-level decision, federation (DESIGN.md §Federation): the cell is
+    /// exhausted — forward the image across the backhaul to this peer edge
+    /// server, which schedules it inside its own cell.
+    ToPeerEdge(NodeId),
 }
 
 /// Outcome record for one completed (or dropped) task.

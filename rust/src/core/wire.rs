@@ -9,7 +9,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::message::{Message, ProfileUpdate, UserRequest};
+use super::message::{EdgeSummary, Message, ProfileUpdate, UserRequest};
 use super::{Constraint, ImageMeta, NodeId, TaskId};
 
 /// Encode `msg` into `buf` (cleared first). Returns the frame length.
@@ -52,6 +52,19 @@ pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
             put_u32(buf, *warm_containers);
         }
         Message::JoinAck { assigned } => put_u32(buf, assigned.0),
+        Message::Forward { img, from_edge } => {
+            put_image(buf, img);
+            put_u32(buf, from_edge.0);
+        }
+        Message::EdgeSummary(s) => {
+            put_u32(buf, s.edge.0);
+            put_u32(buf, s.busy_containers);
+            put_u32(buf, s.warm_containers);
+            put_u32(buf, s.queued_images);
+            put_f64(buf, s.cpu_load_pct);
+            put_u32(buf, s.device_idle_containers);
+            put_f64(buf, s.sent_ms);
+        }
     }
     let body_len = (buf.len() - 5) as u32;
     buf[1..5].copy_from_slice(&body_len.to_le_bytes());
@@ -109,6 +122,20 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             warm_containers: r.u32()?,
         },
         0x07 => Message::JoinAck { assigned: NodeId(r.u32()?) },
+        0x08 => {
+            let img = get_image(&mut r)?;
+            let from_edge = NodeId(r.u32()?);
+            Message::Forward { img, from_edge }
+        }
+        0x09 => Message::EdgeSummary(EdgeSummary {
+            edge: NodeId(r.u32()?),
+            busy_containers: r.u32()?,
+            warm_containers: r.u32()?,
+            queued_images: r.u32()?,
+            cpu_load_pct: r.f64()?,
+            device_idle_containers: r.u32()?,
+            sent_ms: r.f64()?,
+        }),
         t => bail!("unknown tag byte 0x{t:02x}"),
     };
     if r.off != body.len() {
@@ -293,6 +320,27 @@ mod tests {
         }));
         roundtrip(Message::Join { node: NodeId(5), class_tag: 2, warm_containers: 2 });
         roundtrip(Message::JoinAck { assigned: NodeId(5) });
+        roundtrip(Message::Forward {
+            img: ImageMeta {
+                task: TaskId(12),
+                origin: NodeId(4),
+                size_kb: 29.0,
+                side_px: 64,
+                created_ms: 10.5,
+                constraint: Constraint::deadline(5000.0),
+                seq: 12,
+            },
+            from_edge: NodeId(0),
+        });
+        roundtrip(Message::EdgeSummary(crate::core::message::EdgeSummary {
+            edge: NodeId(3),
+            busy_containers: 2,
+            warm_containers: 4,
+            queued_images: 1,
+            cpu_load_pct: 50.0,
+            device_idle_containers: 5,
+            sent_ms: 123.0,
+        }));
     }
 
     #[test]

@@ -142,7 +142,10 @@ impl DeviceNode {
                 out.push(Action::RecordPlaced { task: img.task, placement: Placement::Local });
                 self.run_local(img, now_ms, out);
             }
-            Placement::ToEdge | Placement::Offload(_) => {
+            Placement::ToEdge | Placement::Offload(_) | Placement::ToPeerEdge(_) => {
+                // Devices never target other nodes directly (Offload and
+                // ToPeerEdge are edge-level verdicts): anything non-local
+                // goes to the cell's edge server.
                 out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
                 // Image push is UDP-like in the paper ("we use UDP to send
                 // the requests" to simulate loss).

@@ -1,0 +1,155 @@
+//! Federation experiment (beyond the paper): deadline satisfaction of a
+//! 1-, 2- and 4-cell federation under the Fig. 8 edge-stress schedule.
+//!
+//! Methodology mirrors Fig. 8: 1000 images at 50 ms from cell 0's camera,
+//! 5 s constraint, the *stressed* edge (cell 0) swept over the Fig. 8
+//! background-load levels. Extra cells contribute no workload of their
+//! own — they are idle capacity reachable only over the backhaul, so any
+//! gain is pure edge↔edge federation (DDS `ToPeerEdge` forwarding).
+
+use crate::config::{CellConfig, DeviceConfig, SystemConfig, WorkloadConfig};
+use crate::core::NodeClass;
+use crate::scheduler::PolicyKind;
+use crate::sim::workload::ArrivalPattern;
+use crate::sim::ScenarioBuilder;
+
+pub use super::figures::FIG8_LOADS;
+
+/// Cell counts compared by the experiment.
+pub const FED_CELLS: [usize; 3] = [1, 2, 4];
+
+/// One (cell count, edge load) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct FedRow {
+    pub n_cells: usize,
+    pub edge_load_pct: f64,
+    pub met: usize,
+    /// Images DDS forwarded across cells (always 0 when `n_cells == 1`).
+    pub forwarded: usize,
+}
+
+/// A federation of `n_cells` identical cells: each edge has 4 warm
+/// containers and two Raspberry Pis; only cell 0's first device has the
+/// camera (and therefore all the load).
+pub fn fed_config(n_cells: usize) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    cfg.cells = vec![CellConfig { warm_containers: 4, cpu_load_pct: 0.0 }; n_cells];
+    cfg.devices = (0..n_cells)
+        .flat_map(|c| {
+            (0..2).map(move |i| DeviceConfig {
+                class: NodeClass::RaspberryPi,
+                warm_containers: 2,
+                camera: c == 0 && i == 0,
+                cpu_load_pct: 0.0,
+                location: (1.0 + i as f64, 0.0),
+                battery: false,
+                cell: c as u32,
+            })
+        })
+        .collect();
+    cfg
+}
+
+fn fed_workload(n_images: u32, deadline_ms: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        n_images,
+        interval_ms: 50.0,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms,
+        side_px: 64,
+        pattern: ArrivalPattern::Uniform,
+    }
+}
+
+/// Run one sweep cell.
+pub fn fed_run(n_cells: usize, load: f64, seed: u64, n_images: u32, deadline_ms: f64) -> FedRow {
+    let report = ScenarioBuilder::new(fed_config(n_cells))
+        .workload(fed_workload(n_images, deadline_ms))
+        .edge_load(load)
+        .seed(seed)
+        .run();
+    FedRow {
+        n_cells,
+        edge_load_pct: load,
+        met: report.summary.met,
+        forwarded: report.summary.forwarded,
+    }
+}
+
+/// The full sweep: cell counts × Fig. 8 load levels.
+pub fn fed(seed: u64) -> Vec<FedRow> {
+    let mut rows = Vec::new();
+    for &n_cells in &FED_CELLS {
+        for &load in &FIG8_LOADS {
+            rows.push(fed_run(n_cells, load, seed, 1_000, 5_000.0));
+        }
+    }
+    rows
+}
+
+/// Render the sweep as an aligned text grid (one line per load level,
+/// met/forwarded per cell count).
+pub fn render_fed(rows: &[FedRow]) -> String {
+    let mut out = String::from(
+        "## Federation: DDS met count vs cells under edge stress (1000 imgs @50ms, 5 s)\n",
+    );
+    out.push_str(&format!(
+        "{:>8} {:>12} {:>12} {:>12} {:>10}\n",
+        "load%", "1 cell", "2 cells", "4 cells", "fwd(4)"
+    ));
+    for &load in &FIG8_LOADS {
+        let get = |n: usize| {
+            rows.iter()
+                .find(|r| r.n_cells == n && r.edge_load_pct == load)
+                .map(|r| (r.met, r.forwarded))
+                .unwrap_or((0, 0))
+        };
+        let (m1, _) = get(1);
+        let (m2, _) = get(2);
+        let (m4, f4) = get(4);
+        out.push_str(&format!(
+            "{:>8} {:>12} {:>12} {:>12} {:>10}\n",
+            load, m1, m2, m4, f4
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_cell_never_forwards() {
+        let r = fed_run(1, 100.0, 7, 120, 2_000.0);
+        assert_eq!(r.forwarded, 0);
+        assert_eq!(r.n_cells, 1);
+    }
+
+    #[test]
+    fn federation_forwards_and_helps_under_stress() {
+        // Acceptance: a loaded 2-cell federation must actually use the
+        // backhaul and must not do worse than the lone cell.
+        let solo = fed_run(1, 100.0, 7, 300, 2_000.0);
+        let fed2 = fed_run(2, 100.0, 7, 300, 2_000.0);
+        assert!(fed2.forwarded > 0, "expected cross-cell forwards, got 0");
+        assert!(
+            fed2.met >= solo.met,
+            "2 cells ({}) must not trail 1 cell ({})",
+            fed2.met,
+            solo.met
+        );
+    }
+
+    #[test]
+    fn fed_config_shape() {
+        let c = fed_config(4);
+        c.validate().unwrap();
+        assert_eq!(c.n_cells(), 4);
+        assert_eq!(c.devices.len(), 8);
+        assert_eq!(c.devices.iter().filter(|d| d.camera).count(), 1);
+        assert!(c.devices[0].camera && c.devices[0].cell == 0);
+    }
+}

@@ -6,9 +6,11 @@
 //! Every generator returns structured rows plus the paper's reference
 //! numbers so reports can print paper-vs-measured side by side.
 
+pub mod federation;
 pub mod figures;
 pub mod tables;
 
+pub use federation::{fed, fed_config, fed_run, render_fed, FedRow};
 pub use figures::{fig5, fig6, fig7, fig8, Fig5Row, Fig7Row, Fig8Row};
 pub use tables::{table2, table3, table4, table5, table6, TableRow};
 

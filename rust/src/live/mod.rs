@@ -1,15 +1,23 @@
 //! Live deployment: the same node state machines as the simulator, driven
-//! by real threads, real localhost sockets, and real PJRT execution.
+//! by real threads, real localhost sockets, and real model execution.
 //!
-//! Differences from virtual mode (by design, documented in DESIGN.md):
+//! Differences from virtual mode (by design, documented in DESIGN.md
+//! §Sim-vs-live):
 //! - **Containers execute the real model.** `ContainerBusyUntil` from the
 //!   node logic is interpreted as "start real execution now"; the model's
 //!   predicted completion time is used only for the scheduler's decisions.
-//!   Completion is reported when PJRT actually finishes.
+//!   Completion is reported when the runtime actually finishes.
 //! - **Frames are content-addressed synthetic images**: the executing node
 //!   regenerates the deterministic pixel buffer from the task id, so the
 //!   wire protocol stays compact while the compute path stays real.
 //! - Clock is wall time (ms since cluster start).
+//!
+//! Federation (DESIGN.md §Federation): a multi-cell config starts one edge
+//! server *thread group* per cell — accept loop, container workers,
+//! completion pump, gossip thread — plus that cell's device threads. Edge
+//! servers dial each other pairwise at startup (Join with class tag 0),
+//! then exchange MP-summary gossip and `Forward` images over those
+//! backhaul sockets, exactly mirroring the simulator's event flow.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -27,6 +35,7 @@ use crate::net::transport::{serve, FramedConn, Server};
 use crate::profile::{profile_for, Predictor};
 use crate::runtime::RuntimeService;
 use crate::server::EdgeNode;
+use crate::sim::ScenarioBuilder;
 
 /// Shared wall clock.
 #[derive(Clone)]
@@ -84,16 +93,71 @@ impl SharedRecorder {
     }
 }
 
-/// A full in-process cluster: edge server + devices + container workers.
+/// Shared task → image-side map (sides travel inside Image/Forward
+/// messages; workers need them to regenerate the frame).
+type SideMap = Arc<Mutex<HashMap<TaskId, u32>>>;
+
+/// One cell's edge server as started by [`LiveCluster`].
+struct EdgeHandle {
+    id: NodeId,
+    addr: std::net::SocketAddr,
+    writers: Arc<Mutex<HashMap<NodeId, FramedConn>>>,
+}
+
+/// A full in-process cluster: one or more edge cells + devices + workers.
 pub struct LiveCluster {
+    /// Cell 0's edge address (user clients connect here).
     pub edge_addr: std::net::SocketAddr,
     clock: Clock,
     recorder: SharedRecorder,
     camera_tx: mpsc::Sender<LiveEvent>,
     device_txs: Vec<mpsc::Sender<LiveEvent>>,
     stop: Arc<AtomicBool>,
-    server: Option<Server>,
+    servers: Vec<Server>,
+    /// Dialing half of each edge↔edge backhaul socket (shut down on stop
+    /// so reader/handler threads exit).
+    peer_conns: Vec<FramedConn>,
     threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Apply one edge-side action: sends go through the cell's writer table
+/// (devices and peer edges alike), container starts through the job queue.
+fn apply_edge_action(
+    a: Action,
+    edge_id: NodeId,
+    writers: &Arc<Mutex<HashMap<NodeId, FramedConn>>>,
+    recorder: &SharedRecorder,
+    job_tx: &mpsc::Sender<Job>,
+    clock: &Clock,
+    sides: &SideMap,
+) {
+    match a {
+        Action::Send { to, msg, .. } => {
+            let mut ws = writers.lock().unwrap();
+            if let Some(conn) = ws.get_mut(&to) {
+                if let Err(e) = conn.send(&msg) {
+                    log::warn!("{edge_id}→{to} send failed: {e}");
+                }
+            } else {
+                log::warn!("{edge_id}: no connection to {to}");
+            }
+        }
+        Action::ContainerBusyUntil { container, task, .. } => {
+            recorder.inner.lock().unwrap().started(task, edge_id, clock.now_ms());
+            let side = sides.lock().unwrap().get(&task).copied().unwrap_or(64);
+            let _ = job_tx.send(Job { container, task, side });
+        }
+        Action::RecordPlaced { task, placement } => {
+            recorder.inner.lock().unwrap().placed(task, placement);
+        }
+        Action::RecordStarted { task, at_ms } => {
+            recorder.inner.lock().unwrap().started(task, edge_id, at_ms);
+        }
+        Action::RecordCompleted { task, at_ms, process_ms } => {
+            recorder.inner.lock().unwrap().completed(task, at_ms, process_ms);
+            recorder.resolved.fetch_add(1, Ordering::SeqCst);
+        }
+    }
 }
 
 impl LiveCluster {
@@ -103,131 +167,244 @@ impl LiveCluster {
         let recorder = SharedRecorder::new();
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
+        let mut servers = Vec::new();
 
-        // ---------- Edge server ----------
-        let topo = crate::sim::ScenarioBuilder::new(cfg.clone()).topology();
-        let edge_id = topo.edge();
-        let mut edge_pool =
-            ContainerPool::new(profile_for(NodeClass::EdgeServer), cfg.edge_warm_containers);
-        edge_pool.set_bg_load(cfg.edge_cpu_load_pct);
-        let edge_node = Arc::new(Mutex::new(EdgeNode::new(
-            edge_id,
-            edge_pool,
-            cfg.policy.build(cfg.seed),
-            topo.clone(),
-            cfg.max_staleness_ms,
-        )));
+        let topo = ScenarioBuilder::new(cfg.clone()).topology();
+        let device_ids = ScenarioBuilder::device_ids(cfg);
+        let edge_ids: Vec<NodeId> = topo.edges().collect();
+        let multi_cell = edge_ids.len() > 1;
 
-        // Writers to devices, filled in as they join.
-        let writers: Arc<Mutex<HashMap<NodeId, FramedConn>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        // Track image sides for jobs (task → side), cluster-wide.
+        let sides: SideMap = Arc::new(Mutex::new(HashMap::new()));
 
-        // Edge container workers.
-        let (edge_job_tx, edge_job_rx) = mpsc::channel::<Job>();
-        let edge_job_rx = Arc::new(Mutex::new(edge_job_rx));
-        let (edge_done_tx, edge_done_rx) = mpsc::channel::<LiveEvent>();
-        for w in 0..cfg.edge_warm_containers.max(1) {
-            let rx = edge_job_rx.clone();
-            let tx = edge_done_tx.clone();
-            let rt = runtime.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("edge-container-{w}"))
-                    .spawn(move || container_worker(rx, tx, rt))
-                    .context("spawning edge container worker")?,
-            );
+        // ---------- Edge servers, one per cell ----------
+        let mut handles: Vec<EdgeHandle> = Vec::new();
+        let mut edge_nodes: Vec<Arc<Mutex<EdgeNode>>> = Vec::new();
+        let mut appliers: Vec<Arc<dyn Fn(Vec<Action>) + Send + Sync>> = Vec::new();
+
+        for (c, &edge_id) in edge_ids.iter().enumerate() {
+            // One derivation shared with the sim driver (SystemConfig::
+            // cell_warm_containers / cell_edge_load) — the two drivers
+            // must not drift.
+            let cell_warm = cfg.cell_warm_containers(c);
+            let mut edge_pool =
+                ContainerPool::new(profile_for(NodeClass::EdgeServer), cell_warm);
+            edge_pool.set_bg_load(cfg.cell_edge_load(c));
+            let edge_seed = cfg.seed.wrapping_add((c as u64) << 32);
+            let edge_node = Arc::new(Mutex::new(EdgeNode::new(
+                edge_id,
+                edge_pool,
+                cfg.policy.build(edge_seed),
+                topo.clone(),
+                cfg.max_staleness_ms,
+            )));
+
+            // Writers to devices and peer edges, filled in as they join.
+            let writers: Arc<Mutex<HashMap<NodeId, FramedConn>>> =
+                Arc::new(Mutex::new(HashMap::new()));
+
+            // Container workers for this cell's edge pool.
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            let job_rx = Arc::new(Mutex::new(job_rx));
+            let (done_tx, done_rx) = mpsc::channel::<LiveEvent>();
+            for w in 0..cell_warm.max(1) {
+                let rx = job_rx.clone();
+                let tx = done_tx.clone();
+                let rt = runtime.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("edge{c}-container-{w}"))
+                        .spawn(move || container_worker(rx, tx, rt))
+                        .context("spawning edge container worker")?,
+                );
+            }
+
+            // Action applier (shared by socket handlers + done pump).
+            let applier: Arc<dyn Fn(Vec<Action>) + Send + Sync> = {
+                let writers = writers.clone();
+                let recorder = recorder.clone();
+                let job_tx = job_tx.clone();
+                let clock = clock.clone();
+                let sides = sides.clone();
+                Arc::new(move |actions: Vec<Action>| {
+                    for a in actions {
+                        apply_edge_action(
+                            a, edge_id, &writers, &recorder, &job_tx, &clock, &sides,
+                        );
+                    }
+                })
+            };
+
+            // TCP accept loop: one connection per device or peer edge.
+            let node_for_conn = edge_node.clone();
+            let apply_for_conn = applier.clone();
+            let writers_for_conn = writers.clone();
+            let clock_for_conn = clock.clone();
+            let sides_for_conn = sides.clone();
+            let server = serve("127.0.0.1:0", move |mut conn| {
+                loop {
+                    let msg = match conn.recv() {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    };
+                    match &msg {
+                        Message::Image(img) => {
+                            sides_for_conn.lock().unwrap().insert(img.task, img.side_px);
+                        }
+                        Message::Forward { img, .. } => {
+                            sides_for_conn.lock().unwrap().insert(img.task, img.side_px);
+                        }
+                        // A Join registers the write-half for this peer
+                        // (end device or fellow edge server).
+                        Message::Join { node, .. } => {
+                            if let Ok(w) = conn.try_clone() {
+                                writers_for_conn.lock().unwrap().insert(*node, w);
+                            }
+                        }
+                        _ => {}
+                    }
+                    let mut out = Vec::new();
+                    {
+                        let mut edge = node_for_conn.lock().unwrap();
+                        edge.on_message(msg, clock_for_conn.now_ms(), &mut out);
+                    }
+                    apply_for_conn(out);
+                }
+            })?;
+
+            // Completion pump for this cell's edge pool.
+            {
+                let edge = edge_node.clone();
+                let apply = applier.clone();
+                let clock = clock.clone();
+                let stop = stop.clone();
+                threads.push(std::thread::spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        match done_rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(LiveEvent::ContainerDone { container, task, process_ms }) => {
+                                let mut out = Vec::new();
+                                {
+                                    let mut e = edge.lock().unwrap();
+                                    e.on_container_done(
+                                        container,
+                                        task,
+                                        process_ms,
+                                        clock.now_ms(),
+                                        &mut out,
+                                    );
+                                }
+                                apply(out);
+                            }
+                            Ok(_) => {}
+                            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                }));
+            }
+
+            handles.push(EdgeHandle { id: edge_id, addr: server.local_addr, writers });
+            servers.push(server);
+            edge_nodes.push(edge_node);
+            appliers.push(applier);
         }
 
-        // Edge action applier (shared by socket handlers + done pump).
-        let apply_edge = {
-            let writers = writers.clone();
-            let recorder = recorder.clone();
-            let job_tx = edge_job_tx.clone();
-            let clock = clock.clone();
-            Arc::new(move |actions: Vec<Action>, side_of: &dyn Fn(TaskId) -> u32| {
-                for a in actions {
-                    apply_live_action(a, &writers, &recorder, &job_tx, &clock, side_of);
-                }
-            })
-        };
-
-        // Track image sides for jobs (task → side). Images carry side_px.
-        let sides: Arc<Mutex<HashMap<TaskId, u32>>> = Arc::new(Mutex::new(HashMap::new()));
-
-        // TCP accept loop: one connection per device.
-        let edge_for_conn = edge_node.clone();
-        let apply_for_conn = apply_edge.clone();
-        let writers_for_conn = writers.clone();
-        let clock_for_conn = clock.clone();
-        let sides_for_conn = sides.clone();
-        let server = serve("127.0.0.1:0", move |mut conn| {
-            loop {
-                let msg = match conn.recv() {
-                    Ok(m) => m,
-                    Err(_) => break,
-                };
-                if let Message::Image(img) = &msg {
-                    sides_for_conn.lock().unwrap().insert(img.task, img.side_px);
-                }
-                // A Join registers the write-half for this device.
-                if let Message::Join { node, .. } = &msg {
-                    if let Ok(w) = conn.try_clone() {
-                        writers_for_conn.lock().unwrap().insert(*node, w);
-                    }
-                }
-                let mut out = Vec::new();
+        // ---------- Backhaul: pairwise edge↔edge connections ----------
+        let mut peer_conns: Vec<FramedConn> = Vec::new();
+        for i in 0..handles.len() {
+            for j in (i + 1)..handles.len() {
+                let mut conn = FramedConn::connect(handles[j].addr)
+                    .with_context(|| format!("edge {i} dialing edge {j}"))?;
+                // Register our write-half before announcing ourselves.
+                handles[i]
+                    .writers
+                    .lock()
+                    .unwrap()
+                    .insert(handles[j].id, conn.try_clone()?);
+                conn.send(&Message::Join {
+                    node: handles[i].id,
+                    class_tag: 0,
+                    warm_containers: 0,
+                })?;
+                // Reader pump: peer j → this edge i.
                 {
-                    let mut edge = edge_for_conn.lock().unwrap();
-                    edge.on_message(msg, clock_for_conn.now_ms(), &mut out);
+                    let node = edge_nodes[i].clone();
+                    let apply = appliers[i].clone();
+                    let clock = clock.clone();
+                    let sides = sides.clone();
+                    let mut rconn = conn.try_clone()?;
+                    threads.push(
+                        std::thread::Builder::new()
+                            .name(format!("backhaul-{i}-{j}"))
+                            .spawn(move || {
+                                while let Ok(msg) = rconn.recv() {
+                                    if let Message::Forward { img, .. } = &msg {
+                                        sides.lock().unwrap().insert(img.task, img.side_px);
+                                    }
+                                    let mut out = Vec::new();
+                                    {
+                                        let mut e = node.lock().unwrap();
+                                        e.on_message(msg, clock.now_ms(), &mut out);
+                                    }
+                                    apply(out);
+                                }
+                            })
+                            .context("spawning backhaul reader")?,
+                    );
                 }
-                let sides2 = sides_for_conn.clone();
-                apply_for_conn(out, &move |t| {
-                    sides2.lock().unwrap().get(&t).copied().unwrap_or(64)
-                });
+                peer_conns.push(conn);
             }
-        })?;
-        let edge_addr = server.local_addr;
+        }
 
-        // Edge completion pump.
-        {
-            let edge = edge_node.clone();
-            let apply = apply_edge.clone();
-            let clock = clock.clone();
-            let stop = stop.clone();
-            let sides = sides.clone();
-            threads.push(std::thread::spawn(move || {
-                while !stop.load(Ordering::SeqCst) {
-                    match edge_done_rx.recv_timeout(Duration::from_millis(50)) {
-                        Ok(LiveEvent::ContainerDone { container, task, process_ms }) => {
-                            let mut out = Vec::new();
-                            {
-                                let mut e = edge.lock().unwrap();
-                                e.on_container_done(
-                                    container,
-                                    task,
-                                    process_ms,
-                                    clock.now_ms(),
-                                    &mut out,
-                                );
+        // ---------- Gossip threads (federation only) ----------
+        if multi_cell {
+            let period = Duration::from_secs_f64(cfg.federation.gossip_period_ms / 1e3);
+            for (i, handle) in handles.iter().enumerate() {
+                let node = edge_nodes[i].clone();
+                let writers = handle.writers.clone();
+                let peer_ids: Vec<NodeId> =
+                    edge_ids.iter().copied().filter(|&e| e != handle.id).collect();
+                let clock = clock.clone();
+                let stop = stop.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("gossip-{i}"))
+                        .spawn(move || {
+                            while !stop.load(Ordering::SeqCst) {
+                                // Stepped sleep so shutdown is prompt even
+                                // with long gossip periods.
+                                let mut slept = Duration::ZERO;
+                                while slept < period && !stop.load(Ordering::SeqCst) {
+                                    let step = Duration::from_millis(20).min(period - slept);
+                                    std::thread::sleep(step);
+                                    slept += step;
+                                }
+                                if stop.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                let summary =
+                                    node.lock().unwrap().summary(clock.now_ms());
+                                let mut ws = writers.lock().unwrap();
+                                for p in &peer_ids {
+                                    if let Some(conn) = ws.get_mut(p) {
+                                        let _ = conn.send(&Message::EdgeSummary(summary));
+                                    }
+                                }
                             }
-                            let sides2 = sides.clone();
-                            apply(out, &move |t| {
-                                sides2.lock().unwrap().get(&t).copied().unwrap_or(64)
-                            });
-                        }
-                        Ok(_) => {}
-                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-            }));
+                        })
+                        .context("spawning gossip thread")?,
+                );
+            }
         }
 
         // ---------- Devices ----------
         let mut device_txs = Vec::new();
         let mut camera_tx: Option<mpsc::Sender<LiveEvent>> = None;
         for (i, dcfg) in cfg.devices.iter().enumerate() {
-            let id = NodeId(1 + i as u32);
+            let id = device_ids[i];
+            let cell = dcfg.cell as usize;
+            let cell_edge_id = handles[cell].id;
+            let cell_edge_addr = handles[cell].addr;
             let (tx, rx) = mpsc::channel::<LiveEvent>();
             if dcfg.camera && camera_tx.is_none() {
                 camera_tx = Some(tx.clone());
@@ -238,7 +415,7 @@ impl LiveCluster {
             pool.set_bg_load(dcfg.cpu_load_pct);
             let node = DeviceNode::new(
                 id,
-                edge_id,
+                cell_edge_id,
                 pool,
                 Predictor::new(profile_for(dcfg.class)),
                 cfg.policy.build(cfg.seed.wrapping_add(1 + i as u64)),
@@ -255,8 +432,8 @@ impl LiveCluster {
                     .name(format!("device-{}", id.0))
                     .spawn(move || {
                         if let Err(e) = device_main(
-                            node, id, edge_addr, rx, tx, clock, recorder, runtime, stop,
-                            profile_period, warm,
+                            node, id, cell_edge_addr, rx, tx, clock, recorder, runtime,
+                            stop, profile_period, warm,
                         ) {
                             log::error!("device {id} failed: {e:#}");
                         }
@@ -266,13 +443,14 @@ impl LiveCluster {
         }
 
         Ok(Self {
-            edge_addr,
+            edge_addr: handles[0].addr,
             clock,
             recorder,
             camera_tx: camera_tx.context("no camera device configured")?,
             device_txs,
             stop,
-            server: Some(server),
+            servers,
+            peer_conns,
             threads,
         })
     }
@@ -334,7 +512,12 @@ impl LiveCluster {
         for tx in &self.device_txs {
             let _ = tx.send(LiveEvent::Stop);
         }
-        if let Some(s) = self.server.take() {
+        // Closing the backhaul sockets unblocks the reader pumps and the
+        // peer-side connection handler threads.
+        for c in &self.peer_conns {
+            c.shutdown();
+        }
+        for s in self.servers.drain(..) {
             s.stop();
         }
         for t in self.threads.drain(..) {
@@ -343,8 +526,8 @@ impl LiveCluster {
     }
 }
 
-/// Container worker: real PJRT execution on synthetic content-addressed
-/// frames.
+/// Container worker: real model execution on synthetic content-addressed
+/// frames (PJRT backend or the deterministic stub, per build features).
 fn container_worker(
     rx: Arc<Mutex<mpsc::Receiver<Job>>>,
     done: mpsc::Sender<LiveEvent>,
@@ -372,43 +555,6 @@ fn container_worker(
             .is_err()
         {
             return;
-        }
-    }
-}
-
-/// Apply a node's actions in the live world (edge side).
-fn apply_live_action(
-    a: Action,
-    writers: &Arc<Mutex<HashMap<NodeId, FramedConn>>>,
-    recorder: &SharedRecorder,
-    job_tx: &mpsc::Sender<Job>,
-    clock: &Clock,
-    side_of: &dyn Fn(TaskId) -> u32,
-) {
-    match a {
-        Action::Send { to, msg, .. } => {
-            let mut ws = writers.lock().unwrap();
-            if let Some(conn) = ws.get_mut(&to) {
-                if let Err(e) = conn.send(&msg) {
-                    log::warn!("edge→{to} send failed: {e}");
-                }
-            } else {
-                log::warn!("edge: no connection to {to}");
-            }
-        }
-        Action::ContainerBusyUntil { container, task, .. } => {
-            recorder.inner.lock().unwrap().started(task, NodeId(0), clock.now_ms());
-            let _ = job_tx.send(Job { container, task, side: side_of(task) });
-        }
-        Action::RecordPlaced { task, placement } => {
-            recorder.inner.lock().unwrap().placed(task, placement);
-        }
-        Action::RecordStarted { task, at_ms } => {
-            recorder.inner.lock().unwrap().started(task, NodeId(0), at_ms);
-        }
-        Action::RecordCompleted { task, at_ms, process_ms } => {
-            recorder.inner.lock().unwrap().completed(task, at_ms, process_ms);
-            recorder.resolved.fetch_add(1, Ordering::SeqCst);
         }
     }
 }
@@ -463,13 +609,7 @@ fn device_main(
         let rx = job_rx.clone();
         let tx = self_tx.clone();
         let rt = runtime.clone();
-        std::thread::spawn(move || {
-            container_worker(
-                rx,
-                map_done_sender(tx),
-                rt,
-            )
-        });
+        std::thread::spawn(move || container_worker(rx, tx, rt));
     }
 
     let mut sides: HashMap<TaskId, u32> = HashMap::new();
@@ -507,7 +647,8 @@ fn device_main(
         for a in out {
             match a {
                 Action::Send { msg, .. } => {
-                    // Star topology: every device send goes to the edge.
+                    // Star topology inside the cell: every device send
+                    // goes to its own edge server.
                     if let Err(e) = conn.send(&msg) {
                         log::warn!("{id}→edge send failed: {e}");
                     }
@@ -539,9 +680,4 @@ fn device_main(
     // LiveCluster::shutdown would deadlock on join.
     conn.shutdown();
     Ok(())
-}
-
-/// Adapt a device inbox sender into the worker's done-sender shape.
-fn map_done_sender(tx: mpsc::Sender<LiveEvent>) -> mpsc::Sender<LiveEvent> {
-    tx
 }

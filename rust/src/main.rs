@@ -7,10 +7,15 @@
 //!                 [--interval MS] [--deadline MS] [--seed S] [--csv out.csv]
 //! edge-dds sweep  [--config cfg.toml] [--images N] [--interval MS]
 //!                 [--deadline MS]                  # all paper policies
-//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|all
+//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|fed|all
 //! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
 //!                 [--interval MS] [--deadline MS] [--side PX]
 //! ```
+//!
+//! Multi-cell federations are configured with `[[cell]]` tables plus a
+//! per-device `cell = N` key and an optional `[federation]` section
+//! (backhaul link + gossip period); see DESIGN.md §Federation. Both `sim`
+//! and `live` drive them.
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -62,11 +67,12 @@ fn print_usage() {
          \x20 edge-dds sim    [--config F] [--policy P] [--images N] [--interval MS]\n\
          \x20                 [--deadline MS] [--seed S] [--csv OUT]\n\
          \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
-         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|all\n\
+         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|all\n\
          \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
          \x20                 [--interval MS] [--deadline MS] [--side PX]\n\
          \n\
-         POLICIES: aor aoe eods dds dds-no-avail round-robin random"
+         POLICIES: aor aoe eods dds dds-no-avail dds-energy round-robin random\n\
+         FEDERATION: [[cell]] tables + device `cell = N` + [federation] in --config"
     );
 }
 
@@ -200,6 +206,11 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
         matched = true;
         let rows = experiments::fig8(seed);
         println!("{}", experiments::figures::render_fig8(&rows));
+    }
+    if all || exp == "fed" {
+        matched = true;
+        let rows = experiments::fed(seed);
+        println!("{}", experiments::render_fed(&rows));
     }
     if !matched {
         bail!("unknown experiment `{exp}`");

@@ -11,7 +11,10 @@ use crate::core::Verdict;
 use crate::util::Summary;
 
 /// Aggregated outcome of one run (one policy × one workload).
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` lets determinism tests compare whole summaries of repeated
+/// same-seed runs.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunSummary {
     pub total: usize,
     pub met: usize,
@@ -23,6 +26,9 @@ pub struct RunSummary {
     pub process: Option<Summary>,
     /// Fraction of completed tasks processed at their origin device.
     pub local_fraction: f64,
+    /// Tasks forwarded across cells (placement `ToPeerEdge`) — always 0
+    /// outside a federation.
+    pub forwarded: usize,
 }
 
 impl RunSummary {

@@ -127,6 +127,10 @@ impl Recorder {
             .filter(|r| r.executed_on == Some(r.origin))
             .count();
         let n_completed = completed.count();
+        let forwarded = records
+            .iter()
+            .filter(|r| matches!(r.placement, Placement::ToPeerEdge(_)))
+            .count();
         RunSummary {
             total: records.len(),
             met,
@@ -139,6 +143,7 @@ impl Recorder {
             } else {
                 local as f64 / n_completed as f64
             },
+            forwarded,
         }
     }
 }

@@ -19,6 +19,7 @@ pub fn csv_line(r: &TaskRecord) -> String {
         Placement::Local => "local".to_string(),
         Placement::ToEdge => "edge".to_string(),
         Placement::Offload(n) => format!("offload:{n}"),
+        Placement::ToPeerEdge(n) => format!("peer-edge:{n}"),
     };
     let verdict = match r.verdict {
         Verdict::Met => "met",
@@ -67,7 +68,7 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         })
         .unwrap_or_else(|| "null".into());
     format!(
-        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"latency":{}}}"#,
+        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"latency":{}}}"#,
         name,
         s.total,
         s.met,
@@ -75,6 +76,7 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         s.dropped,
         s.met_fraction(),
         s.local_fraction,
+        s.forwarded,
         lat
     )
 }

@@ -9,7 +9,7 @@
 pub mod topology;
 pub mod transport;
 
-pub use topology::Topology;
+pub use topology::{CellSpec, Topology};
 
 /// A point-to-point link's timing/loss model.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -1,9 +1,16 @@
-//! Topology: node inventory plus the link table.
+//! Topology: node inventory, the link table, and cell membership.
 //!
-//! The paper's deployment is a star — every end device talks to the edge
-//! server; device↔device traffic is relayed through the edge (APr → APe →
-//! APr). The topology stores per-pair links so meshes are expressible, but
-//! the builders produce stars.
+//! The paper's deployment is a single star — every end device talks to one
+//! edge server; device↔device traffic is relayed through it (APr → APe →
+//! APr). The federation extension (DESIGN.md §Federation) generalizes this
+//! to a set of **cells**: each cell is one edge server plus its devices
+//! (still a star inside the cell), and the cells' edge servers are joined
+//! pairwise by backhaul links over which they gossip MP summaries and
+//! forward images when their own cell is exhausted.
+//!
+//! The topology stores per-pair links so arbitrary meshes are expressible,
+//! but the builders produce stars ([`Topology::star`]) and star-of-stars
+//! federations ([`Topology::multi_cell`]).
 
 use std::collections::HashMap;
 
@@ -26,11 +33,32 @@ pub struct NodeSpec {
     pub has_camera: bool,
 }
 
-/// Node inventory + link table.
+/// One cell of a federation: an edge server plus its end devices.
+///
+/// `devices` entries are `(class, warm_containers, has_camera)` — the same
+/// shape [`Topology::star`] takes.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub edge_warm: u32,
+    pub devices: Vec<(NodeClass, u32, bool)>,
+    /// Intra-cell access link (edge ↔ each device).
+    pub link: LinkModel,
+}
+
+impl CellSpec {
+    pub fn new(edge_warm: u32, devices: &[(NodeClass, u32, bool)], link: LinkModel) -> Self {
+        CellSpec { edge_warm, devices: devices.to_vec(), link }
+    }
+}
+
+/// Node inventory + link table + per-node cell assignment.
 #[derive(Debug, Clone, Default)]
 pub struct Topology {
     nodes: Vec<NodeSpec>,
     links: HashMap<(NodeId, NodeId), LinkModel>,
+    /// `cell_edge[i]` = the edge server governing node `i`'s cell (an edge
+    /// server governs itself). Parallel to `nodes`.
+    cell_edge: Vec<NodeId>,
 }
 
 impl Topology {
@@ -39,14 +67,44 @@ impl Topology {
     }
 
     /// Add a node; ids must be dense and in order (enforced).
+    ///
+    /// Cell assignment defaults to the most recently added edge server
+    /// (an edge server starts its own cell); override with [`set_cell`]
+    /// for hand-built meshes.
+    ///
+    /// [`set_cell`]: Topology::set_cell
     pub fn add_node(&mut self, spec: NodeSpec) -> NodeId {
         assert_eq!(
             spec.id.0 as usize,
             self.nodes.len(),
             "node ids must be added densely in order"
         );
+        let cell = if spec.class == NodeClass::EdgeServer {
+            spec.id
+        } else {
+            // Devices default into the last-opened cell (builders add the
+            // edge first); a device before any edge governs itself until
+            // reassigned.
+            self.nodes
+                .iter()
+                .rev()
+                .find(|n| n.class == NodeClass::EdgeServer)
+                .map(|n| n.id)
+                .unwrap_or(spec.id)
+        };
         self.nodes.push(spec);
+        self.cell_edge.push(cell);
         spec.id
+    }
+
+    /// Reassign a node to the cell governed by `edge`.
+    pub fn set_cell(&mut self, node: NodeId, edge: NodeId) {
+        assert_eq!(
+            self.nodes[edge.0 as usize].class,
+            NodeClass::EdgeServer,
+            "cell owner must be an edge server"
+        );
+        self.cell_edge[node.0 as usize] = edge;
     }
 
     /// Install a symmetric link.
@@ -84,58 +142,142 @@ impl Topology {
         self.nodes.is_empty()
     }
 
-    /// All end devices (non-edge nodes).
+    /// All end devices (non-edge nodes), across every cell.
     pub fn devices(&self) -> impl Iterator<Item = &NodeSpec> {
         self.nodes.iter().filter(|n| n.class != NodeClass::EdgeServer)
     }
 
-    /// The edge server (single-edge topologies; first edge node).
-    pub fn edge(&self) -> NodeId {
+    /// The first edge server, or `None` for a deviceless/edgeless mesh.
+    ///
+    /// Multi-cell topologies have several edges — prefer [`edges`],
+    /// [`cell_edge_of`] or [`peer_edges`] there; this accessor is the
+    /// single-cell convenience (and no longer panics — returning `Option`
+    /// makes "no edge" and "many edges" first-class states).
+    ///
+    /// [`edges`]: Topology::edges
+    /// [`cell_edge_of`]: Topology::cell_edge_of
+    /// [`peer_edges`]: Topology::peer_edges
+    pub fn edge(&self) -> Option<NodeId> {
         self.nodes
             .iter()
             .find(|n| n.class == NodeClass::EdgeServer)
             .map(|n| n.id)
-            .expect("topology has no edge server")
+    }
+
+    /// Every edge server, in id order.
+    pub fn edges(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.nodes
+            .iter()
+            .filter(|n| n.class == NodeClass::EdgeServer)
+            .map(|n| n.id)
+    }
+
+    /// Number of cells (edge servers).
+    pub fn cell_count(&self) -> usize {
+        self.edges().count()
+    }
+
+    /// The edge server governing `node`'s cell (itself for an edge).
+    pub fn cell_edge_of(&self, node: NodeId) -> Option<NodeId> {
+        self.cell_edge.get(node.0 as usize).copied()
+    }
+
+    /// End devices belonging to the cell governed by `edge`.
+    pub fn devices_in_cell(&self, edge: NodeId) -> impl Iterator<Item = &NodeSpec> {
+        self.nodes.iter().filter(move |n| {
+            n.class != NodeClass::EdgeServer && self.cell_edge[n.id.0 as usize] == edge
+        })
+    }
+
+    /// The other edge servers `edge` can federate with, in id order.
+    pub fn peer_edges(&self, edge: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.edges().filter(move |&e| e != edge)
     }
 
     /// Camera device nearest to `loc` (the paper's location-based
-    /// activation: "the edge server identifies the nearby end devices").
+    /// activation: "the edge server identifies the nearby end devices"),
+    /// searched across every cell. Equidistant cameras tie-break
+    /// deterministically by `NodeId`.
     pub fn nearest_camera(&self, loc: (f64, f64)) -> Option<NodeId> {
-        self.devices()
+        Self::closest_camera(self.devices(), loc)
+    }
+
+    /// Camera device nearest to `loc` among the cell governed by `edge` —
+    /// what an edge server may actually activate: it has no link (sim) or
+    /// socket (live) to another cell's devices.
+    pub fn nearest_camera_in_cell(&self, edge: NodeId, loc: (f64, f64)) -> Option<NodeId> {
+        Self::closest_camera(self.devices_in_cell(edge), loc)
+    }
+
+    fn closest_camera<'a>(
+        devices: impl Iterator<Item = &'a NodeSpec>,
+        loc: (f64, f64),
+    ) -> Option<NodeId> {
+        devices
             .filter(|n| n.has_camera)
             .min_by(|a, b| {
                 let da = dist2(a.location, loc);
                 let db = dist2(b.location, loc);
-                da.partial_cmp(&db).unwrap()
+                da.partial_cmp(&db)
+                    .expect("NaN distance")
+                    .then_with(|| a.id.cmp(&b.id))
             })
             .map(|n| n.id)
     }
 
     /// Star builder: one edge server + the given devices, uniform link.
+    /// Single-cell shim over [`Topology::multi_cell`] — the layout (ids,
+    /// locations, links) is identical to what it always produced.
     pub fn star(
         edge_warm: u32,
         devices: &[(NodeClass, u32, bool)],
         link: LinkModel,
     ) -> Topology {
+        Topology::multi_cell(&[CellSpec::new(edge_warm, devices, link)], LinkModel::wifi())
+    }
+
+    /// Federation builder: one star per [`CellSpec`] plus a full mesh of
+    /// `backhaul` links between the edge servers.
+    ///
+    /// Layout: cells are laid out left to right, 100 distance units apart;
+    /// cell `c`'s edge sits at `(100c, 0)` and its devices at
+    /// `(100c + 1 + i, 0)` — cell 0 reproduces the classic single-cell
+    /// star exactly. Node ids are dense in cell order: edge first, then
+    /// its devices.
+    pub fn multi_cell(cells: &[CellSpec], backhaul: LinkModel) -> Topology {
+        assert!(!cells.is_empty(), "federation needs at least one cell");
         let mut t = Topology::new();
-        let edge = t.add_node(NodeSpec {
-            id: NodeId(0),
-            class: NodeClass::EdgeServer,
-            warm_containers: edge_warm,
-            cpu_load_pct: 0.0,
-            location: (0.0, 0.0),
-            has_camera: false,
-        });
-        for (i, &(class, warm, has_camera)) in devices.iter().enumerate() {
-            let id = t.add_node(NodeSpec {
-                id: NodeId(1 + i as u32),
-                class,
-                warm_containers: warm,
+        let mut edge_ids = Vec::with_capacity(cells.len());
+        let mut next = 0u32;
+        for (c, cell) in cells.iter().enumerate() {
+            let cx = 100.0 * c as f64;
+            let edge = t.add_node(NodeSpec {
+                id: NodeId(next),
+                class: NodeClass::EdgeServer,
+                warm_containers: cell.edge_warm,
                 cpu_load_pct: 0.0,
-                location: (1.0 + i as f64, 0.0),
-                has_camera,
+                location: (cx, 0.0),
+                has_camera: false,
             });
-            t.add_link(edge, id, link);
+            next += 1;
+            edge_ids.push(edge);
+            for (i, &(class, warm, has_camera)) in cell.devices.iter().enumerate() {
+                let id = t.add_node(NodeSpec {
+                    id: NodeId(next),
+                    class,
+                    warm_containers: warm,
+                    cpu_load_pct: 0.0,
+                    location: (cx + 1.0 + i as f64, 0.0),
+                    has_camera,
+                });
+                next += 1;
+                t.add_link(edge, id, cell.link);
+            }
+        }
+        for (i, &a) in edge_ids.iter().enumerate() {
+            for &b in &edge_ids[i + 1..] {
+                t.add_link(a, b, backhaul);
+            }
         }
         t
     }
@@ -167,7 +309,7 @@ mod tests {
     fn star_shape() {
         let t = Topology::paper_testbed(4, 2);
         assert_eq!(t.len(), 3);
-        assert_eq!(t.edge(), NodeId(0));
+        assert_eq!(t.edge(), Some(NodeId(0)));
         assert_eq!(t.devices().count(), 2);
         assert!(t.link(NodeId(0), NodeId(1)).is_some());
         assert!(t.link(NodeId(0), NodeId(2)).is_some());
@@ -183,6 +325,21 @@ mod tests {
     }
 
     #[test]
+    fn edgeless_topology_has_no_edge() {
+        let mut t = Topology::new();
+        t.add_node(NodeSpec {
+            id: NodeId(0),
+            class: NodeClass::RaspberryPi,
+            warm_containers: 1,
+            cpu_load_pct: 0.0,
+            location: (0.0, 0.0),
+            has_camera: true,
+        });
+        assert_eq!(t.edge(), None);
+        assert_eq!(t.cell_count(), 0);
+    }
+
+    #[test]
     fn nearest_camera_picks_closest() {
         let mut t = Topology::star(
             4,
@@ -195,6 +352,27 @@ mod tests {
         t.node_mut(NodeId(1)).location = (10.0, 0.0);
         t.node_mut(NodeId(2)).location = (1.0, 1.0);
         assert_eq!(t.nearest_camera((0.0, 0.0)), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn nearest_camera_tie_breaks_by_id() {
+        // Two cameras exactly equidistant from the query point: the lower
+        // NodeId must win, deterministically, regardless of layout order.
+        let mut t = Topology::star(
+            4,
+            &[
+                (NodeClass::RaspberryPi, 2, true),
+                (NodeClass::RaspberryPi, 2, true),
+            ],
+            LinkModel::wifi(),
+        );
+        t.node_mut(NodeId(1)).location = (0.0, 5.0);
+        t.node_mut(NodeId(2)).location = (5.0, 0.0);
+        assert_eq!(t.nearest_camera((0.0, 0.0)), Some(NodeId(1)));
+        // Swap the coordinates: same distance pair, same winner.
+        t.node_mut(NodeId(1)).location = (5.0, 0.0);
+        t.node_mut(NodeId(2)).location = (0.0, 5.0);
+        assert_eq!(t.nearest_camera((0.0, 0.0)), Some(NodeId(1)));
     }
 
     #[test]
@@ -215,5 +393,123 @@ mod tests {
             location: (0.0, 0.0),
             has_camera: false,
         });
+    }
+
+    fn two_cells() -> Topology {
+        Topology::multi_cell(
+            &[
+                CellSpec::new(
+                    4,
+                    &[
+                        (NodeClass::RaspberryPi, 2, true),
+                        (NodeClass::RaspberryPi, 2, false),
+                    ],
+                    LinkModel::wifi(),
+                ),
+                CellSpec::new(2, &[(NodeClass::SmartPhone, 1, false)], LinkModel::wifi()),
+            ],
+            LinkModel::new(5.0, 1000.0, 0.0),
+        )
+    }
+
+    #[test]
+    fn multi_cell_membership() {
+        let t = two_cells();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.cell_count(), 2);
+        let edges: Vec<NodeId> = t.edges().collect();
+        assert_eq!(edges, vec![NodeId(0), NodeId(3)]);
+        // Cell 0: devices 1, 2. Cell 1: device 4.
+        assert_eq!(t.cell_edge_of(NodeId(1)), Some(NodeId(0)));
+        assert_eq!(t.cell_edge_of(NodeId(2)), Some(NodeId(0)));
+        assert_eq!(t.cell_edge_of(NodeId(4)), Some(NodeId(3)));
+        assert_eq!(t.cell_edge_of(NodeId(0)), Some(NodeId(0)));
+        assert_eq!(t.cell_edge_of(NodeId(3)), Some(NodeId(3)));
+        let c0: Vec<NodeId> = t.devices_in_cell(NodeId(0)).map(|n| n.id).collect();
+        assert_eq!(c0, vec![NodeId(1), NodeId(2)]);
+        let c1: Vec<NodeId> = t.devices_in_cell(NodeId(3)).map(|n| n.id).collect();
+        assert_eq!(c1, vec![NodeId(4)]);
+        let peers: Vec<NodeId> = t.peer_edges(NodeId(0)).collect();
+        assert_eq!(peers, vec![NodeId(3)]);
+    }
+
+    #[test]
+    fn nearest_camera_in_cell_ignores_other_cells() {
+        let mut t = Topology::multi_cell(
+            &[
+                CellSpec::new(2, &[(NodeClass::RaspberryPi, 1, true)], LinkModel::wifi()),
+                CellSpec::new(2, &[(NodeClass::RaspberryPi, 1, true)], LinkModel::wifi()),
+            ],
+            LinkModel::new(5.0, 1000.0, 0.0),
+        );
+        // The cell-1 camera (n3) is far closer to the query point, but an
+        // edge can only activate devices in its own cell.
+        t.node_mut(NodeId(1)).location = (90.0, 0.0);
+        t.node_mut(NodeId(3)).location = (0.0, 1.0);
+        assert_eq!(t.nearest_camera((0.0, 0.0)), Some(NodeId(3)));
+        assert_eq!(t.nearest_camera_in_cell(NodeId(0), (0.0, 0.0)), Some(NodeId(1)));
+        assert_eq!(t.nearest_camera_in_cell(NodeId(2), (0.0, 0.0)), Some(NodeId(3)));
+    }
+
+    #[test]
+    fn multi_cell_backhaul_links() {
+        let t = two_cells();
+        // Edge↔edge backhaul exists, symmetric, with backhaul parameters.
+        let l = t.link(NodeId(0), NodeId(3)).expect("backhaul");
+        assert_eq!(l.latency_ms, 5.0);
+        assert!(t.link(NodeId(3), NodeId(0)).is_some());
+        // No cross-cell device links: a device only reaches its own edge.
+        assert!(t.link(NodeId(1), NodeId(3)).is_none());
+        assert!(t.link(NodeId(1), NodeId(4)).is_none());
+        assert!(t.link(NodeId(3), NodeId(1)).is_none());
+    }
+
+    #[test]
+    fn multi_cell_full_mesh_between_edges() {
+        let cell = CellSpec::new(2, &[(NodeClass::RaspberryPi, 1, true)], LinkModel::wifi());
+        let t = Topology::multi_cell(
+            &[cell.clone(), cell.clone(), cell.clone(), cell],
+            LinkModel::new(5.0, 1000.0, 0.0),
+        );
+        let edges: Vec<NodeId> = t.edges().collect();
+        assert_eq!(edges.len(), 4);
+        for &a in &edges {
+            for &b in &edges {
+                if a != b {
+                    assert!(t.link(a, b).is_some(), "missing backhaul {a}->{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_cell_shim_matches_star() {
+        // `star` is a shim over `multi_cell` — a one-cell federation must
+        // be byte-for-byte the classic star (ids, classes, locations,
+        // links, cell assignment).
+        let devices = [
+            (NodeClass::RaspberryPi, 2, true),
+            (NodeClass::SmartPhone, 1, false),
+        ];
+        let star = Topology::star(4, &devices, LinkModel::wifi());
+        let one = Topology::multi_cell(
+            &[CellSpec::new(4, &devices, LinkModel::wifi())],
+            LinkModel::new(5.0, 1000.0, 0.0),
+        );
+        assert_eq!(star.nodes(), one.nodes());
+        assert_eq!(star.cell_count(), 1);
+        assert_eq!(one.cell_count(), 1);
+        for a in 0..star.len() as u32 {
+            for b in 0..star.len() as u32 {
+                assert_eq!(
+                    star.link(NodeId(a), NodeId(b)),
+                    one.link(NodeId(a), NodeId(b)),
+                    "link {a}<->{b}"
+                );
+            }
+        }
+        for n in 0..star.len() as u32 {
+            assert_eq!(star.cell_edge_of(NodeId(n)), one.cell_edge_of(NodeId(n)));
+        }
     }
 }

@@ -14,4 +14,4 @@ pub mod table;
 
 pub use calibration::{ClassProfile, profile_for};
 pub use predictor::{PredictInput, Predictor};
-pub use table::{DeviceState, ProfileTable};
+pub use table::{DeviceState, PeerEdgeState, PeerTable, ProfileTable};

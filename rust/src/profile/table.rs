@@ -9,7 +9,7 @@
 
 use std::collections::HashMap;
 
-use crate::core::message::ProfileUpdate;
+use crate::core::message::{EdgeSummary, ProfileUpdate};
 use crate::core::{NodeClass, NodeId};
 
 /// Last-known state of one device, as seen by the MP table.
@@ -112,6 +112,127 @@ impl ProfileTable {
     }
 }
 
+/// Last-known state of one *peer edge server*, fed by periodic
+/// [`EdgeSummary`] gossip over the backhaul (federation extension).
+///
+/// The same staleness discipline as the MP table applies: a forwarding
+/// decision only trusts summaries younger than the staleness cap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeerEdgeState {
+    pub edge: NodeId,
+    pub busy_containers: u32,
+    pub warm_containers: u32,
+    pub queued_images: u32,
+    pub cpu_load_pct: f64,
+    /// Idle device containers behind that edge (its cell's spare capacity).
+    pub device_idle_containers: u32,
+    /// When the underlying gossip message was sent (ms since run start).
+    pub updated_ms: f64,
+}
+
+impl PeerEdgeState {
+    /// Idle warm containers in the peer's own pool.
+    pub fn idle_containers(&self) -> u32 {
+        self.warm_containers.saturating_sub(self.busy_containers)
+    }
+
+    /// Idle capacity of the whole peer cell (edge pool + devices).
+    pub fn cell_idle_containers(&self) -> u32 {
+        self.idle_containers() + self.device_idle_containers
+    }
+}
+
+/// Per-edge view of the federation: peer edge summaries in deterministic
+/// registration order. Owned by each edge server; membership is established
+/// by edge Joins (live) or the first gossip received (virtual).
+#[derive(Debug, Clone, Default)]
+pub struct PeerTable {
+    peers: HashMap<NodeId, PeerEdgeState>,
+    order: Vec<NodeId>,
+}
+
+impl PeerTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a peer edge with no state yet (its first gossip fills it).
+    pub fn register(&mut self, edge: NodeId, now_ms: f64) {
+        if !self.peers.contains_key(&edge) {
+            self.order.push(edge);
+            self.peers.insert(
+                edge,
+                PeerEdgeState {
+                    edge,
+                    busy_containers: 0,
+                    warm_containers: 0,
+                    queued_images: 0,
+                    cpu_load_pct: 0.0,
+                    device_idle_containers: 0,
+                    // A registration-only entry is born maximally stale so
+                    // the scheduler never forwards onto a peer it has not
+                    // heard from.
+                    updated_ms: now_ms - 1e18,
+                },
+            );
+        }
+    }
+
+    /// Apply a gossip summary; unknown senders auto-register (virtual mode
+    /// has no explicit edge-join handshake).
+    pub fn apply(&mut self, s: &EdgeSummary) {
+        if !self.peers.contains_key(&s.edge) {
+            self.order.push(s.edge);
+        }
+        self.peers.insert(
+            s.edge,
+            PeerEdgeState {
+                edge: s.edge,
+                busy_containers: s.busy_containers,
+                warm_containers: s.warm_containers,
+                queued_images: s.queued_images,
+                cpu_load_pct: s.cpu_load_pct,
+                device_idle_containers: s.device_idle_containers,
+                updated_ms: s.sent_ms,
+            },
+        );
+    }
+
+    /// Optimistic busy bump after forwarding a task to `edge` — keeps a
+    /// burst from all picking the same peer before its next gossip.
+    pub fn bump_busy(&mut self, edge: NodeId) {
+        if let Some(p) = self.peers.get_mut(&edge) {
+            p.busy_containers += 1;
+        }
+    }
+
+    pub fn get(&self, edge: NodeId) -> Option<&PeerEdgeState> {
+        self.peers.get(&edge)
+    }
+
+    pub fn len(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+
+    /// Peers in registration order (deterministic).
+    pub fn iter(&self) -> impl Iterator<Item = &PeerEdgeState> {
+        self.order.iter().filter_map(|n| self.peers.get(n))
+    }
+
+    /// Peers whose last gossip is at most `max_age_ms` old at `now_ms`.
+    pub fn fresh_within(
+        &self,
+        now_ms: f64,
+        max_age_ms: f64,
+    ) -> impl Iterator<Item = &PeerEdgeState> {
+        self.iter().filter(move |s| now_ms - s.updated_ms <= max_age_ms)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,5 +311,53 @@ mod tests {
             updated_ms: 0.0,
         };
         assert_eq!(s.idle_containers(), 0);
+    }
+
+    fn gossip(edge: u32, busy: u32, warm: u32, dev_idle: u32, sent: f64) -> EdgeSummary {
+        EdgeSummary {
+            edge: NodeId(edge),
+            busy_containers: busy,
+            warm_containers: warm,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: dev_idle,
+            sent_ms: sent,
+        }
+    }
+
+    #[test]
+    fn peer_table_apply_and_freshness() {
+        let mut t = PeerTable::new();
+        t.apply(&gossip(3, 1, 4, 2, 100.0));
+        let p = t.get(NodeId(3)).unwrap();
+        assert_eq!(p.idle_containers(), 3);
+        assert_eq!(p.cell_idle_containers(), 5);
+        assert_eq!(t.fresh_within(150.0, 100.0).count(), 1);
+        assert_eq!(t.fresh_within(500.0, 100.0).count(), 0);
+    }
+
+    #[test]
+    fn peer_registration_starts_stale() {
+        let mut t = PeerTable::new();
+        t.register(NodeId(3), 0.0);
+        assert_eq!(t.len(), 1);
+        // Never gossiped → never fresh → never a forwarding target.
+        assert_eq!(t.fresh_within(0.0, 1e9).count(), 0);
+        // Registration is idempotent and keeps order.
+        t.register(NodeId(3), 50.0);
+        t.apply(&gossip(6, 0, 2, 0, 50.0));
+        let order: Vec<u32> = t.iter().map(|p| p.edge.0).collect();
+        assert_eq!(order, vec![3, 6]);
+    }
+
+    #[test]
+    fn peer_bump_busy_is_optimistic() {
+        let mut t = PeerTable::new();
+        t.apply(&gossip(3, 0, 2, 0, 0.0));
+        t.bump_busy(NodeId(3));
+        assert_eq!(t.get(NodeId(3)).unwrap().idle_containers(), 1);
+        // The next gossip overwrites the optimistic estimate.
+        t.apply(&gossip(3, 0, 2, 0, 20.0));
+        assert_eq!(t.get(NodeId(3)).unwrap().idle_containers(), 2);
     }
 }

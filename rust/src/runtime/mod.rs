@@ -1,16 +1,30 @@
-//! PJRT runtime: load the AOT artifacts (`artifacts/face_<side>.hlo.txt`)
-//! and execute them on the CPU PJRT client from the live hot path.
+//! Model runtime: execute the face-detection graph from the live hot path.
 //!
-//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax ≥ 0.5's
-//! 64-bit-id serialized protos; the text parser reassigns ids — see
-//! DESIGN.md §8 and /opt/xla-example/README.md). The L2 graph was lowered
-//! with `return_tuple=True`, so each execution returns a 3-tuple
-//! `(counts[4], max_score, hist[16])`.
+//! Two interchangeable backends behind [`RuntimeService`]:
+//!
+//! - **PJRT** (`--features pjrt`): loads the AOT artifacts
+//!   (`artifacts/face_<side>.hlo.txt`) and executes them on the CPU PJRT
+//!   client. Interchange is HLO **text** (xla_extension 0.5.1 rejects
+//!   jax ≥ 0.5's 64-bit-id serialized protos; the text parser reassigns
+//!   ids — see DESIGN.md §8). The L2 graph was lowered with
+//!   `return_tuple=True`, so each execution returns a 3-tuple
+//!   `(counts[4], max_score, hist[16])`. Requires the `xla` bindings from
+//!   the build image (see `rust/Cargo.toml`).
+//! - **Stub** (default build): a deterministic CPU kernel over the same
+//!   content-addressed synthetic frames. It produces stable pseudo
+//!   detections and *real, measurable* processing time, so live mode —
+//!   threads, sockets, schedulers, result relay — runs end-to-end on any
+//!   machine with no artifacts and no PJRT toolchain.
 
+use std::path::Path;
+
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{bail, Context};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 /// Outputs of the face-detection graph (fixed shape for every image size).
 #[derive(Debug, Clone, PartialEq)]
@@ -30,7 +44,70 @@ impl Detection {
     }
 }
 
+/// Placeholder image generator (deterministic noise) for drivers that do
+/// not ship real pixels: the executing node regenerates the pixel buffer
+/// from the task id (content-addressed synthetic frames).
+pub fn synth_image(side: u32, seed: u64) -> Vec<f32> {
+    let mut rng = crate::util::SplitMix64::new(seed);
+    (0..(side * side * 3) as usize).map(|_| rng.uniform() as f32).collect()
+}
+
+fn parse_artifact_name(name: &str) -> Option<u32> {
+    name.strip_prefix("face_")?.strip_suffix(".hlo.txt")?.parse().ok()
+}
+
+/// The image sides the stub backend serves when no artifact directory is
+/// present (the AOT pipeline's standard variants).
+pub const DEFAULT_SIDES: [u32; 3] = [64, 128, 256];
+
+/// The best variant for a requested side (exact, else the smallest variant
+/// that fits, else the largest available). `sides` must be ascending and
+/// non-empty.
+fn pick_from(sides: &[u32], requested: u32) -> u32 {
+    *sides
+        .iter()
+        .find(|&&s| s >= requested)
+        .unwrap_or_else(|| sides.last().expect("nonempty side set"))
+}
+
+/// Stub execution: a deterministic single-pass kernel over the synthetic
+/// frame (sum/max/histogram of pixel triples — the same reductions the
+/// real graph's final stage performs), timed for real.
+fn stub_detect(side: u32, seed: u64) -> (Detection, f64) {
+    let start = std::time::Instant::now();
+    let pixels = synth_image(side, seed);
+    let mut counts = vec![0f32; 4];
+    let mut hist = vec![0f32; 16];
+    let mut max_score = 0f32;
+    // Pyramid levels mirror the real model: 64 px → 2 levels, 128 → 3,
+    // 256 → 4.
+    let levels = match side {
+        0..=64 => 2,
+        65..=128 => 3,
+        _ => 4,
+    };
+    for (i, px) in pixels.chunks_exact(3).enumerate() {
+        let score = (px[0] + px[1] + px[2]) * 2.5; // in [0, 7.5)
+        if score > 7.0 {
+            let level = i % levels;
+            counts[level] += 1.0;
+            let bin = (score * 2.0) as usize;
+            hist[bin.min(15)] += 1.0;
+            if score > max_score {
+                max_score = score;
+            }
+        }
+    }
+    let ms = start.elapsed().as_secs_f64() * 1e3;
+    (Detection { counts, max_score, hist }, ms)
+}
+
+// ---------------------------------------------------------------------
+// PJRT backend (feature `pjrt`).
+// ---------------------------------------------------------------------
+
 /// One compiled model variant.
+#[cfg(feature = "pjrt")]
 struct Variant {
     exe: xla::PjRtLoadedExecutable,
     side: u32,
@@ -39,12 +116,14 @@ struct Variant {
 /// The model runtime: a PJRT CPU client plus one compiled executable per
 /// image-size variant. Compilation happens once at startup; execution is
 /// synchronous and allocation-light.
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     client: xla::PjRtClient,
     variants: HashMap<u32, Variant>,
     dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     /// Discover and compile every `face_<side>.hlo.txt` under `dir`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
@@ -94,11 +173,7 @@ impl ModelRuntime {
     /// The best variant for a requested side (exact, else the smallest
     /// variant that fits, else the largest available).
     pub fn pick_side(&self, requested: u32) -> u32 {
-        let sides = self.sides();
-        *sides
-            .iter()
-            .find(|&&s| s >= requested)
-            .unwrap_or_else(|| sides.last().expect("nonempty"))
+        pick_from(&self.sides(), requested)
     }
 
     /// Run detection on an `(side, side, 3)` f32 image in [0, 1],
@@ -136,16 +211,18 @@ impl ModelRuntime {
         self.variants.len()
     }
 
-    /// Placeholder image generator (deterministic noise) for drivers that
-    /// do not ship real pixels.
+    /// See the free function [`synth_image`].
     pub fn synth_image(side: u32, seed: u64) -> Vec<f32> {
-        let mut rng = crate::util::SplitMix64::new(seed);
-        (0..(side * side * 3) as usize).map(|_| rng.uniform() as f32).collect()
+        synth_image(side, seed)
     }
 }
 
-fn parse_artifact_name(name: &str) -> Option<u32> {
-    name.strip_prefix("face_")?.strip_suffix(".hlo.txt")?.parse().ok()
+// Keep `Variant.side` used even in builds where logging is stripped.
+#[cfg(feature = "pjrt")]
+impl std::fmt::Debug for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Variant(side={})", self.side)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -154,9 +231,10 @@ fn parse_artifact_name(name: &str) -> Option<u32> {
 
 /// The `xla` crate's client/executable types are `Rc`-based (not `Send`),
 /// so they cannot be shared across container worker threads directly.
-/// `RuntimeService` owns the whole [`ModelRuntime`] on one dedicated thread
-/// and serves blocking execution requests over a channel — the same
-/// pattern a GPU-serving system uses for a single-stream device.
+/// `RuntimeService` owns the whole backend on one dedicated thread and
+/// serves blocking execution requests over a channel — the same pattern a
+/// GPU-serving system uses for a single-stream device. The stub backend
+/// uses the identical shape so live mode is driver-agnostic.
 #[derive(Clone)]
 pub struct RuntimeService {
     tx: std::sync::mpsc::Sender<ExecRequest>,
@@ -170,7 +248,13 @@ struct ExecRequest {
 }
 
 impl RuntimeService {
-    /// Spawn the service thread; returns once artifacts are compiled.
+    /// Spawn the service thread; returns once the backend is ready.
+    ///
+    /// With the `pjrt` feature this compiles the artifacts under `dir`
+    /// (failing if there are none). Without it, the stub backend serves
+    /// the sides advertised by `dir`'s artifact names when present, else
+    /// [`DEFAULT_SIDES`].
+    #[cfg(feature = "pjrt")]
     pub fn spawn(dir: impl AsRef<Path>) -> Result<RuntimeService> {
         let dir = dir.as_ref().to_path_buf();
         let (tx, rx) = std::sync::mpsc::channel::<ExecRequest>();
@@ -190,7 +274,7 @@ impl RuntimeService {
                 };
                 while let Ok(req) = rx.recv() {
                     let side = rt.pick_side(req.side);
-                    let pixels = ModelRuntime::synth_image(side, req.seed);
+                    let pixels = synth_image(side, req.seed);
                     let _ = req.reply.send(rt.detect_timed(side, &pixels));
                 }
             })
@@ -198,6 +282,52 @@ impl RuntimeService {
         let sides = ready_rx
             .recv()
             .context("runtime thread died during startup")??;
+        Ok(RuntimeService { tx, sides })
+    }
+
+    /// Spawn the stub backend (no PJRT in this build). `dir` is scanned
+    /// for artifact names to mirror the real variant set when available.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn spawn(dir: impl AsRef<Path>) -> Result<RuntimeService> {
+        let mut sides: Vec<u32> = std::fs::read_dir(dir.as_ref())
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                e.path()
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .and_then(parse_artifact_name)
+            })
+            .collect();
+        sides.sort_unstable();
+        sides.dedup();
+        if sides.is_empty() {
+            sides = DEFAULT_SIDES.to_vec();
+        }
+        log::info!("runtime: stub backend (no pjrt feature), sides {sides:?}");
+        Self::spawn_stub_with(sides)
+    }
+
+    /// Spawn the stub backend explicitly, regardless of features — used by
+    /// tests and demos that must run without artifacts or PJRT.
+    pub fn spawn_stub() -> RuntimeService {
+        Self::spawn_stub_with(DEFAULT_SIDES.to_vec())
+            .expect("stub runtime thread spawn cannot fail")
+    }
+
+    fn spawn_stub_with(sides: Vec<u32>) -> Result<RuntimeService> {
+        let (tx, rx) = std::sync::mpsc::channel::<ExecRequest>();
+        let sides_thread = sides.clone();
+        std::thread::Builder::new()
+            .name("stub-runtime".into())
+            .spawn(move || {
+                while let Ok(req) = rx.recv() {
+                    let side = pick_from(&sides_thread, req.side);
+                    let _ = req.reply.send(Ok(stub_detect(side, req.seed)));
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawning stub runtime thread: {e}"))?;
         Ok(RuntimeService { tx, sides })
     }
 
@@ -212,14 +342,8 @@ impl RuntimeService {
         self.tx
             .send(ExecRequest { side, seed, reply })
             .map_err(|_| anyhow::anyhow!("runtime thread gone"))?;
-        rx.recv().context("runtime thread dropped the request")?
-    }
-}
-
-// Keep `Variant.side` used even in builds where logging is stripped.
-impl std::fmt::Debug for Variant {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Variant(side={})", self.side)
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("runtime thread dropped the request"))?
     }
 }
 
@@ -236,6 +360,39 @@ mod tests {
         assert_eq!(parse_artifact_name("face_64.hlo"), None);
     }
 
+    #[test]
+    fn pick_from_prefers_fitting_variant() {
+        let sides = [64, 128, 256];
+        assert_eq!(pick_from(&sides, 64), 64);
+        assert_eq!(pick_from(&sides, 100), 128);
+        assert_eq!(pick_from(&sides, 999), 256);
+        assert_eq!(pick_from(&sides, 1), 64);
+    }
+
+    #[test]
+    fn stub_detect_is_deterministic_and_timed() {
+        let (a, ms_a) = stub_detect(64, 7);
+        let (b, _ms_b) = stub_detect(64, 7);
+        assert_eq!(a, b, "stub execution must be deterministic");
+        assert!(ms_a >= 0.0);
+        assert_eq!(a.counts.len(), 4);
+        assert_eq!(a.hist.len(), 16);
+        let (c, _) = stub_detect(64, 8);
+        assert_ne!(a, c, "different seeds should (a.s.) differ");
+    }
+
+    #[test]
+    fn stub_service_round_trips() {
+        let svc = RuntimeService::spawn_stub();
+        assert_eq!(svc.sides(), &DEFAULT_SIDES);
+        let (det, _ms) = svc.detect_synth(64, 3).expect("detect");
+        let (again, _ms) = svc.detect_synth(64, 3).expect("detect");
+        assert_eq!(det, again);
+        // Requests for unknown sides snap to a served variant.
+        let (_d, _m) = svc.detect_synth(100, 0).expect("snapped side");
+    }
+
     // Integration tests that execute real artifacts live in
-    // rust/tests/runtime_integration.rs (they need `make artifacts`).
+    // rust/tests/runtime_integration.rs (they need `make artifacts` and
+    // `--features pjrt`).
 }

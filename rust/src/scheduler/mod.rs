@@ -4,11 +4,16 @@
 //! simulator and the live socket deployment: both construct the same
 //! [`DeviceCtx`]/[`EdgeCtx`] views and call the same `decide_*` methods.
 //!
-//! Two decision points, mirroring the paper's two levels:
+//! Three decision points — the paper's two levels plus the federation
+//! extension (DESIGN.md §Federation):
 //! - **device-level** (APr decision thread): keep the image local or
 //!   forward it to the edge server;
 //! - **edge-level** (APe decision thread): run in the edge pool or offload
-//!   to another end device.
+//!   to another end device in the same cell;
+//! - **federation-level** (edge, multi-cell deployments): when the cell is
+//!   exhausted, forward the image over the backhaul to a peer edge server
+//!   chosen from gossiped MP summaries. Only the DDS family federates;
+//!   the comparison baselines never return `ToPeerEdge`.
 
 pub mod policies;
 
@@ -18,7 +23,7 @@ pub use policies::{Aoe, Aor, Dds, DdsEnergy, DdsNoAvail, Eods, RandomPolicy, Rou
 
 use crate::core::{ImageMeta, NodeClass, NodeId, Placement};
 use crate::net::LinkModel;
-use crate::profile::{profile_for, Predictor, ProfileTable};
+use crate::profile::{profile_for, PeerTable, Predictor, ProfileTable};
 use crate::util::SplitMix64;
 
 /// Battery reserve below which [`DdsEnergy`] conserves energy (percent).
@@ -93,10 +98,17 @@ pub struct EdgeCtx<'a> {
     pub predictors: &'a PredictorSet,
     /// The MP table (device states from UP pushes, possibly stale).
     pub table: &'a ProfileTable,
-    /// Link from the edge to a device.
+    /// Peer-edge summaries from inter-edge gossip (empty outside a
+    /// federation — single-cell deployments never see a peer).
+    pub peers: &'a PeerTable,
+    /// Link from the edge to another node (cell device or peer edge —
+    /// peer lookups resolve to the backhaul link).
     pub link_to: &'a dyn Fn(NodeId) -> Option<LinkModel>,
-    /// Maximum acceptable profile age for offload decisions.
+    /// Maximum acceptable profile/summary age for offload decisions.
     pub max_staleness_ms: f64,
+    /// The image already crossed a backhaul once. Policies must not
+    /// forward it again (no multi-hop chains — DESIGN.md §Federation).
+    pub forwarded: bool,
 }
 
 impl EdgeCtx<'_> {
@@ -116,7 +128,9 @@ pub trait SchedulerPolicy: Send {
     /// directly in the star topology).
     fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement;
 
-    /// Edge-level decision: `Local` (edge pool) or `Offload(device)`.
+    /// Edge-level decision: `Local` (edge pool), `Offload(device)`, or —
+    /// federation-capable policies only, never when `ctx.forwarded` —
+    /// `ToPeerEdge(edge)` to shed the task to a peer cell.
     fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement;
 }
 

@@ -1,7 +1,7 @@
 //! Policy implementations: DDS (§V.B.3 of the paper) and the comparison
 //! groups AOR / AOE / EODS, plus ablations.
 
-use crate::core::Placement;
+use crate::core::{NodeClass, NodeId, Placement};
 use crate::profile::PredictInput;
 use crate::util::SplitMix64;
 
@@ -21,6 +21,54 @@ fn pinned_device(ctx: &DeviceCtx) -> Option<Placement> {
 fn pinned_edge(ctx: &EdgeCtx) -> Option<Placement> {
     let pin = ctx.img.constraint.pinned_node?;
     Some(if pin == ctx.edge.node { Placement::Local } else { Placement::Offload(pin) })
+}
+
+// ---------------------------------------------------------------------
+// Federation-level fallback shared by the DDS family (DESIGN.md
+// §Federation): when this cell is exhausted — no feasible device candidate
+// was found *and* the edge pool has no idle container — consider shedding
+// the image to a peer edge over the backhaul. Baselines never call this.
+// ---------------------------------------------------------------------
+
+fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
+    // Images that already crossed a backhaul must not hop again.
+    if ctx.forwarded {
+        return None;
+    }
+    // The cell counts as exhausted only when the edge's own pool is full;
+    // otherwise the local pool is still the cheaper choice.
+    if ctx.edge.busy_containers < ctx.edge.warm_containers {
+        return None;
+    }
+    let budget = ctx.remaining_ms();
+    let edge_pred = ctx.predictors.for_class(NodeClass::EdgeServer);
+    let mut best: Option<(f64, NodeId)> = None;
+    for peer in ctx.peers.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
+        let Some(link) = (ctx.link_to)(peer.edge) else { continue };
+        // The peer must advertise spare capacity somewhere in its cell
+        // (own pool or its devices) — the availability check, one level up.
+        if peer.cell_idle_containers() == 0 {
+            continue;
+        }
+        // Predict backhaul transfer + peer-pool execution from the
+        // gossiped summary (the peer may still offload within its cell,
+        // which only improves on this estimate).
+        let inp = PredictInput {
+            size_kb: ctx.img.size_kb,
+            link: Some(link),
+            busy_containers: peer.busy_containers,
+            warm_containers: peer.warm_containers.max(1),
+            queued_images: peer.queued_images,
+            cpu_load_pct: peer.cpu_load_pct,
+        };
+        let t = edge_pred.predict_total_ms(&inp);
+        let better = t <= budget
+            && best.map_or(true, |(bt, be)| t < bt || (t == bt && peer.edge < be));
+        if better {
+            best = Some((t, peer.edge));
+        }
+    }
+    best.map(|(_, e)| Placement::ToPeerEdge(e))
 }
 
 // ---------------------------------------------------------------------
@@ -187,6 +235,10 @@ impl SchedulerPolicy for Dds {
         if let Some((_, node)) = best {
             return Placement::Offload(node);
         }
+        // Federation level: pool and devices exhausted → try a peer cell.
+        if let Some(p) = peer_fallback(ctx) {
+            return p;
+        }
         Placement::Local
     }
 }
@@ -296,6 +348,12 @@ impl SchedulerPolicy for DdsEnergy {
         if let Some((_, _, node)) = best {
             return Placement::Offload(node);
         }
+        // Peer edges are mains-powered infrastructure: shedding to a peer
+        // cell never costs device battery, so the energy policy federates
+        // under the same exhaustion rule as plain DDS.
+        if let Some(p) = peer_fallback(ctx) {
+            return p;
+        }
         Placement::Local
     }
 }
@@ -401,16 +459,17 @@ impl SchedulerPolicy for RandomPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::message::ProfileUpdate;
+    use crate::core::message::{EdgeSummary, ProfileUpdate};
     use crate::core::{Constraint, ImageMeta, NodeClass, NodeId, TaskId};
     use crate::net::LinkModel;
-    use crate::profile::{profile_for, Predictor, ProfileTable};
+    use crate::profile::{profile_for, PeerTable, Predictor, ProfileTable};
     use crate::scheduler::{LocalSnapshot, PredictorSet};
     use once_cell::sync::Lazy;
 
     static RPI_PRED: Lazy<Predictor> =
         Lazy::new(|| Predictor::new(profile_for(NodeClass::RaspberryPi)));
     static PREDICTORS: Lazy<PredictorSet> = Lazy::new(PredictorSet::new);
+    static NO_PEERS: Lazy<PeerTable> = Lazy::new(PeerTable::new);
 
     fn img(seq: u64, deadline: f64) -> ImageMeta {
         ImageMeta {
@@ -473,8 +532,50 @@ mod tests {
             },
             predictors: &PREDICTORS,
             table,
+            peers: &NO_PEERS,
             link_to,
             max_staleness_ms: 200.0,
+            forwarded: false,
+        }
+    }
+
+    /// A federation context: edge pool saturated (`busy` of 4), peer
+    /// summaries supplied, empty-or-given device table.
+    fn fed_ctx<'a>(
+        img: &'a ImageMeta,
+        table: &'a ProfileTable,
+        peers: &'a PeerTable,
+        busy: u32,
+    ) -> EdgeCtx<'a> {
+        EdgeCtx {
+            now_ms: 5.0,
+            img,
+            edge: LocalSnapshot {
+                node: NodeId(0),
+                busy_containers: busy,
+                warm_containers: 4,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+            },
+            predictors: &PREDICTORS,
+            table,
+            peers,
+            link_to: &wifi,
+            max_staleness_ms: 200.0,
+            forwarded: false,
+        }
+    }
+
+    fn peer(edge: u32, busy: u32, warm: u32, sent: f64) -> EdgeSummary {
+        EdgeSummary {
+            edge: NodeId(edge),
+            busy_containers: busy,
+            warm_containers: warm,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: 0,
+            sent_ms: sent,
         }
     }
 
@@ -607,6 +708,141 @@ mod tests {
             dds.decide_edge(&edge_ctx(&im, &t, &wifi)),
             Placement::Offload(NodeId(2))
         );
+    }
+
+    // ---- federation-level decision ----------------------------------
+
+    #[test]
+    fn dds_federates_when_cell_exhausted() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = ProfileTable::new(); // no devices in this cell
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0));
+        let got = p.decide_edge(&fed_ctx(&im, &t, &peers, 4));
+        assert_eq!(got, Placement::ToPeerEdge(NodeId(3)));
+    }
+
+    #[test]
+    fn dds_prefers_own_pool_over_peer() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0));
+        // One idle edge container: keep the task in the cell.
+        let got = p.decide_edge(&fed_ctx(&im, &t, &peers, 3));
+        assert_eq!(got, Placement::Local);
+    }
+
+    #[test]
+    fn dds_prefers_cell_device_over_peer() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = table_with_r2(0, 2); // idle device in the cell
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0));
+        let got = p.decide_edge(&fed_ctx(&im, &t, &peers, 4));
+        assert_eq!(got, Placement::Offload(NodeId(2)));
+    }
+
+    #[test]
+    fn forwarded_images_never_hop_again() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0));
+        let mut ctx = fed_ctx(&im, &t, &peers, 4);
+        ctx.forwarded = true;
+        assert_eq!(p.decide_edge(&ctx), Placement::Local);
+    }
+
+    #[test]
+    fn stale_gossip_blocks_federation() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, -10_000.0)); // ancient summary
+        assert_eq!(p.decide_edge(&fed_ctx(&im, &t, &peers, 4)), Placement::Local);
+    }
+
+    #[test]
+    fn saturated_peer_is_skipped() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 4, 4, 0.0)); // peer pool full, no device slack
+        assert_eq!(p.decide_edge(&fed_ctx(&im, &t, &peers, 4)), Placement::Local);
+        // Device slack behind the peer edge counts as capacity.
+        let mut s = peer(3, 4, 4, 0.0);
+        s.device_idle_containers = 2;
+        peers.apply(&s);
+        assert_eq!(
+            p.decide_edge(&fed_ctx(&im, &t, &peers, 4)),
+            Placement::ToPeerEdge(NodeId(3))
+        );
+    }
+
+    #[test]
+    fn least_loaded_peer_wins_ties_by_id() {
+        let mut p = Dds::new();
+        let im = img(0, 50_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(6, 0, 4, 0.0));
+        peers.apply(&peer(3, 0, 4, 0.0)); // identical state, lower id
+        assert_eq!(
+            p.decide_edge(&fed_ctx(&im, &t, &peers, 4)),
+            Placement::ToPeerEdge(NodeId(3))
+        );
+        // A strictly less-loaded peer beats the id tie-break.
+        peers.apply(&peer(6, 0, 4, 1.0));
+        peers.apply(&peer(3, 3, 4, 1.0));
+        assert_eq!(
+            p.decide_edge(&fed_ctx(&im, &t, &peers, 4)),
+            Placement::ToPeerEdge(NodeId(6))
+        );
+    }
+
+    #[test]
+    fn dds_energy_federates_like_dds() {
+        let mut p = DdsEnergy::new(20.0);
+        let im = img(0, 5_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0));
+        assert_eq!(
+            p.decide_edge(&fed_ctx(&im, &t, &peers, 4)),
+            Placement::ToPeerEdge(NodeId(3))
+        );
+    }
+
+    #[test]
+    fn baselines_never_federate() {
+        let im = img(2, 5_000.0); // even seq → EODS would go to edge
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0));
+        let mut baselines: Vec<Box<dyn SchedulerPolicy>> = vec![
+            Box::new(Aor),
+            Box::new(Aoe),
+            Box::new(Eods),
+            Box::new(RoundRobin::default()),
+            Box::new(RandomPolicy::new(SplitMix64::new(7))),
+        ];
+        for b in baselines.iter_mut() {
+            for _ in 0..8 {
+                let got = b.decide_edge(&fed_ctx(&im, &t, &peers, 4));
+                assert!(
+                    !matches!(got, Placement::ToPeerEdge(_)),
+                    "{} must not federate",
+                    b.name()
+                );
+            }
+        }
     }
 
     #[test]

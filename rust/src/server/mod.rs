@@ -5,15 +5,20 @@
 //! receives images that devices could not handle, and makes the *global*
 //! decision — run in its own container pool or offload to another end
 //! device — against the MP profile table.
+//!
+//! In a federation (DESIGN.md §Federation) each cell runs one of these.
+//! The edge additionally gossips a condensed MP summary to its peer edges,
+//! accepts images peers forward when their cells are exhausted, and routes
+//! results for forwarded work back through the originating edge.
 
 use std::collections::HashMap;
 
 use crate::container::ContainerPool;
-use crate::core::message::{Message, UserRequest};
+use crate::core::message::{EdgeSummary, Message, UserRequest};
 use crate::core::{ImageMeta, NodeClass, NodeId, Placement, TaskId};
 use crate::device::Action;
 use crate::net::Topology;
-use crate::profile::ProfileTable;
+use crate::profile::{PeerTable, ProfileTable};
 use crate::scheduler::{EdgeCtx, LocalSnapshot, PredictorSet, SchedulerPolicy};
 
 /// The edge server state machine.
@@ -30,6 +35,11 @@ pub struct EdgeNode {
     max_staleness_ms: f64,
     /// Tasks executing in the local pool.
     inflight: HashMap<TaskId, ImageMeta>,
+    /// Peer-edge summaries from backhaul gossip (empty single-cell).
+    peers: PeerTable,
+    /// Tasks a *peer* forwarded to this cell → the edge to return the
+    /// result through (origin devices are unreachable across cells).
+    forwarded_from: HashMap<TaskId, NodeId>,
 }
 
 impl EdgeNode {
@@ -49,6 +59,8 @@ impl EdgeNode {
             topology,
             max_staleness_ms,
             inflight: HashMap::new(),
+            peers: PeerTable::new(),
+            forwarded_from: HashMap::new(),
         }
     }
 
@@ -62,6 +74,29 @@ impl EdgeNode {
 
     pub fn table(&self) -> &ProfileTable {
         &self.table
+    }
+
+    pub fn peers(&self) -> &PeerTable {
+        &self.peers
+    }
+
+    /// The condensed MP summary this edge gossips to its peers: own pool
+    /// state plus the fresh idle capacity of its cell's devices.
+    pub fn summary(&self, now_ms: f64) -> EdgeSummary {
+        let device_idle = self
+            .table
+            .fresh_within(now_ms, self.max_staleness_ms)
+            .map(|d| d.idle_containers())
+            .sum();
+        EdgeSummary {
+            edge: self.id,
+            busy_containers: self.pool.busy_count(),
+            warm_containers: self.pool.warm_count(),
+            queued_images: self.pool.queued_count(),
+            cpu_load_pct: self.pool.bg_load(),
+            device_idle_containers: device_idle,
+            sent_ms: now_ms,
+        }
     }
 
     fn snapshot(&self) -> LocalSnapshot {
@@ -79,30 +114,46 @@ impl EdgeNode {
     pub fn on_message(&mut self, msg: Message, now_ms: f64, out: &mut Vec<Action>) {
         match msg {
             Message::User(req) => self.on_user(req, now_ms, out),
-            Message::Image(img) => self.on_image(img, now_ms, out),
+            Message::Image(img) => self.on_image(img, now_ms, false, out),
             Message::Profile(up) => self.table.apply(&up),
             Message::Join { node, class_tag, warm_containers } => {
-                let class = match class_tag {
-                    1 => NodeClass::RaspberryPi,
-                    2 => NodeClass::SmartPhone,
-                    _ => NodeClass::RaspberryPi,
-                };
-                self.table.register(node, class, warm_containers, now_ms);
+                if class_tag == 0 {
+                    // A peer edge server joining the federation (live mode
+                    // dials peers explicitly; virtual mode auto-registers
+                    // on first gossip instead).
+                    self.peers.register(node, now_ms);
+                } else {
+                    let class = match class_tag {
+                        2 => NodeClass::SmartPhone,
+                        _ => NodeClass::RaspberryPi,
+                    };
+                    self.table.register(node, class, warm_containers, now_ms);
+                }
                 out.push(Action::Send {
                     to: node,
                     msg: Message::JoinAck { assigned: node },
                     reliable: true,
                 });
             }
+            Message::EdgeSummary(s) => self.peers.apply(&s),
+            Message::Forward { img, from_edge } => {
+                // A peer's cell was exhausted; this cell schedules the
+                // image (never re-forwarding) and owes the result to the
+                // originating edge.
+                self.forwarded_from.insert(img.task, from_edge);
+                self.on_image(img, now_ms, true, out);
+            }
             Message::Result { task, processed_by, detections, max_score, process_ms } => {
-                // Relay: a device finished somebody else's image; route the
-                // result to the origin.
-                if let Some(img) = self.inflight.remove(&task) {
-                    out.push(Action::Send {
-                        to: img.origin,
-                        msg: Message::Result { task, processed_by, detections, max_score, process_ms },
-                        reliable: true,
-                    });
+                let relay = Message::Result { task, processed_by, detections, max_score, process_ms };
+                if let Some(peer) = self.forwarded_from.remove(&task) {
+                    // A device of this cell finished work forwarded from a
+                    // peer cell: return it through the originating edge.
+                    self.inflight.remove(&task);
+                    out.push(Action::Send { to: peer, msg: relay, reliable: true });
+                } else if let Some(img) = self.inflight.remove(&task) {
+                    // Relay: somebody in (or beyond) this cell finished an
+                    // image originated here; route the result home.
+                    out.push(Action::Send { to: img.origin, msg: relay, reliable: true });
                 } else {
                     log::warn!("edge: result for unknown task {task}");
                 }
@@ -113,9 +164,11 @@ impl EdgeNode {
 
     /// IS: user request → activate the nearest camera (the paper's mall
     /// scenario: "the edge server will stimulate end devices that are in
-    /// close proximity to the user").
+    /// close proximity to the user"). The search is restricted to this
+    /// edge's own cell — it has no link to another cell's devices, so a
+    /// cross-cell Activate could never be delivered.
     fn on_user(&mut self, req: UserRequest, _now_ms: f64, out: &mut Vec<Action>) {
-        match self.topology.nearest_camera(req.location) {
+        match self.topology.nearest_camera_in_cell(self.id, req.location) {
             Some(device) => {
                 out.push(Action::Send {
                     to: device,
@@ -127,8 +180,12 @@ impl EdgeNode {
         }
     }
 
-    /// APe: an image a device declined (or AOE/EODS sent) — global decision.
-    fn on_image(&mut self, img: ImageMeta, now_ms: f64, out: &mut Vec<Action>) {
+    /// APe: an image a device declined (or AOE/EODS sent, or a peer edge
+    /// forwarded) — global decision. `forwarded` marks images that already
+    /// crossed a backhaul: they may use this cell's pool and devices but
+    /// never hop to another peer, and their placement record (made at the
+    /// originating edge as `ToPeerEdge`) is left untouched.
+    fn on_image(&mut self, img: ImageMeta, now_ms: f64, forwarded: bool, out: &mut Vec<Action>) {
         let placement = {
             let topology = &self.topology;
             let edge_id = self.id;
@@ -139,15 +196,19 @@ impl EdgeNode {
                 edge: self.snapshot(),
                 predictors: &self.predictors,
                 table: &self.table,
+                peers: &self.peers,
                 link_to: &link_to,
                 max_staleness_ms: self.max_staleness_ms,
+                forwarded,
             };
             self.policy.decide_edge(&ctx)
         };
 
         match placement {
             Placement::Offload(target) => {
-                out.push(Action::RecordPlaced { task: img.task, placement });
+                if !forwarded {
+                    out.push(Action::RecordPlaced { task: img.task, placement });
+                }
                 // Track for result relay.
                 self.inflight.insert(img.task, img);
                 // Optimistic MP bump: the offloaded image will occupy a
@@ -156,8 +217,24 @@ impl EdgeNode {
                 self.bump_busy(target);
                 out.push(Action::Send { to: target, msg: Message::Image(img), reliable: false });
             }
+            Placement::ToPeerEdge(peer) if !forwarded => {
+                out.push(Action::RecordPlaced { task: img.task, placement });
+                // Track for the result relayed back from the peer edge.
+                self.inflight.insert(img.task, img);
+                // Optimistic summary bump, mirroring the device-table one.
+                self.peers.bump_busy(peer);
+                // Backhaul is wired infrastructure: forward reliably (the
+                // access hop already carried the UDP-loss risk).
+                out.push(Action::Send {
+                    to: peer,
+                    msg: Message::Forward { img, from_edge: self.id },
+                    reliable: true,
+                });
+            }
             _ => {
-                out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
+                if !forwarded {
+                    out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
+                }
                 self.run_local(img, now_ms, out);
             }
         }
@@ -172,24 +249,28 @@ impl EdgeNode {
         now_ms: f64,
         out: &mut Vec<Action>,
     ) {
-        match self.inflight.remove(&task) {
-            Some(img) if img.origin != self.id => {
-                out.push(Action::Send {
-                    to: img.origin,
-                    msg: Message::Result {
-                        task,
-                        processed_by: self.id,
-                        detections: 0,
-                        max_score: 0.0,
-                        process_ms,
-                    },
-                    reliable: true,
-                });
+        let result = Message::Result {
+            task,
+            processed_by: self.id,
+            detections: 0,
+            max_score: 0.0,
+            process_ms,
+        };
+        if let Some(peer) = self.forwarded_from.remove(&task) {
+            // Forwarded work executed in this edge's own pool: the result
+            // goes back through the edge that forwarded it.
+            self.inflight.remove(&task);
+            out.push(Action::Send { to: peer, msg: result, reliable: true });
+        } else {
+            match self.inflight.remove(&task) {
+                Some(img) if img.origin != self.id => {
+                    out.push(Action::Send { to: img.origin, msg: result, reliable: true });
+                }
+                Some(_) => {
+                    out.push(Action::RecordCompleted { task, at_ms: now_ms, process_ms });
+                }
+                None => log::warn!("edge: completion for unknown task {task}"),
             }
-            Some(_) => {
-                out.push(Action::RecordCompleted { task, at_ms: now_ms, process_ms });
-            }
-            None => log::warn!("edge: completion for unknown task {task}"),
         }
         if let Some(next) = self.pool.complete(container, now_ms) {
             out.push(Action::RecordStarted { task: next.task, at_ms: next.start_ms });
@@ -382,6 +463,258 @@ mod tests {
             a,
             Action::Send { to: NodeId(1), msg: Message::Activate { .. }, .. }
         )));
+    }
+
+    // ---- federation -------------------------------------------------
+
+    /// Two cells: edge 0 (devices 1, 2) ↔ edge 3 (device 4).
+    fn fed_edge(policy: PolicyKind) -> EdgeNode {
+        use crate::net::{CellSpec, LinkModel};
+        let topo = Topology::multi_cell(
+            &[
+                CellSpec::new(
+                    4,
+                    &[
+                        (NodeClass::RaspberryPi, 2, true),
+                        (NodeClass::RaspberryPi, 2, false),
+                    ],
+                    LinkModel::wifi(),
+                ),
+                CellSpec::new(4, &[(NodeClass::RaspberryPi, 2, false)], LinkModel::wifi()),
+            ],
+            LinkModel::new(5.0, 1000.0, 0.0),
+        );
+        EdgeNode::new(
+            NodeId(0),
+            ContainerPool::new(profile_for(NodeClass::EdgeServer), 4),
+            policy.build(1),
+            topo,
+            200.0,
+        )
+    }
+
+    fn gossip_from(edge: u32, busy: u32, warm: u32, sent: f64) -> Message {
+        Message::EdgeSummary(crate::core::message::EdgeSummary {
+            edge: NodeId(edge),
+            busy_containers: busy,
+            warm_containers: warm,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: 0,
+            sent_ms: sent,
+        })
+    }
+
+    #[test]
+    fn gossip_summary_reflects_pool_and_devices() {
+        let mut e = fed_edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        let s = e.summary(10.0);
+        assert_eq!(s.edge, NodeId(0));
+        assert_eq!(s.warm_containers, 4);
+        assert_eq!(s.busy_containers, 0);
+        assert_eq!(s.device_idle_containers, 4);
+        assert_eq!(s.sent_ms, 10.0);
+    }
+
+    #[test]
+    fn edge_summary_message_updates_peer_table() {
+        let mut e = fed_edge(PolicyKind::Dds);
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 1, 4, 5.0), 5.0, &mut out);
+        assert!(out.is_empty());
+        let p = e.peers().get(NodeId(3)).expect("peer registered");
+        assert_eq!(p.idle_containers(), 3);
+    }
+
+    #[test]
+    fn exhausted_edge_forwards_to_peer() {
+        let mut e = fed_edge(PolicyKind::Dds);
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        // No devices joined: the first four images saturate the pool.
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 5_000.0, 1)), 1.0, &mut out);
+        }
+        assert_eq!(e.pool().busy_count(), 4);
+        out.clear();
+        // The fifth image finds pool + devices exhausted → backhaul.
+        e.on_message(Message::Image(img(5, 5_000.0, 1)), 2.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(3), msg: Message::Forward { from_edge: NodeId(0), .. }, reliable: true }
+        )));
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordPlaced { placement: Placement::ToPeerEdge(NodeId(3)), .. }
+        )));
+        // Optimistic bump: a same-burst sixth image must not also pick the
+        // peer blindly once its advertised capacity is used up.
+        for t in 6..=9 {
+            out.clear();
+            e.on_message(Message::Image(img(t, 5_000.0, 1)), 2.0, &mut out);
+        }
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::Send { msg: Message::Forward { .. }, .. })),
+            "peer capacity exhausted, must fall back to the local queue"
+        );
+    }
+
+    #[test]
+    fn forwarded_image_runs_locally_and_result_returns_via_origin_edge() {
+        let mut e = fed_edge(PolicyKind::Dds);
+        let mut out = Vec::new();
+        // Edge 3 forwards an image whose origin (device 4) lives in its
+        // cell; our cell has no joined devices → run in our pool.
+        e.on_message(
+            Message::Forward { img: img(7, 5_000.0, 4), from_edge: NodeId(3) },
+            10.0,
+            &mut out,
+        );
+        assert_eq!(e.pool().busy_count(), 1);
+        // No placement record here: the originating edge already recorded
+        // ToPeerEdge.
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordPlaced { .. })));
+        out.clear();
+        e.on_container_done(0, TaskId(7), 223.0, 240.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(3), msg: Message::Result { task: TaskId(7), .. }, reliable: true }
+        )));
+    }
+
+    #[test]
+    fn forwarded_image_offloaded_to_device_result_returns_via_origin_edge() {
+        let mut e = fed_edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        e.on_message(
+            Message::Forward { img: img(8, 5_000.0, 4), from_edge: NodeId(3) },
+            10.0,
+            &mut out,
+        );
+        // Idle device 1 in this cell takes it.
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Image(_), .. }
+        )));
+        out.clear();
+        // Device 1 reports the result; it must be relayed to edge 3, not
+        // to the (unreachable) origin device 4.
+        e.on_message(
+            Message::Result {
+                task: TaskId(8),
+                processed_by: NodeId(1),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 597.0,
+            },
+            700.0,
+            &mut out,
+        );
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(3), msg: Message::Result { task: TaskId(8), .. }, reliable: true }
+        )));
+    }
+
+    #[test]
+    fn originating_edge_relays_peer_result_to_origin_device() {
+        let mut e = fed_edge(PolicyKind::Dds);
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 5_000.0, 1)), 1.0, &mut out);
+        }
+        out.clear();
+        e.on_message(Message::Image(img(5, 5_000.0, 1)), 2.0, &mut out);
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::Forward { .. }, .. })));
+        out.clear();
+        // The peer finished task 5; the result comes back over the
+        // backhaul and must be relayed to the origin device 1.
+        e.on_message(
+            Message::Result {
+                task: TaskId(5),
+                processed_by: NodeId(3),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 223.0,
+            },
+            300.0,
+            &mut out,
+        );
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Result { task: TaskId(5), .. }, reliable: true }
+        )));
+    }
+
+    #[test]
+    fn user_request_only_activates_cameras_in_own_cell() {
+        // fed_edge: the only camera is device 1 in cell 0; edge 3's cell
+        // has none. A user request at edge 0 activates n1; the same
+        // request handled by an edge with no cell camera does nothing
+        // (rather than targeting an unreachable cross-cell device).
+        let mut e = fed_edge(PolicyKind::Dds);
+        let req = UserRequest {
+            app_id: 1,
+            location: (401.0, 0.0), // nearest global camera irrelevant
+            constraint: Constraint::deadline(5000.0),
+            n_images: 10,
+            interval_ms: 100.0,
+        };
+        let mut out = Vec::new();
+        e.on_message(Message::User(req.clone()), 0.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Activate { .. }, .. }
+        )));
+
+        // Same topology, acting as edge 3 (whose cell has no camera).
+        use crate::net::{CellSpec, LinkModel};
+        let topo = Topology::multi_cell(
+            &[
+                CellSpec::new(
+                    4,
+                    &[
+                        (NodeClass::RaspberryPi, 2, true),
+                        (NodeClass::RaspberryPi, 2, false),
+                    ],
+                    LinkModel::wifi(),
+                ),
+                CellSpec::new(4, &[(NodeClass::RaspberryPi, 2, false)], LinkModel::wifi()),
+            ],
+            LinkModel::new(5.0, 1000.0, 0.0),
+        );
+        let mut e3 = EdgeNode::new(
+            NodeId(3),
+            ContainerPool::new(profile_for(NodeClass::EdgeServer), 4),
+            PolicyKind::Dds.build(1),
+            topo,
+            200.0,
+        );
+        let mut out = Vec::new();
+        e3.on_message(Message::User(req), 0.0, &mut out);
+        assert!(out.is_empty(), "no reachable camera → no Activate");
+    }
+
+    #[test]
+    fn peer_edge_join_registers_in_peer_table_not_mp() {
+        let mut e = fed_edge(PolicyKind::Dds);
+        let mut out = Vec::new();
+        e.on_message(
+            Message::Join { node: NodeId(3), class_tag: 0, warm_containers: 4 },
+            0.0,
+            &mut out,
+        );
+        assert_eq!(e.table().len(), 0);
+        assert_eq!(e.peers().len(), 1);
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::JoinAck { .. }, .. })));
     }
 
     #[test]

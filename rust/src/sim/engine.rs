@@ -21,6 +21,9 @@ pub enum Ev {
     ContainerDone { node: NodeId, container: usize, task: TaskId, process_ms: f64 },
     /// UP profile push timer on a device.
     ProfileTick { node: NodeId },
+    /// Inter-edge MP-summary gossip timer on an edge (federation; only
+    /// scheduled in multi-cell topologies).
+    GossipTick { edge: NodeId },
     /// Change a node's background CPU load (stress schedule, Fig. 8).
     SetLoad { node: NodeId, pct: f64 },
 }
@@ -71,6 +74,8 @@ pub struct Engine {
     rng: SplitMix64,
     /// UP push period; ticks stop after `horizon_ms`.
     profile_period_ms: f64,
+    /// Inter-edge gossip period (federation).
+    gossip_period_ms: f64,
     horizon_ms: f64,
     /// Count of tasks created / completed — the run ends early when all
     /// created tasks have resolved.
@@ -99,6 +104,7 @@ impl Engine {
             recorder: Recorder::new(),
             rng: SplitMix64::new(seed ^ 0x9D5F_1CE4),
             profile_period_ms,
+            gossip_period_ms: 100.0,
             horizon_ms,
             created: 0,
             resolved: 0,
@@ -170,18 +176,33 @@ impl Engine {
         }
     }
 
+    /// Kick off inter-edge gossip timers (federation). A no-op for
+    /// single-cell topologies — the event stream of classic scenarios is
+    /// unchanged. The first tick fires at t=0 so peer tables are warm
+    /// before the first frames arrive.
+    pub fn start_gossip_timers(&mut self, gossip_period_ms: f64) {
+        self.gossip_period_ms = gossip_period_ms;
+        if self.topology.cell_count() < 2 {
+            return;
+        }
+        let edges: Vec<NodeId> = self.topology.edges().collect();
+        for e in edges {
+            self.schedule(0.0, Ev::GossipTick { edge: e });
+        }
+    }
+
     /// Join handshake for all devices at t=0 (the paper's initial stage).
+    /// Each device joins the edge server of its own cell.
     pub fn join_all(&mut self) {
-        let edge = self.topology.edge();
         let joins: Vec<(NodeId, Message)> = self
             .nodes
             .iter()
             .filter_map(|n| match n {
-                SimNode::Device(d) => Some((d.id, d.join_message())),
+                SimNode::Device(d) => Some((d.edge, d.join_message())),
                 SimNode::Edge(_) => None,
             })
             .collect();
-        for (_from, msg) in joins {
+        for (edge, msg) in joins {
             // Delivered instantly at t=0 — session setup precedes the run.
             self.deliver_now(edge, msg);
         }
@@ -242,11 +263,11 @@ impl Engine {
                 self.apply(node, out);
             }
             Ev::ProfileTick { node } => {
-                let edge = self.topology.edge();
                 if let SimNode::Device(d) = &mut self.nodes[node.0 as usize] {
                     let up = d.profile_update(now);
+                    // UP pushes go to the device's own cell edge.
                     out.push(Action::Send {
-                        to: edge,
+                        to: d.edge,
                         msg: Message::Profile(up),
                         reliable: true,
                     });
@@ -254,6 +275,22 @@ impl Engine {
                 self.apply(node, out);
                 if now + self.profile_period_ms <= self.horizon_ms {
                     self.schedule(now + self.profile_period_ms, Ev::ProfileTick { node });
+                }
+            }
+            Ev::GossipTick { edge } => {
+                if let SimNode::Edge(e) = &mut self.nodes[edge.0 as usize] {
+                    let summary = e.summary(now);
+                    for peer in self.topology.peer_edges(edge) {
+                        out.push(Action::Send {
+                            to: peer,
+                            msg: Message::EdgeSummary(summary),
+                            reliable: true,
+                        });
+                    }
+                }
+                self.apply(edge, out);
+                if now + self.gossip_period_ms <= self.horizon_ms {
+                    self.schedule(now + self.gossip_period_ms, Ev::GossipTick { edge });
                 }
             }
             Ev::SetLoad { node, pct } => {

@@ -6,7 +6,7 @@ use crate::container::ContainerPool;
 use crate::core::{NodeClass, NodeId};
 use crate::device::DeviceNode;
 use crate::metrics::{RunSummary, TaskRecord};
-use crate::net::Topology;
+use crate::net::{CellSpec, Topology};
 use crate::profile::{profile_for, Predictor};
 use crate::scheduler::PolicyKind;
 use crate::server::EdgeNode;
@@ -89,20 +89,49 @@ impl ScenarioBuilder {
         self
     }
 
+    /// NodeIds of the config's devices, in config order. Ids are dense per
+    /// cell (edge first, then the cell's devices in config order), so a
+    /// single-cell config keeps the classic `NodeId(1 + i)` layout.
+    pub fn device_ids(cfg: &SystemConfig) -> Vec<NodeId> {
+        let mut ids = vec![NodeId(0); cfg.devices.len()];
+        let mut next = 0u32;
+        for c in 0..cfg.n_cells() as u32 {
+            next += 1; // the cell's edge server
+            for (i, d) in cfg.devices.iter().enumerate() {
+                if d.cell == c {
+                    ids[i] = NodeId(next);
+                    next += 1;
+                }
+            }
+        }
+        ids
+    }
+
     /// Construct the topology implied by the config.
     pub fn topology(&self) -> Topology {
         let link = self.cfg.network.link();
-        let devices: Vec<(NodeClass, u32, bool)> = self
-            .cfg
-            .devices
-            .iter()
-            .map(|d| (d.class, d.warm_containers, d.camera))
+        let cells: Vec<CellSpec> = (0..self.cfg.n_cells())
+            .map(|c| {
+                let devices: Vec<(NodeClass, u32, bool)> = self
+                    .cfg
+                    .devices
+                    .iter()
+                    .filter(|d| d.cell == c as u32)
+                    .map(|d| (d.class, d.warm_containers, d.camera))
+                    .collect();
+                CellSpec::new(self.cfg.cell_warm_containers(c), &devices, link)
+            })
             .collect();
-        let mut topo = Topology::star(self.cfg.edge_warm_containers, &devices, link);
+        let mut topo = Topology::multi_cell(&cells, self.cfg.federation.backhaul.link());
+        let ids = Self::device_ids(&self.cfg);
         for (i, d) in self.cfg.devices.iter().enumerate() {
-            let id = NodeId(1 + i as u32);
+            let id = ids[i];
             topo.node_mut(id).cpu_load_pct = d.cpu_load_pct;
-            topo.node_mut(id).location = d.location;
+            // Config locations are cell-relative; cells sit 100 units
+            // apart (for single-cell configs this is the classic absolute
+            // layout, unchanged).
+            topo.node_mut(id).location =
+                (100.0 * d.cell as f64 + d.location.0, d.location.1);
         }
         topo
     }
@@ -111,38 +140,49 @@ impl ScenarioBuilder {
     pub fn build(&self) -> Engine {
         let cfg = &self.cfg;
         let topo = self.topology();
-        let edge_id = topo.edge();
+        let device_ids = Self::device_ids(cfg);
+        let edge_ids: Vec<NodeId> = topo.edges().collect();
 
-        let mut edge_pool =
-            ContainerPool::new(profile_for(NodeClass::EdgeServer), cfg.edge_warm_containers);
-        edge_pool.set_bg_load(cfg.edge_cpu_load_pct);
-        let edge = EdgeNode::new(
-            edge_id,
-            edge_pool,
-            cfg.policy.build(cfg.seed),
-            topo.clone(),
-            cfg.max_staleness_ms,
-        );
-
-        let mut nodes = vec![SimNode::Edge(edge)];
-        for (i, d) in cfg.devices.iter().enumerate() {
-            let id = NodeId(1 + i as u32);
-            let mut pool = ContainerPool::new(profile_for(d.class), d.warm_containers);
-            pool.set_bg_load(d.cpu_load_pct);
-            let mut node = DeviceNode::new(
-                id,
-                edge_id,
-                pool,
-                Predictor::new(profile_for(d.class)),
-                cfg.policy.build(cfg.seed.wrapping_add(1 + i as u64)),
+        // Nodes in NodeId order: per cell, the edge then its devices.
+        let mut nodes = Vec::with_capacity(topo.len());
+        for (c, &edge_id) in edge_ids.iter().enumerate() {
+            let mut edge_pool = ContainerPool::new(
+                profile_for(NodeClass::EdgeServer),
+                cfg.cell_warm_containers(c),
             );
-            if d.battery {
-                node = node.with_battery(match d.class {
-                    NodeClass::SmartPhone => crate::energy::Battery::phone(),
-                    _ => crate::energy::Battery::rpi(),
-                });
+            edge_pool.set_bg_load(cfg.cell_edge_load(c));
+            // Cell 0's edge keeps the classic seed; further cells fork
+            // high bits so single-cell runs are bit-identical to before.
+            let edge_seed = cfg.seed.wrapping_add((c as u64) << 32);
+            nodes.push(SimNode::Edge(EdgeNode::new(
+                edge_id,
+                edge_pool,
+                cfg.policy.build(edge_seed),
+                topo.clone(),
+                cfg.max_staleness_ms,
+            )));
+            for (i, d) in cfg.devices.iter().enumerate() {
+                if d.cell != c as u32 {
+                    continue;
+                }
+                let id = device_ids[i];
+                let mut pool = ContainerPool::new(profile_for(d.class), d.warm_containers);
+                pool.set_bg_load(d.cpu_load_pct);
+                let mut node = DeviceNode::new(
+                    id,
+                    edge_id,
+                    pool,
+                    Predictor::new(profile_for(d.class)),
+                    cfg.policy.build(cfg.seed.wrapping_add(1 + i as u64)),
+                );
+                if d.battery {
+                    node = node.with_battery(match d.class {
+                        NodeClass::SmartPhone => crate::energy::Battery::phone(),
+                        _ => crate::energy::Battery::rpi(),
+                    });
+                }
+                nodes.push(SimNode::Device(node));
             }
-            nodes.push(SimNode::Device(node));
         }
 
         // Horizon: generously past the last arrival plus queue drain time.
@@ -153,14 +193,16 @@ impl ScenarioBuilder {
         let mut eng = Engine::new(nodes, topo, cfg.seed, cfg.profile_period_ms, horizon);
         eng.join_all();
         eng.start_profile_timers();
+        // No-op for single-cell topologies (event stream unchanged).
+        eng.start_gossip_timers(cfg.federation.gossip_period_ms);
 
-        // Stream originates at the first camera device.
+        // Stream originates at the first camera device (config order).
         let camera = self
             .cfg
             .devices
             .iter()
             .position(|d| d.camera)
-            .map(|i| NodeId(1 + i as u32))
+            .map(|i| device_ids[i])
             .expect("validated config has a camera");
         let frames = ImageStream::new(*wl, camera, SplitMix64::new(cfg.seed ^ 0xFEED))
             .pattern(wl.pattern)
@@ -300,6 +342,49 @@ mod tests {
         let lb = base.summary.latency.unwrap().mean;
         let ll = loaded.summary.latency.unwrap().mean;
         assert!(ll > lb + 100.0, "loaded {ll} vs base {lb}");
+    }
+
+    #[test]
+    fn single_cell_results_identical_through_shim() {
+        // A config with one explicit `[[cell]]` must run bit-identically
+        // to the legacy edge_* form (acceptance: existing scenarios are
+        // unchanged by the federation refactor).
+        let legacy = ScenarioBuilder::paper_testbed(PolicyKind::Dds)
+            .workload(wl(80, 50.0, 2_000.0))
+            .seed(11)
+            .run();
+        let mut cfg = SystemConfig::default();
+        cfg.policy = PolicyKind::Dds;
+        cfg.cells = vec![crate::config::CellConfig {
+            warm_containers: cfg.edge_warm_containers,
+            cpu_load_pct: 0.0,
+        }];
+        let one_cell = ScenarioBuilder::new(cfg)
+            .workload(wl(80, 50.0, 2_000.0))
+            .seed(11)
+            .run();
+        assert_eq!(legacy.summary, one_cell.summary);
+        assert_eq!(legacy.events, one_cell.events);
+        assert_eq!(legacy.records, one_cell.records);
+    }
+
+    #[test]
+    fn multi_cell_scenario_resolves_all_tasks() {
+        let cfg = crate::experiments::fed_config(2);
+        let r = ScenarioBuilder::new(cfg).workload(wl(60, 50.0, 3_000.0)).run();
+        assert_eq!(r.summary.total, 60);
+        assert_eq!(r.summary.met + r.summary.missed + r.summary.dropped, 60);
+    }
+
+    #[test]
+    fn device_ids_dense_per_cell() {
+        let cfg = crate::experiments::fed_config(2);
+        let ids = ScenarioBuilder::device_ids(&cfg);
+        // Cell 0: edge n0, devices n1 n2; cell 1: edge n3, devices n4 n5.
+        assert_eq!(ids, vec![NodeId(1), NodeId(2), NodeId(4), NodeId(5)]);
+        let topo = ScenarioBuilder::new(cfg).topology();
+        let edges: Vec<NodeId> = topo.edges().collect();
+        assert_eq!(edges, vec![NodeId(0), NodeId(3)]);
     }
 
     #[test]

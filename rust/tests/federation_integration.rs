@@ -1,0 +1,184 @@
+//! Integration: the multi-cell federation — cross-cell forwarding, seeded
+//! determinism, single-cell shim regression, and a sim/live parity smoke
+//! test driven by the stub runtime (no artifacts or PJRT needed).
+
+use std::time::Duration;
+
+use edge_dds::config::{CellConfig, SystemConfig, WorkloadConfig};
+use edge_dds::core::{NodeId, Placement};
+use edge_dds::experiments::fed_config;
+use edge_dds::live::LiveCluster;
+use edge_dds::runtime::RuntimeService;
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::{ArrivalPattern, ImageStream, ScenarioBuilder};
+use edge_dds::util::SplitMix64;
+
+fn wl(n: u32, interval: f64, deadline: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        n_images: n,
+        interval_ms: interval,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms: deadline,
+        side_px: 64,
+        pattern: ArrivalPattern::Uniform,
+    }
+}
+
+/// A stressed 2-cell scenario: all frames hit cell 0, whose edge carries
+/// 100% background load (the Fig. 8 stress point), so DDS must shed work
+/// over the backhaul to cell 1.
+fn stressed_two_cells(n: u32) -> ScenarioBuilder {
+    ScenarioBuilder::new(fed_config(2))
+        .workload(wl(n, 30.0, 2_000.0))
+        .edge_load(100.0)
+        .seed(3)
+}
+
+#[test]
+fn multi_cell_runs_end_to_end_and_forwards_across_cells() {
+    let r = stressed_two_cells(300).run();
+    assert_eq!(r.summary.total, 300);
+    assert_eq!(r.summary.met + r.summary.missed + r.summary.dropped, 300);
+    // Acceptance: DDS forwarded at least one image across cells …
+    assert!(r.summary.forwarded > 0, "no cross-cell forwards under stress");
+    // … and forwarded tasks actually executed in the peer cell (edge n3
+    // or device n4/n5), with results attributed back to their records.
+    let cross_executed = r
+        .records
+        .iter()
+        .filter(|rec| {
+            matches!(rec.placement, Placement::ToPeerEdge(_))
+                && rec.executed_on.is_some_and(|n| n.0 >= 3)
+        })
+        .count();
+    assert!(cross_executed > 0, "forwarded tasks must run in the peer cell");
+    for rec in &r.records {
+        if let Placement::ToPeerEdge(peer) = rec.placement {
+            assert_eq!(peer, NodeId(3), "only one peer exists");
+        }
+    }
+}
+
+#[test]
+fn federation_improves_deadline_satisfaction_under_stress() {
+    let solo = ScenarioBuilder::new(fed_config(1))
+        .workload(wl(300, 30.0, 2_000.0))
+        .edge_load(100.0)
+        .seed(3)
+        .run();
+    let fed = stressed_two_cells(300).run();
+    assert!(
+        fed.summary.met >= solo.summary.met,
+        "federation must not hurt: {} vs {}",
+        fed.summary.met,
+        solo.summary.met
+    );
+}
+
+#[test]
+fn multi_cell_runs_are_deterministic() {
+    // Two runs of the same multi-cell scenario with the same seed must
+    // produce identical RunSummarys (and record streams).
+    let a = stressed_two_cells(200).run();
+    let b = stressed_two_cells(200).run();
+    assert_eq!(a.summary, b.summary);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.records, b.records);
+    // A different seed must change something observable (virtual time at
+    // minimum — placements are load-dependent).
+    let c = ScenarioBuilder::new(fed_config(2))
+        .workload(wl(200, 30.0, 2_000.0))
+        .edge_load(100.0)
+        .seed(4)
+        .run();
+    assert_eq!(c.summary.total, 200);
+}
+
+#[test]
+fn four_cell_scenario_spreads_work() {
+    let r = ScenarioBuilder::new(fed_config(4))
+        .workload(wl(200, 25.0, 2_000.0))
+        .edge_load(100.0)
+        .seed(9)
+        .run();
+    assert_eq!(r.summary.total, 200);
+    assert!(r.summary.forwarded > 0);
+    // Forward targets must all be edge servers (ids 0, 3, 6, 9).
+    for rec in &r.records {
+        if let Placement::ToPeerEdge(peer) = rec.placement {
+            assert!(
+                matches!(peer.0, 3 | 6 | 9),
+                "forward target {peer} is not a peer edge"
+            );
+        }
+    }
+}
+
+#[test]
+fn shim_keeps_legacy_configs_unchanged() {
+    // Regression guard for every pre-federation scenario: an empty
+    // `cells` list must behave exactly like the explicit 1-cell form.
+    let mk = |cells: Vec<CellConfig>| {
+        let mut cfg = SystemConfig::default();
+        cfg.policy = PolicyKind::Dds;
+        cfg.cells = cells;
+        ScenarioBuilder::new(cfg).workload(wl(100, 50.0, 2_000.0)).seed(21).run()
+    };
+    let legacy = mk(Vec::new());
+    let explicit = mk(vec![CellConfig { warm_containers: 4, cpu_load_pct: 0.0 }]);
+    assert_eq!(legacy.summary, explicit.summary);
+    assert_eq!(legacy.records, explicit.records);
+    assert_eq!(legacy.summary.forwarded, 0);
+}
+
+/// Sim/live parity smoke for the peer-edge decision: the same 2-cell
+/// config runs in the simulator and as a live socket cluster (stub
+/// runtime), and both must resolve every frame with the same accounting
+/// identity. Live timing is wall-clock so met counts are not compared —
+/// this guards the *protocol*: joins, gossip, forwards, and cross-cell
+/// result relay all work over real sockets.
+#[test]
+fn sim_live_parity_smoke_two_cells() {
+    let mut cfg = fed_config(2);
+    // 20 frames every 5 ms with a 500 ms constraint: the paper-profile
+    // predictor makes every device forward to the edge (597 ms predicted
+    // > 500 budget), and cell 0's single edge container saturates, so the
+    // simulator must take the peer-edge path.
+    cfg.workload = wl(20, 5.0, 500.0);
+    cfg.cells[0].warm_containers = 1;
+    cfg.devices[0].warm_containers = 1;
+    cfg.devices[1].warm_containers = 1;
+    cfg.federation.gossip_period_ms = 25.0;
+
+    let sim = ScenarioBuilder::new(cfg.clone()).run();
+    assert_eq!(sim.summary.total, 20);
+    assert_eq!(
+        sim.summary.met + sim.summary.missed + sim.summary.dropped,
+        20,
+        "sim accounting identity"
+    );
+    assert!(sim.summary.forwarded > 0, "sim must exercise the peer-edge path");
+
+    // The same config over real sockets with the stub runtime. Live
+    // containers finish in sub-millisecond wall time, so placements
+    // differ from the virtual run by design (DESIGN.md §Sim-vs-live) —
+    // the smoke guarantee is the *protocol*: joins, gossip, forwards and
+    // cross-cell result relay lose nothing end-to-end.
+    let cluster =
+        LiveCluster::start(&cfg, RuntimeService::spawn_stub()).expect("live cluster start");
+    std::thread::sleep(Duration::from_millis(300)); // joins + gossip settle
+    let camera = ScenarioBuilder::device_ids(&cfg)[0];
+    let frames = ImageStream::new(cfg.workload, camera, SplitMix64::new(5)).generate();
+    cluster.stream(frames).expect("stream");
+    let live = cluster.wait(Duration::from_secs(60));
+    cluster.shutdown();
+
+    assert_eq!(live.total, 20, "live cluster must see every frame");
+    assert_eq!(
+        live.met + live.missed + live.dropped,
+        20,
+        "live accounting identity"
+    );
+    assert_eq!(live.dropped, 0, "nothing may be lost across the sockets");
+}

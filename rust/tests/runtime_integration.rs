@@ -1,8 +1,10 @@
 //! Integration: the PJRT runtime against real AOT artifacts.
 //!
-//! These tests need `make artifacts` to have run; they are skipped (with a
-//! visible message) if `artifacts/` is absent so `cargo test` stays green
-//! on a fresh checkout.
+//! These tests need the `pjrt` feature (the whole file compiles away
+//! without it — the default build ships the stub backend) and `make
+//! artifacts` to have run; they are skipped (with a visible message) if
+//! `artifacts/` is absent so `cargo test` stays green on a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use edge_dds::runtime::{ModelRuntime, RuntimeService};
 

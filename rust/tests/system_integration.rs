@@ -120,6 +120,7 @@ fn heterogeneous_devices_still_schedulable() {
             cpu_load_pct: 50.0,
             location: (1.0, 0.0),
             battery: false,
+            cell: 0,
         },
         DeviceConfig {
             class: NodeClass::SmartPhone,
@@ -128,6 +129,7 @@ fn heterogeneous_devices_still_schedulable() {
             cpu_load_pct: 0.0,
             location: (2.0, 0.0),
             battery: false,
+            cell: 0,
         },
         DeviceConfig {
             class: NodeClass::RaspberryPi,
@@ -136,6 +138,7 @@ fn heterogeneous_devices_still_schedulable() {
             cpu_load_pct: 25.0,
             location: (3.0, 0.0),
             battery: false,
+            cell: 0,
         },
     ];
     cfg.workload = wl(100, 50.0, 5_000.0);
@@ -201,6 +204,9 @@ fn prop_task_conservation_and_timestamps() {
                 Placement::Offload(node) => {
                     assert_ne!(node, rec.origin, "{ctx}: offload target != origin");
                     assert_ne!(node, NodeId(0), "{ctx}: offload target is a device");
+                }
+                Placement::ToPeerEdge(peer) => {
+                    panic!("{ctx}: single-cell run forwarded to {peer}");
                 }
             }
         }
