@@ -63,6 +63,7 @@ fn main() {
             battery_pct: None,
         },
         predictor: &pred,
+        edge_suspected: false,
     };
     const DEC_BATCH: u32 = 10_000;
     bench("decide_device x10k", 3, 30, || {
@@ -79,7 +80,7 @@ fn main() {
         for t in 0..1_000u64 {
             if let Some(a) = pool.submit(img(t), now) {
                 now = a.done_at_ms;
-                pool.complete(a.container, now);
+                pool.complete(a.container, a.task, now);
             }
         }
         black_box(pool.stats());

@@ -6,8 +6,9 @@ use anyhow::{bail, Context, Result};
 use super::toml_lite::{parse_document, Document};
 use crate::core::NodeClass;
 use crate::net::LinkModel;
-use crate::scheduler::PolicyKind;
+use crate::scheduler::{FailureDetector, PolicyKind};
 use crate::sim::workload::ArrivalPattern;
+use crate::util::SplitMix64;
 
 /// Execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -124,6 +125,150 @@ impl Default for FederationConfig {
     }
 }
 
+/// What a scheduled churn event does to its target node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// The node crashes: containers, queues and tables are lost; its
+    /// traffic blackholes until recovery.
+    Fail,
+    /// The node restarts with a fresh pool and re-joins its cell.
+    Recover,
+    /// The node only exists from `at_ms` on (mid-run join): it is dead
+    /// from t=0 and comes up — joining its cell — at the event time. A
+    /// joining camera's stream starts at its join time.
+    Join,
+}
+
+impl ChurnKind {
+    pub fn parse(s: &str) -> Option<ChurnKind> {
+        match s {
+            "fail" => Some(ChurnKind::Fail),
+            "recover" => Some(ChurnKind::Recover),
+            "join" => Some(ChurnKind::Join),
+            _ => None,
+        }
+    }
+}
+
+/// Which configured node a churn event targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnTarget {
+    /// Index into [`SystemConfig::devices`] (config order).
+    Device(usize),
+    /// Cell index — targets that cell's edge server.
+    Edge(usize),
+}
+
+/// One `[[churn]]` entry: at `at_ms`, do `kind` to `target`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    pub at_ms: f64,
+    pub target: ChurnTarget,
+    pub kind: ChurnKind,
+}
+
+/// Seeded random device churn (`[churn_random]`): every device fails and
+/// repairs in an exponential cycle with the given mean time between
+/// failures / mean time to repair. Fully determined by `run.seed`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RandomChurnConfig {
+    pub device_mtbf_ms: f64,
+    pub device_mttr_ms: f64,
+}
+
+/// The churn & failure-injection surface (DESIGN.md §Churn): scripted
+/// `[[churn]]` events, optional seeded random churn, and the failure-
+/// detector thresholds (`[failure]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnConfig {
+    pub events: Vec<ChurnEvent>,
+    pub random: Option<RandomChurnConfig>,
+    /// Heartbeat silence after which a node is *suspected* (placement
+    /// levels skip it but its state is kept).
+    pub suspect_after_ms: f64,
+    /// Heartbeat silence after which a node is declared *dead* (evicted;
+    /// its in-flight frames requeue).
+    pub dead_after_ms: f64,
+    /// Failure-detector sweep / edge-ping period.
+    pub heartbeat_period_ms: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            events: Vec::new(),
+            random: None,
+            suspect_after_ms: 150.0,
+            dead_after_ms: 400.0,
+            heartbeat_period_ms: 50.0,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// Churn machinery (heartbeat timers, detectors, pings) activates only
+    /// when some churn is actually configured — classic scenarios keep a
+    /// bit-identical event stream.
+    pub fn enabled(&self) -> bool {
+        !self.events.is_empty() || self.random.is_some()
+    }
+
+    pub fn detector(&self) -> FailureDetector {
+        FailureDetector {
+            suspect_after_ms: self.suspect_after_ms,
+            dead_after_ms: self.dead_after_ms,
+        }
+    }
+
+    /// The concrete, driver-independent churn schedule: the scripted
+    /// events plus the seeded random fail/repair cycles expanded over
+    /// `span_ms` for `n_devices` devices. Deterministic given `seed` —
+    /// both drivers (sim engine events, live kill/restart hooks) inject
+    /// the same trace.
+    pub fn expanded_events(&self, seed: u64, span_ms: f64, n_devices: usize) -> Vec<ChurnEvent> {
+        let mut evs = self.events.clone();
+        if let Some(rc) = self.random {
+            for i in 0..n_devices {
+                let mut rng = SplitMix64::new(seed ^ 0xC0FF_EE00 ^ ((i as u64 + 1) << 8));
+                let mut t = 0.0;
+                loop {
+                    t += -rc.device_mtbf_ms * rng.uniform().max(1e-12).ln();
+                    if t >= span_ms {
+                        break;
+                    }
+                    evs.push(ChurnEvent {
+                        at_ms: t,
+                        target: ChurnTarget::Device(i),
+                        kind: ChurnKind::Fail,
+                    });
+                    t += -rc.device_mttr_ms * rng.uniform().max(1e-12).ln();
+                    if t >= span_ms {
+                        break;
+                    }
+                    evs.push(ChurnEvent {
+                        at_ms: t,
+                        target: ChurnTarget::Device(i),
+                        kind: ChurnKind::Recover,
+                    });
+                }
+            }
+        }
+        evs
+    }
+
+    /// The join time of device `i` (the latest `Join` event targeting it),
+    /// or `None` if it is present from t=0.
+    pub fn device_join_ms(&self, device_index: usize) -> Option<f64> {
+        self.events
+            .iter()
+            .filter(|e| {
+                e.kind == ChurnKind::Join && e.target == ChurnTarget::Device(device_index)
+            })
+            .map(|e| e.at_ms)
+            .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.max(t))))
+    }
+}
+
 /// The full system configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -146,6 +291,9 @@ pub struct SystemConfig {
     /// Backhaul + gossip parameters (only consulted when `cells` has ≥2
     /// entries).
     pub federation: FederationConfig,
+    /// Churn & failure injection (`[[churn]]` / `[churn_random]` /
+    /// `[failure]`). Empty by default: no churn, no detection overhead.
+    pub churn: ChurnConfig,
 }
 
 impl Default for SystemConfig {
@@ -182,6 +330,7 @@ impl Default for SystemConfig {
             ],
             cells: Vec::new(),
             federation: FederationConfig::default(),
+            churn: ChurnConfig::default(),
         }
     }
 }
@@ -277,6 +426,41 @@ impl SystemConfig {
                 });
             }
         }
+        let mut churn = ChurnConfig::default();
+        if let Some(list) = doc.arrays.get("churn") {
+            for (i, t) in list.iter().enumerate() {
+                let at_ms = t
+                    .get("at_ms")
+                    .and_then(|v| v.as_f64())
+                    .with_context(|| format!("churn[{i}]: missing/invalid at_ms"))?;
+                let kind_name = t.get("kind").and_then(|v| v.as_str()).unwrap_or("fail");
+                let Some(kind) = ChurnKind::parse(kind_name) else {
+                    bail!("churn[{i}]: unknown kind `{kind_name}` (fail|recover|join)");
+                };
+                let target = match (
+                    t.get("device").and_then(|v| v.as_i64()),
+                    t.get("cell").and_then(|v| v.as_i64()),
+                ) {
+                    (Some(d), None) if d >= 0 => ChurnTarget::Device(d as usize),
+                    (None, Some(c)) if c >= 0 => ChurnTarget::Edge(c as usize),
+                    _ => bail!(
+                        "churn[{i}]: exactly one of `device = <index>` or `cell = <index>` required"
+                    ),
+                };
+                churn.events.push(ChurnEvent { at_ms, target, kind });
+            }
+        }
+        churn.suspect_after_ms = doc.f64_or("failure", "suspect_after_ms", churn.suspect_after_ms);
+        churn.dead_after_ms = doc.f64_or("failure", "dead_after_ms", churn.dead_after_ms);
+        churn.heartbeat_period_ms =
+            doc.f64_or("failure", "heartbeat_period_ms", churn.heartbeat_period_ms);
+        if doc.tables.contains_key("churn_random") {
+            churn.random = Some(RandomChurnConfig {
+                device_mtbf_ms: doc.f64_or("churn_random", "device_mtbf_ms", 10_000.0),
+                device_mttr_ms: doc.f64_or("churn_random", "device_mttr_ms", 1_000.0),
+            });
+        }
+
         let fd = FederationConfig::default();
         let federation = FederationConfig {
             backhaul: NetworkConfig {
@@ -307,6 +491,7 @@ impl SystemConfig {
             devices,
             cells,
             federation,
+            churn,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -377,6 +562,42 @@ impl SystemConfig {
         }
         if self.federation.gossip_period_ms <= 0.0 {
             bail!("federation.gossip_period_ms must be positive");
+        }
+        for (i, ev) in self.churn.events.iter().enumerate() {
+            // NaN/inf would pass `< 0.0` and later panic in the schedule
+            // sort (or never fire) — reject them here.
+            if !ev.at_ms.is_finite() || ev.at_ms < 0.0 {
+                bail!("churn[{i}]: at_ms must be a non-negative finite number");
+            }
+            match ev.target {
+                ChurnTarget::Device(d) if d >= self.devices.len() => {
+                    bail!("churn[{i}]: device {d} out of range ({} devices)", self.devices.len())
+                }
+                ChurnTarget::Edge(c) if c >= self.n_cells() => {
+                    bail!("churn[{i}]: cell {c} out of range ({} cell(s))", self.n_cells())
+                }
+                _ => {}
+            }
+        }
+        if !(self.churn.heartbeat_period_ms.is_finite() && self.churn.heartbeat_period_ms > 0.0) {
+            bail!("failure.heartbeat_period_ms must be positive and finite");
+        }
+        // NaN comparisons are all false, which would sail through a plain
+        // ordering check and then silently disable detection (age > NaN is
+        // never true) — require finite thresholds explicitly.
+        if !self.churn.suspect_after_ms.is_finite()
+            || !self.churn.dead_after_ms.is_finite()
+            || self.churn.suspect_after_ms <= 0.0
+            || self.churn.dead_after_ms <= self.churn.suspect_after_ms
+        {
+            bail!("failure thresholds must satisfy 0 < suspect_after_ms < dead_after_ms (finite)");
+        }
+        if let Some(rc) = self.churn.random {
+            if !(rc.device_mtbf_ms.is_finite() && rc.device_mtbf_ms > 0.0)
+                || !(rc.device_mttr_ms.is_finite() && rc.device_mttr_ms > 0.0)
+            {
+                bail!("churn_random mtbf/mttr must be positive and finite");
+            }
         }
         Ok(())
     }
@@ -553,6 +774,203 @@ camera = true
 cell = 3
 "#;
         assert!(SystemConfig::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn churn_roundtrip() {
+        let text = r#"
+[failure]
+suspect_after_ms = 100
+dead_after_ms = 300
+heartbeat_period_ms = 25
+
+[churn_random]
+device_mtbf_ms = 5000
+device_mttr_ms = 500
+
+[[churn]]
+at_ms = 1000
+kind = "fail"
+device = 1
+
+[[churn]]
+at_ms = 2000
+kind = "recover"
+device = 1
+
+[[churn]]
+at_ms = 1500
+kind = "fail"
+cell = 0
+
+[[device]]
+class = "rpi"
+camera = true
+
+[[device]]
+class = "rpi"
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert!(c.churn.enabled());
+        assert_eq!(c.churn.events.len(), 3);
+        assert_eq!(
+            c.churn.events[0],
+            ChurnEvent { at_ms: 1000.0, target: ChurnTarget::Device(1), kind: ChurnKind::Fail }
+        );
+        assert_eq!(c.churn.events[1].kind, ChurnKind::Recover);
+        assert_eq!(c.churn.events[2].target, ChurnTarget::Edge(0));
+        assert_eq!(c.churn.suspect_after_ms, 100.0);
+        assert_eq!(c.churn.dead_after_ms, 300.0);
+        assert_eq!(c.churn.heartbeat_period_ms, 25.0);
+        let rc = c.churn.random.unwrap();
+        assert_eq!(rc.device_mtbf_ms, 5000.0);
+        assert_eq!(rc.device_mttr_ms, 500.0);
+        let d = c.churn.detector();
+        assert_eq!(d.suspect_after_ms, 100.0);
+        assert_eq!(d.dead_after_ms, 300.0);
+    }
+
+    #[test]
+    fn default_has_no_churn() {
+        let c = SystemConfig::default();
+        assert!(!c.churn.enabled());
+        assert!(c.churn.events.is_empty());
+        assert!(c.churn.random.is_none());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn expanded_events_deterministic_and_alternating() {
+        let mut c = ChurnConfig::default();
+        c.random = Some(RandomChurnConfig { device_mtbf_ms: 500.0, device_mttr_ms: 100.0 });
+        let a = c.expanded_events(42, 5_000.0, 2);
+        let b = c.expanded_events(42, 5_000.0, 2);
+        assert_eq!(a, b, "same seed must expand identically");
+        assert!(!a.is_empty(), "mtbf far below span must produce failures");
+        let diff = c.expanded_events(43, 5_000.0, 2);
+        assert_ne!(a, diff, "different seed must draw a different trace");
+        // Per device: fail/recover strictly alternate, times ascend,
+        // everything inside the span.
+        for dev in 0..2usize {
+            let per: Vec<&ChurnEvent> = a
+                .iter()
+                .filter(|e| e.target == ChurnTarget::Device(dev))
+                .collect();
+            for (j, e) in per.iter().enumerate() {
+                assert!(e.at_ms >= 0.0 && e.at_ms < 5_000.0);
+                let want = if j % 2 == 0 { ChurnKind::Fail } else { ChurnKind::Recover };
+                assert_eq!(e.kind, want);
+                if j > 0 {
+                    assert!(e.at_ms > per[j - 1].at_ms);
+                }
+            }
+        }
+        // Scripted events ride along untouched.
+        c.events.push(ChurnEvent {
+            at_ms: 9.0,
+            target: ChurnTarget::Edge(0),
+            kind: ChurnKind::Fail,
+        });
+        let with_scripted = c.expanded_events(42, 5_000.0, 2);
+        assert!(with_scripted.contains(&ChurnEvent {
+            at_ms: 9.0,
+            target: ChurnTarget::Edge(0),
+            kind: ChurnKind::Fail,
+        }));
+    }
+
+    #[test]
+    fn churn_join_time_lookup() {
+        let mut c = SystemConfig::default();
+        c.churn.events.push(ChurnEvent {
+            at_ms: 700.0,
+            target: ChurnTarget::Device(1),
+            kind: ChurnKind::Join,
+        });
+        assert_eq!(c.churn.device_join_ms(1), Some(700.0));
+        assert_eq!(c.churn.device_join_ms(0), None);
+    }
+
+    #[test]
+    fn rejects_bad_churn_targets_and_thresholds() {
+        let bad_device = r#"
+[[churn]]
+at_ms = 10
+kind = "fail"
+device = 9
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_device).is_err());
+        let bad_cell = r#"
+[[churn]]
+at_ms = 10
+kind = "fail"
+cell = 4
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_cell).is_err());
+        let bad_kind = r#"
+[[churn]]
+at_ms = 10
+kind = "explode"
+device = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_kind).is_err());
+        let both_targets = r#"
+[[churn]]
+at_ms = 10
+kind = "fail"
+device = 0
+cell = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(both_targets).is_err());
+        let bad_thresholds = r#"
+[failure]
+suspect_after_ms = 500
+dead_after_ms = 100
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_thresholds).is_err());
+        // NaN must not sneak past the ordering checks (all NaN
+        // comparisons are false).
+        let nan_at = r#"
+[[churn]]
+at_ms = nan
+kind = "fail"
+device = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(nan_at).is_err());
+        let mut c = SystemConfig::default();
+        c.churn.suspect_after_ms = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.churn.events.push(ChurnEvent {
+            at_ms: f64::INFINITY,
+            target: ChurnTarget::Device(0),
+            kind: ChurnKind::Fail,
+        });
+        assert!(c.validate().is_err());
     }
 
     #[test]

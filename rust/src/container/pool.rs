@@ -116,14 +116,35 @@ impl ContainerPool {
         }
     }
 
-    /// Mark container `idx` finished at `now_ms`; if `q_image` is nonempty
-    /// the container immediately continues with the next image (the paper's
-    /// feedback thread), returning the follow-on assignment.
-    pub fn complete(&mut self, idx: usize, now_ms: f64) -> Option<Assignment> {
-        debug_assert!(matches!(self.containers[idx], ContainerState::Busy { .. }));
+    /// Mark container `idx` finished `task` at `now_ms`; if `q_image` is
+    /// nonempty the container immediately continues with the next image
+    /// (the paper's feedback thread), returning the follow-on assignment.
+    ///
+    /// A completion may race a churn [`reset`](Self::reset) in live mode
+    /// (the worker finished after the node was declared failed): the
+    /// container is either no longer `Busy`, or — if the node already
+    /// recovered and re-dispatched — busy with a *different* task. Both
+    /// are no-ops: only the task the container is actually running may
+    /// free it.
+    pub fn complete(&mut self, idx: usize, task: TaskId, now_ms: f64) -> Option<Assignment> {
+        if !matches!(self.containers[idx], ContainerState::Busy { task: t, .. } if t == task) {
+            return None;
+        }
         self.containers[idx] = ContainerState::Idle;
         let next = self.queue.pop_front()?;
         Some(self.dispatch(idx, next, now_ms))
+    }
+
+    /// Churn: the node failed (or restarted). All in-container work and the
+    /// overflow queue are lost; every warm container comes back idle (a
+    /// restart reuses the pre-warmed images — cold-start cost is paid at
+    /// provisioning time, not at crash recovery). Background load and
+    /// lifetime stats survive.
+    pub fn reset(&mut self) {
+        for c in &mut self.containers {
+            *c = ContainerState::Idle;
+        }
+        self.queue.clear();
     }
 
     /// Begin a cold start at `now_ms`; the new container becomes idle at
@@ -226,7 +247,7 @@ mod tests {
         assert!(p.submit(img(3, 29.0), 2.0).is_none());
         assert_eq!(p.queued_count(), 2);
         // Completion pulls task 2 first (FIFO).
-        let next = p.complete(0, 223.0).unwrap();
+        let next = p.complete(0, TaskId(1), 223.0).unwrap();
         assert_eq!(next.task, TaskId(2));
         assert_eq!(p.queued_count(), 1);
     }
@@ -299,7 +320,52 @@ mod tests {
     fn complete_empty_queue_returns_none() {
         let mut p = edge_pool(1);
         p.submit(img(1, 29.0), 0.0).unwrap();
-        assert!(p.complete(0, 223.0).is_none());
+        assert!(p.complete(0, TaskId(1), 223.0).is_none());
         assert_eq!(p.idle_count(), 1);
+    }
+
+    #[test]
+    fn reset_clears_work_and_queue_keeps_capacity_and_load() {
+        let mut p = edge_pool(2);
+        p.set_bg_load(50.0);
+        p.submit(img(1, 29.0), 0.0).unwrap();
+        p.submit(img(2, 29.0), 0.0).unwrap();
+        assert!(p.submit(img(3, 29.0), 0.0).is_none());
+        p.reset();
+        assert_eq!(p.busy_count(), 0);
+        assert_eq!(p.queued_count(), 0);
+        assert_eq!(p.warm_count(), 2);
+        assert_eq!(p.bg_load(), 50.0);
+        // Restarted pool accepts work again.
+        assert!(p.submit(img(4, 29.0), 10.0).is_some());
+    }
+
+    #[test]
+    fn completion_racing_reset_is_a_noop() {
+        let mut p = edge_pool(1);
+        p.submit(img(1, 29.0), 0.0).unwrap();
+        assert!(p.submit(img(2, 29.0), 0.0).is_none());
+        p.reset();
+        // The worker for task 1 reports after the reset: nothing dispatched,
+        // nothing panics, and the (cleared) queue stays empty.
+        assert!(p.complete(0, TaskId(1), 223.0).is_none());
+        assert_eq!(p.busy_count(), 0);
+        assert_eq!(p.queued_count(), 0);
+    }
+
+    #[test]
+    fn stale_completion_for_reassigned_container_is_a_noop() {
+        // Live churn race: container 0 runs task 1, the node resets, task 3
+        // is re-dispatched onto container 0 — then task 1's worker finally
+        // reports. The stale completion must not free task 3's container.
+        let mut p = edge_pool(1);
+        p.submit(img(1, 29.0), 0.0).unwrap();
+        p.reset();
+        p.submit(img(3, 29.0), 10.0).unwrap();
+        assert!(p.complete(0, TaskId(1), 400.0).is_none());
+        assert_eq!(p.busy_count(), 1, "task 3 must keep its container");
+        // The genuine completion still works.
+        assert!(p.complete(0, TaskId(3), 500.0).is_none());
+        assert_eq!(p.busy_count(), 0);
     }
 }

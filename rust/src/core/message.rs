@@ -99,6 +99,12 @@ pub enum Message {
     Forward { img: ImageMeta, from_edge: NodeId },
     /// Edge → peer edges: periodic MP-summary gossip (federation).
     EdgeSummary(EdgeSummary),
+    /// Edge → device: periodic liveness heartbeat (churn detection,
+    /// DESIGN.md §Churn). Devices use the inter-ping silence to suspect
+    /// their edge server is down and fall back to local processing; the
+    /// reverse direction needs no ping because UP pushes already act as
+    /// device→edge heartbeats.
+    Ping { from: NodeId, sent_ms: f64 },
 }
 
 impl Message {
@@ -114,6 +120,7 @@ impl Message {
             Message::JoinAck { .. } => 0x07,
             Message::Forward { .. } => 0x08,
             Message::EdgeSummary(_) => 0x09,
+            Message::Ping { .. } => 0x0A,
         }
     }
 
@@ -172,6 +179,7 @@ mod tests {
                 device_idle_containers: 3,
                 sent_ms: 40.0,
             }),
+            Message::Ping { from: NodeId(0), sent_ms: 120.0 },
         ];
         let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
         tags.sort_unstable();

@@ -65,6 +65,10 @@ pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
             put_u32(buf, s.device_idle_containers);
             put_f64(buf, s.sent_ms);
         }
+        Message::Ping { from, sent_ms } => {
+            put_u32(buf, from.0);
+            put_f64(buf, *sent_ms);
+        }
     }
     let body_len = (buf.len() - 5) as u32;
     buf[1..5].copy_from_slice(&body_len.to_le_bytes());
@@ -136,6 +140,7 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             device_idle_containers: r.u32()?,
             sent_ms: r.f64()?,
         }),
+        0x0A => Message::Ping { from: NodeId(r.u32()?), sent_ms: r.f64()? },
         t => bail!("unknown tag byte 0x{t:02x}"),
     };
     if r.off != body.len() {
@@ -341,6 +346,7 @@ mod tests {
             device_idle_containers: 5,
             sent_ms: 123.0,
         }));
+        roundtrip(Message::Ping { from: NodeId(0), sent_ms: 4_250.5 });
     }
 
     #[test]

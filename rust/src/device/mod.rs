@@ -15,7 +15,7 @@ use crate::core::message::{Message, ProfileUpdate};
 use crate::core::{ImageMeta, NodeId, Placement, TaskId};
 use crate::energy::Battery;
 use crate::profile::Predictor;
-use crate::scheduler::{DeviceCtx, LocalSnapshot, SchedulerPolicy};
+use crate::scheduler::{DeviceCtx, FailureDetector, LocalSnapshot, SchedulerPolicy};
 
 /// Effects a node handler requests from its driver.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +32,9 @@ pub enum Action {
     RecordStarted { task: TaskId, at_ms: f64 },
     /// Recorder hook: task completed (result available at its origin).
     RecordCompleted { task: TaskId, at_ms: f64, process_ms: f64 },
+    /// Recorder hook: an in-flight task's placement node was declared dead
+    /// and the task was pulled back for re-placement (churn).
+    RecordRequeued { task: TaskId },
 }
 
 /// An end device (Raspberry Pi / smartphone).
@@ -48,6 +51,13 @@ pub struct DeviceNode {
     /// Battery model (None = mains-powered). Advanced on every handler
     /// call; reported in UP pushes for energy-aware scheduling.
     battery: Option<Battery>,
+    /// Heartbeat thresholds for suspecting the edge server is down
+    /// (DESIGN.md §Churn). `None` disables churn detection entirely — the
+    /// classic event flow is bit-identical.
+    detector: Option<FailureDetector>,
+    /// Last time any message arrived from the edge (JoinAck, Result, Ping…).
+    /// Star topology: every inbound message is from the cell's edge.
+    last_edge_heard_ms: f64,
 }
 
 impl DeviceNode {
@@ -67,6 +77,8 @@ impl DeviceNode {
             inflight: HashMap::new(),
             awaiting: HashMap::new(),
             battery: None,
+            detector: None,
+            last_edge_heard_ms: 0.0,
         }
     }
 
@@ -74,6 +86,36 @@ impl DeviceNode {
     pub fn with_battery(mut self, battery: Battery) -> Self {
         self.battery = Some(battery);
         self
+    }
+
+    /// Enable edge-failure detection (builder style; churn scenarios only).
+    pub fn with_detector(mut self, detector: FailureDetector) -> Self {
+        self.detector = Some(detector);
+        self
+    }
+
+    /// The device's failure detector suspects the edge server is down:
+    /// nothing heard for longer than the dead threshold. The edge pings
+    /// every heartbeat period while alive, so silence is meaningful.
+    pub fn edge_suspected(&self, now_ms: f64) -> bool {
+        self.detector
+            .is_some_and(|d| now_ms - self.last_edge_heard_ms > d.dead_after_ms)
+    }
+
+    /// Churn: this device crashed. Containers, queue, and all task state
+    /// are lost; results for pre-fail tasks arriving later are ignored.
+    pub fn fail(&mut self) {
+        self.pool.reset();
+        self.inflight.clear();
+        self.awaiting.clear();
+    }
+
+    /// Churn: the device restarted at `now_ms`. The caller (driver) sends
+    /// [`DeviceNode::join_message`] to re-enter the edge's MP table; the
+    /// heard-timestamp is reset so the fresh session gets a full silence
+    /// window before suspecting the edge.
+    pub fn recover(&mut self, now_ms: f64) {
+        self.last_edge_heard_ms = now_ms;
     }
 
     pub fn battery(&self) -> Option<&Battery> {
@@ -134,7 +176,13 @@ impl DeviceNode {
             return;
         }
         let placement = {
-            let ctx = DeviceCtx { now_ms, img: &img, local: self.snapshot(), predictor: &self.predictor };
+            let ctx = DeviceCtx {
+                now_ms,
+                img: &img,
+                local: self.snapshot(),
+                predictor: &self.predictor,
+                edge_suspected: self.edge_suspected(now_ms),
+            };
             self.policy.decide_device(&ctx)
         };
         match placement {
@@ -157,6 +205,9 @@ impl DeviceNode {
     /// Network delivery.
     pub fn on_message(&mut self, msg: Message, now_ms: f64, out: &mut Vec<Action>) {
         self.tick_battery(now_ms);
+        // Any inbound message proves the edge is alive (star topology: the
+        // edge is the only sender a device ever hears from).
+        self.last_edge_heard_ms = now_ms;
         match msg {
             // The edge offloaded somebody's image to us: APr's decision
             // thread "processes them locally" unconditionally.
@@ -170,6 +221,8 @@ impl DeviceNode {
                 }
             }
             Message::JoinAck { .. } => {}
+            // Liveness heartbeat from the edge — hearing it was the point.
+            Message::Ping { .. } => {}
             other => {
                 log::debug!("{}: ignoring unexpected message {:?}", self.id, other.tag());
             }
@@ -212,8 +265,20 @@ impl DeviceNode {
             None => log::warn!("{}: completion for unknown task {}", self.id, task),
         }
         // Feedback thread: idle container pulls the next queued image.
-        if let Some(next) = self.pool.complete(container, now_ms) {
+        if let Some(next) = self.pool.complete(container, task, now_ms) {
             self.note_assignment(next, now_ms, out);
+        }
+    }
+
+    /// UP timer fired: emit the profile push, plus a Join probe when the
+    /// edge is suspected down — a recovered edge has lost its MP table, so
+    /// the probe is what re-registers this device (the Profile push alone
+    /// would be ignored by an edge that no longer knows the sender).
+    pub fn on_profile_tick(&mut self, now_ms: f64, out: &mut Vec<Action>) {
+        let up = self.profile_update(now_ms);
+        out.push(Action::Send { to: self.edge, msg: Message::Profile(up), reliable: true });
+        if self.edge_suspected(now_ms) {
+            out.push(Action::Send { to: self.edge, msg: self.join_message(), reliable: true });
         }
     }
 
@@ -401,5 +466,85 @@ mod tests {
         assert_eq!(up.busy_containers, 1);
         assert_eq!(up.warm_containers, 2);
         assert_eq!(up.sent_ms, 20.0);
+    }
+
+    // ---- churn (DESIGN.md §Churn) ------------------------------------
+
+    fn detector() -> crate::scheduler::FailureDetector {
+        crate::scheduler::FailureDetector { suspect_after_ms: 150.0, dead_after_ms: 400.0 }
+    }
+
+    #[test]
+    fn pings_keep_edge_unsuspected() {
+        let mut d = device(PolicyKind::Dds, 1).with_detector(detector());
+        let mut out = Vec::new();
+        for t in [100.0, 200.0, 300.0] {
+            d.on_message(Message::Ping { from: NodeId(0), sent_ms: t }, t, &mut out);
+        }
+        assert!(!d.edge_suspected(500.0)); // 200 ms silence < 400 ms
+        assert!(d.edge_suspected(701.0)); // 401 ms silence
+        // Without a detector, silence never suspects.
+        let d2 = device(PolicyKind::Dds, 1);
+        assert!(!d2.edge_suspected(1e9));
+    }
+
+    #[test]
+    fn suspected_edge_makes_dds_keep_frames_local() {
+        let mut d = device(PolicyKind::Dds, 1).with_detector(detector());
+        let mut out = Vec::new();
+        // 500 ms budget < 597 ms prediction: normally forwarded to the edge.
+        d.on_camera_frame(frame(1, 500.0), 0.0, &mut out);
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::Image(_), .. })));
+        out.clear();
+        // 1 s of silence: the edge is suspected → the frame stays local.
+        let mut f = frame(2, 500.0);
+        f.created_ms = 1_000.0;
+        d.on_camera_frame(f, 1_000.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, Action::Send { .. })));
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordPlaced { placement: Placement::Local, .. }
+        )));
+    }
+
+    #[test]
+    fn profile_tick_probes_join_while_suspected() {
+        let mut d = device(PolicyKind::Dds, 1).with_detector(detector());
+        let mut out = Vec::new();
+        d.on_profile_tick(20.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::Send { msg: Message::Profile(_), .. })));
+        assert!(!out.iter().any(|a| matches!(a, Action::Send { msg: Message::Join { .. }, .. })));
+        out.clear();
+        // Long silence → the tick carries a Join probe too.
+        d.on_profile_tick(1_000.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::Send { msg: Message::Join { .. }, .. })));
+        out.clear();
+        // A JoinAck (recovered edge answered) clears the suspicion.
+        d.on_message(Message::JoinAck { assigned: NodeId(1) }, 1_010.0, &mut out);
+        out.clear();
+        d.on_profile_tick(1_020.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, Action::Send { msg: Message::Join { .. }, .. })));
+    }
+
+    #[test]
+    fn fail_drops_all_task_state_and_recover_resets_suspicion() {
+        let mut d = device(PolicyKind::Aor, 1).with_detector(detector());
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 1e9), 0.0, &mut out);
+        d.on_camera_frame(frame(2, 1e9), 1.0, &mut out);
+        assert_eq!(d.pool().busy_count(), 1);
+        assert_eq!(d.pool().queued_count(), 1);
+        d.fail();
+        assert_eq!(d.pool().busy_count(), 0);
+        assert_eq!(d.pool().queued_count(), 0);
+        // A completion for a pre-fail task is a no-op (unknown task).
+        out.clear();
+        d.on_container_done(0, TaskId(1), 597.0, 597.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordCompleted { .. })));
+        // Recovery grants a fresh silence window.
+        d.recover(5_000.0);
+        assert!(!d.edge_suspected(5_100.0));
     }
 }

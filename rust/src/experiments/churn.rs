@@ -1,0 +1,303 @@
+//! Churn experiment (beyond the paper): deadline satisfaction of the DDS
+//! family vs. the comparison baselines when the infrastructure itself is
+//! dynamic — devices crash and rejoin, an edge server fails outright, and
+//! a whole cell joins mid-run.
+//!
+//! Methodology: per-cell workload streams (every cell's first device has
+//! the camera — churn in one cell stresses cross-cell offload
+//! realistically), 200 images per camera at 100 ms with a 5 s
+//! constraint, across 1/2/4 cells. Three churn scenarios are injected
+//! over the ~20 s stream span:
+//!
+//! - **device churn** — each cell's *worker* (non-camera) device fails at
+//!   25% of the span and recovers at 60%: in-flight frames on it must be
+//!   requeued and re-placed;
+//! - **edge failure** — cell 0's edge server fails from 25% to 75% of the
+//!   span: DDS devices detect the silence and fall back to local
+//!   processing, the baselines keep streaming into the void;
+//! - **cell join** — the last cell (edge + devices) only joins at 40% of
+//!   the span (its camera starts streaming then) — capacity arrives late
+//!   instead of disappearing. Degenerates to a no-churn baseline with one
+//!   cell.
+
+use crate::config::{
+    CellConfig, ChurnEvent, ChurnKind, ChurnTarget, DeviceConfig, SystemConfig, WorkloadConfig,
+};
+use crate::core::NodeClass;
+use crate::scheduler::PolicyKind;
+use crate::sim::workload::ArrivalPattern;
+use crate::sim::ScenarioBuilder;
+
+/// Cell counts compared by the experiment.
+pub const CHURN_CELLS: [usize; 3] = [1, 2, 4];
+
+/// The injected disturbance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnScenario {
+    DeviceChurn,
+    EdgeFail,
+    CellJoin,
+}
+
+impl ChurnScenario {
+    pub const ALL: [ChurnScenario; 3] =
+        [ChurnScenario::DeviceChurn, ChurnScenario::EdgeFail, ChurnScenario::CellJoin];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ChurnScenario::DeviceChurn => "device-churn",
+            ChurnScenario::EdgeFail => "edge-fail",
+            ChurnScenario::CellJoin => "cell-join",
+        }
+    }
+}
+
+impl std::fmt::Display for ChurnScenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One (cells × scenario × policy) run of the sweep.
+#[derive(Debug, Clone)]
+pub struct ChurnRow {
+    pub n_cells: usize,
+    pub scenario: ChurnScenario,
+    pub policy: PolicyKind,
+    pub met: usize,
+    pub missed: usize,
+    pub dropped: usize,
+    pub requeued: usize,
+    pub replaced: usize,
+    pub forwarded: usize,
+}
+
+/// A federation of `n_cells` identical cells, each with a camera on its
+/// first device — per-cell workload streams, unlike [`super::fed_config`]
+/// where only cell 0 originates frames.
+pub fn churn_config(n_cells: usize) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    if n_cells > 1 {
+        cfg.cells = vec![CellConfig { warm_containers: 4, cpu_load_pct: 0.0 }; n_cells];
+    }
+    cfg.devices = (0..n_cells)
+        .flat_map(|c| {
+            (0..2).map(move |i| DeviceConfig {
+                class: NodeClass::RaspberryPi,
+                warm_containers: 2,
+                camera: i == 0,
+                cpu_load_pct: 0.0,
+                location: (1.0 + i as f64, 0.0),
+                battery: false,
+                cell: c as u32,
+            })
+        })
+        .collect();
+    cfg
+}
+
+fn churn_workload(n_images: u32, deadline_ms: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        n_images,
+        interval_ms: 100.0,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms,
+        side_px: 64,
+        pattern: ArrivalPattern::Uniform,
+    }
+}
+
+/// Inject `scenario` into `cfg`. `span_ms` is the workload span (the
+/// timeline fractions are anchored on it).
+pub fn apply_scenario(cfg: &mut SystemConfig, scenario: ChurnScenario, span_ms: f64) {
+    let n_cells = cfg.n_cells();
+    match scenario {
+        ChurnScenario::DeviceChurn => {
+            // Each cell's worker (non-camera) device: devices are laid out
+            // [camera, worker] per cell in config order.
+            for c in 0..n_cells {
+                let worker = 2 * c + 1;
+                cfg.churn.events.push(ChurnEvent {
+                    at_ms: 0.25 * span_ms,
+                    target: ChurnTarget::Device(worker),
+                    kind: ChurnKind::Fail,
+                });
+                cfg.churn.events.push(ChurnEvent {
+                    at_ms: 0.60 * span_ms,
+                    target: ChurnTarget::Device(worker),
+                    kind: ChurnKind::Recover,
+                });
+            }
+        }
+        ChurnScenario::EdgeFail => {
+            cfg.churn.events.push(ChurnEvent {
+                at_ms: 0.25 * span_ms,
+                target: ChurnTarget::Edge(0),
+                kind: ChurnKind::Fail,
+            });
+            cfg.churn.events.push(ChurnEvent {
+                at_ms: 0.75 * span_ms,
+                target: ChurnTarget::Edge(0),
+                kind: ChurnKind::Recover,
+            });
+        }
+        ChurnScenario::CellJoin => {
+            // The last cell (edge + its devices) joins at 40% of the span;
+            // its camera starts streaming at the join. One cell has
+            // nothing to join — a churn-free control row.
+            if n_cells < 2 {
+                return;
+            }
+            let joining = n_cells - 1;
+            cfg.churn.events.push(ChurnEvent {
+                at_ms: 0.40 * span_ms,
+                target: ChurnTarget::Edge(joining),
+                kind: ChurnKind::Join,
+            });
+            for d in [2 * joining, 2 * joining + 1] {
+                cfg.churn.events.push(ChurnEvent {
+                    at_ms: 0.40 * span_ms,
+                    target: ChurnTarget::Device(d),
+                    kind: ChurnKind::Join,
+                });
+            }
+        }
+    }
+}
+
+/// Run one sweep cell.
+pub fn churn_run(
+    n_cells: usize,
+    scenario: ChurnScenario,
+    policy: PolicyKind,
+    seed: u64,
+    n_images: u32,
+    deadline_ms: f64,
+) -> ChurnRow {
+    let wl = churn_workload(n_images, deadline_ms);
+    let mut cfg = churn_config(n_cells);
+    cfg.policy = policy;
+    apply_scenario(&mut cfg, scenario, n_images as f64 * wl.interval_ms);
+    let report = ScenarioBuilder::new(cfg).workload(wl).seed(seed).run();
+    ChurnRow {
+        n_cells,
+        scenario,
+        policy,
+        met: report.summary.met,
+        missed: report.summary.missed,
+        dropped: report.summary.dropped,
+        requeued: report.summary.requeued,
+        replaced: report.summary.replaced,
+        forwarded: report.summary.forwarded,
+    }
+}
+
+/// The full sweep: cell counts × scenarios × the paper's four policies.
+pub fn churn(seed: u64) -> Vec<ChurnRow> {
+    let mut rows = Vec::new();
+    for &n_cells in &CHURN_CELLS {
+        for scenario in ChurnScenario::ALL {
+            for policy in PolicyKind::PAPER {
+                rows.push(churn_run(n_cells, scenario, policy, seed, 200, 5_000.0));
+            }
+        }
+    }
+    rows
+}
+
+/// Render the sweep as an aligned text grid: one block per scenario, one
+/// line per cell count, met counts per policy plus DDS churn counters.
+pub fn render_churn(rows: &[ChurnRow]) -> String {
+    let mut out = String::from(
+        "## Churn: met count under infrastructure churn (200 imgs/camera @100ms, 5 s)\n",
+    );
+    for scenario in ChurnScenario::ALL {
+        out.push_str(&format!("### {scenario}\n"));
+        out.push_str(&format!(
+            "{:>8} {:>8} {:>8} {:>8} {:>8} {:>10} {:>10} {:>9}\n",
+            "cells", "aor", "aoe", "eods", "dds", "requeued", "replaced", "dropped"
+        ));
+        for &n_cells in &CHURN_CELLS {
+            let get = |p: PolicyKind| {
+                rows.iter()
+                    .find(|r| r.n_cells == n_cells && r.scenario == scenario && r.policy == p)
+            };
+            let met = |p| get(p).map_or(0, |r| r.met);
+            let dds = get(PolicyKind::Dds);
+            out.push_str(&format!(
+                "{:>8} {:>8} {:>8} {:>8} {:>8} {:>10} {:>10} {:>9}\n",
+                n_cells,
+                met(PolicyKind::Aor),
+                met(PolicyKind::Aoe),
+                met(PolicyKind::Eods),
+                met(PolicyKind::Dds),
+                dds.map_or(0, |r| r.requeued),
+                dds.map_or(0, |r| r.replaced),
+                dds.map_or(0, |r| r.dropped),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_config_shape() {
+        let c = churn_config(4);
+        c.validate().unwrap();
+        assert_eq!(c.n_cells(), 4);
+        assert_eq!(c.devices.len(), 8);
+        // Per-cell workload streams: one camera per cell.
+        assert_eq!(c.devices.iter().filter(|d| d.camera).count(), 4);
+        for cell in 0..4u32 {
+            assert!(c
+                .devices
+                .iter()
+                .any(|d| d.cell == cell && d.camera));
+        }
+        // Single cell keeps the classic shim (no [[cell]] tables).
+        assert!(!churn_config(1).is_multi_cell());
+    }
+
+    #[test]
+    fn scenarios_inject_valid_events() {
+        for n in CHURN_CELLS {
+            for s in ChurnScenario::ALL {
+                let mut cfg = churn_config(n);
+                apply_scenario(&mut cfg, s, 10_000.0);
+                cfg.validate().unwrap();
+                if s == ChurnScenario::CellJoin && n == 1 {
+                    assert!(!cfg.churn.enabled(), "1-cell join is the control row");
+                } else {
+                    assert!(cfg.churn.enabled(), "{s} on {n} cells must inject churn");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn device_churn_requeues_and_dds_survives() {
+        // A 2 s constraint makes the camera spill to the edge early, so
+        // the worker carries offloaded frames well before it dies.
+        let dds = churn_run(1, ChurnScenario::DeviceChurn, PolicyKind::Dds, 7, 120, 2_000.0);
+        assert_eq!(dds.met + dds.missed + dds.dropped, 120);
+        assert!(dds.requeued > 0, "device churn must strand frames for requeue");
+        assert!(dds.replaced > 0, "requeued frames must re-place and complete");
+    }
+
+    // (The DDS-vs-baselines edge-failure comparison lives in
+    // tests/churn_integration.rs to avoid running the same sweep twice.)
+
+    #[test]
+    fn cell_join_adds_late_capacity() {
+        let r = churn_run(2, ChurnScenario::CellJoin, PolicyKind::Dds, 7, 80, 5_000.0);
+        // Both cameras stream a full block; the joiner's are late but real.
+        assert_eq!(r.met + r.missed + r.dropped, 160);
+        assert!(r.met > 0);
+    }
+}

@@ -6,10 +6,14 @@
 //! Every generator returns structured rows plus the paper's reference
 //! numbers so reports can print paper-vs-measured side by side.
 
+pub mod churn;
 pub mod federation;
 pub mod figures;
 pub mod tables;
 
+pub use churn::{
+    apply_scenario, churn, churn_config, churn_run, render_churn, ChurnRow, ChurnScenario,
+};
 pub use federation::{fed, fed_config, fed_run, render_fed, FedRow};
 pub use figures::{fig5, fig6, fig7, fig8, Fig5Row, Fig7Row, Fig8Row};
 pub use tables::{table2, table3, table4, table5, table6, TableRow};

@@ -57,22 +57,23 @@ pub fn table2() -> TableRow {
 pub fn warm_profile(class: NodeClass, n: u32, images: u64) -> (f64, f64) {
     let mut pool = ContainerPool::new(profile_for(class), n);
     let mut assignments = Vec::new();
-    let mut pending: Vec<(usize, f64)> = Vec::new(); // (container, done_at)
+    // (container, task, done_at)
+    let mut pending: Vec<(usize, TaskId, f64)> = Vec::new();
     for t in 0..images {
         if let Some(a) = pool.submit(img(t, 29.0), 0.0) {
-            pending.push((a.container, a.done_at_ms));
+            pending.push((a.container, a.task, a.done_at_ms));
             assignments.push(a.process_ms);
         }
     }
     // Drain: repeatedly complete the earliest finisher.
     let mut last_done: f64 = 0.0;
     while let Some(idx) =
-        pending.iter().enumerate().min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap()).map(|(i, _)| i)
+        pending.iter().enumerate().min_by(|a, b| a.1 .2.partial_cmp(&b.1 .2).unwrap()).map(|(i, _)| i)
     {
-        let (container, done_at) = pending.swap_remove(idx);
+        let (container, task, done_at) = pending.swap_remove(idx);
         last_done = last_done.max(done_at);
-        if let Some(a) = pool.complete(container, done_at) {
-            pending.push((a.container, a.done_at_ms));
+        if let Some(a) = pool.complete(container, task, done_at) {
+            pending.push((a.container, a.task, a.done_at_ms));
             assignments.push(a.process_ms);
         }
     }

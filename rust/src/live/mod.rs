@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::SystemConfig;
+use crate::config::{ChurnEvent, ChurnKind, ChurnTarget, SystemConfig};
 use crate::container::ContainerPool;
 use crate::core::{ImageMeta, Message, NodeClass, NodeId, TaskId};
 use crate::device::{Action, DeviceNode};
@@ -63,6 +63,12 @@ enum LiveEvent {
     Frame(ImageMeta),
     ContainerDone { container: usize, task: TaskId, process_ms: f64 },
     ProfileTick,
+    /// Churn injection (kill hook): the device drops all task state and
+    /// ignores every event until [`LiveEvent::Recover`] — its threads and
+    /// sockets stay up, mirroring a crashed process behind a live TCP peer.
+    Fail,
+    /// Churn injection (restart hook): reset, re-join the edge, resume.
+    Recover,
     Stop,
 }
 
@@ -157,6 +163,9 @@ fn apply_edge_action(
             recorder.inner.lock().unwrap().completed(task, at_ms, process_ms);
             recorder.resolved.fetch_add(1, Ordering::SeqCst);
         }
+        Action::RecordRequeued { task } => {
+            recorder.inner.lock().unwrap().requeued(task);
+        }
     }
 }
 
@@ -191,13 +200,17 @@ impl LiveCluster {
                 ContainerPool::new(profile_for(NodeClass::EdgeServer), cell_warm);
             edge_pool.set_bg_load(cfg.cell_edge_load(c));
             let edge_seed = cfg.seed.wrapping_add((c as u64) << 32);
-            let edge_node = Arc::new(Mutex::new(EdgeNode::new(
+            let mut edge = EdgeNode::new(
                 edge_id,
                 edge_pool,
                 cfg.policy.build(edge_seed),
                 topo.clone(),
                 cfg.max_staleness_ms,
-            )));
+            );
+            if cfg.churn.enabled() {
+                edge = edge.with_detector(cfg.churn.detector());
+            }
+            let edge_node = Arc::new(Mutex::new(edge));
 
             // Writers to devices and peer edges, filled in as they join.
             let writers: Arc<Mutex<HashMap<NodeId, FramedConn>>> =
@@ -397,6 +410,39 @@ impl LiveCluster {
             }
         }
 
+        // ---------- Failure-detector heartbeats (churn only) ----------
+        // One sweep thread per edge: classify MP/peer entries by heartbeat
+        // age, requeue frames off dead nodes, ping registered devices —
+        // the same EdgeNode::check_liveness the simulator drives.
+        if cfg.churn.enabled() {
+            let period = Duration::from_secs_f64(cfg.churn.heartbeat_period_ms / 1e3);
+            for (i, node) in edge_nodes.iter().enumerate() {
+                let node = node.clone();
+                let apply = appliers[i].clone();
+                let clock = clock.clone();
+                let stop = stop.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("heartbeat-{i}"))
+                        .spawn(move || {
+                            while !stop.load(Ordering::SeqCst) {
+                                std::thread::sleep(period);
+                                if stop.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                let mut out = Vec::new();
+                                {
+                                    let mut e = node.lock().unwrap();
+                                    e.check_liveness(clock.now_ms(), &mut out);
+                                }
+                                apply(out);
+                            }
+                        })
+                        .context("spawning heartbeat thread")?,
+                );
+            }
+        }
+
         // ---------- Devices ----------
         let mut device_txs = Vec::new();
         let mut camera_tx: Option<mpsc::Sender<LiveEvent>> = None;
@@ -413,13 +459,16 @@ impl LiveCluster {
 
             let mut pool = ContainerPool::new(profile_for(dcfg.class), dcfg.warm_containers);
             pool.set_bg_load(dcfg.cpu_load_pct);
-            let node = DeviceNode::new(
+            let mut node = DeviceNode::new(
                 id,
                 cell_edge_id,
                 pool,
                 Predictor::new(profile_for(dcfg.class)),
                 cfg.policy.build(cfg.seed.wrapping_add(1 + i as u64)),
             );
+            if cfg.churn.enabled() {
+                node = node.with_detector(cfg.churn.detector());
+            }
 
             let clock = clock.clone();
             let recorder = recorder.clone();
@@ -459,14 +508,32 @@ impl LiveCluster {
         self.clock.clone()
     }
 
-    /// Inject a frame stream into the camera device, pacing in real time.
-    ///
+    /// Inject a frame stream into the first camera device, pacing in real
+    /// time. See [`LiveCluster::stream_to`] for targeting a specific
+    /// camera (per-cell workload streams).
+    pub fn stream(&self, frames: Vec<ImageMeta>) -> Result<()> {
+        self.spawn_stream(self.camera_tx.clone(), frames);
+        Ok(())
+    }
+
+    /// Inject a frame stream into the device at `device_index` (config
+    /// order) — per-cell workload streams: each cell's camera originates
+    /// its own frames.
+    pub fn stream_to(&self, device_index: usize, frames: Vec<ImageMeta>) -> Result<()> {
+        let tx = self
+            .device_txs
+            .get(device_index)
+            .with_context(|| format!("no device at config index {device_index}"))?
+            .clone();
+        self.spawn_stream(tx, frames);
+        Ok(())
+    }
+
     /// The `created` count is bumped upfront (so `wait` knows the target),
     /// but each frame's creation *timestamp* is recorded at its paced
     /// generation instant — e2e latency must not include pacing waits.
-    pub fn stream(&self, frames: Vec<ImageMeta>) -> Result<()> {
+    fn spawn_stream(&self, tx: mpsc::Sender<LiveEvent>, frames: Vec<ImageMeta>) {
         self.recorder.created.fetch_add(frames.len(), Ordering::SeqCst);
-        let tx = self.camera_tx.clone();
         let clock = self.clock.clone();
         let recorder = self.recorder.clone();
         std::thread::spawn(move || {
@@ -488,6 +555,85 @@ impl LiveCluster {
                 let _ = tx.send(LiveEvent::Frame(f));
             }
         });
+    }
+
+    /// Drive scripted `[[churn]]` events against the running cluster on
+    /// the wall clock: device fail/recover map onto the kill/restart
+    /// hooks, and a device *join* becomes fail-at-0 + recover-at-join
+    /// (the device exists only from its join time on, mirroring the sim).
+    /// Edge (cell) targets cannot be churned in live mode yet and are
+    /// logged + skipped (ROADMAP follow-up).
+    pub fn schedule_churn(&self, events: &[ChurnEvent]) {
+        // (at_ms, device config index, is_fail)
+        let mut timeline: Vec<(f64, usize, bool)> = Vec::new();
+        for e in events {
+            match (e.target, e.kind) {
+                (ChurnTarget::Device(i), ChurnKind::Fail) => timeline.push((e.at_ms, i, true)),
+                (ChurnTarget::Device(i), ChurnKind::Recover) => {
+                    timeline.push((e.at_ms, i, false))
+                }
+                (ChurnTarget::Device(i), ChurnKind::Join) => {
+                    timeline.push((0.0, i, true));
+                    timeline.push((e.at_ms, i, false));
+                }
+                (ChurnTarget::Edge(c), _) => {
+                    log::warn!(
+                        "live mode cannot churn edge servers yet; ignoring [[churn]] event for cell {c}"
+                    );
+                }
+            }
+        }
+        if timeline.is_empty() {
+            return;
+        }
+        timeline.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).expect("NaN churn time").then(a.1.cmp(&b.1))
+        });
+        let txs = self.device_txs.clone();
+        let clock = self.clock.clone();
+        let stop = self.stop.clone();
+        std::thread::spawn(move || {
+            for (at_ms, dev, is_fail) in timeline {
+                while clock.now_ms() < at_ms {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let wait_s = ((at_ms - clock.now_ms()) / 1e3).clamp(0.001, 0.02);
+                    std::thread::sleep(Duration::from_secs_f64(wait_s));
+                }
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let ev = if is_fail { LiveEvent::Fail } else { LiveEvent::Recover };
+                if let Some(tx) = txs.get(dev) {
+                    let _ = tx.send(ev);
+                }
+            }
+        });
+    }
+
+    /// Churn kill hook: the device at `device_index` (config order) drops
+    /// all task state and blackholes every event until
+    /// [`LiveCluster::recover_device`]. Frames in its containers are lost;
+    /// the cell edge's failure detector requeues what it had placed there.
+    pub fn fail_device(&self, device_index: usize) -> Result<()> {
+        self.device_txs
+            .get(device_index)
+            .with_context(|| format!("no device at config index {device_index}"))?
+            .send(LiveEvent::Fail)
+            .ok()
+            .context("device loop gone")?;
+        Ok(())
+    }
+
+    /// Churn restart hook: the device resets and re-joins its cell edge.
+    pub fn recover_device(&self, device_index: usize) -> Result<()> {
+        self.device_txs
+            .get(device_index)
+            .with_context(|| format!("no device at config index {device_index}"))?
+            .send(LiveEvent::Recover)
+            .ok()
+            .context("device loop gone")?;
         Ok(())
     }
 
@@ -613,6 +759,10 @@ fn device_main(
     }
 
     let mut sides: HashMap<TaskId, u32> = HashMap::new();
+    // Churn kill/restart hooks: while `failed`, the node is a blackhole —
+    // threads and the TCP peer stay up (a crashed process behind a live
+    // socket), but no event reaches the state machine.
+    let mut failed = false;
     loop {
         let ev = match rx.recv() {
             Ok(e) => e,
@@ -622,6 +772,31 @@ fn device_main(
         let mut out = Vec::new();
         match ev {
             LiveEvent::Stop => break,
+            LiveEvent::Fail => {
+                if !failed {
+                    log::info!("churn: device {id} fails at {now:.1} ms");
+                    failed = true;
+                    node.fail();
+                }
+            }
+            LiveEvent::Recover => {
+                if failed {
+                    log::info!("churn: device {id} recovers at {now:.1} ms");
+                    failed = false;
+                    node.recover(now);
+                    // Re-join: the edge evicted us (or restarted itself).
+                    if let Err(e) = conn.send(&node.join_message()) {
+                        log::warn!("{id}: rejoin send failed: {e}");
+                    }
+                }
+            }
+            LiveEvent::Frame(_) if failed => {
+                // The camera is down: the frame is lost outright. Resolve
+                // it so the cluster doesn't wait on it (mirrors the sim's
+                // dead-origin branch; the record stays Dropped).
+                recorder.resolved.fetch_add(1, Ordering::SeqCst);
+            }
+            _ if failed => {} // dead node: drop messages, completions, ticks
             LiveEvent::Frame(img) => {
                 sides.insert(img.task, img.side_px);
                 node.on_camera_frame(img, now, &mut out);
@@ -636,12 +811,9 @@ fn device_main(
                 node.on_container_done(container, task, process_ms, now, &mut out);
             }
             LiveEvent::ProfileTick => {
-                let up = node.profile_update(now);
-                out.push(Action::Send {
-                    to: node.edge,
-                    msg: Message::Profile(up),
-                    reliable: true,
-                });
+                // UP push, plus a Join probe while the edge is suspected
+                // down (shared with the sim driver).
+                node.on_profile_tick(now, &mut out);
             }
         }
         for a in out {
@@ -667,6 +839,9 @@ fn device_main(
                 Action::RecordCompleted { task, at_ms, process_ms } => {
                     recorder.inner.lock().unwrap().completed(task, at_ms, process_ms);
                     recorder.resolved.fetch_add(1, Ordering::SeqCst);
+                }
+                Action::RecordRequeued { task } => {
+                    recorder.inner.lock().unwrap().requeued(task);
                 }
             }
         }

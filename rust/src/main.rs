@@ -7,7 +7,7 @@
 //!                 [--interval MS] [--deadline MS] [--seed S] [--csv out.csv]
 //! edge-dds sweep  [--config cfg.toml] [--images N] [--interval MS]
 //!                 [--deadline MS]                  # all paper policies
-//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|fed|all
+//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|fed|churn|all
 //! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
 //!                 [--interval MS] [--deadline MS] [--side PX]
 //! ```
@@ -16,6 +16,13 @@
 //! per-device `cell = N` key and an optional `[federation]` section
 //! (backhaul link + gossip period); see DESIGN.md §Federation. Both `sim`
 //! and `live` drive them.
+//!
+//! Churn & failure injection (DESIGN.md §Churn): `[[churn]]` events
+//! (`at_ms`, `kind = "fail"|"recover"|"join"`, `device = i` or
+//! `cell = c`), optional seeded `[churn_random]` rates, and `[failure]`
+//! detector thresholds. `repro --exp churn` compares deadline satisfaction
+//! of DDS vs. the baselines under device churn, edge failure, and mid-run
+//! cell join across 1/2/4 cells.
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -28,8 +35,7 @@ use edge_dds::live::LiveCluster;
 use edge_dds::metrics::{write_csv, writer::summary_json};
 use edge_dds::runtime::RuntimeService;
 use edge_dds::scheduler::PolicyKind;
-use edge_dds::sim::{ImageStream, ScenarioBuilder};
-use edge_dds::util::SplitMix64;
+use edge_dds::sim::ScenarioBuilder;
 
 fn main() {
     edge_dds::util::logger::init();
@@ -67,12 +73,13 @@ fn print_usage() {
          \x20 edge-dds sim    [--config F] [--policy P] [--images N] [--interval MS]\n\
          \x20                 [--deadline MS] [--seed S] [--csv OUT]\n\
          \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
-         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|all\n\
+         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|all\n\
          \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
          \x20                 [--interval MS] [--deadline MS] [--side PX]\n\
          \n\
          POLICIES: aor aoe eods dds dds-no-avail dds-energy round-robin random\n\
-         FEDERATION: [[cell]] tables + device `cell = N` + [federation] in --config"
+         FEDERATION: [[cell]] tables + device `cell = N` + [federation] in --config\n\
+         CHURN: [[churn]] events + [churn_random] + [failure] thresholds in --config"
     );
 }
 
@@ -212,6 +219,11 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
         let rows = experiments::fed(seed);
         println!("{}", experiments::render_fed(&rows));
     }
+    if all || exp == "churn" {
+        matched = true;
+        let rows = experiments::churn(seed);
+        println!("{}", experiments::render_churn(&rows));
+    }
     if !matched {
         bail!("unknown experiment `{exp}`");
     }
@@ -232,16 +244,23 @@ fn cmd_live(flags: &Flags) -> Result<()> {
     // Session setup settles (joins + first profile pushes).
     std::thread::sleep(Duration::from_millis(100));
 
-    let camera = edge_dds::core::NodeId(
-        1 + cfg.devices.iter().position(|d| d.camera).unwrap_or(0) as u32,
-    );
-    let frames =
-        ImageStream::new(cfg.workload, camera, SplitMix64::new(cfg.seed ^ 0xFEED)).generate();
-    let n = frames.len();
-    cluster.stream(frames)?;
-
+    // Churn: the same expanded trace the simulator injects (scripted
+    // [[churn]] plus seeded [churn_random] cycles), driven on the wall
+    // clock via the kill/restart hooks (edge targets are sim-only).
     let span = cfg.workload.n_images as f64 * cfg.workload.interval_ms;
-    let timeout = Duration::from_secs_f64((span + 60_000.0) / 1e3);
+    cluster.schedule_churn(&cfg.churn.expanded_events(cfg.seed, span, cfg.devices.len()));
+
+    // Per-cell workload streams: each cell's camera originates its own
+    // frames (the same derivation the simulator uses).
+    let streams = ScenarioBuilder::camera_streams(&cfg);
+    let n: usize = streams.iter().map(|(_, f)| f.len()).sum();
+    // A joining cell's stream starts at its join time — wait for it too.
+    let latest_start = ScenarioBuilder::latest_stream_start_ms(&streams);
+    for (device_index, frames) in streams {
+        cluster.stream_to(device_index, frames)?;
+    }
+
+    let timeout = Duration::from_secs_f64((latest_start + span + 60_000.0) / 1e3);
     let summary = cluster.wait(timeout);
     println!("{}", summary_json(&format!("live-{}", cfg.policy), &summary));
     println!("streamed {n} frames; met {}/{}", summary.met, summary.total);

@@ -29,6 +29,10 @@ pub struct RunSummary {
     /// Tasks forwarded across cells (placement `ToPeerEdge`) — always 0
     /// outside a federation.
     pub forwarded: usize,
+    /// Tasks pulled back at least once from a node declared dead (churn).
+    pub requeued: usize,
+    /// Requeued tasks that still completed after re-placement.
+    pub replaced: usize,
 }
 
 impl RunSummary {

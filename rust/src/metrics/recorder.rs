@@ -22,6 +22,9 @@ pub struct TaskRecord {
     pub completed_ms: Option<f64>,
     /// Container-internal processing time.
     pub process_ms: Option<f64>,
+    /// Times this task was pulled back from a node declared dead and
+    /// re-placed (churn; 0 in failure-free runs).
+    pub requeues: u32,
     pub verdict: Verdict,
 }
 
@@ -66,6 +69,7 @@ impl Recorder {
                 started_ms: None,
                 completed_ms: None,
                 process_ms: None,
+                requeues: 0,
                 verdict: Verdict::Dropped, // until completed
             },
         );
@@ -74,6 +78,14 @@ impl Recorder {
     pub fn placed(&mut self, task: TaskId, placement: Placement) {
         if let Some(r) = self.records.get_mut(&task) {
             r.placement = placement;
+        }
+    }
+
+    /// The task's placement node was declared dead; it was pulled back for
+    /// re-placement (churn).
+    pub fn requeued(&mut self, task: TaskId) {
+        if let Some(r) = self.records.get_mut(&task) {
+            r.requeues += 1;
         }
     }
 
@@ -131,6 +143,11 @@ impl Recorder {
             .iter()
             .filter(|r| matches!(r.placement, Placement::ToPeerEdge(_)))
             .count();
+        let requeued = records.iter().filter(|r| r.requeues > 0).count();
+        let replaced = records
+            .iter()
+            .filter(|r| r.requeues > 0 && r.completed_ms.is_some())
+            .count();
         RunSummary {
             total: records.len(),
             met,
@@ -144,6 +161,8 @@ impl Recorder {
                 local as f64 / n_completed as f64
             },
             forwarded,
+            requeued,
+            replaced,
         }
     }
 }
@@ -197,6 +216,29 @@ mod tests {
         rec.completed(TaskId(2), 2.0, 1.0);
         let s = rec.summarize();
         assert_eq!(s.local_fraction, 0.5);
+    }
+
+    #[test]
+    fn requeue_counters() {
+        let mut rec = Recorder::new();
+        // Task 1: requeued once, completes → replaced.
+        rec.created(TaskId(1), NodeId(1), 29.0, 10_000.0, 0.0);
+        rec.requeued(TaskId(1));
+        rec.started(TaskId(1), NodeId(0), 500.0);
+        rec.completed(TaskId(1), 900.0, 223.0);
+        // Task 2: requeued twice, never completes.
+        rec.created(TaskId(2), NodeId(1), 29.0, 10_000.0, 0.0);
+        rec.requeued(TaskId(2));
+        rec.requeued(TaskId(2));
+        // Task 3: untouched by churn.
+        rec.created(TaskId(3), NodeId(1), 29.0, 10_000.0, 0.0);
+        let s = rec.summarize();
+        assert_eq!(s.requeued, 2);
+        assert_eq!(s.replaced, 1);
+        assert_eq!(rec.get(TaskId(2)).unwrap().requeues, 2);
+        assert_eq!(rec.get(TaskId(3)).unwrap().requeues, 0);
+        // Requeue of an unknown task is ignored.
+        rec.requeued(TaskId(99));
     }
 
     #[test]

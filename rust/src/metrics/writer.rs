@@ -12,7 +12,7 @@ use crate::core::{Placement, Verdict};
 
 /// One CSV line for a task record (see [`CSV_HEADER`]).
 pub const CSV_HEADER: &str =
-    "task,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,verdict";
+    "task,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,requeues,verdict";
 
 pub fn csv_line(r: &TaskRecord) -> String {
     let placement = match r.placement {
@@ -28,7 +28,7 @@ pub fn csv_line(r: &TaskRecord) -> String {
     };
     let opt = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_default();
     format!(
-        "{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{}",
+        "{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{},{}",
         r.task.0,
         r.origin.0,
         r.size_kb,
@@ -40,6 +40,7 @@ pub fn csv_line(r: &TaskRecord) -> String {
         opt(r.completed_ms),
         opt(r.process_ms),
         opt(r.e2e_ms()),
+        r.requeues,
         verdict,
     )
 }
@@ -68,7 +69,7 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         })
         .unwrap_or_else(|| "null".into());
     format!(
-        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"latency":{}}}"#,
+        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"latency":{}}}"#,
         name,
         s.total,
         s.met,
@@ -77,6 +78,8 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         s.met_fraction(),
         s.local_fraction,
         s.forwarded,
+        s.requeued,
+        s.replaced,
         lat
     )
 }
@@ -112,7 +115,8 @@ mod tests {
         assert_eq!(fields.len(), CSV_HEADER.split(',').count());
         assert_eq!(fields[0], "1");
         assert_eq!(fields[5], "offload:n2");
-        assert_eq!(fields[11], "met");
+        assert_eq!(fields[11], "0"); // requeues
+        assert_eq!(fields[12], "met");
     }
 
     #[test]

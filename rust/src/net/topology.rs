@@ -12,7 +12,7 @@
 //! but the builders produce stars ([`Topology::star`]) and star-of-stars
 //! federations ([`Topology::multi_cell`]).
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::core::{NodeClass, NodeId};
 use crate::net::LinkModel;
@@ -209,6 +209,23 @@ impl Topology {
         Self::closest_camera(self.devices_in_cell(edge), loc)
     }
 
+    /// [`nearest_camera_in_cell`] restricted to nodes *not* in `excluded` —
+    /// dynamic membership under churn: the edge must not activate a camera
+    /// its failure detector currently suspects is down.
+    ///
+    /// [`nearest_camera_in_cell`]: Topology::nearest_camera_in_cell
+    pub fn nearest_camera_in_cell_excluding(
+        &self,
+        edge: NodeId,
+        loc: (f64, f64),
+        excluded: &BTreeSet<NodeId>,
+    ) -> Option<NodeId> {
+        Self::closest_camera(
+            self.devices_in_cell(edge).filter(|n| !excluded.contains(&n.id)),
+            loc,
+        )
+    }
+
     fn closest_camera<'a>(
         devices: impl Iterator<Item = &'a NodeSpec>,
         loc: (f64, f64),
@@ -373,6 +390,35 @@ mod tests {
         t.node_mut(NodeId(1)).location = (5.0, 0.0);
         t.node_mut(NodeId(2)).location = (0.0, 5.0);
         assert_eq!(t.nearest_camera((0.0, 0.0)), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn nearest_camera_excluding_skips_suspected() {
+        let t = Topology::star(
+            4,
+            &[
+                (NodeClass::RaspberryPi, 2, true),
+                (NodeClass::RaspberryPi, 2, true),
+            ],
+            LinkModel::wifi(),
+        );
+        // n1 is nearest, but suspected-down: n2 is picked instead.
+        let mut excluded = BTreeSet::new();
+        excluded.insert(NodeId(1));
+        assert_eq!(
+            t.nearest_camera_in_cell_excluding(NodeId(0), (1.0, 0.0), &excluded),
+            Some(NodeId(2))
+        );
+        excluded.insert(NodeId(2));
+        assert_eq!(
+            t.nearest_camera_in_cell_excluding(NodeId(0), (1.0, 0.0), &excluded),
+            None
+        );
+        // Empty exclusion behaves exactly like the plain lookup.
+        assert_eq!(
+            t.nearest_camera_in_cell_excluding(NodeId(0), (1.0, 0.0), &BTreeSet::new()),
+            t.nearest_camera_in_cell(NodeId(0), (1.0, 0.0))
+        );
     }
 
     #[test]

@@ -198,6 +198,13 @@ impl PeerTable {
         );
     }
 
+    /// Remove a peer declared dead by the failure detector (churn). It
+    /// re-registers automatically on its next gossip after recovery.
+    pub fn evict(&mut self, edge: NodeId) {
+        self.peers.remove(&edge);
+        self.order.retain(|&n| n != edge);
+    }
+
     /// Optimistic busy bump after forwarding a task to `edge` — keeps a
     /// burst from all picking the same peer before its next gossip.
     pub fn bump_busy(&mut self, edge: NodeId) {
@@ -348,6 +355,18 @@ mod tests {
         t.apply(&gossip(6, 0, 2, 0, 50.0));
         let order: Vec<u32> = t.iter().map(|p| p.edge.0).collect();
         assert_eq!(order, vec![3, 6]);
+    }
+
+    #[test]
+    fn peer_evict_removes_until_next_gossip() {
+        let mut t = PeerTable::new();
+        t.apply(&gossip(3, 0, 4, 0, 10.0));
+        t.evict(NodeId(3));
+        assert!(t.is_empty());
+        assert_eq!(t.iter().count(), 0);
+        // Recovery: the next gossip re-registers it.
+        t.apply(&gossip(3, 0, 4, 0, 500.0));
+        assert_eq!(t.len(), 1);
     }
 
     #[test]

@@ -21,6 +21,8 @@ use anyhow::{bail, Result};
 
 pub use policies::{Aoe, Aor, Dds, DdsEnergy, DdsNoAvail, Eods, RandomPolicy, RoundRobin};
 
+use std::collections::BTreeSet;
+
 use crate::core::{ImageMeta, NodeClass, NodeId, Placement};
 use crate::net::LinkModel;
 use crate::profile::{profile_for, PeerTable, Predictor, ProfileTable};
@@ -28,6 +30,20 @@ use crate::util::SplitMix64;
 
 /// Battery reserve below which [`DdsEnergy`] conserves energy (percent).
 pub const DEFAULT_ENERGY_RESERVE_PCT: f64 = 20.0;
+
+/// Heartbeat-based failure-detection thresholds (DESIGN.md §Churn).
+///
+/// A node whose heartbeat (UP push for a device, MP-summary gossip for a
+/// peer edge, [`crate::core::Message::Ping`] for the edge as seen by its
+/// devices) has been silent longer than `suspect_after_ms` is *suspected* —
+/// the scheduler stops targeting it but keeps its state. Silence beyond
+/// `dead_after_ms` declares it *dead*: its table entry is evicted and every
+/// in-flight frame placed on it is requeued and re-placed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureDetector {
+    pub suspect_after_ms: f64,
+    pub dead_after_ms: f64,
+}
 
 /// Predictors for every hardware class (built once, shared by contexts).
 #[derive(Debug, Clone)]
@@ -80,6 +96,11 @@ pub struct DeviceCtx<'a> {
     pub local: LocalSnapshot,
     /// Predictor for the local node's hardware class.
     pub predictor: &'a Predictor,
+    /// The device's failure detector suspects its edge server is down
+    /// (no ping/result heard for longer than the dead threshold). The DDS
+    /// family keeps frames local rather than sending them into the void;
+    /// baselines ignore it. Always `false` when churn detection is off.
+    pub edge_suspected: bool,
 }
 
 impl DeviceCtx<'_> {
@@ -109,6 +130,11 @@ pub struct EdgeCtx<'a> {
     /// The image already crossed a backhaul once. Policies must not
     /// forward it again (no multi-hop chains — DESIGN.md §Federation).
     pub forwarded: bool,
+    /// Nodes (cell devices and peer edges) the edge's failure detector
+    /// currently suspects are down (DESIGN.md §Churn). Every placement
+    /// level must skip these even when their last profile is still inside
+    /// the staleness window. Empty when churn detection is off.
+    pub suspects: &'a BTreeSet<NodeId>,
 }
 
 impl EdgeCtx<'_> {

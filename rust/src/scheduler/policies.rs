@@ -44,6 +44,11 @@ fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
     let edge_pred = ctx.predictors.for_class(NodeClass::EdgeServer);
     let mut best: Option<(f64, NodeId)> = None;
     for peer in ctx.peers.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
+        // Suspected-down peers are never forwarding targets, even inside
+        // the staleness window (DESIGN.md §Churn).
+        if ctx.suspects.contains(&peer.edge) {
+            continue;
+        }
         let Some(link) = (ctx.link_to)(peer.edge) else { continue };
         // The peer must advertise spare capacity somewhere in its cell
         // (own pool or its devices) — the availability check, one level up.
@@ -190,6 +195,11 @@ impl SchedulerPolicy for Dds {
         if let Some(p) = pinned_device(ctx) {
             return p;
         }
+        // Churn fallback (DESIGN.md §Churn): a suspected-dead edge server
+        // would swallow the frame — a late local result beats a lost one.
+        if ctx.edge_suspected {
+            return Placement::Local;
+        }
         let inp = PredictInput {
             size_kb: ctx.img.size_kb,
             link: None,
@@ -219,6 +229,11 @@ impl SchedulerPolicy for Dds {
             // Never offload back through a dead link, and never to the
             // image's origin (it already declined the task).
             if dev.node == ctx.img.origin {
+                continue;
+            }
+            // Suspected-down devices are skipped even while their last
+            // profile is still fresh enough (DESIGN.md §Churn).
+            if ctx.suspects.contains(&dev.node) {
                 continue;
             }
             let Some(link) = (ctx.link_to)(dev.node) else { continue };
@@ -303,6 +318,11 @@ impl SchedulerPolicy for DdsEnergy {
         if let Some(p) = pinned_device(ctx) {
             return p;
         }
+        // Even a battery-conserving device keeps frames local when the
+        // edge is suspected down — forwarding would just lose them.
+        if ctx.edge_suspected {
+            return Placement::Local;
+        }
         if let Some(batt) = ctx.local.battery_pct {
             if batt < self.reserve_pct {
                 return Placement::ToEdge;
@@ -321,6 +341,9 @@ impl SchedulerPolicy for DdsEnergy {
         let mut best: Option<(f64, f64, crate::core::NodeId)> = None;
         for dev in ctx.table.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
             if dev.node == ctx.img.origin {
+                continue;
+            }
+            if ctx.suspects.contains(&dev.node) {
                 continue;
             }
             let Some(link) = (ctx.link_to)(dev.node) else { continue };
@@ -470,6 +493,8 @@ mod tests {
         Lazy::new(|| Predictor::new(profile_for(NodeClass::RaspberryPi)));
     static PREDICTORS: Lazy<PredictorSet> = Lazy::new(PredictorSet::new);
     static NO_PEERS: Lazy<PeerTable> = Lazy::new(PeerTable::new);
+    static NO_SUSPECTS: Lazy<std::collections::BTreeSet<NodeId>> =
+        Lazy::new(std::collections::BTreeSet::new);
 
     fn img(seq: u64, deadline: f64) -> ImageMeta {
         ImageMeta {
@@ -496,6 +521,7 @@ mod tests {
                 battery_pct: None,
             },
             predictor: &RPI_PRED,
+            edge_suspected: false,
         }
     }
 
@@ -536,6 +562,7 @@ mod tests {
             link_to,
             max_staleness_ms: 200.0,
             forwarded: false,
+            suspects: &NO_SUSPECTS,
         }
     }
 
@@ -564,6 +591,7 @@ mod tests {
             link_to: &wifi,
             max_staleness_ms: 200.0,
             forwarded: false,
+            suspects: &NO_SUSPECTS,
         }
     }
 
@@ -843,6 +871,68 @@ mod tests {
                 );
             }
         }
+    }
+
+    // ---- churn / failure suspicion (DESIGN.md §Churn) ----------------
+
+    #[test]
+    fn dds_device_keeps_local_when_edge_suspected() {
+        let mut p = Dds::new();
+        // 500 ms budget < 597 ms local prediction: normally ToEdge …
+        let im = img(0, 500.0);
+        assert_eq!(p.decide_device(&device_ctx(&im, 0, 1, 0)), Placement::ToEdge);
+        // … but with the edge suspected down, the frame stays local.
+        let mut ctx = device_ctx(&im, 0, 1, 0);
+        ctx.edge_suspected = true;
+        assert_eq!(p.decide_device(&ctx), Placement::Local);
+        // The energy variant behaves the same.
+        let mut e = DdsEnergy::new(20.0);
+        let mut ctx = device_ctx(&im, 0, 1, 0);
+        ctx.edge_suspected = true;
+        ctx.local.battery_pct = Some(5.0); // below reserve, still local
+        assert_eq!(e.decide_device(&ctx), Placement::Local);
+    }
+
+    #[test]
+    fn baselines_ignore_edge_suspicion() {
+        // AOE/EODS are churn-blind by design: they keep throwing frames at
+        // the (dead) edge — the contrast the churn experiment measures.
+        let even = img(2, 5_000.0);
+        let mut ctx = device_ctx(&even, 0, 2, 0);
+        ctx.edge_suspected = true;
+        assert_eq!(Aoe.decide_device(&ctx), Placement::ToEdge);
+        assert_eq!(Eods.decide_device(&ctx), Placement::ToEdge);
+    }
+
+    #[test]
+    fn dds_edge_skips_suspected_device() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = table_with_r2(0, 2); // fresh + idle — normally offloaded to
+        let mut suspects = std::collections::BTreeSet::new();
+        suspects.insert(NodeId(2));
+        let mut ctx = edge_ctx(&im, &t, &wifi);
+        ctx.suspects = &suspects;
+        assert_eq!(p.decide_edge(&ctx), Placement::Local);
+        // DdsEnergy applies the same filter.
+        let mut e = DdsEnergy::new(20.0);
+        let mut ctx = edge_ctx(&im, &t, &wifi);
+        ctx.suspects = &suspects;
+        assert_eq!(e.decide_edge(&ctx), Placement::Local);
+    }
+
+    #[test]
+    fn suspected_peer_edge_is_not_a_forward_target() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0)); // fresh + idle peer
+        let mut suspects = std::collections::BTreeSet::new();
+        suspects.insert(NodeId(3));
+        let mut ctx = fed_ctx(&im, &t, &peers, 4);
+        ctx.suspects = &suspects;
+        assert_eq!(p.decide_edge(&ctx), Placement::Local);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! accepts images peers forward when their cells are exhausted, and routes
 //! results for forwarded work back through the originating edge.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::container::ContainerPool;
 use crate::core::message::{EdgeSummary, Message, UserRequest};
@@ -19,7 +19,7 @@ use crate::core::{ImageMeta, NodeClass, NodeId, Placement, TaskId};
 use crate::device::Action;
 use crate::net::Topology;
 use crate::profile::{PeerTable, ProfileTable};
-use crate::scheduler::{EdgeCtx, LocalSnapshot, PredictorSet, SchedulerPolicy};
+use crate::scheduler::{EdgeCtx, FailureDetector, LocalSnapshot, PredictorSet, SchedulerPolicy};
 
 /// The edge server state machine.
 pub struct EdgeNode {
@@ -40,6 +40,15 @@ pub struct EdgeNode {
     /// Tasks a *peer* forwarded to this cell → the edge to return the
     /// result through (origin devices are unreachable across cells).
     forwarded_from: HashMap<TaskId, NodeId>,
+    /// Where each in-flight task this edge placed remotely currently sits
+    /// (cell device, or peer edge for `ToPeerEdge`). Consulted by the
+    /// failure detector to requeue work stranded on a dead node.
+    offload_target: HashMap<TaskId, NodeId>,
+    /// Heartbeat thresholds; `None` disables churn detection (classic
+    /// behaviour, no pings, no eviction).
+    detector: Option<FailureDetector>,
+    /// Nodes (devices and peer edges) currently suspected down.
+    suspects: BTreeSet<NodeId>,
 }
 
 impl EdgeNode {
@@ -61,7 +70,22 @@ impl EdgeNode {
             inflight: HashMap::new(),
             peers: PeerTable::new(),
             forwarded_from: HashMap::new(),
+            offload_target: HashMap::new(),
+            detector: None,
+            suspects: BTreeSet::new(),
         }
+    }
+
+    /// Enable heartbeat-based failure detection (builder style; churn
+    /// scenarios only — see DESIGN.md §Churn).
+    pub fn with_detector(mut self, detector: FailureDetector) -> Self {
+        self.detector = Some(detector);
+        self
+    }
+
+    /// Nodes currently suspected down by the failure detector.
+    pub fn suspects(&self) -> &BTreeSet<NodeId> {
+        &self.suspects
     }
 
     pub fn pool(&self) -> &ContainerPool {
@@ -117,6 +141,8 @@ impl EdgeNode {
             Message::Image(img) => self.on_image(img, now_ms, false, out),
             Message::Profile(up) => self.table.apply(&up),
             Message::Join { node, class_tag, warm_containers } => {
+                // A (re-)joining node is alive by definition.
+                self.suspects.remove(&node);
                 if class_tag == 0 {
                     // A peer edge server joining the federation (live mode
                     // dials peers explicitly; virtual mode auto-registers
@@ -135,7 +161,11 @@ impl EdgeNode {
                     reliable: true,
                 });
             }
-            Message::EdgeSummary(s) => self.peers.apply(&s),
+            Message::EdgeSummary(s) => {
+                // Fresh gossip also clears any suspicion of that peer.
+                self.suspects.remove(&s.edge);
+                self.peers.apply(&s);
+            }
             Message::Forward { img, from_edge } => {
                 // A peer's cell was exhausted; this cell schedules the
                 // image (never re-forwarding) and owes the result to the
@@ -145,6 +175,7 @@ impl EdgeNode {
             }
             Message::Result { task, processed_by, detections, max_score, process_ms } => {
                 let relay = Message::Result { task, processed_by, detections, max_score, process_ms };
+                self.offload_target.remove(&task);
                 if let Some(peer) = self.forwarded_from.remove(&task) {
                     // A device of this cell finished work forwarded from a
                     // peer cell: return it through the originating edge.
@@ -168,7 +199,12 @@ impl EdgeNode {
     /// edge's own cell — it has no link to another cell's devices, so a
     /// cross-cell Activate could never be delivered.
     fn on_user(&mut self, req: UserRequest, _now_ms: f64, out: &mut Vec<Action>) {
-        match self.topology.nearest_camera_in_cell(self.id, req.location) {
+        // Dynamic membership: never activate a camera the failure detector
+        // currently suspects is down.
+        match self
+            .topology
+            .nearest_camera_in_cell_excluding(self.id, req.location, &self.suspects)
+        {
             Some(device) => {
                 out.push(Action::Send {
                     to: device,
@@ -200,6 +236,7 @@ impl EdgeNode {
                 link_to: &link_to,
                 max_staleness_ms: self.max_staleness_ms,
                 forwarded,
+                suspects: &self.suspects,
             };
             self.policy.decide_edge(&ctx)
         };
@@ -209,8 +246,9 @@ impl EdgeNode {
                 if !forwarded {
                     out.push(Action::RecordPlaced { task: img.task, placement });
                 }
-                // Track for result relay.
+                // Track for result relay and for failure-driven requeue.
                 self.inflight.insert(img.task, img);
+                self.offload_target.insert(img.task, target);
                 // Optimistic MP bump: the offloaded image will occupy a
                 // container before the next 20 ms UP push arrives —
                 // prevents a burst from all picking the same device.
@@ -221,6 +259,7 @@ impl EdgeNode {
                 out.push(Action::RecordPlaced { task: img.task, placement });
                 // Track for the result relayed back from the peer edge.
                 self.inflight.insert(img.task, img);
+                self.offload_target.insert(img.task, peer);
                 // Optimistic summary bump, mirroring the device-table one.
                 self.peers.bump_busy(peer);
                 // Backhaul is wired infrastructure: forward reliably (the
@@ -256,6 +295,7 @@ impl EdgeNode {
             max_score: 0.0,
             process_ms,
         };
+        self.offload_target.remove(&task);
         if let Some(peer) = self.forwarded_from.remove(&task) {
             // Forwarded work executed in this edge's own pool: the result
             // goes back through the edge that forwarded it.
@@ -272,7 +312,7 @@ impl EdgeNode {
                 None => log::warn!("edge: completion for unknown task {task}"),
             }
         }
-        if let Some(next) = self.pool.complete(container, now_ms) {
+        if let Some(next) = self.pool.complete(container, task, now_ms) {
             out.push(Action::RecordStarted { task: next.task, at_ms: next.start_ms });
             out.push(Action::ContainerBusyUntil {
                 container: next.container,
@@ -283,6 +323,8 @@ impl EdgeNode {
     }
 
     fn run_local(&mut self, img: ImageMeta, now_ms: f64, out: &mut Vec<Action>) {
+        // A requeued task may have had a remote target before.
+        self.offload_target.remove(&img.task);
         self.inflight.insert(img.task, img);
         if let Some(assign) = self.pool.submit(img, now_ms) {
             out.push(Action::RecordStarted { task: assign.task, at_ms: assign.start_ms });
@@ -293,6 +335,114 @@ impl EdgeNode {
             });
         }
     }
+
+    /// Failure-detector sweep (DESIGN.md §Churn), driven by the heartbeat
+    /// timer (sim event / live thread). Three jobs:
+    ///
+    /// 1. classify every MP entry and peer summary by heartbeat age —
+    ///    fresh, *suspected* (> suspect threshold; placement levels skip
+    ///    it), or *dead* (> dead threshold; evicted);
+    /// 2. requeue and re-place every in-flight frame stranded on a node
+    ///    declared dead (the frame's bytes are content-addressed, so the
+    ///    new executor can regenerate them — DESIGN.md §Sim-vs-live);
+    /// 3. ping registered devices so they can detect *this* edge's death
+    ///    symmetrically.
+    ///
+    /// A no-op unless a detector was configured.
+    pub fn check_liveness(&mut self, now_ms: f64, out: &mut Vec<Action>) {
+        let Some(det) = self.detector else { return };
+
+        let mut dead: Vec<NodeId> = Vec::new();
+        for s in self.table.iter() {
+            let age = now_ms - s.updated_ms;
+            if age > det.dead_after_ms {
+                dead.push(s.node);
+            } else if age > det.suspect_after_ms {
+                self.suspects.insert(s.node);
+            } else {
+                self.suspects.remove(&s.node);
+            }
+        }
+        let mut dead_peers: Vec<NodeId> = Vec::new();
+        for p in self.peers.iter() {
+            // Registered-but-never-gossiped peers are born maximally stale
+            // (live join handshake); they are not evidence of death.
+            if p.updated_ms < 0.0 {
+                continue;
+            }
+            let age = now_ms - p.updated_ms;
+            if age > det.dead_after_ms {
+                dead_peers.push(p.edge);
+            } else if age > det.suspect_after_ms {
+                self.suspects.insert(p.edge);
+            } else {
+                self.suspects.remove(&p.edge);
+            }
+        }
+
+        for n in dead {
+            log::info!("{}: device {n} heartbeat-dead — evicting + requeueing", self.id);
+            self.table.deregister(n);
+            self.suspects.remove(&n);
+            self.requeue_from(n, now_ms, out);
+        }
+        for e in dead_peers {
+            log::info!("{}: peer edge {e} heartbeat-dead — evicting + requeueing", self.id);
+            self.peers.evict(e);
+            self.suspects.remove(&e);
+            self.requeue_from(e, now_ms, out);
+        }
+
+        // Liveness pings toward every registered device (reliable control
+        // traffic; devices use inter-ping silence to suspect this edge).
+        let targets: Vec<NodeId> = self.table.iter().map(|s| s.node).collect();
+        for t in targets {
+            out.push(Action::Send {
+                to: t,
+                msg: Message::Ping { from: self.id, sent_ms: now_ms },
+                reliable: true,
+            });
+        }
+    }
+
+    /// Pull back every in-flight frame placed on `node` and re-place it
+    /// through the normal edge decision (the dead node is already out of
+    /// the tables, so it cannot be re-picked).
+    fn requeue_from(&mut self, node: NodeId, now_ms: f64, out: &mut Vec<Action>) {
+        let mut tasks: Vec<TaskId> = self
+            .offload_target
+            .iter()
+            .filter(|&(_, &target)| target == node)
+            .map(|(&task, _)| task)
+            .collect();
+        // HashMap iteration order is not deterministic; requeue order is.
+        tasks.sort();
+        for task in tasks {
+            self.offload_target.remove(&task);
+            let Some(img) = self.inflight.remove(&task) else { continue };
+            out.push(Action::RecordRequeued { task });
+            // A frame a peer forwarded to us keeps its no-re-forward rule.
+            let forwarded = self.forwarded_from.contains_key(&task);
+            self.on_image(img, now_ms, forwarded, out);
+        }
+    }
+
+    /// Churn: this edge server crashed. Pool, MP table, peer table and all
+    /// relay state are lost; devices re-register via Join probes and peers
+    /// via their next gossip after recovery.
+    pub fn fail(&mut self) {
+        self.pool.reset();
+        self.table = ProfileTable::new();
+        self.peers = PeerTable::new();
+        self.inflight.clear();
+        self.forwarded_from.clear();
+        self.offload_target.clear();
+        self.suspects.clear();
+    }
+
+    /// Churn: the edge restarted. State was already dropped by
+    /// [`EdgeNode::fail`]; recovery is re-population via Joins and gossip.
+    pub fn recover(&mut self, _now_ms: f64) {}
 
     fn bump_busy(&mut self, node: NodeId) {
         if let Some(s) = self.table.get(node) {
@@ -715,6 +865,168 @@ mod tests {
         assert!(out
             .iter()
             .any(|a| matches!(a, Action::Send { msg: Message::JoinAck { .. }, .. })));
+    }
+
+    // ---- churn / failure detection (DESIGN.md §Churn) ----------------
+
+    fn detector() -> crate::scheduler::FailureDetector {
+        crate::scheduler::FailureDetector { suspect_after_ms: 150.0, dead_after_ms: 400.0 }
+    }
+
+    /// Push a fresh profile for `node` so staleness never interferes.
+    fn push_profile(e: &mut EdgeNode, node: u32, busy: u32, warm: u32, sent: f64) {
+        let mut out = Vec::new();
+        e.on_message(
+            Message::Profile(ProfileUpdate {
+                node: NodeId(node),
+                busy_containers: busy,
+                warm_containers: warm,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+                sent_ms: sent,
+            }),
+            sent,
+            &mut out,
+        );
+    }
+
+    #[test]
+    fn liveness_sweep_suspects_then_declares_dead() {
+        let mut e = edge(PolicyKind::Dds).with_detector(detector());
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        push_profile(&mut e, 1, 0, 2, 100.0);
+        push_profile(&mut e, 2, 0, 2, 100.0);
+        let mut out = Vec::new();
+        // Fresh: nobody suspected; pings go to both devices.
+        e.check_liveness(150.0, &mut out);
+        assert!(e.suspects().is_empty());
+        assert_eq!(
+            out.iter()
+                .filter(|a| matches!(a, Action::Send { msg: Message::Ping { .. }, .. }))
+                .count(),
+            2
+        );
+        // n2 goes silent; n1 keeps pushing.
+        push_profile(&mut e, 1, 0, 2, 300.0);
+        out.clear();
+        e.check_liveness(300.0, &mut out); // n2 age 200 > 150 → suspected
+        assert!(e.suspects().contains(&NodeId(2)));
+        assert_eq!(e.table().len(), 2);
+        out.clear();
+        e.check_liveness(501.0, &mut out); // n2 age 401 > 400 → dead
+        assert!(!e.suspects().contains(&NodeId(2)));
+        assert_eq!(e.table().len(), 1);
+        assert!(e.table().get(NodeId(2)).is_none());
+    }
+
+    #[test]
+    fn dead_device_tasks_are_requeued_and_replaced() {
+        let mut e = edge(PolicyKind::Dds).with_detector(detector());
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        let mut out = Vec::new();
+        // Image from n1 offloads to idle n2.
+        e.on_message(Message::Image(img(1, 50_000.0, 1)), 10.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(2), msg: Message::Image(_), .. }
+        )));
+        // n2 dies silently; n1 keeps its heartbeat fresh.
+        push_profile(&mut e, 1, 0, 2, 500.0);
+        out.clear();
+        e.check_liveness(500.0, &mut out); // n2 age 500 > 400 → dead
+        assert!(out.iter().any(|a| matches!(a, Action::RecordRequeued { task: TaskId(1) })));
+        // Re-placed: n2 is gone, n1 is the origin → the edge runs it itself.
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordPlaced { task: TaskId(1), placement: Placement::ToEdge }
+        )));
+        assert_eq!(e.pool().busy_count(), 1);
+        // Completion still routes the result home to n1.
+        out.clear();
+        e.on_container_done(0, TaskId(1), 223.0, 723.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Result { task: TaskId(1), .. }, .. }
+        )));
+    }
+
+    #[test]
+    fn dead_peer_edge_tasks_are_requeued() {
+        let mut e = fed_edge(PolicyKind::Dds).with_detector(detector());
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        // Saturate the pool, then the fifth image forwards to peer 3.
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 50_000.0, 1)), 1.0, &mut out);
+        }
+        out.clear();
+        e.on_message(Message::Image(img(5, 50_000.0, 1)), 2.0, &mut out);
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::Forward { .. }, .. })));
+        // Peer 3 goes silent past the dead threshold.
+        out.clear();
+        e.check_liveness(500.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::RecordRequeued { task: TaskId(5) })));
+        // Peer evicted → the task lands in this cell (queued at the edge).
+        assert!(e.peers().get(NodeId(3)).is_none());
+        assert_eq!(e.pool().queued_count(), 1);
+    }
+
+    #[test]
+    fn suspected_device_blocks_offload_before_staleness_would() {
+        let mut e = edge(PolicyKind::Dds).with_detector(detector());
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        push_profile(&mut e, 1, 0, 2, 160.0);
+        push_profile(&mut e, 2, 0, 2, 0.0);
+        let mut out = Vec::new();
+        // n2's profile is 160 ms old at the sweep: inside the 200 ms
+        // staleness cap but beyond the 150 ms suspect threshold.
+        e.check_liveness(160.0, &mut out);
+        assert!(e.suspects().contains(&NodeId(2)));
+        out.clear();
+        e.on_message(Message::Image(img(1, 50_000.0, 1)), 165.0, &mut out);
+        assert!(
+            !out.iter()
+                .any(|a| matches!(a, Action::Send { msg: Message::Image(_), .. })),
+            "suspected device must not receive offloads"
+        );
+        // A fresh UP push clears the suspicion on the next sweep.
+        push_profile(&mut e, 2, 0, 2, 170.0);
+        out.clear();
+        e.check_liveness(180.0, &mut out);
+        assert!(!e.suspects().contains(&NodeId(2)));
+    }
+
+    #[test]
+    fn edge_fail_drops_all_state() {
+        let mut e = fed_edge(PolicyKind::Dds).with_detector(detector());
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        e.on_message(Message::Image(img(1, 5_000.0, 2)), 1.0, &mut out);
+        e.fail();
+        assert_eq!(e.table().len(), 0);
+        assert_eq!(e.peers().len(), 0);
+        assert_eq!(e.pool().busy_count(), 0);
+        // Post-restart completions/results for pre-fail tasks are no-ops.
+        out.clear();
+        e.on_container_done(0, TaskId(1), 223.0, 300.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, Action::Send { .. })));
+    }
+
+    #[test]
+    fn liveness_sweep_without_detector_is_noop() {
+        let mut e = edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        e.check_liveness(1e9, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(e.table().len(), 1);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The discrete-event engine.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 use crate::core::{ImageMeta, Message, NodeId, TaskId};
 use crate::device::{Action, DeviceNode};
@@ -17,16 +17,54 @@ pub enum Ev {
     CameraFrame(ImageMeta),
     /// Network delivery of a message.
     Deliver { to: NodeId, msg: Message },
-    /// A container on `node` finishes `task`.
-    ContainerDone { node: NodeId, container: usize, task: TaskId, process_ms: f64 },
+    /// A container on `node` finishes `task`. `epoch` is the node's
+    /// incarnation at dispatch time: a completion scheduled before a crash
+    /// must not fire into the restarted node (churn, DESIGN.md §Churn).
+    ContainerDone { node: NodeId, container: usize, task: TaskId, process_ms: f64, epoch: u64 },
     /// UP profile push timer on a device.
     ProfileTick { node: NodeId },
     /// Inter-edge MP-summary gossip timer on an edge (federation; only
     /// scheduled in multi-cell topologies).
     GossipTick { edge: NodeId },
+    /// Failure-detector sweep + liveness pings on an edge (churn; only
+    /// scheduled when a scenario configures churn).
+    HeartbeatTick { edge: NodeId },
+    /// Churn injection: the node crashes (containers, queues, and tables
+    /// are lost; its traffic blackholes until recovery).
+    NodeFail { node: NodeId },
+    /// Churn injection: the node restarts with a fresh pool and, for a
+    /// device, re-joins its cell's edge server. Also models mid-run joins
+    /// (a joining node is simply dead from t=0 until its join time).
+    NodeRecover { node: NodeId },
     /// Change a node's background CPU load (stress schedule, Fig. 8).
     SetLoad { node: NodeId, pct: f64 },
 }
+
+/// Typed failure of workload injection — a malformed scenario (frame
+/// originating at a non-device) is a caller error, not a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// The frame's origin is an edge server — only end devices have
+    /// cameras.
+    CameraAtEdge { node: NodeId, task: TaskId },
+    /// The frame's origin is not a node of this topology.
+    UnknownOrigin { node: NodeId, task: TaskId },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::CameraAtEdge { node, task } => {
+                write!(f, "frame {task} originates at edge server {node}; cameras are devices")
+            }
+            SimError::UnknownOrigin { node, task } => {
+                write!(f, "frame {task} originates at unknown node {node}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 struct Scheduled {
     at_ms: f64,
@@ -76,11 +114,24 @@ pub struct Engine {
     profile_period_ms: f64,
     /// Inter-edge gossip period (federation).
     gossip_period_ms: f64,
+    /// Failure-detector sweep period (churn; timers only run when a
+    /// scenario starts them).
+    heartbeat_period_ms: f64,
+    /// Per-node liveness. A dead node's events are blackholed: deliveries
+    /// drop, its timers skip, and camera frames at it are lost.
+    dead: Vec<bool>,
+    /// Per-node incarnation counter, bumped at each failure; stale
+    /// container completions are fenced by it.
+    epoch: Vec<u64>,
     horizon_ms: f64,
-    /// Count of tasks created / completed — the run ends early when all
-    /// created tasks have resolved.
+    /// Tasks created / resolved — the run ends early when every created
+    /// task has resolved. Resolution is tracked per task id (not a raw
+    /// counter) because loss + churn can resolve the same task twice: a
+    /// lost unreliable push resolves it, a later requeue may complete it
+    /// again — double-counting would end the run prematurely and
+    /// misrecord still-pending tasks.
     created: usize,
-    resolved: usize,
+    resolved: HashSet<TaskId>,
     events_processed: u64,
     /// Reusable per-event action buffer (perf: avoids one Vec allocation
     /// per event — EXPERIMENTS.md §Perf change 2).
@@ -95,6 +146,7 @@ impl Engine {
         profile_period_ms: f64,
         horizon_ms: f64,
     ) -> Self {
+        let n = nodes.len();
         Self {
             now_ms: 0.0,
             heap: BinaryHeap::new(),
@@ -105,12 +157,28 @@ impl Engine {
             rng: SplitMix64::new(seed ^ 0x9D5F_1CE4),
             profile_period_ms,
             gossip_period_ms: 100.0,
+            heartbeat_period_ms: 50.0,
+            dead: vec![false; n],
+            epoch: vec![0; n],
             horizon_ms,
             created: 0,
-            resolved: 0,
+            resolved: HashSet::new(),
             events_processed: 0,
             scratch: Vec::with_capacity(16),
         }
+    }
+
+    /// Is `node` currently failed (churn)?
+    pub fn is_dead(&self, node: NodeId) -> bool {
+        self.dead[node.0 as usize]
+    }
+
+    /// Mark a node dead before the run starts — a mid-run *join*: the node
+    /// exists in the topology but participates only after its scheduled
+    /// [`Ev::NodeRecover`]. Call before [`Engine::join_all`].
+    pub fn set_dead_from_start(&mut self, node: NodeId) {
+        self.dead[node.0 as usize] = true;
+        self.epoch[node.0 as usize] += 1;
     }
 
     pub fn now_ms(&self) -> f64 {
@@ -142,8 +210,21 @@ impl Engine {
     }
 
     /// Seed the workload: register every frame with the recorder and
-    /// schedule its camera event.
-    pub fn push_stream(&mut self, frames: &[ImageMeta]) {
+    /// schedule its camera event. Fails (without scheduling anything) if
+    /// any frame originates at a non-device node — malformed scenarios get
+    /// a typed error instead of a mid-run panic.
+    pub fn push_stream(&mut self, frames: &[ImageMeta]) -> Result<(), SimError> {
+        for img in frames {
+            match self.nodes.get(img.origin.0 as usize) {
+                Some(SimNode::Device(_)) => {}
+                Some(SimNode::Edge(_)) => {
+                    return Err(SimError::CameraAtEdge { node: img.origin, task: img.task })
+                }
+                None => {
+                    return Err(SimError::UnknownOrigin { node: img.origin, task: img.task })
+                }
+            }
+        }
         // Perf (EXPERIMENTS.md §Perf change 1): pre-reserve the event heap
         // for the whole stream plus per-image follow-on events, avoiding
         // repeated reallocation during the arrival burst.
@@ -159,6 +240,7 @@ impl Engine {
             self.created += 1;
             self.schedule(img.created_ms, Ev::CameraFrame(*img));
         }
+        Ok(())
     }
 
     /// Kick off UP profile timers for all devices.
@@ -191,15 +273,30 @@ impl Engine {
         }
     }
 
+    /// Kick off failure-detector sweeps on every edge (churn scenarios
+    /// only — classic scenarios never call this, keeping their event
+    /// stream bit-identical). The first sweep fires after one period.
+    pub fn start_heartbeat_timers(&mut self, period_ms: f64) {
+        self.heartbeat_period_ms = period_ms;
+        let edges: Vec<NodeId> = self.topology.edges().collect();
+        for e in edges {
+            self.schedule(period_ms, Ev::HeartbeatTick { edge: e });
+        }
+    }
+
     /// Join handshake for all devices at t=0 (the paper's initial stage).
-    /// Each device joins the edge server of its own cell.
+    /// Each device joins the edge server of its own cell. Nodes marked
+    /// dead-from-start (mid-run joiners) are skipped — they join on
+    /// recovery instead.
     pub fn join_all(&mut self) {
         let joins: Vec<(NodeId, Message)> = self
             .nodes
             .iter()
             .filter_map(|n| match n {
-                SimNode::Device(d) => Some((d.edge, d.join_message())),
-                SimNode::Edge(_) => None,
+                SimNode::Device(d) if !self.dead[d.id.0 as usize] => {
+                    Some((d.edge, d.join_message()))
+                }
+                _ => None,
             })
             .collect();
         for (edge, msg) in joins {
@@ -223,7 +320,7 @@ impl Engine {
                 break;
             }
             self.handle(ev);
-            if self.created > 0 && self.resolved == self.created {
+            if self.created > 0 && self.resolved.len() == self.created {
                 // All workload resolved; drain nothing further.
                 break;
             }
@@ -238,39 +335,61 @@ impl Engine {
         match ev {
             Ev::CameraFrame(img) => {
                 let node = img.origin;
-                match &mut self.nodes[node.0 as usize] {
-                    SimNode::Device(d) => d.on_camera_frame(img, now, &mut out),
-                    SimNode::Edge(_) => panic!("camera frame at edge node"),
+                if self.dead[node.0 as usize] {
+                    // The camera is down: the frame never exists anywhere
+                    // else, so it resolves immediately as dropped.
+                    log::debug!("camera frame {} lost: origin {node} is down", img.task);
+                    self.resolved.insert(img.task);
+                } else {
+                    match &mut self.nodes[node.0 as usize] {
+                        SimNode::Device(d) => d.on_camera_frame(img, now, &mut out),
+                        SimNode::Edge(_) => {
+                            // push_stream rejects these up front; a hand-
+                            // built schedule degrades gracefully instead
+                            // of panicking.
+                            log::error!("{}", SimError::CameraAtEdge { node, task: img.task });
+                            self.resolved.insert(img.task);
+                        }
+                    }
                 }
                 self.apply(node, out);
             }
             Ev::Deliver { to, msg } => {
-                match &mut self.nodes[to.0 as usize] {
-                    SimNode::Device(d) => d.on_message(msg, now, &mut out),
-                    SimNode::Edge(e) => e.on_message(msg, now, &mut out),
+                if self.dead[to.0 as usize] {
+                    // Traffic to a failed node blackholes. Any task inside
+                    // stays tracked by its origin/edge; heartbeat detection
+                    // requeues what can still be saved.
+                    log::debug!("dropping {} to dead node {to}", msg.tag());
+                } else {
+                    match &mut self.nodes[to.0 as usize] {
+                        SimNode::Device(d) => d.on_message(msg, now, &mut out),
+                        SimNode::Edge(e) => e.on_message(msg, now, &mut out),
+                    }
                 }
                 self.apply(to, out);
             }
-            Ev::ContainerDone { node, container, task, process_ms } => {
-                match &mut self.nodes[node.0 as usize] {
-                    SimNode::Device(d) => {
-                        d.on_container_done(container, task, process_ms, now, &mut out)
-                    }
-                    SimNode::Edge(e) => {
-                        e.on_container_done(container, task, process_ms, now, &mut out)
+            Ev::ContainerDone { node, container, task, process_ms, epoch } => {
+                let idx = node.0 as usize;
+                // Completions from a previous incarnation are fenced off.
+                if !self.dead[idx] && epoch == self.epoch[idx] {
+                    match &mut self.nodes[idx] {
+                        SimNode::Device(d) => {
+                            d.on_container_done(container, task, process_ms, now, &mut out)
+                        }
+                        SimNode::Edge(e) => {
+                            e.on_container_done(container, task, process_ms, now, &mut out)
+                        }
                     }
                 }
                 self.apply(node, out);
             }
             Ev::ProfileTick { node } => {
-                if let SimNode::Device(d) = &mut self.nodes[node.0 as usize] {
-                    let up = d.profile_update(now);
-                    // UP pushes go to the device's own cell edge.
-                    out.push(Action::Send {
-                        to: d.edge,
-                        msg: Message::Profile(up),
-                        reliable: true,
-                    });
+                if !self.dead[node.0 as usize] {
+                    if let SimNode::Device(d) = &mut self.nodes[node.0 as usize] {
+                        // UP push (plus a Join probe while the edge is
+                        // suspected down) toward the device's cell edge.
+                        d.on_profile_tick(now, &mut out);
+                    }
                 }
                 self.apply(node, out);
                 if now + self.profile_period_ms <= self.horizon_ms {
@@ -278,14 +397,16 @@ impl Engine {
                 }
             }
             Ev::GossipTick { edge } => {
-                if let SimNode::Edge(e) = &mut self.nodes[edge.0 as usize] {
-                    let summary = e.summary(now);
-                    for peer in self.topology.peer_edges(edge) {
-                        out.push(Action::Send {
-                            to: peer,
-                            msg: Message::EdgeSummary(summary),
-                            reliable: true,
-                        });
+                if !self.dead[edge.0 as usize] {
+                    if let SimNode::Edge(e) = &mut self.nodes[edge.0 as usize] {
+                        let summary = e.summary(now);
+                        for peer in self.topology.peer_edges(edge) {
+                            out.push(Action::Send {
+                                to: peer,
+                                msg: Message::EdgeSummary(summary),
+                                reliable: true,
+                            });
+                        }
                     }
                 }
                 self.apply(edge, out);
@@ -293,11 +414,57 @@ impl Engine {
                     self.schedule(now + self.gossip_period_ms, Ev::GossipTick { edge });
                 }
             }
+            Ev::HeartbeatTick { edge } => {
+                if !self.dead[edge.0 as usize] {
+                    if let SimNode::Edge(e) = &mut self.nodes[edge.0 as usize] {
+                        e.check_liveness(now, &mut out);
+                    }
+                }
+                self.apply(edge, out);
+                if now + self.heartbeat_period_ms <= self.horizon_ms {
+                    self.schedule(now + self.heartbeat_period_ms, Ev::HeartbeatTick { edge });
+                }
+            }
+            Ev::NodeFail { node } => {
+                let idx = node.0 as usize;
+                if !self.dead[idx] {
+                    log::info!("churn: {node} fails at {now:.1} ms");
+                    self.dead[idx] = true;
+                    self.epoch[idx] += 1;
+                    match &mut self.nodes[idx] {
+                        SimNode::Device(d) => d.fail(),
+                        SimNode::Edge(e) => e.fail(),
+                    }
+                }
+                self.apply(node, out);
+            }
+            Ev::NodeRecover { node } => {
+                let idx = node.0 as usize;
+                if self.dead[idx] {
+                    log::info!("churn: {node} recovers at {now:.1} ms");
+                    self.dead[idx] = false;
+                    match &mut self.nodes[idx] {
+                        SimNode::Device(d) => {
+                            d.recover(now);
+                            // Rejoin the cell: a restarted (or restarted-
+                            // edge) MP table no longer knows this device.
+                            out.push(Action::Send {
+                                to: d.edge,
+                                msg: d.join_message(),
+                                reliable: true,
+                            });
+                        }
+                        SimNode::Edge(e) => e.recover(now),
+                    }
+                }
+                self.apply(node, out);
+            }
             Ev::SetLoad { node, pct } => {
                 match &mut self.nodes[node.0 as usize] {
                     SimNode::Device(d) => d.pool_mut().set_bg_load(pct),
                     SimNode::Edge(e) => e.pool_mut().set_bg_load(pct),
                 }
+                self.apply(node, out);
             }
         }
     }
@@ -314,7 +481,7 @@ impl Engine {
                     if !reliable && link.loss_prob > 0.0 && self.rng.chance(link.loss_prob) {
                         if let Message::Image(img) = &msg {
                             log::debug!("lost image {} on {from}->{to}", img.task);
-                            self.resolved += 1; // dropped tasks still resolve
+                            self.resolved.insert(img.task); // lost tasks still resolve
                         }
                         continue;
                     }
@@ -325,20 +492,24 @@ impl Engine {
                     // Recover process_ms for the record from the pool state.
                     let process_ms = at_ms - self.now_ms;
                     self.recorder.started(task, from, self.now_ms);
+                    let epoch = self.epoch[from.0 as usize];
                     self.schedule(
                         at_ms,
-                        Ev::ContainerDone { node: from, container, task, process_ms },
+                        Ev::ContainerDone { node: from, container, task, process_ms, epoch },
                     );
                 }
                 Action::RecordPlaced { task, placement } => {
                     self.recorder.placed(task, placement);
+                }
+                Action::RecordRequeued { task } => {
+                    self.recorder.requeued(task);
                 }
                 Action::RecordStarted { task, at_ms } => {
                     self.recorder.started(task, from, at_ms);
                 }
                 Action::RecordCompleted { task, at_ms, process_ms } => {
                     self.recorder.completed(task, at_ms, process_ms);
-                    self.resolved += 1;
+                    self.resolved.insert(task);
                 }
             }
         }
@@ -398,7 +569,7 @@ use crate::config::WorkloadConfig;
             SplitMix64::new(1),
         )
         .generate();
-        eng.push_stream(&frames);
+        eng.push_stream(&frames).unwrap();
         eng
     }
 
@@ -409,7 +580,11 @@ use crate::config::WorkloadConfig;
         let s = eng.recorder.summarize();
         assert_eq!(s.total, 1);
         assert_eq!(s.met, 1);
-        let lat = s.latency.unwrap();
+        // `latency` is None when no frame completes (all-dropped churn
+        // runs); here exactly one did, so the sample must exist.
+        let Some(lat) = s.latency else {
+            panic!("one frame completed but no latency sample")
+        };
         assert!((lat.mean - 597.0).abs() < 1e-6, "mean={}", lat.mean);
     }
 
@@ -419,7 +594,9 @@ use crate::config::WorkloadConfig;
         eng.run();
         let s = eng.recorder.summarize();
         assert_eq!(s.met, 1);
-        let lat = s.latency.unwrap().mean;
+        let Some(lat) = s.latency.map(|l| l.mean) else {
+            panic!("one frame completed but no latency sample")
+        };
         // transfer out (2 + 29*8/100 = 4.32) + 223 + result back (2.08)
         assert!((lat - (4.32 + 223.0 + 2.08)).abs() < 1e-6, "lat={lat}");
     }
@@ -479,5 +656,89 @@ use crate::config::WorkloadConfig;
         eng.horizon_ms = 1_000.0;
         eng.run();
         assert!(eng.now_ms() <= 1_100.0);
+    }
+
+    // ---- churn (DESIGN.md §Churn) ------------------------------------
+
+    #[test]
+    fn stream_at_edge_origin_is_a_typed_error() {
+        let mut eng = build(PolicyKind::Aor, 1, 100.0, 5000.0);
+        let bad = ImageMeta {
+            task: TaskId(99),
+            origin: NodeId(0), // the edge server
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: crate::core::Constraint::deadline(5000.0),
+            seq: 99,
+        };
+        let err = eng.push_stream(&[bad]).unwrap_err();
+        assert_eq!(err, SimError::CameraAtEdge { node: NodeId(0), task: TaskId(99) });
+        let mut unknown = bad;
+        unknown.origin = NodeId(77);
+        let err = eng.push_stream(&[unknown]).unwrap_err();
+        assert_eq!(err, SimError::UnknownOrigin { node: NodeId(77), task: TaskId(99) });
+        // Display is human-readable (used by anyhow contexts).
+        assert!(err.to_string().contains("n77"));
+    }
+
+    #[test]
+    fn frames_at_dead_camera_resolve_as_dropped() {
+        // Camera device n1 is down for the whole run: every frame is lost,
+        // the run still terminates, and the zero-completions summary has
+        // `latency: None` without panicking anywhere.
+        let mut eng = build(PolicyKind::Aor, 5, 50.0, 1000.0);
+        eng.schedule(0.0, Ev::NodeFail { node: NodeId(1) });
+        eng.run();
+        let s = eng.recorder.summarize();
+        assert_eq!(s.total, 5);
+        assert_eq!(s.dropped, 5);
+        assert_eq!(s.met + s.missed, 0);
+        assert!(s.latency.is_none());
+        assert!(s.process.is_none());
+    }
+
+    #[test]
+    fn device_recovers_and_processes_again() {
+        // Fail n1 before its frames, recover mid-stream: early frames are
+        // lost at the dead camera, late frames complete locally.
+        let mut eng = build(PolicyKind::Aor, 10, 100.0, 1e9);
+        eng.schedule(0.0, Ev::NodeFail { node: NodeId(1) });
+        eng.schedule(450.0, Ev::NodeRecover { node: NodeId(1) });
+        eng.run();
+        let s = eng.recorder.summarize();
+        assert_eq!(s.total, 10);
+        // Frames at 0..400 ms dropped (camera down), 500+ ms processed.
+        assert_eq!(s.dropped, 5);
+        assert_eq!(s.met, 5);
+    }
+
+    #[test]
+    fn stale_container_completion_is_fenced_by_epoch() {
+        // AOR: the single frame starts locally (done at 597), but the
+        // device dies at 100 ms. The pre-fail ContainerDone must not fire
+        // into the recovered incarnation.
+        let mut eng = build(PolicyKind::Aor, 1, 100.0, 1e9);
+        eng.schedule(100.0, Ev::NodeFail { node: NodeId(1) });
+        eng.schedule(200.0, Ev::NodeRecover { node: NodeId(1) });
+        eng.horizon_ms = 5_000.0;
+        eng.run();
+        let s = eng.recorder.summarize();
+        assert_eq!(s.total, 1);
+        assert_eq!(s.dropped, 1, "the in-container frame died with the node");
+        assert_eq!(s.met + s.missed, 0);
+    }
+
+    #[test]
+    fn churn_runs_are_deterministic() {
+        let run = || {
+            let mut eng = build(PolicyKind::Dds, 40, 50.0, 2000.0);
+            eng.schedule(300.0, Ev::NodeFail { node: NodeId(2) });
+            eng.schedule(900.0, Ev::NodeRecover { node: NodeId(2) });
+            eng.start_heartbeat_timers(50.0);
+            let events = eng.run();
+            (eng.recorder.summarize(), events)
+        };
+        assert_eq!(run(), run());
     }
 }

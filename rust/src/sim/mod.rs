@@ -14,6 +14,6 @@ pub mod engine;
 pub mod scenario;
 pub mod workload;
 
-pub use engine::Engine;
+pub use engine::{Engine, SimError};
 pub use scenario::{RunReport, ScenarioBuilder};
 pub use workload::{ArrivalPattern, ImageStream};

@@ -1,9 +1,9 @@
 //! Scenario assembly: [`SystemConfig`] → engine → [`RunReport`].
 
 use crate::sim::workload::ArrivalPattern;
-use crate::config::{SystemConfig, WorkloadConfig};
+use crate::config::{ChurnKind, ChurnTarget, SystemConfig, WorkloadConfig};
 use crate::container::ContainerPool;
-use crate::core::{NodeClass, NodeId};
+use crate::core::{ImageMeta, NodeClass, NodeId};
 use crate::device::DeviceNode;
 use crate::metrics::{RunSummary, TaskRecord};
 use crate::net::{CellSpec, Topology};
@@ -107,6 +107,105 @@ impl ScenarioBuilder {
         ids
     }
 
+    /// Per-cell frame streams implied by the config: `(config device
+    /// index, frames)`. Every cell with a camera originates its own
+    /// stream of `workload.n_images` frames in a disjoint TaskId block,
+    /// from the cell's first camera device in config order — per-cell
+    /// workload streams, so churn in one cell stresses cross-cell offload
+    /// realistically. Single-cell configs keep exactly one stream from
+    /// the first camera (classic seed, classic TaskIds — bit-identical to
+    /// the historic behaviour, and multi-camera single-cell scenarios
+    /// like `examples/mall_scenario.rs` still pick the stream origin by
+    /// device order). A camera that joins mid-run (churn `Join` event)
+    /// starts its cell's stream at its join time.
+    ///
+    /// Shared by the sim and live drivers — one derivation, two drivers.
+    pub fn camera_streams(cfg: &SystemConfig) -> Vec<(usize, Vec<ImageMeta>)> {
+        let device_ids = Self::device_ids(cfg);
+        let wl = &cfg.workload;
+        // The streaming camera of each cell: first camera device in
+        // config order, cells ordered by their streaming camera's config
+        // position (single-cell ⇒ the classic first camera).
+        let mut cameras: Vec<usize> = Vec::new();
+        let mut cells_seen: Vec<u32> = Vec::new();
+        for (i, d) in cfg.devices.iter().enumerate() {
+            if d.camera && !cells_seen.contains(&d.cell) {
+                cells_seen.push(d.cell);
+                cameras.push(i);
+            }
+        }
+        cameras
+            .into_iter()
+            .enumerate()
+            .map(|(k, i)| {
+                let seed = (cfg.seed ^ 0xFEED)
+                    .wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let start = cfg.churn.device_join_ms(i).unwrap_or(0.0);
+                let frames = ImageStream::new(*wl, device_ids[i], SplitMix64::new(seed))
+                    .pattern(wl.pattern)
+                    .task_base(k as u64 * wl.n_images as u64)
+                    .starting_at(start)
+                    .generate();
+                (i, frames)
+            })
+            .collect()
+    }
+
+    /// Latest start time across per-cell streams (a joining cell's stream
+    /// begins at its join time). Feeds the sim horizon *and* the live
+    /// wait timeout — one derivation, two drivers.
+    pub fn latest_stream_start_ms(streams: &[(usize, Vec<ImageMeta>)]) -> f64 {
+        streams
+            .iter()
+            .map(|(_, frames)| frames.first().map_or(0.0, |f| f.created_ms))
+            .fold(0.0, f64::max)
+    }
+
+    /// Engine-level churn schedule: the config's expanded event trace
+    /// (scripted `[[churn]]` plus seeded `[churn_random]` cycles —
+    /// [`crate::config::ChurnConfig::expanded_events`], shared with the
+    /// live driver) resolved to `(at_ms, node, is_fail)` and sorted by
+    /// time then node for deterministic injection. `Join` events appear
+    /// as recoveries — the joiner is marked dead-from-start separately.
+    fn churn_schedule(
+        cfg: &SystemConfig,
+        device_ids: &[NodeId],
+        edge_ids: &[NodeId],
+    ) -> Vec<(f64, NodeId, bool)> {
+        let span = cfg.workload.n_images as f64 * cfg.workload.interval_ms;
+        let mut evs: Vec<(f64, NodeId, bool)> = cfg
+            .churn
+            .expanded_events(cfg.seed, span, cfg.devices.len())
+            .into_iter()
+            .map(|e| {
+                let node = match e.target {
+                    ChurnTarget::Device(i) => device_ids[i],
+                    ChurnTarget::Edge(c) => edge_ids[c],
+                };
+                (e.at_ms, node, e.kind == ChurnKind::Fail)
+            })
+            .collect();
+        evs.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .expect("NaN churn time")
+                .then_with(|| a.1.cmp(&b.1))
+        });
+        evs
+    }
+
+    /// Nodes that only exist from their `Join` event on.
+    fn joiners(cfg: &SystemConfig, device_ids: &[NodeId], edge_ids: &[NodeId]) -> Vec<NodeId> {
+        cfg.churn
+            .events
+            .iter()
+            .filter(|e| e.kind == ChurnKind::Join)
+            .map(|e| match e.target {
+                ChurnTarget::Device(i) => device_ids[i],
+                ChurnTarget::Edge(c) => edge_ids[c],
+            })
+            .collect()
+    }
+
     /// Construct the topology implied by the config.
     pub fn topology(&self) -> Topology {
         let link = self.cfg.network.link();
@@ -143,6 +242,8 @@ impl ScenarioBuilder {
         let device_ids = Self::device_ids(cfg);
         let edge_ids: Vec<NodeId> = topo.edges().collect();
 
+        let churn_on = cfg.churn.enabled();
+
         // Nodes in NodeId order: per cell, the edge then its devices.
         let mut nodes = Vec::with_capacity(topo.len());
         for (c, &edge_id) in edge_ids.iter().enumerate() {
@@ -154,13 +255,17 @@ impl ScenarioBuilder {
             // Cell 0's edge keeps the classic seed; further cells fork
             // high bits so single-cell runs are bit-identical to before.
             let edge_seed = cfg.seed.wrapping_add((c as u64) << 32);
-            nodes.push(SimNode::Edge(EdgeNode::new(
+            let mut edge_node = EdgeNode::new(
                 edge_id,
                 edge_pool,
                 cfg.policy.build(edge_seed),
                 topo.clone(),
                 cfg.max_staleness_ms,
-            )));
+            );
+            if churn_on {
+                edge_node = edge_node.with_detector(cfg.churn.detector());
+            }
+            nodes.push(SimNode::Edge(edge_node));
             for (i, d) in cfg.devices.iter().enumerate() {
                 if d.cell != c as u32 {
                     continue;
@@ -181,34 +286,53 @@ impl ScenarioBuilder {
                         _ => crate::energy::Battery::rpi(),
                     });
                 }
+                if churn_on {
+                    node = node.with_detector(cfg.churn.detector());
+                }
                 nodes.push(SimNode::Device(node));
             }
         }
 
+        // Per-cell workload streams: one per cell with a camera.
+        let streams = Self::camera_streams(cfg);
+        let latest_start = Self::latest_stream_start_ms(&streams);
+
         // Horizon: generously past the last arrival plus queue drain time.
+        // Churn strands some frames forever (origin died mid-flight, bytes
+        // blackholed before detection) — don't idle ten minutes for them.
         let wl = &cfg.workload;
         let span = wl.n_images as f64 * wl.interval_ms;
-        let horizon = span + wl.deadline_ms.max(1_000.0) * 20.0 + 600_000.0;
+        let horizon = if churn_on {
+            latest_start + span + wl.deadline_ms.max(1_000.0) * 4.0 + 60_000.0
+        } else {
+            span + wl.deadline_ms.max(1_000.0) * 20.0 + 600_000.0
+        };
 
         let mut eng = Engine::new(nodes, topo, cfg.seed, cfg.profile_period_ms, horizon);
+        // Mid-run joiners exist only after their scheduled join.
+        for n in Self::joiners(cfg, &device_ids, &edge_ids) {
+            eng.set_dead_from_start(n);
+        }
         eng.join_all();
         eng.start_profile_timers();
         // No-op for single-cell topologies (event stream unchanged).
         eng.start_gossip_timers(cfg.federation.gossip_period_ms);
+        // Failure-detector sweeps only exist in churn scenarios — classic
+        // runs keep a bit-identical event stream.
+        if churn_on {
+            eng.start_heartbeat_timers(cfg.churn.heartbeat_period_ms);
+        }
 
-        // Stream originates at the first camera device (config order).
-        let camera = self
-            .cfg
-            .devices
-            .iter()
-            .position(|d| d.camera)
-            .map(|i| device_ids[i])
-            .expect("validated config has a camera");
-        let frames = ImageStream::new(*wl, camera, SplitMix64::new(cfg.seed ^ 0xFEED))
-            .pattern(wl.pattern)
-            .generate();
-        eng.push_stream(&frames);
-
+        // Churn first, streams second: a recovery/join and a frame at the
+        // same instant resolve join-before-frame (the paper's session
+        // setup precedes traffic).
+        for (at, node, is_fail) in Self::churn_schedule(cfg, &device_ids, &edge_ids) {
+            let ev = if is_fail { Ev::NodeFail { node } } else { Ev::NodeRecover { node } };
+            eng.schedule(at, ev);
+        }
+        for (_, frames) in &streams {
+            eng.push_stream(frames).expect("validated config: cameras are devices");
+        }
         for &(at, node, pct) in &self.load_schedule {
             eng.schedule(at, Ev::SetLoad { node, pct });
         }
@@ -339,8 +463,14 @@ mod tests {
             .workload(wl(1, 100.0, 5000.0))
             .edge_load(100.0)
             .run();
-        let lb = base.summary.latency.unwrap().mean;
-        let ll = loaded.summary.latency.unwrap().mean;
+        // `latency` is None when no frame completes; both runs here
+        // complete their single frame.
+        let (Some(lb), Some(ll)) = (
+            base.summary.latency.map(|l| l.mean),
+            loaded.summary.latency.map(|l| l.mean),
+        ) else {
+            panic!("both runs completed a frame but a latency sample is missing")
+        };
         assert!(ll > lb + 100.0, "loaded {ll} vs base {lb}");
     }
 
@@ -385,6 +515,155 @@ mod tests {
         let topo = ScenarioBuilder::new(cfg).topology();
         let edges: Vec<NodeId> = topo.edges().collect();
         assert_eq!(edges, vec![NodeId(0), NodeId(3)]);
+    }
+
+    #[test]
+    fn all_frames_dropped_run_is_safe() {
+        // Regression (churn makes this reachable): a run where *nothing*
+        // completes must summarize without panicking — latency/process are
+        // None, every frame is Dropped, and the JSON writer emits null.
+        let mut cfg = SystemConfig::default();
+        cfg.policy = PolicyKind::Aoe; // every frame rides the lossy link
+        cfg.network.loss_prob = 1.0;
+        let r = ScenarioBuilder::new(cfg).workload(wl(10, 50.0, 1_000.0)).run();
+        assert_eq!(r.summary.total, 10);
+        assert_eq!(r.summary.dropped, 10);
+        assert_eq!(r.summary.met + r.summary.missed, 0);
+        assert!(r.summary.latency.is_none());
+        assert!(r.summary.process.is_none());
+        assert_eq!(r.summary.local_fraction, 0.0);
+        let js = crate::metrics::writer::summary_json("all-dropped", &r.summary);
+        assert!(js.contains(r#""latency":null"#));
+        for rec in &r.records {
+            // CSV lines for never-started records must render too.
+            let _ = crate::metrics::csv_line(rec);
+        }
+    }
+
+    #[test]
+    fn per_cell_streams_originate_at_every_camera() {
+        // Two cells, one camera each: both cameras originate a full
+        // stream in disjoint TaskId blocks.
+        let mut cfg = crate::experiments::fed_config(2);
+        cfg.devices[2].camera = true; // cell 1's first device too
+        let r = ScenarioBuilder::new(cfg.clone()).workload(wl(30, 50.0, 3_000.0)).run();
+        assert_eq!(r.summary.total, 60);
+        let ids = ScenarioBuilder::device_ids(&cfg);
+        let origins: std::collections::BTreeSet<NodeId> =
+            r.records.iter().map(|rec| rec.origin).collect();
+        assert!(origins.contains(&ids[0]), "cell-0 camera must originate frames");
+        assert!(origins.contains(&ids[2]), "cell-1 camera must originate frames");
+        // Disjoint id blocks, both full.
+        let (a, b): (Vec<_>, Vec<_>) =
+            r.records.iter().partition(|rec| rec.task.0 < 30);
+        assert_eq!(a.len(), 30);
+        assert_eq!(b.len(), 30);
+        assert!(a.iter().all(|rec| rec.origin == ids[0]));
+        assert!(b.iter().all(|rec| rec.origin == ids[2]));
+    }
+
+    #[test]
+    fn single_camera_stream_unchanged_by_multi_stream_refactor() {
+        // The per-camera generalization must keep single-camera configs
+        // bit-identical: same seed → same frames as the legacy
+        // first-camera-only derivation.
+        let cfg = SystemConfig::default();
+        let streams = ScenarioBuilder::camera_streams(&cfg);
+        assert_eq!(streams.len(), 1);
+        assert_eq!(streams[0].0, 0);
+        let legacy = ImageStream::new(
+            cfg.workload,
+            ScenarioBuilder::device_ids(&cfg)[0],
+            SplitMix64::new(cfg.seed ^ 0xFEED),
+        )
+        .pattern(cfg.workload.pattern)
+        .generate();
+        assert_eq!(streams[0].1, legacy);
+    }
+
+    #[test]
+    fn dds_requeues_frames_stranded_on_dead_device() {
+        // Camera device 0 saturates and spills to the edge, which offloads
+        // to device 1; device 1 dies mid-run with frames aboard. The
+        // failure detector must requeue them and they must still complete.
+        let mut cfg = SystemConfig::default();
+        cfg.policy = PolicyKind::Dds;
+        cfg.churn.events = vec![
+            crate::config::ChurnEvent {
+                at_ms: 800.0,
+                target: crate::config::ChurnTarget::Device(1),
+                kind: crate::config::ChurnKind::Fail,
+            },
+            crate::config::ChurnEvent {
+                at_ms: 2_500.0,
+                target: crate::config::ChurnTarget::Device(1),
+                kind: crate::config::ChurnKind::Recover,
+            },
+        ];
+        let r = ScenarioBuilder::new(cfg).workload(wl(60, 50.0, 5_000.0)).seed(5).run();
+        assert_eq!(r.summary.total, 60);
+        assert!(r.summary.requeued > 0, "no frames were requeued off the dead device");
+        assert!(r.summary.replaced > 0, "requeued frames must re-place and complete");
+        assert!(
+            r.summary.met + r.summary.missed + r.summary.dropped == 60,
+            "accounting identity under churn"
+        );
+    }
+
+    #[test]
+    fn seeded_churn_runs_are_deterministic() {
+        let mk = || {
+            let mut cfg = SystemConfig::default();
+            cfg.policy = PolicyKind::Dds;
+            cfg.churn.random = Some(crate::config::RandomChurnConfig {
+                device_mtbf_ms: 1_200.0,
+                device_mttr_ms: 300.0,
+            });
+            ScenarioBuilder::new(cfg).workload(wl(80, 50.0, 2_000.0)).seed(13).run()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.summary, b.summary);
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.virtual_ms, b.virtual_ms);
+    }
+
+    #[test]
+    fn joining_camera_streams_from_its_join_time() {
+        // Cell 1's camera (config device 2) only joins at t=1000: its
+        // cell's stream starts at the join; cell 0 streams from t=0.
+        let mut cfg = crate::experiments::fed_config(2);
+        cfg.devices[2].camera = true;
+        cfg.churn.events = vec![crate::config::ChurnEvent {
+            at_ms: 1_000.0,
+            target: crate::config::ChurnTarget::Device(2),
+            kind: crate::config::ChurnKind::Join,
+        }];
+        let ids = ScenarioBuilder::device_ids(&cfg);
+        let r = ScenarioBuilder::new(cfg).workload(wl(20, 50.0, 3_000.0)).run();
+        assert_eq!(r.summary.total, 40);
+        let late: Vec<_> =
+            r.records.iter().filter(|rec| rec.origin == ids[2]).collect();
+        assert_eq!(late.len(), 20);
+        assert!(late.iter().all(|rec| rec.created_ms >= 1_000.0));
+        // The joiner participates: its frames complete after it joins.
+        assert!(late.iter().any(|rec| rec.completed_ms.is_some()));
+    }
+
+    #[test]
+    fn multi_camera_single_cell_still_streams_from_first_camera_only() {
+        // Per-*cell* streams, not per-camera: a single-cell scenario with
+        // several cameras (the mall example) keeps the classic behaviour —
+        // one stream, originated by the first camera in config order.
+        let mut cfg = SystemConfig::default();
+        cfg.devices[1].camera = true; // second camera, same cell
+        let streams = ScenarioBuilder::camera_streams(&cfg);
+        assert_eq!(streams.len(), 1);
+        assert_eq!(streams[0].0, 0);
+        let r = ScenarioBuilder::new(cfg).workload(wl(30, 100.0, 5_000.0)).run();
+        assert_eq!(r.summary.total, 30);
+        let ids = ScenarioBuilder::device_ids(&SystemConfig::default());
+        assert!(r.records.iter().all(|rec| rec.origin == ids[0]));
     }
 
     #[test]

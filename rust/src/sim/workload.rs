@@ -41,17 +41,35 @@ pub struct ImageStream {
     rng: SplitMix64,
     next_seq: u64,
     start_ms: f64,
+    task_base: u64,
     pattern: ArrivalPattern,
 }
 
 impl ImageStream {
     pub fn new(cfg: WorkloadConfig, origin: NodeId, rng: SplitMix64) -> Self {
-        Self { cfg, origin, rng, next_seq: 0, start_ms: 0.0, pattern: ArrivalPattern::Uniform }
+        Self {
+            cfg,
+            origin,
+            rng,
+            next_seq: 0,
+            start_ms: 0.0,
+            task_base: 0,
+            pattern: ArrivalPattern::Uniform,
+        }
     }
 
     /// Offset all arrivals by `start_ms` (e.g. session establishment time).
     pub fn starting_at(mut self, start_ms: f64) -> Self {
         self.start_ms = start_ms;
+        self
+    }
+
+    /// Offset task ids by `base` — per-cell workload streams: each camera
+    /// gets a disjoint TaskId block while keeping its own 0-based `seq`
+    /// (EODS parity stays per-stream). Base 0 (the default) reproduces the
+    /// classic single-stream ids exactly.
+    pub fn task_base(mut self, base: u64) -> Self {
+        self.task_base = base;
         self
     }
 
@@ -117,7 +135,7 @@ impl ImageStream {
                 0.0
             };
             out.push(ImageMeta {
-                task: TaskId(seq),
+                task: TaskId(self.task_base + seq),
                 origin: self.origin,
                 size_kb: (self.cfg.size_kb + jitter).max(1.0),
                 side_px: self.cfg.side_px,
@@ -189,6 +207,17 @@ mod tests {
         assert!((imgs[10].created_ms - 500.0).abs() < 1e-9);
         // Long-run rate ≈ uniform's.
         assert!((imgs.last().unwrap().created_ms - 4509.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn task_base_offsets_ids_keeps_seq() {
+        let s = ImageStream::new(cfg(3, 100.0), NodeId(4), SplitMix64::new(1)).task_base(100);
+        let imgs = s.generate();
+        let ids: Vec<u64> = imgs.iter().map(|i| i.task.0).collect();
+        assert_eq!(ids, vec![100, 101, 102]);
+        let seqs: Vec<u64> = imgs.iter().map(|i| i.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+        assert!(imgs.iter().all(|i| i.origin == NodeId(4)));
     }
 
     #[test]

@@ -362,13 +362,31 @@ fn depleted_device_forwards_everything() {
         battery_pct: batt,
     };
     // Healthy battery: local (time feasible).
-    let ctx = DeviceCtx { now_ms: 0.0, img: &img, local: mk(Some(80.0)), predictor: &pred };
+    let ctx = DeviceCtx {
+        now_ms: 0.0,
+        img: &img,
+        local: mk(Some(80.0)),
+        predictor: &pred,
+        edge_suspected: false,
+    };
     assert_eq!(policy.decide_device(&ctx), Placement::Local);
     // Below the 20% reserve: conserve → forward.
-    let ctx = DeviceCtx { now_ms: 0.0, img: &img, local: mk(Some(10.0)), predictor: &pred };
+    let ctx = DeviceCtx {
+        now_ms: 0.0,
+        img: &img,
+        local: mk(Some(10.0)),
+        predictor: &pred,
+        edge_suspected: false,
+    };
     assert_eq!(policy.decide_device(&ctx), Placement::ToEdge);
     // Mains-powered: unaffected.
-    let ctx = DeviceCtx { now_ms: 0.0, img: &img, local: mk(None), predictor: &pred };
+    let ctx = DeviceCtx {
+        now_ms: 0.0,
+        img: &img,
+        local: mk(None),
+        predictor: &pred,
+        edge_suspected: false,
+    };
     assert_eq!(policy.decide_device(&ctx), Placement::Local);
 }
 

@@ -1,0 +1,187 @@
+//! Wire-format coverage: exhaustive roundtrips over every message tag
+//! (0x01–0x0A) plus corrupted/truncated-frame rejection — a malformed
+//! frame must yield a decode error, never a panic.
+
+use edge_dds::core::message::{EdgeSummary, ProfileUpdate, UserRequest};
+use edge_dds::core::wire::{decode, encode, read_frame};
+use edge_dds::core::{Constraint, ImageMeta, Message, NodeId, TaskId};
+
+fn sample_image(task: u64) -> ImageMeta {
+    ImageMeta {
+        task: TaskId(task),
+        origin: NodeId(1),
+        size_kb: 29.5,
+        side_px: 128,
+        created_ms: 42.25,
+        constraint: Constraint::pinned(2_500.0, NodeId(3)),
+        seq: task,
+    }
+}
+
+/// One representative message per wire tag, covering every variant and
+/// both Option branches where one exists.
+fn all_messages() -> Vec<Message> {
+    vec![
+        // 0x01
+        Message::User(UserRequest {
+            app_id: 7,
+            location: (-3.5, 12.25),
+            constraint: Constraint::deadline(5_000.0),
+            n_images: 50,
+            interval_ms: 100.0,
+        }),
+        // 0x02
+        Message::Activate {
+            request: UserRequest {
+                app_id: 1,
+                location: (0.0, 0.0),
+                constraint: Constraint::pinned(100.0, NodeId(2)),
+                n_images: 10,
+                interval_ms: 50.0,
+            },
+            reply_to: NodeId(0),
+        },
+        // 0x03
+        Message::Image(sample_image(99)),
+        // 0x04
+        Message::Result {
+            task: TaskId(99),
+            processed_by: NodeId(2),
+            detections: 4,
+            max_score: 1.25,
+            process_ms: 223.0,
+        },
+        // 0x05, battery Some
+        Message::Profile(ProfileUpdate {
+            node: NodeId(2),
+            busy_containers: 1,
+            warm_containers: 3,
+            queued_images: 5,
+            cpu_load_pct: 42.5,
+            battery_pct: Some(88.0),
+            sent_ms: 2_000.0,
+        }),
+        // 0x05, battery None
+        Message::Profile(ProfileUpdate {
+            node: NodeId(4),
+            busy_containers: 0,
+            warm_containers: 2,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            battery_pct: None,
+            sent_ms: 60.0,
+        }),
+        // 0x06
+        Message::Join { node: NodeId(5), class_tag: 2, warm_containers: 2 },
+        // 0x07
+        Message::JoinAck { assigned: NodeId(5) },
+        // 0x08
+        Message::Forward { img: sample_image(12), from_edge: NodeId(0) },
+        // 0x09
+        Message::EdgeSummary(EdgeSummary {
+            edge: NodeId(3),
+            busy_containers: 2,
+            warm_containers: 4,
+            queued_images: 1,
+            cpu_load_pct: 50.0,
+            device_idle_containers: 5,
+            sent_ms: 123.0,
+        }),
+        // 0x0A
+        Message::Ping { from: NodeId(0), sent_ms: 4_250.5 },
+    ]
+}
+
+#[test]
+fn roundtrip_every_tag() {
+    let msgs = all_messages();
+    // The sample set covers every tag exactly once (0x05 twice for the
+    // two Option branches).
+    let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
+    tags.sort_unstable();
+    tags.dedup();
+    assert_eq!(tags, (0x01..=0x0A).collect::<Vec<u8>>(), "a wire tag is untested");
+
+    let mut buf = Vec::new();
+    for msg in msgs {
+        let n = encode(&msg, &mut buf);
+        assert_eq!(n, buf.len());
+        let got = decode(&buf).expect("roundtrip decode");
+        assert_eq!(got, msg);
+    }
+}
+
+#[test]
+fn every_truncation_is_an_error_not_a_panic() {
+    let mut buf = Vec::new();
+    for msg in all_messages() {
+        encode(&msg, &mut buf);
+        let frame = buf.clone();
+        // Chop the frame at every possible length, re-patching the header
+        // length so the cut exercises the field readers (not just the
+        // outer length check). Every strict prefix must be a clean error.
+        for cut in 0..frame.len() {
+            let mut bad = frame[..cut].to_vec();
+            if bad.len() >= 5 {
+                let body_len = (bad.len() - 5) as u32;
+                bad[1..5].copy_from_slice(&body_len.to_le_bytes());
+            }
+            assert!(
+                decode(&bad).is_err(),
+                "truncation to {cut} bytes of tag 0x{:02x} must fail",
+                frame[0]
+            );
+        }
+        // Unpatched truncation trips the header/body length check.
+        let bad = &frame[..frame.len() - 1];
+        assert!(decode(bad).is_err());
+    }
+}
+
+#[test]
+fn corrupted_frames_are_rejected() {
+    let mut buf = Vec::new();
+    for msg in all_messages() {
+        encode(&msg, &mut buf);
+        // Unknown tag byte.
+        let mut bad = buf.clone();
+        bad[0] = 0xEE;
+        assert!(decode(&bad).is_err(), "corrupt tag must fail");
+        // Header length larger than the body.
+        let mut bad = buf.clone();
+        let wrong = (buf.len() - 5 + 7) as u32;
+        bad[1..5].copy_from_slice(&wrong.to_le_bytes());
+        assert!(decode(&bad).is_err(), "oversized header length must fail");
+        // Trailing garbage with a consistent header length.
+        let mut bad = buf.clone();
+        bad.push(0xFF);
+        let padded = (bad.len() - 5) as u32;
+        bad[1..5].copy_from_slice(&padded.to_le_bytes());
+        assert!(decode(&bad).is_err(), "trailing bytes must fail");
+    }
+    // Sub-header garbage.
+    assert!(decode(&[]).is_err());
+    assert!(decode(&[0x03]).is_err());
+    assert!(decode(&[0x03, 0, 0]).is_err());
+}
+
+#[test]
+fn read_frame_rejects_oversized_bodies() {
+    // A hostile header advertising a 65 MiB body must be refused before
+    // allocation.
+    let mut head = vec![0x03u8];
+    head.extend_from_slice(&((65u32) << 20).to_le_bytes());
+    let mut cursor = std::io::Cursor::new(head);
+    assert!(read_frame(&mut cursor).is_err());
+}
+
+#[test]
+fn read_frame_roundtrips_through_a_stream() {
+    let mut buf = Vec::new();
+    for msg in all_messages() {
+        encode(&msg, &mut buf);
+        let mut cursor = std::io::Cursor::new(buf.clone());
+        let frame = read_frame(&mut cursor).expect("read_frame");
+        assert_eq!(decode(&frame).expect("decode"), msg);
+    }
+}
