@@ -11,10 +11,12 @@ use common::{bench, black_box, section};
 use edge_dds::sim::ArrivalPattern;
 use edge_dds::config::WorkloadConfig;
 use edge_dds::container::ContainerPool;
+use edge_dds::core::message::ProfileUpdate;
 use edge_dds::core::wire;
-use edge_dds::core::{Constraint, ImageMeta, Message, NodeClass, NodeId, TaskId};
-use edge_dds::profile::{profile_for, PredictInput, Predictor};
-use edge_dds::scheduler::{DeviceCtx, LocalSnapshot, PolicyKind, SchedulerPolicy};
+use edge_dds::core::{AppId, Constraint, ImageMeta, Message, NodeClass, NodeId, PrivacyClass, TaskId};
+use edge_dds::net::LinkModel;
+use edge_dds::profile::{profile_for, PeerTable, PredictInput, Predictor, ProfileTable};
+use edge_dds::scheduler::{DeviceCtx, EdgeCtx, LocalSnapshot, PolicyKind, PredictorSet, SchedulerPolicy};
 use edge_dds::sim::ScenarioBuilder;
 
 fn img(task: u64) -> ImageMeta {
@@ -69,6 +71,108 @@ fn main() {
     bench("decide_device x10k", 3, 30, || {
         for _ in 0..DEC_BATCH {
             black_box(dds.decide_device(black_box(&ctx)));
+        }
+    })
+    .print_throughput(DEC_BATCH as f64, "decisions");
+
+    section("constraint-aware decision path (EDF + privacy filters)");
+    // The edge-level decision with a populated MP table, gossip-fed peer
+    // table, and app descriptors cycling through all three privacy
+    // classes: the per-frame overhead of the privacy hard filter and the
+    // EDF tie-break on decide_edge must stay visible in the perf
+    // trajectory (DESIGN.md §Constraints & QoS).
+    let mut dds_edge = PolicyKind::Dds.build(1);
+    let mut table = ProfileTable::new();
+    for n in 2..=5u32 {
+        table.register(NodeId(n), NodeClass::RaspberryPi, 2, 0.0);
+        table.apply(&ProfileUpdate {
+            node: NodeId(n),
+            busy_containers: n % 2,
+            warm_containers: 2,
+            queued_images: 0,
+            cpu_load_pct: 10.0 * n as f64,
+            battery_pct: None,
+            sent_ms: 5.0,
+        });
+    }
+    let mut peers = PeerTable::new();
+    peers.apply(&edge_dds::core::message::EdgeSummary {
+        edge: NodeId(9),
+        busy_containers: 1,
+        warm_containers: 4,
+        queued_images: 0,
+        cpu_load_pct: 0.0,
+        device_idle_containers: 2,
+        sent_ms: 5.0,
+    });
+    let predictors = PredictorSet::new();
+    let no_suspects = std::collections::BTreeSet::new();
+    let link_to = |_: NodeId| Some(LinkModel::wifi());
+    let classes =
+        [PrivacyClass::Open, PrivacyClass::CellLocal, PrivacyClass::DeviceLocal];
+    let frames: Vec<ImageMeta> = (0..3u64)
+        .map(|i| {
+            let mut f = img(i);
+            f.constraint = Constraint::for_app(
+                AppId(i as u16),
+                5_000.0,
+                classes[i as usize],
+                (i % 3) as u8,
+            );
+            f
+        })
+        .collect();
+    const EDGE_BATCH: u32 = 10_000;
+    bench("decide_edge(privacy mix) x10k", 3, 30, || {
+        for i in 0..EDGE_BATCH {
+            let frame = &frames[(i % 3) as usize];
+            let ctx = EdgeCtx {
+                now_ms: 10.0,
+                img: black_box(frame),
+                edge: LocalSnapshot {
+                    node: NodeId(0),
+                    busy_containers: 4, // saturated: the peer path is live
+                    warm_containers: 4,
+                    queued_images: 1,
+                    cpu_load_pct: 0.0,
+                    battery_pct: None,
+                },
+                predictors: &predictors,
+                table: &table,
+                peers: &peers,
+                link_to: &link_to,
+                max_staleness_ms: 200.0,
+                forwarded: false,
+                suspects: &no_suspects,
+            };
+            black_box(dds_edge.decide_edge(&ctx));
+        }
+    })
+    .print_throughput(EDGE_BATCH as f64, "decisions");
+
+    // Device-level decision on a device-local frame: the privacy
+    // short-circuit is the cheapest path and must stay that way.
+    let mut dds_dev = PolicyKind::Dds.build(1);
+    let mut private_frame = img(7);
+    private_frame.constraint =
+        Constraint::for_app(AppId(1), 800.0, PrivacyClass::DeviceLocal, 2);
+    let pctx = DeviceCtx {
+        now_ms: 10.0,
+        img: &private_frame,
+        local: LocalSnapshot {
+            node: NodeId(1),
+            busy_containers: 1,
+            warm_containers: 2,
+            queued_images: 1,
+            cpu_load_pct: 10.0,
+            battery_pct: None,
+        },
+        predictor: &pred,
+        edge_suspected: false,
+    };
+    bench("decide_device(device_local) x10k", 3, 30, || {
+        for _ in 0..DEC_BATCH {
+            black_box(dds_dev.decide_device(black_box(&pctx)));
         }
     })
     .print_throughput(DEC_BATCH as f64, "decisions");

@@ -10,7 +10,7 @@ pub mod schema;
 pub mod toml_lite;
 
 pub use schema::{
-    CellConfig, ChurnConfig, ChurnEvent, ChurnKind, ChurnTarget, DeviceConfig, FederationConfig,
-    NetworkConfig, RandomChurnConfig, RunMode, SystemConfig, WorkloadConfig,
+    AppSpec, CellConfig, ChurnConfig, ChurnEvent, ChurnKind, ChurnTarget, DeviceConfig,
+    FederationConfig, NetworkConfig, RandomChurnConfig, RunMode, SystemConfig, WorkloadConfig,
 };
 pub use toml_lite::{parse_document, Document, Value};

@@ -4,7 +4,7 @@
 use anyhow::{bail, Context, Result};
 
 use super::toml_lite::{parse_document, Document};
-use crate::core::NodeClass;
+use crate::core::{AppId, NodeClass, PrivacyClass};
 use crate::net::LinkModel;
 use crate::scheduler::{FailureDetector, PolicyKind};
 use crate::sim::workload::ArrivalPattern;
@@ -48,6 +48,63 @@ impl Default for WorkloadConfig {
             deadline_ms: 5_000.0,
             side_px: 64,
             pattern: ArrivalPattern::Uniform,
+        }
+    }
+}
+
+/// One registered application (`[[app]]` in config files — DESIGN.md
+/// §Constraints & QoS): a named QoS class with its own deadline, privacy
+/// scope, pool priority, arrival process, and image profile. Every frame
+/// the app's streams originate carries the descriptor, so all three
+/// placement levels see it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppSpec {
+    pub name: String,
+    /// End-to-end deadline applied to this app's frames.
+    pub deadline_ms: f64,
+    /// Disclosure scope — hard placement filter.
+    pub privacy: PrivacyClass,
+    /// Container-pool priority (higher dispatches first).
+    pub priority: u8,
+    /// Frames per camera stream.
+    pub n_images: u32,
+    /// Inter-frame interval (ms) — the app's arrival rate.
+    pub interval_ms: f64,
+    /// Image profile (payload size / pixel side — the model class).
+    pub size_kb: f64,
+    pub side_px: u32,
+    pub pattern: ArrivalPattern,
+}
+
+impl AppSpec {
+    /// The implicit app of a registry-less config: the `[workload]`
+    /// parameters under the default descriptor — exactly the pre-registry
+    /// single-stream behaviour.
+    pub fn default_from_workload(wl: &WorkloadConfig) -> AppSpec {
+        AppSpec {
+            name: "default".to_string(),
+            deadline_ms: wl.deadline_ms,
+            privacy: PrivacyClass::Open,
+            priority: 0,
+            n_images: wl.n_images,
+            interval_ms: wl.interval_ms,
+            size_kb: wl.size_kb,
+            side_px: wl.side_px,
+            pattern: wl.pattern,
+        }
+    }
+
+    /// The per-app workload a camera stream of this app generates.
+    /// `size_jitter_kb` stays a global workload knob.
+    pub fn workload(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        WorkloadConfig {
+            n_images: self.n_images,
+            interval_ms: self.interval_ms,
+            size_kb: self.size_kb,
+            size_jitter_kb: base.size_jitter_kb,
+            deadline_ms: self.deadline_ms,
+            side_px: self.side_px,
+            pattern: self.pattern,
         }
     }
 }
@@ -294,6 +351,10 @@ pub struct SystemConfig {
     /// Churn & failure injection (`[[churn]]` / `[churn_random]` /
     /// `[failure]`). Empty by default: no churn, no detection overhead.
     pub churn: ChurnConfig,
+    /// Application registry (`[[app]]` tables, DESIGN.md §Constraints &
+    /// QoS). Empty = the implicit single default app driven by
+    /// `[workload]` — bit-identical to the pre-registry behaviour.
+    pub apps: Vec<AppSpec>,
 }
 
 impl Default for SystemConfig {
@@ -331,6 +392,7 @@ impl Default for SystemConfig {
             cells: Vec::new(),
             federation: FederationConfig::default(),
             churn: ChurnConfig::default(),
+            apps: Vec::new(),
         }
     }
 }
@@ -461,6 +523,67 @@ impl SystemConfig {
             });
         }
 
+        let mut apps = Vec::new();
+        if let Some(list) = doc.arrays.get("app") {
+            for (i, t) in list.iter().enumerate() {
+                let name = t
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .unwrap_or_else(|| format!("app{i}"));
+                let privacy_name = t.get("privacy").and_then(|v| v.as_str()).unwrap_or("open");
+                let Some(privacy) = PrivacyClass::parse(privacy_name) else {
+                    bail!(
+                        "app[{i}] `{name}`: unknown privacy `{privacy_name}` \
+                         (open|cell_local|device_local)"
+                    );
+                };
+                let priority = t.get("priority").and_then(|v| v.as_i64()).unwrap_or(0);
+                if !(0..=255).contains(&priority) {
+                    bail!("app[{i}] `{name}`: priority {priority} out of range 0..=255");
+                }
+                let pattern_name =
+                    t.get("pattern").and_then(|v| v.as_str()).unwrap_or("uniform");
+                let Some(pattern) = ArrivalPattern::parse(pattern_name) else {
+                    bail!("app[{i}] `{name}`: unknown pattern `{pattern_name}`");
+                };
+                // Range-check before the u32 casts: a negative TOML value
+                // would otherwise wrap to ~4.3e9 (and e.g. n_images = -1
+                // would try to generate four billion frames per camera).
+                let n_images = t
+                    .get("n_images")
+                    .and_then(|v| v.as_i64())
+                    .unwrap_or(workload.n_images as i64);
+                if !(1..=u32::MAX as i64).contains(&n_images) {
+                    bail!("app[{i}] `{name}`: n_images {n_images} out of range 1..=2^32-1");
+                }
+                let side_px = t
+                    .get("side_px")
+                    .and_then(|v| v.as_i64())
+                    .unwrap_or(workload.side_px as i64);
+                if !(1..=u32::MAX as i64).contains(&side_px) {
+                    bail!("app[{i}] `{name}`: side_px {side_px} out of range 1..=2^32-1");
+                }
+                apps.push(AppSpec {
+                    deadline_ms: t
+                        .get("deadline_ms")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(workload.deadline_ms),
+                    privacy,
+                    priority: priority as u8,
+                    n_images: n_images as u32,
+                    interval_ms: t
+                        .get("interval_ms")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(workload.interval_ms),
+                    size_kb: t.get("size_kb").and_then(|v| v.as_f64()).unwrap_or(workload.size_kb),
+                    side_px: side_px as u32,
+                    pattern,
+                    name,
+                });
+            }
+        }
+
         let fd = FederationConfig::default();
         let federation = FederationConfig {
             backhaul: NetworkConfig {
@@ -492,9 +615,42 @@ impl SystemConfig {
             cells,
             federation,
             churn,
+            apps,
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The app registry in effect: the declared `[[app]]` tables, or the
+    /// implicit single default app of a registry-less config. `AppId(i)`
+    /// indexes this list. Shared by the sim and live drivers — one
+    /// derivation, two drivers.
+    pub fn effective_apps(&self) -> Vec<AppSpec> {
+        if self.apps.is_empty() {
+            vec![AppSpec::default_from_workload(&self.workload)]
+        } else {
+            self.apps.clone()
+        }
+    }
+
+    /// The spec behind an [`AppId`] (the default app for out-of-range ids
+    /// — robust against frames from newer configs).
+    pub fn app_spec(&self, app: AppId) -> AppSpec {
+        self.effective_apps()
+            .into_iter()
+            .nth(app.0 as usize)
+            .unwrap_or_else(|| AppSpec::default_from_workload(&self.workload))
+    }
+
+    /// Workload span in virtual ms: the latest scheduled arrival across
+    /// every app's stream (a registry-less config reduces to the classic
+    /// `n_images * interval_ms`). Feeds the sim horizon, the churn trace
+    /// expansion, and the live wait timeout — one derivation, two drivers.
+    pub fn span_ms(&self) -> f64 {
+        self.effective_apps()
+            .iter()
+            .map(|a| a.n_images as f64 * a.interval_ms)
+            .fold(0.0, f64::max)
     }
 
     /// Number of cells this config describes (the single-cell shim counts
@@ -597,6 +753,26 @@ impl SystemConfig {
                 || !(rc.device_mttr_ms.is_finite() && rc.device_mttr_ms > 0.0)
             {
                 bail!("churn_random mtbf/mttr must be positive and finite");
+            }
+        }
+        if self.apps.len() > u16::MAX as usize {
+            bail!("at most {} [[app]] entries (AppId is u16)", u16::MAX);
+        }
+        for (i, a) in self.apps.iter().enumerate() {
+            if a.n_images == 0 {
+                bail!("app[{i}] `{}`: n_images must be positive", a.name);
+            }
+            if !(a.deadline_ms.is_finite() && a.deadline_ms > 0.0) {
+                bail!("app[{i}] `{}`: deadline_ms must be positive and finite", a.name);
+            }
+            if !(a.interval_ms.is_finite() && a.interval_ms >= 0.0) {
+                bail!("app[{i}] `{}`: interval_ms must be non-negative and finite", a.name);
+            }
+            if !(a.size_kb.is_finite() && a.size_kb > 0.0) {
+                bail!("app[{i}] `{}`: size_kb must be positive and finite", a.name);
+            }
+            if self.apps[..i].iter().any(|b| b.name == a.name) {
+                bail!("app[{i}]: duplicate app name `{}`", a.name);
             }
         }
         Ok(())
@@ -971,6 +1147,165 @@ camera = true
             kind: ChurnKind::Fail,
         });
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn app_registry_roundtrip() {
+        let text = r#"
+[workload]
+n_images = 100
+interval_ms = 80
+deadline_ms = 4000
+size_kb = 29
+
+[[app]]
+name = "detector"
+deadline_ms = 800
+privacy = "cell_local"
+priority = 2
+interval_ms = 100
+
+[[app]]
+name = "blur"
+deadline_ms = 2000
+privacy = "device_local"
+priority = 1
+n_images = 40
+size_kb = 87
+side_px = 128
+
+[[app]]
+name = "analytics"
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert_eq!(c.apps.len(), 3);
+        let det = &c.apps[0];
+        assert_eq!(det.name, "detector");
+        assert_eq!(det.deadline_ms, 800.0);
+        assert_eq!(det.privacy, PrivacyClass::CellLocal);
+        assert_eq!(det.priority, 2);
+        // Unset fields inherit the [workload] values.
+        assert_eq!(det.n_images, 100);
+        assert_eq!(det.interval_ms, 100.0);
+        assert_eq!(det.size_kb, 29.0);
+        let blur = &c.apps[1];
+        assert_eq!(blur.privacy, PrivacyClass::DeviceLocal);
+        assert_eq!(blur.n_images, 40);
+        assert_eq!(blur.size_kb, 87.0);
+        assert_eq!(blur.side_px, 128);
+        let ana = &c.apps[2];
+        assert_eq!(ana.privacy, PrivacyClass::Open);
+        assert_eq!(ana.priority, 0);
+        assert_eq!(ana.deadline_ms, 4_000.0);
+        // Registry accessors.
+        assert_eq!(c.effective_apps().len(), 3);
+        assert_eq!(c.app_spec(AppId(1)).name, "blur");
+        assert_eq!(c.app_spec(AppId(99)).name, "default", "out-of-range falls back");
+        // Span: detector 100×100 = 10 000 dominates blur 40×80 and
+        // analytics 100×80.
+        assert_eq!(c.span_ms(), 10_000.0);
+    }
+
+    #[test]
+    fn registry_less_config_has_implicit_default_app() {
+        let c = SystemConfig::default();
+        assert!(c.apps.is_empty());
+        let apps = c.effective_apps();
+        assert_eq!(apps.len(), 1);
+        let a = &apps[0];
+        assert_eq!(a.name, "default");
+        assert_eq!(a.privacy, PrivacyClass::Open);
+        assert_eq!(a.priority, 0);
+        assert_eq!(a.n_images, c.workload.n_images);
+        assert_eq!(a.deadline_ms, c.workload.deadline_ms);
+        assert_eq!(
+            c.span_ms(),
+            c.workload.n_images as f64 * c.workload.interval_ms,
+            "legacy span derivation preserved"
+        );
+        // The per-app workload round-trips the base workload exactly.
+        assert_eq!(a.workload(&c.workload), c.workload);
+    }
+
+    #[test]
+    fn rejects_bad_app_entries() {
+        let bad_privacy = r#"
+[[app]]
+name = "x"
+privacy = "secret"
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_privacy).is_err());
+        let bad_priority = r#"
+[[app]]
+name = "x"
+priority = 300
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_priority).is_err());
+        let dup_name = r#"
+[[app]]
+name = "x"
+
+[[app]]
+name = "x"
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(dup_name).is_err());
+        let zero_images = r#"
+[[app]]
+name = "x"
+n_images = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(zero_images).is_err());
+        // Negative values must not wrap through the u32 cast.
+        let negative_images = r#"
+[[app]]
+name = "x"
+n_images = -1
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(negative_images).is_err());
+        let negative_side = r#"
+[[app]]
+name = "x"
+side_px = -1
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(negative_side).is_err());
+        let bad_deadline = r#"
+[[app]]
+name = "x"
+deadline_ms = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_deadline).is_err());
     }
 
     #[test]

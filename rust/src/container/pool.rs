@@ -34,12 +34,26 @@ pub struct PoolStats {
     pub cold_starts: u64,
 }
 
-/// Warm-container pool with an overflow FIFO (`q_image` in the paper).
+/// Overflow-queue ordering (DESIGN.md §Constraints & QoS): per-app
+/// priority first (higher dispatches first), then EDF on the absolute
+/// deadline, then TaskId — a total, deterministic order. A single-app
+/// uniform stream has equal priorities and deadlines ascending with
+/// arrival, so this degenerates to the paper's FIFO `q_image` exactly.
+fn queue_order(a: &ImageMeta, b: &ImageMeta) -> std::cmp::Ordering {
+    b.constraint
+        .priority
+        .cmp(&a.constraint.priority)
+        .then_with(|| a.abs_deadline_ms().total_cmp(&b.abs_deadline_ms()))
+        .then_with(|| a.task.cmp(&b.task))
+}
+
+/// Warm-container pool with a priority/EDF overflow queue (the paper's
+/// `q_image`, generalized for the multi-app registry).
 #[derive(Debug, Clone)]
 pub struct ContainerPool {
     profile: ClassProfile,
     containers: Vec<ContainerState>,
-    /// Images waiting for a container (the paper's `q_image` queue).
+    /// Images waiting for a container, kept sorted by [`queue_order`].
     queue: VecDeque<ImageMeta>,
     /// Background (non-container) CPU load in [0, 100].
     bg_load_pct: f64,
@@ -105,12 +119,19 @@ impl ContainerPool {
     }
 
     /// Submit a task at `now_ms`: dispatch to an idle container if any,
-    /// else push to `q_image` and return `None`.
+    /// else insert into `q_image` at its (priority, deadline, task) rank
+    /// and return `None`.
     pub fn submit(&mut self, img: ImageMeta, now_ms: f64) -> Option<Assignment> {
         if let Some(idx) = self.containers.iter().position(|c| matches!(c, ContainerState::Idle)) {
             Some(self.dispatch(idx, img, now_ms))
         } else {
-            self.queue.push_back(img);
+            // TaskIds are unique, so the rank is total and the search
+            // never reports an exact match.
+            let at = self
+                .queue
+                .binary_search_by(|q| queue_order(q, &img))
+                .unwrap_or_else(|i| i);
+            self.queue.insert(at, img);
             self.stats.queued_peak = self.stats.queued_peak.max(self.queue.len());
             None
         }
@@ -314,6 +335,79 @@ mod tests {
         let mut p = ContainerPool::new(profile_for(NodeClass::RaspberryPi), 1);
         let a = p.submit(img(1, 29.0), 0.0).unwrap();
         assert!((a.process_ms - 597.0).abs() < 1e-9); // Table VI n=1
+    }
+
+    #[test]
+    fn queue_orders_by_priority_then_deadline_then_task() {
+        use crate::core::{AppId, Constraint, PrivacyClass};
+        let mut p = edge_pool(1);
+        p.submit(img(0, 29.0), 0.0).unwrap(); // occupies the container
+        // Queue: low-priority early-deadline, high-priority late-deadline,
+        // and two equal-priority frames ordered by absolute deadline.
+        let mut lo_early = img(1, 29.0);
+        lo_early.constraint = Constraint::for_app(AppId(1), 1_000.0, PrivacyClass::Open, 0);
+        let mut hi_late = img(2, 29.0);
+        hi_late.constraint = Constraint::for_app(AppId(2), 50_000.0, PrivacyClass::Open, 5);
+        let mut mid_late = img(3, 29.0);
+        mid_late.constraint = Constraint::for_app(AppId(3), 9_000.0, PrivacyClass::Open, 1);
+        let mut mid_early = img(4, 29.0);
+        mid_early.constraint = Constraint::for_app(AppId(3), 4_000.0, PrivacyClass::Open, 1);
+        for f in [lo_early, hi_late, mid_late, mid_early] {
+            assert!(p.submit(f, 1.0).is_none());
+        }
+        // Dispatch order: priority 5, then priority 1 by deadline
+        // (4000 before 9000), then priority 0.
+        let order: Vec<u64> = std::iter::from_fn(|| {
+            let next = p.complete(0, p_busy_task(&p), 10.0)?;
+            Some(next.task.0)
+        })
+        .collect();
+        assert_eq!(order, vec![2, 4, 3, 1]);
+    }
+
+    /// The task currently running in container 0 (test helper).
+    fn p_busy_task(p: &ContainerPool) -> TaskId {
+        match p.state(0) {
+            ContainerState::Busy { task, .. } => task,
+            other => panic!("container 0 not busy: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn equal_priority_equal_deadline_ties_break_by_task_id() {
+        let mut p = edge_pool(1);
+        p.submit(img(0, 29.0), 0.0).unwrap();
+        // Same created_ms/deadline → same rank up to the TaskId tie-break;
+        // insertion order scrambled on purpose.
+        for t in [7u64, 3, 9, 5] {
+            assert!(p.submit(img(t, 29.0), 0.0).is_none());
+        }
+        let mut order = Vec::new();
+        let mut running = p_busy_task(&p);
+        while let Some(next) = p.complete(0, running, 10.0) {
+            order.push(next.task.0);
+            running = next.task;
+        }
+        assert_eq!(order, vec![3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn single_app_uniform_stream_queue_is_fifo() {
+        // Legacy identity: one app, arrivals in time order → deadlines
+        // ascend with arrival, so the priority queue reproduces FIFO.
+        let mut p = edge_pool(1);
+        for t in 0..6u64 {
+            let mut f = img(t, 29.0);
+            f.created_ms = t as f64 * 10.0;
+            p.submit(f, f.created_ms);
+        }
+        let mut order = Vec::new();
+        let mut running = p_busy_task(&p);
+        while let Some(next) = p.complete(0, running, 100.0) {
+            order.push(next.task.0);
+            running = next.task;
+        }
+        assert_eq!(order, vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

@@ -71,25 +71,126 @@ impl NodeClass {
     }
 }
 
-/// A user-supplied task constraint (the paper evaluates time constraints;
-/// §VI names privacy/energy as future work — `pinned_node` models the
-/// paper's "task and trust constraints" where a task may only run on
-/// specific nodes).
+/// Compact application identity (DESIGN.md §Constraints & QoS). Index into
+/// the config's `[[app]]` registry; `AppId::DEFAULT` (0) is the implicit
+/// single app of configs without an `[[app]]` table — the pre-registry
+/// behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct AppId(pub u16);
+
+impl AppId {
+    /// The implicit app of registry-less configs.
+    pub const DEFAULT: AppId = AppId(0);
+}
+
+impl std::fmt::Display for AppId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "app{}", self.0)
+    }
+}
+
+/// Privacy class of a task — a lattice of widening disclosure scopes
+/// (DESIGN.md §Constraints & QoS). Placement levels *hard-filter* their
+/// candidate sets by it: a frame is never observed outside its scope, no
+/// matter what a policy decides (including the churn requeue path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum PrivacyClass {
+    /// May run anywhere: origin device, cell edge, cell devices, peer cells.
+    #[default]
+    Open,
+    /// Must stay inside the origin's cell (device ↔ edge ↔ cell devices);
+    /// never crosses the backhaul to a peer edge.
+    CellLocal,
+    /// Must never leave the origin device.
+    DeviceLocal,
+}
+
+impl PrivacyClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PrivacyClass::Open => "open",
+            PrivacyClass::CellLocal => "cell_local",
+            PrivacyClass::DeviceLocal => "device_local",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PrivacyClass> {
+        match s {
+            "open" => Some(PrivacyClass::Open),
+            "cell_local" | "cell-local" => Some(PrivacyClass::CellLocal),
+            "device_local" | "device-local" => Some(PrivacyClass::DeviceLocal),
+            _ => None,
+        }
+    }
+
+    /// Stable wire tag (see `core::wire`).
+    pub fn wire_tag(&self) -> u8 {
+        match self {
+            PrivacyClass::Open => 0,
+            PrivacyClass::CellLocal => 1,
+            PrivacyClass::DeviceLocal => 2,
+        }
+    }
+
+    pub fn from_wire_tag(t: u8) -> Option<PrivacyClass> {
+        match t {
+            0 => Some(PrivacyClass::Open),
+            1 => Some(PrivacyClass::CellLocal),
+            2 => Some(PrivacyClass::DeviceLocal),
+            _ => None,
+        }
+    }
+}
+
+/// A user-supplied task constraint (the paper evaluates time constraints
+/// and names latency *and privacy* as the application constraints DDS must
+/// meet; `pinned_node` models the paper's "task and trust constraints"
+/// where a task may only run on specific nodes). The app/privacy/priority
+/// descriptor travels with every frame so all three placement levels can
+/// filter and order by it (DESIGN.md §Constraints & QoS).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Constraint {
     /// End-to-end deadline in milliseconds (generation → result).
     pub deadline_ms: f64,
     /// If set, the task must not leave this node (privacy/trust constraint).
     pub pinned_node: Option<NodeId>,
+    /// Owning application (config `[[app]]` index; `AppId::DEFAULT` for
+    /// registry-less configs).
+    pub app: AppId,
+    /// Disclosure scope — hard placement filter.
+    pub privacy: PrivacyClass,
+    /// Pool scheduling priority (higher dispatches first; ties broken by
+    /// earliest absolute deadline, then task id).
+    pub priority: u8,
 }
 
 impl Constraint {
     pub fn deadline(deadline_ms: f64) -> Self {
-        Constraint { deadline_ms, pinned_node: None }
+        Constraint {
+            deadline_ms,
+            pinned_node: None,
+            app: AppId::DEFAULT,
+            privacy: PrivacyClass::Open,
+            priority: 0,
+        }
     }
 
     pub fn pinned(deadline_ms: f64, node: NodeId) -> Self {
-        Constraint { deadline_ms, pinned_node: Some(node) }
+        Constraint { pinned_node: Some(node), ..Constraint::deadline(deadline_ms) }
+    }
+
+    /// Constraint for a registered application.
+    pub fn for_app(app: AppId, deadline_ms: f64, privacy: PrivacyClass, priority: u8) -> Self {
+        Constraint { app, privacy, priority, ..Constraint::deadline(deadline_ms) }
+    }
+
+    /// True when every descriptor field is the registry-less default — the
+    /// wire codec encodes such constraints in the legacy (pre-registry)
+    /// layout, byte-identically.
+    pub fn is_default_descriptor(&self) -> bool {
+        self.app == AppId::DEFAULT
+            && self.privacy == PrivacyClass::Open
+            && self.priority == 0
     }
 }
 
@@ -111,6 +212,14 @@ pub struct ImageMeta {
     pub constraint: Constraint,
     /// Stream sequence number (EODS splits on its parity).
     pub seq: u64,
+}
+
+impl ImageMeta {
+    /// Absolute deadline on the run clock — the EDF ordering key used by
+    /// the container pool's priority queues.
+    pub fn abs_deadline_ms(&self) -> f64 {
+        self.created_ms + self.constraint.deadline_ms
+    }
 }
 
 /// Where a scheduling decision sends a task.
@@ -157,8 +266,46 @@ mod tests {
         let c = Constraint::deadline(500.0);
         assert_eq!(c.deadline_ms, 500.0);
         assert!(c.pinned_node.is_none());
+        assert!(c.is_default_descriptor());
         let p = Constraint::pinned(500.0, NodeId(3));
         assert_eq!(p.pinned_node, Some(NodeId(3)));
+        assert!(p.is_default_descriptor(), "pinning is orthogonal to the app descriptor");
+        let a = Constraint::for_app(AppId(2), 800.0, PrivacyClass::CellLocal, 3);
+        assert_eq!(a.app, AppId(2));
+        assert_eq!(a.privacy, PrivacyClass::CellLocal);
+        assert_eq!(a.priority, 3);
+        assert!(!a.is_default_descriptor());
+        // Any single non-default field makes the descriptor non-default.
+        assert!(!Constraint::for_app(AppId(1), 1.0, PrivacyClass::Open, 0).is_default_descriptor());
+        assert!(!Constraint::for_app(AppId(0), 1.0, PrivacyClass::DeviceLocal, 0)
+            .is_default_descriptor());
+        assert!(!Constraint::for_app(AppId(0), 1.0, PrivacyClass::Open, 9).is_default_descriptor());
+    }
+
+    #[test]
+    fn privacy_class_roundtrip() {
+        for p in [PrivacyClass::Open, PrivacyClass::CellLocal, PrivacyClass::DeviceLocal] {
+            assert_eq!(PrivacyClass::parse(p.as_str()), Some(p));
+            assert_eq!(PrivacyClass::from_wire_tag(p.wire_tag()), Some(p));
+        }
+        assert_eq!(PrivacyClass::parse("cell-local"), Some(PrivacyClass::CellLocal));
+        assert_eq!(PrivacyClass::parse("secret"), None);
+        assert_eq!(PrivacyClass::from_wire_tag(9), None);
+        assert_eq!(PrivacyClass::default(), PrivacyClass::Open);
+    }
+
+    #[test]
+    fn abs_deadline_from_creation() {
+        let img = ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 150.0,
+            constraint: Constraint::deadline(1_000.0),
+            seq: 0,
+        };
+        assert_eq!(img.abs_deadline_ms(), 1_150.0);
     }
 
     #[test]

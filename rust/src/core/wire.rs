@@ -10,7 +10,17 @@
 use anyhow::{bail, Context, Result};
 
 use super::message::{EdgeSummary, Message, ProfileUpdate, UserRequest};
-use super::{Constraint, ImageMeta, NodeId, TaskId};
+use super::{AppId, Constraint, ImageMeta, NodeId, PrivacyClass, TaskId};
+
+/// Constraint flag bit: a pinned node id follows.
+const CF_PINNED: u8 = 0x01;
+/// Constraint flag bit (format v2, DESIGN.md §Constraints & QoS): an
+/// app/privacy/priority descriptor follows. Absent for the default
+/// descriptor, which keeps default-app frames byte-identical to the
+/// pre-registry wire format — and lets pre-registry frames decode as the
+/// default app (legacy decode).
+const CF_DESCRIPTOR: u8 = 0x02;
+const CF_KNOWN: u8 = CF_PINNED | CF_DESCRIPTOR;
 
 /// Encode `msg` into `buf` (cleared first). Returns the frame length.
 pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
@@ -178,14 +188,31 @@ fn put_f64(b: &mut Vec<u8>, v: f64) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Versioned constraint body: `f64 deadline`, a flags byte, then the
+/// optional sections the flags announce. The default app descriptor is
+/// *omitted* (CF_DESCRIPTOR unset), so registry-less traffic is
+/// byte-identical to the pre-registry format.
 fn put_constraint(b: &mut Vec<u8>, c: &Constraint) {
     put_f64(b, c.deadline_ms);
-    match c.pinned_node {
-        Some(n) => {
-            b.push(1);
-            put_u32(b, n.0);
-        }
-        None => b.push(0),
+    let mut flags = 0u8;
+    if c.pinned_node.is_some() {
+        flags |= CF_PINNED;
+    }
+    if !c.is_default_descriptor() {
+        flags |= CF_DESCRIPTOR;
+    }
+    b.push(flags);
+    if let Some(n) = c.pinned_node {
+        put_u32(b, n.0);
+    }
+    if flags & CF_DESCRIPTOR != 0 {
+        put_u16(b, c.app.0);
+        b.push(c.privacy.wire_tag());
+        b.push(c.priority);
     }
 }
 
@@ -225,6 +252,9 @@ impl<'a> Reader<'a> {
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -241,8 +271,24 @@ impl<'a> Reader<'a> {
 
 fn get_constraint(r: &mut Reader) -> Result<Constraint> {
     let deadline_ms = r.f64()?;
-    let pinned_node = if r.u8()? == 1 { Some(NodeId(r.u32()?)) } else { None };
-    Ok(Constraint { deadline_ms, pinned_node })
+    let flags = r.u8()?;
+    if flags & !CF_KNOWN != 0 {
+        bail!("unknown constraint flag bits 0x{flags:02x}");
+    }
+    let pinned_node =
+        if flags & CF_PINNED != 0 { Some(NodeId(r.u32()?)) } else { None };
+    let (app, privacy, priority) = if flags & CF_DESCRIPTOR != 0 {
+        let app = AppId(r.u16()?);
+        let ptag = r.u8()?;
+        let privacy = PrivacyClass::from_wire_tag(ptag)
+            .with_context(|| format!("unknown privacy class tag {ptag}"))?;
+        (app, privacy, r.u8()?)
+    } else {
+        // Legacy decode: pre-registry frames (and default-app frames)
+        // carry no descriptor — they are the default app.
+        (AppId::DEFAULT, PrivacyClass::Open, 0)
+    };
+    Ok(Constraint { deadline_ms, pinned_node, app, privacy, priority })
 }
 
 fn get_user(r: &mut Reader) -> Result<UserRequest> {
@@ -347,6 +393,90 @@ mod tests {
             sent_ms: 123.0,
         }));
         roundtrip(Message::Ping { from: NodeId(0), sent_ms: 4_250.5 });
+    }
+
+    #[test]
+    fn roundtrip_app_descriptor_constraints() {
+        // Extended descriptor alone, pinned alone, and both together.
+        let mut img = ImageMeta {
+            task: TaskId(7),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 10.0,
+            constraint: Constraint::for_app(AppId(3), 800.0, PrivacyClass::DeviceLocal, 5),
+            seq: 7,
+        };
+        roundtrip(Message::Image(img));
+        img.constraint.pinned_node = Some(NodeId(2));
+        img.constraint.privacy = PrivacyClass::CellLocal;
+        roundtrip(Message::Image(img));
+        roundtrip(Message::Forward { img, from_edge: NodeId(0) });
+        roundtrip(Message::User(UserRequest {
+            app_id: 3,
+            location: (0.0, 0.0),
+            constraint: Constraint::for_app(AppId(1), 250.0, PrivacyClass::CellLocal, 9),
+            n_images: 5,
+            interval_ms: 20.0,
+        }));
+    }
+
+    #[test]
+    fn default_descriptor_encoding_matches_legacy_layout() {
+        // A default-app image must encode exactly the pre-registry layout:
+        // tag, len, u64 task, u32 origin, f64 size, u32 side, f64 created,
+        // f64 deadline, u8 flags(=0), u64 seq — 54 bytes total — so old
+        // decoders (and recorded traces) see identical bytes.
+        let msg = Message::Image(ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(5_000.0),
+            seq: 1,
+        });
+        let mut buf = Vec::new();
+        encode(&msg, &mut buf);
+        assert_eq!(buf.len(), 5 + 8 + 4 + 8 + 4 + 8 + (8 + 1) + 8);
+        // The flags byte sits right after the deadline; 0 = legacy/no
+        // sections (a pre-registry frame wrote the same 0 there).
+        assert_eq!(buf[5 + 8 + 4 + 8 + 4 + 8 + 8], 0);
+        // And a non-default descriptor grows the frame by exactly the
+        // 4-byte descriptor section.
+        let mut app_img = match msg {
+            Message::Image(m) => m,
+            _ => unreachable!(),
+        };
+        app_img.constraint = Constraint::for_app(AppId(1), 5_000.0, PrivacyClass::Open, 0);
+        let mut buf2 = Vec::new();
+        encode(&Message::Image(app_img), &mut buf2);
+        assert_eq!(buf2.len(), buf.len() + 4);
+    }
+
+    #[test]
+    fn rejects_unknown_constraint_flags_and_privacy() {
+        let msg = Message::Image(ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::for_app(AppId(1), 5_000.0, PrivacyClass::CellLocal, 2),
+            seq: 1,
+        });
+        let mut buf = Vec::new();
+        encode(&msg, &mut buf);
+        let flags_off = 5 + 8 + 4 + 8 + 4 + 8 + 8;
+        assert_eq!(buf[flags_off], 0x02, "descriptor flag expected");
+        // Unknown flag bit.
+        let mut bad = buf.clone();
+        bad[flags_off] = 0x06;
+        assert!(decode(&bad).is_err());
+        // Unknown privacy tag (descriptor = u16 app, u8 privacy, u8 prio).
+        let mut bad = buf.clone();
+        bad[flags_off + 1 + 2] = 0x7F;
+        assert!(decode(&bad).is_err());
     }
 
     #[test]

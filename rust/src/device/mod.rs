@@ -8,11 +8,11 @@
 //! both drive the *same* state machine — scheduling behaviour cannot
 //! diverge between simulation and deployment.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::container::ContainerPool;
 use crate::core::message::{Message, ProfileUpdate};
-use crate::core::{ImageMeta, NodeId, Placement, TaskId};
+use crate::core::{ImageMeta, NodeId, Placement, PrivacyClass, TaskId};
 use crate::energy::Battery;
 use crate::profile::Predictor;
 use crate::scheduler::{DeviceCtx, FailureDetector, LocalSnapshot, SchedulerPolicy};
@@ -35,6 +35,11 @@ pub enum Action {
     /// Recorder hook: an in-flight task's placement node was declared dead
     /// and the task was pulled back for re-placement (churn).
     RecordRequeued { task: TaskId },
+    /// Recorder hook: the task is lost for good — the node that holds it
+    /// can neither execute it (e.g. depleted battery) nor ship it anywhere
+    /// its privacy scope allows. Resolves the task as `Dropped` so the run
+    /// does not wait on it.
+    RecordDropped { task: TaskId },
 }
 
 /// An end device (Raspberry Pi / smartphone).
@@ -46,8 +51,14 @@ pub struct DeviceNode {
     policy: Box<dyn SchedulerPolicy>,
     /// Metadata of tasks currently in the local pool or queue.
     inflight: HashMap<TaskId, ImageMeta>,
-    /// Tasks this device originated and is awaiting results for.
-    awaiting: HashMap<TaskId, ImageMeta>,
+    /// Tasks this device originated and is awaiting results for. Ordered —
+    /// the dead-edge requeue sweep iterates it, and its order must be
+    /// deterministic for seeded replay (DESIGN.md §Determinism).
+    awaiting: BTreeMap<TaskId, ImageMeta>,
+    /// Subset of `awaiting` that was forwarded to the edge server and has
+    /// not produced a result yet — the frames stranded if the edge dies
+    /// (DESIGN.md §Churn, device-side requeue).
+    sent_to_edge: BTreeSet<TaskId>,
     /// Battery model (None = mains-powered). Advanced on every handler
     /// call; reported in UP pushes for energy-aware scheduling.
     battery: Option<Battery>,
@@ -75,7 +86,8 @@ impl DeviceNode {
             predictor,
             policy,
             inflight: HashMap::new(),
-            awaiting: HashMap::new(),
+            awaiting: BTreeMap::new(),
+            sent_to_edge: BTreeSet::new(),
             battery: None,
             detector: None,
             last_edge_heard_ms: 0.0,
@@ -108,6 +120,7 @@ impl DeviceNode {
         self.pool.reset();
         self.inflight.clear();
         self.awaiting.clear();
+        self.sent_to_edge.clear();
     }
 
     /// Churn: the device restarted at `now_ms`. The caller (driver) sends
@@ -169,9 +182,26 @@ impl DeviceNode {
         debug_assert_eq!(img.origin, self.id);
         self.tick_battery(now_ms);
         self.awaiting.insert(img.task, img);
+        // Privacy hard filter (DESIGN.md §Constraints & QoS), enforced at
+        // the node layer for *every* policy: a device-local frame never
+        // leaves its origin — not for a policy verdict, not for battery
+        // conservation. Privacy is a constraint, not a preference. On a
+        // depleted device the two constraints collide — it can neither
+        // compute nor disclose — so the frame is lost outright.
+        if img.constraint.privacy == PrivacyClass::DeviceLocal {
+            out.push(Action::RecordPlaced { task: img.task, placement: Placement::Local });
+            if self.battery.as_ref().is_some_and(|b| b.depleted()) {
+                self.awaiting.remove(&img.task);
+                out.push(Action::RecordDropped { task: img.task });
+                return;
+            }
+            self.run_local(img, now_ms, out);
+            return;
+        }
         // A depleted device cannot compute at all — forward everything.
         if self.battery.as_ref().is_some_and(|b| b.depleted()) {
             out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
+            self.sent_to_edge.insert(img.task);
             out.push(Action::Send { to: self.edge, msg: Message::Image(img), reliable: false });
             return;
         }
@@ -195,6 +225,7 @@ impl DeviceNode {
                 // ToPeerEdge are edge-level verdicts): anything non-local
                 // goes to the cell's edge server.
                 out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
+                self.sent_to_edge.insert(img.task);
                 // Image push is UDP-like in the paper ("we use UDP to send
                 // the requests" to simulate loss).
                 out.push(Action::Send { to: self.edge, msg: Message::Image(img), reliable: false });
@@ -216,6 +247,7 @@ impl DeviceNode {
             }
             // Result for a task we originated but was processed elsewhere.
             Message::Result { task, process_ms, .. } => {
+                self.sent_to_edge.remove(&task);
                 if self.awaiting.remove(&task).is_some() {
                     out.push(Action::RecordCompleted { task, at_ms: now_ms, process_ms });
                 }
@@ -243,9 +275,13 @@ impl DeviceNode {
         match img {
             Some(img) if img.origin == self.id => {
                 // Our own frame, done locally: result is immediately
-                // available to the local application.
-                self.awaiting.remove(&task);
-                out.push(Action::RecordCompleted { task, at_ms: now_ms, process_ms });
+                // available to the local application. Guarded on the
+                // awaiting entry — a dead-edge requeue races the edge's
+                // (late) result, and only the first resolution may record
+                // the completion.
+                if self.awaiting.remove(&task).is_some() {
+                    out.push(Action::RecordCompleted { task, at_ms: now_ms, process_ms });
+                }
             }
             Some(_img) => {
                 // Offloaded to us — return the result to the origin via the
@@ -274,11 +310,46 @@ impl DeviceNode {
     /// edge is suspected down — a recovered edge has lost its MP table, so
     /// the probe is what re-registers this device (the Profile push alone
     /// would be ignored by an edge that no longer knows the sender).
+    /// Churn-aware policies additionally pull back frames still awaiting
+    /// results from the (dead) edge and resolve them via local fallback.
     pub fn on_profile_tick(&mut self, now_ms: f64, out: &mut Vec<Action>) {
         let up = self.profile_update(now_ms);
         out.push(Action::Send { to: self.edge, msg: Message::Profile(up), reliable: true });
         if self.edge_suspected(now_ms) {
             out.push(Action::Send { to: self.edge, msg: self.join_message(), reliable: true });
+            self.requeue_awaiting_edge(now_ms, out);
+        }
+    }
+
+    /// Device-side requeue (DESIGN.md §Churn): the edge has been silent
+    /// past the dead threshold, so every frame forwarded there and still
+    /// unresolved would otherwise hang until run end. Pull each one back
+    /// and run it locally — a late local result beats a lost one. Only the
+    /// churn-aware DDS family does this; baselines stay churn-blind.
+    /// Iteration order is the sorted `sent_to_edge` set — deterministic
+    /// for seeded replay.
+    fn requeue_awaiting_edge(&mut self, now_ms: f64, out: &mut Vec<Action>) {
+        if !self.policy.churn_aware() || self.sent_to_edge.is_empty() {
+            return;
+        }
+        // A depleted device cannot absorb the fallback work: the stranded
+        // frames are lost for good. The `awaiting` entry goes too — a
+        // straggling edge Result must not re-resolve a frame already
+        // counted as dropped (the live driver's resolution counter would
+        // double-count and end the run one outstanding frame early).
+        let depleted = self.battery.as_ref().is_some_and(|b| b.depleted());
+        let stranded = std::mem::take(&mut self.sent_to_edge);
+        for task in stranded {
+            // A frame whose result raced in is already out of `awaiting`.
+            let Some(img) = self.awaiting.get(&task).copied() else { continue };
+            out.push(Action::RecordRequeued { task });
+            if depleted {
+                self.awaiting.remove(&task);
+                out.push(Action::RecordDropped { task });
+                continue;
+            }
+            out.push(Action::RecordPlaced { task, placement: Placement::Local });
+            self.run_local(img, now_ms, out);
         }
     }
 
@@ -526,6 +597,208 @@ mod tests {
         out.clear();
         d.on_profile_tick(1_020.0, &mut out);
         assert!(!out.iter().any(|a| matches!(a, Action::Send { msg: Message::Join { .. }, .. })));
+    }
+
+    #[test]
+    fn dead_edge_strands_are_requeued_locally() {
+        let mut d = device(PolicyKind::Dds, 1).with_detector(detector());
+        let mut out = Vec::new();
+        // Two frames whose 500 ms budget forces ToEdge (local predicts
+        // 597 ms) — both go onto the wire awaiting edge results.
+        d.on_camera_frame(frame(1, 500.0), 0.0, &mut out);
+        let mut f2 = frame(2, 500.0);
+        f2.created_ms = 10.0;
+        d.on_camera_frame(f2, 10.0, &mut out);
+        assert_eq!(
+            out.iter()
+                .filter(|a| matches!(a, Action::Send { msg: Message::Image(_), .. }))
+                .count(),
+            2
+        );
+        out.clear();
+        // The edge goes silent past the dead threshold: the next profile
+        // tick pulls both frames back and runs them locally, in task order.
+        d.on_profile_tick(1_000.0, &mut out);
+        let requeued: Vec<TaskId> = out
+            .iter()
+            .filter_map(|a| match a {
+                Action::RecordRequeued { task } => Some(*task),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(requeued, vec![TaskId(1), TaskId(2)]);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordPlaced { task: TaskId(1), placement: Placement::Local }
+        )));
+        // One starts in the single container, the other queues.
+        assert!(out.iter().any(|a| matches!(a, Action::ContainerBusyUntil { task: TaskId(1), .. })));
+        assert_eq!(d.pool().queued_count(), 1);
+        // Requeue fires once: the next tick has nothing left to pull.
+        out.clear();
+        d.on_profile_tick(1_020.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordRequeued { .. })));
+        // Local completion records exactly one completion per frame, even
+        // if the edge's late result straggles in afterwards.
+        out.clear();
+        d.on_container_done(0, TaskId(1), 597.0, 1_600.0, &mut out);
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::RecordCompleted { task: TaskId(1), .. })));
+        out.clear();
+        d.on_message(
+            Message::Result {
+                task: TaskId(1),
+                processed_by: NodeId(0),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 223.0,
+            },
+            1_700.0,
+            &mut out,
+        );
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::RecordCompleted { .. })),
+            "late edge result must not double-complete a requeued frame"
+        );
+    }
+
+    #[test]
+    fn late_result_before_local_completion_wins_once() {
+        // The race in the other direction: requeued locally, but the edge
+        // result arrives before the local container finishes.
+        let mut d = device(PolicyKind::Dds, 1).with_detector(detector());
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 500.0), 0.0, &mut out);
+        out.clear();
+        d.on_profile_tick(1_000.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::RecordRequeued { task: TaskId(1) })));
+        out.clear();
+        d.on_message(
+            Message::Result {
+                task: TaskId(1),
+                processed_by: NodeId(0),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 223.0,
+            },
+            1_100.0,
+            &mut out,
+        );
+        assert!(out.iter().any(|a| matches!(a, Action::RecordCompleted { task: TaskId(1), .. })));
+        out.clear();
+        d.on_container_done(0, TaskId(1), 597.0, 1_597.0, &mut out);
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::RecordCompleted { .. })),
+            "local completion after the result must not double-complete"
+        );
+    }
+
+    #[test]
+    fn churn_blind_baselines_do_not_requeue() {
+        let mut d = device(PolicyKind::Aoe, 1).with_detector(detector());
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 500.0), 0.0, &mut out);
+        out.clear();
+        d.on_profile_tick(1_000.0, &mut out);
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::RecordRequeued { .. })),
+            "AOE is churn-blind: stranded frames stay stranded"
+        );
+    }
+
+    #[test]
+    fn device_local_frame_stays_local_under_every_policy() {
+        use crate::core::{AppId, PrivacyClass};
+        for policy in [PolicyKind::Aoe, PolicyKind::Eods, PolicyKind::Dds, PolicyKind::Random] {
+            let mut d = device(policy, 1);
+            let mut f = frame(2, 1.0); // hopeless deadline — irrelevant
+            f.constraint =
+                crate::core::Constraint::for_app(AppId(1), 1.0, PrivacyClass::DeviceLocal, 0);
+            let mut out = Vec::new();
+            d.on_camera_frame(f, 0.0, &mut out);
+            assert!(
+                !out.iter().any(|a| matches!(a, Action::Send { .. })),
+                "{policy}: device-local frame must never leave the device"
+            );
+            assert!(out.iter().any(|a| matches!(
+                a,
+                Action::RecordPlaced { placement: Placement::Local, .. }
+            )));
+        }
+    }
+
+    /// A battery that is already flat (1 mWh pack drained immediately).
+    fn dead_battery() -> crate::energy::Battery {
+        let mut b = crate::energy::Battery::new(1.0, 6_000.0, 2_500.0);
+        b.advance(3_600_000.0, 4);
+        assert!(b.depleted());
+        b
+    }
+
+    #[test]
+    fn depleted_device_drops_device_local_frames() {
+        use crate::core::{AppId, PrivacyClass};
+        // Depleted: cannot compute, and device-local forbids forwarding —
+        // the frame is lost outright (RecordDropped resolves it), never
+        // executed on a dead battery and never shipped off-device.
+        let mut d = device(PolicyKind::Dds, 1).with_battery(dead_battery());
+        let mut f = frame(1, 5_000.0);
+        f.constraint =
+            crate::core::Constraint::for_app(AppId(1), 5_000.0, PrivacyClass::DeviceLocal, 0);
+        let mut out = Vec::new();
+        d.on_camera_frame(f, 3_600_100.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::RecordDropped { task: TaskId(1) })));
+        assert!(!out.iter().any(|a| matches!(a, Action::Send { .. })));
+        assert!(!out.iter().any(|a| matches!(a, Action::ContainerBusyUntil { .. })));
+        assert_eq!(d.pool().busy_count(), 0);
+        // An *open* frame on the same depleted device still forwards
+        // (the pre-existing depleted-device behaviour).
+        let mut out = Vec::new();
+        let mut f2 = frame(2, 5_000.0);
+        f2.created_ms = 3_600_200.0;
+        d.on_camera_frame(f2, 3_600_200.0, &mut out);
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::Image(_), .. })));
+    }
+
+    #[test]
+    fn depleted_device_drops_instead_of_requeueing() {
+        // Dead edge + depleted battery: the stranded frames cannot fall
+        // back to local compute — they resolve as dropped rather than
+        // executing on a flat battery (or hanging forever).
+        let mut d = device(PolicyKind::Dds, 1)
+            .with_battery(dead_battery())
+            .with_detector(detector());
+        let mut out = Vec::new();
+        let mut f = frame(1, 500.0);
+        f.created_ms = 3_600_000.0;
+        d.on_camera_frame(f, 3_600_000.0, &mut out); // depleted → ToEdge
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::Image(_), .. })));
+        out.clear();
+        d.on_profile_tick(3_601_000.0, &mut out); // edge silent past dead
+        assert!(out.iter().any(|a| matches!(a, Action::RecordRequeued { task: TaskId(1) })));
+        assert!(out.iter().any(|a| matches!(a, Action::RecordDropped { task: TaskId(1) })));
+        assert!(!out.iter().any(|a| matches!(a, Action::ContainerBusyUntil { .. })));
+        // Dropped means dropped: a straggling edge Result for the frame
+        // must not re-resolve it (the live resolution counter would
+        // double-count and end the run one outstanding frame early).
+        out.clear();
+        d.on_message(
+            Message::Result {
+                task: TaskId(1),
+                processed_by: NodeId(0),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 223.0,
+            },
+            3_601_100.0,
+            &mut out,
+        );
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordCompleted { .. })));
     }
 
     #[test]

@@ -9,12 +9,14 @@
 pub mod churn;
 pub mod federation;
 pub mod figures;
+pub mod slo;
 pub mod tables;
 
 pub use churn::{
     apply_scenario, churn, churn_config, churn_run, render_churn, ChurnRow, ChurnScenario,
 };
 pub use federation::{fed, fed_config, fed_run, render_fed, FedRow};
+pub use slo::{render_slo, slo, slo_config, slo_run, SloRow, SLO_CELLS};
 pub use figures::{fig5, fig6, fig7, fig8, Fig5Row, Fig7Row, Fig8Row};
 pub use tables::{table2, table3, table4, table5, table6, TableRow};
 

@@ -1,0 +1,238 @@
+//! SLO experiment (beyond the paper, DESIGN.md §Constraints & QoS):
+//! per-application deadline satisfaction and privacy enforcement for a
+//! mixed three-app workload — the multi-tenant evaluation setting the
+//! Goudarzi/Luo surveys treat as standard for edge/fog scheduling.
+//!
+//! The app mix, per camera (every cell's first device streams all three):
+//!
+//! - **detector** — strict 800 ms deadline, `cell_local` (frames carry
+//!   location context that must not leave the cell), priority 2, fastest
+//!   arrival rate. The latency-critical tenant.
+//! - **blur** — 2 s deadline, `device_local` (faces never leave the
+//!   capturing device), priority 1. The privacy-critical tenant: its
+//!   frames must run at the origin no matter how loaded it is.
+//! - **analytics** — 10 s best-effort deadline, `open`, priority 0,
+//!   larger frames. The background tenant that must not starve the
+//!   others (the pool's priority queues dispatch it last).
+//!
+//! The sweep runs 1/2/4 cells × the paper's four policies × churn
+//! off/on (per-cell worker-device churn, the PR-2 injection), and reports
+//! per-app met fraction, latency percentiles, and the privacy-violation
+//! counter — which must be zero everywhere, churn or not: privacy is
+//! enforced by the node layer for every policy, including the requeue
+//! paths.
+
+use crate::config::SystemConfig;
+use crate::metrics::RunSummary;
+use crate::scheduler::PolicyKind;
+use crate::sim::workload::ArrivalPattern;
+use crate::sim::ScenarioBuilder;
+
+use super::churn::{apply_scenario, churn_config, ChurnScenario};
+
+/// Cell counts compared by the experiment.
+pub const SLO_CELLS: [usize; 3] = [1, 2, 4];
+
+/// The registered apps of the mixed workload, in `AppId` order.
+pub const SLO_APP_NAMES: [&str; 3] = ["detector", "blur", "analytics"];
+
+/// One (cells × churn × policy) run: the per-app tables plus run-level
+/// counters.
+#[derive(Debug, Clone)]
+pub struct SloRow {
+    pub n_cells: usize,
+    pub churn: bool,
+    pub policy: PolicyKind,
+    pub summary: RunSummary,
+    /// App names in `AppId` order (from the config registry).
+    pub app_names: Vec<String>,
+}
+
+/// The mixed 3-app federation config: the PR-2 churn layout (one camera +
+/// one worker device per cell) with the three-tenant `[[app]]` registry.
+/// `n_images` scales the strict detector stream; blur and analytics run at
+/// half the frame count on slower clocks so all three spans coincide.
+pub fn slo_config(n_cells: usize, n_images: u32) -> SystemConfig {
+    use crate::config::AppSpec;
+    use crate::core::PrivacyClass;
+    let mut cfg = churn_config(n_cells);
+    let half = (n_images / 2).max(1);
+    cfg.apps = vec![
+        AppSpec {
+            name: "detector".into(),
+            deadline_ms: 800.0,
+            privacy: PrivacyClass::CellLocal,
+            priority: 2,
+            n_images,
+            interval_ms: 150.0,
+            size_kb: 29.0,
+            side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+        },
+        AppSpec {
+            name: "blur".into(),
+            deadline_ms: 2_000.0,
+            privacy: PrivacyClass::DeviceLocal,
+            priority: 1,
+            n_images: half,
+            interval_ms: 300.0,
+            size_kb: 29.0,
+            side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+        },
+        AppSpec {
+            name: "analytics".into(),
+            deadline_ms: 10_000.0,
+            privacy: PrivacyClass::Open,
+            priority: 0,
+            n_images: half,
+            interval_ms: 300.0,
+            size_kb: 87.0,
+            side_px: 128,
+            pattern: ArrivalPattern::Uniform,
+        },
+    ];
+    cfg
+}
+
+/// Run one sweep cell.
+pub fn slo_run(
+    n_cells: usize,
+    policy: PolicyKind,
+    churn: bool,
+    seed: u64,
+    n_images: u32,
+) -> SloRow {
+    let mut cfg = slo_config(n_cells, n_images);
+    cfg.policy = policy;
+    if churn {
+        let span = cfg.span_ms();
+        apply_scenario(&mut cfg, ChurnScenario::DeviceChurn, span);
+    }
+    let app_names = cfg.effective_apps().iter().map(|a| a.name.clone()).collect();
+    let report = ScenarioBuilder::new(cfg).seed(seed).run();
+    SloRow { n_cells, churn, policy, summary: report.summary, app_names }
+}
+
+/// The full sweep: cells × churn off/on × the paper's four policies.
+pub fn slo(seed: u64, n_images: u32) -> Vec<SloRow> {
+    let mut rows = Vec::new();
+    for &n_cells in &SLO_CELLS {
+        for churn in [false, true] {
+            for policy in PolicyKind::PAPER {
+                rows.push(slo_run(n_cells, policy, churn, seed, n_images));
+            }
+        }
+    }
+    rows
+}
+
+/// Render the sweep: one block per (cells, churn), one line per policy ×
+/// app with met fraction / latency percentiles / violations, then the
+/// aggregate privacy line the CI smoke test asserts on.
+pub fn render_slo(rows: &[SloRow]) -> String {
+    let mut out = String::from(
+        "## SLO: per-app met fraction, mixed 3-app workload (detector/blur/analytics)\n",
+    );
+    for &n_cells in &SLO_CELLS {
+        for churn in [false, true] {
+            out.push_str(&format!(
+                "### {n_cells} cell(s), churn {}\n",
+                if churn { "on" } else { "off" }
+            ));
+            out.push_str(&format!(
+                "{:>10} {:>10} {:>7} {:>6} {:>7} {:>8} {:>9} {:>9} {:>9} {:>5}\n",
+                "policy", "app", "total", "met", "missed", "dropped", "met_frac", "p50_ms",
+                "p99_ms", "viol"
+            ));
+            for policy in PolicyKind::PAPER {
+                let Some(row) = rows
+                    .iter()
+                    .find(|r| r.n_cells == n_cells && r.churn == churn && r.policy == policy)
+                else {
+                    continue;
+                };
+                for a in &row.summary.per_app {
+                    let name = row
+                        .app_names
+                        .get(a.app.0 as usize)
+                        .map(String::as_str)
+                        .unwrap_or("?");
+                    let (p50, p99) = a
+                        .latency
+                        .as_ref()
+                        .map(|l| (format!("{:.0}", l.p50), format!("{:.0}", l.p99)))
+                        .unwrap_or_else(|| ("-".into(), "-".into()));
+                    out.push_str(&format!(
+                        "{:>10} {:>10} {:>7} {:>6} {:>7} {:>8} {:>9.3} {:>9} {:>9} {:>5}\n",
+                        policy.as_str(),
+                        name,
+                        a.total,
+                        a.met,
+                        a.missed,
+                        a.dropped,
+                        a.met_fraction(),
+                        p50,
+                        p99,
+                        a.violations,
+                    ));
+                }
+            }
+        }
+    }
+    let dds_violations: usize = rows
+        .iter()
+        .filter(|r| r.policy == PolicyKind::Dds)
+        .map(|r| r.summary.privacy_violations)
+        .sum();
+    let all_violations: usize = rows.iter().map(|r| r.summary.privacy_violations).sum();
+    out.push_str(&format!("DDS privacy violations (all scenarios): {dds_violations}\n"));
+    out.push_str(&format!("All-policy privacy violations: {all_violations}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{AppId, PrivacyClass};
+
+    #[test]
+    fn slo_config_shape() {
+        let c = slo_config(2, 40);
+        c.validate().unwrap();
+        assert_eq!(c.apps.len(), 3);
+        assert_eq!(c.apps[0].name, "detector");
+        assert_eq!(c.apps[0].privacy, PrivacyClass::CellLocal);
+        assert_eq!(c.apps[1].privacy, PrivacyClass::DeviceLocal);
+        assert_eq!(c.apps[2].privacy, PrivacyClass::Open);
+        // Spans coincide: detector 40×150 = blur/analytics 20×300.
+        assert_eq!(c.span_ms(), 6_000.0);
+        // Per-cell cameras: both cells originate all three app streams.
+        let streams = ScenarioBuilder::camera_streams(&c);
+        assert_eq!(streams.len(), 2 * 3);
+    }
+
+    #[test]
+    fn slo_run_produces_per_app_tables_with_zero_violations() {
+        let row = slo_run(1, PolicyKind::Dds, false, 7, 24);
+        let total: usize = row.summary.per_app.iter().map(|a| a.total).sum();
+        assert_eq!(total, row.summary.total);
+        assert_eq!(row.summary.per_app.len(), 3);
+        assert_eq!(row.summary.privacy_violations, 0);
+        // Blur frames all execute at their origin (device-local).
+        let blur = row.summary.app(AppId(1)).unwrap();
+        assert_eq!(blur.violations, 0);
+        assert_eq!(row.app_names[1], "blur");
+    }
+
+    #[test]
+    fn render_has_per_app_columns_and_privacy_line() {
+        let rows = vec![slo_run(1, PolicyKind::Dds, false, 7, 16)];
+        let s = render_slo(&rows);
+        assert!(s.contains("met_frac"));
+        assert!(s.contains("detector"));
+        assert!(s.contains("blur"));
+        assert!(s.contains("analytics"));
+        assert!(s.contains("DDS privacy violations (all scenarios): 0"));
+    }
+}

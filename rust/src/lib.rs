@@ -34,6 +34,6 @@ pub mod server;
 pub mod sim;
 pub mod util;
 
-pub use crate::core::{Constraint, ImageMeta, NodeClass, NodeId, TaskId};
+pub use crate::core::{AppId, Constraint, ImageMeta, NodeClass, NodeId, PrivacyClass, TaskId};
 pub use crate::scheduler::{PolicyKind, SchedulerPolicy};
 pub use crate::sim::{RunReport, ScenarioBuilder};

@@ -166,6 +166,10 @@ fn apply_edge_action(
         Action::RecordRequeued { task } => {
             recorder.inner.lock().unwrap().requeued(task);
         }
+        Action::RecordDropped { .. } => {
+            // Lost for good; the record's default verdict is Dropped.
+            recorder.resolved.fetch_add(1, Ordering::SeqCst);
+        }
     }
 }
 
@@ -182,6 +186,15 @@ impl LiveCluster {
         let device_ids = ScenarioBuilder::device_ids(cfg);
         let edge_ids: Vec<NodeId> = topo.edges().collect();
         let multi_cell = edge_ids.len() > 1;
+
+        // Node → cell-edge map for the recorder's privacy-scope checks —
+        // the same derivation the sim engine installs.
+        recorder.inner.lock().unwrap().set_node_cells(
+            topo.nodes()
+                .iter()
+                .filter_map(|s| topo.cell_edge_of(s.id).map(|e| (s.id, e)))
+                .collect(),
+        );
 
         // Track image sides for jobs (task → side), cluster-wide.
         let sides: SideMap = Arc::new(Mutex::new(HashMap::new()));
@@ -545,13 +558,7 @@ impl LiveCluster {
                     std::thread::sleep(Duration::from_secs_f64((due - now) / 1e3));
                 }
                 f.created_ms = clock.now_ms();
-                recorder.inner.lock().unwrap().created(
-                    f.task,
-                    f.origin,
-                    f.size_kb,
-                    f.constraint.deadline_ms,
-                    f.created_ms,
-                );
+                recorder.inner.lock().unwrap().created(&f);
                 let _ = tx.send(LiveEvent::Frame(f));
             }
         });
@@ -842,6 +849,9 @@ fn device_main(
                 }
                 Action::RecordRequeued { task } => {
                     recorder.inner.lock().unwrap().requeued(task);
+                }
+                Action::RecordDropped { .. } => {
+                    recorder.resolved.fetch_add(1, Ordering::SeqCst);
                 }
             }
         }

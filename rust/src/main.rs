@@ -7,7 +7,7 @@
 //!                 [--interval MS] [--deadline MS] [--seed S] [--csv out.csv]
 //! edge-dds sweep  [--config cfg.toml] [--images N] [--interval MS]
 //!                 [--deadline MS]                  # all paper policies
-//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|fed|churn|all
+//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|fed|churn|slo|all
 //! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
 //!                 [--interval MS] [--deadline MS] [--side PX]
 //! ```
@@ -73,13 +73,14 @@ fn print_usage() {
          \x20 edge-dds sim    [--config F] [--policy P] [--images N] [--interval MS]\n\
          \x20                 [--deadline MS] [--seed S] [--csv OUT]\n\
          \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
-         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|all\n\
+         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|slo|all\n\
          \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
          \x20                 [--interval MS] [--deadline MS] [--side PX]\n\
          \n\
          POLICIES: aor aoe eods dds dds-no-avail dds-energy round-robin random\n\
          FEDERATION: [[cell]] tables + device `cell = N` + [federation] in --config\n\
-         CHURN: [[churn]] events + [churn_random] + [failure] thresholds in --config"
+         CHURN: [[churn]] events + [churn_random] + [failure] thresholds in --config\n\
+         APPS: [[app]] tables (name, deadline_ms, privacy, priority, rate) in --config"
     );
 }
 
@@ -224,6 +225,15 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
         let rows = experiments::churn(seed);
         println!("{}", experiments::render_churn(&rows));
     }
+    if all || exp == "slo" {
+        matched = true;
+        // --images scales the strict detector stream (the CI smoke step
+        // runs a reduced scenario); default mirrors the other sweeps.
+        let n_images: u32 =
+            flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(120);
+        let rows = experiments::slo(seed, n_images);
+        println!("{}", experiments::render_slo(&rows));
+    }
     if !matched {
         bail!("unknown experiment `{exp}`");
     }
@@ -247,7 +257,8 @@ fn cmd_live(flags: &Flags) -> Result<()> {
     // Churn: the same expanded trace the simulator injects (scripted
     // [[churn]] plus seeded [churn_random] cycles), driven on the wall
     // clock via the kill/restart hooks (edge targets are sim-only).
-    let span = cfg.workload.n_images as f64 * cfg.workload.interval_ms;
+    // The span covers the whole app registry ([[app]] streams).
+    let span = cfg.span_ms();
     cluster.schedule_churn(&cfg.churn.expanded_events(cfg.seed, span, cfg.devices.len()));
 
     // Per-cell workload streams: each cell's camera originates its own

@@ -7,8 +7,33 @@ pub mod writer;
 pub use recorder::{Recorder, TaskRecord};
 pub use writer::{csv_line, write_csv, write_json_summary};
 
-use crate::core::Verdict;
+use crate::core::{AppId, Verdict};
 use crate::util::Summary;
+
+/// Aggregated outcome of one application's tasks within a run (DESIGN.md
+/// §Constraints & QoS). One row per registered app, AppId-sorted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppSummary {
+    pub app: AppId,
+    pub total: usize,
+    pub met: usize,
+    pub missed: usize,
+    pub dropped: usize,
+    /// End-to-end latency summary over the app's *completed* tasks.
+    pub latency: Option<Summary>,
+    /// Privacy-scope violations observed on the app's frames (must be 0).
+    pub violations: usize,
+}
+
+impl AppSummary {
+    pub fn met_fraction(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.met as f64 / self.total as f64
+        }
+    }
+}
 
 /// Aggregated outcome of one run (one policy × one workload).
 ///
@@ -33,6 +58,14 @@ pub struct RunSummary {
     pub requeued: usize,
     /// Requeued tasks that still completed after re-placement.
     pub replaced: usize,
+    /// Privacy-scope violations observed across the whole run — off-device
+    /// observations of `device_local` frames, off-cell observations of
+    /// `cell_local` frames. The node-layer filters make this structurally
+    /// zero; the counter is the acceptance proof.
+    pub privacy_violations: usize,
+    /// Per-application outcome tables, AppId-sorted (a registry-less run
+    /// has exactly one row, the default app).
+    pub per_app: Vec<AppSummary>,
 }
 
 impl RunSummary {
@@ -42,6 +75,11 @@ impl RunSummary {
         } else {
             self.met as f64 / self.total as f64
         }
+    }
+
+    /// The per-app row for `app`, if any of its frames ran.
+    pub fn app(&self, app: AppId) -> Option<&AppSummary> {
+        self.per_app.iter().find(|a| a.app == app)
     }
 }
 

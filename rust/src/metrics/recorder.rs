@@ -1,17 +1,21 @@
 //! Per-task lifecycle recording.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
-use crate::core::{NodeId, Placement, TaskId, Verdict};
+use crate::core::{AppId, ImageMeta, NodeId, Placement, PrivacyClass, TaskId, Verdict};
 use crate::util::Summary;
 
-use super::RunSummary;
+use super::{AppSummary, RunSummary};
 
 /// Full lifecycle of one image task.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TaskRecord {
     pub task: TaskId,
     pub origin: NodeId,
+    /// Owning application (`AppId::DEFAULT` for registry-less configs).
+    pub app: AppId,
+    /// Disclosure scope the frame was created under.
+    pub privacy: PrivacyClass,
     pub size_kb: f64,
     pub deadline_ms: f64,
     pub created_ms: f64,
@@ -25,6 +29,11 @@ pub struct TaskRecord {
     /// Times this task was pulled back from a node declared dead and
     /// re-placed (churn; 0 in failure-free runs).
     pub requeues: u32,
+    /// Times this frame was *observed* outside its privacy scope — sent
+    /// off-device under `device_local`, or placed/executed off-cell under
+    /// `cell_local`. Structurally zero under the node-layer privacy
+    /// filters; the counter is the proof (DESIGN.md §Constraints & QoS).
+    pub violations: u32,
     pub verdict: Verdict,
 }
 
@@ -39,6 +48,9 @@ impl TaskRecord {
 pub struct Recorder {
     records: HashMap<TaskId, TaskRecord>,
     order: Vec<TaskId>,
+    /// Node → its cell's edge server, for the cell-local violation check.
+    /// Empty (unset) disables the cell check — the device check still runs.
+    node_cells: BTreeMap<NodeId, NodeId>,
 }
 
 impl Recorder {
@@ -46,38 +58,76 @@ impl Recorder {
         Self::default()
     }
 
-    /// Register task creation (workload generator).
-    pub fn created(
-        &mut self,
-        task: TaskId,
-        origin: NodeId,
-        size_kb: f64,
-        deadline_ms: f64,
-        created_ms: f64,
-    ) {
-        self.order.push(task);
+    /// Install the node → cell-edge map used to detect off-cell
+    /// observations of `cell_local` frames. Both drivers derive it from
+    /// the topology at startup.
+    pub fn set_node_cells(&mut self, node_cells: BTreeMap<NodeId, NodeId>) {
+        self.node_cells = node_cells;
+    }
+
+    /// Register task creation (workload generator). The frame's app and
+    /// privacy descriptor ride along so the per-app tables and violation
+    /// checks need no registry access.
+    pub fn created(&mut self, img: &ImageMeta) {
+        self.order.push(img.task);
         self.records.insert(
-            task,
+            img.task,
             TaskRecord {
-                task,
-                origin,
-                size_kb,
-                deadline_ms,
-                created_ms,
+                task: img.task,
+                origin: img.origin,
+                app: img.constraint.app,
+                privacy: img.constraint.privacy,
+                size_kb: img.size_kb,
+                deadline_ms: img.constraint.deadline_ms,
+                created_ms: img.created_ms,
                 placement: Placement::Local,
                 executed_on: None,
                 started_ms: None,
                 completed_ms: None,
                 process_ms: None,
                 requeues: 0,
+                violations: 0,
                 verdict: Verdict::Dropped, // until completed
             },
         );
     }
 
+    /// True when `node` is outside `origin`'s privacy scope.
+    fn out_of_scope(
+        node_cells: &BTreeMap<NodeId, NodeId>,
+        privacy: PrivacyClass,
+        origin: NodeId,
+        node: NodeId,
+    ) -> bool {
+        match privacy {
+            PrivacyClass::Open => false,
+            PrivacyClass::DeviceLocal => node != origin,
+            PrivacyClass::CellLocal => match (node_cells.get(&origin), node_cells.get(&node)) {
+                (Some(a), Some(b)) => a != b,
+                // Unknown membership: can't prove an off-cell observation.
+                _ => false,
+            },
+        }
+    }
+
     pub fn placed(&mut self, task: TaskId, placement: Placement) {
         if let Some(r) = self.records.get_mut(&task) {
             r.placement = placement;
+            // Placement itself is an observation: ToEdge ships the bytes
+            // off-device, ToPeerEdge ships them off-cell.
+            let violated = match (r.privacy, placement) {
+                (PrivacyClass::DeviceLocal, Placement::ToEdge) => true,
+                (PrivacyClass::DeviceLocal, Placement::Offload(n)) => n != r.origin,
+                (PrivacyClass::DeviceLocal, Placement::ToPeerEdge(_)) => true,
+                (PrivacyClass::CellLocal, Placement::ToPeerEdge(_)) => true,
+                (PrivacyClass::CellLocal, Placement::Offload(n)) => {
+                    Self::out_of_scope(&self.node_cells, r.privacy, r.origin, n)
+                }
+                _ => false,
+            };
+            if violated {
+                r.violations += 1;
+            }
         }
     }
 
@@ -93,6 +143,10 @@ impl Recorder {
         if let Some(r) = self.records.get_mut(&task) {
             r.executed_on = Some(on);
             r.started_ms = Some(at_ms);
+            // Execution site check: the strongest observation of all.
+            if Self::out_of_scope(&self.node_cells, r.privacy, r.origin, on) {
+                r.violations += 1;
+            }
         }
     }
 
@@ -148,6 +202,33 @@ impl Recorder {
             .iter()
             .filter(|r| r.requeues > 0 && r.completed_ms.is_some())
             .count();
+        let privacy_violations =
+            records.iter().map(|r| r.violations as usize).sum::<usize>();
+
+        // Per-app tables, AppId-sorted (BTreeMap — deterministic rows).
+        // Records are Copy, so partitioning into owned vectors lets the
+        // run-level verdict counter be reused verbatim.
+        let mut by_app: BTreeMap<AppId, Vec<TaskRecord>> = BTreeMap::new();
+        for r in &records {
+            by_app.entry(r.app).or_default().push(*r);
+        }
+        let per_app = by_app
+            .into_iter()
+            .map(|(app, recs)| {
+                let (met, missed, dropped) = super::count_verdicts(&recs);
+                let lats: Vec<f64> = recs.iter().filter_map(|r| r.e2e_ms()).collect();
+                AppSummary {
+                    app,
+                    total: recs.len(),
+                    met,
+                    missed,
+                    dropped,
+                    latency: Summary::of(&lats),
+                    violations: recs.iter().map(|r| r.violations as usize).sum(),
+                }
+            })
+            .collect();
+
         RunSummary {
             total: records.len(),
             met,
@@ -163,6 +244,8 @@ impl Recorder {
             forwarded,
             requeued,
             replaced,
+            privacy_violations,
+            per_app,
         }
     }
 }
@@ -170,11 +253,45 @@ impl Recorder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::Constraint;
+
+    /// Creation helper mirroring the old positional signature.
+    fn create(
+        rec: &mut Recorder,
+        task: u64,
+        origin: u32,
+        size_kb: f64,
+        deadline_ms: f64,
+        created_ms: f64,
+    ) {
+        create_app(rec, task, origin, size_kb, deadline_ms, created_ms, Constraint::deadline(deadline_ms));
+    }
+
+    fn create_app(
+        rec: &mut Recorder,
+        task: u64,
+        origin: u32,
+        size_kb: f64,
+        deadline_ms: f64,
+        created_ms: f64,
+        mut constraint: Constraint,
+    ) {
+        constraint.deadline_ms = deadline_ms;
+        rec.created(&ImageMeta {
+            task: TaskId(task),
+            origin: NodeId(origin),
+            size_kb,
+            side_px: 64,
+            created_ms,
+            constraint,
+            seq: task,
+        });
+    }
 
     #[test]
     fn lifecycle_met() {
         let mut rec = Recorder::new();
-        rec.created(TaskId(1), NodeId(1), 87.0, 1000.0, 0.0);
+        create(&mut rec, 1, 1, 87.0, 1000.0, 0.0);
         rec.placed(TaskId(1), Placement::ToEdge);
         rec.started(TaskId(1), NodeId(0), 10.0);
         rec.completed(TaskId(1), 500.0, 400.0);
@@ -182,14 +299,17 @@ mod tests {
         assert_eq!(r.verdict, Verdict::Met);
         assert_eq!(r.e2e_ms(), Some(500.0));
         assert_eq!(r.executed_on, Some(NodeId(0)));
+        assert_eq!(r.app, AppId::DEFAULT);
+        assert_eq!(r.privacy, PrivacyClass::Open);
+        assert_eq!(r.violations, 0);
     }
 
     #[test]
     fn lifecycle_missed_and_dropped() {
         let mut rec = Recorder::new();
-        rec.created(TaskId(1), NodeId(1), 87.0, 100.0, 0.0);
+        create(&mut rec, 1, 1, 87.0, 100.0, 0.0);
         rec.completed(TaskId(1), 500.0, 400.0);
-        rec.created(TaskId(2), NodeId(1), 87.0, 100.0, 0.0);
+        create(&mut rec, 2, 1, 87.0, 100.0, 0.0);
         let s = rec.summarize();
         assert_eq!(s.met, 0);
         assert_eq!(s.missed, 1);
@@ -200,7 +320,7 @@ mod tests {
     #[test]
     fn boundary_exactly_on_deadline_is_met() {
         let mut rec = Recorder::new();
-        rec.created(TaskId(1), NodeId(1), 29.0, 100.0, 50.0);
+        create(&mut rec, 1, 1, 29.0, 100.0, 50.0);
         rec.completed(TaskId(1), 150.0, 80.0);
         assert_eq!(rec.get(TaskId(1)).unwrap().verdict, Verdict::Met);
     }
@@ -208,10 +328,10 @@ mod tests {
     #[test]
     fn local_fraction() {
         let mut rec = Recorder::new();
-        rec.created(TaskId(1), NodeId(1), 29.0, 9999.0, 0.0);
+        create(&mut rec, 1, 1, 29.0, 9999.0, 0.0);
         rec.started(TaskId(1), NodeId(1), 1.0);
         rec.completed(TaskId(1), 2.0, 1.0);
-        rec.created(TaskId(2), NodeId(1), 29.0, 9999.0, 0.0);
+        create(&mut rec, 2, 1, 29.0, 9999.0, 0.0);
         rec.started(TaskId(2), NodeId(0), 1.0);
         rec.completed(TaskId(2), 2.0, 1.0);
         let s = rec.summarize();
@@ -222,16 +342,16 @@ mod tests {
     fn requeue_counters() {
         let mut rec = Recorder::new();
         // Task 1: requeued once, completes → replaced.
-        rec.created(TaskId(1), NodeId(1), 29.0, 10_000.0, 0.0);
+        create(&mut rec, 1, 1, 29.0, 10_000.0, 0.0);
         rec.requeued(TaskId(1));
         rec.started(TaskId(1), NodeId(0), 500.0);
         rec.completed(TaskId(1), 900.0, 223.0);
         // Task 2: requeued twice, never completes.
-        rec.created(TaskId(2), NodeId(1), 29.0, 10_000.0, 0.0);
+        create(&mut rec, 2, 1, 29.0, 10_000.0, 0.0);
         rec.requeued(TaskId(2));
         rec.requeued(TaskId(2));
         // Task 3: untouched by churn.
-        rec.created(TaskId(3), NodeId(1), 29.0, 10_000.0, 0.0);
+        create(&mut rec, 3, 1, 29.0, 10_000.0, 0.0);
         let s = rec.summarize();
         assert_eq!(s.requeued, 2);
         assert_eq!(s.replaced, 1);
@@ -245,9 +365,100 @@ mod tests {
     fn records_in_creation_order() {
         let mut rec = Recorder::new();
         for i in [5u64, 2, 9] {
-            rec.created(TaskId(i), NodeId(1), 29.0, 1.0, 0.0);
+            create(&mut rec, i, 1, 29.0, 1.0, 0.0);
         }
         let ids: Vec<u64> = rec.records().iter().map(|r| r.task.0).collect();
         assert_eq!(ids, vec![5, 2, 9]);
+    }
+
+    #[test]
+    fn per_app_tables_are_app_sorted_and_complete() {
+        let mut rec = Recorder::new();
+        // App 1: one met frame; app 0: one dropped; interleaved creation.
+        create_app(&mut rec, 1, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(1), 1_000.0, PrivacyClass::Open, 2));
+        create(&mut rec, 2, 1, 29.0, 1_000.0, 0.0);
+        rec.started(TaskId(1), NodeId(1), 10.0);
+        rec.completed(TaskId(1), 500.0, 400.0);
+        let s = rec.summarize();
+        assert_eq!(s.per_app.len(), 2);
+        assert_eq!(s.per_app[0].app, AppId(0));
+        assert_eq!(s.per_app[1].app, AppId(1));
+        assert_eq!(s.per_app[0].dropped, 1);
+        assert_eq!(s.per_app[1].met, 1);
+        assert!(s.per_app[0].latency.is_none());
+        assert_eq!(s.per_app[1].latency.as_ref().unwrap().mean, 500.0);
+        assert_eq!(s.per_app[1].met_fraction(), 1.0);
+        assert_eq!(s.per_app[0].met_fraction(), 0.0);
+        // Per-app totals partition the run total.
+        assert_eq!(s.per_app.iter().map(|a| a.total).sum::<usize>(), s.total);
+    }
+
+    #[test]
+    fn privacy_violations_detected_on_placement_and_execution() {
+        let mut cells = BTreeMap::new();
+        // Cell A: edge 0, device 1. Cell B: edge 3, device 4.
+        for (n, e) in [(0u32, 0u32), (1, 0), (3, 3), (4, 3)] {
+            cells.insert(NodeId(n), NodeId(e));
+        }
+        let mut rec = Recorder::new();
+        rec.set_node_cells(cells);
+        // Device-local frame shipped to the edge and executed there: one
+        // violation at placement, one at execution.
+        create_app(&mut rec, 1, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(1), 1_000.0, PrivacyClass::DeviceLocal, 0));
+        rec.placed(TaskId(1), Placement::ToEdge);
+        rec.started(TaskId(1), NodeId(0), 10.0);
+        assert_eq!(rec.get(TaskId(1)).unwrap().violations, 2);
+        // Cell-local frame forwarded to a peer cell and executed there.
+        create_app(&mut rec, 2, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(2), 1_000.0, PrivacyClass::CellLocal, 0));
+        rec.placed(TaskId(2), Placement::ToPeerEdge(NodeId(3)));
+        rec.started(TaskId(2), NodeId(4), 10.0);
+        assert_eq!(rec.get(TaskId(2)).unwrap().violations, 2);
+        // Cell-local frame offloaded *within* its cell: no violation.
+        create_app(&mut rec, 3, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(2), 1_000.0, PrivacyClass::CellLocal, 0));
+        rec.placed(TaskId(3), Placement::ToEdge);
+        rec.started(TaskId(3), NodeId(0), 10.0);
+        assert_eq!(rec.get(TaskId(3)).unwrap().violations, 0);
+        // Device-local frame kept local: no violation.
+        create_app(&mut rec, 4, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(1), 1_000.0, PrivacyClass::DeviceLocal, 0));
+        rec.placed(TaskId(4), Placement::Local);
+        rec.started(TaskId(4), NodeId(1), 10.0);
+        assert_eq!(rec.get(TaskId(4)).unwrap().violations, 0);
+        let s = rec.summarize();
+        assert_eq!(s.privacy_violations, 4);
+        // The per-app tables carry their own violation counts.
+        let app1 = s.per_app.iter().find(|a| a.app == AppId(1)).unwrap();
+        assert_eq!(app1.violations, 2);
+        let app2 = s.per_app.iter().find(|a| a.app == AppId(2)).unwrap();
+        assert_eq!(app2.violations, 2);
+    }
+
+    #[test]
+    fn open_frames_never_count_violations() {
+        let mut rec = Recorder::new();
+        create(&mut rec, 1, 1, 29.0, 1_000.0, 0.0);
+        rec.placed(TaskId(1), Placement::ToPeerEdge(NodeId(3)));
+        rec.started(TaskId(1), NodeId(4), 10.0);
+        assert_eq!(rec.get(TaskId(1)).unwrap().violations, 0);
+        assert_eq!(rec.summarize().privacy_violations, 0);
+    }
+
+    #[test]
+    fn cell_check_disabled_without_node_map() {
+        // Without a node→cell map the cell-local check cannot prove an
+        // off-cell observation (device-local still can).
+        let mut rec = Recorder::new();
+        create_app(&mut rec, 1, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(2), 1_000.0, PrivacyClass::CellLocal, 0));
+        rec.started(TaskId(1), NodeId(9), 10.0);
+        assert_eq!(rec.get(TaskId(1)).unwrap().violations, 0);
+        create_app(&mut rec, 2, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(1), 1_000.0, PrivacyClass::DeviceLocal, 0));
+        rec.started(TaskId(2), NodeId(9), 10.0);
+        assert_eq!(rec.get(TaskId(2)).unwrap().violations, 1);
     }
 }

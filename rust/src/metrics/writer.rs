@@ -12,7 +12,7 @@ use crate::core::{Placement, Verdict};
 
 /// One CSV line for a task record (see [`CSV_HEADER`]).
 pub const CSV_HEADER: &str =
-    "task,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,requeues,verdict";
+    "task,app,privacy,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,requeues,violations,verdict";
 
 pub fn csv_line(r: &TaskRecord) -> String {
     let placement = match r.placement {
@@ -28,8 +28,10 @@ pub fn csv_line(r: &TaskRecord) -> String {
     };
     let opt = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_default();
     format!(
-        "{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{},{}",
+        "{},{},{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{},{},{}",
         r.task.0,
+        r.app.0,
+        r.privacy.as_str(),
         r.origin.0,
         r.size_kb,
         r.deadline_ms,
@@ -41,6 +43,7 @@ pub fn csv_line(r: &TaskRecord) -> String {
         opt(r.process_ms),
         opt(r.e2e_ms()),
         r.requeues,
+        r.violations,
         verdict,
     )
 }
@@ -56,20 +59,40 @@ pub fn write_csv(path: &Path, records: &[TaskRecord]) -> Result<()> {
     Ok(())
 }
 
-/// Serialize a run summary as a small JSON object (hand-rolled).
-pub fn summary_json(name: &str, s: &RunSummary) -> String {
-    let lat = s
-        .latency
-        .as_ref()
+fn latency_json(l: &Option<crate::util::Summary>) -> String {
+    l.as_ref()
         .map(|l| {
             format!(
                 r#"{{"mean":{:.3},"p50":{:.3},"p90":{:.3},"p99":{:.3},"max":{:.3}}}"#,
                 l.mean, l.p50, l.p90, l.p99, l.max
             )
         })
-        .unwrap_or_else(|| "null".into());
+        .unwrap_or_else(|| "null".into())
+}
+
+/// Serialize a run summary as a small JSON object (hand-rolled). The
+/// `apps` array is AppId-sorted (the recorder builds it from a BTreeMap),
+/// so repeated same-seed runs serialize byte-identically.
+pub fn summary_json(name: &str, s: &RunSummary) -> String {
+    let apps: Vec<String> = s
+        .per_app
+        .iter()
+        .map(|a| {
+            format!(
+                r#"{{"app":{},"total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"violations":{},"latency":{}}}"#,
+                a.app.0,
+                a.total,
+                a.met,
+                a.missed,
+                a.dropped,
+                a.met_fraction(),
+                a.violations,
+                latency_json(&a.latency)
+            )
+        })
+        .collect();
     format!(
-        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"latency":{}}}"#,
+        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{},"latency":{},"apps":[{}]}}"#,
         name,
         s.total,
         s.met,
@@ -80,7 +103,9 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         s.forwarded,
         s.requeued,
         s.replaced,
-        lat
+        s.privacy_violations,
+        latency_json(&s.latency),
+        apps.join(",")
     )
 }
 
@@ -96,12 +121,20 @@ pub fn write_json_summary(path: &Path, entries: &[(String, RunSummary)]) -> Resu
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::{NodeId, TaskId};
+    use crate::core::{Constraint, ImageMeta, NodeId, TaskId};
     use crate::metrics::Recorder;
 
     fn record() -> TaskRecord {
         let mut rec = Recorder::new();
-        rec.created(TaskId(1), NodeId(1), 87.0, 1000.0, 0.0);
+        rec.created(&ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 87.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(1000.0),
+            seq: 1,
+        });
         rec.placed(TaskId(1), Placement::Offload(NodeId(2)));
         rec.started(TaskId(1), NodeId(2), 10.0);
         rec.completed(TaskId(1), 500.0, 400.0);
@@ -114,9 +147,12 @@ mod tests {
         let fields: Vec<&str> = line.split(',').collect();
         assert_eq!(fields.len(), CSV_HEADER.split(',').count());
         assert_eq!(fields[0], "1");
-        assert_eq!(fields[5], "offload:n2");
-        assert_eq!(fields[11], "0"); // requeues
-        assert_eq!(fields[12], "met");
+        assert_eq!(fields[1], "0"); // default app
+        assert_eq!(fields[2], "open");
+        assert_eq!(fields[7], "offload:n2");
+        assert_eq!(fields[13], "0"); // requeues
+        assert_eq!(fields[14], "0"); // violations
+        assert_eq!(fields[15], "met");
     }
 
     #[test]
@@ -134,13 +170,24 @@ mod tests {
     #[test]
     fn summary_json_shape() {
         let mut rec = Recorder::new();
-        rec.created(TaskId(1), NodeId(1), 87.0, 1000.0, 0.0);
+        rec.created(&ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 87.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(1000.0),
+            seq: 1,
+        });
         rec.started(TaskId(1), NodeId(1), 1.0);
         rec.completed(TaskId(1), 500.0, 400.0);
         let js = summary_json("dds", &rec.summarize());
         assert!(js.contains(r#""name":"dds""#));
         assert!(js.contains(r#""met":1"#));
         assert!(js.contains(r#""latency":{"#));
+        assert!(js.contains(r#""privacy_violations":0"#));
+        // A registry-less run carries exactly one per-app row: app 0.
+        assert!(js.contains(r#""apps":[{"app":0,"#));
     }
 
     #[test]
@@ -148,5 +195,6 @@ mod tests {
         let rec = Recorder::new();
         let js = summary_json("empty", &rec.summarize());
         assert!(js.contains(r#""latency":null"#));
+        assert!(js.contains(r#""apps":[]"#));
     }
 }

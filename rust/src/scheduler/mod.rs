@@ -158,6 +158,14 @@ pub trait SchedulerPolicy: Send {
     /// federation-capable policies only, never when `ctx.forwarded` —
     /// `ToPeerEdge(edge)` to shed the task to a peer cell.
     fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement;
+
+    /// Whether the policy reacts to churn signals (edge suspicion, device-
+    /// side requeue of frames awaiting a dead edge — DESIGN.md §Churn).
+    /// Baselines are churn-blind by design: that contrast is what the
+    /// churn experiments measure.
+    fn churn_aware(&self) -> bool {
+        false
+    }
 }
 
 /// Policy selector (config string → constructor).

@@ -1,7 +1,7 @@
 //! Policy implementations: DDS (§V.B.3 of the paper) and the comparison
 //! groups AOR / AOE / EODS, plus ablations.
 
-use crate::core::{NodeClass, NodeId, Placement};
+use crate::core::{NodeClass, NodeId, Placement, PrivacyClass};
 use crate::profile::PredictInput;
 use crate::util::SplitMix64;
 
@@ -31,6 +31,12 @@ fn pinned_edge(ctx: &EdgeCtx) -> Option<Placement> {
 // ---------------------------------------------------------------------
 
 fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
+    // Privacy hard filter (DESIGN.md §Constraints & QoS): only `open`
+    // frames may cross the backhaul — `cell_local` and `device_local`
+    // scopes end at the cell boundary, so peers are not candidates.
+    if ctx.img.constraint.privacy != PrivacyClass::Open {
+        return None;
+    }
     // Images that already crossed a backhaul must not hop again.
     if ctx.forwarded {
         return None;
@@ -195,6 +201,12 @@ impl SchedulerPolicy for Dds {
         if let Some(p) = pinned_device(ctx) {
             return p;
         }
+        // Privacy hard filter: a device-local frame never leaves its
+        // origin, whatever the prediction says (the node layer enforces
+        // this for every policy; DDS also decides it natively).
+        if ctx.img.constraint.privacy == PrivacyClass::DeviceLocal {
+            return Placement::Local;
+        }
         // Churn fallback (DESIGN.md §Churn): a suspected-dead edge server
         // would swallow the frame — a late local result beats a lost one.
         if ctx.edge_suspected {
@@ -223,7 +235,12 @@ impl SchedulerPolicy for Dds {
         let budget = ctx.remaining_ms();
 
         // Candidate end devices, by predicted total time; only fresh
-        // profiles are trusted.
+        // profiles are trusted. The ranking is EDF-flavoured (DESIGN.md
+        // §Constraints & QoS): feasibility is predicted-completion vs the
+        // frame's deadline, the winner is the candidate finishing with the
+        // most slack left (= minimum predicted completion), and exact
+        // prediction ties break deterministically by NodeId rather than by
+        // table-registration order (which churn rejoins can permute).
         let mut best: Option<(f64, crate::core::NodeId)> = None;
         for dev in ctx.table.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
             // Never offload back through a dead link, and never to the
@@ -243,7 +260,9 @@ impl SchedulerPolicy for Dds {
             let predictor = ctx.predictors.for_class(dev.class);
             let inp = PredictInput::from_state(dev, ctx.img.size_kb, Some(link));
             let t = predictor.predict_total_ms(&inp);
-            if t <= budget && best.map_or(true, |(bt, _)| t < bt) {
+            let better =
+                t <= budget && best.map_or(true, |(bt, bn)| t < bt || (t == bt && dev.node < bn));
+            if better {
                 best = Some((t, dev.node));
             }
         }
@@ -255,6 +274,10 @@ impl SchedulerPolicy for Dds {
             return p;
         }
         Placement::Local
+    }
+
+    fn churn_aware(&self) -> bool {
+        true
     }
 }
 
@@ -287,6 +310,10 @@ impl SchedulerPolicy for DdsNoAvail {
     fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement {
         self.0.decide_edge(ctx)
     }
+
+    fn churn_aware(&self) -> bool {
+        true
+    }
 }
 
 /// Extension policy (the paper's §VI future work): DDS with battery
@@ -317,6 +344,11 @@ impl SchedulerPolicy for DdsEnergy {
     fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement {
         if let Some(p) = pinned_device(ctx) {
             return p;
+        }
+        // Privacy beats battery conservation: a device-local frame stays
+        // put even on a low-reserve device.
+        if ctx.img.constraint.privacy == PrivacyClass::DeviceLocal {
+            return Placement::Local;
         }
         // Even a battery-conserving device keeps frames local when the
         // edge is suspected down — forwarding would just lose them.
@@ -378,6 +410,10 @@ impl SchedulerPolicy for DdsEnergy {
             return p;
         }
         Placement::Local
+    }
+
+    fn churn_aware(&self) -> bool {
+        true
     }
 }
 
@@ -871,6 +907,86 @@ mod tests {
                 );
             }
         }
+    }
+
+    // ---- privacy hard filters (DESIGN.md §Constraints & QoS) ---------
+
+    #[test]
+    fn device_local_frames_never_leave_the_device() {
+        use crate::core::AppId;
+        // 500 ms budget < 597 ms local prediction: DDS would normally
+        // forward — the device-local scope forbids it.
+        let mut im = img(0, 500.0);
+        im.constraint = crate::core::Constraint::for_app(
+            AppId(1),
+            500.0,
+            crate::core::PrivacyClass::DeviceLocal,
+            0,
+        );
+        let mut dds = Dds::new();
+        assert_eq!(dds.decide_device(&device_ctx(&im, 0, 1, 0)), Placement::Local);
+        // The energy variant keeps it local even below the battery reserve.
+        let mut e = DdsEnergy::new(20.0);
+        let mut ctx = device_ctx(&im, 0, 1, 0);
+        ctx.local.battery_pct = Some(5.0);
+        assert_eq!(e.decide_device(&ctx), Placement::Local);
+    }
+
+    #[test]
+    fn cell_local_frames_never_cross_the_backhaul() {
+        use crate::core::AppId;
+        // Cell exhausted, fresh idle peer available: an open frame
+        // federates, a cell-local one must stay (edge queue).
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0));
+        let mut p = Dds::new();
+        let open = img(0, 5_000.0);
+        assert_eq!(
+            p.decide_edge(&fed_ctx(&open, &t, &peers, 4)),
+            Placement::ToPeerEdge(NodeId(3))
+        );
+        let mut bound = img(1, 5_000.0);
+        bound.constraint = crate::core::Constraint::for_app(
+            AppId(2),
+            5_000.0,
+            crate::core::PrivacyClass::CellLocal,
+            0,
+        );
+        assert_eq!(p.decide_edge(&fed_ctx(&bound, &t, &peers, 4)), Placement::Local);
+        // Cell-local frames may still offload *within* the cell.
+        let t2 = table_with_r2(0, 2);
+        assert_eq!(
+            p.decide_edge(&edge_ctx(&bound, &t2, &wifi)),
+            Placement::Offload(NodeId(2))
+        );
+        // The energy variant applies the same backhaul filter.
+        let mut e = DdsEnergy::new(20.0);
+        assert_eq!(e.decide_edge(&fed_ctx(&bound, &t, &peers, 4)), Placement::Local);
+    }
+
+    #[test]
+    fn edge_prediction_ties_break_by_node_id() {
+        // Two identical idle devices → identical predictions; the lower
+        // NodeId must win regardless of registration order (EDF-style
+        // deterministic tie-break).
+        use crate::core::message::ProfileUpdate;
+        let mut t = ProfileTable::new();
+        for node in [5u32, 2] {
+            t.register(NodeId(node), NodeClass::RaspberryPi, 2, 0.0);
+            t.apply(&ProfileUpdate {
+                node: NodeId(node),
+                busy_containers: 0,
+                warm_containers: 2,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+                sent_ms: 0.0,
+            });
+        }
+        let im = img(0, 5_000.0);
+        let mut p = Dds::new();
+        assert_eq!(p.decide_edge(&edge_ctx(&im, &t, &wifi)), Placement::Offload(NodeId(2)));
     }
 
     // ---- churn / failure suspicion (DESIGN.md §Churn) ----------------

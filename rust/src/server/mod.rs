@@ -11,11 +11,11 @@
 //! accepts images peers forward when their cells are exhausted, and routes
 //! results for forwarded work back through the originating edge.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::container::ContainerPool;
 use crate::core::message::{EdgeSummary, Message, UserRequest};
-use crate::core::{ImageMeta, NodeClass, NodeId, Placement, TaskId};
+use crate::core::{ImageMeta, NodeClass, NodeId, Placement, PrivacyClass, TaskId};
 use crate::device::Action;
 use crate::net::Topology;
 use crate::profile::{PeerTable, ProfileTable};
@@ -42,8 +42,11 @@ pub struct EdgeNode {
     forwarded_from: HashMap<TaskId, NodeId>,
     /// Where each in-flight task this edge placed remotely currently sits
     /// (cell device, or peer edge for `ToPeerEdge`). Consulted by the
-    /// failure detector to requeue work stranded on a dead node.
-    offload_target: HashMap<TaskId, NodeId>,
+    /// failure detector to requeue work stranded on a dead node. Ordered
+    /// map: the requeue sweep iterates it and its order feeds the output
+    /// row stream — deterministic by construction, not by sorting after
+    /// the fact (DESIGN.md §Determinism).
+    offload_target: BTreeMap<TaskId, NodeId>,
     /// Heartbeat thresholds; `None` disables churn detection (classic
     /// behaviour, no pings, no eviction).
     detector: Option<FailureDetector>,
@@ -70,7 +73,7 @@ impl EdgeNode {
             inflight: HashMap::new(),
             peers: PeerTable::new(),
             forwarded_from: HashMap::new(),
-            offload_target: HashMap::new(),
+            offload_target: BTreeMap::new(),
             detector: None,
             suspects: BTreeSet::new(),
         }
@@ -222,6 +225,29 @@ impl EdgeNode {
     /// never hop to another peer, and their placement record (made at the
     /// originating edge as `ToPeerEdge`) is left untouched.
     fn on_image(&mut self, img: ImageMeta, now_ms: f64, forwarded: bool, out: &mut Vec<Action>) {
+        // Privacy hard filter, part 1 (DESIGN.md §Constraints & QoS): a
+        // device-local frame at the edge is a protocol violation — no
+        // compliant device forwards one. Return it to its origin
+        // *untracked*: the origin executes and resolves its own frames
+        // without reporting a Result, so inflight/offload_target entries
+        // would leak forever — and a later failure-driven requeue would
+        // ping-pong the frame back to the (possibly dead) origin.
+        if img.constraint.privacy == PrivacyClass::DeviceLocal {
+            log::warn!(
+                "edge {}: device-local frame {} arrived off-device; returning to origin {}",
+                self.id,
+                img.task,
+                img.origin
+            );
+            if !forwarded {
+                out.push(Action::RecordPlaced {
+                    task: img.task,
+                    placement: Placement::Offload(img.origin),
+                });
+            }
+            out.push(Action::Send { to: img.origin, msg: Message::Image(img), reliable: false });
+            return;
+        }
         let placement = {
             let topology = &self.topology;
             let edge_id = self.id;
@@ -239,6 +265,14 @@ impl EdgeNode {
                 suspects: &self.suspects,
             };
             self.policy.decide_edge(&ctx)
+        };
+        // Privacy hard filter, part 2, enforced for every policy —
+        // including the churn requeue path, which re-enters here: a
+        // cell-local frame never crosses the backhaul, whatever the
+        // policy decided.
+        let placement = match (img.constraint.privacy, placement) {
+            (PrivacyClass::CellLocal, Placement::ToPeerEdge(_)) => Placement::Local,
+            (_, p) => p,
         };
 
         match placement {
@@ -409,14 +443,14 @@ impl EdgeNode {
     /// through the normal edge decision (the dead node is already out of
     /// the tables, so it cannot be re-picked).
     fn requeue_from(&mut self, node: NodeId, now_ms: f64, out: &mut Vec<Action>) {
-        let mut tasks: Vec<TaskId> = self
+        // BTreeMap iteration is TaskId-ordered — the requeue order (and
+        // through it the record stream) is deterministic by construction.
+        let tasks: Vec<TaskId> = self
             .offload_target
             .iter()
             .filter(|&(_, &target)| target == node)
             .map(|(&task, _)| task)
             .collect();
-        // HashMap iteration order is not deterministic; requeue order is.
-        tasks.sort();
         for task in tasks {
             self.offload_target.remove(&task);
             let Some(img) = self.inflight.remove(&task) else { continue };
@@ -865,6 +899,112 @@ mod tests {
         assert!(out
             .iter()
             .any(|a| matches!(a, Action::Send { msg: Message::JoinAck { .. }, .. })));
+    }
+
+    // ---- privacy hard filters (DESIGN.md §Constraints & QoS) ---------
+
+    fn cell_local_img(task: u64, deadline: f64, origin: u32) -> ImageMeta {
+        let mut m = img(task, deadline, origin);
+        m.constraint = crate::core::Constraint::for_app(
+            crate::core::AppId(1),
+            deadline,
+            PrivacyClass::CellLocal,
+            0,
+        );
+        m
+    }
+
+    #[test]
+    fn cell_local_image_never_forwarded_to_peer() {
+        let mut e = fed_edge(PolicyKind::Dds);
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        // Saturate the pool; the fifth *open* image federates …
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 5_000.0, 1)), 1.0, &mut out);
+        }
+        out.clear();
+        e.on_message(Message::Image(cell_local_img(5, 5_000.0, 1)), 2.0, &mut out);
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::Send { msg: Message::Forward { .. }, .. })),
+            "cell-local frame must not cross the backhaul"
+        );
+        assert_eq!(e.pool().queued_count(), 1, "it queues in the cell instead");
+    }
+
+    #[test]
+    fn requeued_cell_local_image_stays_in_cell() {
+        // The churn requeue path re-places through on_image — the privacy
+        // filter must hold there too: a cell-local frame whose executor
+        // died is NOT shed to an idle peer, even with the pool saturated.
+        let mut e = fed_edge(PolicyKind::Dds).with_detector(detector());
+        join(&mut e, 1, 1, 0.0); // single container: only task 9 fits there
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        // The cell-local image offloads to idle device 1 (within-cell: ok).
+        e.on_message(Message::Image(cell_local_img(9, 50_000.0, 2)), 1.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Image(_), .. }
+        )));
+        // Saturate the pool so the requeue would *want* to federate.
+        for t in 10..=13 {
+            e.on_message(Message::Image(img(t, 50_000.0, 2)), 1.0, &mut out);
+        }
+        assert_eq!(e.pool().busy_count(), 4);
+        // Keep the peer's gossip fresh while device 1 dies silently.
+        out.clear();
+        e.on_message(gossip_from(3, 0, 4, 450.0), 450.0, &mut out);
+        e.check_liveness(500.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::RecordRequeued { task: TaskId(9) })));
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::Send { msg: Message::Forward { .. }, .. })),
+            "requeued cell-local frame must not cross the backhaul"
+        );
+        assert_eq!(e.pool().queued_count(), 1);
+    }
+
+    #[test]
+    fn stray_device_local_image_is_returned_to_origin() {
+        // No DDS path produces this (the device layer clamps), but the
+        // edge must still never execute a device-local frame off-device.
+        let mut e = edge(PolicyKind::Aoe);
+        join(&mut e, 1, 2, 0.0);
+        let mut m = img(3, 5_000.0, 1);
+        m.constraint = crate::core::Constraint::for_app(
+            crate::core::AppId(2),
+            5_000.0,
+            PrivacyClass::DeviceLocal,
+            0,
+        );
+        let mut out = Vec::new();
+        e.on_message(Message::Image(m), 10.0, &mut out);
+        assert_eq!(e.pool().busy_count(), 0, "edge must not run it");
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Image(_), .. }
+        )));
+        // Untracked: the origin resolves its own frames without reporting
+        // a Result, so the edge must hold no relay state for this task
+        // (a tracked entry would leak and ping-pong on failure requeue).
+        let mut out = Vec::new();
+        e.on_message(
+            Message::Result {
+                task: TaskId(3),
+                processed_by: NodeId(1),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 597.0,
+            },
+            700.0,
+            &mut out,
+        );
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::Send { .. })),
+            "no relay state may exist for an untracked device-local frame"
+        );
+        // And the MP table was not optimistically bumped for it.
+        assert_eq!(e.table().get(NodeId(1)).unwrap().busy_containers, 0);
     }
 
     // ---- churn / failure detection (DESIGN.md §Churn) ----------------

@@ -147,13 +147,23 @@ impl Engine {
         horizon_ms: f64,
     ) -> Self {
         let n = nodes.len();
+        // Node → cell-edge map for the recorder's privacy-scope checks
+        // (off-cell observation of `cell_local` frames).
+        let mut recorder = Recorder::new();
+        recorder.set_node_cells(
+            topology
+                .nodes()
+                .iter()
+                .filter_map(|s| topology.cell_edge_of(s.id).map(|e| (s.id, e)))
+                .collect(),
+        );
         Self {
             now_ms: 0.0,
             heap: BinaryHeap::new(),
             seq: 0,
             nodes,
             topology,
-            recorder: Recorder::new(),
+            recorder,
             rng: SplitMix64::new(seed ^ 0x9D5F_1CE4),
             profile_period_ms,
             gossip_period_ms: 100.0,
@@ -230,13 +240,7 @@ impl Engine {
         // repeated reallocation during the arrival burst.
         self.heap.reserve(frames.len() * 4);
         for img in frames {
-            self.recorder.created(
-                img.task,
-                img.origin,
-                img.size_kb,
-                img.constraint.deadline_ms,
-                img.created_ms,
-            );
+            self.recorder.created(img);
             self.created += 1;
             self.schedule(img.created_ms, Ev::CameraFrame(*img));
         }
@@ -509,6 +513,12 @@ impl Engine {
                 }
                 Action::RecordCompleted { task, at_ms, process_ms } => {
                     self.recorder.completed(task, at_ms, process_ms);
+                    self.resolved.insert(task);
+                }
+                Action::RecordDropped { task } => {
+                    // Lost for good (e.g. depleted device holding a
+                    // device-local frame): resolves as Dropped — the
+                    // recorder's default verdict — so the run moves on.
                     self.resolved.insert(task);
                 }
             }

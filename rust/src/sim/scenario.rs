@@ -107,22 +107,21 @@ impl ScenarioBuilder {
         ids
     }
 
-    /// Per-cell frame streams implied by the config: `(config device
-    /// index, frames)`. Every cell with a camera originates its own
-    /// stream of `workload.n_images` frames in a disjoint TaskId block,
-    /// from the cell's first camera device in config order — per-cell
-    /// workload streams, so churn in one cell stresses cross-cell offload
-    /// realistically. Single-cell configs keep exactly one stream from
-    /// the first camera (classic seed, classic TaskIds — bit-identical to
-    /// the historic behaviour, and multi-camera single-cell scenarios
-    /// like `examples/mall_scenario.rs` still pick the stream origin by
-    /// device order). A camera that joins mid-run (churn `Join` event)
-    /// starts its cell's stream at its join time.
+    /// Per-cell, per-app frame streams implied by the config: `(config
+    /// device index, frames)`. Every cell with a camera originates one
+    /// stream *per registered app* (DESIGN.md §Constraints & QoS), each in
+    /// a disjoint TaskId block, from the cell's first camera device in
+    /// config order — so churn in one cell stresses cross-cell offload
+    /// realistically and every app's QoS is measured per cell. A
+    /// registry-less config reduces to exactly the historic per-cell
+    /// single-stream derivation: same seeds, same TaskIds, bit-identical
+    /// frames. A camera that joins mid-run (churn `Join` event) starts its
+    /// cell's streams at its join time.
     ///
     /// Shared by the sim and live drivers — one derivation, two drivers.
     pub fn camera_streams(cfg: &SystemConfig) -> Vec<(usize, Vec<ImageMeta>)> {
         let device_ids = Self::device_ids(cfg);
-        let wl = &cfg.workload;
+        let apps = cfg.effective_apps();
         // The streaming camera of each cell: first camera device in
         // config order, cells ordered by their streaming camera's config
         // position (single-cell ⇒ the classic first camera).
@@ -134,21 +133,30 @@ impl ScenarioBuilder {
                 cameras.push(i);
             }
         }
-        cameras
-            .into_iter()
-            .enumerate()
-            .map(|(k, i)| {
+        let mut out = Vec::with_capacity(cameras.len() * apps.len());
+        // Stream ordinal drives the per-stream seed; TaskId blocks are
+        // cumulative because apps stream different frame counts. With one
+        // (default) app both reduce to the historic `k`-based derivation.
+        let mut stream = 0u64;
+        let mut task_base = 0u64;
+        for i in cameras {
+            let start = cfg.churn.device_join_ms(i).unwrap_or(0.0);
+            for (a, app) in apps.iter().enumerate() {
+                let wl = app.workload(&cfg.workload);
                 let seed = (cfg.seed ^ 0xFEED)
-                    .wrapping_add((k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-                let start = cfg.churn.device_join_ms(i).unwrap_or(0.0);
-                let frames = ImageStream::new(*wl, device_ids[i], SplitMix64::new(seed))
+                    .wrapping_add(stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let frames = ImageStream::new(wl, device_ids[i], SplitMix64::new(seed))
                     .pattern(wl.pattern)
-                    .task_base(k as u64 * wl.n_images as u64)
+                    .task_base(task_base)
                     .starting_at(start)
+                    .app(crate::core::AppId(a as u16), app.privacy, app.priority)
                     .generate();
-                (i, frames)
-            })
-            .collect()
+                out.push((i, frames));
+                stream += 1;
+                task_base += wl.n_images as u64;
+            }
+        }
+        out
     }
 
     /// Latest start time across per-cell streams (a joining cell's stream
@@ -172,7 +180,7 @@ impl ScenarioBuilder {
         device_ids: &[NodeId],
         edge_ids: &[NodeId],
     ) -> Vec<(f64, NodeId, bool)> {
-        let span = cfg.workload.n_images as f64 * cfg.workload.interval_ms;
+        let span = cfg.span_ms();
         let mut evs: Vec<(f64, NodeId, bool)> = cfg
             .churn
             .expanded_events(cfg.seed, span, cfg.devices.len())
@@ -300,12 +308,18 @@ impl ScenarioBuilder {
         // Horizon: generously past the last arrival plus queue drain time.
         // Churn strands some frames forever (origin died mid-flight, bytes
         // blackholed before detection) — don't idle ten minutes for them.
-        let wl = &cfg.workload;
-        let span = wl.n_images as f64 * wl.interval_ms;
+        // Span and deadline are taken across the whole app registry (the
+        // registry-less reduction is the classic [workload]-only formula).
+        let span = cfg.span_ms();
+        let max_deadline = cfg
+            .effective_apps()
+            .iter()
+            .map(|a| a.deadline_ms)
+            .fold(cfg.workload.deadline_ms, f64::max);
         let horizon = if churn_on {
-            latest_start + span + wl.deadline_ms.max(1_000.0) * 4.0 + 60_000.0
+            latest_start + span + max_deadline.max(1_000.0) * 4.0 + 60_000.0
         } else {
-            span + wl.deadline_ms.max(1_000.0) * 20.0 + 600_000.0
+            span + max_deadline.max(1_000.0) * 20.0 + 600_000.0
         };
 
         let mut eng = Engine::new(nodes, topo, cfg.seed, cfg.profile_period_ms, horizon);

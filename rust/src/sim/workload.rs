@@ -4,7 +4,7 @@
 //! event-driven bursts).
 
 use crate::config::WorkloadConfig;
-use crate::core::{Constraint, ImageMeta, NodeId, TaskId};
+use crate::core::{AppId, Constraint, ImageMeta, NodeId, PrivacyClass, TaskId};
 use crate::util::SplitMix64;
 
 /// How image arrivals are spaced.
@@ -43,6 +43,12 @@ pub struct ImageStream {
     start_ms: f64,
     task_base: u64,
     pattern: ArrivalPattern,
+    /// Constraint descriptor stamped on every frame (DESIGN.md
+    /// §Constraints & QoS). The defaults reproduce the registry-less
+    /// constraint exactly.
+    app: AppId,
+    privacy: PrivacyClass,
+    priority: u8,
 }
 
 impl ImageStream {
@@ -55,7 +61,18 @@ impl ImageStream {
             start_ms: 0.0,
             task_base: 0,
             pattern: ArrivalPattern::Uniform,
+            app: AppId::DEFAULT,
+            privacy: PrivacyClass::Open,
+            priority: 0,
         }
+    }
+
+    /// Stamp frames with an app descriptor (multi-app registry streams).
+    pub fn app(mut self, app: AppId, privacy: PrivacyClass, priority: u8) -> Self {
+        self.app = app;
+        self.privacy = privacy;
+        self.priority = priority;
+        self
     }
 
     /// Offset all arrivals by `start_ms` (e.g. session establishment time).
@@ -140,7 +157,12 @@ impl ImageStream {
                 size_kb: (self.cfg.size_kb + jitter).max(1.0),
                 side_px: self.cfg.side_px,
                 created_ms: self.start_ms + t,
-                constraint: Constraint::deadline(self.cfg.deadline_ms),
+                constraint: Constraint::for_app(
+                    self.app,
+                    self.cfg.deadline_ms,
+                    self.privacy,
+                    self.priority,
+                ),
                 seq,
             });
         }
@@ -218,6 +240,25 @@ mod tests {
         let seqs: Vec<u64> = imgs.iter().map(|i| i.seq).collect();
         assert_eq!(seqs, vec![0, 1, 2]);
         assert!(imgs.iter().all(|i| i.origin == NodeId(4)));
+    }
+
+    #[test]
+    fn app_descriptor_stamped_on_every_frame() {
+        let s = ImageStream::new(cfg(3, 100.0), NodeId(1), SplitMix64::new(1)).app(
+            AppId(2),
+            PrivacyClass::CellLocal,
+            4,
+        );
+        for img in s.generate() {
+            assert_eq!(img.constraint.app, AppId(2));
+            assert_eq!(img.constraint.privacy, PrivacyClass::CellLocal);
+            assert_eq!(img.constraint.priority, 4);
+            assert_eq!(img.constraint.deadline_ms, 5000.0);
+        }
+        // Default descriptor = registry-less constraint, exactly.
+        let legacy = ImageStream::new(cfg(1, 100.0), NodeId(1), SplitMix64::new(1)).generate();
+        assert_eq!(legacy[0].constraint, Constraint::deadline(5000.0));
+        assert!(legacy[0].constraint.is_default_descriptor());
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! Integration: the application-constraint subsystem (DESIGN.md
+//! §Constraints & QoS) — per-app SLO tables for the mixed 3-app workload,
+//! privacy enforcement under churn (including the requeue paths),
+//! device-side requeue of frames awaiting a dead edge, legacy equivalence
+//! of registry-less configs, and byte-identity of the per-app output
+//! tables across seeded replays.
+
+use edge_dds::config::SystemConfig;
+use edge_dds::core::{AppId, Placement, PrivacyClass};
+use edge_dds::experiments::{apply_scenario, slo_config, slo_run, ChurnScenario};
+use edge_dds::metrics::writer::summary_json;
+use edge_dds::metrics::{csv_line, TaskRecord};
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::ScenarioBuilder;
+
+/// The 2-cell mixed-app scenario with per-cell worker churn injected.
+fn churny_slo_cfg(policy: PolicyKind) -> SystemConfig {
+    let mut cfg = slo_config(2, 40);
+    cfg.policy = policy;
+    let span = cfg.span_ms();
+    apply_scenario(&mut cfg, ChurnScenario::DeviceChurn, span);
+    cfg
+}
+
+fn assert_in_scope(rec: &TaskRecord, cfg: &SystemConfig) {
+    let ids = ScenarioBuilder::device_ids(cfg);
+    // Recompute each node's cell from the config-order device ids.
+    let cell_of = |n: edge_dds::core::NodeId| -> Option<u32> {
+        if let Some(pos) = ids.iter().position(|&d| d == n) {
+            return Some(cfg.devices[pos].cell);
+        }
+        // Edge ids are the gaps: cell c's edge precedes its devices.
+        let edges: Vec<edge_dds::core::NodeId> =
+            ScenarioBuilder::new(cfg.clone()).topology().edges().collect();
+        edges.iter().position(|&e| e == n).map(|c| c as u32)
+    };
+    match rec.privacy {
+        PrivacyClass::Open => {}
+        PrivacyClass::DeviceLocal => {
+            assert_eq!(rec.placement, Placement::Local, "{:?} left its device", rec.task);
+            if let Some(on) = rec.executed_on {
+                assert_eq!(on, rec.origin, "{:?} executed off-device", rec.task);
+            }
+        }
+        PrivacyClass::CellLocal => {
+            assert!(
+                !matches!(rec.placement, Placement::ToPeerEdge(_)),
+                "{:?} crossed the backhaul",
+                rec.task
+            );
+            if let Some(on) = rec.executed_on {
+                assert_eq!(
+                    cell_of(on),
+                    cell_of(rec.origin),
+                    "{:?} executed off-cell",
+                    rec.task
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_three_app_workload_reports_per_app_tables() {
+    let row = slo_run(2, PolicyKind::Dds, false, 7, 40);
+    assert_eq!(row.summary.per_app.len(), 3);
+    assert_eq!(row.app_names, vec!["detector", "blur", "analytics"]);
+    // Per-app rows partition the run: 2 cameras × (40 + 20 + 20).
+    assert_eq!(row.summary.total, 2 * 80);
+    let totals: Vec<usize> = row.summary.per_app.iter().map(|a| a.total).collect();
+    assert_eq!(totals, vec![80, 40, 40]);
+    assert_eq!(row.summary.privacy_violations, 0);
+    // Every app completes work and reports latency percentiles.
+    for a in &row.summary.per_app {
+        assert!(a.met > 0, "app {} met nothing", a.app);
+        let lat = a.latency.as_ref().expect("completed frames → latency summary");
+        assert!(lat.p50 <= lat.p99);
+    }
+}
+
+#[test]
+fn privacy_never_violated_for_dds_even_under_churn() {
+    // The acceptance bar: device_local / cell_local frames are never
+    // observed off-device / off-cell — including the churn requeue paths.
+    let cfg = churny_slo_cfg(PolicyKind::Dds);
+    let r = ScenarioBuilder::new(cfg.clone()).seed(11).run();
+    assert_eq!(r.summary.privacy_violations, 0, "DDS must never violate privacy");
+    assert!(
+        r.summary.requeued > 0,
+        "worker churn must exercise the requeue path for the proof to bite"
+    );
+    for rec in &r.records {
+        assert_eq!(rec.violations, 0);
+        assert_in_scope(rec, &cfg);
+    }
+    // Accounting identity still holds under churn.
+    assert_eq!(r.summary.met + r.summary.missed + r.summary.dropped, r.summary.total);
+}
+
+#[test]
+fn privacy_holds_for_every_policy() {
+    // Privacy is enforced by the node layer, not by policy goodwill: even
+    // placement-blind baselines never ship a frame out of scope.
+    for policy in PolicyKind::PAPER {
+        let cfg = churny_slo_cfg(policy);
+        let r = ScenarioBuilder::new(cfg.clone()).seed(3).run();
+        assert_eq!(
+            r.summary.privacy_violations, 0,
+            "{policy}: privacy must hold for every policy"
+        );
+        for rec in &r.records {
+            assert_in_scope(rec, &cfg);
+        }
+    }
+}
+
+#[test]
+fn dds_meets_more_strict_deadlines_than_blind_baselines() {
+    // The point of constraint-aware placement: under the mixed workload
+    // the strict detector app must not do worse under DDS than under the
+    // static parity split.
+    let dds = slo_run(2, PolicyKind::Dds, false, 7, 40);
+    let eods = slo_run(2, PolicyKind::Eods, false, 7, 40);
+    let d = dds.summary.app(AppId(0)).unwrap().met;
+    let e = eods.summary.app(AppId(0)).unwrap().met;
+    assert!(d >= e, "dds detector met {d} must not trail eods {e}");
+}
+
+#[test]
+fn device_side_requeue_resolves_frames_awaiting_dead_edge() {
+    // ROADMAP follow-up: frames already forwarded to an edge that dies
+    // must resolve via local fallback instead of hanging until run end.
+    // Single cell, DDS, deadline low enough that the camera forwards a
+    // steady share of frames; the edge fails mid-run and never recovers.
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    cfg.workload.n_images = 60;
+    cfg.workload.interval_ms = 100.0;
+    cfg.workload.deadline_ms = 700.0; // < 2-container local service time under load
+    cfg.churn.events.push(edge_dds::config::ChurnEvent {
+        at_ms: 2_000.0,
+        target: edge_dds::config::ChurnTarget::Edge(0),
+        kind: edge_dds::config::ChurnKind::Fail,
+    });
+    let r = ScenarioBuilder::new(cfg).seed(5).run();
+    assert_eq!(r.summary.total, 60);
+    assert_eq!(r.summary.met + r.summary.missed + r.summary.dropped, 60);
+    // Some frames were in flight toward the dead edge and came back.
+    assert!(r.summary.requeued > 0, "expected device-side requeues");
+    assert!(
+        r.summary.replaced > 0,
+        "requeued frames must complete via local fallback, not hang"
+    );
+    // Frames the dead edge swallowed do not linger as un-started drops
+    // with a requeue marker: every requeued frame either completed or is
+    // still accounted.
+    let stranded = r
+        .records
+        .iter()
+        .filter(|rec| rec.requeues > 0 && rec.completed_ms.is_none())
+        .count();
+    assert_eq!(stranded, 0, "device-side requeue must resolve stranded frames");
+}
+
+#[test]
+fn registry_less_config_is_bit_identical_to_explicit_default_app() {
+    // Acceptance: an absent [[app]] registry replays byte-identically to
+    // the pre-registry single-app behaviour. The in-repo witnesses (no
+    // pre-PR binary exists to diff against): (1) this test — a config
+    // whose single [[app]] mirrors [workload] under the default
+    // descriptor produces the *same* streams, records, summaries and
+    // event counts as the registry-less config; (2) the wire tests prove
+    // default-app frames encode byte-identically to the pre-registry
+    // layout; (3) the stream-derivation test proves registry-less
+    // camera_streams reproduce the historic frames; (4) fresh single-app
+    // arrivals provably enqueue FIFO (pool unit test) — only churn
+    // requeues / cross-cell forwards, which re-enter a non-empty queue,
+    // dispatch differently (EDF-first, deliberately; see DESIGN.md §4c).
+    let mut base = SystemConfig::default();
+    base.policy = PolicyKind::Dds;
+    base.workload.n_images = 80;
+    base.workload.interval_ms = 50.0;
+    base.workload.deadline_ms = 2_000.0;
+
+    let mut explicit = base.clone();
+    explicit.apps = vec![edge_dds::config::AppSpec::default_from_workload(&base.workload)];
+
+    let sa = ScenarioBuilder::camera_streams(&base);
+    let sb = ScenarioBuilder::camera_streams(&explicit);
+    assert_eq!(sa, sb, "streams must be identical frame-for-frame");
+
+    let ra = ScenarioBuilder::new(base).seed(9).run();
+    let rb = ScenarioBuilder::new(explicit).seed(9).run();
+    assert_eq!(ra.summary, rb.summary);
+    assert_eq!(ra.records, rb.records);
+    assert_eq!(ra.events, rb.events);
+    assert_eq!(ra.virtual_ms, rb.virtual_ms);
+    // And the textual outputs are byte-identical too.
+    assert_eq!(
+        summary_json("x", &ra.summary),
+        summary_json("x", &rb.summary)
+    );
+    let la: Vec<String> = ra.records.iter().map(csv_line).collect();
+    let lb: Vec<String> = rb.records.iter().map(csv_line).collect();
+    assert_eq!(la, lb);
+}
+
+#[test]
+fn seeded_slo_replay_is_byte_identical_including_per_app_tables() {
+    // Satellite: the seeded-replay byte-identity bar extended to the new
+    // per-app tables — two same-seed runs of the churny mixed workload
+    // must serialize byte-for-byte equal CSV and JSON (per-app rows
+    // included).
+    let mk = || ScenarioBuilder::new(churny_slo_cfg(PolicyKind::Dds)).seed(17).run();
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.summary, b.summary);
+    assert_eq!(a.records, b.records);
+    assert_eq!(a.events, b.events);
+    let ja = summary_json("slo", &a.summary);
+    let jb = summary_json("slo", &b.summary);
+    assert_eq!(ja, jb);
+    assert!(ja.contains(r#""apps":[{"app":0,"#), "per-app table must serialize");
+    let ca: Vec<String> = a.records.iter().map(csv_line).collect();
+    let cb: Vec<String> = b.records.iter().map(csv_line).collect();
+    assert_eq!(ca, cb);
+    // The CSV rows carry the app/privacy columns.
+    assert!(ca.iter().any(|l| l.contains(",device_local,")));
+    assert!(ca.iter().any(|l| l.contains(",cell_local,")));
+}
+
+#[test]
+fn priority_app_preempts_best_effort_in_the_queue() {
+    // Saturate a single cell hard enough that the pool queues: the strict
+    // high-priority detector must end with a met fraction at least as
+    // good as best-effort analytics' deadline-normalized share would
+    // suggest — concretely, detector latency p50 stays below analytics'.
+    let row = slo_run(1, PolicyKind::Dds, false, 13, 60);
+    let det = row.summary.app(AppId(0)).unwrap();
+    let ana = row.summary.app(AppId(2)).unwrap();
+    let (Some(dl), Some(al)) = (det.latency.as_ref(), ana.latency.as_ref()) else {
+        panic!("both apps must complete frames");
+    };
+    assert!(
+        dl.p50 <= al.p50,
+        "high-priority detector p50 {} must not exceed best-effort p50 {}",
+        dl.p50,
+        al.p50
+    );
+}

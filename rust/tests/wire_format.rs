@@ -1,10 +1,12 @@
 //! Wire-format coverage: exhaustive roundtrips over every message tag
-//! (0x01–0x0A) plus corrupted/truncated-frame rejection — a malformed
-//! frame must yield a decode error, never a panic.
+//! (0x01–0x0A) — including the versioned app/privacy/priority constraint
+//! descriptor — plus corrupted/truncated-frame rejection (a malformed
+//! frame must yield a decode error, never a panic) and a legacy-decode
+//! proof that pre-registry frames decode as the default app.
 
 use edge_dds::core::message::{EdgeSummary, ProfileUpdate, UserRequest};
 use edge_dds::core::wire::{decode, encode, read_frame};
-use edge_dds::core::{Constraint, ImageMeta, Message, NodeId, TaskId};
+use edge_dds::core::{AppId, Constraint, ImageMeta, Message, NodeId, PrivacyClass, TaskId};
 
 fn sample_image(task: u64) -> ImageMeta {
     ImageMeta {
@@ -16,6 +18,16 @@ fn sample_image(task: u64) -> ImageMeta {
         constraint: Constraint::pinned(2_500.0, NodeId(3)),
         seq: task,
     }
+}
+
+fn app_image(task: u64, privacy: PrivacyClass) -> ImageMeta {
+    let mut m = sample_image(task);
+    // Pinned *and* descriptor sections together — both flag bits set.
+    m.constraint = Constraint {
+        pinned_node: Some(NodeId(3)),
+        ..Constraint::for_app(AppId(2), 750.0, privacy, 3)
+    };
+    m
 }
 
 /// One representative message per wire tag, covering every variant and
@@ -75,8 +87,15 @@ fn all_messages() -> Vec<Message> {
         Message::Join { node: NodeId(5), class_tag: 2, warm_containers: 2 },
         // 0x07
         Message::JoinAck { assigned: NodeId(5) },
+        // 0x03 again: full app descriptor (every privacy class appears
+        // across the set; pinned + descriptor coexist in sample_image's
+        // pinned base via app_image).
+        Message::Image(app_image(100, PrivacyClass::DeviceLocal)),
+        Message::Image(app_image(101, PrivacyClass::CellLocal)),
         // 0x08
         Message::Forward { img: sample_image(12), from_edge: NodeId(0) },
+        // 0x08 with descriptor (open + non-default app/priority).
+        Message::Forward { img: app_image(102, PrivacyClass::Open), from_edge: NodeId(0) },
         // 0x09
         Message::EdgeSummary(EdgeSummary {
             edge: NodeId(3),
@@ -163,6 +182,77 @@ fn corrupted_frames_are_rejected() {
     assert!(decode(&[]).is_err());
     assert!(decode(&[0x03]).is_err());
     assert!(decode(&[0x03, 0, 0]).is_err());
+}
+
+#[test]
+fn legacy_pre_registry_frame_decodes_as_default_app() {
+    // Hand-assemble an Image frame in the PRE-registry layout (the flag
+    // byte could only be 0 or 1): it must decode cleanly, as the default
+    // app with open privacy and priority 0 — and re-encoding it must
+    // reproduce the exact same bytes (the default descriptor is omitted
+    // on the wire).
+    let mut body = Vec::new();
+    body.extend_from_slice(&99u64.to_le_bytes()); // task
+    body.extend_from_slice(&1u32.to_le_bytes()); // origin
+    body.extend_from_slice(&29.0f64.to_le_bytes()); // size_kb
+    body.extend_from_slice(&64u32.to_le_bytes()); // side_px
+    body.extend_from_slice(&12.5f64.to_le_bytes()); // created_ms
+    body.extend_from_slice(&5_000.0f64.to_le_bytes()); // deadline_ms
+    body.push(0); // legacy flag byte: no pinned node
+    body.extend_from_slice(&99u64.to_le_bytes()); // seq
+    let mut frame = vec![0x03];
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+
+    let msg = decode(&frame).expect("legacy frame must decode");
+    let Message::Image(img) = &msg else { panic!("not an image") };
+    assert_eq!(img.task, TaskId(99));
+    assert_eq!(img.constraint.app, AppId::DEFAULT);
+    assert_eq!(img.constraint.privacy, PrivacyClass::Open);
+    assert_eq!(img.constraint.priority, 0);
+    assert!(img.constraint.is_default_descriptor());
+
+    let mut reencoded = Vec::new();
+    encode(&msg, &mut reencoded);
+    assert_eq!(reencoded, frame, "default-app encoding must be byte-identical to legacy");
+
+    // The pinned variant of the legacy layout decodes too.
+    let mut body = Vec::new();
+    body.extend_from_slice(&7u64.to_le_bytes());
+    body.extend_from_slice(&2u32.to_le_bytes());
+    body.extend_from_slice(&87.0f64.to_le_bytes());
+    body.extend_from_slice(&128u32.to_le_bytes());
+    body.extend_from_slice(&0.0f64.to_le_bytes());
+    body.extend_from_slice(&1_000.0f64.to_le_bytes());
+    body.push(1); // pinned
+    body.extend_from_slice(&3u32.to_le_bytes()); // pin target
+    body.extend_from_slice(&7u64.to_le_bytes());
+    let mut frame = vec![0x03];
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+    let Message::Image(img) = decode(&frame).expect("legacy pinned frame") else {
+        panic!("not an image")
+    };
+    assert_eq!(img.constraint.pinned_node, Some(NodeId(3)));
+    assert!(img.constraint.is_default_descriptor());
+}
+
+#[test]
+fn descriptor_corruption_is_rejected() {
+    let mut buf = Vec::new();
+    encode(&Message::Image(app_image(55, PrivacyClass::CellLocal)), &mut buf);
+    // Locate the constraint flags byte: header(5) + task(8) + origin(4) +
+    // size(8) + side(4) + created(8) + deadline(8).
+    let flags_off = 5 + 8 + 4 + 8 + 4 + 8 + 8;
+    assert_eq!(buf[flags_off], 0x03, "pinned + descriptor flags expected");
+    // Unknown flag bit must be rejected, not silently decoded.
+    let mut bad = buf.clone();
+    bad[flags_off] |= 0x80;
+    assert!(decode(&bad).is_err());
+    // Corrupt privacy tag inside the descriptor (flags, pin u32, app u16).
+    let mut bad = buf.clone();
+    bad[flags_off + 1 + 4 + 2] = 0x63;
+    assert!(decode(&bad).is_err());
 }
 
 #[test]
