@@ -65,3 +65,43 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Bench
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
+
+/// Per-operation nanoseconds for a bench that runs `items_per_iter`
+/// operations per iteration.
+pub fn per_op_ns(r: &BenchResult, items_per_iter: f64) -> f64 {
+    r.mean_us * 1_000.0 / items_per_iter
+}
+
+/// Machine-readable bench summary (`BENCH_<n>.json`): the perf
+/// trajectory record CI uploads as an artifact. Hand-rolled JSON — serde
+/// is not in the offline crate set.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    entries: &[(BenchResult, Option<f64>)],
+) -> std::io::Result<()> {
+    let results: Vec<String> = entries
+        .iter()
+        .map(|(r, per_op)| {
+            let per_op = per_op
+                .map(|ns| format!(r#","per_op_ns":{ns:.2}"#))
+                .unwrap_or_default();
+            format!(
+                r#"{{"name":"{}","iters":{},"mean_us":{:.3},"p50_us":{:.3},"min_us":{:.3}{}}}"#,
+                r.name.replace('"', "'"),
+                r.iters,
+                r.mean_us,
+                r.p50_us,
+                r.min_us,
+                per_op
+            )
+        })
+        .collect();
+    std::fs::write(
+        path,
+        format!(
+            "{{\"bench\":\"{bench}\",\"results\":[\n  {}\n]}}\n",
+            results.join(",\n  ")
+        ),
+    )
+}

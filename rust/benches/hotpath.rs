@@ -1,22 +1,34 @@
-//! Bench target: L3 hot paths — scheduler decision latency, container-pool
-//! operations, predictor evaluation, wire codec, and whole-engine event
-//! throughput. These are the §Perf numbers in EXPERIMENTS.md.
+//! Bench target: L3 hot paths — scheduler decision latency (with and
+//! without candidate-snapshot reuse), container-pool operations, predictor
+//! evaluation, wire codec, and whole-engine event throughput. These are
+//! the §Perf numbers in EXPERIMENTS.md.
+//!
+//! Besides the console report, the run writes a machine-readable summary
+//! (decide/dispatch ns/op) to `$BENCH_JSON` (default `BENCH_4.json`) so
+//! the perf trajectory is recorded across PRs; CI uploads it as an
+//! artifact.
 //!
 //! Run: `cargo bench --bench hotpath`
 
 #[path = "common/mod.rs"]
 mod common;
 
-use common::{bench, black_box, section};
-use edge_dds::sim::ArrivalPattern;
+use std::collections::BTreeSet;
+
+use common::{bench, black_box, per_op_ns, section, write_bench_json, BenchResult};
 use edge_dds::config::WorkloadConfig;
 use edge_dds::container::ContainerPool;
 use edge_dds::core::message::ProfileUpdate;
 use edge_dds::core::wire;
-use edge_dds::core::{AppId, Constraint, ImageMeta, Message, NodeClass, NodeId, PrivacyClass, TaskId};
+use edge_dds::core::{
+    AppId, Constraint, ImageMeta, Message, NodeClass, NodeId, PrivacyClass, TaskId,
+};
 use edge_dds::net::LinkModel;
 use edge_dds::profile::{profile_for, PeerTable, PredictInput, Predictor, ProfileTable};
-use edge_dds::scheduler::{DeviceCtx, EdgeCtx, LocalSnapshot, PolicyKind, PredictorSet, SchedulerPolicy};
+use edge_dds::scheduler::{
+    DeviceCtx, EdgeCtx, EdgePipeline, LocalSnapshot, PolicyKind, PredictorSet,
+};
+use edge_dds::sim::ArrivalPattern;
 use edge_dds::sim::ScenarioBuilder;
 
 fn img(task: u64) -> ImageMeta {
@@ -32,6 +44,9 @@ fn img(task: u64) -> ImageMeta {
 }
 
 fn main() {
+    // (result, per-op ns) pairs for the machine-readable summary.
+    let mut json: Vec<(BenchResult, Option<f64>)> = Vec::new();
+
     section("predictor");
     let pred = Predictor::new(profile_for(NodeClass::RaspberryPi));
     let inp = PredictInput {
@@ -43,12 +58,13 @@ fn main() {
         cpu_load_pct: 25.0,
     };
     const PRED_BATCH: u32 = 10_000;
-    bench("predict_total_ms x10k", 3, 30, || {
+    let r = bench("predict_total_ms x10k", 3, 30, || {
         for _ in 0..PRED_BATCH {
             black_box(pred.predict_total_ms(black_box(&inp)));
         }
-    })
-    .print_throughput(PRED_BATCH as f64, "predictions");
+    });
+    r.print_throughput(PRED_BATCH as f64, "predictions");
+    json.push((r.clone(), Some(per_op_ns(&r, PRED_BATCH as f64))));
 
     section("device-level DDS decision");
     let mut dds = PolicyKind::Dds.build(1);
@@ -68,19 +84,21 @@ fn main() {
         edge_suspected: false,
     };
     const DEC_BATCH: u32 = 10_000;
-    bench("decide_device x10k", 3, 30, || {
+    let r = bench("decide_device x10k", 3, 30, || {
         for _ in 0..DEC_BATCH {
             black_box(dds.decide_device(black_box(&ctx)));
         }
-    })
-    .print_throughput(DEC_BATCH as f64, "decisions");
+    });
+    r.print_throughput(DEC_BATCH as f64, "decisions");
+    json.push((r.clone(), Some(per_op_ns(&r, DEC_BATCH as f64))));
 
-    section("constraint-aware decision path (EDF + privacy filters)");
-    // The edge-level decision with a populated MP table, gossip-fed peer
-    // table, and app descriptors cycling through all three privacy
-    // classes: the per-frame overhead of the privacy hard filter and the
-    // EDF tie-break on decide_edge must stay visible in the perf
-    // trajectory (DESIGN.md §Constraints & QoS).
+    section("constraint-aware edge decision (pipeline snapshot + EDF + privacy)");
+    // The edge-level decision against a populated MP table and a
+    // gossip-fed peer table, with app descriptors cycling through all
+    // three privacy classes. The pipeline builds one candidate snapshot
+    // per decision and reuses it verbatim while tables/suspects/instant
+    // are unchanged (DESIGN.md §3) — both variants are measured so the
+    // BENCH json records the reuse win.
     let mut dds_edge = PolicyKind::Dds.build(1);
     let mut table = ProfileTable::new();
     for n in 2..=5u32 {
@@ -106,10 +124,9 @@ fn main() {
         sent_ms: 5.0,
     });
     let predictors = PredictorSet::new();
-    let no_suspects = std::collections::BTreeSet::new();
-    let link_to = |_: NodeId| Some(LinkModel::wifi());
-    let classes =
-        [PrivacyClass::Open, PrivacyClass::CellLocal, PrivacyClass::DeviceLocal];
+    let no_suspects = BTreeSet::new();
+    let links: Vec<Option<LinkModel>> = (0..10).map(|_| Some(LinkModel::wifi())).collect();
+    let classes = [PrivacyClass::Open, PrivacyClass::CellLocal, PrivacyClass::DeviceLocal];
     let frames: Vec<ImageMeta> = (0..3u64)
         .map(|i| {
             let mut f = img(i);
@@ -122,33 +139,60 @@ fn main() {
             f
         })
         .collect();
+    let edge_snapshot = LocalSnapshot {
+        node: NodeId(0),
+        busy_containers: 4, // saturated: the peer path is live
+        warm_containers: 4,
+        queued_images: 1,
+        cpu_load_pct: 0.0,
+        battery_pct: None,
+    };
     const EDGE_BATCH: u32 = 10_000;
-    bench("decide_edge(privacy mix) x10k", 3, 30, || {
+    let mut pipe = EdgePipeline::new(None);
+    // Warm path: same instant, same origin, unmutated tables — the
+    // snapshot is built once and reused across the whole batch (the
+    // common case inside a same-tick arrival burst).
+    let r = bench("decide_edge(privacy mix, snapshot reuse) x10k", 3, 30, || {
         for i in 0..EDGE_BATCH {
             let frame = &frames[(i % 3) as usize];
+            let candidates =
+                pipe.prepare(&table, &peers, &no_suspects, 0, &links, frame.origin, 10.0, 200.0);
             let ctx = EdgeCtx {
                 now_ms: 10.0,
                 img: black_box(frame),
-                edge: LocalSnapshot {
-                    node: NodeId(0),
-                    busy_containers: 4, // saturated: the peer path is live
-                    warm_containers: 4,
-                    queued_images: 1,
-                    cpu_load_pct: 0.0,
-                    battery_pct: None,
-                },
+                edge: edge_snapshot,
                 predictors: &predictors,
-                table: &table,
-                peers: &peers,
-                link_to: &link_to,
-                max_staleness_ms: 200.0,
+                candidates,
                 forwarded: false,
-                suspects: &no_suspects,
             };
             black_box(dds_edge.decide_edge(&ctx));
         }
-    })
-    .print_throughput(EDGE_BATCH as f64, "decisions");
+    });
+    r.print_throughput(EDGE_BATCH as f64, "decisions");
+    json.push((r.clone(), Some(per_op_ns(&r, EDGE_BATCH as f64))));
+
+    // Cold path: the cache is invalidated before every decision, so each
+    // one pays the full table scan + link resolution — the pre-pipeline
+    // per-decision cost, measured for the trajectory delta.
+    let r = bench("decide_edge(privacy mix, cold snapshot) x10k", 3, 30, || {
+        for i in 0..EDGE_BATCH {
+            let frame = &frames[(i % 3) as usize];
+            pipe.invalidate();
+            let candidates =
+                pipe.prepare(&table, &peers, &no_suspects, 0, &links, frame.origin, 10.0, 200.0);
+            let ctx = EdgeCtx {
+                now_ms: 10.0,
+                img: black_box(frame),
+                edge: edge_snapshot,
+                predictors: &predictors,
+                candidates,
+                forwarded: false,
+            };
+            black_box(dds_edge.decide_edge(&ctx));
+        }
+    });
+    r.print_throughput(EDGE_BATCH as f64, "decisions");
+    json.push((r.clone(), Some(per_op_ns(&r, EDGE_BATCH as f64))));
 
     // Device-level decision on a device-local frame: the privacy
     // short-circuit is the cheapest path and must stay that way.
@@ -170,15 +214,16 @@ fn main() {
         predictor: &pred,
         edge_suspected: false,
     };
-    bench("decide_device(device_local) x10k", 3, 30, || {
+    let r = bench("decide_device(device_local) x10k", 3, 30, || {
         for _ in 0..DEC_BATCH {
             black_box(dds_dev.decide_device(black_box(&pctx)));
         }
-    })
-    .print_throughput(DEC_BATCH as f64, "decisions");
+    });
+    r.print_throughput(DEC_BATCH as f64, "decisions");
+    json.push((r.clone(), Some(per_op_ns(&r, DEC_BATCH as f64))));
 
     section("container pool");
-    bench("submit+complete cycle x1k", 3, 30, || {
+    let r = bench("submit+complete cycle x1k", 3, 30, || {
         let mut pool = ContainerPool::new(profile_for(NodeClass::EdgeServer), 4);
         let mut now = 0.0;
         for t in 0..1_000u64 {
@@ -188,20 +233,22 @@ fn main() {
             }
         }
         black_box(pool.stats());
-    })
-    .print_throughput(1_000.0, "cycles");
+    });
+    r.print_throughput(1_000.0, "cycles");
+    json.push((r.clone(), Some(per_op_ns(&r, 1_000.0))));
 
     section("wire codec");
     let msg = Message::Image(img(42));
     let mut buf = Vec::with_capacity(256);
     const CODEC_BATCH: u32 = 10_000;
-    bench("encode+decode x10k", 3, 30, || {
+    let r = bench("encode+decode x10k", 3, 30, || {
         for _ in 0..CODEC_BATCH {
             wire::encode(black_box(&msg), &mut buf);
             black_box(wire::decode(&buf).unwrap());
         }
-    })
-    .print_throughput(CODEC_BATCH as f64, "roundtrips");
+    });
+    r.print_throughput(CODEC_BATCH as f64, "roundtrips");
+    json.push((r.clone(), Some(per_op_ns(&r, CODEC_BATCH as f64))));
 
     section("whole-engine event throughput");
     for (n, interval) in [(1_000u32, 50.0), (1_000, 100.0)] {
@@ -220,7 +267,13 @@ fn main() {
             black_box(builder.run());
         });
         r.print_throughput(events, "events");
+        json.push((r.clone(), Some(per_op_ns(&r, events))));
     }
 
-    println!("\nhotpath bench done");
+    let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_4.json".to_string());
+    match write_bench_json(&out, "hotpath", &json) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+    println!("hotpath bench done");
 }

@@ -10,7 +10,8 @@ pub mod schema;
 pub mod toml_lite;
 
 pub use schema::{
-    AppSpec, CellConfig, ChurnConfig, ChurnEvent, ChurnKind, ChurnTarget, DeviceConfig,
-    FederationConfig, NetworkConfig, RandomChurnConfig, RunMode, SystemConfig, WorkloadConfig,
+    AdmissionConfig, AppSpec, CellConfig, ChurnConfig, ChurnEvent, ChurnKind, ChurnTarget,
+    DeviceConfig, FederationConfig, NetworkConfig, RandomChurnConfig, RunMode, SystemConfig,
+    WorkloadConfig,
 };
 pub use toml_lite::{parse_document, Document, Value};

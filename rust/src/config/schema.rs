@@ -4,9 +4,10 @@
 use anyhow::{bail, Context, Result};
 
 use super::toml_lite::{parse_document, Document};
+use crate::container::QueueDiscipline;
 use crate::core::{AppId, NodeClass, PrivacyClass};
 use crate::net::LinkModel;
-use crate::scheduler::{FailureDetector, PolicyKind};
+use crate::scheduler::{AdmissionParams, FailureDetector, PolicyKind};
 use crate::sim::workload::ArrivalPattern;
 use crate::util::SplitMix64;
 
@@ -74,6 +75,16 @@ pub struct AppSpec {
     pub size_kb: f64,
     pub side_px: u32,
     pub pattern: ArrivalPattern,
+    /// Weighted-fair dispatch share (`weight` key, DESIGN.md §3). Any
+    /// app declaring a weight switches every container pool's Dispatch
+    /// stage from strict (priority, EDF) to DRR over per-app queues;
+    /// weightless apps then weigh 1. `None` everywhere = strict priority,
+    /// byte-identical to the pre-pipeline pools.
+    pub weight: Option<u32>,
+    /// Per-app admission-rate override (`admit_rate_per_s` key),
+    /// consulted only when an `[admission]` section enables the Admit
+    /// stage; `None` falls back to `[admission] rate_per_s`.
+    pub admit_rate_per_s: Option<f64>,
 }
 
 impl AppSpec {
@@ -91,6 +102,8 @@ impl AppSpec {
             size_kb: wl.size_kb,
             side_px: wl.side_px,
             pattern: wl.pattern,
+            weight: None,
+            admit_rate_per_s: None,
         }
     }
 
@@ -105,6 +118,34 @@ impl AppSpec {
             deadline_ms: self.deadline_ms,
             side_px: self.side_px,
             pattern: self.pattern,
+        }
+    }
+}
+
+/// Edge-side admission control (`[admission]`, DESIGN.md §3): the
+/// pipeline's Admit stage. Absent = every frame is admitted (legacy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionConfig {
+    /// Default per-app token-bucket rate (frames/second). Infinite (the
+    /// default when the key is omitted) disables rate limiting, leaving
+    /// only the queue ceiling.
+    pub rate_per_s: f64,
+    /// Token-bucket depth (burst tolerance).
+    pub burst: f64,
+    /// Per-app ceiling on frames queued in the edge pool.
+    pub queue_ceiling: u32,
+    /// Enable the Overload stage's deadline-aware shed of best-effort
+    /// frames at enqueue (`deadline_shed = true`).
+    pub deadline_shed: bool,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            rate_per_s: f64::INFINITY,
+            burst: 8.0,
+            queue_ceiling: 16,
+            deadline_shed: false,
         }
     }
 }
@@ -355,6 +396,9 @@ pub struct SystemConfig {
     /// QoS). Empty = the implicit single default app driven by
     /// `[workload]` — bit-identical to the pre-registry behaviour.
     pub apps: Vec<AppSpec>,
+    /// Edge-side admission control (`[admission]`, DESIGN.md §3).
+    /// `None` = the Admit stage is a structural no-op (legacy).
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl Default for SystemConfig {
@@ -393,6 +437,7 @@ impl Default for SystemConfig {
             federation: FederationConfig::default(),
             churn: ChurnConfig::default(),
             apps: Vec::new(),
+            admission: None,
         }
     }
 }
@@ -564,7 +609,21 @@ impl SystemConfig {
                 if !(1..=u32::MAX as i64).contains(&side_px) {
                     bail!("app[{i}] `{name}`: side_px {side_px} out of range 1..=2^32-1");
                 }
+                let weight = match t.get("weight").map(|v| v.as_i64()) {
+                    None => None,
+                    Some(Some(w)) if (1..=1_000_000).contains(&w) => Some(w as u32),
+                    Some(w) => bail!("app[{i}] `{name}`: weight {w:?} out of range 1..=1000000"),
+                };
+                let admit_rate_per_s = match t.get("admit_rate_per_s").map(|v| v.as_f64()) {
+                    None => None,
+                    Some(Some(r)) if r.is_finite() && r > 0.0 => Some(r),
+                    Some(r) => {
+                        bail!("app[{i}] `{name}`: admit_rate_per_s {r:?} must be positive")
+                    }
+                };
                 apps.push(AppSpec {
+                    weight,
+                    admit_rate_per_s,
                     deadline_ms: t
                         .get("deadline_ms")
                         .and_then(|v| v.as_f64())
@@ -583,6 +642,24 @@ impl SystemConfig {
                 });
             }
         }
+
+        let admission = if doc.tables.contains_key("admission") {
+            let ad = AdmissionConfig::default();
+            // Range-check before the u32 cast: a negative TOML value would
+            // otherwise wrap to a silently huge ceiling.
+            let ceiling = doc.i64_or("admission", "queue_ceiling", ad.queue_ceiling as i64);
+            if !(1..=u32::MAX as i64).contains(&ceiling) {
+                bail!("admission.queue_ceiling {ceiling} out of range 1..=2^32-1");
+            }
+            Some(AdmissionConfig {
+                rate_per_s: doc.f64_or("admission", "rate_per_s", ad.rate_per_s),
+                burst: doc.f64_or("admission", "burst", ad.burst),
+                queue_ceiling: ceiling as u32,
+                deadline_shed: doc.bool_or("admission", "deadline_shed", ad.deadline_shed),
+            })
+        } else {
+            None
+        };
 
         let fd = FederationConfig::default();
         let federation = FederationConfig {
@@ -616,6 +693,7 @@ impl SystemConfig {
             federation,
             churn,
             apps,
+            admission,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -662,6 +740,36 @@ impl SystemConfig {
     /// True when the config describes a federation of ≥2 cells.
     pub fn is_multi_cell(&self) -> bool {
         self.cells.len() >= 2
+    }
+
+    /// The Dispatch-stage discipline every container pool runs under
+    /// (DESIGN.md §3): strict (priority, EDF, task) unless any `[[app]]`
+    /// declares a `weight`, in which case DRR with weightless apps at 1.
+    /// Shared by the sim and live drivers — one derivation, two drivers.
+    pub fn queue_discipline(&self) -> QueueDiscipline {
+        if self.apps.iter().any(|a| a.weight.is_some()) {
+            QueueDiscipline::WeightedFair {
+                weights: self.effective_apps().iter().map(|a| a.weight.unwrap_or(1)).collect(),
+            }
+        } else {
+            QueueDiscipline::PriorityEdf
+        }
+    }
+
+    /// Resolved Admit-stage parameters for the edge servers (DESIGN.md
+    /// §3): the `[admission]` section with per-app `admit_rate_per_s`
+    /// overrides flattened into registry order. `None` when no
+    /// `[admission]` section exists — the stage is a structural no-op.
+    /// Shared by the sim and live drivers — one derivation, two drivers.
+    pub fn admission_params(&self) -> Option<AdmissionParams> {
+        let ad = self.admission?;
+        Some(AdmissionParams {
+            default_rate_per_s: ad.rate_per_s,
+            burst: ad.burst,
+            queue_ceiling: ad.queue_ceiling,
+            deadline_shed: ad.deadline_shed,
+            per_app_rate: self.effective_apps().iter().map(|a| a.admit_rate_per_s).collect(),
+        })
     }
 
     /// Edge pool size of cell `c`: the `[[cell]]` entry if present, else
@@ -773,6 +881,24 @@ impl SystemConfig {
             }
             if self.apps[..i].iter().any(|b| b.name == a.name) {
                 bail!("app[{i}]: duplicate app name `{}`", a.name);
+            }
+            if a.weight == Some(0) {
+                bail!("app[{i}] `{}`: weight must be >= 1", a.name);
+            }
+            if a.admit_rate_per_s.is_some_and(|r| !(r.is_finite() && r > 0.0)) {
+                bail!("app[{i}] `{}`: admit_rate_per_s must be positive and finite", a.name);
+            }
+        }
+        if let Some(ad) = self.admission {
+            // NaN sails through plain ordering checks; reject explicitly.
+            if ad.rate_per_s.is_nan() || ad.rate_per_s <= 0.0 {
+                bail!("admission.rate_per_s must be positive (or omitted for unlimited)");
+            }
+            if !(ad.burst.is_finite() && ad.burst >= 1.0) {
+                bail!("admission.burst must be >= 1 and finite");
+            }
+            if ad.queue_ceiling == 0 {
+                bail!("admission.queue_ceiling must be >= 1");
             }
         }
         Ok(())
@@ -1306,6 +1432,134 @@ class = "rpi"
 camera = true
 "#;
         assert!(SystemConfig::from_toml(bad_deadline).is_err());
+    }
+
+    #[test]
+    fn admission_and_weight_roundtrip() {
+        let text = r#"
+[admission]
+rate_per_s = 12.5
+burst = 4
+queue_ceiling = 6
+deadline_shed = true
+
+[[app]]
+name = "strict"
+priority = 2
+weight = 2
+
+[[app]]
+name = "besteffort"
+admit_rate_per_s = 3.5
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        let ad = c.admission.unwrap();
+        assert_eq!(ad.rate_per_s, 12.5);
+        assert_eq!(ad.burst, 4.0);
+        assert_eq!(ad.queue_ceiling, 6);
+        assert!(ad.deadline_shed);
+        assert_eq!(c.apps[0].weight, Some(2));
+        assert_eq!(c.apps[0].admit_rate_per_s, None);
+        assert_eq!(c.apps[1].weight, None);
+        assert_eq!(c.apps[1].admit_rate_per_s, Some(3.5));
+        // Resolved helpers: DRR with weightless apps at 1; per-app rates
+        // in registry order.
+        assert_eq!(
+            c.queue_discipline(),
+            QueueDiscipline::WeightedFair { weights: vec![2, 1] }
+        );
+        let p = c.admission_params().unwrap();
+        assert_eq!(p.default_rate_per_s, 12.5);
+        assert_eq!(p.per_app_rate, vec![None, Some(3.5)]);
+        assert!(p.deadline_shed);
+    }
+
+    #[test]
+    fn admission_defaults_and_absence() {
+        // No [admission] section: stage off, strict dispatch.
+        let c = SystemConfig::default();
+        assert!(c.admission.is_none());
+        assert!(c.admission_params().is_none());
+        assert_eq!(c.queue_discipline(), QueueDiscipline::PriorityEdf);
+        // Empty [admission] section: enabled with defaults (rate
+        // unlimited, ceiling 16).
+        let text = r#"
+[admission]
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        let ad = c.admission.unwrap();
+        assert!(ad.rate_per_s.is_infinite());
+        assert_eq!(ad.queue_ceiling, 16);
+        assert!(!ad.deadline_shed);
+        // Weight keys alone flip the discipline, admission stays off.
+        let text = r#"
+[[app]]
+name = "x"
+weight = 3
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert!(c.admission.is_none());
+        assert_eq!(
+            c.queue_discipline(),
+            QueueDiscipline::WeightedFair { weights: vec![3] }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_admission_and_weights() {
+        let bad_weight = r#"
+[[app]]
+name = "x"
+weight = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_weight).is_err());
+        let bad_rate = r#"
+[[app]]
+name = "x"
+admit_rate_per_s = -1
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_rate).is_err());
+        let bad_ceiling = r#"
+[admission]
+queue_ceiling = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_ceiling).is_err());
+        let bad_burst = r#"
+[admission]
+burst = 0
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        assert!(SystemConfig::from_toml(bad_burst).is_err());
+        let mut c = SystemConfig::default();
+        c.admission = Some(AdmissionConfig { rate_per_s: f64::NAN, ..Default::default() });
+        assert!(c.validate().is_err());
     }
 
     #[test]

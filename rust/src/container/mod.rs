@@ -15,4 +15,4 @@
 
 pub mod pool;
 
-pub use pool::{Assignment, ContainerPool, ContainerState, PoolStats};
+pub use pool::{Assignment, ContainerPool, ContainerState, PoolStats, QueueDiscipline};

@@ -1,8 +1,9 @@
-//! The container pool state machine (virtual-time).
+//! The container pool state machine (virtual-time) — the pipeline's
+//! **Dispatch** stage (DESIGN.md §3).
 
 use std::collections::VecDeque;
 
-use crate::core::{ImageMeta, TaskId};
+use crate::core::{AppId, ImageMeta, TaskId};
 use crate::profile::ClassProfile;
 
 /// One container's state.
@@ -47,14 +48,131 @@ fn queue_order(a: &ImageMeta, b: &ImageMeta) -> std::cmp::Ordering {
         .then_with(|| a.task.cmp(&b.task))
 }
 
+/// How the overflow queue orders dispatch — the pipeline's Dispatch
+/// stage policy (DESIGN.md §3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueueDiscipline {
+    /// Strict (priority desc, EDF, TaskId) — the default, byte-identical
+    /// to the pre-pipeline pool.
+    PriorityEdf,
+    /// Deficit round robin over per-app FIFO/EDF queues: app `i` gets a
+    /// long-run dispatch share proportional to `weights[i]` under
+    /// saturation instead of strict priority. Enabled by `[[app]] weight`
+    /// keys in the config.
+    WeightedFair { weights: Vec<u32> },
+}
+
+/// DRR state for [`QueueDiscipline::WeightedFair`]: per-app queues (EDF
+/// within an app), per-app credit counters, and a rotating cursor. Each
+/// visit to a non-empty app refills its credit to `weight` and serves up
+/// to that many consecutive frames before moving on — weights 2:1 yield
+/// a 2:1 dispatch share under saturation. An app whose queue drains loses
+/// its residual credit (the classic DRR anti-hoarding rule).
+#[derive(Debug, Clone)]
+struct DrrQueues {
+    weights: Vec<u32>,
+    queues: Vec<VecDeque<ImageMeta>>,
+    credit: Vec<u32>,
+    cursor: usize,
+}
+
+impl DrrQueues {
+    fn new(weights: Vec<u32>) -> Self {
+        let n = weights.len().max(1);
+        let weights: Vec<u32> =
+            (0..n).map(|i| weights.get(i).copied().unwrap_or(1).max(1)).collect();
+        Self {
+            queues: vec![VecDeque::new(); n],
+            credit: vec![0; n],
+            weights,
+            cursor: 0,
+        }
+    }
+
+    /// Grow to cover an app id beyond the registry (robustness against
+    /// frames from newer configs); late apps weigh 1.
+    fn ensure_app(&mut self, app: usize) {
+        while self.queues.len() <= app {
+            self.queues.push(VecDeque::new());
+            self.credit.push(0);
+            self.weights.push(1);
+        }
+    }
+
+    fn enqueue(&mut self, img: ImageMeta) {
+        let app = img.constraint.app.0 as usize;
+        self.ensure_app(app);
+        let q = &mut self.queues[app];
+        // EDF within the app (priority is constant inside one app); ties
+        // by TaskId — total and deterministic, like the strict queue.
+        let at = q
+            .binary_search_by(|e| {
+                e.abs_deadline_ms()
+                    .total_cmp(&img.abs_deadline_ms())
+                    .then_with(|| e.task.cmp(&img.task))
+            })
+            .unwrap_or_else(|i| i);
+        q.insert(at, img);
+    }
+
+    fn pop_next(&mut self) -> Option<ImageMeta> {
+        let n = self.queues.len();
+        let mut visited = 0;
+        while visited < n {
+            let i = self.cursor % n;
+            if self.queues[i].is_empty() {
+                self.credit[i] = 0; // anti-hoarding: drained apps restart
+                self.cursor = (i + 1) % n;
+                visited += 1;
+                continue;
+            }
+            if self.credit[i] == 0 {
+                self.credit[i] = self.weights[i];
+            }
+            let img = self.queues[i].pop_front();
+            self.credit[i] -= 1;
+            if self.queues[i].is_empty() {
+                self.credit[i] = 0; // anti-hoarding on drain
+                self.cursor = (i + 1) % n;
+            } else if self.credit[i] == 0 {
+                self.cursor = (i + 1) % n; // quantum spent — next app
+            }
+            return img;
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    fn len_for(&self, app: AppId) -> u32 {
+        self.queues.get(app.0 as usize).map_or(0, |q| q.len() as u32)
+    }
+
+    fn clear(&mut self) {
+        for q in &mut self.queues {
+            q.clear();
+        }
+        for c in &mut self.credit {
+            *c = 0;
+        }
+        self.cursor = 0;
+    }
+}
+
 /// Warm-container pool with a priority/EDF overflow queue (the paper's
-/// `q_image`, generalized for the multi-app registry).
+/// `q_image`, generalized for the multi-app registry), optionally under
+/// weighted-fair DRR sharing ([`QueueDiscipline`]).
 #[derive(Debug, Clone)]
 pub struct ContainerPool {
     profile: ClassProfile,
     containers: Vec<ContainerState>,
-    /// Images waiting for a container, kept sorted by [`queue_order`].
+    /// Images waiting for a container, kept sorted by [`queue_order`]
+    /// (strict discipline; unused — and empty — under weighted-fair).
     queue: VecDeque<ImageMeta>,
+    /// Weighted-fair DRR queues; `None` = strict (priority, EDF, task).
+    fair: Option<DrrQueues>,
     /// Background (non-container) CPU load in [0, 100].
     bg_load_pct: f64,
     stats: PoolStats,
@@ -68,9 +186,21 @@ impl ContainerPool {
             profile,
             containers: vec![ContainerState::Idle; warm as usize],
             queue: VecDeque::new(),
+            fair: None,
             bg_load_pct: 0.0,
             stats: PoolStats::default(),
         }
+    }
+
+    /// Select the Dispatch-stage discipline (builder style). The default
+    /// [`QueueDiscipline::PriorityEdf`] is a structural no-op — the pool
+    /// behaves byte-identically to one built without this call.
+    pub fn with_discipline(mut self, discipline: QueueDiscipline) -> Self {
+        self.fair = match discipline {
+            QueueDiscipline::PriorityEdf => None,
+            QueueDiscipline::WeightedFair { weights } => Some(DrrQueues::new(weights)),
+        };
+        self
     }
 
     pub fn profile(&self) -> &ClassProfile {
@@ -107,7 +237,34 @@ impl ContainerPool {
     }
 
     pub fn queued_count(&self) -> u32 {
-        self.queue.len() as u32
+        (self.queue.len() + self.fair.as_ref().map_or(0, DrrQueues::len)) as u32
+    }
+
+    /// Frames of `app` currently in the overflow queue (the Admit stage's
+    /// per-app ceiling reads this). O(1) under weighted-fair; a scan under
+    /// the strict discipline — admission is the only caller, and only when
+    /// `[admission]` is configured.
+    pub fn queued_for_app(&self, app: AppId) -> u32 {
+        match &self.fair {
+            Some(d) => d.len_for(app),
+            None => self.queue.iter().filter(|i| i.constraint.app == app).count() as u32,
+        }
+    }
+
+    /// Coarse predicted completion of `img` if submitted now — the
+    /// Overload stage's shed test (DESIGN.md §3). With an idle container
+    /// the frame starts immediately; otherwise it waits for the current
+    /// batch plus `queued/warm` drain waves, each roughly one
+    /// full-contention process time. Deliberately a rough lower-bound
+    /// model: shedding only fires when even this optimistic estimate is
+    /// already past the deadline.
+    pub fn predicted_completion_ms(&self, img: &ImageMeta, now_ms: f64) -> f64 {
+        if self.idle_count() > 0 {
+            return now_ms + self.model_process_ms(img.size_kb, self.busy_count() + 1);
+        }
+        let warm = self.warm_count().max(1);
+        let waves = 1 + self.queued_count() / warm;
+        now_ms + self.model_process_ms(img.size_kb, warm) * (waves as f64 + 1.0)
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -125,14 +282,19 @@ impl ContainerPool {
         if let Some(idx) = self.containers.iter().position(|c| matches!(c, ContainerState::Idle)) {
             Some(self.dispatch(idx, img, now_ms))
         } else {
-            // TaskIds are unique, so the rank is total and the search
-            // never reports an exact match.
-            let at = self
-                .queue
-                .binary_search_by(|q| queue_order(q, &img))
-                .unwrap_or_else(|i| i);
-            self.queue.insert(at, img);
-            self.stats.queued_peak = self.stats.queued_peak.max(self.queue.len());
+            match &mut self.fair {
+                Some(d) => d.enqueue(img),
+                None => {
+                    // TaskIds are unique, so the rank is total and the
+                    // search never reports an exact match.
+                    let at = self
+                        .queue
+                        .binary_search_by(|q| queue_order(q, &img))
+                        .unwrap_or_else(|i| i);
+                    self.queue.insert(at, img);
+                }
+            }
+            self.stats.queued_peak = self.stats.queued_peak.max(self.queued_count() as usize);
             None
         }
     }
@@ -152,8 +314,17 @@ impl ContainerPool {
             return None;
         }
         self.containers[idx] = ContainerState::Idle;
-        let next = self.queue.pop_front()?;
+        let next = self.dequeue()?;
         Some(self.dispatch(idx, next, now_ms))
+    }
+
+    /// Next frame per the Dispatch discipline: strict head, or the DRR
+    /// rotation under weighted-fair.
+    fn dequeue(&mut self) -> Option<ImageMeta> {
+        match &mut self.fair {
+            Some(d) => d.pop_next(),
+            None => self.queue.pop_front(),
+        }
     }
 
     /// Churn: the node failed (or restarted). All in-container work and the
@@ -166,6 +337,9 @@ impl ContainerPool {
             *c = ContainerState::Idle;
         }
         self.queue.clear();
+        if let Some(d) = &mut self.fair {
+            d.clear();
+        }
     }
 
     /// Begin a cold start at `now_ms`; the new container becomes idle at
@@ -191,13 +365,13 @@ impl ContainerPool {
             }
         }
         let mut out = Vec::new();
-        while !self.queue.is_empty() {
+        while self.queued_count() > 0 {
             let Some(idx) =
                 self.containers.iter().position(|c| matches!(c, ContainerState::Idle))
             else {
                 break;
             };
-            let img = self.queue.pop_front().unwrap();
+            let img = self.dequeue().unwrap();
             out.push(self.dispatch(idx, img, now_ms));
         }
         out
@@ -408,6 +582,179 @@ mod tests {
             running = next.task;
         }
         assert_eq!(order, vec![1, 2, 3, 4, 5]);
+    }
+
+    // ---- weighted-fair DRR (pipeline Dispatch stage, DESIGN.md §3) ----
+
+    fn app_img(task: u64, app: u16, deadline: f64) -> ImageMeta {
+        use crate::core::{AppId, Constraint, PrivacyClass};
+        let mut f = img(task, 29.0);
+        f.constraint = Constraint::for_app(AppId(app), deadline, PrivacyClass::Open, 0);
+        f
+    }
+
+    fn fair_pool(weights: &[u32]) -> ContainerPool {
+        ContainerPool::new(profile_for(NodeClass::EdgeServer), 1)
+            .with_discipline(QueueDiscipline::WeightedFair { weights: weights.to_vec() })
+    }
+
+    #[test]
+    fn drr_weights_two_to_one_yield_two_to_one_share() {
+        let mut p = fair_pool(&[2, 1]);
+        p.submit(img(0, 29.0), 0.0).unwrap(); // occupy the container
+        // Saturation: 12 queued frames of each app, interleaved arrival.
+        for t in 0..12u64 {
+            assert!(p.submit(app_img(100 + t, 0, 1e6), 1.0).is_none());
+            assert!(p.submit(app_img(200 + t, 1, 1e6), 1.0).is_none());
+        }
+        let mut order = Vec::new();
+        let mut running = p_busy_task(&p);
+        while let Some(next) = p.complete(0, running, 10.0) {
+            order.push(next.task.0);
+            running = next.task;
+        }
+        assert_eq!(order.len(), 24);
+        // DRR 2:1 → pattern (A A B) repeating while both queues are
+        // backlogged: after any 3k dispatches, app 0 got 2k and app 1
+        // got k. App 0's 12 frames last exactly 6 rounds (18 dispatches);
+        // the residual app-1 backlog drains afterwards.
+        for k in 1..=6usize {
+            let window = &order[..3 * k];
+            let a = window.iter().filter(|t| **t < 200).count();
+            assert_eq!(a, 2 * k, "after {} dispatches: {window:?}", 3 * k);
+        }
+        assert!(order[18..].iter().all(|t| *t >= 200), "tail is the app-1 backlog");
+        // Within each app, EDF/TaskId order is preserved.
+        let a_order: Vec<u64> = order.iter().copied().filter(|t| *t < 200).collect();
+        assert!(a_order.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn drr_does_not_starve_and_drains_to_other_apps() {
+        let mut p = fair_pool(&[3, 1]);
+        p.submit(img(0, 29.0), 0.0).unwrap();
+        // Only app 1 has traffic: it gets every dispatch slot.
+        for t in 0..4u64 {
+            p.submit(app_img(200 + t, 1, 1e6), 1.0);
+        }
+        let mut running = p_busy_task(&p);
+        let mut served = 0;
+        while let Some(next) = p.complete(0, running, 10.0) {
+            assert!(next.task.0 >= 200);
+            served += 1;
+            running = next.task;
+        }
+        assert_eq!(served, 4);
+        // App 0 traffic arriving later is not owed a hoarded backlog of
+        // credit: the anti-hoarding rule reset it on drain.
+        for t in 0..2u64 {
+            p.submit(app_img(100 + t, 0, 1e6), 20.0);
+        }
+        let next = p.complete(0, running, 30.0).unwrap();
+        assert_eq!(next.task.0, 100);
+    }
+
+    #[test]
+    fn drr_handles_app_ids_beyond_registry() {
+        let mut p = fair_pool(&[1]);
+        p.submit(img(0, 29.0), 0.0).unwrap();
+        // App 5 was never registered: the DRR grows to cover it (weight 1).
+        p.submit(app_img(500, 5, 1e6), 1.0);
+        assert_eq!(p.queued_count(), 1);
+        assert_eq!(p.queued_for_app(crate::core::AppId(5)), 1);
+        let next = p.complete(0, p_busy_task(&p), 10.0).unwrap();
+        assert_eq!(next.task.0, 500);
+    }
+
+    #[test]
+    fn fair_reset_clears_queues_and_state() {
+        let mut p = fair_pool(&[2, 1]);
+        p.submit(img(0, 29.0), 0.0).unwrap();
+        p.submit(app_img(100, 0, 1e6), 1.0);
+        p.submit(app_img(200, 1, 1e6), 1.0);
+        assert_eq!(p.queued_count(), 2);
+        p.reset();
+        assert_eq!(p.queued_count(), 0);
+        assert!(p.complete(0, TaskId(0), 10.0).is_none());
+        // Accepts fresh work after the reset.
+        assert!(p.submit(app_img(300, 1, 1e6), 20.0).is_some());
+    }
+
+    #[test]
+    fn fair_tick_drains_via_drr() {
+        let mut p = fair_pool(&[2, 1]);
+        p.submit(img(0, 29.0), 0.0).unwrap();
+        for t in 0..3u64 {
+            p.submit(app_img(100 + t, 0, 1e6), 1.0);
+            p.submit(app_img(200 + t, 1, 1e6), 1.0);
+        }
+        p.start_cold(1.0);
+        p.start_cold(1.0);
+        let assigns = p.tick(200_000.0);
+        // Two cold containers came up: the first two DRR picks run.
+        assert_eq!(assigns.len(), 2);
+        assert_eq!(assigns[0].task.0, 100);
+        assert_eq!(assigns[1].task.0, 101);
+        assert_eq!(p.queued_count(), 4);
+    }
+
+    #[test]
+    fn strict_discipline_builder_is_identity() {
+        // `with_discipline(PriorityEdf)` must leave the classic pool
+        // behaviour untouched (the legacy byte-identical path).
+        let mk = |strict: bool| {
+            let mut p = ContainerPool::new(profile_for(NodeClass::EdgeServer), 1);
+            if strict {
+                p = p.with_discipline(QueueDiscipline::PriorityEdf);
+            }
+            p.submit(img(0, 29.0), 0.0).unwrap();
+            for t in [7u64, 3, 9, 5] {
+                p.submit(img(t, 29.0), 0.0);
+            }
+            let mut order = Vec::new();
+            let mut running = p_busy_task(&p);
+            while let Some(next) = p.complete(0, running, 10.0) {
+                order.push(next.task.0);
+                running = next.task;
+            }
+            order
+        };
+        assert_eq!(mk(true), mk(false));
+    }
+
+    #[test]
+    fn queued_for_app_counts_under_both_disciplines() {
+        use crate::core::AppId;
+        for fair in [false, true] {
+            let mut p = ContainerPool::new(profile_for(NodeClass::EdgeServer), 1);
+            if fair {
+                p = p.with_discipline(QueueDiscipline::WeightedFair { weights: vec![1, 1] });
+            }
+            p.submit(img(0, 29.0), 0.0).unwrap();
+            p.submit(app_img(100, 0, 1e6), 1.0);
+            p.submit(app_img(101, 0, 1e6), 1.0);
+            p.submit(app_img(200, 1, 1e6), 1.0);
+            assert_eq!(p.queued_for_app(AppId(0)), 2, "fair={fair}");
+            assert_eq!(p.queued_for_app(AppId(1)), 1, "fair={fair}");
+            assert_eq!(p.queued_for_app(AppId(9)), 0, "fair={fair}");
+        }
+    }
+
+    #[test]
+    fn predicted_completion_coarse_model() {
+        let mut p = edge_pool(2);
+        let f = img(1, 29.0);
+        // Idle pool: now + single-dispatch process time (223 ms).
+        assert!((p.predicted_completion_ms(&f, 100.0) - 323.0).abs() < 1e-9);
+        // Saturate: 2 busy, 4 queued → waves = 1 + 4/2 = 3, concurrency-2
+        // process 273 ms → 100 + 273 * 4.
+        p.submit(img(10, 29.0), 100.0).unwrap();
+        p.submit(img(11, 29.0), 100.0).unwrap();
+        for t in 12..16u64 {
+            p.submit(img(t, 29.0), 100.0);
+        }
+        let got = p.predicted_completion_ms(&f, 100.0);
+        assert!((got - (100.0 + 273.0 * 4.0)).abs() < 1e-6, "got {got}");
     }
 
     #[test]

@@ -248,6 +248,35 @@ pub enum Verdict {
     Dropped,
 }
 
+/// Why a node deliberately gave up on a frame (the explicit drop paths —
+/// frames that merely vanish, e.g. UDP loss or a crashed holder, have no
+/// reason recorded). Rendered in the CSV verdict column; `Infeasible`
+/// keeps the legacy "dropped" spelling so pre-pipeline outputs are
+/// byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DropReason {
+    /// The holder can neither compute nor disclose the frame (e.g. a
+    /// depleted device holding a `device_local` frame) — the pre-pipeline
+    /// loss cases.
+    Infeasible,
+    /// The edge's Admit stage refused the frame: per-app token bucket
+    /// empty or the app's queue ceiling reached (DESIGN.md §3).
+    Rejected,
+    /// The Overload stage shed the frame at enqueue: best-effort priority
+    /// and predicted completion already past its deadline.
+    Shed,
+}
+
+impl DropReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DropReason::Infeasible => "infeasible",
+            DropReason::Rejected => "rejected",
+            DropReason::Shed => "shed",
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -12,9 +12,10 @@ use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::container::ContainerPool;
 use crate::core::message::{Message, ProfileUpdate};
-use crate::core::{ImageMeta, NodeId, Placement, PrivacyClass, TaskId};
+use crate::core::{DropReason, ImageMeta, NodeId, Placement, TaskId};
 use crate::energy::Battery;
 use crate::profile::Predictor;
+use crate::scheduler::pipeline::{device_intake, DeviceIntake};
 use crate::scheduler::{DeviceCtx, FailureDetector, LocalSnapshot, SchedulerPolicy};
 
 /// Effects a node handler requests from its driver.
@@ -35,11 +36,12 @@ pub enum Action {
     /// Recorder hook: an in-flight task's placement node was declared dead
     /// and the task was pulled back for re-placement (churn).
     RecordRequeued { task: TaskId },
-    /// Recorder hook: the task is lost for good — the node that holds it
-    /// can neither execute it (e.g. depleted battery) nor ship it anywhere
-    /// its privacy scope allows. Resolves the task as `Dropped` so the run
-    /// does not wait on it.
-    RecordDropped { task: TaskId },
+    /// Recorder hook: the node deliberately gave up on the task — it can
+    /// neither execute nor ship it (`Infeasible`), the edge's Admit stage
+    /// refused it (`Rejected`), or the Overload stage shed it (`Shed`).
+    /// Resolves the task as `Dropped` so the run does not wait on it; the
+    /// reason lands in the task record (DESIGN.md §3).
+    RecordDropped { task: TaskId, reason: DropReason },
 }
 
 /// An end device (Raspberry Pi / smartphone).
@@ -177,34 +179,48 @@ impl DeviceNode {
     }
 
     /// Camera produced a frame (the paper's first APr thread receives it
-    /// into the original-image queue; the second thread decides).
+    /// into the original-image queue; the second thread decides). The
+    /// device drives the pipeline's Filter → Place → Dispatch stages
+    /// (DESIGN.md §3); Admit and Overload are edge-side stages.
     pub fn on_camera_frame(&mut self, img: ImageMeta, now_ms: f64, out: &mut Vec<Action>) {
         debug_assert_eq!(img.origin, self.id);
         self.tick_battery(now_ms);
         self.awaiting.insert(img.task, img);
-        // Privacy hard filter (DESIGN.md §Constraints & QoS), enforced at
-        // the node layer for *every* policy: a device-local frame never
-        // leaves its origin — not for a policy verdict, not for battery
-        // conservation. Privacy is a constraint, not a preference. On a
-        // depleted device the two constraints collide — it can neither
-        // compute nor disclose — so the frame is lost outright.
-        if img.constraint.privacy == PrivacyClass::DeviceLocal {
-            out.push(Action::RecordPlaced { task: img.task, placement: Placement::Local });
-            if self.battery.as_ref().is_some_and(|b| b.depleted()) {
-                self.awaiting.remove(&img.task);
-                out.push(Action::RecordDropped { task: img.task });
+        // Filter stage (shared clamp logic, DESIGN.md §Constraints & QoS),
+        // enforced at the node layer for *every* policy: a device-local
+        // frame never leaves its origin — not for a policy verdict, not
+        // for battery conservation. Privacy is a constraint, not a
+        // preference. On a depleted device the two constraints collide —
+        // it can neither compute nor disclose — so the frame is lost
+        // outright; a depleted device forwards everything disclosable.
+        let depleted = self.battery.as_ref().is_some_and(|b| b.depleted());
+        match device_intake(img.constraint.privacy, depleted) {
+            DeviceIntake::ClampLocal { infeasible } => {
+                out.push(Action::RecordPlaced { task: img.task, placement: Placement::Local });
+                if infeasible {
+                    self.awaiting.remove(&img.task);
+                    out.push(Action::RecordDropped {
+                        task: img.task,
+                        reason: DropReason::Infeasible,
+                    });
+                    return;
+                }
+                self.run_local(img, now_ms, out);
                 return;
             }
-            self.run_local(img, now_ms, out);
-            return;
+            DeviceIntake::ForceForward => {
+                out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
+                self.sent_to_edge.insert(img.task);
+                out.push(Action::Send {
+                    to: self.edge,
+                    msg: Message::Image(img),
+                    reliable: false,
+                });
+                return;
+            }
+            DeviceIntake::Place => {}
         }
-        // A depleted device cannot compute at all — forward everything.
-        if self.battery.as_ref().is_some_and(|b| b.depleted()) {
-            out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
-            self.sent_to_edge.insert(img.task);
-            out.push(Action::Send { to: self.edge, msg: Message::Image(img), reliable: false });
-            return;
-        }
+        // Place stage: the policy's device-level decision.
         let placement = {
             let ctx = DeviceCtx {
                 now_ms,
@@ -345,7 +361,7 @@ impl DeviceNode {
             out.push(Action::RecordRequeued { task });
             if depleted {
                 self.awaiting.remove(&task);
-                out.push(Action::RecordDropped { task });
+                out.push(Action::RecordDropped { task, reason: DropReason::Infeasible });
                 continue;
             }
             out.push(Action::RecordPlaced { task, placement: Placement::Local });
@@ -748,7 +764,7 @@ mod tests {
             crate::core::Constraint::for_app(AppId(1), 5_000.0, PrivacyClass::DeviceLocal, 0);
         let mut out = Vec::new();
         d.on_camera_frame(f, 3_600_100.0, &mut out);
-        assert!(out.iter().any(|a| matches!(a, Action::RecordDropped { task: TaskId(1) })));
+        assert!(out.iter().any(|a| matches!(a, Action::RecordDropped { task: TaskId(1), reason: DropReason::Infeasible })));
         assert!(!out.iter().any(|a| matches!(a, Action::Send { .. })));
         assert!(!out.iter().any(|a| matches!(a, Action::ContainerBusyUntil { .. })));
         assert_eq!(d.pool().busy_count(), 0);
@@ -781,7 +797,7 @@ mod tests {
         out.clear();
         d.on_profile_tick(3_601_000.0, &mut out); // edge silent past dead
         assert!(out.iter().any(|a| matches!(a, Action::RecordRequeued { task: TaskId(1) })));
-        assert!(out.iter().any(|a| matches!(a, Action::RecordDropped { task: TaskId(1) })));
+        assert!(out.iter().any(|a| matches!(a, Action::RecordDropped { task: TaskId(1), reason: DropReason::Infeasible })));
         assert!(!out.iter().any(|a| matches!(a, Action::ContainerBusyUntil { .. })));
         // Dropped means dropped: a straggling edge Result for the frame
         // must not re-resolve it (the live resolution counter would

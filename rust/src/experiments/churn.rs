@@ -21,7 +21,8 @@
 //!   cell.
 
 use crate::config::{
-    CellConfig, ChurnEvent, ChurnKind, ChurnTarget, DeviceConfig, SystemConfig, WorkloadConfig,
+    CellConfig, ChurnEvent, ChurnKind, ChurnTarget, DeviceConfig, RandomChurnConfig, SystemConfig,
+    WorkloadConfig,
 };
 use crate::core::NodeClass;
 use crate::scheduler::PolicyKind;
@@ -242,6 +243,101 @@ pub fn render_churn(rows: &[ChurnRow]) -> String {
     out
 }
 
+// ---------------------------------------------------------------------
+// Churn-rate sweep: met fraction vs. MTBF (ROADMAP PR 2 follow-up).
+// ---------------------------------------------------------------------
+
+/// Mean-time-between-failures points swept (ms); the rightmost is close
+/// to churn-free over the ~15 s stream span.
+pub const SWEEP_MTBF_MS: [f64; 4] = [2_000.0, 5_000.0, 10_000.0, 40_000.0];
+
+/// One (MTBF × policy) run of the churn-rate sweep.
+#[derive(Debug, Clone)]
+pub struct ChurnSweepRow {
+    pub mtbf_ms: f64,
+    pub policy: PolicyKind,
+    pub total: usize,
+    pub met: usize,
+    pub requeued: usize,
+    pub replaced: usize,
+    pub dropped: usize,
+}
+
+impl ChurnSweepRow {
+    pub fn met_fraction(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.met as f64 / self.total as f64
+        }
+    }
+}
+
+/// Run one sweep cell: the 2-cell churn layout under seeded
+/// `[churn_random]` fail/repair cycles at the given MTBF (MTTR fixed at
+/// 1 s), reusing the PR-2 injection machinery end to end.
+pub fn churnsweep_run(mtbf_ms: f64, policy: PolicyKind, seed: u64, n_images: u32) -> ChurnSweepRow {
+    let mut cfg = churn_config(2);
+    cfg.policy = policy;
+    cfg.churn.random =
+        Some(RandomChurnConfig { device_mtbf_ms: mtbf_ms, device_mttr_ms: 1_000.0 });
+    let report = ScenarioBuilder::new(cfg)
+        .workload(churn_workload(n_images, 5_000.0))
+        .seed(seed)
+        .run();
+    ChurnSweepRow {
+        mtbf_ms,
+        policy,
+        total: report.summary.total,
+        met: report.summary.met,
+        requeued: report.summary.requeued,
+        replaced: report.summary.replaced,
+        dropped: report.summary.dropped,
+    }
+}
+
+/// The full sweep: MTBF points × the paper's four policies.
+pub fn churnsweep(seed: u64) -> Vec<ChurnSweepRow> {
+    let mut rows = Vec::new();
+    for &mtbf in &SWEEP_MTBF_MS {
+        for policy in PolicyKind::PAPER {
+            rows.push(churnsweep_run(mtbf, policy, seed, 150));
+        }
+    }
+    rows
+}
+
+/// Render the sweep: met fraction per policy as MTBF shrinks, plus the
+/// DDS requeue counters.
+pub fn render_churnsweep(rows: &[ChurnSweepRow]) -> String {
+    let mut out = String::from(
+        "## Churn sweep: met fraction vs device MTBF (2 cells, seeded random churn, MTTR 1 s)\n",
+    );
+    out.push_str(&format!(
+        "{:>10} {:>8} {:>8} {:>8} {:>8} {:>10} {:>10} {:>9}\n",
+        "mtbf ms", "aor", "aoe", "eods", "dds", "requeued", "replaced", "dropped"
+    ));
+    for &mtbf in &SWEEP_MTBF_MS {
+        let get = |p: PolicyKind| {
+            rows.iter().find(|r| r.mtbf_ms == mtbf && r.policy == p)
+        };
+        let frac = |p| get(p).map_or(0.0, ChurnSweepRow::met_fraction);
+        let dds = get(PolicyKind::Dds);
+        out.push_str(&format!(
+            "{:>10} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>10} {:>10} {:>9}\n",
+            mtbf,
+            frac(PolicyKind::Aor),
+            frac(PolicyKind::Aoe),
+            frac(PolicyKind::Eods),
+            frac(PolicyKind::Dds),
+            dds.map_or(0, |r| r.requeued),
+            dds.map_or(0, |r| r.replaced),
+            dds.map_or(0, |r| r.dropped),
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +388,35 @@ mod tests {
 
     // (The DDS-vs-baselines edge-failure comparison lives in
     // tests/churn_integration.rs to avoid running the same sweep twice.)
+
+    #[test]
+    fn churnsweep_degrades_with_mtbf_and_is_deterministic() {
+        // Heavy churn (2 s MTBF over a ~9 s span) must hurt: DDS meets
+        // strictly fewer deadlines than under near-absent churn, and the
+        // requeue machinery visibly fires.
+        let heavy = churnsweep_run(2_000.0, PolicyKind::Dds, 11, 90);
+        let light = churnsweep_run(40_000.0, PolicyKind::Dds, 11, 90);
+        assert_eq!(heavy.total, 180); // 2 cells × 90 frames
+        assert!(heavy.met < light.met, "heavy {} vs light {}", heavy.met, light.met);
+        assert!(heavy.met_fraction() < light.met_fraction());
+        // Same seed → identical row (the PR-2 determinism guarantee).
+        let again = churnsweep_run(2_000.0, PolicyKind::Dds, 11, 90);
+        assert_eq!(heavy.met, again.met);
+        assert_eq!(heavy.requeued, again.requeued);
+        assert_eq!(heavy.dropped, again.dropped);
+    }
+
+    #[test]
+    fn churnsweep_render_has_all_mtbf_rows() {
+        let rows = vec![
+            churnsweep_run(2_000.0, PolicyKind::Dds, 7, 24),
+            churnsweep_run(40_000.0, PolicyKind::Dds, 7, 24),
+        ];
+        let s = render_churnsweep(&rows);
+        assert!(s.contains("mtbf"));
+        assert!(s.contains("2000"));
+        assert!(s.contains("40000"));
+    }
 
     #[test]
     fn cell_join_adds_late_capacity() {

@@ -9,13 +9,18 @@
 pub mod churn;
 pub mod federation;
 pub mod figures;
+pub mod overload;
 pub mod slo;
 pub mod tables;
 
 pub use churn::{
-    apply_scenario, churn, churn_config, churn_run, render_churn, ChurnRow, ChurnScenario,
+    apply_scenario, churn, churn_config, churn_run, churnsweep, churnsweep_run, render_churn,
+    render_churnsweep, ChurnRow, ChurnScenario, ChurnSweepRow, SWEEP_MTBF_MS,
 };
 pub use federation::{fed, fed_config, fed_run, render_fed, FedRow};
+pub use overload::{
+    overload, overload_config, overload_run, render_overload, OverloadRow, OVERLOAD_MULTS,
+};
 pub use slo::{render_slo, slo, slo_config, slo_run, SloRow, SLO_CELLS};
 pub use figures::{fig5, fig6, fig7, fig8, Fig5Row, Fig7Row, Fig8Row};
 pub use tables::{table2, table3, table4, table5, table6, TableRow};

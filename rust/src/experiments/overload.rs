@@ -1,0 +1,244 @@
+//! Overload experiment (DESIGN.md §3): met-fraction-vs-load curves past
+//! saturation, comparing the pipeline's overload-control stages against
+//! the strict-priority baseline.
+//!
+//! Two tenants share one cell (camera + worker device):
+//!
+//! - **strict** — priority 2, 1.5 s deadline, moderate rate (~40 % of
+//!   cell capacity at 1×). The tenant whose SLO must survive overload.
+//! - **besteffort** — priority 0, 4 s deadline, a flood at 4× the strict
+//!   frame rate. The tenant strict priority starves: its unbounded queue
+//!   grows without limit, so almost every frame waits past its deadline.
+//!
+//! Two pipeline modes per load point:
+//!
+//! - **strict** — no `[admission]`, no weights: PR-3 behaviour (strict
+//!   priority + EDF dispatch, admit everything, never shed).
+//! - **fair** — `[admission]` (best-effort rate-limited to roughly its
+//!   fair-share service rate, per-app queue ceiling, deadline shed) plus
+//!   DRR weights 2:1 (strict:besteffort).
+//!
+//! The arrival multiplier sweeps 1×→4× by shrinking both inter-frame
+//! intervals. Expected shape (the acceptance claim): past 2× saturation
+//! the fair mode's admitted best-effort frames still complete in-deadline
+//! (met fraction ≈ its service share) while the strict mode's best-effort
+//! met fraction collapses toward zero — without degrading the strict
+//! tenant, whose DRR share exceeds its offered load.
+
+use crate::config::{AdmissionConfig, AppSpec, SystemConfig};
+use crate::core::PrivacyClass;
+use crate::metrics::RunSummary;
+use crate::scheduler::PolicyKind;
+use crate::sim::workload::ArrivalPattern;
+use crate::sim::ScenarioBuilder;
+
+use super::churn::churn_config;
+
+/// Arrival-rate multipliers swept past saturation.
+pub const OVERLOAD_MULTS: [u32; 4] = [1, 2, 3, 4];
+
+/// One (multiplier × mode × policy) run.
+#[derive(Debug, Clone)]
+pub struct OverloadRow {
+    pub mult: u32,
+    /// Admission + weighted-fair sharing on (vs. strict-priority PR-3
+    /// behaviour).
+    pub fair: bool,
+    pub policy: PolicyKind,
+    pub summary: RunSummary,
+}
+
+/// The two-tenant single-cell config at arrival multiplier `mult`.
+/// `n_images` scales the strict stream (best-effort floods at 4× the
+/// frame count on a 4×-faster clock, so both spans coincide).
+pub fn overload_config(mult: u32, fair: bool, n_images: u32) -> SystemConfig {
+    let mut cfg = churn_config(1);
+    let m = mult as f64;
+    cfg.apps = vec![
+        AppSpec {
+            name: "strict".into(),
+            deadline_ms: 1_500.0,
+            privacy: PrivacyClass::Open,
+            priority: 2,
+            n_images,
+            interval_ms: 400.0 / m,
+            size_kb: 29.0,
+            side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+            weight: fair.then_some(2),
+            admit_rate_per_s: None, // un-throttled (falls back to ∞)
+        },
+        AppSpec {
+            name: "besteffort".into(),
+            deadline_ms: 4_000.0,
+            privacy: PrivacyClass::Open,
+            priority: 0,
+            n_images: n_images * 4,
+            interval_ms: 100.0 / m,
+            size_kb: 29.0,
+            side_px: 64,
+            pattern: ArrivalPattern::Uniform,
+            weight: fair.then_some(1),
+            // Roughly the best-effort DRR service share of the edge pool:
+            // admitted frames drain fast enough to meet their deadline.
+            admit_rate_per_s: fair.then_some(3.0),
+        },
+    ];
+    if fair {
+        cfg.admission = Some(AdmissionConfig {
+            rate_per_s: f64::INFINITY,
+            burst: 4.0,
+            queue_ceiling: 8,
+            deadline_shed: true,
+        });
+    }
+    cfg
+}
+
+/// Run one sweep cell.
+pub fn overload_run(
+    mult: u32,
+    fair: bool,
+    policy: PolicyKind,
+    seed: u64,
+    n_images: u32,
+) -> OverloadRow {
+    let mut cfg = overload_config(mult, fair, n_images);
+    cfg.policy = policy;
+    let report = ScenarioBuilder::new(cfg).seed(seed).run();
+    OverloadRow { mult, fair, policy, summary: report.summary }
+}
+
+/// The full sweep: multipliers × strict/fair × the paper's four policies.
+pub fn overload(seed: u64, n_images: u32) -> Vec<OverloadRow> {
+    let mut rows = Vec::new();
+    for &mult in &OVERLOAD_MULTS {
+        for fair in [false, true] {
+            for policy in PolicyKind::PAPER {
+                rows.push(overload_run(mult, fair, policy, seed, n_images));
+            }
+        }
+    }
+    rows
+}
+
+/// Render the sweep: one block per load multiplier, per-app met fractions
+/// for strict vs fair side by side, plus the admission counters and the
+/// privacy line the CI smoke step asserts on.
+pub fn render_overload(rows: &[OverloadRow]) -> String {
+    let mut out = String::from(
+        "## Overload: met fraction past saturation — strict priority vs admission+fair-share\n",
+    );
+    for &mult in &OVERLOAD_MULTS {
+        out.push_str(&format!("### arrival rate {mult}x\n"));
+        out.push_str(&format!(
+            "{:>10} {:>12} {:>10} {:>10} {:>9} {:>6} {:>8} {:>8}\n",
+            "policy", "mode", "strictMF", "beMF", "met", "miss", "rejected", "shed"
+        ));
+        for policy in PolicyKind::PAPER {
+            for fair in [false, true] {
+                let Some(row) = rows
+                    .iter()
+                    .find(|r| r.mult == mult && r.fair == fair && r.policy == policy)
+                else {
+                    continue;
+                };
+                let frac = |i: u16| {
+                    row.summary
+                        .app(crate::core::AppId(i))
+                        .map_or(0.0, |a| a.met_fraction())
+                };
+                out.push_str(&format!(
+                    "{:>10} {:>12} {:>10.3} {:>10.3} {:>9} {:>6} {:>8} {:>8}\n",
+                    policy.as_str(),
+                    if fair { "admit+fair" } else { "strict" },
+                    frac(0),
+                    frac(1),
+                    row.summary.met,
+                    row.summary.missed,
+                    row.summary.rejected,
+                    row.summary.shed,
+                ));
+            }
+        }
+    }
+    let violations: usize = rows.iter().map(|r| r.summary.privacy_violations).sum();
+    out.push_str(&format!("Overload privacy violations (all runs): {violations}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::AppId;
+
+    #[test]
+    fn overload_config_shape() {
+        for fair in [false, true] {
+            let c = overload_config(2, fair, 40);
+            c.validate().unwrap();
+            assert_eq!(c.apps.len(), 2);
+            // Spans coincide: 40×200 = 160×50 (at 2×).
+            assert_eq!(c.span_ms(), 8_000.0);
+            assert_eq!(c.admission.is_some(), fair);
+            assert_eq!(c.apps[0].weight.is_some(), fair);
+            if fair {
+                let p = c.admission_params().unwrap();
+                assert_eq!(p.per_app_rate, vec![None, Some(3.0)]);
+                assert!(p.deadline_shed);
+            }
+        }
+    }
+
+    #[test]
+    fn fair_mode_rescues_best_effort_without_degrading_strict() {
+        // The acceptance claim, at 2× saturation (AOE: pure pool
+        // dynamics — every frame reaches the edge pool, so the comparison
+        // isolates the pipeline's Admit/Dispatch/Overload stages).
+        let strict = overload_run(2, false, PolicyKind::Aoe, 7, 60);
+        let fair = overload_run(2, true, PolicyKind::Aoe, 7, 60);
+        let mf = |r: &OverloadRow, app: u16| {
+            r.summary.app(AppId(app)).map_or(0.0, |a| a.met_fraction())
+        };
+        // Best-effort: admission + fair share beats strict priority.
+        assert!(
+            mf(&fair, 1) > mf(&strict, 1),
+            "fair BE {:.3} must beat strict BE {:.3}",
+            mf(&fair, 1),
+            mf(&strict, 1)
+        );
+        // The strict tenant is not degraded (small tolerance for queue
+        // reshuffling).
+        assert!(
+            mf(&fair, 0) >= 0.9 * mf(&strict, 0),
+            "fair strict-app {:.3} vs strict-mode {:.3}",
+            mf(&fair, 0),
+            mf(&strict, 0)
+        );
+        // The fair mode's control surfaces actually fired and are
+        // accounted: rejects are counted, not silently dropped.
+        assert!(fair.summary.rejected > 0, "admission must reject under 2x flood");
+        assert_eq!(fair.summary.privacy_violations, 0);
+        assert_eq!(strict.summary.privacy_violations, 0);
+        // Accounting identity holds in both modes.
+        for r in [&strict, &fair] {
+            assert_eq!(
+                r.summary.met + r.summary.missed + r.summary.dropped,
+                r.summary.total
+            );
+            assert!(r.summary.rejected + r.summary.shed <= r.summary.dropped);
+        }
+    }
+
+    #[test]
+    fn render_has_modes_and_privacy_line() {
+        let rows = vec![
+            overload_run(1, false, PolicyKind::Aoe, 7, 12),
+            overload_run(1, true, PolicyKind::Aoe, 7, 12),
+        ];
+        let s = render_overload(&rows);
+        assert!(s.contains("admit+fair"));
+        assert!(s.contains("strictMF"));
+        assert!(s.contains("Overload privacy violations (all runs): 0"));
+    }
+}

@@ -68,6 +68,8 @@ pub fn slo_config(n_cells: usize, n_images: u32) -> SystemConfig {
             size_kb: 29.0,
             side_px: 64,
             pattern: ArrivalPattern::Uniform,
+            weight: None,
+            admit_rate_per_s: None,
         },
         AppSpec {
             name: "blur".into(),
@@ -79,6 +81,8 @@ pub fn slo_config(n_cells: usize, n_images: u32) -> SystemConfig {
             size_kb: 29.0,
             side_px: 64,
             pattern: ArrivalPattern::Uniform,
+            weight: None,
+            admit_rate_per_s: None,
         },
         AppSpec {
             name: "analytics".into(),
@@ -90,6 +94,8 @@ pub fn slo_config(n_cells: usize, n_images: u32) -> SystemConfig {
             size_kb: 87.0,
             side_px: 128,
             pattern: ArrivalPattern::Uniform,
+            weight: None,
+            admit_rate_per_s: None,
         },
     ];
     cfg

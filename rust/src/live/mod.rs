@@ -160,15 +160,23 @@ fn apply_edge_action(
             recorder.inner.lock().unwrap().started(task, edge_id, at_ms);
         }
         Action::RecordCompleted { task, at_ms, process_ms } => {
-            recorder.inner.lock().unwrap().completed(task, at_ms, process_ms);
-            recorder.resolved.fetch_add(1, Ordering::SeqCst);
+            // A completion refused by the recorder (the task already
+            // resolved via an explicit drop) must not bump the resolution
+            // counter again — the run would end one pending frame early.
+            if recorder.inner.lock().unwrap().completed(task, at_ms, process_ms) {
+                recorder.resolved.fetch_add(1, Ordering::SeqCst);
+            }
         }
         Action::RecordRequeued { task } => {
             recorder.inner.lock().unwrap().requeued(task);
         }
-        Action::RecordDropped { .. } => {
-            // Lost for good; the record's default verdict is Dropped.
-            recorder.resolved.fetch_add(1, Ordering::SeqCst);
+        Action::RecordDropped { task, reason } => {
+            // Deliberately given up (infeasible / admission reject /
+            // overload shed); the record's default verdict is Dropped.
+            // Only the first resolution counts.
+            if recorder.inner.lock().unwrap().dropped(task, reason) {
+                recorder.resolved.fetch_add(1, Ordering::SeqCst);
+            }
         }
     }
 }
@@ -204,13 +212,18 @@ impl LiveCluster {
         let mut edge_nodes: Vec<Arc<Mutex<EdgeNode>>> = Vec::new();
         let mut appliers: Vec<Arc<dyn Fn(Vec<Action>) + Send + Sync>> = Vec::new();
 
+        // Pipeline stage parameters shared with the sim driver — one
+        // derivation, two drivers (DESIGN.md §3).
+        let discipline = cfg.queue_discipline();
+        let admission = cfg.admission_params();
+
         for (c, &edge_id) in edge_ids.iter().enumerate() {
             // One derivation shared with the sim driver (SystemConfig::
             // cell_warm_containers / cell_edge_load) — the two drivers
             // must not drift.
             let cell_warm = cfg.cell_warm_containers(c);
-            let mut edge_pool =
-                ContainerPool::new(profile_for(NodeClass::EdgeServer), cell_warm);
+            let mut edge_pool = ContainerPool::new(profile_for(NodeClass::EdgeServer), cell_warm)
+                .with_discipline(discipline.clone());
             edge_pool.set_bg_load(cfg.cell_edge_load(c));
             let edge_seed = cfg.seed.wrapping_add((c as u64) << 32);
             let mut edge = EdgeNode::new(
@@ -222,6 +235,9 @@ impl LiveCluster {
             );
             if cfg.churn.enabled() {
                 edge = edge.with_detector(cfg.churn.detector());
+            }
+            if let Some(params) = admission.clone() {
+                edge = edge.with_admission(params);
             }
             let edge_node = Arc::new(Mutex::new(edge));
 
@@ -470,7 +486,8 @@ impl LiveCluster {
             }
             device_txs.push(tx.clone());
 
-            let mut pool = ContainerPool::new(profile_for(dcfg.class), dcfg.warm_containers);
+            let mut pool = ContainerPool::new(profile_for(dcfg.class), dcfg.warm_containers)
+                .with_discipline(discipline.clone());
             pool.set_bg_load(dcfg.cpu_load_pct);
             let mut node = DeviceNode::new(
                 id,
@@ -844,14 +861,20 @@ fn device_main(
                     recorder.inner.lock().unwrap().started(task, id, at_ms);
                 }
                 Action::RecordCompleted { task, at_ms, process_ms } => {
-                    recorder.inner.lock().unwrap().completed(task, at_ms, process_ms);
-                    recorder.resolved.fetch_add(1, Ordering::SeqCst);
+                    // Refused completions (task already resolved via an
+                    // explicit drop) must not double-count resolution.
+                    if recorder.inner.lock().unwrap().completed(task, at_ms, process_ms) {
+                        recorder.resolved.fetch_add(1, Ordering::SeqCst);
+                    }
                 }
                 Action::RecordRequeued { task } => {
                     recorder.inner.lock().unwrap().requeued(task);
                 }
-                Action::RecordDropped { .. } => {
-                    recorder.resolved.fetch_add(1, Ordering::SeqCst);
+                Action::RecordDropped { task, reason } => {
+                    // Only the first resolution counts (see apply_edge_action).
+                    if recorder.inner.lock().unwrap().dropped(task, reason) {
+                        recorder.resolved.fetch_add(1, Ordering::SeqCst);
+                    }
                 }
             }
         }

@@ -7,7 +7,8 @@
 //!                 [--interval MS] [--deadline MS] [--seed S] [--csv out.csv]
 //! edge-dds sweep  [--config cfg.toml] [--images N] [--interval MS]
 //!                 [--deadline MS]                  # all paper policies
-//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|fed|churn|slo|all
+//! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|
+//!                       fed|churn|churnsweep|slo|overload|all
 //! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
 //!                 [--interval MS] [--deadline MS] [--side PX]
 //! ```
@@ -22,7 +23,14 @@
 //! `cell = c`), optional seeded `[churn_random]` rates, and `[failure]`
 //! detector thresholds. `repro --exp churn` compares deadline satisfaction
 //! of DDS vs. the baselines under device churn, edge failure, and mid-run
-//! cell join across 1/2/4 cells.
+//! cell join across 1/2/4 cells; `repro --exp churnsweep` plots met
+//! fraction against the `[churn_random]` MTBF.
+//!
+//! Overload control (DESIGN.md §3): the `[admission]` section (per-app
+//! token-bucket rate + queue ceiling + `deadline_shed`) and `[[app]]`
+//! `weight` keys (weighted-fair DRR dispatch) drive the pipeline's
+//! Admit/Dispatch/Overload stages; `repro --exp overload` sweeps arrival
+//! rate past saturation comparing strict priority vs. admission+fair.
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -73,14 +81,15 @@ fn print_usage() {
          \x20 edge-dds sim    [--config F] [--policy P] [--images N] [--interval MS]\n\
          \x20                 [--deadline MS] [--seed S] [--csv OUT]\n\
          \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
-         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|slo|all\n\
+         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|churnsweep|slo|overload|all\n\
          \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
          \x20                 [--interval MS] [--deadline MS] [--side PX]\n\
          \n\
          POLICIES: aor aoe eods dds dds-no-avail dds-energy round-robin random\n\
          FEDERATION: [[cell]] tables + device `cell = N` + [federation] in --config\n\
          CHURN: [[churn]] events + [churn_random] + [failure] thresholds in --config\n\
-         APPS: [[app]] tables (name, deadline_ms, privacy, priority, rate) in --config"
+         APPS: [[app]] tables (name, deadline_ms, privacy, priority, rate, weight) in --config\n\
+         OVERLOAD: [admission] (rate_per_s, burst, queue_ceiling, deadline_shed) in --config"
     );
 }
 
@@ -225,6 +234,20 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
         let rows = experiments::churn(seed);
         println!("{}", experiments::render_churn(&rows));
     }
+    if all || exp == "churnsweep" {
+        matched = true;
+        let rows = experiments::churnsweep(seed);
+        println!("{}", experiments::render_churnsweep(&rows));
+    }
+    if all || exp == "overload" {
+        matched = true;
+        // --images scales the strict tenant's stream (the CI smoke step
+        // runs a reduced scenario); best-effort floods at 4× that count.
+        let n_images: u32 =
+            flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(60);
+        let rows = experiments::overload(seed, n_images);
+        println!("{}", experiments::render_overload(&rows));
+    }
     if all || exp == "slo" {
         matched = true;
         // --images scales the strict detector stream (the CI smoke step
@@ -274,6 +297,9 @@ fn cmd_live(flags: &Flags) -> Result<()> {
     let timeout = Duration::from_secs_f64((latest_start + span + 60_000.0) / 1e3);
     let summary = cluster.wait(timeout);
     println!("{}", summary_json(&format!("live-{}", cfg.policy), &summary));
+    // Per-app rows — the same table the sim experiment writers render.
+    let names: Vec<String> = cfg.effective_apps().iter().map(|a| a.name.clone()).collect();
+    print!("{}", edge_dds::metrics::render_per_app(&summary, &names));
     println!("streamed {n} frames; met {}/{}", summary.met, summary.total);
     cluster.shutdown();
     Ok(())

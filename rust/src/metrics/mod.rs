@@ -5,7 +5,7 @@ pub mod recorder;
 pub mod writer;
 
 pub use recorder::{Recorder, TaskRecord};
-pub use writer::{csv_line, write_csv, write_json_summary};
+pub use writer::{csv_line, render_per_app, write_csv, write_json_summary};
 
 use crate::core::{AppId, Verdict};
 use crate::util::Summary;
@@ -63,6 +63,12 @@ pub struct RunSummary {
     /// `cell_local` frames. The node-layer filters make this structurally
     /// zero; the counter is the acceptance proof.
     pub privacy_violations: usize,
+    /// Frames the edge's Admit stage refused (subset of `dropped`;
+    /// DESIGN.md §3). Always 0 without an `[admission]` config.
+    pub rejected: usize,
+    /// Best-effort frames the Overload stage shed at enqueue (subset of
+    /// `dropped`). Always 0 unless `admission.deadline_shed` is set.
+    pub shed: usize,
     /// Per-application outcome tables, AppId-sorted (a registry-less run
     /// has exactly one row, the default app).
     pub per_app: Vec<AppSummary>,

@@ -2,7 +2,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 
-use crate::core::{AppId, ImageMeta, NodeId, Placement, PrivacyClass, TaskId, Verdict};
+use crate::core::{AppId, DropReason, ImageMeta, NodeId, Placement, PrivacyClass, TaskId, Verdict};
 use crate::util::Summary;
 
 use super::{AppSummary, RunSummary};
@@ -34,6 +34,11 @@ pub struct TaskRecord {
     /// `cell_local`. Structurally zero under the node-layer privacy
     /// filters; the counter is the proof (DESIGN.md §Constraints & QoS).
     pub violations: u32,
+    /// Why a node deliberately gave up on the frame (admission reject,
+    /// overload shed, infeasible) — `None` for completed frames and for
+    /// frames that merely vanished (loss/churn). See
+    /// [`crate::core::DropReason`].
+    pub drop_reason: Option<DropReason>,
     pub verdict: Verdict,
 }
 
@@ -87,9 +92,29 @@ impl Recorder {
                 process_ms: None,
                 requeues: 0,
                 violations: 0,
+                drop_reason: None,
                 verdict: Verdict::Dropped, // until completed
             },
         );
+    }
+
+    /// A node deliberately gave up on the task (Admit reject, Overload
+    /// shed, infeasible privacy/battery collision). The verdict stays the
+    /// default `Dropped`; the reason refines it for reports. First
+    /// resolution wins in this direction too: a straggling drop must not
+    /// relabel a frame that already completed, and a second drop (e.g. a
+    /// depleted device giving up on a frame the edge already rejected)
+    /// must not overwrite the first reason. Returns whether this call was
+    /// the first resolution — live mode's resolution counter gates on it,
+    /// mirroring [`Recorder::completed`].
+    pub fn dropped(&mut self, task: TaskId, reason: DropReason) -> bool {
+        match self.records.get_mut(&task) {
+            Some(r) if r.completed_ms.is_none() && r.drop_reason.is_none() => {
+                r.drop_reason = Some(reason);
+                true
+            }
+            _ => false,
+        }
     }
 
     /// True when `node` is outside `origin`'s privacy scope.
@@ -132,10 +157,14 @@ impl Recorder {
     }
 
     /// The task's placement node was declared dead; it was pulled back for
-    /// re-placement (churn).
+    /// re-placement (churn). Requeues of already-resolved tasks (explicit
+    /// drop or completion won first) are not counted — they are replays of
+    /// frames whose outcome can no longer change.
     pub fn requeued(&mut self, task: TaskId) {
         if let Some(r) = self.records.get_mut(&task) {
-            r.requeues += 1;
+            if r.completed_ms.is_none() && r.drop_reason.is_none() {
+                r.requeues += 1;
+            }
         }
     }
 
@@ -152,15 +181,29 @@ impl Recorder {
 
     /// Mark completion; the verdict compares end-to-end latency with the
     /// task's deadline (the paper's "images that meet the requirements").
-    pub fn completed(&mut self, task: TaskId, at_ms: f64, process_ms: f64) {
-        if let Some(r) = self.records.get_mut(&task) {
-            r.completed_ms = Some(at_ms);
-            r.process_ms = Some(process_ms);
-            r.verdict = if at_ms - r.created_ms <= r.deadline_ms {
-                Verdict::Met
-            } else {
-                Verdict::Missed
-            };
+    ///
+    /// First resolution wins: a task already resolved by an explicit drop
+    /// (admission reject / overload shed / infeasible) keeps its Dropped
+    /// verdict — a straggling completion must not resurrect it, or
+    /// replayed accounting would depend on whether the run happened to
+    /// end before the straggler (e.g. a device locally re-running a frame
+    /// the edge rejected, after suspecting the edge dead). Returns
+    /// whether the completion was recorded — live mode's resolution
+    /// counter must not double-count a task that already resolved at the
+    /// drop.
+    pub fn completed(&mut self, task: TaskId, at_ms: f64, process_ms: f64) -> bool {
+        match self.records.get_mut(&task) {
+            Some(r) if r.drop_reason.is_none() => {
+                r.completed_ms = Some(at_ms);
+                r.process_ms = Some(process_ms);
+                r.verdict = if at_ms - r.created_ms <= r.deadline_ms {
+                    Verdict::Met
+                } else {
+                    Verdict::Missed
+                };
+                true
+            }
+            _ => false,
         }
     }
 
@@ -204,6 +247,11 @@ impl Recorder {
             .count();
         let privacy_violations =
             records.iter().map(|r| r.violations as usize).sum::<usize>();
+        let rejected = records
+            .iter()
+            .filter(|r| r.drop_reason == Some(DropReason::Rejected))
+            .count();
+        let shed = records.iter().filter(|r| r.drop_reason == Some(DropReason::Shed)).count();
 
         // Per-app tables, AppId-sorted (BTreeMap — deterministic rows).
         // Records are Copy, so partitioning into owned vectors lets the
@@ -245,6 +293,8 @@ impl Recorder {
             requeued,
             replaced,
             privacy_violations,
+            rejected,
+            shed,
             per_app,
         }
     }
@@ -359,6 +409,39 @@ mod tests {
         assert_eq!(rec.get(TaskId(3)).unwrap().requeues, 0);
         // Requeue of an unknown task is ignored.
         rec.requeued(TaskId(99));
+    }
+
+    #[test]
+    fn explicit_drop_wins_over_late_completion_and_vice_versa() {
+        use crate::core::DropReason;
+        // Task 1: rejected at the edge, then a device locally re-runs it
+        // after suspecting the edge dead (the churn requeue race). The
+        // drop resolved it first: the completion is refused, the verdict
+        // stays Dropped, and rejected stays a subset of dropped.
+        let mut rec = Recorder::new();
+        create(&mut rec, 1, 1, 29.0, 10_000.0, 0.0);
+        assert!(rec.dropped(TaskId(1), DropReason::Rejected), "first resolution");
+        assert!(!rec.completed(TaskId(1), 500.0, 400.0), "late completion must be refused");
+        // A second drop (e.g. a depleted device giving up on the same
+        // frame later) neither overwrites the reason nor counts again.
+        assert!(!rec.dropped(TaskId(1), DropReason::Infeasible));
+        // Spurious requeues of a resolved frame are not counted either.
+        rec.requeued(TaskId(1));
+        let r = rec.get(TaskId(1)).unwrap();
+        assert_eq!(r.verdict, Verdict::Dropped);
+        assert_eq!(r.drop_reason, Some(DropReason::Rejected));
+        assert_eq!(r.requeues, 0);
+        assert!(r.completed_ms.is_none());
+        // Task 2: completed first; a straggling drop must not relabel it.
+        create(&mut rec, 2, 1, 29.0, 10_000.0, 0.0);
+        assert!(rec.completed(TaskId(2), 500.0, 400.0));
+        assert!(!rec.dropped(TaskId(2), DropReason::Shed));
+        let r = rec.get(TaskId(2)).unwrap();
+        assert_eq!(r.verdict, Verdict::Met);
+        assert_eq!(r.drop_reason, None);
+        let s = rec.summarize();
+        assert_eq!((s.rejected, s.shed, s.dropped, s.met), (1, 0, 1, 1));
+        assert!(s.rejected + s.shed <= s.dropped);
     }
 
     #[test]

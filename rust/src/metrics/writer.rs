@@ -8,7 +8,7 @@ use anyhow::{Context, Result};
 
 use super::recorder::TaskRecord;
 use super::RunSummary;
-use crate::core::{Placement, Verdict};
+use crate::core::{DropReason, Placement, Verdict};
 
 /// One CSV line for a task record (see [`CSV_HEADER`]).
 pub const CSV_HEADER: &str =
@@ -21,10 +21,15 @@ pub fn csv_line(r: &TaskRecord) -> String {
         Placement::Offload(n) => format!("offload:{n}"),
         Placement::ToPeerEdge(n) => format!("peer-edge:{n}"),
     };
-    let verdict = match r.verdict {
-        Verdict::Met => "met",
-        Verdict::Missed => "missed",
-        Verdict::Dropped => "dropped",
+    // Rejected/shed drops carry their pipeline reason in the verdict
+    // column; every other drop (loss, churn, infeasible) keeps the legacy
+    // "dropped" spelling, so pre-pipeline outputs are byte-identical.
+    let verdict = match (r.verdict, r.drop_reason) {
+        (Verdict::Met, _) => "met",
+        (Verdict::Missed, _) => "missed",
+        (Verdict::Dropped, Some(DropReason::Rejected)) => "rejected",
+        (Verdict::Dropped, Some(DropReason::Shed)) => "shed",
+        (Verdict::Dropped, _) => "dropped",
     };
     let opt = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_default();
     format!(
@@ -91,8 +96,15 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
             )
         })
         .collect();
+    // Admission/overload counters appear only when the stages fired:
+    // legacy runs (no [admission]) serialize byte-identically to PR 3.
+    let overload = if s.rejected > 0 || s.shed > 0 {
+        format!(r#","rejected":{},"shed":{}"#, s.rejected, s.shed)
+    } else {
+        String::new()
+    };
     format!(
-        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{},"latency":{},"apps":[{}]}}"#,
+        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{}{},"latency":{},"apps":[{}]}}"#,
         name,
         s.total,
         s.met,
@@ -104,9 +116,42 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         s.requeued,
         s.replaced,
         s.privacy_violations,
+        overload,
         latency_json(&s.latency),
         apps.join(",")
     )
+}
+
+/// Render the per-app outcome table of a run summary — the same rows the
+/// SLO/overload experiment writers print, shared so live mode (CLI `live`
+/// and `examples/live_cluster.rs`) reports identical per-app columns.
+/// `names` maps `AppId` (registry order) to display names.
+pub fn render_per_app(s: &RunSummary, names: &[String]) -> String {
+    let mut out = format!(
+        "{:>12} {:>7} {:>6} {:>7} {:>8} {:>9} {:>9} {:>9} {:>5}\n",
+        "app", "total", "met", "missed", "dropped", "met_frac", "p50_ms", "p99_ms", "viol"
+    );
+    for a in &s.per_app {
+        let name = names.get(a.app.0 as usize).map(String::as_str).unwrap_or("?");
+        let (p50, p99) = a
+            .latency
+            .as_ref()
+            .map(|l| (format!("{:.0}", l.p50), format!("{:.0}", l.p99)))
+            .unwrap_or_else(|| ("-".into(), "-".into()));
+        out.push_str(&format!(
+            "{:>12} {:>7} {:>6} {:>7} {:>8} {:>9.3} {:>9} {:>9} {:>5}\n",
+            name,
+            a.total,
+            a.met,
+            a.missed,
+            a.dropped,
+            a.met_fraction(),
+            p50,
+            p99,
+            a.violations,
+        ));
+    }
+    out
 }
 
 /// Write a set of named summaries as a JSON array.
@@ -188,6 +233,82 @@ mod tests {
         assert!(js.contains(r#""privacy_violations":0"#));
         // A registry-less run carries exactly one per-app row: app 0.
         assert!(js.contains(r#""apps":[{"app":0,"#));
+    }
+
+    #[test]
+    fn rejected_and_shed_render_distinct_verdicts_and_json_fields() {
+        use crate::core::{DropReason, TaskId};
+        let mut rec = Recorder::new();
+        for t in 1..=3u64 {
+            rec.created(&ImageMeta {
+                task: TaskId(t),
+                origin: NodeId(1),
+                size_kb: 29.0,
+                side_px: 64,
+                created_ms: 0.0,
+                constraint: Constraint::deadline(1000.0),
+                seq: t,
+            });
+        }
+        rec.dropped(TaskId(1), DropReason::Rejected);
+        rec.dropped(TaskId(2), DropReason::Shed);
+        rec.dropped(TaskId(3), DropReason::Infeasible);
+        let records = rec.records();
+        assert!(csv_line(&records[0]).ends_with(",rejected"));
+        assert!(csv_line(&records[1]).ends_with(",shed"));
+        // Infeasible keeps the legacy spelling (byte-identical outputs).
+        assert!(csv_line(&records[2]).ends_with(",dropped"));
+        let s = rec.summarize();
+        assert_eq!((s.rejected, s.shed, s.dropped), (1, 1, 3));
+        let js = summary_json("overloaded", &s);
+        assert!(js.contains(r#""rejected":1,"shed":1"#));
+    }
+
+    #[test]
+    fn legacy_json_has_no_overload_fields() {
+        // A run where the Admit/Overload stages never fired serializes
+        // without the rejected/shed keys — byte-identical to PR 3.
+        let mut rec = Recorder::new();
+        rec.created(&ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(1000.0),
+            seq: 1,
+        });
+        let js = summary_json("legacy", &rec.summarize());
+        assert!(!js.contains("rejected"));
+        assert!(!js.contains("shed"));
+    }
+
+    #[test]
+    fn per_app_table_renders_names_and_fractions() {
+        use crate::core::{AppId, PrivacyClass, TaskId};
+        let mut rec = Recorder::new();
+        for (t, app) in [(1u64, 0u16), (2, 1)] {
+            rec.created(&ImageMeta {
+                task: TaskId(t),
+                origin: NodeId(1),
+                size_kb: 29.0,
+                side_px: 64,
+                created_ms: 0.0,
+                constraint: Constraint::for_app(AppId(app), 1_000.0, PrivacyClass::Open, 0),
+                seq: t,
+            });
+        }
+        rec.started(TaskId(1), NodeId(1), 1.0);
+        rec.completed(TaskId(1), 500.0, 400.0);
+        let table = render_per_app(
+            &rec.summarize(),
+            &["detect".to_string(), "analytics".to_string()],
+        );
+        assert!(table.contains("met_frac"));
+        assert!(table.contains("detect"));
+        assert!(table.contains("analytics"));
+        assert!(table.contains("1.000"));
+        assert!(table.contains("0.000"));
     }
 
     #[test]

@@ -42,6 +42,10 @@ pub struct ProfileTable {
     /// Insertion order — deterministic candidate iteration for the
     /// scheduler (HashMap order is not).
     order: Vec<NodeId>,
+    /// Mutation counter: bumped on every register/deregister/apply. Keys
+    /// the scheduling pipeline's candidate-snapshot cache — a snapshot
+    /// built against version v is valid exactly while the version stays v.
+    version: u64,
 }
 
 impl ProfileTable {
@@ -49,8 +53,14 @@ impl ProfileTable {
         Self::default()
     }
 
+    /// Current mutation version (see the `version` field).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
     /// Register a device at Join time.
     pub fn register(&mut self, node: NodeId, class: NodeClass, warm: u32, now_ms: f64) {
+        self.version += 1;
         if !self.devices.contains_key(&node) {
             self.order.push(node);
         }
@@ -71,6 +81,7 @@ impl ProfileTable {
 
     /// Remove a device (churn / failure injection).
     pub fn deregister(&mut self, node: NodeId) {
+        self.version += 1;
         self.devices.remove(&node);
         self.order.retain(|&n| n != node);
     }
@@ -78,6 +89,7 @@ impl ProfileTable {
     /// Apply a UP push. Unknown senders are ignored (not yet joined —
     /// the paper requires certification before participation).
     pub fn apply(&mut self, update: &ProfileUpdate) {
+        self.version += 1;
         if let Some(s) = self.devices.get_mut(&update.node) {
             s.busy_containers = update.busy_containers;
             s.warm_containers = update.warm_containers;
@@ -149,6 +161,8 @@ impl PeerEdgeState {
 pub struct PeerTable {
     peers: HashMap<NodeId, PeerEdgeState>,
     order: Vec<NodeId>,
+    /// Mutation counter (see [`ProfileTable::version`]).
+    version: u64,
 }
 
 impl PeerTable {
@@ -156,8 +170,14 @@ impl PeerTable {
         Self::default()
     }
 
+    /// Current mutation version (see [`ProfileTable::version`]).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
     /// Register a peer edge with no state yet (its first gossip fills it).
     pub fn register(&mut self, edge: NodeId, now_ms: f64) {
+        self.version += 1;
         if !self.peers.contains_key(&edge) {
             self.order.push(edge);
             self.peers.insert(
@@ -181,6 +201,7 @@ impl PeerTable {
     /// Apply a gossip summary; unknown senders auto-register (virtual mode
     /// has no explicit edge-join handshake).
     pub fn apply(&mut self, s: &EdgeSummary) {
+        self.version += 1;
         if !self.peers.contains_key(&s.edge) {
             self.order.push(s.edge);
         }
@@ -201,6 +222,7 @@ impl PeerTable {
     /// Remove a peer declared dead by the failure detector (churn). It
     /// re-registers automatically on its next gossip after recovery.
     pub fn evict(&mut self, edge: NodeId) {
+        self.version += 1;
         self.peers.remove(&edge);
         self.order.retain(|&n| n != edge);
     }
@@ -208,6 +230,7 @@ impl PeerTable {
     /// Optimistic busy bump after forwarding a task to `edge` — keeps a
     /// burst from all picking the same peer before its next gossip.
     pub fn bump_busy(&mut self, edge: NodeId) {
+        self.version += 1;
         if let Some(p) = self.peers.get_mut(&edge) {
             p.busy_containers += 1;
         }
@@ -367,6 +390,38 @@ mod tests {
         // Recovery: the next gossip re-registers it.
         t.apply(&gossip(3, 0, 4, 0, 500.0));
         assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn versions_bump_on_every_mutation() {
+        // The pipeline's snapshot cache keys on these counters: every
+        // mutation path must bump, reads must not.
+        let mut t = ProfileTable::new();
+        assert_eq!(t.version(), 0);
+        t.register(NodeId(1), NodeClass::RaspberryPi, 2, 0.0);
+        let v1 = t.version();
+        assert!(v1 > 0);
+        t.apply(&up(1, 1, 2, 10.0));
+        let v2 = t.version();
+        assert!(v2 > v1);
+        let _ = t.get(NodeId(1));
+        let _ = t.iter().count();
+        assert_eq!(t.version(), v2, "reads must not bump the version");
+        t.deregister(NodeId(1));
+        assert!(t.version() > v2);
+
+        let mut p = PeerTable::new();
+        assert_eq!(p.version(), 0);
+        p.register(NodeId(3), 0.0);
+        let v1 = p.version();
+        p.apply(&gossip(3, 0, 4, 0, 10.0));
+        let v2 = p.version();
+        assert!(v2 > v1);
+        p.bump_busy(NodeId(3));
+        let v3 = p.version();
+        assert!(v3 > v2);
+        p.evict(NodeId(3));
+        assert!(p.version() > v3);
     }
 
     #[test]

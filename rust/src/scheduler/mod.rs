@@ -1,8 +1,14 @@
-//! Scheduling policies — the paper's DDS and its comparison groups.
+//! Scheduling policies — the paper's DDS and its comparison groups —
+//! and the staged scheduling pipeline they are the Place stage of.
 //!
 //! Policies are *pure decision logic* shared verbatim by the discrete-event
 //! simulator and the live socket deployment: both construct the same
 //! [`DeviceCtx`]/[`EdgeCtx`] views and call the same `decide_*` methods.
+//! The per-frame decision path around them is the explicit stage sequence
+//! `Admit → Filter → Place → Dispatch → Overload` (see [`pipeline`] and
+//! DESIGN.md §3); the edge-level context carries a
+//! [`pipeline::CandidateSnapshot`] — the MP and peer tables resolved once
+//! per decision — instead of raw table references.
 //!
 //! Three decision points — the paper's two levels plus the federation
 //! extension (DESIGN.md §Federation):
@@ -15,17 +21,16 @@
 //!   chosen from gossiped MP summaries. Only the DDS family federates;
 //!   the comparison baselines never return `ToPeerEdge`.
 
+pub mod pipeline;
 pub mod policies;
 
 use anyhow::{bail, Result};
 
+pub use pipeline::{AdmissionParams, AdmitVerdict, CandidateSnapshot, EdgePipeline};
 pub use policies::{Aoe, Aor, Dds, DdsEnergy, DdsNoAvail, Eods, RandomPolicy, RoundRobin};
 
-use std::collections::BTreeSet;
-
 use crate::core::{ImageMeta, NodeClass, NodeId, Placement};
-use crate::net::LinkModel;
-use crate::profile::{profile_for, PeerTable, Predictor, ProfileTable};
+use crate::profile::{profile_for, Predictor};
 use crate::util::SplitMix64;
 
 /// Battery reserve below which [`DdsEnergy`] conserves energy (percent).
@@ -117,24 +122,15 @@ pub struct EdgeCtx<'a> {
     pub edge: LocalSnapshot,
     /// Per-class predictors (edge's own class + offload candidates).
     pub predictors: &'a PredictorSet,
-    /// The MP table (device states from UP pushes, possibly stale).
-    pub table: &'a ProfileTable,
-    /// Peer-edge summaries from inter-edge gossip (empty outside a
-    /// federation — single-cell deployments never see a peer).
-    pub peers: &'a PeerTable,
-    /// Link from the edge to another node (cell device or peer edge —
-    /// peer lookups resolve to the backhaul link).
-    pub link_to: &'a dyn Fn(NodeId) -> Option<LinkModel>,
-    /// Maximum acceptable profile/summary age for offload decisions.
-    pub max_staleness_ms: f64,
+    /// The Filter stage's candidate snapshot: MP and peer tables resolved
+    /// once per decision — staleness, failure-detector suspicion, and
+    /// links — in deterministic registration order with the frame's
+    /// origin excluded (DESIGN.md §3). Policies read this instead of
+    /// re-scanning the tables per level.
+    pub candidates: &'a CandidateSnapshot,
     /// The image already crossed a backhaul once. Policies must not
     /// forward it again (no multi-hop chains — DESIGN.md §Federation).
     pub forwarded: bool,
-    /// Nodes (cell devices and peer edges) the edge's failure detector
-    /// currently suspects are down (DESIGN.md §Churn). Every placement
-    /// level must skip these even when their last profile is still inside
-    /// the staleness window. Empty when churn detection is off.
-    pub suspects: &'a BTreeSet<NodeId>,
 }
 
 impl EdgeCtx<'_> {

@@ -1,0 +1,663 @@
+//! The staged scheduling pipeline (DESIGN.md §3).
+//!
+//! Every frame's decision path is the same explicit stage sequence,
+//! driven by both node classes:
+//!
+//! ```text
+//! Admit → Filter → Place → Dispatch → Overload
+//! ```
+//!
+//! - **Admit** (edge only): per-app token-bucket rate limiting plus a
+//!   per-app ceiling on the edge pool's overflow queue (`[admission]`
+//!   config). Disabled (a structural no-op) unless configured.
+//! - **Filter**: the privacy/suspect clamps that used to live ad-hoc in
+//!   `DeviceNode`/`EdgeNode` — [`device_intake`], [`edge_intake`],
+//!   [`clamp_placement`] — plus the [`CandidateSnapshot`]: one pass over
+//!   the MP and peer tables resolving staleness, suspicion and links, so
+//!   the Place stage never re-scans tables or re-hashes link lookups.
+//! - **Place**: the policy's three decision levels
+//!   ([`SchedulerPolicy::decide_device`] / `decide_edge`), consuming the
+//!   snapshot.
+//! - **Dispatch**: container-pool ordering — strict (priority, EDF,
+//!   task) by default, weighted-fair DRR when `[[app]] weight` keys are
+//!   present (see [`crate::container::QueueDiscipline`]).
+//! - **Overload**: deadline-aware shedding of best-effort frames whose
+//!   predicted completion already exceeds their deadline
+//!   ([`should_shed`]) — drop at enqueue, not after wasting a container.
+//!
+//! Legacy configs (no `[admission]`, no `weight` keys) flow through the
+//! same stages with Admit and Overload structurally inert and Dispatch in
+//! strict mode: the decision sequence — and therefore the seeded replay —
+//! is byte-identical to the pre-pipeline code.
+//!
+//! [`SchedulerPolicy::decide_device`]: super::SchedulerPolicy::decide_device
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::container::ContainerPool;
+use crate::core::{AppId, ImageMeta, NodeId, Placement, PrivacyClass};
+use crate::net::LinkModel;
+use crate::profile::{DeviceState, PeerEdgeState, PeerTable, ProfileTable};
+
+// ---------------------------------------------------------------------
+// Filter stage, device side.
+// ---------------------------------------------------------------------
+
+/// Verdict of the device-level Filter stage, applied *before* the policy
+/// (privacy is a constraint, not a preference — DESIGN.md §4c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceIntake {
+    /// A `device_local` frame never leaves its origin, whatever any
+    /// policy would decide. `infeasible` marks the collision with a
+    /// depleted battery: the device can neither compute nor disclose, so
+    /// the frame is lost outright.
+    ClampLocal { infeasible: bool },
+    /// A depleted device cannot compute at all — every disclosable frame
+    /// forwards to the edge.
+    ForceForward,
+    /// No clamp applies: the Place stage (policy) decides.
+    Place,
+}
+
+/// Device-level Filter: privacy clamp first, battery feasibility second.
+pub fn device_intake(privacy: PrivacyClass, depleted: bool) -> DeviceIntake {
+    if privacy == PrivacyClass::DeviceLocal {
+        DeviceIntake::ClampLocal { infeasible: depleted }
+    } else if depleted {
+        DeviceIntake::ForceForward
+    } else {
+        DeviceIntake::Place
+    }
+}
+
+// ---------------------------------------------------------------------
+// Filter stage, edge side.
+// ---------------------------------------------------------------------
+
+/// Verdict of the edge-level pre-place Filter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeIntake {
+    /// A `device_local` frame at the edge is a protocol violation (no
+    /// compliant device forwards one): return it to its origin,
+    /// untracked — tracking would leak relay state, since the origin
+    /// resolves its own frames without reporting a Result.
+    ReturnToOrigin,
+    /// Schedulable: continue to Admit/Place.
+    Schedule,
+}
+
+/// Edge-level pre-place Filter.
+pub fn edge_intake(privacy: PrivacyClass) -> EdgeIntake {
+    if privacy == PrivacyClass::DeviceLocal {
+        EdgeIntake::ReturnToOrigin
+    } else {
+        EdgeIntake::Schedule
+    }
+}
+
+/// Edge-level post-place clamp, enforced for *every* policy — including
+/// the churn requeue path, which re-enters the pipeline: a `cell_local`
+/// frame never crosses the backhaul, whatever the Place stage decided.
+pub fn clamp_placement(privacy: PrivacyClass, placement: Placement) -> Placement {
+    match (privacy, placement) {
+        (PrivacyClass::CellLocal, Placement::ToPeerEdge(_)) => Placement::Local,
+        (_, p) => p,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Candidate snapshot (Filter stage output consumed by Place).
+// ---------------------------------------------------------------------
+
+/// One in-cell offload candidate: its MP state with staleness, suspicion
+/// and the edge→device link resolved once per decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceCandidate {
+    pub state: DeviceState,
+    pub link: LinkModel,
+    /// Last UP push within the staleness cap at decision time.
+    pub fresh: bool,
+    /// Currently suspected down by the failure detector.
+    pub suspect: bool,
+}
+
+/// One peer-edge forwarding candidate (federation level).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeerCandidate {
+    pub state: PeerEdgeState,
+    pub link: LinkModel,
+    pub fresh: bool,
+    pub suspect: bool,
+}
+
+/// The per-decision candidate snapshot: MP and peer tables resolved in
+/// one pass — deterministic registration order, the frame's origin
+/// excluded, link-less nodes dropped (they could never be targets). The
+/// Place stage's three levels all read this instead of re-scanning the
+/// tables, re-probing the suspect set, and re-hashing link lookups per
+/// candidate.
+#[derive(Debug, Clone, Default)]
+pub struct CandidateSnapshot {
+    devices: Vec<DeviceCandidate>,
+    peers: Vec<PeerCandidate>,
+}
+
+impl CandidateSnapshot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// In-cell candidates, MP registration order, origin excluded.
+    /// Includes stale/suspected entries (flagged) — the profile-blind
+    /// baselines deliberately ignore freshness.
+    pub fn devices(&self) -> &[DeviceCandidate] {
+        &self.devices
+    }
+
+    /// Peer-edge candidates, registration order.
+    pub fn peers(&self) -> &[PeerCandidate] {
+        &self.peers
+    }
+
+    /// Rebuild in place (allocation-free after warmup).
+    #[allow(clippy::too_many_arguments)]
+    pub fn rebuild(
+        &mut self,
+        table: &ProfileTable,
+        peers: &PeerTable,
+        suspects: &BTreeSet<NodeId>,
+        origin: NodeId,
+        now_ms: f64,
+        max_staleness_ms: f64,
+        link_to: impl Fn(NodeId) -> Option<LinkModel>,
+    ) {
+        self.devices.clear();
+        self.peers.clear();
+        for s in table.iter() {
+            if s.node == origin {
+                continue;
+            }
+            let Some(link) = link_to(s.node) else { continue };
+            self.devices.push(DeviceCandidate {
+                state: *s,
+                link,
+                fresh: now_ms - s.updated_ms <= max_staleness_ms,
+                suspect: suspects.contains(&s.node),
+            });
+        }
+        for p in peers.iter() {
+            let Some(link) = link_to(p.edge) else { continue };
+            self.peers.push(PeerCandidate {
+                state: *p,
+                link,
+                fresh: now_ms - p.updated_ms <= max_staleness_ms,
+                suspect: suspects.contains(&p.edge),
+            });
+        }
+    }
+
+    /// Build a fresh snapshot (tests / benches / custom drivers).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        table: &ProfileTable,
+        peers: &PeerTable,
+        suspects: &BTreeSet<NodeId>,
+        origin: NodeId,
+        now_ms: f64,
+        max_staleness_ms: f64,
+        link_to: impl Fn(NodeId) -> Option<LinkModel>,
+    ) -> Self {
+        let mut s = Self::new();
+        s.rebuild(table, peers, suspects, origin, now_ms, max_staleness_ms, link_to);
+        s
+    }
+}
+
+/// Cache key for snapshot reuse: a decision at the same instant, for the
+/// same origin, against unmutated tables and suspect set sees the exact
+/// same snapshot — rebuilding would produce identical bytes, so reuse is
+/// behaviour-preserving by construction. Table/peer versions come from
+/// [`ProfileTable::version`] / [`PeerTable::version`] (bumped on every
+/// mutation); the suspect-set version is maintained by the owning node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SnapshotKey {
+    now_bits: u64,
+    origin: NodeId,
+    table_version: u64,
+    peers_version: u64,
+    suspects_version: u64,
+}
+
+// ---------------------------------------------------------------------
+// Admit stage.
+// ---------------------------------------------------------------------
+
+/// Resolved admission parameters (config `[admission]` + per-app
+/// `admit_rate_per_s` overrides — see
+/// [`crate::config::SystemConfig::admission_params`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionParams {
+    /// Token-bucket rate for apps without an override (frames/second);
+    /// `f64::INFINITY` disables rate limiting, leaving only the ceiling.
+    pub default_rate_per_s: f64,
+    /// Bucket depth (burst tolerance), in tokens.
+    pub burst: f64,
+    /// Per-app ceiling on frames queued in the edge pool: an arrival that
+    /// finds its app's queue at the ceiling is rejected.
+    pub queue_ceiling: u32,
+    /// Enable the Overload stage's deadline-aware shed of best-effort
+    /// frames at enqueue.
+    pub deadline_shed: bool,
+    /// Per-app rate overrides, `AppId`-indexed (registry order).
+    pub per_app_rate: Vec<Option<f64>>,
+}
+
+impl AdmissionParams {
+    fn rate_for(&self, app: AppId) -> f64 {
+        self.per_app_rate
+            .get(app.0 as usize)
+            .copied()
+            .flatten()
+            .unwrap_or(self.default_rate_per_s)
+    }
+}
+
+/// Admit-stage verdict. Both rejection flavours record as
+/// [`crate::core::DropReason::Rejected`]; they are split here so tests
+/// can tell the two mechanisms apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitVerdict {
+    Admit,
+    /// Token bucket empty: the app exceeded its admitted rate.
+    RejectRate,
+    /// The app already has `queue_ceiling` frames queued at the edge.
+    RejectQueue,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    tokens: f64,
+    last_ms: f64,
+}
+
+/// Per-app token buckets, refilled continuously on the driver's clock
+/// (virtual or wall) — deterministic in virtual mode since refill depends
+/// only on event timestamps.
+#[derive(Debug, Clone)]
+pub struct AdmitStage {
+    params: AdmissionParams,
+    buckets: BTreeMap<AppId, Bucket>,
+}
+
+impl AdmitStage {
+    pub fn new(params: AdmissionParams) -> Self {
+        Self { params, buckets: BTreeMap::new() }
+    }
+
+    pub fn deadline_shed(&self) -> bool {
+        self.params.deadline_shed
+    }
+
+    /// Admit or reject `img`. `queued_for_app` is the app's current depth
+    /// in the edge pool's overflow queue. The ceiling is checked first so
+    /// a queue-rejected frame does not also consume a token.
+    pub fn admit(&mut self, img: &ImageMeta, now_ms: f64, queued_for_app: u32) -> AdmitVerdict {
+        if queued_for_app >= self.params.queue_ceiling {
+            return AdmitVerdict::RejectQueue;
+        }
+        let rate = self.params.rate_for(img.constraint.app);
+        if rate.is_infinite() {
+            return AdmitVerdict::Admit;
+        }
+        let burst = self.params.burst;
+        let b = self
+            .buckets
+            .entry(img.constraint.app)
+            .or_insert(Bucket { tokens: burst, last_ms: now_ms });
+        b.tokens = (b.tokens + (now_ms - b.last_ms).max(0.0) * rate / 1_000.0).min(burst);
+        b.last_ms = now_ms;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            AdmitVerdict::Admit
+        } else {
+            AdmitVerdict::RejectRate
+        }
+    }
+
+    /// Churn: a crashed edge loses its admission state with the rest.
+    pub fn reset(&mut self) {
+        self.buckets.clear();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Overload stage.
+// ---------------------------------------------------------------------
+
+/// Deadline-aware shed at enqueue: a *best-effort* frame (priority 0)
+/// that would only queue (no idle container) and whose coarse predicted
+/// completion already exceeds its deadline is dropped now, before it
+/// wastes queue slots and a container on a result nobody can use.
+/// Higher-priority frames are never shed — their deadline pressure is
+/// what the (priority, EDF) / DRR dispatch order exists to serve.
+pub fn should_shed(img: &ImageMeta, pool: &ContainerPool, now_ms: f64) -> bool {
+    img.constraint.priority == 0
+        && pool.idle_count() == 0
+        && pool.predicted_completion_ms(img, now_ms) > img.abs_deadline_ms()
+}
+
+// ---------------------------------------------------------------------
+// The edge pipeline: Admit state + snapshot cache, owned by EdgeNode.
+// ---------------------------------------------------------------------
+
+/// Per-edge pipeline state. `DeviceNode` needs no state (its Admit and
+/// Overload stages are structurally absent — admission guards the cell
+/// ingest point), so the device side drives the stage *functions* only.
+#[derive(Debug, Clone)]
+pub struct EdgePipeline {
+    admit: Option<AdmitStage>,
+    snapshot: CandidateSnapshot,
+    cache_key: Option<SnapshotKey>,
+    /// Lifetime counters for the perf trajectory (BENCH json, tests).
+    pub snapshot_rebuilds: u64,
+    pub snapshot_reuses: u64,
+}
+
+impl EdgePipeline {
+    pub fn new(admission: Option<AdmissionParams>) -> Self {
+        Self {
+            admit: admission.map(AdmitStage::new),
+            snapshot: CandidateSnapshot::new(),
+            cache_key: None,
+            snapshot_rebuilds: 0,
+            snapshot_reuses: 0,
+        }
+    }
+
+    /// Whether an Admit stage is configured at all. Callers gate the
+    /// per-app queue-depth lookup on this — under the strict discipline
+    /// that lookup is an O(queue) scan, which the legacy path must not
+    /// pay for a verdict that would be discarded.
+    pub fn admission_enabled(&self) -> bool {
+        self.admit.is_some()
+    }
+
+    /// Admit stage: `Admit` unconditionally when no `[admission]` section
+    /// is configured (the legacy no-op).
+    pub fn admit(&mut self, img: &ImageMeta, now_ms: f64, queued_for_app: u32) -> AdmitVerdict {
+        match &mut self.admit {
+            Some(stage) => stage.admit(img, now_ms, queued_for_app),
+            None => AdmitVerdict::Admit,
+        }
+    }
+
+    /// Whether the Overload stage's deadline shed is enabled.
+    pub fn deadline_shed(&self) -> bool {
+        self.admit.as_ref().is_some_and(AdmitStage::deadline_shed)
+    }
+
+    /// The shared per-decision candidate snapshot, reused verbatim while
+    /// nothing it derives from has changed (same instant, same origin,
+    /// unmutated tables/suspects) — the `decide_edge` hot-path win.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prepare(
+        &mut self,
+        table: &ProfileTable,
+        peers: &PeerTable,
+        suspects: &BTreeSet<NodeId>,
+        suspects_version: u64,
+        links: &[Option<LinkModel>],
+        origin: NodeId,
+        now_ms: f64,
+        max_staleness_ms: f64,
+    ) -> &CandidateSnapshot {
+        let key = SnapshotKey {
+            now_bits: now_ms.to_bits(),
+            origin,
+            table_version: table.version(),
+            peers_version: peers.version(),
+            suspects_version,
+        };
+        if self.cache_key != Some(key) {
+            self.snapshot.rebuild(table, peers, suspects, origin, now_ms, max_staleness_ms, |n| {
+                links.get(n.0 as usize).copied().flatten()
+            });
+            self.cache_key = Some(key);
+            self.snapshot_rebuilds += 1;
+        } else {
+            self.snapshot_reuses += 1;
+        }
+        &self.snapshot
+    }
+
+    /// Drop the cached snapshot (and key). Called on churn `fail()` —
+    /// replacing the tables resets their version counters, which could
+    /// otherwise collide with a pre-fail key.
+    pub fn invalidate(&mut self) {
+        self.cache_key = None;
+    }
+
+    /// Churn: crash semantics for the whole pipeline state.
+    pub fn reset_on_fail(&mut self) {
+        self.invalidate();
+        if let Some(a) = &mut self.admit {
+            a.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Constraint, NodeClass, TaskId};
+    use crate::profile::profile_for;
+
+    fn img(task: u64, app: u16, priority: u8, deadline: f64, created: f64) -> ImageMeta {
+        ImageMeta {
+            task: TaskId(task),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: created,
+            constraint: Constraint::for_app(AppId(app), deadline, PrivacyClass::Open, priority),
+            seq: task,
+        }
+    }
+
+    fn params(rate: f64, burst: f64, ceiling: u32, shed: bool) -> AdmissionParams {
+        AdmissionParams {
+            default_rate_per_s: rate,
+            burst,
+            queue_ceiling: ceiling,
+            deadline_shed: shed,
+            per_app_rate: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn device_intake_clamps() {
+        assert_eq!(
+            device_intake(PrivacyClass::DeviceLocal, false),
+            DeviceIntake::ClampLocal { infeasible: false }
+        );
+        assert_eq!(
+            device_intake(PrivacyClass::DeviceLocal, true),
+            DeviceIntake::ClampLocal { infeasible: true }
+        );
+        assert_eq!(device_intake(PrivacyClass::Open, true), DeviceIntake::ForceForward);
+        assert_eq!(device_intake(PrivacyClass::CellLocal, false), DeviceIntake::Place);
+    }
+
+    #[test]
+    fn edge_intake_and_clamp() {
+        assert_eq!(edge_intake(PrivacyClass::DeviceLocal), EdgeIntake::ReturnToOrigin);
+        assert_eq!(edge_intake(PrivacyClass::CellLocal), EdgeIntake::Schedule);
+        assert_eq!(
+            clamp_placement(PrivacyClass::CellLocal, Placement::ToPeerEdge(NodeId(3))),
+            Placement::Local
+        );
+        assert_eq!(
+            clamp_placement(PrivacyClass::Open, Placement::ToPeerEdge(NodeId(3))),
+            Placement::ToPeerEdge(NodeId(3))
+        );
+        assert_eq!(
+            clamp_placement(PrivacyClass::CellLocal, Placement::Offload(NodeId(2))),
+            Placement::Offload(NodeId(2))
+        );
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_and_refills() {
+        let mut s = AdmitStage::new(params(10.0, 2.0, 100, false));
+        // Burst of 2 admits, third rejects.
+        assert_eq!(s.admit(&img(1, 0, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::Admit);
+        assert_eq!(s.admit(&img(2, 0, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::Admit);
+        assert_eq!(s.admit(&img(3, 0, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::RejectRate);
+        // 100 ms at 10/s refills one token.
+        assert_eq!(s.admit(&img(4, 0, 0, 1e4, 100.0), 100.0, 0), AdmitVerdict::Admit);
+        assert_eq!(s.admit(&img(5, 0, 0, 1e4, 100.0), 100.0, 0), AdmitVerdict::RejectRate);
+        // Refill caps at the burst depth.
+        assert_eq!(s.admit(&img(6, 0, 0, 1e4, 1e6), 1e6, 0), AdmitVerdict::Admit);
+        assert_eq!(s.admit(&img(7, 0, 0, 1e4, 1e6), 1e6, 0), AdmitVerdict::Admit);
+        assert_eq!(s.admit(&img(8, 0, 0, 1e4, 1e6), 1e6, 0), AdmitVerdict::RejectRate);
+    }
+
+    #[test]
+    fn queue_ceiling_rejects_before_consuming_tokens() {
+        let mut s = AdmitStage::new(params(10.0, 1.0, 2, false));
+        assert_eq!(s.admit(&img(1, 0, 0, 1e4, 0.0), 0.0, 2), AdmitVerdict::RejectQueue);
+        // The bucket was untouched: the next under-ceiling frame admits.
+        assert_eq!(s.admit(&img(2, 0, 0, 1e4, 0.0), 0.0, 1), AdmitVerdict::Admit);
+    }
+
+    #[test]
+    fn buckets_are_per_app() {
+        let mut s = AdmitStage::new(params(1.0, 1.0, 100, false));
+        assert_eq!(s.admit(&img(1, 0, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::Admit);
+        assert_eq!(s.admit(&img(2, 0, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::RejectRate);
+        // App 1 has its own bucket.
+        assert_eq!(s.admit(&img(3, 1, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::Admit);
+    }
+
+    #[test]
+    fn per_app_rate_override_wins() {
+        let mut p = params(f64::INFINITY, 1.0, 100, false);
+        p.per_app_rate = vec![None, Some(1.0)];
+        let mut s = AdmitStage::new(p);
+        // App 0: default infinite rate — always admitted.
+        for t in 0..10 {
+            assert_eq!(s.admit(&img(t, 0, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::Admit);
+        }
+        // App 1: 1/s with burst 1 — second frame at t=0 rejects.
+        assert_eq!(s.admit(&img(20, 1, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::Admit);
+        assert_eq!(s.admit(&img(21, 1, 0, 1e4, 0.0), 0.0, 0), AdmitVerdict::RejectRate);
+    }
+
+    #[test]
+    fn pipeline_without_admission_admits_everything() {
+        let mut p = EdgePipeline::new(None);
+        for t in 0..100 {
+            assert_eq!(p.admit(&img(t, 0, 0, 1.0, 0.0), 0.0, u32::MAX - 1), AdmitVerdict::Admit);
+        }
+        assert!(!p.deadline_shed());
+    }
+
+    #[test]
+    fn shed_only_hopeless_best_effort_with_no_idle_container() {
+        let mut pool = ContainerPool::new(profile_for(NodeClass::EdgeServer), 1);
+        let hopeless = img(90, 0, 0, 50.0, 0.0); // 50 ms budget, ~223 ms process
+        // Idle container available: never shed, regardless of deadline.
+        assert!(!should_shed(&hopeless, &pool, 0.0));
+        pool.submit(img(1, 0, 0, 1e6, 0.0), 0.0).unwrap();
+        // Saturated + hopeless + priority 0 → shed.
+        assert!(should_shed(&hopeless, &pool, 0.0));
+        // Same frame at priority 1 is never shed.
+        let strict = img(91, 0, 1, 50.0, 0.0);
+        assert!(!should_shed(&strict, &pool, 0.0));
+        // Generous deadline → not shed.
+        let ok = img(92, 0, 0, 1e6, 0.0);
+        assert!(!should_shed(&ok, &pool, 0.0));
+    }
+
+    #[test]
+    fn snapshot_reuse_and_invalidation() {
+        use crate::core::message::ProfileUpdate;
+        let mut table = ProfileTable::new();
+        table.register(NodeId(2), NodeClass::RaspberryPi, 2, 0.0);
+        let peers = PeerTable::new();
+        let suspects = BTreeSet::new();
+        let links = vec![None, Some(LinkModel::wifi()), Some(LinkModel::wifi())];
+        let mut p = EdgePipeline::new(None);
+        let n =
+            p.prepare(&table, &peers, &suspects, 0, &links, NodeId(1), 5.0, 200.0).devices().len();
+        assert_eq!(n, 1);
+        assert_eq!((p.snapshot_rebuilds, p.snapshot_reuses), (1, 0));
+        // Identical inputs → cache hit.
+        p.prepare(&table, &peers, &suspects, 0, &links, NodeId(1), 5.0, 200.0);
+        assert_eq!((p.snapshot_rebuilds, p.snapshot_reuses), (1, 1));
+        // Different origin → rebuild.
+        p.prepare(&table, &peers, &suspects, 0, &links, NodeId(3), 5.0, 200.0);
+        assert_eq!(p.snapshot_rebuilds, 2);
+        // Table mutation (version bump) → rebuild.
+        table.apply(&ProfileUpdate {
+            node: NodeId(2),
+            busy_containers: 1,
+            warm_containers: 2,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            battery_pct: None,
+            sent_ms: 6.0,
+        });
+        p.prepare(&table, &peers, &suspects, 0, &links, NodeId(3), 5.0, 200.0);
+        assert_eq!(p.snapshot_rebuilds, 3);
+        // Suspects version bump → rebuild; explicit invalidate → rebuild.
+        p.prepare(&table, &peers, &suspects, 1, &links, NodeId(3), 5.0, 200.0);
+        assert_eq!(p.snapshot_rebuilds, 4);
+        p.invalidate();
+        p.prepare(&table, &peers, &suspects, 1, &links, NodeId(3), 5.0, 200.0);
+        assert_eq!(p.snapshot_rebuilds, 5);
+    }
+
+    #[test]
+    fn snapshot_excludes_origin_and_linkless_keeps_stale_flagged() {
+        use crate::core::message::{EdgeSummary, ProfileUpdate};
+        let mut table = ProfileTable::new();
+        for n in [1u32, 2, 3, 4] {
+            table.register(NodeId(n), NodeClass::RaspberryPi, 2, 0.0);
+        }
+        // n2 fresh, n3 stale, n4 link-less.
+        for (n, sent) in [(2u32, 100.0), (3, -1_000.0), (4, 100.0)] {
+            table.apply(&ProfileUpdate {
+                node: NodeId(n),
+                busy_containers: 0,
+                warm_containers: 2,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+                sent_ms: sent,
+            });
+        }
+        let mut peers = PeerTable::new();
+        peers.apply(&EdgeSummary {
+            edge: NodeId(9),
+            busy_containers: 0,
+            warm_containers: 4,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: 0,
+            sent_ms: 100.0,
+        });
+        let mut suspects = BTreeSet::new();
+        suspects.insert(NodeId(2));
+        let link = |n: NodeId| (n != NodeId(4)).then(LinkModel::wifi);
+        let s =
+            CandidateSnapshot::build(&table, &peers, &suspects, NodeId(1), 110.0, 200.0, link);
+        // Origin (1) and link-less (4) excluded; stale (3) kept, flagged.
+        let nodes: Vec<u32> = s.devices().iter().map(|c| c.state.node.0).collect();
+        assert_eq!(nodes, vec![2, 3]);
+        assert!(s.devices()[0].fresh && s.devices()[0].suspect);
+        assert!(!s.devices()[1].fresh && !s.devices()[1].suspect);
+        assert_eq!(s.peers().len(), 1);
+        assert!(s.peers()[0].fresh && !s.peers()[0].suspect);
+    }
+}

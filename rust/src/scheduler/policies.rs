@@ -1,5 +1,10 @@
 //! Policy implementations: DDS (§V.B.3 of the paper) and the comparison
 //! groups AOR / AOE / EODS, plus ablations.
+//!
+//! Policies are the **Place** stage of the staged scheduling pipeline
+//! (DESIGN.md §3): the edge-level decision consumes the Filter stage's
+//! [`CandidateSnapshot`](super::CandidateSnapshot) — MP and peer tables
+//! resolved once per decision — instead of re-scanning raw tables.
 
 use crate::core::{NodeClass, NodeId, Placement, PrivacyClass};
 use crate::profile::PredictInput;
@@ -49,16 +54,16 @@ fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
     let budget = ctx.remaining_ms();
     let edge_pred = ctx.predictors.for_class(NodeClass::EdgeServer);
     let mut best: Option<(f64, NodeId)> = None;
-    for peer in ctx.peers.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
-        // Suspected-down peers are never forwarding targets, even inside
-        // the staleness window (DESIGN.md §Churn).
-        if ctx.suspects.contains(&peer.edge) {
+    for peer in ctx.candidates.peers() {
+        // Only fresh gossip is trusted, and suspected-down peers are never
+        // forwarding targets even inside the staleness window (DESIGN.md
+        // §Churn) — both resolved by the snapshot.
+        if !peer.fresh || peer.suspect {
             continue;
         }
-        let Some(link) = (ctx.link_to)(peer.edge) else { continue };
         // The peer must advertise spare capacity somewhere in its cell
         // (own pool or its devices) — the availability check, one level up.
-        if peer.cell_idle_containers() == 0 {
+        if peer.state.cell_idle_containers() == 0 {
             continue;
         }
         // Predict backhaul transfer + peer-pool execution from the
@@ -66,17 +71,17 @@ fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
         // which only improves on this estimate).
         let inp = PredictInput {
             size_kb: ctx.img.size_kb,
-            link: Some(link),
-            busy_containers: peer.busy_containers,
-            warm_containers: peer.warm_containers.max(1),
-            queued_images: peer.queued_images,
-            cpu_load_pct: peer.cpu_load_pct,
+            link: Some(peer.link),
+            busy_containers: peer.state.busy_containers,
+            warm_containers: peer.state.warm_containers.max(1),
+            queued_images: peer.state.queued_images,
+            cpu_load_pct: peer.state.cpu_load_pct,
         };
         let t = edge_pred.predict_total_ms(&inp);
         let better = t <= budget
-            && best.map_or(true, |(bt, be)| t < bt || (t == bt && peer.edge < be));
+            && best.map_or(true, |(bt, be)| t < bt || (t == bt && peer.state.edge < be));
         if better {
-            best = Some((t, peer.edge));
+            best = Some((t, peer.state.edge));
         }
     }
     best.map(|(_, e)| Placement::ToPeerEdge(e))
@@ -235,35 +240,29 @@ impl SchedulerPolicy for Dds {
         let budget = ctx.remaining_ms();
 
         // Candidate end devices, by predicted total time; only fresh
-        // profiles are trusted. The ranking is EDF-flavoured (DESIGN.md
-        // §Constraints & QoS): feasibility is predicted-completion vs the
-        // frame's deadline, the winner is the candidate finishing with the
-        // most slack left (= minimum predicted completion), and exact
-        // prediction ties break deterministically by NodeId rather than by
-        // table-registration order (which churn rejoins can permute).
+        // profiles are trusted (the origin, suspicion, and link filters
+        // are already resolved into the snapshot). The ranking is
+        // EDF-flavoured (DESIGN.md §Constraints & QoS): feasibility is
+        // predicted-completion vs the frame's deadline, the winner is the
+        // candidate finishing with the most slack left (= minimum
+        // predicted completion), and exact prediction ties break
+        // deterministically by NodeId rather than by table-registration
+        // order (which churn rejoins can permute).
         let mut best: Option<(f64, crate::core::NodeId)> = None;
-        for dev in ctx.table.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
-            // Never offload back through a dead link, and never to the
-            // image's origin (it already declined the task).
-            if dev.node == ctx.img.origin {
+        for c in ctx.candidates.devices() {
+            if !c.fresh || c.suspect {
                 continue;
             }
-            // Suspected-down devices are skipped even while their last
-            // profile is still fresh enough (DESIGN.md §Churn).
-            if ctx.suspects.contains(&dev.node) {
+            if self.require_idle && c.state.idle_containers() == 0 {
                 continue;
             }
-            let Some(link) = (ctx.link_to)(dev.node) else { continue };
-            if self.require_idle && dev.idle_containers() == 0 {
-                continue;
-            }
-            let predictor = ctx.predictors.for_class(dev.class);
-            let inp = PredictInput::from_state(dev, ctx.img.size_kb, Some(link));
+            let predictor = ctx.predictors.for_class(c.state.class);
+            let inp = PredictInput::from_state(&c.state, ctx.img.size_kb, Some(c.link));
             let t = predictor.predict_total_ms(&inp);
-            let better =
-                t <= budget && best.map_or(true, |(bt, bn)| t < bt || (t == bt && dev.node < bn));
+            let better = t <= budget
+                && best.map_or(true, |(bt, bn)| t < bt || (t == bt && c.state.node < bn));
             if better {
-                best = Some((t, dev.node));
+                best = Some((t, c.state.node));
             }
         }
         if let Some((_, node)) = best {
@@ -371,23 +370,19 @@ impl SchedulerPolicy for DdsEnergy {
         // Score: (battery class, battery level, predicted time). Mains
         // (None) sorts best via the 200.0 sentinel > any real percent.
         let mut best: Option<(f64, f64, crate::core::NodeId)> = None;
-        for dev in ctx.table.fresh_within(ctx.now_ms, ctx.max_staleness_ms) {
-            if dev.node == ctx.img.origin {
+        for c in ctx.candidates.devices() {
+            if !c.fresh || c.suspect {
                 continue;
             }
-            if ctx.suspects.contains(&dev.node) {
+            if c.state.idle_containers() == 0 {
                 continue;
             }
-            let Some(link) = (ctx.link_to)(dev.node) else { continue };
-            if dev.idle_containers() == 0 {
-                continue;
-            }
-            let batt = dev.battery_pct.unwrap_or(200.0);
+            let batt = c.state.battery_pct.unwrap_or(200.0);
             if batt < self.reserve_pct {
                 continue; // preserve low-battery devices
             }
-            let predictor = ctx.predictors.for_class(dev.class);
-            let inp = PredictInput::from_state(dev, ctx.img.size_kb, Some(link));
+            let predictor = ctx.predictors.for_class(c.state.class);
+            let inp = PredictInput::from_state(&c.state, ctx.img.size_kb, Some(c.link));
             let t = predictor.predict_total_ms(&inp);
             if t > budget {
                 continue;
@@ -397,7 +392,7 @@ impl SchedulerPolicy for DdsEnergy {
                 Some((bb, bt, _)) => batt > bb || (batt == bb && t < bt),
             };
             if better {
-                best = Some((batt, t, dev.node));
+                best = Some((batt, t, c.state.node));
             }
         }
         if let Some((_, _, node)) = best {
@@ -450,12 +445,9 @@ impl SchedulerPolicy for RoundRobin {
         if let Some(p) = pinned_edge(ctx) {
             return p;
         }
-        let candidates: Vec<_> = ctx
-            .table
-            .iter()
-            .filter(|d| d.node != ctx.img.origin && (ctx.link_to)(d.node).is_some())
-            .map(|d| d.node)
-            .collect();
+        // Profile-blind: every linked non-origin device is a candidate —
+        // staleness and suspicion are deliberately ignored.
+        let candidates = ctx.candidates.devices();
         // Slot 0 = edge itself, then the candidates in table order.
         let n = candidates.len() + 1;
         let pick = self.edge_idx % n;
@@ -463,7 +455,7 @@ impl SchedulerPolicy for RoundRobin {
         if pick == 0 {
             Placement::Local
         } else {
-            Placement::Offload(candidates[pick - 1])
+            Placement::Offload(candidates[pick - 1].state.node)
         }
     }
 }
@@ -499,18 +491,13 @@ impl SchedulerPolicy for RandomPolicy {
         if let Some(p) = pinned_edge(ctx) {
             return p;
         }
-        let candidates: Vec<_> = ctx
-            .table
-            .iter()
-            .filter(|d| d.node != ctx.img.origin && (ctx.link_to)(d.node).is_some())
-            .map(|d| d.node)
-            .collect();
+        let candidates = ctx.candidates.devices();
         let n = candidates.len() + 1;
         let pick = self.rng.choice_index(n);
         if pick == 0 {
             Placement::Local
         } else {
-            Placement::Offload(candidates[pick - 1])
+            Placement::Offload(candidates[pick - 1].state.node)
         }
     }
 }
@@ -522,15 +509,15 @@ mod tests {
     use crate::core::{Constraint, ImageMeta, NodeClass, NodeId, TaskId};
     use crate::net::LinkModel;
     use crate::profile::{profile_for, PeerTable, Predictor, ProfileTable};
-    use crate::scheduler::{LocalSnapshot, PredictorSet};
+    use crate::scheduler::{CandidateSnapshot, LocalSnapshot, PredictorSet};
     use once_cell::sync::Lazy;
+    use std::collections::BTreeSet;
 
     static RPI_PRED: Lazy<Predictor> =
         Lazy::new(|| Predictor::new(profile_for(NodeClass::RaspberryPi)));
     static PREDICTORS: Lazy<PredictorSet> = Lazy::new(PredictorSet::new);
     static NO_PEERS: Lazy<PeerTable> = Lazy::new(PeerTable::new);
-    static NO_SUSPECTS: Lazy<std::collections::BTreeSet<NodeId>> =
-        Lazy::new(std::collections::BTreeSet::new);
+    static NO_SUSPECTS: Lazy<BTreeSet<NodeId>> = Lazy::new(BTreeSet::new);
 
     fn img(seq: u64, deadline: f64) -> ImageMeta {
         ImageMeta {
@@ -576,11 +563,20 @@ mod tests {
         t
     }
 
-    fn edge_ctx<'a>(
-        img: &'a ImageMeta,
-        table: &'a ProfileTable,
-        link_to: &'a dyn Fn(NodeId) -> Option<LinkModel>,
-    ) -> EdgeCtx<'a> {
+    /// Build a Wi-Fi-linked candidate snapshot for an edge decision at
+    /// t=5 ms (the staleness cap is the classic 200 ms).
+    fn snap(
+        table: &ProfileTable,
+        peers: &PeerTable,
+        suspects: &BTreeSet<NodeId>,
+        origin: NodeId,
+    ) -> CandidateSnapshot {
+        CandidateSnapshot::build(table, peers, suspects, origin, 5.0, 200.0, |_| {
+            Some(LinkModel::wifi())
+        })
+    }
+
+    fn edge_ctx<'a>(img: &'a ImageMeta, candidates: &'a CandidateSnapshot) -> EdgeCtx<'a> {
         EdgeCtx {
             now_ms: 5.0,
             img,
@@ -593,21 +589,15 @@ mod tests {
                 battery_pct: None,
             },
             predictors: &PREDICTORS,
-            table,
-            peers: &NO_PEERS,
-            link_to,
-            max_staleness_ms: 200.0,
+            candidates,
             forwarded: false,
-            suspects: &NO_SUSPECTS,
         }
     }
 
-    /// A federation context: edge pool saturated (`busy` of 4), peer
-    /// summaries supplied, empty-or-given device table.
+    /// A federation context: edge pool saturated (`busy` of 4).
     fn fed_ctx<'a>(
         img: &'a ImageMeta,
-        table: &'a ProfileTable,
-        peers: &'a PeerTable,
+        candidates: &'a CandidateSnapshot,
         busy: u32,
     ) -> EdgeCtx<'a> {
         EdgeCtx {
@@ -622,12 +612,8 @@ mod tests {
                 battery_pct: None,
             },
             predictors: &PREDICTORS,
-            table,
-            peers,
-            link_to: &wifi,
-            max_staleness_ms: 200.0,
+            candidates,
             forwarded: false,
-            suspects: &NO_SUSPECTS,
         }
     }
 
@@ -643,10 +629,6 @@ mod tests {
         }
     }
 
-    fn wifi(_: NodeId) -> Option<LinkModel> {
-        Some(LinkModel::wifi())
-    }
-
     #[test]
     fn aor_always_local() {
         let im = img(0, 1.0); // impossible deadline — AOR doesn't care
@@ -658,10 +640,8 @@ mod tests {
         let im = img(0, 1e9);
         assert_eq!(Aoe.decide_device(&device_ctx(&im, 0, 4, 0)), Placement::ToEdge);
         let t = table_with_r2(0, 2);
-        assert_eq!(
-            Aoe.decide_edge(&edge_ctx(&im, &t, &wifi)),
-            Placement::Local
-        );
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        assert_eq!(Aoe.decide_edge(&edge_ctx(&im, &s)), Placement::Local);
     }
 
     #[test]
@@ -699,7 +679,8 @@ mod tests {
         let mut p = Dds::new();
         let im = img(0, 5000.0);
         let t = table_with_r2(0, 2);
-        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&edge_ctx(&im, &s));
         assert_eq!(got, Placement::Offload(NodeId(2)));
     }
 
@@ -708,7 +689,8 @@ mod tests {
         let mut p = Dds::new();
         let im = img(0, 5000.0);
         let t = table_with_r2(2, 2); // no idle containers on R2
-        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&edge_ctx(&im, &s));
         assert_eq!(got, Placement::Local);
     }
 
@@ -717,7 +699,8 @@ mod tests {
         let mut p = DdsNoAvail::new();
         let im = img(0, 50_000.0);
         let t = table_with_r2(2, 2);
-        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&edge_ctx(&im, &s));
         assert_eq!(got, Placement::Offload(NodeId(2)));
     }
 
@@ -727,7 +710,8 @@ mod tests {
         // 300 ms budget: RPi needs 597+ — edge must keep it.
         let im = img(0, 300.0);
         let t = table_with_r2(0, 2);
-        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&edge_ctx(&im, &s));
         assert_eq!(got, Placement::Local);
     }
 
@@ -736,7 +720,7 @@ mod tests {
         let mut p = Dds::new();
         let im = img(0, 5000.0);
         let mut t = table_with_r2(0, 2);
-        // Make the profile ancient relative to ctx.now_ms = 5.0.
+        // Make the profile ancient relative to the snapshot's now = 5.0.
         t.apply(&ProfileUpdate {
             node: NodeId(2),
             busy_containers: 0,
@@ -746,7 +730,8 @@ mod tests {
             battery_pct: None,
             sent_ms: -10_000.0,
         });
-        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&edge_ctx(&im, &s));
         assert_eq!(got, Placement::Local);
     }
 
@@ -756,7 +741,8 @@ mod tests {
         let im = img(0, 5000.0);
         let mut t = ProfileTable::new();
         t.register(NodeId(1), NodeClass::RaspberryPi, 2, 0.0); // origin itself
-        let got = p.decide_edge(&edge_ctx(&im, &t, &wifi));
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&edge_ctx(&im, &s));
         assert_eq!(got, Placement::Local);
     }
 
@@ -768,10 +754,8 @@ mod tests {
         assert_eq!(dds.decide_device(&device_ctx(&im, 4, 4, 50)), Placement::Local);
         im.constraint = Constraint::pinned(1.0, NodeId(2));
         let t = table_with_r2(2, 2);
-        assert_eq!(
-            dds.decide_edge(&edge_ctx(&im, &t, &wifi)),
-            Placement::Offload(NodeId(2))
-        );
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        assert_eq!(dds.decide_edge(&edge_ctx(&im, &s)), Placement::Offload(NodeId(2)));
     }
 
     // ---- federation-level decision ----------------------------------
@@ -783,7 +767,8 @@ mod tests {
         let t = ProfileTable::new(); // no devices in this cell
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 0, 4, 0.0));
-        let got = p.decide_edge(&fed_ctx(&im, &t, &peers, 4));
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&fed_ctx(&im, &s, 4));
         assert_eq!(got, Placement::ToPeerEdge(NodeId(3)));
     }
 
@@ -795,7 +780,8 @@ mod tests {
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 0, 4, 0.0));
         // One idle edge container: keep the task in the cell.
-        let got = p.decide_edge(&fed_ctx(&im, &t, &peers, 3));
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&fed_ctx(&im, &s, 3));
         assert_eq!(got, Placement::Local);
     }
 
@@ -806,7 +792,8 @@ mod tests {
         let t = table_with_r2(0, 2); // idle device in the cell
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 0, 4, 0.0));
-        let got = p.decide_edge(&fed_ctx(&im, &t, &peers, 4));
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let got = p.decide_edge(&fed_ctx(&im, &s, 4));
         assert_eq!(got, Placement::Offload(NodeId(2)));
     }
 
@@ -817,7 +804,8 @@ mod tests {
         let t = ProfileTable::new();
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 0, 4, 0.0));
-        let mut ctx = fed_ctx(&im, &t, &peers, 4);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let mut ctx = fed_ctx(&im, &s, 4);
         ctx.forwarded = true;
         assert_eq!(p.decide_edge(&ctx), Placement::Local);
     }
@@ -829,7 +817,8 @@ mod tests {
         let t = ProfileTable::new();
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 0, 4, -10_000.0)); // ancient summary
-        assert_eq!(p.decide_edge(&fed_ctx(&im, &t, &peers, 4)), Placement::Local);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        assert_eq!(p.decide_edge(&fed_ctx(&im, &s, 4)), Placement::Local);
     }
 
     #[test]
@@ -839,13 +828,15 @@ mod tests {
         let t = ProfileTable::new();
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 4, 4, 0.0)); // peer pool full, no device slack
-        assert_eq!(p.decide_edge(&fed_ctx(&im, &t, &peers, 4)), Placement::Local);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        assert_eq!(p.decide_edge(&fed_ctx(&im, &s, 4)), Placement::Local);
         // Device slack behind the peer edge counts as capacity.
-        let mut s = peer(3, 4, 4, 0.0);
-        s.device_idle_containers = 2;
-        peers.apply(&s);
+        let mut sum = peer(3, 4, 4, 0.0);
+        sum.device_idle_containers = 2;
+        peers.apply(&sum);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
         assert_eq!(
-            p.decide_edge(&fed_ctx(&im, &t, &peers, 4)),
+            p.decide_edge(&fed_ctx(&im, &s, 4)),
             Placement::ToPeerEdge(NodeId(3))
         );
     }
@@ -858,15 +849,17 @@ mod tests {
         let mut peers = PeerTable::new();
         peers.apply(&peer(6, 0, 4, 0.0));
         peers.apply(&peer(3, 0, 4, 0.0)); // identical state, lower id
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
         assert_eq!(
-            p.decide_edge(&fed_ctx(&im, &t, &peers, 4)),
+            p.decide_edge(&fed_ctx(&im, &s, 4)),
             Placement::ToPeerEdge(NodeId(3))
         );
         // A strictly less-loaded peer beats the id tie-break.
         peers.apply(&peer(6, 0, 4, 1.0));
         peers.apply(&peer(3, 3, 4, 1.0));
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
         assert_eq!(
-            p.decide_edge(&fed_ctx(&im, &t, &peers, 4)),
+            p.decide_edge(&fed_ctx(&im, &s, 4)),
             Placement::ToPeerEdge(NodeId(6))
         );
     }
@@ -878,8 +871,9 @@ mod tests {
         let t = ProfileTable::new();
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 0, 4, 0.0));
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
         assert_eq!(
-            p.decide_edge(&fed_ctx(&im, &t, &peers, 4)),
+            p.decide_edge(&fed_ctx(&im, &s, 4)),
             Placement::ToPeerEdge(NodeId(3))
         );
     }
@@ -890,6 +884,7 @@ mod tests {
         let t = ProfileTable::new();
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 0, 4, 0.0));
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
         let mut baselines: Vec<Box<dyn SchedulerPolicy>> = vec![
             Box::new(Aor),
             Box::new(Aoe),
@@ -899,7 +894,7 @@ mod tests {
         ];
         for b in baselines.iter_mut() {
             for _ in 0..8 {
-                let got = b.decide_edge(&fed_ctx(&im, &t, &peers, 4));
+                let got = b.decide_edge(&fed_ctx(&im, &s, 4));
                 assert!(
                     !matches!(got, Placement::ToPeerEdge(_)),
                     "{} must not federate",
@@ -942,8 +937,9 @@ mod tests {
         peers.apply(&peer(3, 0, 4, 0.0));
         let mut p = Dds::new();
         let open = img(0, 5_000.0);
+        let s = snap(&t, &peers, &NO_SUSPECTS, open.origin);
         assert_eq!(
-            p.decide_edge(&fed_ctx(&open, &t, &peers, 4)),
+            p.decide_edge(&fed_ctx(&open, &s, 4)),
             Placement::ToPeerEdge(NodeId(3))
         );
         let mut bound = img(1, 5_000.0);
@@ -953,16 +949,17 @@ mod tests {
             crate::core::PrivacyClass::CellLocal,
             0,
         );
-        assert_eq!(p.decide_edge(&fed_ctx(&bound, &t, &peers, 4)), Placement::Local);
+        assert_eq!(p.decide_edge(&fed_ctx(&bound, &s, 4)), Placement::Local);
         // Cell-local frames may still offload *within* the cell.
         let t2 = table_with_r2(0, 2);
+        let s2 = snap(&t2, &NO_PEERS, &NO_SUSPECTS, bound.origin);
         assert_eq!(
-            p.decide_edge(&edge_ctx(&bound, &t2, &wifi)),
+            p.decide_edge(&edge_ctx(&bound, &s2)),
             Placement::Offload(NodeId(2))
         );
         // The energy variant applies the same backhaul filter.
         let mut e = DdsEnergy::new(20.0);
-        assert_eq!(e.decide_edge(&fed_ctx(&bound, &t, &peers, 4)), Placement::Local);
+        assert_eq!(e.decide_edge(&fed_ctx(&bound, &s, 4)), Placement::Local);
     }
 
     #[test]
@@ -985,8 +982,9 @@ mod tests {
             });
         }
         let im = img(0, 5_000.0);
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
         let mut p = Dds::new();
-        assert_eq!(p.decide_edge(&edge_ctx(&im, &t, &wifi)), Placement::Offload(NodeId(2)));
+        assert_eq!(p.decide_edge(&edge_ctx(&im, &s)), Placement::Offload(NodeId(2)));
     }
 
     // ---- churn / failure suspicion (DESIGN.md §Churn) ----------------
@@ -1025,16 +1023,13 @@ mod tests {
         let mut p = Dds::new();
         let im = img(0, 5_000.0);
         let t = table_with_r2(0, 2); // fresh + idle — normally offloaded to
-        let mut suspects = std::collections::BTreeSet::new();
+        let mut suspects = BTreeSet::new();
         suspects.insert(NodeId(2));
-        let mut ctx = edge_ctx(&im, &t, &wifi);
-        ctx.suspects = &suspects;
-        assert_eq!(p.decide_edge(&ctx), Placement::Local);
+        let s = snap(&t, &NO_PEERS, &suspects, im.origin);
+        assert_eq!(p.decide_edge(&edge_ctx(&im, &s)), Placement::Local);
         // DdsEnergy applies the same filter.
         let mut e = DdsEnergy::new(20.0);
-        let mut ctx = edge_ctx(&im, &t, &wifi);
-        ctx.suspects = &suspects;
-        assert_eq!(e.decide_edge(&ctx), Placement::Local);
+        assert_eq!(e.decide_edge(&edge_ctx(&im, &s)), Placement::Local);
     }
 
     #[test]
@@ -1044,11 +1039,10 @@ mod tests {
         let t = ProfileTable::new();
         let mut peers = PeerTable::new();
         peers.apply(&peer(3, 0, 4, 0.0)); // fresh + idle peer
-        let mut suspects = std::collections::BTreeSet::new();
+        let mut suspects = BTreeSet::new();
         suspects.insert(NodeId(3));
-        let mut ctx = fed_ctx(&im, &t, &peers, 4);
-        ctx.suspects = &suspects;
-        assert_eq!(p.decide_edge(&ctx), Placement::Local);
+        let s = snap(&t, &peers, &suspects, im.origin);
+        assert_eq!(p.decide_edge(&fed_ctx(&im, &s, 4)), Placement::Local);
     }
 
     #[test]
@@ -1058,6 +1052,36 @@ mod tests {
         let a = p.decide_device(&device_ctx(&im, 0, 1, 0));
         let b = p.decide_device(&device_ctx(&im, 0, 1, 0));
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn round_robin_cycles_stale_candidates_too() {
+        // Profile-blind baselines ignore the snapshot's freshness flags:
+        // a stale device still takes its round-robin slot.
+        let mut t = table_with_r2(0, 2);
+        t.apply(&ProfileUpdate {
+            node: NodeId(2),
+            busy_containers: 0,
+            warm_containers: 2,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            battery_pct: None,
+            sent_ms: -10_000.0, // ancient
+        });
+        let im = img(0, 1e9);
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let mut p = RoundRobin::default();
+        let picks: Vec<Placement> =
+            (0..4).map(|_| p.decide_edge(&edge_ctx(&im, &s))).collect();
+        assert_eq!(
+            picks,
+            vec![
+                Placement::Local,
+                Placement::Offload(NodeId(2)),
+                Placement::Local,
+                Placement::Offload(NodeId(2)),
+            ]
+        );
     }
 
     #[test]

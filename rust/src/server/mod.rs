@@ -4,7 +4,9 @@
 //! accepts user requests (IS), activates the nearest camera device,
 //! receives images that devices could not handle, and makes the *global*
 //! decision — run in its own container pool or offload to another end
-//! device — against the MP profile table.
+//! device — against the MP profile table. Every schedulable image flows
+//! through the staged pipeline `Admit → Filter → Place → Dispatch →
+//! Overload` (DESIGN.md §3; state in [`crate::scheduler::EdgePipeline`]).
 //!
 //! In a federation (DESIGN.md §Federation) each cell runs one of these.
 //! The edge additionally gossips a condensed MP summary to its peer edges,
@@ -15,11 +17,15 @@ use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::container::ContainerPool;
 use crate::core::message::{EdgeSummary, Message, UserRequest};
-use crate::core::{ImageMeta, NodeClass, NodeId, Placement, PrivacyClass, TaskId};
+use crate::core::{DropReason, ImageMeta, NodeClass, NodeId, Placement, TaskId};
 use crate::device::Action;
-use crate::net::Topology;
+use crate::net::{LinkModel, Topology};
 use crate::profile::{PeerTable, ProfileTable};
-use crate::scheduler::{EdgeCtx, FailureDetector, LocalSnapshot, PredictorSet, SchedulerPolicy};
+use crate::scheduler::pipeline::{self, AdmitVerdict, EdgeIntake};
+use crate::scheduler::{
+    AdmissionParams, EdgeCtx, EdgePipeline, FailureDetector, LocalSnapshot, PredictorSet,
+    SchedulerPolicy,
+};
 
 /// The edge server state machine.
 pub struct EdgeNode {
@@ -31,6 +37,11 @@ pub struct EdgeNode {
     predictors: PredictorSet,
     /// Topology view for links and camera lookup.
     topology: Topology,
+    /// Per-run static link table, resolved from the topology once at
+    /// construction (`links[n]` = this edge → node `n`): the pipeline's
+    /// snapshot build indexes an array instead of hashing a `(NodeId,
+    /// NodeId)` key per candidate per decision.
+    links: Vec<Option<LinkModel>>,
     /// Maximum MP staleness accepted for offload decisions.
     max_staleness_ms: f64,
     /// Tasks executing in the local pool.
@@ -52,6 +63,12 @@ pub struct EdgeNode {
     detector: Option<FailureDetector>,
     /// Nodes (devices and peer edges) currently suspected down.
     suspects: BTreeSet<NodeId>,
+    /// Mutation counter for `suspects` — keys the pipeline's snapshot
+    /// cache together with the table versions.
+    suspects_version: u64,
+    /// Staged-pipeline state: Admit buckets + the cached candidate
+    /// snapshot (DESIGN.md §3).
+    pipeline: EdgePipeline,
 }
 
 impl EdgeNode {
@@ -62,6 +79,9 @@ impl EdgeNode {
         topology: Topology,
         max_staleness_ms: f64,
     ) -> Self {
+        let links = (0..topology.len() as u32)
+            .map(|n| topology.link(id, NodeId(n)))
+            .collect();
         Self {
             id,
             pool,
@@ -69,6 +89,7 @@ impl EdgeNode {
             policy,
             predictors: PredictorSet::new(),
             topology,
+            links,
             max_staleness_ms,
             inflight: HashMap::new(),
             peers: PeerTable::new(),
@@ -76,6 +97,8 @@ impl EdgeNode {
             offload_target: BTreeMap::new(),
             detector: None,
             suspects: BTreeSet::new(),
+            suspects_version: 0,
+            pipeline: EdgePipeline::new(None),
         }
     }
 
@@ -84,6 +107,26 @@ impl EdgeNode {
     pub fn with_detector(mut self, detector: FailureDetector) -> Self {
         self.detector = Some(detector);
         self
+    }
+
+    /// Enable the Admit stage (builder style; `[admission]` config —
+    /// DESIGN.md §3). Without it the pipeline admits unconditionally.
+    pub fn with_admission(mut self, params: AdmissionParams) -> Self {
+        self.pipeline = EdgePipeline::new(Some(params));
+        self
+    }
+
+    /// Pipeline introspection (tests / benches: snapshot reuse counters).
+    pub fn pipeline(&self) -> &EdgePipeline {
+        &self.pipeline
+    }
+
+    /// Drop the cached candidate snapshot so the next decision rebuilds
+    /// it. Correctness never requires this — the cache key covers every
+    /// input — it exists so tests can prove exactly that (cached and
+    /// cache-less runs emit identical action streams).
+    pub fn invalidate_snapshot_cache(&mut self) {
+        self.pipeline.invalidate();
     }
 
     /// Nodes currently suspected down by the failure detector.
@@ -141,11 +184,15 @@ impl EdgeNode {
     pub fn on_message(&mut self, msg: Message, now_ms: f64, out: &mut Vec<Action>) {
         match msg {
             Message::User(req) => self.on_user(req, now_ms, out),
-            Message::Image(img) => self.on_image(img, now_ms, false, out),
+            // A fresh arrival from this cell enters through the Admit
+            // stage; requeues and peer-forwards were admitted already.
+            Message::Image(img) => self.schedule_image(img, now_ms, false, true, out),
             Message::Profile(up) => self.table.apply(&up),
             Message::Join { node, class_tag, warm_containers } => {
                 // A (re-)joining node is alive by definition.
-                self.suspects.remove(&node);
+                if self.suspects.remove(&node) {
+                    self.suspects_version += 1;
+                }
                 if class_tag == 0 {
                     // A peer edge server joining the federation (live mode
                     // dials peers explicitly; virtual mode auto-registers
@@ -166,15 +213,18 @@ impl EdgeNode {
             }
             Message::EdgeSummary(s) => {
                 // Fresh gossip also clears any suspicion of that peer.
-                self.suspects.remove(&s.edge);
+                if self.suspects.remove(&s.edge) {
+                    self.suspects_version += 1;
+                }
                 self.peers.apply(&s);
             }
             Message::Forward { img, from_edge } => {
                 // A peer's cell was exhausted; this cell schedules the
                 // image (never re-forwarding) and owes the result to the
-                // originating edge.
+                // originating edge. Admission happened at the origin cell
+                // — re-admitting here could strand the owed result.
                 self.forwarded_from.insert(img.task, from_edge);
-                self.on_image(img, now_ms, true, out);
+                self.schedule_image(img, now_ms, true, false, out);
             }
             Message::Result { task, processed_by, detections, max_score, process_ms } => {
                 let relay = Message::Result { task, processed_by, detections, max_score, process_ms };
@@ -220,19 +270,32 @@ impl EdgeNode {
     }
 
     /// APe: an image a device declined (or AOE/EODS sent, or a peer edge
-    /// forwarded) — global decision. `forwarded` marks images that already
+    /// forwarded) — the staged pipeline's edge pass (DESIGN.md §3):
+    /// Filter (privacy prefilter) → Admit → Place → Filter (backhaul
+    /// clamp) → Dispatch/Overload. `forwarded` marks images that already
     /// crossed a backhaul: they may use this cell's pool and devices but
     /// never hop to another peer, and their placement record (made at the
-    /// originating edge as `ToPeerEdge`) is left untouched.
-    fn on_image(&mut self, img: ImageMeta, now_ms: f64, forwarded: bool, out: &mut Vec<Action>) {
-        // Privacy hard filter, part 1 (DESIGN.md §Constraints & QoS): a
+    /// originating edge as `ToPeerEdge`) is left untouched. `admit` is
+    /// true only for fresh arrivals from this cell's devices — requeues
+    /// and peer-forwards were admitted once already.
+    fn schedule_image(
+        &mut self,
+        img: ImageMeta,
+        now_ms: f64,
+        forwarded: bool,
+        admit: bool,
+        out: &mut Vec<Action>,
+    ) {
+        // Filter stage, part 1 (DESIGN.md §Constraints & QoS): a
         // device-local frame at the edge is a protocol violation — no
         // compliant device forwards one. Return it to its origin
         // *untracked*: the origin executes and resolves its own frames
         // without reporting a Result, so inflight/offload_target entries
         // would leak forever — and a later failure-driven requeue would
-        // ping-pong the frame back to the (possibly dead) origin.
-        if img.constraint.privacy == PrivacyClass::DeviceLocal {
+        // ping-pong the frame back to the (possibly dead) origin. This
+        // protocol correction precedes Admit: the frame was never this
+        // cell's to admit.
+        if pipeline::edge_intake(img.constraint.privacy) == EdgeIntake::ReturnToOrigin {
             log::warn!(
                 "edge {}: device-local frame {} arrived off-device; returning to origin {}",
                 self.id,
@@ -248,32 +311,48 @@ impl EdgeNode {
             out.push(Action::Send { to: img.origin, msg: Message::Image(img), reliable: false });
             return;
         }
+        // Admit stage: per-app token bucket + queue ceiling. Structurally
+        // skipped unless `[admission]` is configured — the per-app queue
+        // depth is an O(queue) scan under the strict discipline, and the
+        // legacy hot path must not pay it. Rejects are counted, not
+        // silently dropped: the record resolves as Dropped/Rejected.
+        if admit && self.pipeline.admission_enabled() {
+            let queued = self.pool.queued_for_app(img.constraint.app);
+            if self.pipeline.admit(&img, now_ms, queued) != AdmitVerdict::Admit {
+                out.push(Action::RecordDropped { task: img.task, reason: DropReason::Rejected });
+                self.nack(&img, out);
+                return;
+            }
+        }
+        // Place stage: the policy's edge + federation levels, fed by the
+        // shared per-decision candidate snapshot (built once, cached
+        // while tables/suspects/instant are unchanged).
+        let edge_snapshot = self.snapshot();
         let placement = {
-            let topology = &self.topology;
-            let edge_id = self.id;
-            let link_to = move |n: NodeId| topology.link(edge_id, n);
+            let candidates = self.pipeline.prepare(
+                &self.table,
+                &self.peers,
+                &self.suspects,
+                self.suspects_version,
+                &self.links,
+                img.origin,
+                now_ms,
+                self.max_staleness_ms,
+            );
             let ctx = EdgeCtx {
                 now_ms,
                 img: &img,
-                edge: self.snapshot(),
+                edge: edge_snapshot,
                 predictors: &self.predictors,
-                table: &self.table,
-                peers: &self.peers,
-                link_to: &link_to,
-                max_staleness_ms: self.max_staleness_ms,
+                candidates,
                 forwarded,
-                suspects: &self.suspects,
             };
             self.policy.decide_edge(&ctx)
         };
-        // Privacy hard filter, part 2, enforced for every policy —
-        // including the churn requeue path, which re-enters here: a
-        // cell-local frame never crosses the backhaul, whatever the
-        // policy decided.
-        let placement = match (img.constraint.privacy, placement) {
-            (PrivacyClass::CellLocal, Placement::ToPeerEdge(_)) => Placement::Local,
-            (_, p) => p,
-        };
+        // Filter stage, part 2, enforced for every policy — including the
+        // churn requeue path, which re-enters here: a cell-local frame
+        // never crosses the backhaul, whatever the Place stage decided.
+        let placement = pipeline::clamp_placement(img.constraint.privacy, placement);
 
         match placement {
             Placement::Offload(target) => {
@@ -308,9 +387,48 @@ impl EdgeNode {
                 if !forwarded {
                     out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
                 }
+                // Overload stage: deadline-aware shed at enqueue — a
+                // best-effort frame that would only queue behind a full
+                // pool, with a predicted completion already past its
+                // deadline, is dropped before wasting a container.
+                // Forwarded frames are exempt: their originating edge owes
+                // a Result upstream, and shedding would strand that relay
+                // state.
+                if !forwarded
+                    && self.pipeline.deadline_shed()
+                    && pipeline::should_shed(&img, &self.pool, now_ms)
+                {
+                    out.push(Action::RecordDropped { task: img.task, reason: DropReason::Shed });
+                    self.nack(&img, out);
+                    return;
+                }
                 self.run_local(img, now_ms, out);
             }
         }
+    }
+
+    /// Negative acknowledgement for a frame this edge resolved as
+    /// rejected/shed: a zero-cost Result releases the origin device's
+    /// awaiting/sent_to_edge tracking, so a later edge-silence episode
+    /// cannot replay an already-resolved frame through the churn requeue
+    /// path. The recorder's first-resolution-wins guards keep the verdict
+    /// Dropped — the pseudo-result never records a completion. Rejects
+    /// are fresh arrivals and sheds can additionally be churn-requeued
+    /// frames; both are never peer-forwarded (`!forwarded` gates each
+    /// call site), so the origin is always a device of this cell and
+    /// reachable.
+    fn nack(&self, img: &ImageMeta, out: &mut Vec<Action>) {
+        out.push(Action::Send {
+            to: img.origin,
+            msg: Message::Result {
+                task: img.task,
+                processed_by: self.id,
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 0.0,
+            },
+            reliable: true,
+        });
     }
 
     /// A local container finished.
@@ -386,15 +504,19 @@ impl EdgeNode {
     pub fn check_liveness(&mut self, now_ms: f64, out: &mut Vec<Action>) {
         let Some(det) = self.detector else { return };
 
+        // Every suspect-set mutation bumps `suspects_version` — the
+        // pipeline's snapshot cache keys on it.
         let mut dead: Vec<NodeId> = Vec::new();
         for s in self.table.iter() {
             let age = now_ms - s.updated_ms;
             if age > det.dead_after_ms {
                 dead.push(s.node);
             } else if age > det.suspect_after_ms {
-                self.suspects.insert(s.node);
-            } else {
-                self.suspects.remove(&s.node);
+                if self.suspects.insert(s.node) {
+                    self.suspects_version += 1;
+                }
+            } else if self.suspects.remove(&s.node) {
+                self.suspects_version += 1;
             }
         }
         let mut dead_peers: Vec<NodeId> = Vec::new();
@@ -408,22 +530,28 @@ impl EdgeNode {
             if age > det.dead_after_ms {
                 dead_peers.push(p.edge);
             } else if age > det.suspect_after_ms {
-                self.suspects.insert(p.edge);
-            } else {
-                self.suspects.remove(&p.edge);
+                if self.suspects.insert(p.edge) {
+                    self.suspects_version += 1;
+                }
+            } else if self.suspects.remove(&p.edge) {
+                self.suspects_version += 1;
             }
         }
 
         for n in dead {
             log::info!("{}: device {n} heartbeat-dead — evicting + requeueing", self.id);
             self.table.deregister(n);
-            self.suspects.remove(&n);
+            if self.suspects.remove(&n) {
+                self.suspects_version += 1;
+            }
             self.requeue_from(n, now_ms, out);
         }
         for e in dead_peers {
             log::info!("{}: peer edge {e} heartbeat-dead — evicting + requeueing", self.id);
             self.peers.evict(e);
-            self.suspects.remove(&e);
+            if self.suspects.remove(&e) {
+                self.suspects_version += 1;
+            }
             self.requeue_from(e, now_ms, out);
         }
 
@@ -456,8 +584,10 @@ impl EdgeNode {
             let Some(img) = self.inflight.remove(&task) else { continue };
             out.push(Action::RecordRequeued { task });
             // A frame a peer forwarded to us keeps its no-re-forward rule.
+            // Requeues bypass the Admit stage: the frame was admitted when
+            // it first entered the cell.
             let forwarded = self.forwarded_from.contains_key(&task);
-            self.on_image(img, now_ms, forwarded, out);
+            self.schedule_image(img, now_ms, forwarded, false, out);
         }
     }
 
@@ -472,6 +602,11 @@ impl EdgeNode {
         self.forwarded_from.clear();
         self.offload_target.clear();
         self.suspects.clear();
+        self.suspects_version += 1;
+        // Replacing the tables resets their version counters: the cached
+        // snapshot key must not survive into the new incarnation. Crash
+        // semantics also clear the admission buckets.
+        self.pipeline.reset_on_fail();
     }
 
     /// Churn: the edge restarted. State was already dropped by
@@ -500,7 +635,7 @@ impl EdgeNode {
 mod tests {
     use super::*;
     use crate::core::message::ProfileUpdate;
-    use crate::core::Constraint;
+    use crate::core::{Constraint, PrivacyClass};
     use crate::profile::profile_for;
     use crate::scheduler::PolicyKind;
 
@@ -934,7 +1069,7 @@ mod tests {
 
     #[test]
     fn requeued_cell_local_image_stays_in_cell() {
-        // The churn requeue path re-places through on_image — the privacy
+        // The churn requeue path re-places through schedule_image — the privacy
         // filter must hold there too: a cell-local frame whose executor
         // died is NOT shed to an idle peer, even with the pool saturated.
         let mut e = fed_edge(PolicyKind::Dds).with_detector(detector());
@@ -1157,6 +1292,196 @@ mod tests {
         out.clear();
         e.on_container_done(0, TaskId(1), 223.0, 300.0, &mut out);
         assert!(!out.iter().any(|a| matches!(a, Action::Send { .. })));
+    }
+
+    // ---- staged pipeline: Admit / Overload / snapshot cache ----------
+
+    fn admission(rate: f64, ceiling: u32, shed: bool) -> AdmissionParams {
+        AdmissionParams {
+            default_rate_per_s: rate,
+            burst: 2.0,
+            queue_ceiling: ceiling,
+            deadline_shed: shed,
+            per_app_rate: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn admission_rejects_are_counted_not_silently_dropped() {
+        let mut e = edge(PolicyKind::Aoe).with_admission(admission(1.0, 100, false));
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        // Burst of 2 admits (bucket depth), the third is rejected with an
+        // explicit RecordDropped{Rejected} — never a silent vanish.
+        for t in 1..=3 {
+            e.on_message(Message::Image(img(t, 50_000.0, 1)), 0.0, &mut out);
+        }
+        let rejects: Vec<TaskId> = out
+            .iter()
+            .filter_map(|a| match a {
+                Action::RecordDropped { task, reason: DropReason::Rejected } => Some(*task),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(rejects, vec![TaskId(3)]);
+        assert_eq!(e.pool().busy_count(), 2, "admitted frames still run");
+        // The origin is NACKed (zero-cost Result) so it releases its
+        // awaiting/sent_to_edge tracking — a later edge-silence episode
+        // must not replay the rejected frame via the requeue path.
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send {
+                to: NodeId(1),
+                msg: Message::Result { task: TaskId(3), process_ms, .. },
+                reliable: true,
+            } if *process_ms == 0.0
+        )));
+        // A rejected frame holds no relay state: a stray Result is a no-op.
+        out.clear();
+        e.on_message(
+            Message::Result {
+                task: TaskId(3),
+                processed_by: NodeId(1),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 1.0,
+            },
+            100.0,
+            &mut out,
+        );
+        assert!(!out.iter().any(|a| matches!(a, Action::Send { .. })));
+    }
+
+    #[test]
+    fn queue_ceiling_rejects_when_app_backlog_full() {
+        // Rate unlimited, ceiling 2: the pool (4 warm) fills, two frames
+        // queue, the next is rejected.
+        let mut e = edge(PolicyKind::Aoe).with_admission(admission(f64::INFINITY, 2, false));
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        for t in 1..=7 {
+            e.on_message(Message::Image(img(t, 50_000.0, 1)), 1.0, &mut out);
+        }
+        assert_eq!(e.pool().busy_count(), 4);
+        assert_eq!(e.pool().queued_count(), 2);
+        let rejects = out
+            .iter()
+            .filter(|a| matches!(a, Action::RecordDropped { reason: DropReason::Rejected, .. }))
+            .count();
+        assert_eq!(rejects, 1);
+    }
+
+    #[test]
+    fn overload_sheds_hopeless_best_effort_at_enqueue() {
+        let mut e = edge(PolicyKind::Aoe).with_admission(admission(f64::INFINITY, 100, true));
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        // Fill the pool with long-deadline frames.
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 500_000.0, 1)), 1.0, &mut out);
+        }
+        assert_eq!(e.pool().busy_count(), 4);
+        out.clear();
+        // A best-effort (priority 0) frame whose 300 ms budget cannot
+        // survive the queue is shed at enqueue — no container wasted.
+        e.on_message(Message::Image(img(9, 300.0, 1)), 2.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordDropped { task: TaskId(9), reason: DropReason::Shed }
+        )));
+        assert_eq!(e.pool().queued_count(), 0, "shed frames never enter the queue");
+        // The same frame at priority 2 is queued, not shed.
+        out.clear();
+        let mut strict = img(10, 300.0, 1);
+        strict.constraint =
+            Constraint::for_app(crate::core::AppId(1), 300.0, PrivacyClass::Open, 2);
+        e.on_message(Message::Image(strict), 2.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordDropped { .. })));
+        assert_eq!(e.pool().queued_count(), 1);
+    }
+
+    #[test]
+    fn without_admission_everything_is_admitted_and_nothing_shed() {
+        let mut e = edge(PolicyKind::Aoe);
+        join(&mut e, 1, 2, 0.0);
+        let mut out = Vec::new();
+        for t in 1..=20 {
+            e.on_message(Message::Image(img(t, 1.0, 1)), 1.0, &mut out);
+        }
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordDropped { .. })));
+        assert_eq!(e.pool().busy_count() + e.pool().queued_count(), 20);
+    }
+
+    #[test]
+    fn snapshot_cache_never_changes_decisions() {
+        // Twin test: drive two identical edges through the same message
+        // script; one invalidates the snapshot cache before every event
+        // (forcing a rebuild per decision). The emitted action streams
+        // must be identical — the cache is a pure memoization.
+        let script: Vec<(Message, f64)> = {
+            let mut s: Vec<(Message, f64)> = vec![
+                (Message::Join { node: NodeId(1), class_tag: 1, warm_containers: 2 }, 0.0),
+                (Message::Join { node: NodeId(2), class_tag: 1, warm_containers: 2 }, 0.0),
+            ];
+            for t in 1..=12u64 {
+                // Same-instant bursts of 4 (cache-hit territory) with
+                // interleaved profile mutations (cache-miss territory).
+                let at = ((t - 1) / 4) as f64 * 4.0;
+                s.push((Message::Image(img(t, 5_000.0, 1)), at));
+                if t % 3 == 0 {
+                    s.push((
+                        Message::Profile(ProfileUpdate {
+                            node: NodeId(2),
+                            busy_containers: (t % 2) as u32,
+                            warm_containers: 2,
+                            queued_images: 0,
+                            cpu_load_pct: 0.0,
+                            battery_pct: None,
+                            sent_ms: at,
+                        }),
+                        at,
+                    ));
+                }
+            }
+            s
+        };
+        let run = |invalidate: bool| -> Vec<Action> {
+            let mut e = edge(PolicyKind::Dds).with_detector(detector());
+            let mut all = Vec::new();
+            for (msg, at) in script.clone() {
+                if invalidate {
+                    e.invalidate_snapshot_cache();
+                }
+                let mut out = Vec::new();
+                e.on_message(msg, at, &mut out);
+                all.extend(out);
+                if invalidate {
+                    e.invalidate_snapshot_cache();
+                }
+                let mut out = Vec::new();
+                e.check_liveness(at, &mut out);
+                all.extend(out);
+            }
+            all
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn snapshot_cache_reuses_within_same_instant_burst() {
+        let mut e = edge(PolicyKind::Dds);
+        join(&mut e, 1, 2, 0.0);
+        join(&mut e, 2, 2, 0.0);
+        push_profile(&mut e, 2, 2, 2, 1.0); // busy → Local placements, no bump
+        let mut out = Vec::new();
+        // Same-instant burst from the same origin, no table mutations in
+        // between (the busy device rules out offload bumps): one rebuild,
+        // three reuses.
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 50_000.0, 1)), 2.0, &mut out);
+        }
+        assert_eq!(e.pipeline().snapshot_rebuilds, 1);
+        assert_eq!(e.pipeline().snapshot_reuses, 3);
     }
 
     #[test]

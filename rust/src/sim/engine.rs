@@ -512,13 +512,17 @@ impl Engine {
                     self.recorder.started(task, from, at_ms);
                 }
                 Action::RecordCompleted { task, at_ms, process_ms } => {
+                    // May be refused (first-resolution-wins vs an explicit
+                    // drop); the task is resolved either way.
                     self.recorder.completed(task, at_ms, process_ms);
                     self.resolved.insert(task);
                 }
-                Action::RecordDropped { task } => {
-                    // Lost for good (e.g. depleted device holding a
-                    // device-local frame): resolves as Dropped — the
-                    // recorder's default verdict — so the run moves on.
+                Action::RecordDropped { task, reason } => {
+                    // A node deliberately gave up (infeasible, admission
+                    // reject, overload shed): the verdict stays the
+                    // recorder's default Dropped, refined by the reason,
+                    // and the task resolves so the run moves on.
+                    self.recorder.dropped(task, reason);
                     self.resolved.insert(task);
                 }
             }

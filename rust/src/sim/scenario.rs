@@ -251,6 +251,11 @@ impl ScenarioBuilder {
         let edge_ids: Vec<NodeId> = topo.edges().collect();
 
         let churn_on = cfg.churn.enabled();
+        // Pipeline stage parameters shared with the live driver — one
+        // derivation, two drivers (DESIGN.md §3). The strict default
+        // discipline and absent admission are structural no-ops.
+        let discipline = cfg.queue_discipline();
+        let admission = cfg.admission_params();
 
         // Nodes in NodeId order: per cell, the edge then its devices.
         let mut nodes = Vec::with_capacity(topo.len());
@@ -258,7 +263,8 @@ impl ScenarioBuilder {
             let mut edge_pool = ContainerPool::new(
                 profile_for(NodeClass::EdgeServer),
                 cfg.cell_warm_containers(c),
-            );
+            )
+            .with_discipline(discipline.clone());
             edge_pool.set_bg_load(cfg.cell_edge_load(c));
             // Cell 0's edge keeps the classic seed; further cells fork
             // high bits so single-cell runs are bit-identical to before.
@@ -273,13 +279,17 @@ impl ScenarioBuilder {
             if churn_on {
                 edge_node = edge_node.with_detector(cfg.churn.detector());
             }
+            if let Some(params) = admission.clone() {
+                edge_node = edge_node.with_admission(params);
+            }
             nodes.push(SimNode::Edge(edge_node));
             for (i, d) in cfg.devices.iter().enumerate() {
                 if d.cell != c as u32 {
                     continue;
                 }
                 let id = device_ids[i];
-                let mut pool = ContainerPool::new(profile_for(d.class), d.warm_containers);
+                let mut pool = ContainerPool::new(profile_for(d.class), d.warm_containers)
+                    .with_discipline(discipline.clone());
                 pool.set_bg_load(d.cpu_load_pct);
                 let mut node = DeviceNode::new(
                     id,

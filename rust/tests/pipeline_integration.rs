@@ -1,0 +1,176 @@
+//! Integration: the staged scheduling pipeline (DESIGN.md §3) end to end
+//! through the discrete-event driver — admission rejects are counted,
+//! overload sheds carry a distinct reason, DRR weights shift dispatch
+//! share, and legacy configs (no `[admission]`, no `weight` keys) are
+//! untouched by the pipeline's presence.
+
+use edge_dds::config::{AdmissionConfig, AppSpec, SystemConfig};
+use edge_dds::container::QueueDiscipline;
+use edge_dds::core::{AppId, PrivacyClass};
+use edge_dds::metrics::{csv_line, writer::summary_json};
+use edge_dds::scheduler::PolicyKind;
+use edge_dds::sim::{ArrivalPattern, ScenarioBuilder};
+
+fn app(name: &str, priority: u8, deadline_ms: f64, n: u32, interval: f64) -> AppSpec {
+    AppSpec {
+        name: name.into(),
+        deadline_ms,
+        privacy: PrivacyClass::Open,
+        priority,
+        n_images: n,
+        interval_ms: interval,
+        size_kb: 29.0,
+        side_px: 64,
+        pattern: ArrivalPattern::Uniform,
+        weight: None,
+        admit_rate_per_s: None,
+    }
+}
+
+#[test]
+fn admission_rejects_are_counted_not_silently_dropped() {
+    // AOE floods the edge at 50 fps; a 5/s token bucket admits only a
+    // handful. Every reject must be accounted: distinct verdict in the
+    // CSV, `rejected` counter in the summary, accounting identity intact.
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Aoe;
+    cfg.workload.n_images = 60;
+    cfg.workload.interval_ms = 20.0;
+    cfg.workload.deadline_ms = 5_000.0;
+    cfg.admission = Some(AdmissionConfig {
+        rate_per_s: 5.0,
+        burst: 2.0,
+        queue_ceiling: 1_000,
+        deadline_shed: false,
+    });
+    let r = ScenarioBuilder::new(cfg).seed(7).run();
+    assert_eq!(r.summary.total, 60);
+    assert_eq!(r.summary.met + r.summary.missed + r.summary.dropped, 60);
+    assert!(r.summary.rejected > 0, "the token bucket must reject under a 10x flood");
+    assert!(r.summary.rejected <= r.summary.dropped, "rejects are a subset of drops");
+    assert!(r.summary.met > 0, "admitted frames still complete");
+    let rejected_lines =
+        r.records.iter().filter(|rec| csv_line(rec).ends_with(",rejected")).count();
+    assert_eq!(rejected_lines, r.summary.rejected);
+    let js = summary_json("admitted", &r.summary);
+    assert!(js.contains(&format!(r#""rejected":{}"#, r.summary.rejected)));
+}
+
+#[test]
+fn overload_shed_records_distinct_reason() {
+    // Deadline shed on, rate unlimited: once the pool saturates, queued
+    // best-effort frames whose predicted completion exceeds their 600 ms
+    // deadline are shed at enqueue with their own verdict spelling.
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Aoe;
+    cfg.workload.n_images = 40;
+    cfg.workload.interval_ms = 20.0;
+    cfg.workload.deadline_ms = 600.0;
+    cfg.admission = Some(AdmissionConfig {
+        rate_per_s: f64::INFINITY,
+        burst: 8.0,
+        queue_ceiling: 1_000,
+        deadline_shed: true,
+    });
+    let r = ScenarioBuilder::new(cfg).seed(7).run();
+    assert_eq!(r.summary.total, 40);
+    assert_eq!(r.summary.met + r.summary.missed + r.summary.dropped, 40);
+    assert!(r.summary.shed > 0, "hopeless best-effort frames must be shed at enqueue");
+    assert_eq!(r.summary.rejected, 0, "no rate/ceiling rejects configured");
+    let shed_lines = r.records.iter().filter(|rec| csv_line(rec).ends_with(",shed")).count();
+    assert_eq!(shed_lines, r.summary.shed);
+    // Shed frames never executed anywhere.
+    for rec in r.records.iter().filter(|rec| csv_line(rec).ends_with(",shed")) {
+        assert!(rec.executed_on.is_none());
+        assert!(rec.started_ms.is_none());
+    }
+}
+
+#[test]
+fn drr_weights_shift_dispatch_share_under_saturation() {
+    // Two equal-priority tenants flooding one cell; weights 2:1. The
+    // heavier tenant must complete more frames within the shared
+    // deadline than the lighter one (strict priority would be a
+    // tie-breaker-ordered free-for-all instead).
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Aoe;
+    let mut heavy = app("heavy", 0, 2_500.0, 60, 50.0);
+    heavy.weight = Some(2);
+    let mut light = app("light", 0, 2_500.0, 60, 50.0);
+    light.weight = Some(1);
+    cfg.apps = vec![heavy, light];
+    assert_eq!(
+        cfg.queue_discipline(),
+        QueueDiscipline::WeightedFair { weights: vec![2, 1] }
+    );
+    let r = ScenarioBuilder::new(cfg).seed(7).run();
+    assert_eq!(r.summary.total, 120);
+    let met = |i: u16| r.summary.app(AppId(i)).map_or(0, |a| a.met);
+    assert!(
+        met(0) > met(1),
+        "weight-2 app must complete more in-deadline frames: {} vs {}",
+        met(0),
+        met(1)
+    );
+    // Both tenants make progress — DRR never starves the lighter one.
+    assert!(met(1) > 0);
+}
+
+#[test]
+fn legacy_configs_replay_identically_with_pipeline_defaults() {
+    // No [admission], no weight keys: the pipeline stages are structural
+    // no-ops. Seeded replay must be byte-identical (CSV and JSON), the
+    // summary must carry no admission counters, and the resolved stage
+    // parameters must be the inert defaults. (The same invariant that
+    // makes the refactor a pure restructuring for PR-3 configs.)
+    let cfg = edge_dds::experiments::slo_config(2, 24);
+    assert_eq!(cfg.queue_discipline(), QueueDiscipline::PriorityEdf);
+    assert!(cfg.admission_params().is_none());
+    let run = || {
+        let mut c = cfg.clone();
+        c.policy = PolicyKind::Dds;
+        ScenarioBuilder::new(c).seed(13).run()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.summary, b.summary);
+    let csv_a: Vec<String> = a.records.iter().map(csv_line).collect();
+    let csv_b: Vec<String> = b.records.iter().map(csv_line).collect();
+    assert_eq!(csv_a, csv_b);
+    assert_eq!(
+        summary_json("replay", &a.summary),
+        summary_json("replay", &b.summary)
+    );
+    assert_eq!((a.summary.rejected, a.summary.shed), (0, 0));
+    let js = summary_json("replay", &a.summary);
+    assert!(!js.contains("rejected"), "legacy JSON schema must be unchanged");
+    // No synthetic drop reasons on any legacy record.
+    assert!(a.records.iter().all(|rec| {
+        let line = csv_line(rec);
+        !line.ends_with(",rejected") && !line.ends_with(",shed")
+    }));
+}
+
+#[test]
+fn admission_applies_per_app_overrides_end_to_end() {
+    // Strict tenant un-throttled, best-effort tenant rate-limited: only
+    // the best-effort app loses frames to admission.
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Aoe;
+    let strict = app("strict", 2, 5_000.0, 30, 100.0);
+    let mut be = app("besteffort", 0, 5_000.0, 120, 25.0);
+    be.admit_rate_per_s = Some(3.0);
+    cfg.apps = vec![strict, be];
+    cfg.admission = Some(AdmissionConfig {
+        rate_per_s: f64::INFINITY,
+        burst: 2.0,
+        queue_ceiling: 1_000,
+        deadline_shed: false,
+    });
+    let r = ScenarioBuilder::new(cfg).seed(7).run();
+    assert_eq!(r.summary.total, 150);
+    let strict_row = r.summary.app(AppId(0)).unwrap();
+    let be_row = r.summary.app(AppId(1)).unwrap();
+    assert_eq!(strict_row.dropped, 0, "unlimited-rate tenant must never be rejected");
+    assert!(be_row.dropped > 0, "rate-limited tenant must see rejects");
+    assert_eq!(r.summary.rejected, be_row.dropped);
+}
