@@ -122,6 +122,8 @@ fn main() {
         cpu_load_pct: 0.0,
         device_idle_containers: 2,
         sent_ms: 5.0,
+        hops: 0,
+        via: NodeId(9),
     });
     let predictors = PredictorSet::new();
     let no_suspects = BTreeSet::new();
@@ -164,6 +166,9 @@ fn main() {
                 predictors: &predictors,
                 candidates,
                 forwarded: false,
+                hops_left: 1,
+                visited: &[],
+                app_weight: 1,
             };
             black_box(dds_edge.decide_edge(&ctx));
         }
@@ -187,6 +192,9 @@ fn main() {
                 predictors: &predictors,
                 candidates,
                 forwarded: false,
+                hops_left: 1,
+                visited: &[],
+                app_weight: 1,
             };
             black_box(dds_edge.decide_edge(&ctx));
         }

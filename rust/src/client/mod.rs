@@ -44,6 +44,7 @@ impl UserClient {
         self.conn.recv()
     }
 
+    /// Close the client socket.
     pub fn shutdown(&self) {
         self.conn.shutdown();
     }

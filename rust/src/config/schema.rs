@@ -1,12 +1,35 @@
 //! Typed experiment configuration and its mapping from `toml_lite`
 //! documents.
+//!
+//! A scenario file is plain TOML; the sections map onto the system like
+//! this (every knob is detailed on its struct below, semantics in
+//! DESIGN.md):
+//!
+//! ```text
+//! [run]            seed / mode / policy / profile & staleness periods
+//! [workload]       frames per stream, interval, deadline, size, pattern
+//! [network]        intra-cell access link (latency, bandwidth, loss)
+//! [edge]           single-cell edge pool (shim for cell 0)
+//! [[device]]       end devices: class, containers, camera, cell = N
+//! [[cell]]         federation cells (edge pool per cell)
+//! [federation]     backhaul link, gossip period,
+//!                  topology = "mesh"|"line", max_forward_hops
+//! [[app]]          QoS registry: deadline, privacy, priority, weight, …
+//! [admission]      edge admission (rate, burst, ceiling, deadline_shed)
+//! [[churn]]        scripted fail/recover/join events
+//! [churn_random]   seeded MTBF/MTTR device cycles
+//! [failure]        detector thresholds + heartbeat period
+//! ```
+//!
+//! Omitted sections degrade to the classic single-cell, single-app,
+//! churn-free, admission-free behaviour — bit-identically.
 
 use anyhow::{bail, Context, Result};
 
 use super::toml_lite::{parse_document, Document};
 use crate::container::QueueDiscipline;
 use crate::core::{AppId, NodeClass, PrivacyClass};
-use crate::net::LinkModel;
+use crate::net::{FederationShape, LinkModel};
 use crate::scheduler::{AdmissionParams, FailureDetector, PolicyKind};
 use crate::sim::workload::ArrivalPattern;
 use crate::util::SplitMix64;
@@ -25,11 +48,14 @@ pub enum RunMode {
 /// `n_images` images every `interval_ms`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WorkloadConfig {
+    /// Frames per stream.
     pub n_images: u32,
+    /// Inter-frame interval (ms).
     pub interval_ms: f64,
     /// Mean payload size (KB); per-image sizes are uniform in
     /// `size_kb ± size_jitter_kb`.
     pub size_kb: f64,
+    /// Uniform size jitter half-width (KB).
     pub size_jitter_kb: f64,
     /// End-to-end deadline applied to every image.
     pub deadline_ms: f64,
@@ -60,6 +86,7 @@ impl Default for WorkloadConfig {
 /// placement levels see it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AppSpec {
+    /// Display name (unique across the registry).
     pub name: String,
     /// End-to-end deadline applied to this app's frames.
     pub deadline_ms: f64,
@@ -73,7 +100,9 @@ pub struct AppSpec {
     pub interval_ms: f64,
     /// Image profile (payload size / pixel side — the model class).
     pub size_kb: f64,
+    /// Pixel side of the app’s frames (model variant).
     pub side_px: u32,
+    /// Arrival process of the app’s streams.
     pub pattern: ArrivalPattern,
     /// Weighted-fair dispatch share (`weight` key, DESIGN.md §3). Any
     /// app declaring a weight switches every container pool's Dispatch
@@ -153,8 +182,11 @@ impl Default for AdmissionConfig {
 /// Uniform star-network parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkConfig {
+    /// One-way propagation latency (ms).
     pub latency_ms: f64,
+    /// Usable bandwidth (Mbit/s).
     pub bandwidth_mbps: f64,
+    /// Probability an unreliable message is lost.
     pub loss_prob: f64,
 }
 
@@ -165,6 +197,7 @@ impl Default for NetworkConfig {
 }
 
 impl NetworkConfig {
+    /// The [`LinkModel`] these parameters describe.
     pub fn link(&self) -> LinkModel {
         LinkModel::new(self.latency_ms, self.bandwidth_mbps, self.loss_prob)
     }
@@ -173,10 +206,15 @@ impl NetworkConfig {
 /// One end device.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceConfig {
+    /// Hardware class.
     pub class: NodeClass,
+    /// Warm containers kept alive.
     pub warm_containers: u32,
+    /// Whether the device has a camera (can originate streams).
     pub camera: bool,
+    /// Background CPU load in [0, 100].
     pub cpu_load_pct: f64,
+    /// Cell-relative position (nearest-camera activation).
     pub location: (f64, f64),
     /// Battery-powered (true) vs mains (false). Battery devices drain and
     /// are handled specially by the `dds-energy` policy.
@@ -190,7 +228,9 @@ pub struct DeviceConfig {
 /// legacy `[edge]` fields describe cell 0 when no `[[cell]]` tables exist.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CellConfig {
+    /// Warm containers on the cell’s edge server.
     pub warm_containers: u32,
+    /// Background CPU load on the cell’s edge.
     pub cpu_load_pct: f64,
 }
 
@@ -203,13 +243,21 @@ impl Default for CellConfig {
 /// Edge↔edge federation parameters (`[federation]` in config files).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FederationConfig {
-    /// Backhaul link between every pair of edge servers. Loss is always
+    /// Backhaul link between linked pairs of edge servers. Loss is always
     /// 0: all backhaul traffic (gossip, forwards, results) is sent over
     /// reliable transport — wired infrastructure, TCP in live mode — so a
     /// loss knob would have no effect and is deliberately not exposed.
     pub backhaul: NetworkConfig,
     /// Inter-edge MP-summary gossip period.
     pub gossip_period_ms: f64,
+    /// Backhaul wiring between the edge servers (`topology = "mesh"` |
+    /// `"line"`, DESIGN.md §Hierarchical routing). Mesh is the classic
+    /// default.
+    pub topology: FederationShape,
+    /// Backhaul-hop budget granted to fresh frames (`max_forward_hops`).
+    /// 1 (the default) is the classic single-hop federation; a line of
+    /// `n` cells needs `n - 1` to reach the far end.
+    pub max_forward_hops: u8,
 }
 
 impl Default for FederationConfig {
@@ -219,6 +267,8 @@ impl Default for FederationConfig {
             // Wi-Fi, much higher bandwidth, lossless.
             backhaul: NetworkConfig { latency_ms: 5.0, bandwidth_mbps: 1_000.0, loss_prob: 0.0 },
             gossip_period_ms: 100.0,
+            topology: FederationShape::Mesh,
+            max_forward_hops: 1,
         }
     }
 }
@@ -238,6 +288,7 @@ pub enum ChurnKind {
 }
 
 impl ChurnKind {
+    /// Parse a config spelling.
     pub fn parse(s: &str) -> Option<ChurnKind> {
         match s {
             "fail" => Some(ChurnKind::Fail),
@@ -260,8 +311,11 @@ pub enum ChurnTarget {
 /// One `[[churn]]` entry: at `at_ms`, do `kind` to `target`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ChurnEvent {
+    /// When the event fires (ms on the run clock).
     pub at_ms: f64,
+    /// The node it targets.
     pub target: ChurnTarget,
+    /// What happens to the target.
     pub kind: ChurnKind,
 }
 
@@ -270,7 +324,9 @@ pub struct ChurnEvent {
 /// failures / mean time to repair. Fully determined by `run.seed`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RandomChurnConfig {
+    /// Mean time between failures per device (ms).
     pub device_mtbf_ms: f64,
+    /// Mean time to repair per device (ms).
     pub device_mttr_ms: f64,
 }
 
@@ -279,7 +335,9 @@ pub struct RandomChurnConfig {
 /// detector thresholds (`[failure]`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChurnConfig {
+    /// Scripted churn events.
     pub events: Vec<ChurnEvent>,
+    /// Seeded random device churn, if enabled.
     pub random: Option<RandomChurnConfig>,
     /// Heartbeat silence after which a node is *suspected* (placement
     /// levels skip it but its state is kept).
@@ -311,6 +369,7 @@ impl ChurnConfig {
         !self.events.is_empty() || self.random.is_some()
     }
 
+    /// The failure-detector thresholds as a [`FailureDetector`].
     pub fn detector(&self) -> FailureDetector {
         FailureDetector {
             suspect_after_ms: self.suspect_after_ms,
@@ -370,17 +429,25 @@ impl ChurnConfig {
 /// The full system configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
+    /// Root RNG seed (all randomness flows from it).
     pub seed: u64,
+    /// Virtual (simulated) or live (sockets) execution.
     pub mode: RunMode,
+    /// The scheduling policy under test.
     pub policy: PolicyKind,
+    /// Workload generator parameters.
     pub workload: WorkloadConfig,
+    /// Access-network (intra-cell) link parameters.
     pub network: NetworkConfig,
+    /// Warm containers on the (single-cell) edge server.
     pub edge_warm_containers: u32,
+    /// Background CPU load on the (single-cell) edge.
     pub edge_cpu_load_pct: f64,
     /// UP push period (the paper uses 20 ms).
     pub profile_period_ms: f64,
     /// Maximum profile staleness DDS accepts when offloading.
     pub max_staleness_ms: f64,
+    /// The end devices, config order.
     pub devices: Vec<DeviceConfig>,
     /// Federation cells. Empty = classic single-cell deployment driven by
     /// the `edge_*` fields above (the single-cell shim: all existing
@@ -456,6 +523,7 @@ impl SystemConfig {
         Self::from_toml(&text)
     }
 
+    /// Build a typed config from a parsed TOML document.
     pub fn from_document(doc: &Document) -> Result<SystemConfig> {
         let d = SystemConfig::default();
 
@@ -662,6 +730,14 @@ impl SystemConfig {
         };
 
         let fd = FederationConfig::default();
+        let shape_name = doc.str_or("federation", "topology", fd.topology.as_str());
+        let Some(topology) = FederationShape::parse(shape_name) else {
+            bail!("unknown federation.topology `{shape_name}` (mesh|line)");
+        };
+        let max_forward_hops = doc.i64_or("federation", "max_forward_hops", fd.max_forward_hops as i64);
+        if !(1..=16).contains(&max_forward_hops) {
+            bail!("federation.max_forward_hops {max_forward_hops} out of range 1..=16");
+        }
         let federation = FederationConfig {
             backhaul: NetworkConfig {
                 latency_ms: doc.f64_or("federation", "backhaul_latency_ms", fd.backhaul.latency_ms),
@@ -675,6 +751,8 @@ impl SystemConfig {
                 loss_prob: 0.0,
             },
             gossip_period_ms: doc.f64_or("federation", "gossip_period_ms", fd.gossip_period_ms),
+            topology,
+            max_forward_hops: max_forward_hops as u8,
         };
 
         let cfg = SystemConfig {
@@ -740,6 +818,15 @@ impl SystemConfig {
     /// True when the config describes a federation of ≥2 cells.
     pub fn is_multi_cell(&self) -> bool {
         self.cells.len() >= 2
+    }
+
+    /// Per-app weighted-fair shares in registry order, weightless apps at
+    /// 1 (`[[app]] weight`) — consulted by the federation level's
+    /// queue-depth scoring (weight-aware forwarding) in addition to the
+    /// Dispatch stage's DRR. Shared by the sim and live drivers — one
+    /// derivation, two drivers.
+    pub fn app_weights(&self) -> Vec<u32> {
+        self.effective_apps().iter().map(|a| a.weight.unwrap_or(1)).collect()
     }
 
     /// The Dispatch-stage discipline every container pool runs under
@@ -1560,6 +1647,66 @@ camera = true
         let mut c = SystemConfig::default();
         c.admission = Some(AdmissionConfig { rate_per_s: f64::NAN, ..Default::default() });
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn federation_topology_and_hops_roundtrip() {
+        let text = r#"
+[federation]
+topology = "line"
+max_forward_hops = 3
+
+[[cell]]
+warm_containers = 4
+
+[[cell]]
+warm_containers = 4
+
+[[device]]
+class = "rpi"
+camera = true
+cell = 0
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert_eq!(c.federation.topology, FederationShape::Line);
+        assert_eq!(c.federation.max_forward_hops, 3);
+        // Defaults: mesh, single hop — the classic federation.
+        let d = SystemConfig::default();
+        assert_eq!(d.federation.topology, FederationShape::Mesh);
+        assert_eq!(d.federation.max_forward_hops, 1);
+        // Unknown shapes and zero/huge budgets are rejected.
+        assert!(SystemConfig::from_toml(
+            "[federation]\ntopology = \"ring\"\n\n[[device]]\nclass = \"rpi\"\ncamera = true"
+        )
+        .is_err());
+        assert!(SystemConfig::from_toml(
+            "[federation]\nmax_forward_hops = 0\n\n[[device]]\nclass = \"rpi\"\ncamera = true"
+        )
+        .is_err());
+        assert!(SystemConfig::from_toml(
+            "[federation]\nmax_forward_hops = 99\n\n[[device]]\nclass = \"rpi\"\ncamera = true"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn app_weights_default_to_one() {
+        let text = r#"
+[[app]]
+name = "strict"
+weight = 3
+
+[[app]]
+name = "besteffort"
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert_eq!(c.app_weights(), vec![3, 1]);
+        // Registry-less: the single implicit app weighs 1.
+        assert_eq!(SystemConfig::default().app_weights(), vec![1]);
     }
 
     #[test]

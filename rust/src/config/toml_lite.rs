@@ -12,19 +12,25 @@ use anyhow::{bail, Context, Result};
 /// A scalar value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// A boolean literal.
     Bool(bool),
 }
 
 impl Value {
+    /// The value as a string, if it is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The value as an integer, if it is one.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -40,6 +46,7 @@ impl Value {
             _ => None,
         }
     }
+    /// The value as a boolean, if it is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -72,6 +79,7 @@ impl Document {
             .unwrap_or(default)
     }
 
+    /// Integer at `[section] key`, or `default`.
     pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
         self.tables
             .get(section)
@@ -80,6 +88,7 @@ impl Document {
             .unwrap_or(default)
     }
 
+    /// String at `[section] key`, or `default`.
     pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
         self.tables
             .get(section)
@@ -88,6 +97,7 @@ impl Document {
             .unwrap_or(default)
     }
 
+    /// Boolean at `[section] key`, or `default`.
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.tables
             .get(section)

@@ -20,18 +20,26 @@ pub enum ContainerState {
 /// A dispatch decision: which container runs the task and until when.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Assignment {
+    /// Index of the assigned container.
     pub container: usize,
+    /// The task being executed.
     pub task: TaskId,
+    /// Execution start (ms on the run clock).
     pub start_ms: f64,
+    /// Predicted completion instant (ms on the run clock).
     pub done_at_ms: f64,
+    /// Predicted in-container processing time (ms).
     pub process_ms: f64,
 }
 
 /// Aggregate pool counters (feeds UP profile pushes and metrics).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct PoolStats {
+    /// Images handed to a container over the pool’s lifetime.
     pub dispatched: u64,
+    /// High-water mark of the overflow queue.
     pub queued_peak: usize,
+    /// Containers started cold (live mode provisioning).
     pub cold_starts: u64,
 }
 
@@ -203,18 +211,22 @@ impl ContainerPool {
         self
     }
 
+    /// The hardware profile this pool models.
     pub fn profile(&self) -> &ClassProfile {
         &self.profile
     }
 
+    /// Set the background (non-container) CPU load in [0, 100].
     pub fn set_bg_load(&mut self, pct: f64) {
         self.bg_load_pct = pct.clamp(0.0, 100.0);
     }
 
+    /// Current background CPU load.
     pub fn bg_load(&self) -> f64 {
         self.bg_load_pct
     }
 
+    /// Warm containers (busy + idle).
     pub fn warm_count(&self) -> u32 {
         self.containers
             .iter()
@@ -222,6 +234,7 @@ impl ContainerPool {
             .count() as u32
     }
 
+    /// Containers currently executing a task.
     pub fn busy_count(&self) -> u32 {
         self.containers
             .iter()
@@ -229,6 +242,7 @@ impl ContainerPool {
             .count() as u32
     }
 
+    /// Idle warm containers.
     pub fn idle_count(&self) -> u32 {
         self.containers
             .iter()
@@ -236,6 +250,7 @@ impl ContainerPool {
             .count() as u32
     }
 
+    /// Images in the overflow queue (not yet in a container).
     pub fn queued_count(&self) -> u32 {
         (self.queue.len() + self.fair.as_ref().map_or(0, DrrQueues::len)) as u32
     }
@@ -267,10 +282,12 @@ impl ContainerPool {
         now_ms + self.model_process_ms(img.size_kb, warm) * (waves as f64 + 1.0)
     }
 
+    /// Lifetime pool statistics.
     pub fn stats(&self) -> PoolStats {
         self.stats
     }
 
+    /// State of one container slot.
     pub fn state(&self, idx: usize) -> ContainerState {
         self.containers[idx]
     }

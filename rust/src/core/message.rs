@@ -12,6 +12,7 @@ use super::{Constraint, ImageMeta, NodeId, TaskId};
 /// A device profile snapshot pushed by UP and held in the MP table.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ProfileUpdate {
+    /// The device this profile describes.
     pub node: NodeId,
     /// Containers currently processing an image.
     pub busy_containers: u32,
@@ -31,8 +32,15 @@ pub struct ProfileUpdate {
 /// (federation extension, DESIGN.md §Federation): enough state for a peer
 /// to judge this cell as a forwarding target without seeing its per-device
 /// table.
+///
+/// Gossip is *transitive* (DESIGN.md §Hierarchical routing): besides its
+/// own summary (`hops = 0`, `via == edge`), an edge re-advertises a damped
+/// copy of each fresh peer summary it holds, with `hops` incremented and
+/// `via` rewritten to itself — so a receiver learns about cells it has no
+/// direct backhaul link to, and knows which neighbor to route through.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EdgeSummary {
+    /// The edge server this summary describes (the *subject*).
     pub edge: NodeId,
     /// Containers busy in the edge's own pool.
     pub busy_containers: u32,
@@ -46,17 +54,67 @@ pub struct EdgeSummary {
     /// entries only) — lets a peer see spare device capacity behind the
     /// edge without per-device detail.
     pub device_idle_containers: u32,
-    /// Sender-side timestamp (ms since run start).
+    /// Subject-side timestamp (ms since run start). Preserved across
+    /// relays, so the staleness discipline naturally discounts transitive
+    /// knowledge by its true age.
     pub sent_ms: f64,
+    /// Backhaul hops between the *advertiser* and the subject: 0 for an
+    /// edge's own summary, `n + 1` for a re-advertised copy of an entry
+    /// the advertiser held at `n` hops. Legacy frames decode as 0.
+    pub hops: u8,
+    /// The edge that sent this copy — the receiver's next hop toward the
+    /// subject. Equals `edge` for a direct (non-relayed) summary; legacy
+    /// frames decode as `edge`.
+    pub via: NodeId,
+}
+
+/// Routing header carried by every cross-cell [`Message::Forward`]
+/// (hierarchical federation, DESIGN.md §Hierarchical routing).
+///
+/// Legacy single-hop frames decode to the [`Default`] header (`ttl = 0`,
+/// empty path): they may be scheduled by the receiving cell but never hop
+/// again — exactly the pre-hierarchical behaviour.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ForwardRoute {
+    /// Remaining backhaul-hop budget; decremented by the sender at each
+    /// hop. A frame with `ttl = 0` must not be re-forwarded.
+    pub ttl: u8,
+    /// Edges the frame has visited, in hop order. A receiver that finds
+    /// itself in this list rejects the loop (counted in
+    /// `RunSummary::loops_rejected`) and schedules the frame locally.
+    pub visited: Vec<NodeId>,
+}
+
+impl ForwardRoute {
+    /// Header for the first hop of a fresh forward: `budget - 1` hops
+    /// remain after it, and the originating edge is the only visited node.
+    pub fn first_hop(origin_edge: NodeId, budget: u8) -> Self {
+        ForwardRoute { ttl: budget.saturating_sub(1), visited: vec![origin_edge] }
+    }
+
+    /// Header for the next hop taken by `edge`: decrement the budget and
+    /// append the sender to the visited path.
+    pub fn next_hop(&self, edge: NodeId) -> Self {
+        let mut visited = self.visited.clone();
+        visited.push(edge);
+        ForwardRoute { ttl: self.ttl.saturating_sub(1), visited }
+    }
+
+    /// Whether `edge` already appears on the visited path.
+    pub fn has_visited(&self, edge: NodeId) -> bool {
+        self.visited.contains(&edge)
+    }
 }
 
 /// An application request from a mobile user (Fig. 2: app id + location +
 /// constraint over the client socket).
 #[derive(Debug, Clone, PartialEq)]
 pub struct UserRequest {
+    /// Application selector from the user’s request.
     pub app_id: u32,
     /// User position; the edge server picks the nearest camera device.
     pub location: (f64, f64),
+    /// Constraint applied to every frame of the session.
     pub constraint: Constraint,
     /// How many frames the activated camera should stream.
     pub n_images: u32,
@@ -94,9 +152,13 @@ pub enum Message {
     /// Edge → device: join accepted.
     JoinAck { assigned: NodeId },
     /// Edge → peer edge: an image forwarded across the backhaul because
-    /// the sending cell was exhausted. `from_edge` is the originating edge
-    /// so the result can be routed back through it to the image's origin.
-    Forward { img: ImageMeta, from_edge: NodeId },
+    /// the sending cell was exhausted. `from_edge` is the *previous hop*
+    /// (the edge that sent this copy) so the result can be relayed back
+    /// hop by hop to the image's origin; `route` carries the remaining hop
+    /// budget and the visited-edge path (hierarchical routing, DESIGN.md
+    /// §Hierarchical routing — legacy frames decode with the default
+    /// no-further-hops route).
+    Forward { img: ImageMeta, from_edge: NodeId, route: ForwardRoute },
     /// Edge → peer edges: periodic MP-summary gossip (federation).
     EdgeSummary(EdgeSummary),
     /// Edge → device: periodic liveness heartbeat (churn detection,
@@ -169,7 +231,11 @@ mod tests {
             }),
             Message::Join { node: NodeId(1), class_tag: 1, warm_containers: 2 },
             Message::JoinAck { assigned: NodeId(1) },
-            Message::Forward { img: meta(), from_edge: NodeId(0) },
+            Message::Forward {
+                img: meta(),
+                from_edge: NodeId(0),
+                route: ForwardRoute::default(),
+            },
             Message::EdgeSummary(EdgeSummary {
                 edge: NodeId(0),
                 busy_containers: 1,
@@ -178,6 +244,8 @@ mod tests {
                 cpu_load_pct: 25.0,
                 device_idle_containers: 3,
                 sent_ms: 40.0,
+                hops: 0,
+                via: NodeId(0),
             }),
             Message::Ping { from: NodeId(0), sent_ms: 120.0 },
         ];
@@ -197,7 +265,30 @@ mod tests {
 
     #[test]
     fn forwarded_image_pays_payload_on_backhaul() {
-        let f = Message::Forward { img: meta(), from_edge: NodeId(0) };
+        let f = Message::Forward {
+            img: meta(),
+            from_edge: NodeId(0),
+            route: ForwardRoute::first_hop(NodeId(0), 3),
+        };
         assert_eq!(f.wire_kb(), 87.0);
+    }
+
+    #[test]
+    fn forward_route_hop_arithmetic() {
+        let first = ForwardRoute::first_hop(NodeId(0), 3);
+        assert_eq!(first.ttl, 2);
+        assert_eq!(first.visited, vec![NodeId(0)]);
+        let second = first.next_hop(NodeId(3));
+        assert_eq!(second.ttl, 1);
+        assert_eq!(second.visited, vec![NodeId(0), NodeId(3)]);
+        assert!(second.has_visited(NodeId(0)));
+        assert!(second.has_visited(NodeId(3)));
+        assert!(!second.has_visited(NodeId(6)));
+        // The budget saturates at 0 instead of wrapping.
+        let spent = ForwardRoute { ttl: 0, visited: vec![NodeId(0)] }.next_hop(NodeId(3));
+        assert_eq!(spent.ttl, 0);
+        // Legacy frames decode to the default: no further hops allowed.
+        assert_eq!(ForwardRoute::default().ttl, 0);
+        assert!(ForwardRoute::default().visited.is_empty());
     }
 }

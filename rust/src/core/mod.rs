@@ -1,5 +1,24 @@
 //! Core domain types shared by every layer: node/task identities, image
 //! metadata, constraints, scheduling decisions, and the wire message set.
+//!
+//! The topology these types describe is a federation of cells — each a
+//! star of end devices around one edge server — whose edges are joined
+//! by backhaul links (mesh or line; DESIGN.md §4/§4a):
+//!
+//! ```text
+//!  cell 0                cell 1                cell 2
+//!  [cam]──┐              [dev]──┐              [dev]──┐
+//!  [dev]──┤ edge0 ══════════ edge1 ══════════════ edge2     (line)
+//!         │   ╚══════════════════════════════════╝          (mesh adds this)
+//!         ▼
+//!   Placement::Local / ToEdge / Offload(dev) / ToPeerEdge(edge)
+//! ```
+//!
+//! A frame ([`ImageMeta`]) carries its [`Constraint`] (deadline, optional
+//! pin, app/privacy/priority descriptor) end to end; a cross-cell
+//! [`Message::Forward`] additionally carries a
+//! [`message::ForwardRoute`] — hop budget + visited path — so routing
+//! can span several backhaul links without ever looping.
 
 pub mod message;
 pub mod wire;
@@ -11,7 +30,10 @@ pub use message::Message;
 /// Dense index — nodes live in a `Vec` inside the engine; `NodeId(0)` is by
 /// convention the edge server in a single-edge topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct NodeId(pub u32);
+pub struct NodeId(
+    /// The dense index value.
+    pub u32,
+);
 
 impl std::fmt::Display for NodeId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -21,7 +43,10 @@ impl std::fmt::Display for NodeId {
 
 /// Monotone per-run task identity (one per image in the stream).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct TaskId(pub u64);
+pub struct TaskId(
+    /// The monotone per-run value.
+    pub u64,
+);
 
 impl std::fmt::Display for TaskId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -53,6 +78,7 @@ impl NodeClass {
         }
     }
 
+    /// Stable config spelling of the class.
     pub fn as_str(&self) -> &'static str {
         match self {
             NodeClass::EdgeServer => "edge-server",
@@ -61,6 +87,7 @@ impl NodeClass {
         }
     }
 
+    /// Parse a config spelling (long or short form).
     pub fn parse(s: &str) -> Option<NodeClass> {
         match s {
             "edge-server" | "edge" => Some(NodeClass::EdgeServer),
@@ -76,7 +103,10 @@ impl NodeClass {
 /// single app of configs without an `[[app]]` table — the pre-registry
 /// behaviour.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
-pub struct AppId(pub u16);
+pub struct AppId(
+    /// Index into the config's app registry.
+    pub u16,
+);
 
 impl AppId {
     /// The implicit app of registry-less configs.
@@ -106,6 +136,7 @@ pub enum PrivacyClass {
 }
 
 impl PrivacyClass {
+    /// Stable config spelling of the privacy class.
     pub fn as_str(&self) -> &'static str {
         match self {
             PrivacyClass::Open => "open",
@@ -114,6 +145,7 @@ impl PrivacyClass {
         }
     }
 
+    /// Parse a config spelling (underscore or dash form).
     pub fn parse(s: &str) -> Option<PrivacyClass> {
         match s {
             "open" => Some(PrivacyClass::Open),
@@ -132,6 +164,7 @@ impl PrivacyClass {
         }
     }
 
+    /// Decode a wire tag; `None` for unknown tags (decode error).
     pub fn from_wire_tag(t: u8) -> Option<PrivacyClass> {
         match t {
             0 => Some(PrivacyClass::Open),
@@ -165,6 +198,7 @@ pub struct Constraint {
 }
 
 impl Constraint {
+    /// A plain deadline constraint (default descriptor, no pin).
     pub fn deadline(deadline_ms: f64) -> Self {
         Constraint {
             deadline_ms,
@@ -175,6 +209,7 @@ impl Constraint {
         }
     }
 
+    /// A deadline constraint pinned to one node (trust constraint).
     pub fn pinned(deadline_ms: f64, node: NodeId) -> Self {
         Constraint { pinned_node: Some(node), ..Constraint::deadline(deadline_ms) }
     }
@@ -200,6 +235,7 @@ impl Constraint {
 /// live mode additionally ships the pixel payload.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ImageMeta {
+    /// Unique task identity of this image.
     pub task: TaskId,
     /// Capture site (the camera's device).
     pub origin: NodeId,
@@ -209,6 +245,7 @@ pub struct ImageMeta {
     pub side_px: u32,
     /// Virtual/real creation timestamp (ms since run start).
     pub created_ms: f64,
+    /// The user constraint the frame travels under.
     pub constraint: Constraint,
     /// Stream sequence number (EODS splits on its parity).
     pub seq: u64,
@@ -268,6 +305,7 @@ pub enum DropReason {
 }
 
 impl DropReason {
+    /// Stable report spelling of the reason.
     pub fn as_str(&self) -> &'static str {
         match self {
             DropReason::Infeasible => "infeasible",

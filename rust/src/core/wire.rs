@@ -9,11 +9,20 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::message::{EdgeSummary, Message, ProfileUpdate, UserRequest};
+use super::message::{EdgeSummary, ForwardRoute, Message, ProfileUpdate, UserRequest};
 use super::{AppId, Constraint, ImageMeta, NodeId, PrivacyClass, TaskId};
 
 /// Constraint flag bit: a pinned node id follows.
 const CF_PINNED: u8 = 0x01;
+/// Version byte of the Forward routing section (hierarchical federation,
+/// DESIGN.md §Wire format). Legacy frames end right after `from_edge`;
+/// versioned frames append `[FWD_ROUTE_V1][ttl: u8][len: u8][len × u32]`.
+/// Unknown versions are rejected — a future layout must bump the byte.
+const FWD_ROUTE_V1: u8 = 0x01;
+/// Version byte of the EdgeSummary relay section. Legacy frames end right
+/// after `sent_ms`; versioned frames append
+/// `[SUM_RELAY_V1][hops: u8][via: u32]`.
+const SUM_RELAY_V1: u8 = 0x01;
 /// Constraint flag bit (format v2, DESIGN.md §Constraints & QoS): an
 /// app/privacy/priority descriptor follows. Absent for the default
 /// descriptor, which keeps default-app frames byte-identical to the
@@ -62,9 +71,20 @@ pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
             put_u32(buf, *warm_containers);
         }
         Message::JoinAck { assigned } => put_u32(buf, assigned.0),
-        Message::Forward { img, from_edge } => {
+        Message::Forward { img, from_edge, route } => {
             put_image(buf, img);
             put_u32(buf, from_edge.0);
+            // Routing section, appended only when non-default: a frame
+            // with no hop budget and no path encodes exactly the legacy
+            // (pre-hierarchical) layout.
+            if route.ttl != 0 || !route.visited.is_empty() {
+                buf.push(FWD_ROUTE_V1);
+                buf.push(route.ttl);
+                buf.push(route.visited.len().min(u8::MAX as usize) as u8);
+                for n in route.visited.iter().take(u8::MAX as usize) {
+                    put_u32(buf, n.0);
+                }
+            }
         }
         Message::EdgeSummary(s) => {
             put_u32(buf, s.edge.0);
@@ -74,6 +94,14 @@ pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
             put_f64(buf, s.cpu_load_pct);
             put_u32(buf, s.device_idle_containers);
             put_f64(buf, s.sent_ms);
+            // Relay section, appended only when the copy is relayed: a
+            // direct self-advertisement (`hops = 0`, `via == edge`)
+            // encodes exactly the legacy layout.
+            if s.hops != 0 || s.via != s.edge {
+                buf.push(SUM_RELAY_V1);
+                buf.push(s.hops);
+                put_u32(buf, s.via.0);
+            }
         }
         Message::Ping { from, sent_ms } => {
             put_u32(buf, from.0);
@@ -139,17 +167,56 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
         0x08 => {
             let img = get_image(&mut r)?;
             let from_edge = NodeId(r.u32()?);
-            Message::Forward { img, from_edge }
+            // Legacy decode: a pre-hierarchical frame ends here and gets
+            // the default route (no further hops). Versioned frames carry
+            // the routing section behind an explicit version byte.
+            let route = if r.remaining() == 0 {
+                ForwardRoute::default()
+            } else {
+                let v = r.u8()?;
+                if v != FWD_ROUTE_V1 {
+                    bail!("unknown Forward route version 0x{v:02x}");
+                }
+                let ttl = r.u8()?;
+                let len = r.u8()? as usize;
+                let mut visited = Vec::with_capacity(len);
+                for _ in 0..len {
+                    visited.push(NodeId(r.u32()?));
+                }
+                ForwardRoute { ttl, visited }
+            };
+            Message::Forward { img, from_edge, route }
         }
-        0x09 => Message::EdgeSummary(EdgeSummary {
-            edge: NodeId(r.u32()?),
-            busy_containers: r.u32()?,
-            warm_containers: r.u32()?,
-            queued_images: r.u32()?,
-            cpu_load_pct: r.f64()?,
-            device_idle_containers: r.u32()?,
-            sent_ms: r.f64()?,
-        }),
+        0x09 => {
+            let edge = NodeId(r.u32()?);
+            let busy_containers = r.u32()?;
+            let warm_containers = r.u32()?;
+            let queued_images = r.u32()?;
+            let cpu_load_pct = r.f64()?;
+            let device_idle_containers = r.u32()?;
+            let sent_ms = r.f64()?;
+            // Legacy decode: a pre-hierarchical summary is direct.
+            let (hops, via) = if r.remaining() == 0 {
+                (0, edge)
+            } else {
+                let v = r.u8()?;
+                if v != SUM_RELAY_V1 {
+                    bail!("unknown EdgeSummary relay version 0x{v:02x}");
+                }
+                (r.u8()?, NodeId(r.u32()?))
+            };
+            Message::EdgeSummary(EdgeSummary {
+                edge,
+                busy_containers,
+                warm_containers,
+                queued_images,
+                cpu_load_pct,
+                device_idle_containers,
+                sent_ms,
+                hops,
+                via,
+            })
+        }
         0x0A => Message::Ping { from: NodeId(r.u32()?), sent_ms: r.f64()? },
         t => bail!("unknown tag byte 0x{t:02x}"),
     };
@@ -248,6 +315,9 @@ impl<'a> Reader<'a> {
         let s = &self.b[self.off..self.off + n];
         self.off += n;
         Ok(s)
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.off
     }
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
@@ -382,6 +452,7 @@ mod tests {
                 seq: 12,
             },
             from_edge: NodeId(0),
+            route: ForwardRoute::default(),
         });
         roundtrip(Message::EdgeSummary(crate::core::message::EdgeSummary {
             edge: NodeId(3),
@@ -391,6 +462,8 @@ mod tests {
             cpu_load_pct: 50.0,
             device_idle_containers: 5,
             sent_ms: 123.0,
+            hops: 0,
+            via: NodeId(3),
         }));
         roundtrip(Message::Ping { from: NodeId(0), sent_ms: 4_250.5 });
     }
@@ -411,7 +484,11 @@ mod tests {
         img.constraint.pinned_node = Some(NodeId(2));
         img.constraint.privacy = PrivacyClass::CellLocal;
         roundtrip(Message::Image(img));
-        roundtrip(Message::Forward { img, from_edge: NodeId(0) });
+        roundtrip(Message::Forward {
+            img,
+            from_edge: NodeId(0),
+            route: ForwardRoute::default(),
+        });
         roundtrip(Message::User(UserRequest {
             app_id: 3,
             location: (0.0, 0.0),
@@ -477,6 +554,195 @@ mod tests {
         let mut bad = buf.clone();
         bad[flags_off + 1 + 2] = 0x7F;
         assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn roundtrip_forward_route_and_relayed_summary() {
+        let img = ImageMeta {
+            task: TaskId(31),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 42.0,
+            constraint: Constraint::deadline(2_000.0),
+            seq: 31,
+        };
+        roundtrip(Message::Forward {
+            img,
+            from_edge: NodeId(3),
+            route: ForwardRoute { ttl: 2, visited: vec![NodeId(0), NodeId(3)] },
+        });
+        // A zero-ttl frame with a non-empty path still needs the section
+        // (the path is what loop rejection reads).
+        roundtrip(Message::Forward {
+            img,
+            from_edge: NodeId(6),
+            route: ForwardRoute { ttl: 0, visited: vec![NodeId(0), NodeId(3), NodeId(6)] },
+        });
+        roundtrip(Message::EdgeSummary(crate::core::message::EdgeSummary {
+            edge: NodeId(6),
+            busy_containers: 1,
+            warm_containers: 4,
+            queued_images: 2,
+            cpu_load_pct: 10.0,
+            device_idle_containers: 1,
+            sent_ms: 75.0,
+            hops: 2,
+            via: NodeId(3),
+        }));
+    }
+
+    #[test]
+    fn default_route_and_direct_summary_encode_legacy_layout() {
+        // A no-further-hops Forward and a direct EdgeSummary must encode
+        // byte-identically to the pre-hierarchical layout: old decoders
+        // (and recorded traces) see unchanged frames.
+        let img = ImageMeta {
+            task: TaskId(7),
+            origin: NodeId(4),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 10.0,
+            constraint: Constraint::deadline(5_000.0),
+            seq: 7,
+        };
+        let mut fwd = Vec::new();
+        encode(
+            &Message::Forward { img, from_edge: NodeId(3), route: ForwardRoute::default() },
+            &mut fwd,
+        );
+        // header + image body (54 - 5 = 49 bytes) + u32 from_edge.
+        assert_eq!(fwd.len(), 5 + 49 + 4);
+        // And a routed frame grows by exactly version + ttl + len + path.
+        let mut routed = Vec::new();
+        encode(
+            &Message::Forward {
+                img,
+                from_edge: NodeId(3),
+                route: ForwardRoute { ttl: 1, visited: vec![NodeId(0)] },
+            },
+            &mut routed,
+        );
+        assert_eq!(routed.len(), fwd.len() + 1 + 1 + 1 + 4);
+
+        let direct = crate::core::message::EdgeSummary {
+            edge: NodeId(3),
+            busy_containers: 0,
+            warm_containers: 4,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: 2,
+            sent_ms: 50.0,
+            hops: 0,
+            via: NodeId(3),
+        };
+        let mut sum = Vec::new();
+        encode(&Message::EdgeSummary(direct), &mut sum);
+        // header + 5×u32 + 2×f64 = 5 + 20 + 16.
+        assert_eq!(sum.len(), 5 + 20 + 16);
+        let mut relayed = direct;
+        relayed.hops = 1;
+        relayed.via = NodeId(0);
+        let mut sum2 = Vec::new();
+        encode(&Message::EdgeSummary(relayed), &mut sum2);
+        assert_eq!(sum2.len(), sum.len() + 1 + 1 + 4);
+    }
+
+    #[test]
+    fn legacy_forward_frame_decodes_with_default_route() {
+        // Hand-assemble a pre-hierarchical Forward frame (image body +
+        // from_edge, nothing else) and check it decodes to the default
+        // route — the compat rule the federation tests rely on.
+        let img = ImageMeta {
+            task: TaskId(9),
+            origin: NodeId(4),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 5.0,
+            constraint: Constraint::deadline(5_000.0),
+            seq: 9,
+        };
+        let mut frame = vec![0x08u8, 0, 0, 0, 0];
+        super::put_image(&mut frame, &img);
+        super::put_u32(&mut frame, 3);
+        let len = (frame.len() - 5) as u32;
+        frame[1..5].copy_from_slice(&len.to_le_bytes());
+        match decode(&frame).expect("legacy Forward frame must decode") {
+            Message::Forward { img: got, from_edge, route } => {
+                assert_eq!(got, img);
+                assert_eq!(from_edge, NodeId(3));
+                assert_eq!(route, ForwardRoute::default());
+            }
+            other => panic!("decoded wrong variant: {other:?}"),
+        }
+        // Same exercise for a legacy EdgeSummary frame → direct summary.
+        let mut sum = vec![0x09u8, 0, 0, 0, 0];
+        super::put_u32(&mut sum, 6); // edge
+        super::put_u32(&mut sum, 1); // busy
+        super::put_u32(&mut sum, 4); // warm
+        super::put_u32(&mut sum, 0); // queued
+        super::put_f64(&mut sum, 25.0); // cpu
+        super::put_u32(&mut sum, 2); // device idle
+        super::put_f64(&mut sum, 80.0); // sent
+        let len = (sum.len() - 5) as u32;
+        sum[1..5].copy_from_slice(&len.to_le_bytes());
+        match decode(&sum).expect("legacy EdgeSummary frame must decode") {
+            Message::EdgeSummary(s) => {
+                assert_eq!(s.edge, NodeId(6));
+                assert_eq!(s.hops, 0);
+                assert_eq!(s.via, NodeId(6), "legacy summaries are direct");
+            }
+            other => panic!("decoded wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_route_version_and_truncated_path() {
+        let img = ImageMeta {
+            task: TaskId(9),
+            origin: NodeId(4),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 5.0,
+            constraint: Constraint::deadline(5_000.0),
+            seq: 9,
+        };
+        let msg = Message::Forward {
+            img,
+            from_edge: NodeId(3),
+            route: ForwardRoute { ttl: 2, visited: vec![NodeId(0), NodeId(3)] },
+        };
+        let mut buf = Vec::new();
+        encode(&msg, &mut buf);
+        // The version byte sits right after from_edge: 5 + 49 + 4.
+        let v_off = 5 + 49 + 4;
+        assert_eq!(buf[v_off], 0x01);
+        let mut bad = buf.clone();
+        bad[v_off] = 0x7E;
+        assert!(decode(&bad).is_err(), "unknown route version must be rejected");
+        // Declare a longer path than the body carries → truncation error.
+        let mut bad = buf.clone();
+        bad[v_off + 2] = 9;
+        assert!(decode(&bad).is_err(), "truncated visited path must be rejected");
+        // Same for the summary relay section.
+        let sum = Message::EdgeSummary(crate::core::message::EdgeSummary {
+            edge: NodeId(6),
+            busy_containers: 0,
+            warm_containers: 4,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: 0,
+            sent_ms: 10.0,
+            hops: 1,
+            via: NodeId(3),
+        });
+        let mut buf = Vec::new();
+        encode(&sum, &mut buf);
+        let v_off = 5 + 20 + 16;
+        assert_eq!(buf[v_off], 0x01);
+        let mut bad = buf.clone();
+        bad[v_off] = 0x7E;
+        assert!(decode(&bad).is_err(), "unknown relay version must be rejected");
     }
 
     #[test]

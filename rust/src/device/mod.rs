@@ -42,11 +42,26 @@ pub enum Action {
     /// Resolves the task as `Dropped` so the run does not wait on it; the
     /// reason lands in the task record (DESIGN.md §3).
     RecordDropped { task: TaskId, reason: DropReason },
+    /// Recorder hook: the task crossed one backhaul hop (a `Forward`
+    /// send, initial or relayed — hierarchical routing, DESIGN.md
+    /// §Hierarchical routing). Sums into `RunSummary::forward_hops`.
+    RecordForwardHop { task: TaskId },
+    /// Recorder hook: a `Forward` arrived at an edge already on its
+    /// visited path — the loop was rejected and the frame scheduled
+    /// locally. Structurally zero under sender-side path filtering; the
+    /// counter is the proof.
+    RecordLoopRejected { task: TaskId },
+    /// Recorder hook: a forwarded frame's hop budget ran out at a
+    /// saturated cell — it queues here even though another hop might have
+    /// found idle capacity (the gossip experiment's staleness signal).
+    RecordTtlExpired { task: TaskId },
 }
 
 /// An end device (Raspberry Pi / smartphone).
 pub struct DeviceNode {
+    /// The device’s own node id.
     pub id: NodeId,
+    /// The cell edge server this device reports to.
     pub edge: NodeId,
     pool: ContainerPool,
     predictor: Predictor,
@@ -74,6 +89,7 @@ pub struct DeviceNode {
 }
 
 impl DeviceNode {
+    /// Build a device node around its pool, predictor and policy.
     pub fn new(
         id: NodeId,
         edge: NodeId,
@@ -133,6 +149,7 @@ impl DeviceNode {
         self.last_edge_heard_ms = now_ms;
     }
 
+    /// The battery model, if this device is battery-powered.
     pub fn battery(&self) -> Option<&Battery> {
         self.battery.as_ref()
     }
@@ -145,10 +162,12 @@ impl DeviceNode {
         }
     }
 
+    /// The local container pool (read-only view).
     pub fn pool(&self) -> &ContainerPool {
         &self.pool
     }
 
+    /// Mutable access to the local container pool (drivers: load knobs).
     pub fn pool_mut(&mut self) -> &mut ContainerPool {
         &mut self.pool
     }

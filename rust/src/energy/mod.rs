@@ -33,6 +33,7 @@ pub const RPI_PACK: (f64, f64, f64) = (18_500.0, 6_000.0, 2_500.0);
 pub const PHONE_PACK: (f64, f64, f64) = (15_500.0, 4_000.0, 1_000.0);
 
 impl Battery {
+    /// Build a battery model from capacity and draw rates.
     pub fn new(capacity_mwh: f64, busy_mw: f64, idle_mw: f64) -> Self {
         assert!(capacity_mwh > 0.0 && busy_mw >= 0.0 && idle_mw >= 0.0);
         Battery {
@@ -44,10 +45,12 @@ impl Battery {
         }
     }
 
+    /// The Raspberry Pi pack model.
     pub fn rpi() -> Self {
         Battery::new(RPI_PACK.0, RPI_PACK.1, RPI_PACK.2)
     }
 
+    /// The smartphone pack model.
     pub fn phone() -> Self {
         Battery::new(PHONE_PACK.0, PHONE_PACK.1, PHONE_PACK.2)
     }
@@ -57,6 +60,7 @@ impl Battery {
         (self.remaining_mwh / self.capacity_mwh * 100.0).clamp(0.0, 100.0)
     }
 
+    /// Whether the pack is effectively empty.
     pub fn depleted(&self) -> bool {
         self.remaining_mwh <= 0.0
     }

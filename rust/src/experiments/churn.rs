@@ -35,15 +35,20 @@ pub const CHURN_CELLS: [usize; 3] = [1, 2, 4];
 /// The injected disturbance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ChurnScenario {
+    /// Helper devices fail and recover mid-run.
     DeviceChurn,
+    /// Cell 0's edge server fails and recovers mid-run.
     EdgeFail,
+    /// An extra cell joins the federation mid-run.
     CellJoin,
 }
 
 impl ChurnScenario {
+    /// All scripted churn scenarios, sweep order.
     pub const ALL: [ChurnScenario; 3] =
         [ChurnScenario::DeviceChurn, ChurnScenario::EdgeFail, ChurnScenario::CellJoin];
 
+    /// Stable report spelling.
     pub fn as_str(&self) -> &'static str {
         match self {
             ChurnScenario::DeviceChurn => "device-churn",
@@ -62,14 +67,23 @@ impl std::fmt::Display for ChurnScenario {
 /// One (cells × scenario × policy) run of the sweep.
 #[derive(Debug, Clone)]
 pub struct ChurnRow {
+    /// Number of federation cells.
     pub n_cells: usize,
+    /// The scripted churn scenario.
     pub scenario: ChurnScenario,
+    /// The policy under test.
     pub policy: PolicyKind,
+    /// Frames completed within their deadline.
     pub met: usize,
+    /// Frames completed past their deadline.
     pub missed: usize,
+    /// Frames never completed.
     pub dropped: usize,
+    /// Frames pulled back from nodes declared dead.
     pub requeued: usize,
+    /// Requeued frames that still completed.
     pub replaced: usize,
+    /// Frames placed across the backhaul.
     pub forwarded: usize,
 }
 
@@ -254,16 +268,24 @@ pub const SWEEP_MTBF_MS: [f64; 4] = [2_000.0, 5_000.0, 10_000.0, 40_000.0];
 /// One (MTBF × policy) run of the churn-rate sweep.
 #[derive(Debug, Clone)]
 pub struct ChurnSweepRow {
+    /// Mean time between failures of this sweep cell (ms).
     pub mtbf_ms: f64,
+    /// The policy under test.
     pub policy: PolicyKind,
+    /// Frames created.
     pub total: usize,
+    /// Frames completed within their deadline.
     pub met: usize,
+    /// Frames pulled back from nodes declared dead.
     pub requeued: usize,
+    /// Requeued frames that still completed.
     pub replaced: usize,
+    /// Frames never completed.
     pub dropped: usize,
 }
 
 impl ChurnSweepRow {
+    /// Fraction of frames that met their deadline.
     pub fn met_fraction(&self) -> f64 {
         if self.total == 0 {
             0.0

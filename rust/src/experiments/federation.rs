@@ -21,8 +21,11 @@ pub const FED_CELLS: [usize; 3] = [1, 2, 4];
 /// One (cell count, edge load) cell of the sweep.
 #[derive(Debug, Clone)]
 pub struct FedRow {
+    /// Number of federation cells.
     pub n_cells: usize,
+    /// Background CPU load on the stressed (cell 0) edge.
     pub edge_load_pct: f64,
+    /// Frames that met their deadline.
     pub met: usize,
     /// Images DDS forwarded across cells (always 0 when `n_cells == 1`).
     pub forwarded: usize,

@@ -13,19 +13,26 @@ use super::Comparison;
 /// Constraint sweeps used by the paper's x-axes.
 pub const FIG5_DEADLINES: [f64; 9] =
     [200.0, 500.0, 1_000.0, 2_000.0, 3_000.0, 5_000.0, 10_000.0, 20_000.0, 30_000.0];
+/// Fig. 5 arrival intervals (ms).
 pub const FIG5_INTERVALS: [f64; 4] = [50.0, 100.0, 200.0, 500.0];
+/// Fig. 6 deadline sweep (ms).
 pub const FIG6_DEADLINES: [f64; 11] = [
     200.0, 500.0, 1_000.0, 2_000.0, 5_000.0, 10_000.0, 20_000.0, 30_000.0, 40_000.0, 60_000.0,
     80_000.0,
 ];
+/// Fig. 6 arrival intervals (ms).
 pub const FIG6_INTERVALS: [f64; 2] = [50.0, 100.0];
+/// Fig. 8 edge background-load levels (percent).
 pub const FIG8_LOADS: [f64; 5] = [0.0, 25.0, 50.0, 75.0, 100.0];
+/// Fig. 8 deadline variants (ms).
 pub const FIG8_DEADLINES: [f64; 2] = [5_000.0, 10_000.0];
 
 /// One (interval, deadline) cell: met counts per policy.
 #[derive(Debug, Clone)]
 pub struct Fig5Row {
+    /// Arrival interval of this sweep cell (ms).
     pub interval_ms: f64,
+    /// Deadline of this sweep cell (ms).
     pub deadline_ms: f64,
     /// (policy, images meeting the constraint).
     pub met: Vec<(PolicyKind, usize)>,
@@ -74,6 +81,7 @@ pub fn fig6(seed: u64) -> Vec<Fig5Row> {
 /// Fig. 7 row: CPU load vs average container processing time.
 #[derive(Debug, Clone)]
 pub struct Fig7Row {
+    /// Paper-vs-measured container time at this load.
     pub comparison: Comparison,
 }
 
@@ -107,9 +115,13 @@ pub fn fig7() -> Vec<Fig7Row> {
 /// Fig. 8 cell: met counts for DDS vs DDS+R2 under edge CPU stress.
 #[derive(Debug, Clone)]
 pub struct Fig8Row {
+    /// Deadline of this sweep cell (ms).
     pub deadline_ms: f64,
+    /// Stressed-edge background load (percent).
     pub edge_load_pct: f64,
+    /// Frames DDS met without the helper device.
     pub dds_met: usize,
+    /// Frames DDS met with the helper (R2) device.
     pub dds_with_r2_met: usize,
 }
 

@@ -1,0 +1,220 @@
+//! Gossip-bandwidth ablation (beyond the paper; ROADMAP federation
+//! follow-up): staleness vs. overhead of the hierarchical federation.
+//!
+//! The sweep crosses gossip period × backhaul bandwidth × federation size
+//! (2/4/8 cells) × wiring shape (full mesh vs. line). All load originates
+//! in cell 0 under the Fig. 8 100% edge stress, so deadline satisfaction
+//! depends on how quickly capacity knowledge propagates (gossip period,
+//! relay damping) and how expensive it is to exploit (backhaul bandwidth,
+//! hop count). The per-hop counters — `forward_hops`, `loops_rejected`,
+//! `ttl_expired` — quantify the routing work itself: a line topology pays
+//! multi-hop forwarding where a mesh pays broadcast gossip.
+//!
+//! Line federations get `max_forward_hops = cells - 1` (the far end is
+//! reachable); meshes keep the classic single hop.
+
+use crate::config::{CellConfig, DeviceConfig, SystemConfig, WorkloadConfig};
+use crate::core::NodeClass;
+use crate::net::FederationShape;
+use crate::scheduler::PolicyKind;
+use crate::sim::workload::ArrivalPattern;
+use crate::sim::ScenarioBuilder;
+
+/// Federation sizes compared by the sweep.
+pub const GOSSIP_CELLS: [usize; 3] = [2, 4, 8];
+/// Gossip periods swept (ms): from chatty to stale.
+pub const GOSSIP_PERIODS_MS: [f64; 3] = [25.0, 100.0, 400.0];
+/// Backhaul bandwidths swept (Mbit/s): metro fiber vs. congested uplink.
+pub const GOSSIP_BACKHAUL_MBPS: [f64; 2] = [1_000.0, 100.0];
+
+/// One sweep cell's outcome.
+#[derive(Debug, Clone)]
+pub struct GossipRow {
+    /// Number of federation cells.
+    pub n_cells: usize,
+    /// Backhaul wiring shape (mesh or line).
+    pub shape: FederationShape,
+    /// Inter-edge gossip period (ms).
+    pub gossip_period_ms: f64,
+    /// Backhaul bandwidth (Mbit/s).
+    pub backhaul_mbps: f64,
+    /// Frames that met their deadline.
+    pub met: usize,
+    /// Distinct frames placed across the backhaul.
+    pub forwarded: usize,
+    /// Total backhaul hops crossed (≥ `forwarded` on a line).
+    pub forward_hops: usize,
+    /// Forward loops rejected (must stay 0 — the routing-safety proof).
+    pub loops_rejected: usize,
+    /// Forwarded frames whose hop budget died at a saturated cell.
+    pub ttl_expired: usize,
+}
+
+/// The sweep's scenario: like [`super::fed_config`] but with an explicit
+/// wiring shape, a line-aware hop budget, and smaller helper cells so the
+/// far capacity matters.
+pub fn gossip_config(n_cells: usize, shape: FederationShape) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    cfg.cells = vec![CellConfig { warm_containers: 4, cpu_load_pct: 0.0 }; n_cells];
+    cfg.devices = (0..n_cells)
+        .flat_map(|c| {
+            (0..2).map(move |i| DeviceConfig {
+                class: NodeClass::RaspberryPi,
+                warm_containers: 2,
+                camera: c == 0 && i == 0,
+                cpu_load_pct: 0.0,
+                location: (1.0 + i as f64, 0.0),
+                battery: false,
+                cell: c as u32,
+            })
+        })
+        .collect();
+    cfg.federation.topology = shape;
+    cfg.federation.max_forward_hops = match shape {
+        FederationShape::Mesh => 1,
+        FederationShape::Line => (n_cells.saturating_sub(1)).clamp(1, 16) as u8,
+    };
+    cfg
+}
+
+fn gossip_workload(n_images: u32) -> WorkloadConfig {
+    // 20 ms (50 fps) deliberately exceeds the first two cells' combined
+    // service rate (~42 fps with cell 0 stressed), so the line variants
+    // must route past the direct neighbor to keep meeting deadlines.
+    WorkloadConfig {
+        n_images,
+        interval_ms: 20.0,
+        size_kb: 29.0,
+        size_jitter_kb: 0.0,
+        deadline_ms: 5_000.0,
+        side_px: 64,
+        pattern: ArrivalPattern::Uniform,
+    }
+}
+
+/// Run one sweep cell (cell 0 stressed at the Fig. 8 100% load point).
+pub fn gossip_run(
+    n_cells: usize,
+    shape: FederationShape,
+    gossip_period_ms: f64,
+    backhaul_mbps: f64,
+    seed: u64,
+    n_images: u32,
+) -> GossipRow {
+    let mut cfg = gossip_config(n_cells, shape);
+    cfg.federation.gossip_period_ms = gossip_period_ms;
+    cfg.federation.backhaul.bandwidth_mbps = backhaul_mbps;
+    let report = ScenarioBuilder::new(cfg)
+        .workload(gossip_workload(n_images))
+        .edge_load(100.0)
+        .seed(seed)
+        .run();
+    GossipRow {
+        n_cells,
+        shape,
+        gossip_period_ms,
+        backhaul_mbps,
+        met: report.summary.met,
+        forwarded: report.summary.forwarded,
+        forward_hops: report.summary.forward_hops,
+        loops_rejected: report.summary.loops_rejected,
+        ttl_expired: report.summary.ttl_expired,
+    }
+}
+
+/// The full sweep: shapes × cell counts × gossip periods × bandwidths.
+pub fn gossip(seed: u64, n_images: u32) -> Vec<GossipRow> {
+    let mut rows = Vec::new();
+    for shape in [FederationShape::Mesh, FederationShape::Line] {
+        for &n_cells in &GOSSIP_CELLS {
+            for &period in &GOSSIP_PERIODS_MS {
+                for &bw in &GOSSIP_BACKHAUL_MBPS {
+                    rows.push(gossip_run(n_cells, shape, period, bw, seed, n_images));
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Render the sweep as an aligned text grid.
+pub fn render_gossip(rows: &[GossipRow]) -> String {
+    let mut out = String::from(
+        "## Gossip ablation: met / routing counters vs period x backhaul x shape (cell-0 stress)\n",
+    );
+    out.push_str(&format!(
+        "{:>6} {:>6} {:>10} {:>8} {:>7} {:>9} {:>6} {:>7} {:>8}\n",
+        "shape", "cells", "gossip_ms", "bw_mbps", "met", "forwarded", "hops", "loops", "ttl_exp"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:>6} {:>6} {:>10} {:>8} {:>7} {:>9} {:>6} {:>7} {:>8}\n",
+            r.shape.as_str(),
+            r.n_cells,
+            r.gossip_period_ms,
+            r.backhaul_mbps,
+            r.met,
+            r.forwarded,
+            r.forward_hops,
+            r.loops_rejected,
+            r.ttl_expired,
+        ));
+    }
+    let loops: usize = rows.iter().map(|r| r.loops_rejected).sum();
+    out.push_str(&format!("Gossip loops rejected (all runs): {loops}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gossip_configs_validate() {
+        for shape in [FederationShape::Mesh, FederationShape::Line] {
+            for &n in &GOSSIP_CELLS {
+                let c = gossip_config(n, shape);
+                c.validate().unwrap();
+                assert_eq!(c.n_cells(), n);
+                assert_eq!(c.federation.topology, shape);
+            }
+        }
+        assert_eq!(gossip_config(4, FederationShape::Line).federation.max_forward_hops, 3);
+        assert_eq!(gossip_config(4, FederationShape::Mesh).federation.max_forward_hops, 1);
+    }
+
+    #[test]
+    fn line_sweep_cell_routes_multi_hop_without_loops() {
+        // A stressed 4-cell line must actually use multi-hop routing
+        // (hops strictly exceed distinct forwards) and never loop.
+        let r = gossip_run(4, FederationShape::Line, 25.0, 1_000.0, 7, 220);
+        assert!(r.forwarded > 0, "line federation must forward under stress");
+        assert!(
+            r.forward_hops > r.forwarded,
+            "some frames must cross >1 hop (hops {} vs forwarded {})",
+            r.forward_hops,
+            r.forwarded
+        );
+        assert_eq!(r.loops_rejected, 0, "visited-path filtering must prevent loops");
+    }
+
+    #[test]
+    fn mesh_sweep_cell_is_single_hop() {
+        let r = gossip_run(2, FederationShape::Mesh, 100.0, 1_000.0, 7, 120);
+        assert_eq!(
+            r.forward_hops, r.forwarded,
+            "a mesh with budget 1 forwards exactly one hop per frame"
+        );
+        assert_eq!(r.loops_rejected, 0);
+    }
+
+    #[test]
+    fn render_contains_grid() {
+        let rows = vec![gossip_run(2, FederationShape::Mesh, 100.0, 1_000.0, 7, 40)];
+        let s = render_gossip(&rows);
+        assert!(s.contains("shape"));
+        assert!(s.contains("mesh"));
+        assert!(s.contains("Gossip loops rejected (all runs): 0"));
+    }
+}

@@ -9,6 +9,7 @@
 pub mod churn;
 pub mod federation;
 pub mod figures;
+pub mod gossip;
 pub mod overload;
 pub mod slo;
 pub mod tables;
@@ -18,6 +19,10 @@ pub use churn::{
     render_churnsweep, ChurnRow, ChurnScenario, ChurnSweepRow, SWEEP_MTBF_MS,
 };
 pub use federation::{fed, fed_config, fed_run, render_fed, FedRow};
+pub use gossip::{
+    gossip, gossip_config, gossip_run, render_gossip, GossipRow, GOSSIP_BACKHAUL_MBPS,
+    GOSSIP_CELLS, GOSSIP_PERIODS_MS,
+};
 pub use overload::{
     overload, overload_config, overload_run, render_overload, OverloadRow, OVERLOAD_MULTS,
 };
@@ -28,12 +33,16 @@ pub use tables::{table2, table3, table4, table5, table6, TableRow};
 /// A paper-vs-measured comparison row.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Comparison {
+    /// The x-axis value (constraint, load level, …).
     pub x: f64,
+    /// The paper’s reference number.
     pub paper: f64,
+    /// Our measured number.
     pub measured: f64,
 }
 
 impl Comparison {
+    /// Relative error of measured vs. paper (0 when the paper reads 0).
     pub fn rel_err(&self) -> f64 {
         if self.paper == 0.0 {
             0.0

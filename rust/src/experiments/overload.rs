@@ -40,11 +40,14 @@ pub const OVERLOAD_MULTS: [u32; 4] = [1, 2, 3, 4];
 /// One (multiplier × mode × policy) run.
 #[derive(Debug, Clone)]
 pub struct OverloadRow {
+    /// Arrival-rate multiplier (1× = the base scenario).
     pub mult: u32,
     /// Admission + weighted-fair sharing on (vs. strict-priority PR-3
     /// behaviour).
     pub fair: bool,
+    /// The policy under test.
     pub policy: PolicyKind,
+    /// Full run summary (rejected/shed counters included).
     pub summary: RunSummary,
 }
 

@@ -40,9 +40,13 @@ pub const SLO_APP_NAMES: [&str; 3] = ["detector", "blur", "analytics"];
 /// counters.
 #[derive(Debug, Clone)]
 pub struct SloRow {
+    /// Number of federation cells.
     pub n_cells: usize,
+    /// Whether device churn was injected.
     pub churn: bool,
+    /// The policy under test.
     pub policy: PolicyKind,
+    /// Full run summary (per-app tables included).
     pub summary: RunSummary,
     /// App names in `AppId` order (from the config registry).
     pub app_names: Vec<String>,

@@ -13,16 +13,21 @@ use super::Comparison;
 /// A regenerated table: title + column label + comparison rows.
 #[derive(Debug, Clone)]
 pub struct TableRow {
+    /// Table caption.
     pub title: &'static str,
+    /// Label of the x column.
     pub x_label: &'static str,
+    /// Paper-vs-measured rows.
     pub rows: Vec<Comparison>,
 }
 
 impl TableRow {
+    /// Render as an aligned text table.
     pub fn render(&self) -> String {
         super::render_comparisons(self.title, self.x_label, &self.rows)
     }
 
+    /// Largest relative error across the rows.
     pub fn max_rel_err(&self) -> f64 {
         self.rows.iter().map(|r| r.rel_err()).fold(0.0, f64::max)
     }

@@ -17,6 +17,8 @@
 //!   *live-mode* containers execute the real model; Python is never on the
 //!   request path.
 
+#![warn(missing_docs)]
+
 pub mod client;
 pub mod config;
 pub mod container;

@@ -42,9 +42,11 @@ use crate::sim::ScenarioBuilder;
 pub struct Clock(Arc<Instant>);
 
 impl Clock {
+    /// Start the clock now.
     pub fn start() -> Self {
         Clock(Arc::new(Instant::now()))
     }
+    /// Milliseconds since the clock started.
     pub fn now_ms(&self) -> f64 {
         self.0.elapsed().as_secs_f64() * 1e3
     }
@@ -89,10 +91,12 @@ impl SharedRecorder {
         }
     }
 
+    /// Aggregate everything recorded so far.
     pub fn summarize(&self) -> RunSummary {
         self.inner.lock().unwrap().summarize()
     }
 
+    /// Whether every injected frame has resolved.
     pub fn all_resolved(&self) -> bool {
         let c = self.created.load(Ordering::SeqCst);
         c > 0 && self.resolved.load(Ordering::SeqCst) >= c
@@ -123,6 +127,9 @@ pub struct LiveCluster {
     /// Dialing half of each edge↔edge backhaul socket (shut down on stop
     /// so reader/handler threads exit).
     peer_conns: Vec<FramedConn>,
+    /// The cell edge state machines — kept so [`LiveCluster::wait`] can
+    /// surface the pipeline's snapshot-cache counters in the summary.
+    edge_nodes: Vec<Arc<Mutex<EdgeNode>>>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -178,6 +185,15 @@ fn apply_edge_action(
                 recorder.resolved.fetch_add(1, Ordering::SeqCst);
             }
         }
+        Action::RecordForwardHop { task } => {
+            recorder.inner.lock().unwrap().forward_hop(task);
+        }
+        Action::RecordLoopRejected { task } => {
+            recorder.inner.lock().unwrap().loop_rejected(task);
+        }
+        Action::RecordTtlExpired { task } => {
+            recorder.inner.lock().unwrap().ttl_expired(task);
+        }
     }
 }
 
@@ -232,7 +248,11 @@ impl LiveCluster {
                 cfg.policy.build(edge_seed),
                 topo.clone(),
                 cfg.max_staleness_ms,
-            );
+            )
+            // Hierarchical routing knobs — the same derivation the sim
+            // driver installs (DESIGN.md §Hierarchical routing).
+            .with_max_forward_hops(cfg.federation.max_forward_hops)
+            .with_app_weights(cfg.app_weights());
             if cfg.churn.enabled() {
                 edge = edge.with_detector(cfg.churn.detector());
             }
@@ -352,9 +372,15 @@ impl LiveCluster {
         }
 
         // ---------- Backhaul: pairwise edge↔edge connections ----------
+        // Only *linked* pairs dial each other: a line topology has no
+        // backhaul between non-adjacent cells — frames reach them through
+        // multi-hop forwarding, exactly as in the simulator.
         let mut peer_conns: Vec<FramedConn> = Vec::new();
         for i in 0..handles.len() {
             for j in (i + 1)..handles.len() {
+                if topo.link(handles[i].id, handles[j].id).is_none() {
+                    continue;
+                }
                 let mut conn = FramedConn::connect(handles[j].addr)
                     .with_context(|| format!("edge {i} dialing edge {j}"))?;
                 // Register our write-half before announcing ourselves.
@@ -404,8 +430,10 @@ impl LiveCluster {
             for (i, handle) in handles.iter().enumerate() {
                 let node = edge_nodes[i].clone();
                 let writers = handle.writers.clone();
-                let peer_ids: Vec<NodeId> =
-                    edge_ids.iter().copied().filter(|&e| e != handle.id).collect();
+                // Gossip fans out to *linked* neighbors only (transitive
+                // re-advertisement carries knowledge further, exactly as
+                // in the simulator).
+                let peer_ids: Vec<NodeId> = topo.linked_peer_edges(handle.id).collect();
                 let clock = clock.clone();
                 let stop = stop.clone();
                 threads.push(
@@ -424,12 +452,20 @@ impl LiveCluster {
                                 if stop.load(Ordering::SeqCst) {
                                     break;
                                 }
-                                let summary =
-                                    node.lock().unwrap().summary(clock.now_ms());
+                                // Own summary + damped relays (DESIGN.md
+                                // §Hierarchical routing), split horizon
+                                // in both directions: never to the
+                                // subject, never back to the source.
+                                let msgs =
+                                    node.lock().unwrap().gossip_out(clock.now_ms());
                                 let mut ws = writers.lock().unwrap();
                                 for p in &peer_ids {
-                                    if let Some(conn) = ws.get_mut(p) {
-                                        let _ = conn.send(&Message::EdgeSummary(summary));
+                                    let Some(conn) = ws.get_mut(p) else { continue };
+                                    for (s, learned_from) in &msgs {
+                                        if s.edge == *p || *learned_from == *p {
+                                            continue;
+                                        }
+                                        let _ = conn.send(&Message::EdgeSummary(*s));
                                     }
                                 }
                             }
@@ -530,10 +566,12 @@ impl LiveCluster {
             stop,
             servers,
             peer_conns,
+            edge_nodes,
             threads,
         })
     }
 
+    /// The cluster’s shared wall clock.
     pub fn clock(&self) -> Clock {
         self.clock.clone()
     }
@@ -670,13 +708,24 @@ impl LiveCluster {
             }
             std::thread::sleep(Duration::from_millis(20));
         }
-        self.recorder.summarize()
+        let mut summary = self.recorder.summarize();
+        // Snapshot-cache counters, summed across cells — the live twin of
+        // `Engine::snapshot_counters` (wall-clock timing makes them
+        // non-deterministic here, unlike in virtual mode).
+        for e in &self.edge_nodes {
+            let e = e.lock().unwrap();
+            summary.snapshot_rebuilds += e.pipeline().snapshot_rebuilds;
+            summary.snapshot_reuses += e.pipeline().snapshot_reuses;
+        }
+        summary
     }
 
+    /// The shared outcome recorder.
     pub fn recorder(&self) -> SharedRecorder {
         self.recorder.clone()
     }
 
+    /// Stop every thread and close every socket (blocking join).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         for tx in &self.device_txs {
@@ -875,6 +924,17 @@ fn device_main(
                     if recorder.inner.lock().unwrap().dropped(task, reason) {
                         recorder.resolved.fetch_add(1, Ordering::SeqCst);
                     }
+                }
+                // Routing hooks are edge-side actions; a device never
+                // emits them, but the recorder handles them regardless.
+                Action::RecordForwardHop { task } => {
+                    recorder.inner.lock().unwrap().forward_hop(task);
+                }
+                Action::RecordLoopRejected { task } => {
+                    recorder.inner.lock().unwrap().loop_rejected(task);
+                }
+                Action::RecordTtlExpired { task } => {
+                    recorder.inner.lock().unwrap().ttl_expired(task);
                 }
             }
         }

@@ -14,10 +14,15 @@ use crate::util::Summary;
 /// §Constraints & QoS). One row per registered app, AppId-sorted.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AppSummary {
+    /// The application these rows aggregate.
     pub app: AppId,
+    /// Frames the app’s streams created.
     pub total: usize,
+    /// Frames completed within their deadline.
     pub met: usize,
+    /// Frames completed past their deadline.
     pub missed: usize,
+    /// Frames never completed.
     pub dropped: usize,
     /// End-to-end latency summary over the app's *completed* tasks.
     pub latency: Option<Summary>,
@@ -26,6 +31,7 @@ pub struct AppSummary {
 }
 
 impl AppSummary {
+    /// Fraction of the app’s frames that met their deadline.
     pub fn met_fraction(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -41,9 +47,13 @@ impl AppSummary {
 /// same-seed runs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunSummary {
+    /// Frames created in the run.
     pub total: usize,
+    /// Frames completed within their deadline.
     pub met: usize,
+    /// Frames completed past their deadline.
     pub missed: usize,
+    /// Frames never completed.
     pub dropped: usize,
     /// End-to-end latency summary over *completed* tasks.
     pub latency: Option<Summary>,
@@ -69,12 +79,28 @@ pub struct RunSummary {
     /// Best-effort frames the Overload stage shed at enqueue (subset of
     /// `dropped`). Always 0 unless `admission.deadline_shed` is set.
     pub shed: usize,
+    /// Total backhaul hops crossed by forwarded frames (hierarchical
+    /// routing, DESIGN.md §Hierarchical routing). Equals `forwarded` in a
+    /// single-hop federation; exceeds it when intermediate cells relay.
+    pub forward_hops: usize,
+    /// Forward loops rejected by receiving edges — structurally zero
+    /// under sender-side visited-path filtering; the counter is the proof.
+    pub loops_rejected: usize,
+    /// Forwarded frames whose hop budget ran out at a saturated cell (the
+    /// gossip ablation's staleness-vs-overhead signal).
+    pub ttl_expired: usize,
+    /// Candidate-snapshot cache rebuilds across every edge pipeline
+    /// (DESIGN.md §3; filled in by the drivers after the run).
+    pub snapshot_rebuilds: u64,
+    /// Candidate-snapshot cache hits across every edge pipeline.
+    pub snapshot_reuses: u64,
     /// Per-application outcome tables, AppId-sorted (a registry-less run
     /// has exactly one row, the default app).
     pub per_app: Vec<AppSummary>,
 }
 
 impl RunSummary {
+    /// Fraction of all frames that met their deadline.
     pub fn met_fraction(&self) -> f64 {
         if self.total == 0 {
             0.0

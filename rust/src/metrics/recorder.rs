@@ -10,25 +10,37 @@ use super::{AppSummary, RunSummary};
 /// Full lifecycle of one image task.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TaskRecord {
+    /// The task this record describes.
     pub task: TaskId,
+    /// Originating (camera) device.
     pub origin: NodeId,
     /// Owning application (`AppId::DEFAULT` for registry-less configs).
     pub app: AppId,
     /// Disclosure scope the frame was created under.
     pub privacy: PrivacyClass,
+    /// Payload size in KB.
     pub size_kb: f64,
+    /// Relative end-to-end deadline (ms).
     pub deadline_ms: f64,
+    /// Creation instant on the run clock (ms).
     pub created_ms: f64,
     /// Final placement (where it actually executed).
     pub placement: Placement,
+    /// Node that actually executed the task, once started.
     pub executed_on: Option<NodeId>,
+    /// Execution start instant (ms).
     pub started_ms: Option<f64>,
+    /// Completion instant (ms), if the result made it home.
     pub completed_ms: Option<f64>,
     /// Container-internal processing time.
     pub process_ms: Option<f64>,
     /// Times this task was pulled back from a node declared dead and
     /// re-placed (churn; 0 in failure-free runs).
     pub requeues: u32,
+    /// Backhaul hops the frame actually crossed (hierarchical routing):
+    /// 0 for in-cell work, 1 for a classic single-hop forward, ≥ 2 when
+    /// intermediate cells relayed it on.
+    pub hops: u32,
     /// Times this frame was *observed* outside its privacy scope — sent
     /// off-device under `device_local`, or placed/executed off-cell under
     /// `cell_local`. Structurally zero under the node-layer privacy
@@ -39,10 +51,12 @@ pub struct TaskRecord {
     /// frames that merely vanished (loss/churn). See
     /// [`crate::core::DropReason`].
     pub drop_reason: Option<DropReason>,
+    /// Final outcome (met / missed / dropped).
     pub verdict: Verdict,
 }
 
 impl TaskRecord {
+    /// End-to-end latency, if the task completed.
     pub fn e2e_ms(&self) -> Option<f64> {
         self.completed_ms.map(|c| c - self.created_ms)
     }
@@ -56,9 +70,15 @@ pub struct Recorder {
     /// Node → its cell's edge server, for the cell-local violation check.
     /// Empty (unset) disables the cell check — the device check still runs.
     node_cells: BTreeMap<NodeId, NodeId>,
+    /// Forward loops rejected by receiving edges (hierarchical routing).
+    /// Structurally zero under sender-side path filtering.
+    loops_rejected: usize,
+    /// Forwarded frames whose hop budget ran out at a saturated cell.
+    ttl_expired: usize,
 }
 
 impl Recorder {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
@@ -91,11 +111,33 @@ impl Recorder {
                 completed_ms: None,
                 process_ms: None,
                 requeues: 0,
+                hops: 0,
                 violations: 0,
                 drop_reason: None,
                 verdict: Verdict::Dropped, // until completed
             },
         );
+    }
+
+    /// The task crossed one backhaul hop (a `Forward` send, initial or
+    /// relayed — hierarchical routing). Counted even for tasks that later
+    /// drop: the hop's bandwidth was spent either way.
+    pub fn forward_hop(&mut self, task: TaskId) {
+        if let Some(r) = self.records.get_mut(&task) {
+            r.hops += 1;
+        }
+    }
+
+    /// A receiving edge found itself on a `Forward`'s visited path and
+    /// absorbed the frame instead of bouncing it (hierarchical routing).
+    pub fn loop_rejected(&mut self, _task: TaskId) {
+        self.loops_rejected += 1;
+    }
+
+    /// A forwarded frame's hop budget ran out at a saturated cell
+    /// (hierarchical routing; the gossip ablation's staleness signal).
+    pub fn ttl_expired(&mut self, _task: TaskId) {
+        self.ttl_expired += 1;
     }
 
     /// A node deliberately gave up on the task (Admit reject, Overload
@@ -135,6 +177,7 @@ impl Recorder {
         }
     }
 
+    /// Record the placement decision (and check its privacy scope).
     pub fn placed(&mut self, task: TaskId, placement: Placement) {
         if let Some(r) = self.records.get_mut(&task) {
             r.placement = placement;
@@ -168,6 +211,7 @@ impl Recorder {
         }
     }
 
+    /// Record execution start on `on` (and check its privacy scope).
     pub fn started(&mut self, task: TaskId, on: NodeId, at_ms: f64) {
         if let Some(r) = self.records.get_mut(&task) {
             r.executed_on = Some(on);
@@ -207,14 +251,17 @@ impl Recorder {
         }
     }
 
+    /// The record of one task, if known.
     pub fn get(&self, task: TaskId) -> Option<&TaskRecord> {
         self.records.get(&task)
     }
 
+    /// Number of created tasks.
     pub fn len(&self) -> usize {
         self.order.len()
     }
 
+    /// Whether no task was created.
     pub fn is_empty(&self) -> bool {
         self.order.is_empty()
     }
@@ -252,6 +299,7 @@ impl Recorder {
             .filter(|r| r.drop_reason == Some(DropReason::Rejected))
             .count();
         let shed = records.iter().filter(|r| r.drop_reason == Some(DropReason::Shed)).count();
+        let forward_hops = records.iter().map(|r| r.hops as usize).sum::<usize>();
 
         // Per-app tables, AppId-sorted (BTreeMap — deterministic rows).
         // Records are Copy, so partitioning into owned vectors lets the
@@ -295,6 +343,11 @@ impl Recorder {
             privacy_violations,
             rejected,
             shed,
+            forward_hops,
+            loops_rejected: self.loops_rejected,
+            ttl_expired: self.ttl_expired,
+            snapshot_rebuilds: 0,
+            snapshot_reuses: 0,
             per_app,
         }
     }

@@ -12,8 +12,9 @@ use crate::core::{DropReason, Placement, Verdict};
 
 /// One CSV line for a task record (see [`CSV_HEADER`]).
 pub const CSV_HEADER: &str =
-    "task,app,privacy,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,requeues,violations,verdict";
+    "task,app,privacy,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,requeues,hops,violations,verdict";
 
+/// Render one task record as a CSV line (see [`CSV_HEADER`]).
 pub fn csv_line(r: &TaskRecord) -> String {
     let placement = match r.placement {
         Placement::Local => "local".to_string(),
@@ -33,7 +34,7 @@ pub fn csv_line(r: &TaskRecord) -> String {
     };
     let opt = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_default();
     format!(
-        "{},{},{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{},{},{}",
+        "{},{},{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{},{},{},{}",
         r.task.0,
         r.app.0,
         r.privacy.as_str(),
@@ -48,6 +49,7 @@ pub fn csv_line(r: &TaskRecord) -> String {
         opt(r.process_ms),
         opt(r.e2e_ms()),
         r.requeues,
+        r.hops,
         r.violations,
         verdict,
     )
@@ -103,8 +105,29 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
     } else {
         String::new()
     };
+    // Routing counters appear only when the federation actually routed
+    // (or misrouted) something; single-cell runs serialize unchanged.
+    let routing = if s.forward_hops > 0 || s.loops_rejected > 0 || s.ttl_expired > 0 {
+        format!(
+            r#","forward_hops":{},"loops_rejected":{},"ttl_expired":{}"#,
+            s.forward_hops, s.loops_rejected, s.ttl_expired
+        )
+    } else {
+        String::new()
+    };
+    // Snapshot-cache counters (DESIGN.md §3) appear once any edge
+    // decision ran — AOR-style runs whose frames never reach an edge
+    // serialize unchanged.
+    let snapshot = if s.snapshot_rebuilds > 0 || s.snapshot_reuses > 0 {
+        format!(
+            r#","snapshot_rebuilds":{},"snapshot_reuses":{}"#,
+            s.snapshot_rebuilds, s.snapshot_reuses
+        )
+    } else {
+        String::new()
+    };
     format!(
-        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{}{},"latency":{},"apps":[{}]}}"#,
+        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{}{}{}{},"latency":{},"apps":[{}]}}"#,
         name,
         s.total,
         s.met,
@@ -117,6 +140,8 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         s.replaced,
         s.privacy_violations,
         overload,
+        routing,
+        snapshot,
         latency_json(&s.latency),
         apps.join(",")
     )
@@ -196,8 +221,9 @@ mod tests {
         assert_eq!(fields[2], "open");
         assert_eq!(fields[7], "offload:n2");
         assert_eq!(fields[13], "0"); // requeues
-        assert_eq!(fields[14], "0"); // violations
-        assert_eq!(fields[15], "met");
+        assert_eq!(fields[14], "0"); // hops
+        assert_eq!(fields[15], "0"); // violations
+        assert_eq!(fields[16], "met");
     }
 
     #[test]
@@ -281,6 +307,44 @@ mod tests {
         let js = summary_json("legacy", &rec.summarize());
         assert!(!js.contains("rejected"));
         assert!(!js.contains("shed"));
+        // Routing and snapshot counters are gated the same way.
+        assert!(!js.contains("forward_hops"));
+        assert!(!js.contains("loops_rejected"));
+        assert!(!js.contains("ttl_expired"));
+        assert!(!js.contains("snapshot_rebuilds"));
+    }
+
+    #[test]
+    fn routing_and_snapshot_counters_serialize_when_nonzero() {
+        let mut rec = Recorder::new();
+        rec.created(&ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(1000.0),
+            seq: 1,
+        });
+        rec.forward_hop(TaskId(1));
+        rec.forward_hop(TaskId(1));
+        rec.ttl_expired(TaskId(1));
+        rec.started(TaskId(1), NodeId(4), 10.0);
+        rec.completed(TaskId(1), 500.0, 400.0);
+        let mut s = rec.summarize();
+        assert_eq!(s.forward_hops, 2);
+        assert_eq!(s.ttl_expired, 1);
+        assert_eq!(s.loops_rejected, 0);
+        s.snapshot_rebuilds = 7;
+        s.snapshot_reuses = 3;
+        let js = summary_json("routed", &s);
+        assert!(js.contains(r#""forward_hops":2,"loops_rejected":0,"ttl_expired":1"#));
+        assert!(js.contains(r#""snapshot_rebuilds":7,"snapshot_reuses":3"#));
+        // The CSV line carries the per-task hop count before the verdict.
+        let line = csv_line(&rec.records()[0]);
+        let fields: Vec<&str> = line.split(',').collect();
+        assert_eq!(fields[14], "2");
+        assert_eq!(fields[fields.len() - 1], "met");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 pub mod topology;
 pub mod transport;
 
-pub use topology::{CellSpec, Topology};
+pub use topology::{CellSpec, FederationShape, Topology};
 
 /// A point-to-point link's timing/loss model.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -23,6 +23,7 @@ pub struct LinkModel {
 }
 
 impl LinkModel {
+    /// Build a link; panics on nonsensical parameters (validated configs).
     pub fn new(latency_ms: f64, bandwidth_mbps: f64, loss_prob: f64) -> Self {
         assert!(latency_ms >= 0.0 && bandwidth_mbps > 0.0);
         assert!((0.0..=1.0).contains(&loss_prob));

@@ -20,7 +20,9 @@ use crate::net::LinkModel;
 /// Static description of one node.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NodeSpec {
+    /// Dense node id (index into the engine’s node vector).
     pub id: NodeId,
+    /// Hardware class (selects profile curves and pool behaviour).
     pub class: NodeClass,
     /// Warm containers kept alive (the paper pre-warms — cold starts take
     /// 52+ s and are "not practical ... upon receiving a request").
@@ -33,19 +35,55 @@ pub struct NodeSpec {
     pub has_camera: bool,
 }
 
+/// Backhaul wiring between a federation's edge servers (DESIGN.md
+/// §Hierarchical routing). The gossip experiment compares the two: a mesh
+/// needs only single-hop forwarding, a line is the multi-hop stress case.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FederationShape {
+    /// Full mesh: every pair of edge servers shares a backhaul link (the
+    /// classic federation; single-hop reaches everyone).
+    #[default]
+    Mesh,
+    /// Line: only adjacent cells (`c` ↔ `c+1`) are linked — reaching a
+    /// distant cell requires transitive gossip and multi-hop forwarding.
+    Line,
+}
+
+impl FederationShape {
+    /// Parse a `[federation] topology` config value.
+    pub fn parse(s: &str) -> Option<FederationShape> {
+        match s {
+            "mesh" => Some(FederationShape::Mesh),
+            "line" => Some(FederationShape::Line),
+            _ => None,
+        }
+    }
+
+    /// Stable config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FederationShape::Mesh => "mesh",
+            FederationShape::Line => "line",
+        }
+    }
+}
+
 /// One cell of a federation: an edge server plus its end devices.
 ///
 /// `devices` entries are `(class, warm_containers, has_camera)` — the same
 /// shape [`Topology::star`] takes.
 #[derive(Debug, Clone)]
 pub struct CellSpec {
+    /// Warm containers on the cell’s edge server.
     pub edge_warm: u32,
+    /// The cell’s end devices: `(class, warm_containers, has_camera)`.
     pub devices: Vec<(NodeClass, u32, bool)>,
     /// Intra-cell access link (edge ↔ each device).
     pub link: LinkModel,
 }
 
 impl CellSpec {
+    /// Build a cell spec (devices copied from the slice).
     pub fn new(edge_warm: u32, devices: &[(NodeClass, u32, bool)], link: LinkModel) -> Self {
         CellSpec { edge_warm, devices: devices.to_vec(), link }
     }
@@ -62,6 +100,7 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// An empty topology (builders and hand-made meshes).
     pub fn new() -> Self {
         Self::default()
     }
@@ -114,6 +153,7 @@ impl Topology {
         self.links.insert((b, a), link);
     }
 
+    /// The link between two nodes, if any (self-links are free).
     pub fn link(&self, a: NodeId, b: NodeId) -> Option<LinkModel> {
         if a == b {
             // Local "transfer" is free — predictor expects None-like zero.
@@ -122,22 +162,27 @@ impl Topology {
         self.links.get(&(a, b)).copied()
     }
 
+    /// The spec of one node (panics on out-of-range ids).
     pub fn node(&self, id: NodeId) -> &NodeSpec {
         &self.nodes[id.0 as usize]
     }
 
+    /// Mutable access to one node’s spec (tests: move nodes, set load).
     pub fn node_mut(&mut self, id: NodeId) -> &mut NodeSpec {
         &mut self.nodes[id.0 as usize]
     }
 
+    /// All node specs, id order.
     pub fn nodes(&self) -> &[NodeSpec] {
         &self.nodes
     }
 
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the topology has no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
@@ -192,6 +237,14 @@ impl Topology {
     /// The other edge servers `edge` can federate with, in id order.
     pub fn peer_edges(&self, edge: NodeId) -> impl Iterator<Item = NodeId> + '_ {
         self.edges().filter(move |&e| e != edge)
+    }
+
+    /// Peer edges `edge` has a *direct backhaul link* to, in id order — the
+    /// gossip/forwarding neighbors. Equal to [`Topology::peer_edges`] on a
+    /// mesh; the adjacent cells only on a line (hierarchical routing).
+    pub fn linked_peer_edges(&self, edge: NodeId) -> impl Iterator<Item = NodeId> + '_ {
+        self.peer_edges(edge)
+            .filter(move |&e| self.links.contains_key(&(edge, e)))
     }
 
     /// Camera device nearest to `loc` (the paper's location-based
@@ -254,14 +307,27 @@ impl Topology {
     }
 
     /// Federation builder: one star per [`CellSpec`] plus a full mesh of
-    /// `backhaul` links between the edge servers.
+    /// `backhaul` links between the edge servers
+    /// ([`FederationShape::Mesh`] shim over
+    /// [`Topology::multi_cell_shaped`]).
+    pub fn multi_cell(cells: &[CellSpec], backhaul: LinkModel) -> Topology {
+        Topology::multi_cell_shaped(cells, backhaul, FederationShape::Mesh)
+    }
+
+    /// Federation builder with an explicit backhaul wiring shape
+    /// (DESIGN.md §Hierarchical routing): one star per [`CellSpec`], edge
+    /// servers joined by `backhaul` links in a full mesh or a line.
     ///
     /// Layout: cells are laid out left to right, 100 distance units apart;
     /// cell `c`'s edge sits at `(100c, 0)` and its devices at
     /// `(100c + 1 + i, 0)` — cell 0 reproduces the classic single-cell
     /// star exactly. Node ids are dense in cell order: edge first, then
     /// its devices.
-    pub fn multi_cell(cells: &[CellSpec], backhaul: LinkModel) -> Topology {
+    pub fn multi_cell_shaped(
+        cells: &[CellSpec],
+        backhaul: LinkModel,
+        shape: FederationShape,
+    ) -> Topology {
         assert!(!cells.is_empty(), "federation needs at least one cell");
         let mut t = Topology::new();
         let mut edge_ids = Vec::with_capacity(cells.len());
@@ -291,9 +357,18 @@ impl Topology {
                 t.add_link(edge, id, cell.link);
             }
         }
-        for (i, &a) in edge_ids.iter().enumerate() {
-            for &b in &edge_ids[i + 1..] {
-                t.add_link(a, b, backhaul);
+        match shape {
+            FederationShape::Mesh => {
+                for (i, &a) in edge_ids.iter().enumerate() {
+                    for &b in &edge_ids[i + 1..] {
+                        t.add_link(a, b, backhaul);
+                    }
+                }
+            }
+            FederationShape::Line => {
+                for w in edge_ids.windows(2) {
+                    t.add_link(w[0], w[1], backhaul);
+                }
             }
         }
         t
@@ -508,6 +583,49 @@ mod tests {
         assert!(t.link(NodeId(1), NodeId(3)).is_none());
         assert!(t.link(NodeId(1), NodeId(4)).is_none());
         assert!(t.link(NodeId(3), NodeId(1)).is_none());
+    }
+
+    #[test]
+    fn line_topology_links_adjacent_edges_only() {
+        let cell = CellSpec::new(2, &[(NodeClass::RaspberryPi, 1, true)], LinkModel::wifi());
+        let t = Topology::multi_cell_shaped(
+            &[cell.clone(), cell.clone(), cell.clone(), cell],
+            LinkModel::new(5.0, 1000.0, 0.0),
+            FederationShape::Line,
+        );
+        let edges: Vec<NodeId> = t.edges().collect();
+        assert_eq!(edges, vec![NodeId(0), NodeId(2), NodeId(4), NodeId(6)]);
+        // Adjacent pairs linked, distant pairs not.
+        assert!(t.link(NodeId(0), NodeId(2)).is_some());
+        assert!(t.link(NodeId(2), NodeId(4)).is_some());
+        assert!(t.link(NodeId(4), NodeId(6)).is_some());
+        assert!(t.link(NodeId(0), NodeId(4)).is_none());
+        assert!(t.link(NodeId(0), NodeId(6)).is_none());
+        assert!(t.link(NodeId(2), NodeId(6)).is_none());
+        // linked_peer_edges reflects the wiring; peer_edges stays global.
+        let ends: Vec<NodeId> = t.linked_peer_edges(NodeId(0)).collect();
+        assert_eq!(ends, vec![NodeId(2)]);
+        let mid: Vec<NodeId> = t.linked_peer_edges(NodeId(2)).collect();
+        assert_eq!(mid, vec![NodeId(0), NodeId(4)]);
+        assert_eq!(t.peer_edges(NodeId(0)).count(), 3);
+        // On a mesh the two coincide.
+        let mesh = Topology::multi_cell(
+            &[
+                CellSpec::new(2, &[(NodeClass::RaspberryPi, 1, true)], LinkModel::wifi()),
+                CellSpec::new(2, &[], LinkModel::wifi()),
+                CellSpec::new(2, &[], LinkModel::wifi()),
+            ],
+            LinkModel::new(5.0, 1000.0, 0.0),
+        );
+        assert_eq!(
+            mesh.linked_peer_edges(NodeId(0)).collect::<Vec<_>>(),
+            mesh.peer_edges(NodeId(0)).collect::<Vec<_>>()
+        );
+        // Shape parsing round-trips.
+        for s in [FederationShape::Mesh, FederationShape::Line] {
+            assert_eq!(FederationShape::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(FederationShape::parse("ring"), None);
     }
 
     #[test]

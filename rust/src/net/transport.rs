@@ -25,12 +25,14 @@ pub struct FramedConn {
 }
 
 impl FramedConn {
+    /// Dial a peer and wrap the stream in the frame codec.
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connecting")?;
         stream.set_nodelay(true).ok();
         Ok(Self { stream, buf: Vec::with_capacity(4096) })
     }
 
+    /// Wrap an accepted stream in the frame codec.
     pub fn from_stream(stream: TcpStream) -> Result<Self> {
         stream.set_nodelay(true).ok();
         Ok(Self { stream, buf: Vec::with_capacity(4096) })
@@ -44,21 +46,25 @@ impl FramedConn {
         })
     }
 
+    /// Encode and send one message (blocking).
     pub fn send(&mut self, msg: &Message) -> Result<()> {
         wire::encode(msg, &mut self.buf);
         self.stream.write_all(&self.buf).context("writing frame")?;
         Ok(())
     }
 
+    /// Receive and decode one message (blocking).
     pub fn recv(&mut self) -> Result<Message> {
         let frame = wire::read_frame(&mut self.stream)?;
         wire::decode(&frame)
     }
 
+    /// The peer’s socket address.
     pub fn peer_addr(&self) -> Result<std::net::SocketAddr> {
         Ok(self.stream.peer_addr()?)
     }
 
+    /// Shut both directions down, unblocking any reader.
     pub fn shutdown(&self) {
         let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
@@ -66,12 +72,14 @@ impl FramedConn {
 
 /// Handle to a running accept loop.
 pub struct Server {
+    /// The bound listen address (port 0 resolves here).
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
+    /// Stop accepting and join the accept loop.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Poke the listener so accept() returns.

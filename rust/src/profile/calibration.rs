@@ -108,6 +108,7 @@ pub const REF_SIZE_KB: f64 = 29.0;
 /// table normalized to n=1, and `load` the Fig. 7 curve normalized to 0 %.
 #[derive(Debug, Clone)]
 pub struct ClassProfile {
+    /// The hardware class these curves describe.
     pub class: NodeClass,
     /// Relative single-container speed vs the edge server (1.0 = edge).
     pub speed_factor: f64,

@@ -18,12 +18,16 @@ pub struct PredictInput {
     pub link: Option<LinkModel>,
     /// Snapshot of the candidate node.
     pub busy_containers: u32,
+    /// Warm containers on the candidate.
     pub warm_containers: u32,
+    /// Locally queued images on the candidate.
     pub queued_images: u32,
+    /// Background CPU load on the candidate in [0, 100].
     pub cpu_load_pct: f64,
 }
 
 impl PredictInput {
+    /// Build the input from an MP entry plus the transfer parameters.
     pub fn from_state(s: &DeviceState, size_kb: f64, link: Option<LinkModel>) -> Self {
         PredictInput {
             size_kb,
@@ -39,13 +43,18 @@ impl PredictInput {
 /// Breakdown of a predicted end-to-end latency.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Prediction {
+    /// Transfer time of the image to the executor (ms).
     pub trans_ms: f64,
+    /// Expected queueing delay before a container frees (ms).
     pub queue_ms: f64,
+    /// Expected in-container processing time (ms).
     pub process_ms: f64,
+    /// Result return time (ms).
     pub ret_ms: f64,
 }
 
 impl Prediction {
+    /// Sum of all components (the predicted end-to-end time).
     pub fn total_ms(&self) -> f64 {
         self.trans_ms + self.queue_ms + self.process_ms + self.ret_ms
     }
@@ -61,10 +70,12 @@ pub struct Predictor {
 pub const RESULT_KB: f64 = 1.0;
 
 impl Predictor {
+    /// Build a predictor from a class profile.
     pub fn new(profile: ClassProfile) -> Self {
         Self { profile }
     }
 
+    /// The profile the predictor was built from.
     pub fn profile(&self) -> &ClassProfile {
         &self.profile
     }

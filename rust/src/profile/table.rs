@@ -15,12 +15,19 @@ use crate::core::{NodeClass, NodeId};
 /// Last-known state of one device, as seen by the MP table.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceState {
+    /// The device this entry describes.
     pub node: NodeId,
+    /// Hardware class (selects the predictor).
     pub class: NodeClass,
+    /// Containers currently executing.
     pub busy_containers: u32,
+    /// Warm containers (busy + idle).
     pub warm_containers: u32,
+    /// Locally queued images.
     pub queued_images: u32,
+    /// Background CPU load in [0, 100].
     pub cpu_load_pct: f64,
+    /// Remaining battery in [0, 100]; `None` for mains power.
     pub battery_pct: Option<f64>,
     /// When the underlying UP message was sent (ms since run start).
     pub updated_ms: f64,
@@ -49,6 +56,7 @@ pub struct ProfileTable {
 }
 
 impl ProfileTable {
+    /// An empty MP table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -100,14 +108,17 @@ impl ProfileTable {
         }
     }
 
+    /// One device’s last-known state, if registered.
     pub fn get(&self, node: NodeId) -> Option<&DeviceState> {
         self.devices.get(&node)
     }
 
+    /// Number of registered devices.
     pub fn len(&self) -> usize {
         self.devices.len()
     }
 
+    /// Whether no device is registered.
     pub fn is_empty(&self) -> bool {
         self.devices.is_empty()
     }
@@ -131,15 +142,28 @@ impl ProfileTable {
 /// decision only trusts summaries younger than the staleness cap.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PeerEdgeState {
+    /// The edge server this entry describes.
     pub edge: NodeId,
+    /// Containers busy in the peer's own pool (possibly damped, relayed).
     pub busy_containers: u32,
+    /// Warm containers in the peer's own pool.
     pub warm_containers: u32,
+    /// Images queued at the peer's pool.
     pub queued_images: u32,
+    /// Peer background CPU load in [0, 100].
     pub cpu_load_pct: f64,
     /// Idle device containers behind that edge (its cell's spare capacity).
     pub device_idle_containers: u32,
-    /// When the underlying gossip message was sent (ms since run start).
+    /// When the underlying gossip message was sent *by the subject* (ms
+    /// since run start) — relays preserve the original vintage.
     pub updated_ms: f64,
+    /// Backhaul hops to the subject: 0 = direct neighbor, `n > 0` =
+    /// learned through `n` relays (hierarchical routing).
+    pub hops: u8,
+    /// Next hop toward the subject (the neighbor that advertised this
+    /// copy; equals `edge` for a direct entry). Forwards to a multi-hop
+    /// subject are sent to `via`.
+    pub via: NodeId,
 }
 
 impl PeerEdgeState {
@@ -166,6 +190,7 @@ pub struct PeerTable {
 }
 
 impl PeerTable {
+    /// An empty peer table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -193,18 +218,35 @@ impl PeerTable {
                     // the scheduler never forwards onto a peer it has not
                     // heard from.
                     updated_ms: now_ms - 1e18,
+                    hops: 0,
+                    via: edge,
                 },
             );
         }
     }
 
-    /// Apply a gossip summary; unknown senders auto-register (virtual mode
-    /// has no explicit edge-join handshake).
-    pub fn apply(&mut self, s: &EdgeSummary) {
-        self.version += 1;
-        if !self.peers.contains_key(&s.edge) {
+    /// Apply a gossip summary; unknown subjects auto-register (virtual
+    /// mode has no explicit edge-join handshake).
+    ///
+    /// Freshest-wins with a hop tie-break (hierarchical routing): a copy
+    /// only replaces the current entry when its subject-side timestamp is
+    /// strictly newer, or equally old but learned over strictly fewer
+    /// hops. A relayed copy therefore never clobbers the direct entry it
+    /// was derived from — and never undoes an optimistic
+    /// [`PeerTable::bump_busy`] applied since. Returns whether the copy
+    /// was applied (callers gate suspicion-clearing on it: a stale relay
+    /// is not evidence of life).
+    pub fn apply(&mut self, s: &EdgeSummary) -> bool {
+        if let Some(cur) = self.peers.get(&s.edge) {
+            let fresher = s.sent_ms > cur.updated_ms
+                || (s.sent_ms == cur.updated_ms && s.hops < cur.hops);
+            if !fresher {
+                return false;
+            }
+        } else {
             self.order.push(s.edge);
         }
+        self.version += 1;
         self.peers.insert(
             s.edge,
             PeerEdgeState {
@@ -215,8 +257,11 @@ impl PeerTable {
                 cpu_load_pct: s.cpu_load_pct,
                 device_idle_containers: s.device_idle_containers,
                 updated_ms: s.sent_ms,
+                hops: s.hops,
+                via: s.via,
             },
         );
+        true
     }
 
     /// Remove a peer declared dead by the failure detector (churn). It
@@ -236,14 +281,17 @@ impl PeerTable {
         }
     }
 
+    /// One peer’s last-known state, if known.
     pub fn get(&self, edge: NodeId) -> Option<&PeerEdgeState> {
         self.peers.get(&edge)
     }
 
+    /// Number of known peers.
     pub fn len(&self) -> usize {
         self.peers.len()
     }
 
+    /// Whether no peer is known.
     pub fn is_empty(&self) -> bool {
         self.peers.is_empty()
     }
@@ -352,6 +400,8 @@ mod tests {
             cpu_load_pct: 0.0,
             device_idle_containers: dev_idle,
             sent_ms: sent,
+            hops: 0,
+            via: NodeId(edge),
         }
     }
 
@@ -433,5 +483,60 @@ mod tests {
         // The next gossip overwrites the optimistic estimate.
         t.apply(&gossip(3, 0, 2, 0, 20.0));
         assert_eq!(t.get(NodeId(3)).unwrap().idle_containers(), 2);
+    }
+
+    #[test]
+    fn relayed_entry_tracks_hops_and_via() {
+        // A summary learned through a relay keeps the subject key but
+        // records the next hop and distance (hierarchical routing).
+        let mut t = PeerTable::new();
+        let mut s = gossip(6, 0, 4, 2, 10.0);
+        s.hops = 1;
+        s.via = NodeId(3);
+        assert!(t.apply(&s));
+        let p = t.get(NodeId(6)).unwrap();
+        assert_eq!(p.hops, 1);
+        assert_eq!(p.via, NodeId(3));
+        assert_eq!(p.idle_containers(), 4);
+    }
+
+    #[test]
+    fn freshest_copy_wins_with_hop_tiebreak() {
+        let mut t = PeerTable::new();
+        // Direct entry at t=100.
+        assert!(t.apply(&gossip(6, 0, 4, 0, 100.0)));
+        let v_direct = t.version();
+        // A relayed copy of the SAME vintage must not clobber it (equal
+        // timestamp, more hops) — and must not bump the version.
+        let mut relayed = gossip(6, 2, 4, 0, 100.0);
+        relayed.hops = 1;
+        relayed.via = NodeId(3);
+        assert!(!t.apply(&relayed));
+        assert_eq!(t.version(), v_direct);
+        assert_eq!(t.get(NodeId(6)).unwrap().busy_containers, 0);
+        assert_eq!(t.get(NodeId(6)).unwrap().hops, 0);
+        // An *older* relayed copy is ignored too.
+        let mut old = gossip(6, 3, 4, 0, 50.0);
+        old.hops = 2;
+        assert!(!t.apply(&old));
+        // A *newer* relayed copy applies (it's the only news available on
+        // a line topology).
+        let mut newer = gossip(6, 1, 4, 0, 150.0);
+        newer.hops = 1;
+        newer.via = NodeId(3);
+        assert!(t.apply(&newer));
+        assert_eq!(t.get(NodeId(6)).unwrap().busy_containers, 1);
+        assert_eq!(t.get(NodeId(6)).unwrap().via, NodeId(3));
+        // Equal vintage with strictly FEWER hops upgrades (a direct copy
+        // replacing a relayed one).
+        let direct = gossip(6, 1, 4, 0, 150.0);
+        assert!(t.apply(&direct));
+        assert_eq!(t.get(NodeId(6)).unwrap().hops, 0);
+        assert_eq!(t.get(NodeId(6)).unwrap().via, NodeId(6));
+        // The optimistic bump survives same-vintage re-deliveries.
+        t.bump_busy(NodeId(6));
+        assert_eq!(t.get(NodeId(6)).unwrap().busy_containers, 2);
+        assert!(!t.apply(&gossip(6, 1, 4, 0, 150.0)));
+        assert_eq!(t.get(NodeId(6)).unwrap().busy_containers, 2);
     }
 }

@@ -159,6 +159,7 @@ impl ModelRuntime {
         Ok(())
     }
 
+    /// Directory the HLO artifacts were loaded from.
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }
@@ -207,6 +208,7 @@ impl ModelRuntime {
         Ok((det, start.elapsed().as_secs_f64() * 1e3))
     }
 
+    /// Number of compiled model variants (one per image side).
     pub fn variant_count(&self) -> usize {
         self.variants.len()
     }
@@ -331,6 +333,7 @@ impl RuntimeService {
         Ok(RuntimeService { tx, sides })
     }
 
+    /// The image sides the runtime can execute.
     pub fn sides(&self) -> &[u32] {
         &self.sides
     }

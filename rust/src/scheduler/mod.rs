@@ -46,7 +46,9 @@ pub const DEFAULT_ENERGY_RESERVE_PCT: f64 = 20.0;
 /// in-flight frame placed on it is requeued and re-placed.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FailureDetector {
+    /// Heartbeat silence (ms) after which a node is suspected.
     pub suspect_after_ms: f64,
+    /// Heartbeat silence (ms) after which a node is declared dead.
     pub dead_after_ms: f64,
 }
 
@@ -59,6 +61,7 @@ pub struct PredictorSet {
 }
 
 impl PredictorSet {
+    /// Build the per-class predictors from the paper’s profiles.
     pub fn new() -> Self {
         PredictorSet {
             edge: Predictor::new(profile_for(NodeClass::EdgeServer)),
@@ -67,6 +70,7 @@ impl PredictorSet {
         }
     }
 
+    /// The predictor for one hardware class.
     pub fn for_class(&self, class: NodeClass) -> &Predictor {
         match class {
             NodeClass::EdgeServer => &self.edge,
@@ -85,10 +89,15 @@ impl Default for PredictorSet {
 /// Snapshot of the *local* node for a device-level decision.
 #[derive(Debug, Clone, Copy)]
 pub struct LocalSnapshot {
+    /// The node this snapshot describes.
     pub node: NodeId,
+    /// Containers currently executing.
     pub busy_containers: u32,
+    /// Warm containers (busy + idle).
     pub warm_containers: u32,
+    /// Locally queued images.
     pub queued_images: u32,
+    /// Background CPU load in [0, 100].
     pub cpu_load_pct: f64,
     /// Remaining battery [0, 100]; `None` for mains-powered nodes.
     pub battery_pct: Option<f64>,
@@ -96,8 +105,11 @@ pub struct LocalSnapshot {
 
 /// Context for the device-level decision.
 pub struct DeviceCtx<'a> {
+    /// Decision instant on the run clock (ms).
     pub now_ms: f64,
+    /// The frame being decided.
     pub img: &'a ImageMeta,
+    /// The deciding device’s own state.
     pub local: LocalSnapshot,
     /// Predictor for the local node's hardware class.
     pub predictor: &'a Predictor,
@@ -117,8 +129,11 @@ impl DeviceCtx<'_> {
 
 /// Context for the edge-level decision.
 pub struct EdgeCtx<'a> {
+    /// Decision instant on the run clock (ms).
     pub now_ms: f64,
+    /// The frame being decided.
     pub img: &'a ImageMeta,
+    /// The deciding edge server’s own state.
     pub edge: LocalSnapshot,
     /// Per-class predictors (edge's own class + offload candidates).
     pub predictors: &'a PredictorSet,
@@ -128,12 +143,29 @@ pub struct EdgeCtx<'a> {
     /// origin excluded (DESIGN.md §3). Policies read this instead of
     /// re-scanning the tables per level.
     pub candidates: &'a CandidateSnapshot,
-    /// The image already crossed a backhaul once. Policies must not
-    /// forward it again (no multi-hop chains — DESIGN.md §Federation).
+    /// The image already crossed a backhaul at least once: its placement
+    /// record belongs to the originating edge, and the Overload stage
+    /// exempts it from shedding (the previous hop owes a Result upstream).
     pub forwarded: bool,
+    /// Remaining backhaul-hop budget for this frame (hierarchical
+    /// routing, DESIGN.md §Hierarchical routing): `[federation]
+    /// max_forward_hops` for fresh frames, the decremented `ForwardRoute`
+    /// TTL for forwarded ones. The federation level only returns
+    /// `ToPeerEdge` when this is ≥ 1 — and never picks a subject whose
+    /// route needs more hops than remain.
+    pub hops_left: u8,
+    /// Edges the frame has already visited (loop protection): neither a
+    /// visited subject nor a visited next hop is a candidate.
+    pub visited: &'a [NodeId],
+    /// Weighted-fair share of the frame's app (`[[app]] weight`, 1 when
+    /// unset): the federation level scores peers by advertised queue
+    /// depth ÷ this weight, so heavier tenants tolerate deeper remote
+    /// queues before a cell is ruled out.
+    pub app_weight: u32,
 }
 
 impl EdgeCtx<'_> {
+    /// Deadline budget still available at decision time.
     pub fn remaining_ms(&self) -> f64 {
         self.img.constraint.deadline_ms - (self.now_ms - self.img.created_ms)
     }
@@ -151,8 +183,9 @@ pub trait SchedulerPolicy: Send {
     fn decide_device(&mut self, ctx: &DeviceCtx) -> Placement;
 
     /// Edge-level decision: `Local` (edge pool), `Offload(device)`, or —
-    /// federation-capable policies only, never when `ctx.forwarded` —
-    /// `ToPeerEdge(edge)` to shed the task to a peer cell.
+    /// federation-capable policies only, and only while `ctx.hops_left`
+    /// permits — `ToPeerEdge(edge)` to shed the task to a (possibly
+    /// multi-hop) peer cell.
     fn decide_edge(&mut self, ctx: &EdgeCtx) -> Placement;
 
     /// Whether the policy reacts to churn signals (edge suspicion, device-
@@ -188,6 +221,7 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// Parse a policy name (config/CLI spelling).
     pub fn parse(s: &str) -> Result<PolicyKind> {
         Ok(match s {
             "aor" => PolicyKind::Aor,
@@ -202,6 +236,7 @@ impl PolicyKind {
         })
     }
 
+    /// Stable config/CLI spelling.
     pub fn as_str(&self) -> &'static str {
         match self {
             PolicyKind::Aor => "aor",

@@ -30,6 +30,16 @@
 //! strict mode: the decision sequence — and therefore the seeded replay —
 //! is byte-identical to the pre-pipeline code.
 //!
+//! The Place stage's federation level consumes the snapshot's *peer*
+//! candidates, which may sit several backhaul hops away (hierarchical
+//! routing, DESIGN.md §4a):
+//!
+//! ```text
+//!  PeerTable entry:   subject ◄─ hops ─┐ via (next hop, direct link)
+//!  ToPeerEdge(subject) ⇒ Forward{ttl, visited} sent to `via`
+//!                        `via` re-decides with its own fresher tables
+//! ```
+//!
 //! [`SchedulerPolicy::decide_device`]: super::SchedulerPolicy::decide_device
 
 use std::collections::{BTreeMap, BTreeSet};
@@ -113,7 +123,9 @@ pub fn clamp_placement(privacy: PrivacyClass, placement: Placement) -> Placement
 /// and the edge→device link resolved once per decision.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceCandidate {
+    /// The candidate’s MP state.
     pub state: DeviceState,
+    /// Link from the deciding edge to the candidate.
     pub link: LinkModel,
     /// Last UP push within the staleness cap at decision time.
     pub fresh: bool,
@@ -121,12 +133,19 @@ pub struct DeviceCandidate {
     pub suspect: bool,
 }
 
-/// One peer-edge forwarding candidate (federation level).
+/// One peer-edge forwarding candidate (federation level). Multi-hop
+/// subjects (learned through transitive gossip) are candidates too: their
+/// `link` is the backhaul link to the *next hop* (`state.via`), the only
+/// edge this cell can actually reach.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PeerCandidate {
+    /// The gossiped summary, with hop distance and next hop resolved.
     pub state: PeerEdgeState,
+    /// Link to the next hop toward the subject (`state.via`).
     pub link: LinkModel,
+    /// Last gossip (subject-side vintage) within the staleness cap.
     pub fresh: bool,
+    /// Currently suspected down by the failure detector.
     pub suspect: bool,
 }
 
@@ -143,6 +162,7 @@ pub struct CandidateSnapshot {
 }
 
 impl CandidateSnapshot {
+    /// An empty snapshot (filled by [`CandidateSnapshot::rebuild`]).
     pub fn new() -> Self {
         Self::default()
     }
@@ -186,12 +206,17 @@ impl CandidateSnapshot {
             });
         }
         for p in peers.iter() {
-            let Some(link) = link_to(p.edge) else { continue };
+            // The link that matters is the one to the next hop: a
+            // multi-hop subject has no direct backhaul link on a line
+            // topology, but its `via` neighbor does.
+            let Some(link) = link_to(p.via) else { continue };
             self.peers.push(PeerCandidate {
                 state: *p,
                 link,
                 fresh: now_ms - p.updated_ms <= max_staleness_ms,
-                suspect: suspects.contains(&p.edge),
+                // A suspected next hop blocks the route as surely as a
+                // suspected subject.
+                suspect: suspects.contains(&p.edge) || suspects.contains(&p.via),
             });
         }
     }
@@ -267,6 +292,7 @@ impl AdmissionParams {
 /// can tell the two mechanisms apart.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitVerdict {
+    /// Within rate and ceiling: the frame proceeds to the Place stage.
     Admit,
     /// Token bucket empty: the app exceeded its admitted rate.
     RejectRate,
@@ -290,10 +316,12 @@ pub struct AdmitStage {
 }
 
 impl AdmitStage {
+    /// Build the stage from resolved admission parameters.
     pub fn new(params: AdmissionParams) -> Self {
         Self { params, buckets: BTreeMap::new() }
     }
 
+    /// Whether the Overload stage’s deadline shed is enabled.
     pub fn deadline_shed(&self) -> bool {
         self.params.deadline_shed
     }
@@ -360,10 +388,12 @@ pub struct EdgePipeline {
     cache_key: Option<SnapshotKey>,
     /// Lifetime counters for the perf trajectory (BENCH json, tests).
     pub snapshot_rebuilds: u64,
+    /// Lifetime count of cache hits (see `snapshot_rebuilds`).
     pub snapshot_reuses: u64,
 }
 
 impl EdgePipeline {
+    /// Build the pipeline; `None` admission = the legacy no-op stage.
     pub fn new(admission: Option<AdmissionParams>) -> Self {
         Self {
             admit: admission.map(AdmitStage::new),
@@ -646,6 +676,8 @@ mod tests {
             cpu_load_pct: 0.0,
             device_idle_containers: 0,
             sent_ms: 100.0,
+            hops: 0,
+            via: NodeId(9),
         });
         let mut suspects = BTreeSet::new();
         suspects.insert(NodeId(2));

@@ -30,20 +30,27 @@ fn pinned_edge(ctx: &EdgeCtx) -> Option<Placement> {
 
 // ---------------------------------------------------------------------
 // Federation-level fallback shared by the DDS family (DESIGN.md
-// §Federation): when this cell is exhausted — no feasible device candidate
-// was found *and* the edge pool has no idle container — consider shedding
-// the image to a peer edge over the backhaul. Baselines never call this.
+// §Federation, §Hierarchical routing): when this cell is exhausted — no
+// feasible device candidate was found *and* the edge pool has no idle
+// container — consider shedding the image over the backhaul. Candidates
+// include multi-hop subjects learned through transitive gossip; scoring is
+// load- and weight-aware: (advertised queue depth ÷ app weight, hop
+// distance, predicted backhaul+execution time) instead of first-feasible.
+// Baselines never call this.
 // ---------------------------------------------------------------------
 
 fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
     // Privacy hard filter (DESIGN.md §Constraints & QoS): only `open`
     // frames may cross the backhaul — `cell_local` and `device_local`
-    // scopes end at the cell boundary, so peers are not candidates.
+    // scopes end at the cell boundary, so peers are not candidates. This
+    // clamp holds on every intermediate hop: a forwarded frame re-enters
+    // this function at each cell it traverses.
     if ctx.img.constraint.privacy != PrivacyClass::Open {
         return None;
     }
-    // Images that already crossed a backhaul must not hop again.
-    if ctx.forwarded {
+    // Hop budget spent: the frame travels no further (legacy Forward
+    // frames decode to ttl 0, reproducing the classic no-re-forward rule).
+    if ctx.hops_left == 0 {
         return None;
     }
     // The cell counts as exhausted only when the edge's own pool is full;
@@ -52,23 +59,42 @@ fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
         return None;
     }
     let budget = ctx.remaining_ms();
+    let weight = ctx.app_weight.max(1) as f64;
     let edge_pred = ctx.predictors.for_class(NodeClass::EdgeServer);
-    let mut best: Option<(f64, NodeId)> = None;
+    // Score: weighted queue depth first (load-awareness ÷ the app's
+    // weighted-fair share), then hop distance, then the predicted
+    // transfer+execution time, then NodeId (exact-tie determinism).
+    let mut best: Option<(f64, u8, f64, NodeId)> = None;
     for peer in ctx.candidates.peers() {
         // Only fresh gossip is trusted, and suspected-down peers are never
         // forwarding targets even inside the staleness window (DESIGN.md
-        // §Churn) — both resolved by the snapshot.
+        // §Churn) — both resolved by the snapshot. Relayed entries carry
+        // the *subject's* timestamp, so transitive knowledge ages (and is
+        // distrusted) exactly like direct knowledge.
         if !peer.fresh || peer.suspect {
             continue;
         }
+        // Loop protection: neither a visited subject nor a next hop that
+        // would bounce the frame back is a candidate.
+        if ctx.visited.contains(&peer.state.edge) || ctx.visited.contains(&peer.state.via) {
+            continue;
+        }
+        // Reaching a subject `hops` relays away takes `hops + 1` sends.
+        if peer.state.hops as u16 + 1 > ctx.hops_left as u16 {
+            continue;
+        }
         // The peer must advertise spare capacity somewhere in its cell
-        // (own pool or its devices) — the availability check, one level up.
+        // (own pool or its devices) — the availability check, one level
+        // up. Relayed copies arrive pre-damped (DESIGN.md §Hierarchical
+        // routing), so distant slack is already discounted here.
         if peer.state.cell_idle_containers() == 0 {
             continue;
         }
         // Predict backhaul transfer + peer-pool execution from the
         // gossiped summary (the peer may still offload within its cell,
-        // which only improves on this estimate).
+        // which only improves on this estimate). Every extra relay hop
+        // pays one more backhaul transfer, approximated with the
+        // next-hop link.
         let inp = PredictInput {
             size_kb: ctx.img.size_kb,
             link: Some(peer.link),
@@ -77,14 +103,22 @@ fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
             queued_images: peer.state.queued_images,
             cpu_load_pct: peer.state.cpu_load_pct,
         };
-        let t = edge_pred.predict_total_ms(&inp);
-        let better = t <= budget
-            && best.map_or(true, |(bt, be)| t < bt || (t == bt && peer.state.edge < be));
+        let t = edge_pred.predict_total_ms(&inp)
+            + peer.state.hops as f64 * peer.link.transfer_ms(ctx.img.size_kb);
+        if t > budget {
+            continue;
+        }
+        let qd = peer.state.queued_images as f64 / weight;
+        let key = (qd, peer.state.hops, t, peer.state.edge);
+        let better = match best {
+            None => true,
+            Some(b) => key < b,
+        };
         if better {
-            best = Some((t, peer.state.edge));
+            best = Some(key);
         }
     }
-    best.map(|(_, e)| Placement::ToPeerEdge(e))
+    best.map(|(_, _, _, e)| Placement::ToPeerEdge(e))
 }
 
 // ---------------------------------------------------------------------
@@ -182,6 +216,7 @@ pub struct Dds {
 }
 
 impl Dds {
+    /// The paper’s DDS with the availability check enabled.
     pub fn new() -> Self {
         Dds { require_idle: true }
     }
@@ -286,6 +321,7 @@ impl SchedulerPolicy for Dds {
 pub struct DdsNoAvail(Dds);
 
 impl DdsNoAvail {
+    /// DDS without the idle-container availability check.
     pub fn new() -> Self {
         DdsNoAvail(Dds { require_idle: false })
     }
@@ -330,6 +366,7 @@ pub struct DdsEnergy {
 }
 
 impl DdsEnergy {
+    /// Battery-aware DDS conserving below `reserve_pct` percent.
     pub fn new(reserve_pct: f64) -> Self {
         DdsEnergy { inner: Dds::new(), reserve_pct }
     }
@@ -466,6 +503,7 @@ pub struct RandomPolicy {
 }
 
 impl RandomPolicy {
+    /// A seeded uniformly-random policy.
     pub fn new(rng: SplitMix64) -> Self {
         RandomPolicy { rng }
     }
@@ -591,6 +629,9 @@ mod tests {
             predictors: &PREDICTORS,
             candidates,
             forwarded: false,
+            hops_left: 1,
+            visited: &[],
+            app_weight: 1,
         }
     }
 
@@ -614,6 +655,9 @@ mod tests {
             predictors: &PREDICTORS,
             candidates,
             forwarded: false,
+            hops_left: 1,
+            visited: &[],
+            app_weight: 1,
         }
     }
 
@@ -626,6 +670,8 @@ mod tests {
             cpu_load_pct: 0.0,
             device_idle_containers: 0,
             sent_ms: sent,
+            hops: 0,
+            via: NodeId(edge),
         }
     }
 
@@ -798,7 +844,9 @@ mod tests {
     }
 
     #[test]
-    fn forwarded_images_never_hop_again() {
+    fn spent_hop_budget_blocks_federation() {
+        // A frame whose hop budget is exhausted (legacy Forward frames
+        // decode to exactly this) stays put even with an idle fresh peer.
         let mut p = Dds::new();
         let im = img(0, 5_000.0);
         let t = ProfileTable::new();
@@ -807,7 +855,125 @@ mod tests {
         let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
         let mut ctx = fed_ctx(&im, &s, 4);
         ctx.forwarded = true;
+        ctx.hops_left = 0;
         assert_eq!(p.decide_edge(&ctx), Placement::Local);
+    }
+
+    #[test]
+    fn forwarded_frame_with_budget_may_hop_again() {
+        // Hierarchical routing: an intermediate cell that is itself
+        // exhausted re-forwards while TTL remains — but never back to an
+        // edge on the visited path.
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(6, 0, 4, 0.0));
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let visited = [NodeId(0)];
+        let mut ctx = fed_ctx(&im, &s, 4);
+        ctx.forwarded = true;
+        ctx.hops_left = 1;
+        ctx.visited = &visited;
+        assert_eq!(p.decide_edge(&ctx), Placement::ToPeerEdge(NodeId(6)));
+        // The frame's originating edge is never a target again.
+        let visited_all = [NodeId(0), NodeId(6)];
+        ctx.visited = &visited_all;
+        assert_eq!(p.decide_edge(&ctx), Placement::Local);
+    }
+
+    #[test]
+    fn multi_hop_subject_needs_enough_budget() {
+        // A subject learned two relays away takes three sends to reach:
+        // with hops_left = 1 it is not a candidate, with 3 it is.
+        let mut p = Dds::new();
+        let im = img(0, 50_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        let mut far = peer(9, 0, 4, 0.0);
+        far.hops = 2;
+        far.via = NodeId(3);
+        peers.apply(&far);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let mut ctx = fed_ctx(&im, &s, 4);
+        ctx.hops_left = 1;
+        assert_eq!(p.decide_edge(&ctx), Placement::Local);
+        ctx.hops_left = 3;
+        assert_eq!(p.decide_edge(&ctx), Placement::ToPeerEdge(NodeId(9)));
+    }
+
+    #[test]
+    fn nearer_cell_wins_at_equal_load_and_queue_depth_dominates() {
+        let mut p = Dds::new();
+        let im = img(0, 50_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        // Direct neighbor and a 1-hop-relayed subject, identical state:
+        // the nearer cell wins.
+        peers.apply(&peer(3, 0, 4, 0.0));
+        let mut far = peer(6, 0, 4, 0.0);
+        far.hops = 1;
+        far.via = NodeId(3);
+        peers.apply(&far);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let mut ctx = fed_ctx(&im, &s, 4);
+        ctx.hops_left = 2;
+        assert_eq!(p.decide_edge(&ctx), Placement::ToPeerEdge(NodeId(3)));
+        // … but a queue-free far cell beats a backlogged neighbor: load
+        // awareness dominates hop distance.
+        let mut backlogged = peer(3, 0, 4, 1.0);
+        backlogged.queued_images = 5;
+        peers.apply(&backlogged);
+        let mut far = peer(6, 0, 4, 1.0);
+        far.hops = 1;
+        far.via = NodeId(3);
+        peers.apply(&far);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let mut ctx = fed_ctx(&im, &s, 4);
+        ctx.hops_left = 2;
+        assert_eq!(p.decide_edge(&ctx), Placement::ToPeerEdge(NodeId(6)));
+    }
+
+    #[test]
+    fn app_weight_discounts_advertised_queue_depth() {
+        // Two peers: n3 backlogged (4 queued) but nearer in NodeId order,
+        // n6 lightly queued (1). A weight-1 app sees depths 4 vs 1 and
+        // picks n6; a weight-8 app sees 0.5 vs 0.125 and still picks n6 —
+        // but against an *empty* n3 the weighted depths tie at 0 and the
+        // hop/time/NodeId tie-break applies. The weight changes the
+        // comparison scale, not the winner ordering of equal depths.
+        let mut p = Dds::new();
+        let im = img(0, 50_000.0);
+        let t = ProfileTable::new();
+        let mut peers = PeerTable::new();
+        let mut near = peer(3, 0, 4, 0.0);
+        near.queued_images = 4;
+        peers.apply(&near);
+        let mut far = peer(6, 0, 4, 0.0);
+        far.queued_images = 1;
+        peers.apply(&far);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let mut ctx = fed_ctx(&im, &s, 4);
+        ctx.app_weight = 1;
+        assert_eq!(p.decide_edge(&ctx), Placement::ToPeerEdge(NodeId(6)));
+        ctx.app_weight = 8;
+        assert_eq!(
+            p.decide_edge(&ctx),
+            Placement::ToPeerEdge(NodeId(6)),
+            "weights rescale depths uniformly"
+        );
+        // Equal queued depths: weighted depths tie regardless of weight →
+        // deterministic NodeId tie-break.
+        let mut a = peer(3, 0, 4, 1.0);
+        a.queued_images = 2;
+        peers.apply(&a);
+        let mut b = peer(6, 0, 4, 1.0);
+        b.queued_images = 2;
+        peers.apply(&b);
+        let s = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let mut ctx = fed_ctx(&im, &s, 4);
+        ctx.app_weight = 3;
+        assert_eq!(p.decide_edge(&ctx), Placement::ToPeerEdge(NodeId(3)));
     }
 
     #[test]

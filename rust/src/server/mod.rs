@@ -16,7 +16,7 @@
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::container::ContainerPool;
-use crate::core::message::{EdgeSummary, Message, UserRequest};
+use crate::core::message::{EdgeSummary, ForwardRoute, Message, UserRequest};
 use crate::core::{DropReason, ImageMeta, NodeClass, NodeId, Placement, TaskId};
 use crate::device::Action;
 use crate::net::{LinkModel, Topology};
@@ -29,6 +29,7 @@ use crate::scheduler::{
 
 /// The edge server state machine.
 pub struct EdgeNode {
+    /// The edge server’s own node id.
     pub id: NodeId,
     pool: ContainerPool,
     table: ProfileTable,
@@ -69,9 +70,18 @@ pub struct EdgeNode {
     /// Staged-pipeline state: Admit buckets + the cached candidate
     /// snapshot (DESIGN.md §3).
     pipeline: EdgePipeline,
+    /// Backhaul-hop budget granted to fresh frames (`[federation]
+    /// max_forward_hops`, DESIGN.md §Hierarchical routing). 1 reproduces
+    /// the classic single-hop federation.
+    max_forward_hops: u8,
+    /// Per-app weighted-fair shares in registry order (`[[app]] weight`,
+    /// 1 when unset / out of range) — the federation level's queue-depth
+    /// discount.
+    app_weights: Vec<u32>,
 }
 
 impl EdgeNode {
+    /// Build an edge node around its pool, policy and topology view.
     pub fn new(
         id: NodeId,
         pool: ContainerPool,
@@ -99,6 +109,8 @@ impl EdgeNode {
             suspects: BTreeSet::new(),
             suspects_version: 0,
             pipeline: EdgePipeline::new(None),
+            max_forward_hops: 1,
+            app_weights: Vec::new(),
         }
     }
 
@@ -106,6 +118,22 @@ impl EdgeNode {
     /// scenarios only — see DESIGN.md §Churn).
     pub fn with_detector(mut self, detector: FailureDetector) -> Self {
         self.detector = Some(detector);
+        self
+    }
+
+    /// Set the backhaul-hop budget for fresh frames (builder style;
+    /// `[federation] max_forward_hops` — DESIGN.md §Hierarchical routing).
+    /// The default of 1 is the classic single-hop federation.
+    pub fn with_max_forward_hops(mut self, hops: u8) -> Self {
+        self.max_forward_hops = hops;
+        self
+    }
+
+    /// Install the per-app weighted-fair shares consulted by the
+    /// federation level (builder style; `[[app]] weight` in registry
+    /// order — weight-aware forwarding, DESIGN.md §Hierarchical routing).
+    pub fn with_app_weights(mut self, weights: Vec<u32>) -> Self {
+        self.app_weights = weights;
         self
     }
 
@@ -134,24 +162,29 @@ impl EdgeNode {
         &self.suspects
     }
 
+    /// The edge’s own container pool (read-only view).
     pub fn pool(&self) -> &ContainerPool {
         &self.pool
     }
 
+    /// Mutable access to the edge pool (drivers: load knobs).
     pub fn pool_mut(&mut self) -> &mut ContainerPool {
         &mut self.pool
     }
 
+    /// The MP table (device profiles).
     pub fn table(&self) -> &ProfileTable {
         &self.table
     }
 
+    /// The peer-edge table (federation gossip).
     pub fn peers(&self) -> &PeerTable {
         &self.peers
     }
 
     /// The condensed MP summary this edge gossips to its peers: own pool
-    /// state plus the fresh idle capacity of its cell's devices.
+    /// state plus the fresh idle capacity of its cell's devices. Direct
+    /// self-advertisement: `hops = 0`, `via = self`.
     pub fn summary(&self, now_ms: f64) -> EdgeSummary {
         let device_idle = self
             .table
@@ -166,7 +199,58 @@ impl EdgeNode {
             cpu_load_pct: self.pool.bg_load(),
             device_idle_containers: device_idle,
             sent_ms: now_ms,
+            hops: 0,
+            via: self.id,
         }
+    }
+
+    /// Relay horizon for transitive gossip: entries this many hops away
+    /// are no longer re-advertised. Generously above any practical
+    /// `max_forward_hops`; the real damping is capacity halving + the
+    /// staleness cap on the preserved subject timestamp.
+    const GOSSIP_RELAY_HORIZON: u8 = 8;
+
+    /// Everything this edge gossips in one tick (transitive gossip,
+    /// DESIGN.md §Hierarchical routing): its own summary plus a *damped*
+    /// re-advertisement of every fresh, unsuspected peer entry within the
+    /// relay horizon. Damping halves the advertised idle capacity (pool
+    /// and device slack) per relay, so a distant cell never looks better
+    /// than a near one with the same true state; the subject timestamp is
+    /// preserved, so staleness keeps discounting transitive knowledge.
+    ///
+    /// Each summary is paired with the neighbor it was *learned from*
+    /// (`self` for the own summary). The caller fans these out to its
+    /// linked neighbors with split horizon in both directions: never send
+    /// a summary to its own subject, and never echo an entry back to the
+    /// neighbor it came from (the copy is guaranteed stale there).
+    pub fn gossip_out(&self, now_ms: f64) -> Vec<(EdgeSummary, NodeId)> {
+        let mut out = vec![(self.summary(now_ms), self.id)];
+        for p in self.peers.iter() {
+            if now_ms - p.updated_ms > self.max_staleness_ms {
+                continue;
+            }
+            if self.suspects.contains(&p.edge) || p.hops >= Self::GOSSIP_RELAY_HORIZON {
+                continue;
+            }
+            // Halve idle capacity: keep the busy count, shrink warm so
+            // (warm - busy) halves; device slack halves directly.
+            let idle = p.warm_containers.saturating_sub(p.busy_containers);
+            out.push((
+                EdgeSummary {
+                    edge: p.edge,
+                    busy_containers: p.busy_containers,
+                    warm_containers: p.busy_containers + idle / 2,
+                    queued_images: p.queued_images,
+                    cpu_load_pct: p.cpu_load_pct,
+                    device_idle_containers: p.device_idle_containers / 2,
+                    sent_ms: p.updated_ms,
+                    hops: p.hops + 1,
+                    via: self.id,
+                },
+                p.via,
+            ));
+        }
+        out
     }
 
     fn snapshot(&self) -> LocalSnapshot {
@@ -185,8 +269,11 @@ impl EdgeNode {
         match msg {
             Message::User(req) => self.on_user(req, now_ms, out),
             // A fresh arrival from this cell enters through the Admit
-            // stage; requeues and peer-forwards were admitted already.
-            Message::Image(img) => self.schedule_image(img, now_ms, false, true, out),
+            // stage with the full hop budget; requeues and peer-forwards
+            // were admitted already.
+            Message::Image(img) => {
+                self.schedule_image(img, now_ms, false, true, self.max_forward_hops, &[], out)
+            }
             Message::Profile(up) => self.table.apply(&up),
             Message::Join { node, class_tag, warm_containers } => {
                 // A (re-)joining node is alive by definition.
@@ -212,19 +299,39 @@ impl EdgeNode {
                 });
             }
             Message::EdgeSummary(s) => {
-                // Fresh gossip also clears any suspicion of that peer.
-                if self.suspects.remove(&s.edge) {
+                // A (relayed) summary about ourselves carries no news.
+                if s.edge == self.id {
+                    return;
+                }
+                // Applied gossip (fresher than what we hold) also clears
+                // any suspicion of that peer; a stale relayed copy is not
+                // evidence of life.
+                if self.peers.apply(&s) && self.suspects.remove(&s.edge) {
                     self.suspects_version += 1;
                 }
-                self.peers.apply(&s);
             }
-            Message::Forward { img, from_edge } => {
+            Message::Forward { img, from_edge, route } => {
                 // A peer's cell was exhausted; this cell schedules the
-                // image (never re-forwarding) and owes the result to the
-                // originating edge. Admission happened at the origin cell
-                // — re-admitting here could strand the owed result.
+                // image — possibly re-forwarding while the hop budget
+                // lasts — and owes the result to the previous hop.
+                // Admission happened at the origin cell — re-admitting
+                // here could strand the owed result.
+                if route.has_visited(self.id) {
+                    // Loop: the frame came back to a cell it already
+                    // crossed. Reject the loop (counted) and absorb the
+                    // frame locally with no further hops.
+                    log::warn!(
+                        "{}: forward loop rejected for {} (path revisits this edge)",
+                        self.id,
+                        img.task
+                    );
+                    out.push(Action::RecordLoopRejected { task: img.task });
+                    self.forwarded_from.insert(img.task, from_edge);
+                    self.schedule_image(img, now_ms, true, false, 0, &[], out);
+                    return;
+                }
                 self.forwarded_from.insert(img.task, from_edge);
-                self.schedule_image(img, now_ms, true, false, out);
+                self.schedule_image(img, now_ms, true, false, route.ttl, &route.visited, out);
             }
             Message::Result { task, processed_by, detections, max_score, process_ms } => {
                 let relay = Message::Result { task, processed_by, detections, max_score, process_ms };
@@ -273,17 +380,23 @@ impl EdgeNode {
     /// forwarded) — the staged pipeline's edge pass (DESIGN.md §3):
     /// Filter (privacy prefilter) → Admit → Place → Filter (backhaul
     /// clamp) → Dispatch/Overload. `forwarded` marks images that already
-    /// crossed a backhaul: they may use this cell's pool and devices but
-    /// never hop to another peer, and their placement record (made at the
-    /// originating edge as `ToPeerEdge`) is left untouched. `admit` is
-    /// true only for fresh arrivals from this cell's devices — requeues
-    /// and peer-forwards were admitted once already.
+    /// crossed a backhaul: their placement record (made at the
+    /// originating edge as `ToPeerEdge`) is left untouched and the
+    /// Overload stage exempts them. `admit` is true only for fresh
+    /// arrivals from this cell's devices — requeues and peer-forwards
+    /// were admitted once already. `hops_left`/`visited` are the frame's
+    /// remaining hop budget and visited-edge path (hierarchical routing,
+    /// DESIGN.md §Hierarchical routing): a forwarded frame with budget
+    /// may hop onward, one with `hops_left = 0` is terminal here.
+    #[allow(clippy::too_many_arguments)]
     fn schedule_image(
         &mut self,
         img: ImageMeta,
         now_ms: f64,
         forwarded: bool,
         admit: bool,
+        hops_left: u8,
+        visited: &[NodeId],
         out: &mut Vec<Action>,
     ) {
         // Filter stage, part 1 (DESIGN.md §Constraints & QoS): a
@@ -346,6 +459,14 @@ impl EdgeNode {
                 predictors: &self.predictors,
                 candidates,
                 forwarded,
+                hops_left,
+                visited,
+                app_weight: self
+                    .app_weights
+                    .get(img.constraint.app.0 as usize)
+                    .copied()
+                    .unwrap_or(1)
+                    .max(1),
             };
             self.policy.decide_edge(&ctx)
         };
@@ -368,18 +489,41 @@ impl EdgeNode {
                 self.bump_busy(target);
                 out.push(Action::Send { to: target, msg: Message::Image(img), reliable: false });
             }
-            Placement::ToPeerEdge(peer) if !forwarded => {
-                out.push(Action::RecordPlaced { task: img.task, placement });
-                // Track for the result relayed back from the peer edge.
+            Placement::ToPeerEdge(peer) if hops_left > 0 => {
+                // Only the originating edge records the placement; relays
+                // leave the record (and therefore `forwarded`) untouched.
+                if !forwarded {
+                    out.push(Action::RecordPlaced { task: img.task, placement });
+                }
+                // Route to the *next hop* toward the subject: a multi-hop
+                // subject has no direct backhaul link (line topologies) —
+                // its `via` neighbor re-decides from there.
+                let next_hop = self.peers.get(peer).map_or(peer, |p| p.via);
+                // Track for the result relayed back over the backhaul.
+                // The requeue target is the *next hop* — the direct
+                // neighbor this frame is physically handed to, the only
+                // node whose liveness this edge can judge. The hop
+                // adjacent to a failure deeper in the chain requeues
+                // there; results relay back along the forward chain.
                 self.inflight.insert(img.task, img);
-                self.offload_target.insert(img.task, peer);
-                // Optimistic summary bump, mirroring the device-table one.
+                self.offload_target.insert(img.task, next_hop);
+                // Optimistic summary bump, mirroring the device-table one
+                // (the *subject's* advertised capacity is what was spent).
                 self.peers.bump_busy(peer);
+                // Hop budget: decrement, append ourselves to the path
+                // (one allocation; `visited` is empty for fresh frames).
+                let route = {
+                    let mut v = Vec::with_capacity(visited.len() + 1);
+                    v.extend_from_slice(visited);
+                    v.push(self.id);
+                    ForwardRoute { ttl: hops_left - 1, visited: v }
+                };
+                out.push(Action::RecordForwardHop { task: img.task });
                 // Backhaul is wired infrastructure: forward reliably (the
                 // access hop already carried the UDP-loss risk).
                 out.push(Action::Send {
-                    to: peer,
-                    msg: Message::Forward { img, from_edge: self.id },
+                    to: next_hop,
+                    msg: Message::Forward { img, from_edge: self.id, route },
                     reliable: true,
                 });
             }
@@ -401,6 +545,13 @@ impl EdgeNode {
                     out.push(Action::RecordDropped { task: img.task, reason: DropReason::Shed });
                     self.nack(&img, out);
                     return;
+                }
+                // Hop budget exhausted at a saturated cell: the frame
+                // queues here although another hop might have found idle
+                // capacity — the staleness-vs-overhead signal the gossip
+                // ablation measures (never a drop; the result still owes).
+                if forwarded && hops_left == 0 && self.pool.idle_count() == 0 {
+                    out.push(Action::RecordTtlExpired { task: img.task });
                 }
                 self.run_local(img, now_ms, out);
             }
@@ -526,6 +677,18 @@ impl EdgeNode {
             if p.updated_ms < 0.0 {
                 continue;
             }
+            // Only *direct* neighbors are liveness-classified: a relayed
+            // entry's timestamp is the subject's vintage, inherently
+            // ~hops × gossip_period old even while the subject is
+            // perfectly alive — judging it by age would falsely suspect
+            // (and at distance, evict) healthy multi-hop cells. Relayed
+            // knowledge instead expires through the staleness cap: when
+            // relays stop, the entry stops being a candidate. Forwarded
+            // frames are requeued by the edge adjacent to the failure
+            // (offload_target tracks the *next hop*), never from afar.
+            if p.hops > 0 {
+                continue;
+            }
             let age = now_ms - p.updated_ms;
             if age > det.dead_after_ms {
                 dead_peers.push(p.edge);
@@ -583,11 +746,15 @@ impl EdgeNode {
             self.offload_target.remove(&task);
             let Some(img) = self.inflight.remove(&task) else { continue };
             out.push(Action::RecordRequeued { task });
-            // A frame a peer forwarded to us keeps its no-re-forward rule.
             // Requeues bypass the Admit stage: the frame was admitted when
-            // it first entered the cell.
+            // it first entered the cell. A frame a peer forwarded to us is
+            // terminal here (re-routing it would need the lost route
+            // header, and the previous hop already tracks it as placed on
+            // this cell); a frame this cell originated gets a fresh hop
+            // budget — its first forward attempt died with the peer.
             let forwarded = self.forwarded_from.contains_key(&task);
-            self.schedule_image(img, now_ms, forwarded, false, out);
+            let budget = if forwarded { 0 } else { self.max_forward_hops };
+            self.schedule_image(img, now_ms, forwarded, false, budget, &[], out);
         }
     }
 
@@ -821,6 +988,8 @@ mod tests {
             cpu_load_pct: 0.0,
             device_idle_containers: 0,
             sent_ms: sent,
+            hops: 0,
+            via: NodeId(edge),
         })
     }
 
@@ -887,7 +1056,11 @@ mod tests {
         // Edge 3 forwards an image whose origin (device 4) lives in its
         // cell; our cell has no joined devices → run in our pool.
         e.on_message(
-            Message::Forward { img: img(7, 5_000.0, 4), from_edge: NodeId(3) },
+            Message::Forward {
+                img: img(7, 5_000.0, 4),
+                from_edge: NodeId(3),
+                route: ForwardRoute::first_hop(NodeId(3), 1),
+            },
             10.0,
             &mut out,
         );
@@ -909,7 +1082,11 @@ mod tests {
         join(&mut e, 1, 2, 0.0);
         let mut out = Vec::new();
         e.on_message(
-            Message::Forward { img: img(8, 5_000.0, 4), from_edge: NodeId(3) },
+            Message::Forward {
+                img: img(8, 5_000.0, 4),
+                from_edge: NodeId(3),
+                route: ForwardRoute::first_hop(NodeId(3), 1),
+            },
             10.0,
             &mut out,
         );
@@ -1518,5 +1695,352 @@ mod tests {
         assert!(!out
             .iter()
             .any(|a| matches!(a, Action::Send { msg: Message::Image(_), .. })));
+    }
+
+    // ---- hierarchical routing (DESIGN.md §Hierarchical routing) ------
+
+    /// Relayed gossip about a 2-hops-away subject, as edge 3 would
+    /// re-advertise edge 6's summary to edge 0.
+    fn relayed_gossip(subject: u32, via: u32, warm: u32, sent: f64) -> Message {
+        Message::EdgeSummary(crate::core::message::EdgeSummary {
+            edge: NodeId(subject),
+            busy_containers: 0,
+            warm_containers: warm,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: 0,
+            sent_ms: sent,
+            hops: 1,
+            via: NodeId(via),
+        })
+    }
+
+    /// Three cells on a line (0-3-6): edge 0 has devices 1, 2; edges 3
+    /// and 6 are empty cells. Only adjacent edges are linked.
+    fn line_edge(hops: u8) -> EdgeNode {
+        use crate::net::{CellSpec, FederationShape, LinkModel};
+        let cell = |devs: &[(NodeClass, u32, bool)]| {
+            CellSpec::new(4, devs, LinkModel::wifi())
+        };
+        let topo = Topology::multi_cell_shaped(
+            &[
+                cell(&[
+                    (NodeClass::RaspberryPi, 2, true),
+                    (NodeClass::RaspberryPi, 2, false),
+                ]),
+                cell(&[]),
+                cell(&[]),
+            ],
+            LinkModel::new(5.0, 1000.0, 0.0),
+            FederationShape::Line,
+        );
+        EdgeNode::new(
+            NodeId(0),
+            ContainerPool::new(profile_for(NodeClass::EdgeServer), 4),
+            PolicyKind::Dds.build(1),
+            topo,
+            200.0,
+        )
+        .with_max_forward_hops(hops)
+    }
+
+    #[test]
+    fn multi_hop_subject_routes_through_via() {
+        // Edge 0 learns of far edge 6 only through edge 3's relay. When
+        // the near cell has no capacity, the forward must be addressed to
+        // the *next hop* (3), carry a decremented TTL, and track the
+        // chosen subject (6) for requeue purposes.
+        let mut e = line_edge(2);
+        let mut out = Vec::new();
+        // Direct neighbor 3 advertises itself with zero capacity; 6 (via
+        // 3) advertises 4 idle containers.
+        e.on_message(gossip_from(3, 4, 4, 0.0), 0.0, &mut out);
+        e.on_message(relayed_gossip(6, 3, 4, 0.0), 0.0, &mut out);
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 50_000.0, 1)), 1.0, &mut out);
+        }
+        assert_eq!(e.pool().busy_count(), 4);
+        out.clear();
+        e.on_message(Message::Image(img(5, 50_000.0, 1)), 2.0, &mut out);
+        let fwd = out.iter().find_map(|a| match a {
+            Action::Send { to, msg: Message::Forward { route, .. }, reliable: true } => {
+                Some((*to, route.clone()))
+            }
+            _ => None,
+        });
+        let (to, route) = fwd.expect("must forward toward the far cell");
+        assert_eq!(to, NodeId(3), "forward goes to the next hop, not the subject");
+        assert_eq!(route.ttl, 1, "budget 2 minus the hop being taken");
+        assert_eq!(route.visited, vec![NodeId(0)]);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordPlaced { placement: Placement::ToPeerEdge(NodeId(6)), .. }
+        )));
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::RecordForwardHop { task: TaskId(5) })));
+    }
+
+    #[test]
+    fn intermediate_hop_reforwards_while_budget_lasts() {
+        // Edge 0 acting as the *intermediate* cell: a forwarded frame
+        // arrives with ttl 1 while this pool is saturated and a fresh
+        // idle neighbor exists — it hops onward with ttl 0 and the path
+        // extended; the result still owes to the previous hop.
+        let mut e = line_edge(2);
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 50_000.0, 1)), 1.0, &mut out);
+        }
+        out.clear();
+        e.on_message(
+            Message::Forward {
+                img: img(9, 50_000.0, 1),
+                from_edge: NodeId(6),
+                route: ForwardRoute { ttl: 1, visited: vec![NodeId(6)] },
+            },
+            2.0,
+            &mut out,
+        );
+        let fwd = out.iter().find_map(|a| match a {
+            Action::Send { to, msg: Message::Forward { route, .. }, .. } => {
+                Some((*to, route.clone()))
+            }
+            _ => None,
+        });
+        let (to, route) = fwd.expect("intermediate hop must re-forward");
+        assert_eq!(to, NodeId(3));
+        assert_eq!(route.ttl, 0);
+        assert_eq!(route.visited, vec![NodeId(6), NodeId(0)]);
+        // No second placement record: the originating edge owns it.
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordPlaced { .. })));
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::RecordForwardHop { task: TaskId(9) })));
+        // The hop is tracked for failure-driven requeue and result relay.
+        out.clear();
+        e.on_message(
+            Message::Result {
+                task: TaskId(9),
+                processed_by: NodeId(3),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 223.0,
+            },
+            400.0,
+            &mut out,
+        );
+        assert!(
+            out.iter().any(|a| matches!(
+                a,
+                Action::Send { to: NodeId(6), msg: Message::Result { task: TaskId(9), .. }, .. }
+            )),
+            "result must relay back to the previous hop"
+        );
+    }
+
+    #[test]
+    fn forward_loop_is_rejected_and_absorbed() {
+        // A frame whose visited path already contains this edge must not
+        // bounce again, whatever its remaining TTL says.
+        let mut e = line_edge(3);
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        out.clear();
+        e.on_message(
+            Message::Forward {
+                img: img(7, 50_000.0, 1),
+                from_edge: NodeId(3),
+                route: ForwardRoute { ttl: 2, visited: vec![NodeId(0), NodeId(3)] },
+            },
+            1.0,
+            &mut out,
+        );
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::RecordLoopRejected { task: TaskId(7) })));
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::Send { msg: Message::Forward { .. }, .. })),
+            "a rejected loop must not re-forward"
+        );
+        assert_eq!(e.pool().busy_count(), 1, "the frame is absorbed locally");
+        // The result still owes to the previous hop.
+        out.clear();
+        e.on_container_done(0, TaskId(7), 223.0, 250.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(3), msg: Message::Result { task: TaskId(7), .. }, .. }
+        )));
+    }
+
+    #[test]
+    fn spent_ttl_at_saturated_cell_counts_expiry() {
+        // A forwarded frame with no hop budget left lands at a saturated
+        // cell: it queues (never dropped) and the expiry is counted.
+        let mut e = line_edge(2);
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 0, 4, 0.0), 0.0, &mut out);
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 50_000.0, 1)), 1.0, &mut out);
+        }
+        out.clear();
+        e.on_message(
+            Message::Forward {
+                img: img(8, 50_000.0, 1),
+                from_edge: NodeId(6),
+                route: ForwardRoute { ttl: 0, visited: vec![NodeId(6)] },
+            },
+            2.0,
+            &mut out,
+        );
+        assert!(out
+            .iter()
+            .any(|a| matches!(a, Action::RecordTtlExpired { task: TaskId(8) })));
+        assert!(!out
+            .iter()
+            .any(|a| matches!(a, Action::Send { msg: Message::Forward { .. }, .. })));
+        assert_eq!(e.pool().queued_count(), 1);
+        // With an idle container the same frame triggers no expiry: the
+        // cell genuinely absorbs it.
+        let mut e2 = line_edge(2);
+        let mut out2 = Vec::new();
+        e2.on_message(
+            Message::Forward {
+                img: img(9, 50_000.0, 1),
+                from_edge: NodeId(6),
+                route: ForwardRoute { ttl: 0, visited: vec![NodeId(6)] },
+            },
+            2.0,
+            &mut out2,
+        );
+        assert!(!out2.iter().any(|a| matches!(a, Action::RecordTtlExpired { .. })));
+    }
+
+    #[test]
+    fn gossip_out_relays_damped_fresh_entries() {
+        let mut e = line_edge(3);
+        let mut out = Vec::new();
+        join(&mut e, 1, 2, 0.0);
+        // Neighbor 3: 4 idle pool containers, 4 device-idle, fresh.
+        let mut s = crate::core::message::EdgeSummary {
+            edge: NodeId(3),
+            busy_containers: 0,
+            warm_containers: 4,
+            queued_images: 2,
+            cpu_load_pct: 10.0,
+            device_idle_containers: 4,
+            sent_ms: 50.0,
+            hops: 0,
+            via: NodeId(3),
+        };
+        e.on_message(Message::EdgeSummary(s), 50.0, &mut out);
+        let msgs = e.gossip_out(60.0);
+        assert_eq!(msgs.len(), 2, "own summary + one relay");
+        assert_eq!(msgs[0].0.edge, NodeId(0));
+        assert_eq!(msgs[0].0.hops, 0);
+        assert_eq!(msgs[0].0.via, NodeId(0));
+        assert_eq!(msgs[0].1, NodeId(0), "the own summary is self-learned");
+        let (relay, learned_from) = &msgs[1];
+        assert_eq!(relay.edge, NodeId(3));
+        assert_eq!(relay.hops, 1);
+        assert_eq!(relay.via, NodeId(0), "relays rewrite via to the advertiser");
+        assert_eq!(relay.sent_ms, 50.0, "subject vintage preserved");
+        assert_eq!(
+            *learned_from,
+            NodeId(3),
+            "split horizon: drivers must not echo this back to n3"
+        );
+        // Damping: idle 4 → 2 (warm = busy + idle/2), device idle 4 → 2;
+        // queue depth passes through undamped (it is load, not capacity).
+        assert_eq!(relay.warm_containers - relay.busy_containers, 2);
+        assert_eq!(relay.device_idle_containers, 2);
+        assert_eq!(relay.queued_images, 2);
+        // A stale entry is not re-advertised.
+        let msgs = e.gossip_out(400.0);
+        assert_eq!(msgs.len(), 1, "stale peers drop out of the relay set");
+        // Re-advertisement of a relayed entry increments hops again and
+        // names the entry's source as the learned-from neighbor.
+        s.hops = 1;
+        s.via = NodeId(9);
+        s.sent_ms = 500.0;
+        let mut out = Vec::new();
+        e.on_message(Message::EdgeSummary(s), 500.0, &mut out);
+        let msgs = e.gossip_out(510.0);
+        assert_eq!(msgs[1].0.hops, 2);
+        assert_eq!(msgs[1].0.via, NodeId(0));
+        assert_eq!(msgs[1].1, NodeId(9));
+    }
+
+    #[test]
+    fn relayed_entries_are_never_liveness_classified() {
+        // A 2-hops-away subject's entry carries the subject's (old)
+        // vintage by design. The failure detector must not suspect or
+        // evict it by age — only direct neighbors are classified; relayed
+        // knowledge expires through the staleness cap instead.
+        let mut e = line_edge(3).with_detector(detector());
+        let mut out = Vec::new();
+        // Direct neighbor fresh at t=450; far subject relayed with a
+        // 450 ms-old vintage (way past dead_after = 400).
+        e.on_message(gossip_from(3, 0, 4, 450.0), 450.0, &mut out);
+        e.on_message(relayed_gossip(6, 3, 4, 0.0), 450.0, &mut out);
+        out.clear();
+        e.check_liveness(451.0, &mut out);
+        assert!(!e.suspects().contains(&NodeId(6)), "relayed age is not suspicion");
+        assert!(e.peers().get(NodeId(6)).is_some(), "relayed age is not death");
+        // The direct neighbor IS classified normally: silence past the
+        // dead threshold evicts it.
+        out.clear();
+        e.check_liveness(900.0, &mut out);
+        assert!(e.peers().get(NodeId(3)).is_none(), "direct silence still evicts");
+        assert!(e.peers().get(NodeId(6)).is_some());
+    }
+
+    #[test]
+    fn multi_hop_requeue_target_is_the_next_hop() {
+        // The frame is physically handed to the via neighbor; if THAT
+        // direct neighbor dies, this edge pulls the frame back. The far
+        // subject's own death is the adjacent cell's requeue to make.
+        let mut e = line_edge(2).with_detector(detector());
+        let mut out = Vec::new();
+        e.on_message(gossip_from(3, 4, 4, 0.0), 0.0, &mut out);
+        e.on_message(relayed_gossip(6, 3, 4, 0.0), 0.0, &mut out);
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 50_000.0, 1)), 1.0, &mut out);
+        }
+        out.clear();
+        // Frame 5 routes to subject 6 via next hop 3.
+        e.on_message(Message::Image(img(5, 50_000.0, 1)), 2.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(3), msg: Message::Forward { .. }, .. }
+        )));
+        // Neighbor 3 goes silent past dead_after: the frame requeues here
+        // even though the *subject* (6) was never declared anything.
+        out.clear();
+        e.check_liveness(500.0, &mut out);
+        assert!(out.iter().any(|a| matches!(a, Action::RecordRequeued { task: TaskId(5) })));
+        assert!(e.peers().get(NodeId(3)).is_none());
+    }
+
+    #[test]
+    fn self_subject_gossip_is_ignored() {
+        // A relayed copy of our own summary must not register ourselves
+        // as our own peer.
+        let mut e = fed_edge(PolicyKind::Dds);
+        let mut out = Vec::new();
+        let s = crate::core::message::EdgeSummary {
+            edge: NodeId(0),
+            busy_containers: 0,
+            warm_containers: 4,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: 0,
+            sent_ms: 10.0,
+            hops: 1,
+            via: NodeId(3),
+        };
+        e.on_message(Message::EdgeSummary(s), 10.0, &mut out);
+        assert_eq!(e.peers().len(), 0);
     }
 }

@@ -97,7 +97,9 @@ impl Ord for Scheduled {
 
 /// One simulated node.
 pub enum SimNode {
+    /// A cell's edge server.
     Edge(EdgeNode),
+    /// An end device.
     Device(DeviceNode),
 }
 
@@ -108,6 +110,7 @@ pub struct Engine {
     seq: u64,
     nodes: Vec<SimNode>,
     topology: Topology,
+    /// Global per-task outcome recorder.
     pub recorder: Recorder,
     rng: SplitMix64,
     /// UP push period; ticks stop after `horizon_ms`.
@@ -139,6 +142,7 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine over the given nodes and topology.
     pub fn new(
         nodes: Vec<SimNode>,
         topology: Topology,
@@ -191,12 +195,30 @@ impl Engine {
         self.epoch[node.0 as usize] += 1;
     }
 
+    /// Current virtual time (ms).
     pub fn now_ms(&self) -> f64 {
         self.now_ms
     }
 
+    /// Events handled so far.
     pub fn events_processed(&self) -> u64 {
         self.events_processed
+    }
+
+    /// Lifetime candidate-snapshot cache counters summed over every edge
+    /// server: `(rebuilds, reuses)`. Surfaced in
+    /// [`crate::metrics::RunSummary`] for the perf dashboards (ROADMAP
+    /// PR-4 follow-up; keying documented in DESIGN.md §3).
+    pub fn snapshot_counters(&self) -> (u64, u64) {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                SimNode::Edge(e) => {
+                    Some((e.pipeline().snapshot_rebuilds, e.pipeline().snapshot_reuses))
+                }
+                SimNode::Device(_) => None,
+            })
+            .fold((0, 0), |(rb, ru), (r, u)| (rb + r, ru + u))
     }
 
     /// Battery state of every battery-powered device:
@@ -213,6 +235,7 @@ impl Engine {
             .collect()
     }
 
+    /// Schedule an event at `at_ms` (never into the past).
     pub fn schedule(&mut self, at_ms: f64, ev: Ev) {
         debug_assert!(at_ms >= self.now_ms, "cannot schedule into the past");
         self.seq += 1;
@@ -403,13 +426,28 @@ impl Engine {
             Ev::GossipTick { edge } => {
                 if !self.dead[edge.0 as usize] {
                     if let SimNode::Edge(e) = &mut self.nodes[edge.0 as usize] {
-                        let summary = e.summary(now);
-                        for peer in self.topology.peer_edges(edge) {
-                            out.push(Action::Send {
-                                to: peer,
-                                msg: Message::EdgeSummary(summary),
-                                reliable: true,
-                            });
+                        // Transitive gossip (DESIGN.md §Hierarchical
+                        // routing): own summary plus damped relays, to
+                        // *linked* neighbors only (a line topology has no
+                        // backhaul between non-adjacent edges), with
+                        // split horizon (never advertise a subject to
+                        // itself).
+                        let msgs = e.gossip_out(now);
+                        for peer in self.topology.linked_peer_edges(edge) {
+                            for (s, learned_from) in &msgs {
+                                // Split horizon, both directions: never
+                                // advertise a subject to itself, and never
+                                // echo an entry back to the neighbor it
+                                // was learned from (guaranteed-stale).
+                                if s.edge == peer || *learned_from == peer {
+                                    continue;
+                                }
+                                out.push(Action::Send {
+                                    to: peer,
+                                    msg: Message::EdgeSummary(*s),
+                                    reliable: true,
+                                });
+                            }
                         }
                     }
                 }
@@ -524,6 +562,15 @@ impl Engine {
                     // and the task resolves so the run moves on.
                     self.recorder.dropped(task, reason);
                     self.resolved.insert(task);
+                }
+                Action::RecordForwardHop { task } => {
+                    self.recorder.forward_hop(task);
+                }
+                Action::RecordLoopRejected { task } => {
+                    self.recorder.loop_rejected(task);
+                }
+                Action::RecordTtlExpired { task } => {
+                    self.recorder.ttl_expired(task);
                 }
             }
         }

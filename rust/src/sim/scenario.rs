@@ -17,11 +17,17 @@ use crate::util::SplitMix64;
 /// Outcome of one scenario run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// The policy that ran.
     pub policy: PolicyKind,
+    /// Aggregate outcome.
     pub summary: RunSummary,
+    /// Per-task records, creation order.
     pub records: Vec<TaskRecord>,
+    /// Virtual time when the run ended (ms).
     pub virtual_ms: f64,
+    /// Events the engine processed.
     pub events: u64,
+    /// Wall-clock duration of the run (µs).
     pub wall_us: u128,
     /// Battery state per battery-powered device at run end:
     /// (node, remaining %, consumed mWh).
@@ -29,6 +35,7 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// Frames that met their deadline (shorthand).
     pub fn met(&self) -> usize {
         self.summary.met
     }
@@ -43,6 +50,7 @@ pub struct ScenarioBuilder {
 }
 
 impl ScenarioBuilder {
+    /// Build a scenario around a config.
     pub fn new(cfg: SystemConfig) -> Self {
         Self { cfg, load_schedule: Vec::new() }
     }
@@ -54,24 +62,29 @@ impl ScenarioBuilder {
         Self::new(cfg)
     }
 
+    /// The scenario’s config.
     pub fn config(&self) -> &SystemConfig {
         &self.cfg
     }
 
+    /// Mutable access to the scenario’s config.
     pub fn config_mut(&mut self) -> &mut SystemConfig {
         &mut self.cfg
     }
 
+    /// Set the policy (builder style).
     pub fn policy(mut self, policy: PolicyKind) -> Self {
         self.cfg.policy = policy;
         self
     }
 
+    /// Set the workload (builder style).
     pub fn workload(mut self, wl: WorkloadConfig) -> Self {
         self.cfg.workload = wl;
         self
     }
 
+    /// Set the seed (builder style).
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self
@@ -229,7 +242,11 @@ impl ScenarioBuilder {
                 CellSpec::new(self.cfg.cell_warm_containers(c), &devices, link)
             })
             .collect();
-        let mut topo = Topology::multi_cell(&cells, self.cfg.federation.backhaul.link());
+        let mut topo = Topology::multi_cell_shaped(
+            &cells,
+            self.cfg.federation.backhaul.link(),
+            self.cfg.federation.topology,
+        );
         let ids = Self::device_ids(&self.cfg);
         for (i, d) in self.cfg.devices.iter().enumerate() {
             let id = ids[i];
@@ -275,7 +292,13 @@ impl ScenarioBuilder {
                 cfg.policy.build(edge_seed),
                 topo.clone(),
                 cfg.max_staleness_ms,
-            );
+            )
+            // Hierarchical routing knobs, shared with the live driver —
+            // one derivation, two drivers (DESIGN.md §Hierarchical
+            // routing). The defaults (1 hop, unit weights) reproduce the
+            // classic single-hop federation.
+            .with_max_forward_hops(cfg.federation.max_forward_hops)
+            .with_app_weights(cfg.app_weights());
             if churn_on {
                 edge_node = edge_node.with_detector(cfg.churn.detector());
             }
@@ -368,9 +391,16 @@ impl ScenarioBuilder {
         let start = std::time::Instant::now();
         let mut eng = self.build();
         let events = eng.run();
+        // Pipeline cache counters ride in the summary for the perf
+        // dashboards (ROADMAP PR-4 follow-up): deterministic in virtual
+        // mode, so seeded-replay comparisons cover them too.
+        let (snapshot_rebuilds, snapshot_reuses) = eng.snapshot_counters();
+        let mut summary = eng.recorder.summarize();
+        summary.snapshot_rebuilds = snapshot_rebuilds;
+        summary.snapshot_reuses = snapshot_reuses;
         RunReport {
             policy: self.cfg.policy,
-            summary: eng.recorder.summarize(),
+            summary,
             records: eng.recorder.records(),
             virtual_ms: eng.now_ms(),
             events,

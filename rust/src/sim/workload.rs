@@ -21,6 +21,7 @@ pub enum ArrivalPattern {
 }
 
 impl ArrivalPattern {
+    /// Parse a config spelling (`uniform` | `poisson` | `bursty:N`).
     pub fn parse(s: &str) -> Option<ArrivalPattern> {
         match s {
             "uniform" => Some(ArrivalPattern::Uniform),
@@ -52,6 +53,7 @@ pub struct ImageStream {
 }
 
 impl ImageStream {
+    /// Build a stream generator for `origin` under `cfg`.
     pub fn new(cfg: WorkloadConfig, origin: NodeId, rng: SplitMix64) -> Self {
         Self {
             cfg,
@@ -96,6 +98,7 @@ impl ImageStream {
         self
     }
 
+    /// Frames not yet generated.
     pub fn remaining(&self) -> u32 {
         self.cfg.n_images - self.next_seq as u32
     }

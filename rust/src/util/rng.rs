@@ -11,6 +11,7 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed a generator (same seed ⇒ same sequence).
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }

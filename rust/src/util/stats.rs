@@ -3,13 +3,21 @@
 /// Summary statistics of a sample set (milliseconds, typically).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Number of samples aggregated.
     pub count: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (50th percentile).
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 

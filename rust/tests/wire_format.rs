@@ -4,7 +4,7 @@
 //! frame must yield a decode error, never a panic) and a legacy-decode
 //! proof that pre-registry frames decode as the default app.
 
-use edge_dds::core::message::{EdgeSummary, ProfileUpdate, UserRequest};
+use edge_dds::core::message::{EdgeSummary, ForwardRoute, ProfileUpdate, UserRequest};
 use edge_dds::core::wire::{decode, encode, read_frame};
 use edge_dds::core::{AppId, Constraint, ImageMeta, Message, NodeId, PrivacyClass, TaskId};
 
@@ -92,11 +92,21 @@ fn all_messages() -> Vec<Message> {
         // pinned base via app_image).
         Message::Image(app_image(100, PrivacyClass::DeviceLocal)),
         Message::Image(app_image(101, PrivacyClass::CellLocal)),
-        // 0x08
-        Message::Forward { img: sample_image(12), from_edge: NodeId(0) },
+        // 0x08 (legacy/default route — the versioned routing section has
+        // its own test: a strict prefix of a routed frame is *valid by
+        // design*, so it cannot join the every-truncation-fails sweep).
+        Message::Forward {
+            img: sample_image(12),
+            from_edge: NodeId(0),
+            route: ForwardRoute::default(),
+        },
         // 0x08 with descriptor (open + non-default app/priority).
-        Message::Forward { img: app_image(102, PrivacyClass::Open), from_edge: NodeId(0) },
-        // 0x09
+        Message::Forward {
+            img: app_image(102, PrivacyClass::Open),
+            from_edge: NodeId(0),
+            route: ForwardRoute::default(),
+        },
+        // 0x09 (direct summary — same reasoning as 0x08).
         Message::EdgeSummary(EdgeSummary {
             edge: NodeId(3),
             busy_containers: 2,
@@ -105,6 +115,8 @@ fn all_messages() -> Vec<Message> {
             cpu_load_pct: 50.0,
             device_idle_containers: 5,
             sent_ms: 123.0,
+            hops: 0,
+            via: NodeId(3),
         }),
         // 0x0A
         Message::Ping { from: NodeId(0), sent_ms: 4_250.5 },
@@ -235,6 +247,60 @@ fn legacy_pre_registry_frame_decodes_as_default_app() {
     };
     assert_eq!(img.constraint.pinned_node, Some(NodeId(3)));
     assert!(img.constraint.is_default_descriptor());
+}
+
+#[test]
+fn versioned_routing_sections_roundtrip_and_degrade_to_legacy() {
+    // The hierarchical-routing sections (Forward route, EdgeSummary
+    // relay) are appended behind version bytes. Three compat rules
+    // (DESIGN.md §Wire format): (1) versioned frames roundtrip; (2) a
+    // frame truncated exactly at the legacy boundary IS the legacy frame
+    // — it decodes with the default route / direct relay; (3) any other
+    // truncation inside the section is an error, never a panic.
+    let routed = Message::Forward {
+        img: sample_image(40),
+        from_edge: NodeId(3),
+        route: ForwardRoute { ttl: 2, visited: vec![NodeId(0), NodeId(3)] },
+    };
+    let relayed = Message::EdgeSummary(EdgeSummary {
+        edge: NodeId(6),
+        busy_containers: 1,
+        warm_containers: 4,
+        queued_images: 0,
+        cpu_load_pct: 12.5,
+        device_idle_containers: 3,
+        sent_ms: 99.0,
+        hops: 2,
+        via: NodeId(3),
+    });
+    for (msg, section_len) in [(&routed, 1 + 1 + 1 + 2 * 4), (&relayed, 1 + 1 + 4)] {
+        let mut buf = Vec::new();
+        encode(msg, &mut buf);
+        assert_eq!(decode(&buf).expect("versioned roundtrip"), *msg);
+        let boundary = buf.len() - section_len;
+        // Rule 2: the legacy boundary decodes with default routing.
+        let mut legacy = buf[..boundary].to_vec();
+        let body_len = (legacy.len() - 5) as u32;
+        legacy[1..5].copy_from_slice(&body_len.to_le_bytes());
+        match decode(&legacy).expect("legacy boundary must decode") {
+            Message::Forward { route, .. } => assert_eq!(route, ForwardRoute::default()),
+            Message::EdgeSummary(s) => {
+                assert_eq!(s.hops, 0);
+                assert_eq!(s.via, s.edge);
+            }
+            other => panic!("unexpected variant {other:?}"),
+        }
+        // Rule 3: every cut strictly inside the section is an error.
+        for cut in boundary + 1..buf.len() {
+            let mut bad = buf[..cut].to_vec();
+            let body_len = (bad.len() - 5) as u32;
+            bad[1..5].copy_from_slice(&body_len.to_le_bytes());
+            assert!(
+                decode(&bad).is_err(),
+                "cut at {cut} inside the routing section must fail"
+            );
+        }
+    }
 }
 
 #[test]
