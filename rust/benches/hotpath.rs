@@ -1,12 +1,14 @@
 //! Bench target: L3 hot paths — scheduler decision latency (with and
 //! without candidate-snapshot reuse), container-pool operations, predictor
-//! evaluation, wire codec, and whole-engine event throughput. These are
-//! the §Perf numbers in EXPERIMENTS.md.
+//! evaluation, wire codec (owned decode vs borrowed view), transport
+//! batching, and whole-engine event throughput. These are the §Perf
+//! numbers in EXPERIMENTS.md.
 //!
 //! Besides the console report, the run writes a machine-readable summary
-//! (decide/dispatch ns/op) to `$BENCH_JSON` (default `BENCH_4.json`) so
+//! (decide/dispatch ns/op) to `$BENCH_JSON` (default `BENCH_6.json`) so
 //! the perf trajectory is recorded across PRs; CI uploads it as an
-//! artifact.
+//! artifact and `scripts/bench_check` gates the decode-path numbers
+//! against the committed baseline.
 //!
 //! Run: `cargo bench --bench hotpath`
 
@@ -258,6 +260,90 @@ fn main() {
     r.print_throughput(CODEC_BATCH as f64, "roundtrips");
     json.push((r.clone(), Some(per_op_ns(&r, CODEC_BATCH as f64))));
 
+    // The two decode surfaces measured separately (DESIGN.md §9). The
+    // receive hot path is a *forwarded* frame carrying a visited path —
+    // the owned decode allocates a Vec per frame there, the borrowed view
+    // allocates nothing. `scripts/bench_check` gates the decode numbers.
+    let fwd = Message::Forward {
+        img: img(42),
+        from_edge: NodeId(3),
+        route: edge_dds::core::message::ForwardRoute {
+            ttl: 3,
+            visited: vec![NodeId(0), NodeId(3), NodeId(7), NodeId(9)],
+        },
+    };
+    let mut fwd_buf = Vec::with_capacity(256);
+    wire::encode(&fwd, &mut fwd_buf);
+    let r = bench("encode x10k", 3, 30, || {
+        for _ in 0..CODEC_BATCH {
+            black_box(wire::encode(black_box(&fwd), &mut buf));
+        }
+    });
+    r.print_throughput(CODEC_BATCH as f64, "encodes");
+    json.push((r.clone(), Some(per_op_ns(&r, CODEC_BATCH as f64))));
+    let r = bench("decode(owned, forward+path) x10k", 3, 30, || {
+        for _ in 0..CODEC_BATCH {
+            black_box(wire::decode(black_box(&fwd_buf)).unwrap());
+        }
+    });
+    r.print_throughput(CODEC_BATCH as f64, "decodes");
+    json.push((r.clone(), Some(per_op_ns(&r, CODEC_BATCH as f64))));
+    let r = bench("view(borrowed, forward+path) x10k", 3, 30, || {
+        for _ in 0..CODEC_BATCH {
+            // Inspect the path in place — what the edge receive loop does
+            // for loop rejection — without materialising the Vec.
+            let v = wire::view(black_box(&fwd_buf)).unwrap();
+            if let wire::MessageView::Forward { visited, .. } = &v {
+                black_box(visited.contains(NodeId(5)));
+            }
+            black_box(v);
+        }
+    });
+    r.print_throughput(CODEC_BATCH as f64, "views");
+    json.push((r.clone(), Some(per_op_ns(&r, CODEC_BATCH as f64))));
+
+    section("transport: single sends vs batched backhaul");
+    // A drain-only peer on localhost; the sender pushes 1k small frames
+    // per iteration either as 1k individual sends (one write syscall
+    // each) or as one coalesced batch (flushes at BATCH_FLUSH_BYTES).
+    const SEND_BATCH: u32 = 1_000;
+    let pool = edge_dds::net::BufPool::new();
+    let server = edge_dds::net::transport::serve_pooled("127.0.0.1:0", pool.clone(), |mut conn| {
+        while conn.recv_frame().is_ok() {}
+    })
+    .expect("bench sink server");
+    let mut conn = edge_dds::net::transport::FramedConn::connect_pooled(server.local_addr, &pool)
+        .expect("bench sender");
+    let summaries: Vec<Message> = (0..SEND_BATCH)
+        .map(|i| {
+            Message::EdgeSummary(edge_dds::core::message::EdgeSummary {
+                edge: NodeId(i % 7),
+                busy_containers: i % 3,
+                warm_containers: 4,
+                queued_images: i % 5,
+                cpu_load_pct: 12.5,
+                device_idle_containers: 3,
+                sent_ms: i as f64,
+                hops: 0,
+                via: NodeId(i % 7),
+            })
+        })
+        .collect();
+    let r = bench("send single x1k msgs", 3, 30, || {
+        for m in &summaries {
+            conn.send(m).expect("single send");
+        }
+    });
+    r.print_throughput(SEND_BATCH as f64, "msgs");
+    json.push((r.clone(), Some(per_op_ns(&r, SEND_BATCH as f64))));
+    let r = bench("send_batch x1k msgs", 3, 30, || {
+        conn.send_batch(summaries.iter()).expect("batched send");
+    });
+    r.print_throughput(SEND_BATCH as f64, "msgs");
+    json.push((r.clone(), Some(per_op_ns(&r, SEND_BATCH as f64))));
+    drop(conn);
+    server.stop();
+
     section("whole-engine event throughput");
     for (n, interval) in [(1_000u32, 50.0), (1_000, 100.0)] {
         let builder = ScenarioBuilder::paper_testbed(PolicyKind::Dds).workload(WorkloadConfig {
@@ -278,7 +364,7 @@ fn main() {
         json.push((r.clone(), Some(per_op_ns(&r, events))));
     }
 
-    let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_4.json".to_string());
+    let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_6.json".to_string());
     match write_bench_json(&out, "hotpath", &json) {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => eprintln!("\nfailed to write {out}: {e}"),

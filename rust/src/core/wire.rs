@@ -6,6 +6,13 @@
 //! different byte types"). Bodies are fixed-layout little-endian — no serde
 //! in the offline crate set, and a hand-rolled codec keeps the live hot
 //! path allocation-free on the encode side (caller-provided buffer).
+//!
+//! Decoding has two surfaces over the same parser: [`view`] yields a
+//! borrowed [`MessageView`] with zero heap allocation (the receive hot
+//! path), and [`decode`] materializes the owned [`Message`]
+//! (`view(..)?.to_owned()` — the compatibility surface). Batched sends are
+//! N independent frames back-to-back on the stream: there is no batch
+//! header, so receivers need no batching awareness (DESIGN.md §9).
 
 use anyhow::{bail, Context, Result};
 
@@ -34,6 +41,15 @@ const CF_KNOWN: u8 = CF_PINNED | CF_DESCRIPTOR;
 /// Encode `msg` into `buf` (cleared first). Returns the frame length.
 pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
     buf.clear();
+    encode_append(msg, buf)
+}
+
+/// Encode `msg` *appended* to `buf` — the batching primitive: N appended
+/// frames are exactly N independent legacy frames back-to-back, so a
+/// receiver peels them with the ordinary per-frame reader (DESIGN.md §9).
+/// Returns the appended frame's length.
+pub fn encode_append(msg: &Message, buf: &mut Vec<u8>) -> usize {
+    let start = buf.len();
     buf.push(msg.tag());
     buf.extend_from_slice(&[0u8; 4]); // length backpatched below
     match msg {
@@ -108,13 +124,223 @@ pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
             put_f64(buf, *sent_ms);
         }
     }
-    let body_len = (buf.len() - 5) as u32;
-    buf[1..5].copy_from_slice(&body_len.to_le_bytes());
-    buf.len()
+    let body_len = (buf.len() - start - 5) as u32;
+    buf[start + 1..start + 5].copy_from_slice(&body_len.to_le_bytes());
+    buf.len() - start
 }
 
-/// Decode one frame previously produced by [`encode`].
-pub fn decode(frame: &[u8]) -> Result<Message> {
+/// Number of bytes [`encode`] will produce for `msg` — header included —
+/// without touching a buffer. Used by the gossip byte-budget meter and the
+/// batch flush threshold; a test pins it to `encode(..).len()` for every
+/// variant and section combination.
+pub fn encoded_len(msg: &Message) -> usize {
+    let constraint_len = |c: &Constraint| {
+        8 + 1 // deadline + flags
+            + if c.pinned_node.is_some() { 4 } else { 0 }
+            + if c.is_default_descriptor() { 0 } else { 4 }
+    };
+    let user_len = |r: &UserRequest| 4 + 8 + 8 + constraint_len(&r.constraint) + 4 + 8;
+    let image_len = |m: &ImageMeta| 8 + 4 + 8 + 4 + 8 + constraint_len(&m.constraint) + 8;
+    let body = match msg {
+        Message::User(r) => user_len(r),
+        Message::Activate { request, .. } => user_len(request) + 4,
+        Message::Image(m) => image_len(m),
+        Message::Result { .. } => 8 + 4 + 4 + 4 + 8,
+        Message::Profile(p) => {
+            4 + 4 + 4 + 4 + 8 + 1 + if p.battery_pct.is_some() { 8 } else { 0 } + 8
+        }
+        Message::Join { .. } => 4 + 1 + 4,
+        Message::JoinAck { .. } => 4,
+        Message::Forward { img, route, .. } => {
+            image_len(img)
+                + 4
+                + if route.ttl != 0 || !route.visited.is_empty() {
+                    1 + 1 + 1 + 4 * route.visited.len().min(u8::MAX as usize)
+                } else {
+                    0
+                }
+        }
+        Message::EdgeSummary(s) => {
+            20 + 16 + if s.hops != 0 || s.via != s.edge { 1 + 1 + 4 } else { 0 }
+        }
+        Message::Ping { .. } => 4 + 8,
+    };
+    5 + body
+}
+
+/// Borrowed view of one frame's `visited` routing path: the raw
+/// little-endian `u32` ids, left in place. Loop rejection only needs
+/// `contains`, so the hot path never materializes a `Vec<NodeId>`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VisitedView<'a>(&'a [u8]);
+
+impl<'a> VisitedView<'a> {
+    /// Number of hops recorded on the path.
+    pub fn len(&self) -> usize {
+        self.0.len() / 4
+    }
+    /// True when no hop has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+    /// Iterate the path without allocating.
+    pub fn iter(&self) -> impl Iterator<Item = NodeId> + 'a {
+        self.0.chunks_exact(4).map(|c| NodeId(u32::from_le_bytes(c.try_into().unwrap())))
+    }
+    /// Loop check: has `node` already been visited?
+    pub fn contains(&self, node: NodeId) -> bool {
+        self.iter().any(|n| n == node)
+    }
+    /// Materialize the owned path (the only allocation in `to_owned`).
+    pub fn to_vec(&self) -> Vec<NodeId> {
+        self.iter().collect()
+    }
+}
+
+/// Borrowed decode of one frame: every field the owned [`Message`] carries,
+/// parsed and validated against `&[u8]` without heap allocation. All
+/// variants except `Forward` are plain-old-data, so they hold the values
+/// directly; `Forward` keeps its routing path borrowed ([`VisitedView`]).
+///
+/// This is the *single* parser — [`decode`] is `view(..)?.to_owned()` — so
+/// borrowed/owned equivalence holds by construction and is additionally
+/// pinned by the twin tests in `tests/wire_format.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MessageView<'a> {
+    /// Tag 0x01 — see [`Message::User`].
+    User(UserRequest),
+    /// Tag 0x02 — see [`Message::Activate`].
+    Activate {
+        /// The request being activated.
+        request: UserRequest,
+        /// Node awaiting the ack.
+        reply_to: NodeId,
+    },
+    /// Tag 0x03 — see [`Message::Image`].
+    Image(ImageMeta),
+    /// Tag 0x04 — see [`Message::Result`].
+    Result {
+        /// Task the result belongs to.
+        task: TaskId,
+        /// Node that ran the detection.
+        processed_by: NodeId,
+        /// Number of detections.
+        detections: u32,
+        /// Best detection score.
+        max_score: f32,
+        /// Processing time (ms).
+        process_ms: f64,
+    },
+    /// Tag 0x05 — see [`Message::Profile`].
+    Profile(ProfileUpdate),
+    /// Tag 0x06 — see [`Message::Join`].
+    Join {
+        /// Joining node.
+        node: NodeId,
+        /// Hardware class tag.
+        class_tag: u8,
+        /// Warm containers the joiner brings.
+        warm_containers: u32,
+    },
+    /// Tag 0x07 — see [`Message::JoinAck`].
+    JoinAck {
+        /// Id the coordinator assigned.
+        assigned: NodeId,
+    },
+    /// Tag 0x08 — see [`Message::Forward`]; the routing path stays
+    /// borrowed so the forward hot path inspects it without allocating.
+    Forward {
+        /// The forwarded frame's metadata.
+        img: ImageMeta,
+        /// Edge that forwarded it.
+        from_edge: NodeId,
+        /// Remaining hop budget.
+        ttl: u8,
+        /// Borrowed visited path (loop rejection reads this in place).
+        visited: VisitedView<'a>,
+    },
+    /// Tag 0x09 — see [`Message::EdgeSummary`].
+    EdgeSummary(EdgeSummary),
+    /// Tag 0x0A — see [`Message::Ping`].
+    Ping {
+        /// Sender.
+        from: NodeId,
+        /// Send time (ms).
+        sent_ms: f64,
+    },
+}
+
+impl MessageView<'_> {
+    /// The frame's tag byte (same mapping as [`Message::tag`]).
+    pub fn tag(&self) -> u8 {
+        match self {
+            MessageView::User(_) => 0x01,
+            MessageView::Activate { .. } => 0x02,
+            MessageView::Image(_) => 0x03,
+            MessageView::Result { .. } => 0x04,
+            MessageView::Profile(_) => 0x05,
+            MessageView::Join { .. } => 0x06,
+            MessageView::JoinAck { .. } => 0x07,
+            MessageView::Forward { .. } => 0x08,
+            MessageView::EdgeSummary(_) => 0x09,
+            MessageView::Ping { .. } => 0x0A,
+        }
+    }
+
+    /// The task the frame is about, when it is about one — the dispatch
+    /// key the server/forward hot paths peek at before deciding whether
+    /// the owned message is needed at all.
+    pub fn task_id(&self) -> Option<TaskId> {
+        match self {
+            MessageView::Image(m) => Some(m.task),
+            MessageView::Forward { img, .. } => Some(img.task),
+            MessageView::Result { task, .. } => Some(*task),
+            _ => None,
+        }
+    }
+
+    /// Materialize the owned [`Message`]. Allocation-free for every
+    /// variant except `Forward` with a non-empty visited path.
+    pub fn to_owned(&self) -> Message {
+        match self {
+            MessageView::User(r) => Message::User(r.clone()),
+            MessageView::Activate { request, reply_to } => {
+                Message::Activate { request: request.clone(), reply_to: *reply_to }
+            }
+            MessageView::Image(m) => Message::Image(*m),
+            MessageView::Result { task, processed_by, detections, max_score, process_ms } => {
+                Message::Result {
+                    task: *task,
+                    processed_by: *processed_by,
+                    detections: *detections,
+                    max_score: *max_score,
+                    process_ms: *process_ms,
+                }
+            }
+            MessageView::Profile(p) => Message::Profile(*p),
+            MessageView::Join { node, class_tag, warm_containers } => Message::Join {
+                node: *node,
+                class_tag: *class_tag,
+                warm_containers: *warm_containers,
+            },
+            MessageView::JoinAck { assigned } => Message::JoinAck { assigned: *assigned },
+            MessageView::Forward { img, from_edge, ttl, visited } => Message::Forward {
+                img: *img,
+                from_edge: *from_edge,
+                route: ForwardRoute { ttl: *ttl, visited: visited.to_vec() },
+            },
+            MessageView::EdgeSummary(s) => Message::EdgeSummary(*s),
+            MessageView::Ping { from, sent_ms } => {
+                Message::Ping { from: *from, sent_ms: *sent_ms }
+            }
+        }
+    }
+}
+
+/// Borrowed decode of one frame previously produced by [`encode`]: full
+/// validation (header length, sections, trailing bytes), zero heap
+/// allocation. This is the single wire parser; [`decode`] delegates here.
+pub fn view(frame: &[u8]) -> Result<MessageView<'_>> {
     if frame.len() < 5 {
         bail!("frame too short: {} bytes", frame.len());
     }
@@ -126,14 +352,14 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
     }
     let mut r = Reader { b: body, off: 0 };
     let msg = match tag {
-        0x01 => Message::User(get_user(&mut r)?),
+        0x01 => MessageView::User(get_user(&mut r)?),
         0x02 => {
             let request = get_user(&mut r)?;
             let reply_to = NodeId(r.u32()?);
-            Message::Activate { request, reply_to }
+            MessageView::Activate { request, reply_to }
         }
-        0x03 => Message::Image(get_image(&mut r)?),
-        0x04 => Message::Result {
+        0x03 => MessageView::Image(get_image(&mut r)?),
+        0x04 => MessageView::Result {
             task: TaskId(r.u64()?),
             processed_by: NodeId(r.u32()?),
             detections: r.u32()?,
@@ -148,7 +374,7 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
             let cpu_load_pct = r.f64()?;
             let battery_pct = if r.u8()? == 1 { Some(r.f64()?) } else { None };
             let sent_ms = r.f64()?;
-            Message::Profile(ProfileUpdate {
+            MessageView::Profile(ProfileUpdate {
                 node,
                 busy_containers,
                 warm_containers,
@@ -158,20 +384,20 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
                 sent_ms,
             })
         }
-        0x06 => Message::Join {
+        0x06 => MessageView::Join {
             node: NodeId(r.u32()?),
             class_tag: r.u8()?,
             warm_containers: r.u32()?,
         },
-        0x07 => Message::JoinAck { assigned: NodeId(r.u32()?) },
+        0x07 => MessageView::JoinAck { assigned: NodeId(r.u32()?) },
         0x08 => {
             let img = get_image(&mut r)?;
             let from_edge = NodeId(r.u32()?);
             // Legacy decode: a pre-hierarchical frame ends here and gets
             // the default route (no further hops). Versioned frames carry
             // the routing section behind an explicit version byte.
-            let route = if r.remaining() == 0 {
-                ForwardRoute::default()
+            let (ttl, visited) = if r.remaining() == 0 {
+                (0, VisitedView(&[]))
             } else {
                 let v = r.u8()?;
                 if v != FWD_ROUTE_V1 {
@@ -179,13 +405,9 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
                 }
                 let ttl = r.u8()?;
                 let len = r.u8()? as usize;
-                let mut visited = Vec::with_capacity(len);
-                for _ in 0..len {
-                    visited.push(NodeId(r.u32()?));
-                }
-                ForwardRoute { ttl, visited }
+                (ttl, VisitedView(r.take(len * 4)?))
             };
-            Message::Forward { img, from_edge, route }
+            MessageView::Forward { img, from_edge, ttl, visited }
         }
         0x09 => {
             let edge = NodeId(r.u32()?);
@@ -205,7 +427,7 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
                 }
                 (r.u8()?, NodeId(r.u32()?))
             };
-            Message::EdgeSummary(EdgeSummary {
+            MessageView::EdgeSummary(EdgeSummary {
                 edge,
                 busy_containers,
                 warm_containers,
@@ -217,7 +439,7 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
                 via,
             })
         }
-        0x0A => Message::Ping { from: NodeId(r.u32()?), sent_ms: r.f64()? },
+        0x0A => MessageView::Ping { from: NodeId(r.u32()?), sent_ms: r.f64()? },
         t => bail!("unknown tag byte 0x{t:02x}"),
     };
     if r.off != body.len() {
@@ -226,18 +448,37 @@ pub fn decode(frame: &[u8]) -> Result<Message> {
     Ok(msg)
 }
 
+/// Decode one frame previously produced by [`encode`] into an owned
+/// [`Message`] — the compatibility surface over [`view`].
+pub fn decode(frame: &[u8]) -> Result<Message> {
+    Ok(view(frame)?.to_owned())
+}
+
 /// Read one length-prefixed frame from a blocking reader (live mode).
+/// Allocates a fresh buffer per frame — the steady-state receive paths use
+/// [`read_frame_into`] with a pooled/reused buffer instead.
 pub fn read_frame(stream: &mut impl std::io::Read) -> Result<Vec<u8>> {
+    let mut frame = Vec::new();
+    read_frame_into(stream, &mut frame)?;
+    Ok(frame)
+}
+
+/// Read one length-prefixed frame into `frame` (cleared first), reusing its
+/// capacity. Returns the frame length. After warm-up a connection's buffer
+/// has grown to its workload's largest frame and reads stop allocating —
+/// the receive-path half of the zero-allocation steady state.
+pub fn read_frame_into(stream: &mut impl std::io::Read, frame: &mut Vec<u8>) -> Result<usize> {
     let mut head = [0u8; 5];
     stream.read_exact(&mut head).context("reading frame header")?;
     let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
     if len > 64 << 20 {
         bail!("frame body {} bytes exceeds 64 MiB cap", len);
     }
-    let mut frame = vec![0u8; 5 + len];
+    frame.clear();
+    frame.resize(5 + len, 0);
     frame[..5].copy_from_slice(&head);
     stream.read_exact(&mut frame[5..]).context("reading frame body")?;
-    Ok(frame)
+    Ok(frame.len())
 }
 
 // ---- body field helpers -------------------------------------------------
@@ -781,5 +1022,137 @@ mod tests {
         let frame = read_frame(&mut cursor).unwrap();
         assert_eq!(frame, buf);
         assert_eq!(decode(&frame).unwrap(), Message::JoinAck { assigned: NodeId(9) });
+    }
+
+    #[test]
+    fn encode_append_is_n_independent_frames_back_to_back() {
+        // The batch framing contract: appending is byte-identical to
+        // concatenating individually encoded frames, and a per-frame
+        // reader peels them without any batching awareness.
+        let msgs = [
+            Message::JoinAck { assigned: NodeId(1) },
+            Message::Ping { from: NodeId(2), sent_ms: 10.0 },
+            Message::Result {
+                task: TaskId(3),
+                processed_by: NodeId(4),
+                detections: 1,
+                max_score: 0.5,
+                process_ms: 12.0,
+            },
+        ];
+        let mut batch = Vec::new();
+        let mut concat = Vec::new();
+        for m in &msgs {
+            let n = encode_append(m, &mut batch);
+            assert_eq!(n, encoded_len(m));
+            let mut one = Vec::new();
+            encode(m, &mut one);
+            concat.extend_from_slice(&one);
+        }
+        assert_eq!(batch, concat);
+        let mut cursor = std::io::Cursor::new(batch);
+        for m in &msgs {
+            let frame = read_frame(&mut cursor).unwrap();
+            assert_eq!(&decode(&frame).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn read_frame_into_reuses_capacity() {
+        let mut buf = Vec::new();
+        encode(&Message::Ping { from: NodeId(2), sent_ms: 7.5 }, &mut buf);
+        let mut frame = Vec::with_capacity(256);
+        let cap = frame.capacity();
+        for _ in 0..3 {
+            let mut cursor = std::io::Cursor::new(buf.clone());
+            let n = read_frame_into(&mut cursor, &mut frame).unwrap();
+            assert_eq!(n, buf.len());
+            assert_eq!(frame, buf);
+            assert_eq!(frame.capacity(), cap, "warm reads must not reallocate");
+        }
+    }
+
+    #[test]
+    fn view_matches_decode_and_borrows_the_path() {
+        let msg = Message::Forward {
+            img: ImageMeta {
+                task: TaskId(77),
+                origin: NodeId(4),
+                size_kb: 29.0,
+                side_px: 64,
+                created_ms: 12.5,
+                constraint: Constraint::deadline(2_000.0),
+                seq: 77,
+            },
+            from_edge: NodeId(3),
+            route: ForwardRoute { ttl: 2, visited: vec![NodeId(0), NodeId(3)] },
+        };
+        let mut buf = Vec::new();
+        encode(&msg, &mut buf);
+        let v = view(&buf).expect("view");
+        assert_eq!(v.tag(), 0x08);
+        assert_eq!(v.task_id(), Some(TaskId(77)));
+        match &v {
+            MessageView::Forward { ttl, visited, .. } => {
+                assert_eq!(*ttl, 2);
+                assert_eq!(visited.len(), 2);
+                assert!(visited.contains(NodeId(3)));
+                assert!(!visited.contains(NodeId(9)));
+                assert_eq!(visited.to_vec(), vec![NodeId(0), NodeId(3)]);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert_eq!(v.to_owned(), msg);
+        assert_eq!(decode(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn encoded_len_matches_encode_for_section_combinations() {
+        // The analytic length must track the real encoder across every
+        // optional-section combination (pinned/descriptor/route/relay).
+        let mut msgs = vec![
+            Message::JoinAck { assigned: NodeId(1) },
+            Message::Profile(ProfileUpdate {
+                node: NodeId(2),
+                busy_containers: 1,
+                warm_containers: 3,
+                queued_images: 5,
+                cpu_load_pct: 42.5,
+                battery_pct: None,
+                sent_ms: 2000.0,
+            }),
+        ];
+        let img = |c: Constraint| ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: c,
+            seq: 1,
+        };
+        msgs.push(Message::Image(img(Constraint::deadline(1_000.0))));
+        msgs.push(Message::Image(img(Constraint::pinned(1_000.0, NodeId(2)))));
+        msgs.push(Message::Image(img(Constraint::for_app(
+            AppId(2),
+            1_000.0,
+            PrivacyClass::CellLocal,
+            3,
+        ))));
+        msgs.push(Message::Forward {
+            img: img(Constraint::deadline(1_000.0)),
+            from_edge: NodeId(0),
+            route: ForwardRoute::default(),
+        });
+        msgs.push(Message::Forward {
+            img: img(Constraint::deadline(1_000.0)),
+            from_edge: NodeId(0),
+            route: ForwardRoute { ttl: 1, visited: vec![NodeId(0), NodeId(3)] },
+        });
+        for msg in msgs {
+            let mut buf = Vec::new();
+            let n = encode(&msg, &mut buf);
+            assert_eq!(encoded_len(&msg), n, "length mismatch for {msg:?}");
+        }
     }
 }

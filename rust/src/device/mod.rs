@@ -42,10 +42,12 @@ pub enum Action {
     /// Resolves the task as `Dropped` so the run does not wait on it; the
     /// reason lands in the task record (DESIGN.md §3).
     RecordDropped { task: TaskId, reason: DropReason },
-    /// Recorder hook: the task crossed one backhaul hop (a `Forward`
-    /// send, initial or relayed — hierarchical routing, DESIGN.md
-    /// §Hierarchical routing). Sums into `RunSummary::forward_hops`.
-    RecordForwardHop { task: TaskId },
+    /// Recorder hook: the task crossed one backhaul hop at `at_ms` (a
+    /// `Forward` send, initial or relayed — hierarchical routing,
+    /// DESIGN.md §Hierarchical routing). Sums into
+    /// `RunSummary::forward_hops`; the instant yields the per-hop wait
+    /// (`TaskRecord::hop_ms`).
+    RecordForwardHop { task: TaskId, at_ms: f64 },
     /// Recorder hook: a `Forward` arrived at an edge already on its
     /// visited path — the loop was rejected and the frame scheduled
     /// locally. Structurally zero under sender-side path filtering; the

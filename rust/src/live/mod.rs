@@ -28,10 +28,11 @@ use anyhow::{Context, Result};
 
 use crate::config::{ChurnEvent, ChurnKind, ChurnTarget, SystemConfig};
 use crate::container::ContainerPool;
-use crate::core::{ImageMeta, Message, NodeClass, NodeId, TaskId};
+use crate::core::{wire, ImageMeta, Message, NodeClass, NodeId, TaskId};
 use crate::device::{Action, DeviceNode};
 use crate::metrics::{Recorder, RunSummary};
-use crate::net::transport::{serve, FramedConn, Server};
+use crate::net::transport::{serve_pooled, FramedConn, Server};
+use crate::net::BufPool;
 use crate::profile::{profile_for, Predictor};
 use crate::runtime::RuntimeService;
 use crate::server::EdgeNode;
@@ -130,6 +131,10 @@ pub struct LiveCluster {
     /// The cell edge state machines — kept so [`LiveCluster::wait`] can
     /// surface the pipeline's snapshot-cache counters in the summary.
     edge_nodes: Vec<Arc<Mutex<EdgeNode>>>,
+    /// Cluster-wide frame-buffer pool shared by every connection (accept
+    /// loops, backhaul dialers, device dialers); its hit/miss counters are
+    /// surfaced in the run summary.
+    pool: Arc<BufPool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -185,8 +190,8 @@ fn apply_edge_action(
                 recorder.resolved.fetch_add(1, Ordering::SeqCst);
             }
         }
-        Action::RecordForwardHop { task } => {
-            recorder.inner.lock().unwrap().forward_hop(task);
+        Action::RecordForwardHop { task, at_ms } => {
+            recorder.inner.lock().unwrap().forward_hop(task, at_ms);
         }
         Action::RecordLoopRejected { task } => {
             recorder.inner.lock().unwrap().loop_rejected(task);
@@ -203,6 +208,11 @@ impl LiveCluster {
         let clock = Clock::start();
         let recorder = SharedRecorder::new();
         let stop = Arc::new(AtomicBool::new(false));
+        // One frame-buffer pool for the whole cluster: every accept loop,
+        // backhaul dialer, and device dialer checks its read/write buffers
+        // out of the same free lists, so steady state runs allocation-free
+        // on the receive path (DESIGN.md §9).
+        let pool = BufPool::new();
         let mut threads = Vec::new();
         let mut servers = Vec::new();
 
@@ -303,7 +313,7 @@ impl LiveCluster {
             let writers_for_conn = writers.clone();
             let clock_for_conn = clock.clone();
             let sides_for_conn = sides.clone();
-            let server = serve("127.0.0.1:0", move |mut conn| {
+            let server = serve_pooled("127.0.0.1:0", pool.clone(), move |mut conn| {
                 loop {
                     let msg = match conn.recv() {
                         Ok(m) => m,
@@ -381,7 +391,7 @@ impl LiveCluster {
                 if topo.link(handles[i].id, handles[j].id).is_none() {
                     continue;
                 }
-                let mut conn = FramedConn::connect(handles[j].addr)
+                let mut conn = FramedConn::connect_pooled(handles[j].addr, &pool)
                     .with_context(|| format!("edge {i} dialing edge {j}"))?;
                 // Register our write-half before announcing ourselves.
                 handles[i]
@@ -434,6 +444,8 @@ impl LiveCluster {
                 // re-advertisement carries knowledge further, exactly as
                 // in the simulator).
                 let peer_ids: Vec<NodeId> = topo.linked_peer_edges(handle.id).collect();
+                let edge_id = handle.id;
+                let recorder = recorder.clone();
                 let clock = clock.clone();
                 let stop = stop.clone();
                 threads.push(
@@ -461,11 +473,31 @@ impl LiveCluster {
                                 let mut ws = writers.lock().unwrap();
                                 for p in &peer_ids {
                                     let Some(conn) = ws.get_mut(p) else { continue };
-                                    for (s, learned_from) in &msgs {
-                                        if s.edge == *p || *learned_from == *p {
-                                            continue;
-                                        }
-                                        let _ = conn.send(&Message::EdgeSummary(*s));
+                                    // Coalesce this round's summaries into
+                                    // one syscall per peer: a batch is N
+                                    // independent frames back-to-back, so
+                                    // the receive loop needs no awareness
+                                    // of batching (DESIGN.md §9).
+                                    let batch: Vec<Message> = msgs
+                                        .iter()
+                                        .filter(|(s, learned_from)| {
+                                            s.edge != *p && *learned_from != *p
+                                        })
+                                        .map(|(s, _)| Message::EdgeSummary(*s))
+                                        .collect();
+                                    if batch.is_empty() {
+                                        continue;
+                                    }
+                                    let bytes: u64 = batch
+                                        .iter()
+                                        .map(|m| wire::encoded_len(m) as u64)
+                                        .sum();
+                                    if conn.send_batch(batch.iter()).is_ok() {
+                                        recorder
+                                            .inner
+                                            .lock()
+                                            .unwrap()
+                                            .gossip_bytes(edge_id, bytes);
                                     }
                                 }
                             }
@@ -540,6 +572,7 @@ impl LiveCluster {
             let recorder = recorder.clone();
             let runtime = runtime.clone();
             let stop = stop.clone();
+            let pool = pool.clone();
             let profile_period = Duration::from_secs_f64(cfg.profile_period_ms / 1e3);
             let warm = dcfg.warm_containers;
             threads.push(
@@ -548,7 +581,7 @@ impl LiveCluster {
                     .spawn(move || {
                         if let Err(e) = device_main(
                             node, id, cell_edge_addr, rx, tx, clock, recorder, runtime,
-                            stop, profile_period, warm,
+                            stop, pool, profile_period, warm,
                         ) {
                             log::error!("device {id} failed: {e:#}");
                         }
@@ -567,6 +600,7 @@ impl LiveCluster {
             servers,
             peer_conns,
             edge_nodes,
+            pool,
             threads,
         })
     }
@@ -717,6 +751,10 @@ impl LiveCluster {
             summary.snapshot_rebuilds += e.pipeline().snapshot_rebuilds;
             summary.snapshot_reuses += e.pipeline().snapshot_reuses;
         }
+        // Frame-buffer pool counters: in steady state misses stop growing,
+        // the acceptance signal for the allocation-free receive path.
+        summary.pool_hits = self.pool.hits();
+        summary.pool_misses = self.pool.misses();
         summary
     }
 
@@ -790,10 +828,12 @@ fn device_main(
     recorder: SharedRecorder,
     runtime: RuntimeService,
     stop: Arc<AtomicBool>,
+    pool: Arc<BufPool>,
     profile_period: Duration,
     warm: u32,
 ) -> Result<()> {
-    let mut conn = FramedConn::connect(edge_addr).context("device dialing edge")?;
+    let mut conn =
+        FramedConn::connect_pooled(edge_addr, &pool).context("device dialing edge")?;
     conn.send(&node.join_message())?;
 
     // Reader thread: edge → device messages.
@@ -927,8 +967,8 @@ fn device_main(
                 }
                 // Routing hooks are edge-side actions; a device never
                 // emits them, but the recorder handles them regardless.
-                Action::RecordForwardHop { task } => {
-                    recorder.inner.lock().unwrap().forward_hop(task);
+                Action::RecordForwardHop { task, at_ms } => {
+                    recorder.inner.lock().unwrap().forward_hop(task, at_ms);
                 }
                 Action::RecordLoopRejected { task } => {
                     recorder.inner.lock().unwrap().loop_rejected(task);

@@ -7,7 +7,9 @@ pub mod writer;
 pub use recorder::{Recorder, TaskRecord};
 pub use writer::{csv_line, render_per_app, write_csv, write_json_summary};
 
-use crate::core::{AppId, Verdict};
+use std::collections::BTreeMap;
+
+use crate::core::{AppId, NodeId, Verdict};
 use crate::util::Summary;
 
 /// Aggregated outcome of one application's tasks within a run (DESIGN.md
@@ -83,6 +85,11 @@ pub struct RunSummary {
     /// routing, DESIGN.md §Hierarchical routing). Equals `forwarded` in a
     /// single-hop federation; exceeds it when intermediate cells relay.
     pub forward_hops: usize,
+    /// Per-hop enqueue→forward wait summary over every backhaul hop in
+    /// the run (`TaskRecord::hop_ms` pooled across records) — the
+    /// feedback signal the future `Policy::Adaptive` work consumes.
+    /// `None` when nothing was forwarded.
+    pub hop_wait: Option<Summary>,
     /// Forward loops rejected by receiving edges — structurally zero
     /// under sender-side visited-path filtering; the counter is the proof.
     pub loops_rejected: usize,
@@ -94,6 +101,17 @@ pub struct RunSummary {
     pub snapshot_rebuilds: u64,
     /// Candidate-snapshot cache hits across every edge pipeline.
     pub snapshot_reuses: u64,
+    /// `EdgeSummary` (gossip) bytes sent per originating edge — the
+    /// byte-budget meter the city-scale work sizes gossip periods with.
+    /// Empty outside a federation (gated `gossip_bytes` JSON key).
+    pub gossip_bytes: BTreeMap<NodeId, u64>,
+    /// Frame-buffer pool checkouts served from the free list (live mode;
+    /// always 0 in virtual mode, which never touches sockets).
+    pub pool_hits: u64,
+    /// Frame-buffer pool checkouts that had to allocate (live mode). In
+    /// steady state this stops growing — the acceptance signal for the
+    /// zero-allocation receive path.
+    pub pool_misses: u64,
     /// Per-application outcome tables, AppId-sorted (a registry-less run
     /// has exactly one row, the default app).
     pub per_app: Vec<AppSummary>,

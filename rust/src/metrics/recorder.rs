@@ -8,7 +8,7 @@ use crate::util::Summary;
 use super::{AppSummary, RunSummary};
 
 /// Full lifecycle of one image task.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TaskRecord {
     /// The task this record describes.
     pub task: TaskId,
@@ -41,6 +41,12 @@ pub struct TaskRecord {
     /// 0 for in-cell work, 1 for a classic single-hop forward, ≥ 2 when
     /// intermediate cells relayed it on.
     pub hops: u32,
+    /// Per-hop enqueue→forward wait (ms), one entry per backhaul hop in
+    /// hop order: entry 0 is creation→first forward, entry k is the dwell
+    /// between forwards k−1 and k (queueing + transfer at the relaying
+    /// cell). The feedback signal a future `Policy::Adaptive` reads;
+    /// empty for never-forwarded frames. `hop_ms.len() == hops`.
+    pub hop_ms: Vec<f64>,
     /// Times this frame was *observed* outside its privacy scope — sent
     /// off-device under `device_local`, or placed/executed off-cell under
     /// `cell_local`. Structurally zero under the node-layer privacy
@@ -75,6 +81,8 @@ pub struct Recorder {
     loops_rejected: usize,
     /// Forwarded frames whose hop budget ran out at a saturated cell.
     ttl_expired: usize,
+    /// Gossip (`EdgeSummary`) bytes sent, per originating edge.
+    gossip_bytes: BTreeMap<NodeId, u64>,
 }
 
 impl Recorder {
@@ -112,6 +120,7 @@ impl Recorder {
                 process_ms: None,
                 requeues: 0,
                 hops: 0,
+                hop_ms: Vec::new(),
                 violations: 0,
                 drop_reason: None,
                 verdict: Verdict::Dropped, // until completed
@@ -120,12 +129,23 @@ impl Recorder {
     }
 
     /// The task crossed one backhaul hop (a `Forward` send, initial or
-    /// relayed — hierarchical routing). Counted even for tasks that later
-    /// drop: the hop's bandwidth was spent either way.
-    pub fn forward_hop(&mut self, task: TaskId) {
+    /// relayed — hierarchical routing) at `at_ms`. Counted even for tasks
+    /// that later drop: the hop's bandwidth was spent either way. The
+    /// instant also yields the per-hop wait (`TaskRecord::hop_ms`): time
+    /// since the previous forward, or since creation for the first hop.
+    pub fn forward_hop(&mut self, task: TaskId, at_ms: f64) {
         if let Some(r) = self.records.get_mut(&task) {
+            let prev = r.created_ms + r.hop_ms.iter().sum::<f64>();
+            r.hop_ms.push(at_ms - prev);
             r.hops += 1;
         }
+    }
+
+    /// `bytes` of `EdgeSummary` (gossip) traffic left `edge`'s backhaul
+    /// send queue. Accumulated per originating edge so city-scale runs
+    /// can budget gossip overhead (gated `gossip_bytes` JSON key).
+    pub fn gossip_bytes(&mut self, edge: NodeId, bytes: u64) {
+        *self.gossip_bytes.entry(edge).or_insert(0) += bytes;
     }
 
     /// A receiving edge found itself on a `Forward`'s visited path and
@@ -268,7 +288,7 @@ impl Recorder {
 
     /// Records in creation order.
     pub fn records(&self) -> Vec<TaskRecord> {
-        self.order.iter().filter_map(|t| self.records.get(t)).copied().collect()
+        self.order.iter().filter_map(|t| self.records.get(t)).cloned().collect()
     }
 
     /// Finalize into an aggregate summary.
@@ -300,13 +320,15 @@ impl Recorder {
             .count();
         let shed = records.iter().filter(|r| r.drop_reason == Some(DropReason::Shed)).count();
         let forward_hops = records.iter().map(|r| r.hops as usize).sum::<usize>();
+        let hop_waits: Vec<f64> =
+            records.iter().flat_map(|r| r.hop_ms.iter().copied()).collect();
 
         // Per-app tables, AppId-sorted (BTreeMap — deterministic rows).
-        // Records are Copy, so partitioning into owned vectors lets the
-        // run-level verdict counter be reused verbatim.
+        // Partitioning into owned vectors lets the run-level verdict
+        // counter be reused verbatim.
         let mut by_app: BTreeMap<AppId, Vec<TaskRecord>> = BTreeMap::new();
         for r in &records {
-            by_app.entry(r.app).or_default().push(*r);
+            by_app.entry(r.app).or_default().push(r.clone());
         }
         let per_app = by_app
             .into_iter()
@@ -344,10 +366,14 @@ impl Recorder {
             rejected,
             shed,
             forward_hops,
+            hop_wait: Summary::of(&hop_waits),
             loops_rejected: self.loops_rejected,
             ttl_expired: self.ttl_expired,
             snapshot_rebuilds: 0,
             snapshot_reuses: 0,
+            gossip_bytes: self.gossip_bytes.clone(),
+            pool_hits: 0,
+            pool_misses: 0,
             per_app,
         }
     }
@@ -495,6 +521,50 @@ mod tests {
         let s = rec.summarize();
         assert_eq!((s.rejected, s.shed, s.dropped, s.met), (1, 0, 1, 1));
         assert!(s.rejected + s.shed <= s.dropped);
+    }
+
+    #[test]
+    fn per_hop_waits_are_inter_forward_deltas() {
+        let mut rec = Recorder::new();
+        // Created at t=100; forwarded at t=150, relayed at t=275 and 300.
+        create(&mut rec, 1, 1, 29.0, 10_000.0, 100.0);
+        rec.forward_hop(TaskId(1), 150.0);
+        rec.forward_hop(TaskId(1), 275.0);
+        rec.forward_hop(TaskId(1), 300.0);
+        let r = rec.get(TaskId(1)).unwrap();
+        assert_eq!(r.hops, 3);
+        assert_eq!(r.hop_ms, vec![50.0, 125.0, 25.0]);
+        // A never-forwarded frame carries no hop waits.
+        create(&mut rec, 2, 1, 29.0, 10_000.0, 0.0);
+        assert!(rec.get(TaskId(2)).unwrap().hop_ms.is_empty());
+        // The run summary aggregates every delta across records.
+        let s = rec.summarize();
+        let hw = s.hop_wait.expect("hops were recorded");
+        assert_eq!(hw.mean, (50.0 + 125.0 + 25.0) / 3.0);
+        assert_eq!(hw.max, 125.0);
+        // An unknown task is ignored, like every other recorder event.
+        rec.forward_hop(TaskId(99), 1.0);
+    }
+
+    #[test]
+    fn hop_wait_absent_without_hops() {
+        let mut rec = Recorder::new();
+        create(&mut rec, 1, 1, 29.0, 1_000.0, 0.0);
+        assert!(rec.summarize().hop_wait.is_none());
+    }
+
+    #[test]
+    fn gossip_bytes_accumulate_per_edge() {
+        let mut rec = Recorder::new();
+        rec.gossip_bytes(NodeId(0), 41);
+        rec.gossip_bytes(NodeId(3), 100);
+        rec.gossip_bytes(NodeId(0), 9);
+        let s = rec.summarize();
+        assert_eq!(s.gossip_bytes.get(&NodeId(0)), Some(&50));
+        assert_eq!(s.gossip_bytes.get(&NodeId(3)), Some(&100));
+        assert_eq!(s.gossip_bytes.len(), 2);
+        // A gossip-free run carries an empty (gated) map.
+        assert!(Recorder::new().summarize().gossip_bytes.is_empty());
     }
 
     #[test]

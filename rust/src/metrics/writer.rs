@@ -12,7 +12,7 @@ use crate::core::{DropReason, Placement, Verdict};
 
 /// One CSV line for a task record (see [`CSV_HEADER`]).
 pub const CSV_HEADER: &str =
-    "task,app,privacy,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,requeues,hops,violations,verdict";
+    "task,app,privacy,origin,size_kb,deadline_ms,created_ms,placement,executed_on,started_ms,completed_ms,process_ms,e2e_ms,requeues,hops,hop_ms,violations,verdict";
 
 /// Render one task record as a CSV line (see [`CSV_HEADER`]).
 pub fn csv_line(r: &TaskRecord) -> String {
@@ -33,8 +33,16 @@ pub fn csv_line(r: &TaskRecord) -> String {
         (Verdict::Dropped, _) => "dropped",
     };
     let opt = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_default();
+    // Per-hop waits render semicolon-joined inside one CSV cell (empty
+    // for never-forwarded frames), keeping the file rectangular.
+    let hop_ms = r
+        .hop_ms
+        .iter()
+        .map(|d| format!("{d:.3}"))
+        .collect::<Vec<_>>()
+        .join(";");
     format!(
-        "{},{},{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{},{},{},{}",
+        "{},{},{},{},{:.1},{:.1},{:.3},{},{},{},{},{},{},{},{},{},{},{}",
         r.task.0,
         r.app.0,
         r.privacy.as_str(),
@@ -50,6 +58,7 @@ pub fn csv_line(r: &TaskRecord) -> String {
         opt(r.e2e_ms()),
         r.requeues,
         r.hops,
+        hop_ms,
         r.violations,
         verdict,
     )
@@ -106,12 +115,33 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         String::new()
     };
     // Routing counters appear only when the federation actually routed
-    // (or misrouted) something; single-cell runs serialize unchanged.
+    // (or misrouted) something; single-cell runs serialize unchanged. The
+    // per-hop wait summary rides in the same gate — it exists exactly
+    // when hops do.
     let routing = if s.forward_hops > 0 || s.loops_rejected > 0 || s.ttl_expired > 0 {
         format!(
-            r#","forward_hops":{},"loops_rejected":{},"ttl_expired":{}"#,
-            s.forward_hops, s.loops_rejected, s.ttl_expired
+            r#","forward_hops":{},"loops_rejected":{},"ttl_expired":{},"hop_wait_ms":{}"#,
+            s.forward_hops,
+            s.loops_rejected,
+            s.ttl_expired,
+            latency_json(&s.hop_wait)
         )
+    } else {
+        String::new()
+    };
+    // Gossip byte meter: one row per originating edge, NodeId-sorted
+    // (BTreeMap). Absent outside federations — legacy byte-compat.
+    let gossip = if s.gossip_bytes.is_empty() {
+        String::new()
+    } else {
+        let rows: Vec<String> =
+            s.gossip_bytes.iter().map(|(n, b)| format!(r#""{}":{}"#, n.0, b)).collect();
+        format!(r#","gossip_bytes":{{{}}}"#, rows.join(","))
+    };
+    // Buffer-pool counters exist only in live (socket) runs; virtual-mode
+    // outputs serialize unchanged.
+    let pool = if s.pool_hits > 0 || s.pool_misses > 0 {
+        format!(r#","pool_hits":{},"pool_misses":{}"#, s.pool_hits, s.pool_misses)
     } else {
         String::new()
     };
@@ -127,7 +157,7 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         String::new()
     };
     format!(
-        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{}{}{}{},"latency":{},"apps":[{}]}}"#,
+        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{}{}{}{}{}{},"latency":{},"apps":[{}]}}"#,
         name,
         s.total,
         s.met,
@@ -142,6 +172,8 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         overload,
         routing,
         snapshot,
+        gossip,
+        pool,
         latency_json(&s.latency),
         apps.join(",")
     )
@@ -208,7 +240,7 @@ mod tests {
         rec.placed(TaskId(1), Placement::Offload(NodeId(2)));
         rec.started(TaskId(1), NodeId(2), 10.0);
         rec.completed(TaskId(1), 500.0, 400.0);
-        rec.records()[0]
+        rec.records().remove(0)
     }
 
     #[test]
@@ -222,8 +254,9 @@ mod tests {
         assert_eq!(fields[7], "offload:n2");
         assert_eq!(fields[13], "0"); // requeues
         assert_eq!(fields[14], "0"); // hops
-        assert_eq!(fields[15], "0"); // violations
-        assert_eq!(fields[16], "met");
+        assert_eq!(fields[15], ""); // hop_ms: empty for unforwarded frames
+        assert_eq!(fields[16], "0"); // violations
+        assert_eq!(fields[17], "met");
     }
 
     #[test]
@@ -307,11 +340,15 @@ mod tests {
         let js = summary_json("legacy", &rec.summarize());
         assert!(!js.contains("rejected"));
         assert!(!js.contains("shed"));
-        // Routing and snapshot counters are gated the same way.
+        // Routing, snapshot, gossip, and pool counters are gated the
+        // same way.
         assert!(!js.contains("forward_hops"));
         assert!(!js.contains("loops_rejected"));
         assert!(!js.contains("ttl_expired"));
+        assert!(!js.contains("hop_wait_ms"));
         assert!(!js.contains("snapshot_rebuilds"));
+        assert!(!js.contains("gossip_bytes"));
+        assert!(!js.contains("pool_hits"));
     }
 
     #[test]
@@ -326,8 +363,8 @@ mod tests {
             constraint: Constraint::deadline(1000.0),
             seq: 1,
         });
-        rec.forward_hop(TaskId(1));
-        rec.forward_hop(TaskId(1));
+        rec.forward_hop(TaskId(1), 4.0);
+        rec.forward_hop(TaskId(1), 6.5);
         rec.ttl_expired(TaskId(1));
         rec.started(TaskId(1), NodeId(4), 10.0);
         rec.completed(TaskId(1), 500.0, 400.0);
@@ -339,12 +376,29 @@ mod tests {
         s.snapshot_reuses = 3;
         let js = summary_json("routed", &s);
         assert!(js.contains(r#""forward_hops":2,"loops_rejected":0,"ttl_expired":1"#));
+        assert!(js.contains(r#""hop_wait_ms":{"mean":3.250"#));
         assert!(js.contains(r#""snapshot_rebuilds":7,"snapshot_reuses":3"#));
-        // The CSV line carries the per-task hop count before the verdict.
+        // The CSV line carries the per-task hop count and the
+        // semicolon-joined per-hop waits before the verdict.
         let line = csv_line(&rec.records()[0]);
         let fields: Vec<&str> = line.split(',').collect();
         assert_eq!(fields[14], "2");
+        assert_eq!(fields[15], "4.000;2.500");
         assert_eq!(fields[fields.len() - 1], "met");
+    }
+
+    #[test]
+    fn gossip_and_pool_counters_serialize_when_nonzero() {
+        let mut rec = Recorder::new();
+        rec.gossip_bytes(NodeId(0), 123);
+        rec.gossip_bytes(NodeId(3), 45);
+        let mut s = rec.summarize();
+        s.pool_hits = 10;
+        s.pool_misses = 2;
+        let js = summary_json("live-fed", &s);
+        // NodeId-sorted rows, one per originating edge.
+        assert!(js.contains(r#""gossip_bytes":{"0":123,"3":45}"#));
+        assert!(js.contains(r#""pool_hits":10,"pool_misses":2"#));
     }
 
     #[test]

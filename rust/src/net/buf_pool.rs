@@ -1,0 +1,242 @@
+//! Fixed-capacity frame-buffer pool for the live hot paths.
+//!
+//! Every live connection used to allocate a fresh `Vec<u8>` per received
+//! frame (`wire::read_frame`) and per clone (`FramedConn::try_clone`). The
+//! pool replaces those with a small free-list of reusable buffers over the
+//! common frame size classes, so the steady-state receive/send paths stop
+//! touching the allocator entirely: a buffer is checked out on connection
+//! setup (or batch flush), grows once to its workload's largest frame, and
+//! returns to the free list on drop. Hit/miss counters ride into
+//! [`crate::metrics::RunSummary`] so runs can prove the steady state
+//! (`pool_misses` stops growing after warm-up).
+//!
+//! The pool is deliberately bounded: at most [`BufPool::PER_CLASS`] buffers
+//! are retained per size class, and oversize buffers (beyond the largest
+//! class) are never retained — a burst can't pin memory forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Buffer size classes (bytes), smallest first. Chosen for the workload's
+/// frame population: summaries/profiles/acks (≤ 256 B), image/forward
+/// metadata frames (≤ 1 KiB), batched flush buffers (≤ 64 KiB).
+pub const SIZE_CLASSES: [usize; 3] = [256, 4096, 65536];
+
+/// A shared, bounded free-list of frame buffers (see module docs).
+#[derive(Debug, Default)]
+pub struct BufPool {
+    /// One free-list per entry of [`SIZE_CLASSES`].
+    classes: [Mutex<Vec<Vec<u8>>>; SIZE_CLASSES.len()],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BufPool {
+    /// Maximum buffers retained per size class.
+    pub const PER_CLASS: usize = 32;
+
+    /// A fresh, empty pool behind an [`Arc`] (checkout needs the handle).
+    pub fn new() -> Arc<BufPool> {
+        Arc::new(BufPool::default())
+    }
+
+    /// Index of the smallest class that can serve `min_capacity`, or
+    /// `None` when the request exceeds the largest class.
+    fn class_for_request(min_capacity: usize) -> Option<usize> {
+        SIZE_CLASSES.iter().position(|&c| c >= min_capacity)
+    }
+
+    /// Index of the largest class a buffer of `capacity` can serve —
+    /// where a returned buffer files itself. `None` below the smallest
+    /// class (undersized buffers are not worth retaining) and above the
+    /// largest (an oversize burst must not pin memory in the pool).
+    fn class_for_return(capacity: usize) -> Option<usize> {
+        if capacity > SIZE_CLASSES[SIZE_CLASSES.len() - 1] {
+            return None;
+        }
+        SIZE_CLASSES.iter().rposition(|&c| capacity >= c)
+    }
+
+    /// Check out a cleared buffer with at least `min_capacity` bytes of
+    /// capacity. Served from the free list when possible (hit); allocated
+    /// at the class size otherwise (miss). Requests beyond the largest
+    /// class allocate exactly and are not retained on return.
+    pub fn get(self: &Arc<Self>, min_capacity: usize) -> PooledBuf {
+        let buf = match Self::class_for_request(min_capacity) {
+            Some(i) => {
+                // A buffer filed under class ≥ i serves this request; take
+                // the smallest fit so big buffers stay for big requests.
+                let reused = (i..SIZE_CLASSES.len())
+                    .find_map(|k| self.classes[k].lock().expect("pool poisoned").pop());
+                match reused {
+                    Some(b) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        b
+                    }
+                    None => {
+                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        Vec::with_capacity(SIZE_CLASSES[i])
+                    }
+                }
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(min_capacity)
+            }
+        };
+        PooledBuf { buf, pool: Some(Arc::clone(self)) }
+    }
+
+    /// Return a buffer to its free list (bounded; oversize or undersize
+    /// buffers are simply dropped).
+    fn put(&self, mut buf: Vec<u8>) {
+        if let Some(i) = Self::class_for_return(buf.capacity()) {
+            let mut list = self.classes[i].lock().expect("pool poisoned");
+            if list.len() < Self::PER_CLASS {
+                buf.clear();
+                list.push(buf);
+            }
+        }
+    }
+
+    /// Checkouts served from the free list so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts that had to allocate so far. In steady state this stops
+    /// growing: the set of live connections holds a stable buffer
+    /// population and every flush/clone reuses it.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// A buffer checked out of a [`BufPool`]; derefs to `Vec<u8>` and returns
+/// itself to the pool on drop.
+#[derive(Debug)]
+pub struct PooledBuf {
+    buf: Vec<u8>,
+    /// `None` only for [`PooledBuf::unpooled`] buffers (tests, sim paths).
+    pool: Option<Arc<BufPool>>,
+}
+
+impl PooledBuf {
+    /// A plain buffer with no backing pool — dropped, not returned. Lets
+    /// pool-agnostic code (unit tests, short-lived tools) use the same
+    /// connection types without a pool.
+    pub fn unpooled() -> PooledBuf {
+        PooledBuf { buf: Vec::new(), pool: None }
+    }
+}
+
+impl std::ops::Deref for PooledBuf {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_checkout_misses_then_hits_after_return() {
+        let pool = BufPool::new();
+        {
+            let b = pool.get(100);
+            assert!(b.capacity() >= 256, "smallest class serves small requests");
+            assert_eq!((pool.hits(), pool.misses()), (0, 1));
+        } // drop returns the buffer
+        {
+            let b = pool.get(200);
+            assert!(b.capacity() >= 200);
+            assert_eq!((pool.hits(), pool.misses()), (1, 1));
+        }
+        // Steady state: repeat checkouts never miss again.
+        for _ in 0..10 {
+            let _b = pool.get(64);
+        }
+        assert_eq!(pool.misses(), 1);
+        assert_eq!(pool.hits(), 11);
+    }
+
+    #[test]
+    fn grown_buffer_files_under_larger_class() {
+        let pool = BufPool::new();
+        {
+            let mut b = pool.get(64);
+            b.resize(SIZE_CLASSES[1], 0); // grew past its class
+        }
+        // The grown buffer now serves mid-class requests from the list.
+        let b = pool.get(SIZE_CLASSES[1]);
+        assert!(b.capacity() >= SIZE_CLASSES[1]);
+        assert_eq!(pool.hits(), 1);
+    }
+
+    #[test]
+    fn oversize_requests_allocate_exact_and_are_not_retained() {
+        let pool = BufPool::new();
+        let huge = SIZE_CLASSES[SIZE_CLASSES.len() - 1] + 1;
+        {
+            let b = pool.get(huge);
+            assert!(b.capacity() >= huge);
+        }
+        // The oversize buffer was dropped, not pooled: the next in-class
+        // request still misses.
+        let _b = pool.get(SIZE_CLASSES[2]);
+        assert_eq!(pool.hits(), 0);
+        assert_eq!(pool.misses(), 2);
+    }
+
+    #[test]
+    fn retention_is_bounded_per_class() {
+        let pool = BufPool::new();
+        let mut out = Vec::new();
+        for _ in 0..(BufPool::PER_CLASS + 8) {
+            out.push(pool.get(64));
+        }
+        drop(out); // all return at once; only PER_CLASS are kept
+        let mut held = Vec::new();
+        for _ in 0..(BufPool::PER_CLASS + 8) {
+            held.push(pool.get(64));
+        }
+        let hits_after = pool.hits();
+        assert_eq!(hits_after, BufPool::PER_CLASS as u64);
+    }
+
+    #[test]
+    fn returned_buffers_come_back_cleared() {
+        let pool = BufPool::new();
+        {
+            let mut b = pool.get(64);
+            b.extend_from_slice(b"dirty");
+        }
+        let b = pool.get(64);
+        assert!(b.is_empty(), "checked-out buffers must be cleared");
+        assert_eq!(pool.hits(), 1);
+    }
+
+    #[test]
+    fn unpooled_buffer_works_standalone() {
+        let mut b = PooledBuf::unpooled();
+        b.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(&**b, &[1, 2, 3][..]);
+        drop(b); // no pool to return to — must not panic
+    }
+}

@@ -6,9 +6,11 @@
 //! real localhost sockets ([`transport`]) speaking the [`crate::core::wire`]
 //! framing.
 
+pub mod buf_pool;
 pub mod topology;
 pub mod transport;
 
+pub use buf_pool::{BufPool, PooledBuf};
 pub use topology::{CellSpec, FederationShape, Topology};
 
 /// A point-to-point link's timing/loss model.

@@ -518,7 +518,7 @@ impl EdgeNode {
                     v.push(self.id);
                     ForwardRoute { ttl: hops_left - 1, visited: v }
                 };
-                out.push(Action::RecordForwardHop { task: img.task });
+                out.push(Action::RecordForwardHop { task: img.task, at_ms: now_ms });
                 // Backhaul is wired infrastructure: forward reliably (the
                 // access hop already carried the UDP-loss risk).
                 out.push(Action::Send {
@@ -1778,7 +1778,7 @@ mod tests {
         )));
         assert!(out
             .iter()
-            .any(|a| matches!(a, Action::RecordForwardHop { task: TaskId(5) })));
+            .any(|a| matches!(a, Action::RecordForwardHop { task: TaskId(5), .. })));
     }
 
     #[test]
@@ -1817,7 +1817,7 @@ mod tests {
         assert!(!out.iter().any(|a| matches!(a, Action::RecordPlaced { .. })));
         assert!(out
             .iter()
-            .any(|a| matches!(a, Action::RecordForwardHop { task: TaskId(9) })));
+            .any(|a| matches!(a, Action::RecordForwardHop { task: TaskId(9), .. })));
         // The hop is tracked for failure-driven requeue and result relay.
         out.clear();
         e.on_message(

@@ -442,11 +442,15 @@ impl Engine {
                                 if s.edge == peer || *learned_from == peer {
                                     continue;
                                 }
-                                out.push(Action::Send {
-                                    to: peer,
-                                    msg: Message::EdgeSummary(*s),
-                                    reliable: true,
-                                });
+                                let msg = Message::EdgeSummary(*s);
+                                // Gossip byte-budget meter: account the
+                                // frame's wire size to the sending edge
+                                // (same analytic length live mode counts).
+                                self.recorder.gossip_bytes(
+                                    edge,
+                                    crate::core::wire::encoded_len(&msg) as u64,
+                                );
+                                out.push(Action::Send { to: peer, msg, reliable: true });
                             }
                         }
                     }
@@ -563,8 +567,8 @@ impl Engine {
                     self.recorder.dropped(task, reason);
                     self.resolved.insert(task);
                 }
-                Action::RecordForwardHop { task } => {
-                    self.recorder.forward_hop(task);
+                Action::RecordForwardHop { task, at_ms } => {
+                    self.recorder.forward_hop(task, at_ms);
                 }
                 Action::RecordLoopRejected { task } => {
                     self.recorder.loop_rejected(task);

@@ -3,9 +3,13 @@
 //! descriptor — plus corrupted/truncated-frame rejection (a malformed
 //! frame must yield a decode error, never a panic) and a legacy-decode
 //! proof that pre-registry frames decode as the default app.
+//!
+//! The borrowed decode surface ([`view`], DESIGN.md §9) is held to strict
+//! parity with the owned path on the same inputs: identical messages on
+//! success, errors on exactly the same malformed frames.
 
 use edge_dds::core::message::{EdgeSummary, ForwardRoute, ProfileUpdate, UserRequest};
-use edge_dds::core::wire::{decode, encode, read_frame};
+use edge_dds::core::wire::{decode, encode, encode_append, encoded_len, read_frame, view, MessageView};
 use edge_dds::core::{AppId, Constraint, ImageMeta, Message, NodeId, PrivacyClass, TaskId};
 
 fn sample_image(task: u64) -> ImageMeta {
@@ -143,6 +147,125 @@ fn roundtrip_every_tag() {
 }
 
 #[test]
+fn view_matches_owned_decode_for_every_tag() {
+    let msgs = all_messages();
+    // Coverage guard: the parity sweep must exercise every wire tag.
+    let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
+    tags.sort_unstable();
+    tags.dedup();
+    assert_eq!(tags, (0x01..=0x0A).collect::<Vec<u8>>(), "a wire tag is untested");
+
+    let mut buf = Vec::new();
+    for msg in msgs {
+        encode(&msg, &mut buf);
+        let v = view(&buf).expect("view must accept every encodable frame");
+        assert_eq!(v.tag(), buf[0]);
+        assert_eq!(v.to_owned(), msg, "view::to_owned must equal the original");
+        assert_eq!(v.to_owned(), decode(&buf).unwrap(), "view and decode must agree");
+    }
+}
+
+#[test]
+fn view_borrows_the_visited_path_without_copying() {
+    // The only heap-backed wire field is Forward's visited path; the view
+    // must expose it straight out of the frame bytes.
+    let msg = Message::Forward {
+        img: sample_image(77),
+        from_edge: NodeId(2),
+        route: ForwardRoute { ttl: 3, visited: vec![NodeId(0), NodeId(3), NodeId(9)] },
+    };
+    let mut buf = Vec::new();
+    encode(&msg, &mut buf);
+    let MessageView::Forward { img, from_edge, ttl, visited } = view(&buf).unwrap() else {
+        panic!("not a forward view")
+    };
+    assert_eq!(img, sample_image(77));
+    assert_eq!(from_edge, NodeId(2));
+    assert_eq!(ttl, 3);
+    assert_eq!(visited.len(), 3);
+    assert!(!visited.is_empty());
+    assert!(visited.contains(NodeId(3)));
+    assert!(!visited.contains(NodeId(4)));
+    assert_eq!(
+        visited.iter().collect::<Vec<NodeId>>(),
+        vec![NodeId(0), NodeId(3), NodeId(9)]
+    );
+    assert_eq!(visited.to_vec(), vec![NodeId(0), NodeId(3), NodeId(9)]);
+}
+
+#[test]
+fn view_and_decode_reject_exactly_the_same_frames() {
+    // Parity on malformed input: for every truncation of every frame
+    // (header re-patched so the cut reaches the field readers), the
+    // borrowed and owned paths must agree — both succeed with the same
+    // message or both fail. Legacy-boundary cuts of routed/relayed frames
+    // are *valid* by design, so agreement (not failure) is the assertion.
+    let mut buf = Vec::new();
+    for msg in all_messages() {
+        encode(&msg, &mut buf);
+        for cut in 0..buf.len() {
+            let mut bad = buf[..cut].to_vec();
+            if bad.len() >= 5 {
+                let body_len = (bad.len() - 5) as u32;
+                bad[1..5].copy_from_slice(&body_len.to_le_bytes());
+            }
+            match (view(&bad), decode(&bad)) {
+                (Err(_), Err(_)) => {}
+                (Ok(v), Ok(d)) => assert_eq!(v.to_owned(), d),
+                (v, d) => panic!(
+                    "paths disagree at cut {cut} of tag 0x{:02x}: view={} decode={}",
+                    buf[0],
+                    v.is_ok(),
+                    d.is_ok()
+                ),
+            }
+        }
+        // Corruption parity: unknown tag, oversized header, trailing byte.
+        let mut bad = buf.clone();
+        bad[0] = 0xEE;
+        assert!(view(&bad).is_err() && decode(&bad).is_err());
+        let mut bad = buf.clone();
+        bad.push(0xFF);
+        let padded = (bad.len() - 5) as u32;
+        bad[1..5].copy_from_slice(&padded.to_le_bytes());
+        assert!(view(&bad).is_err() && decode(&bad).is_err());
+    }
+    assert!(view(&[]).is_err());
+    assert!(view(&[0x03, 0, 0]).is_err());
+}
+
+#[test]
+fn encoded_len_is_exact_for_every_message() {
+    let mut buf = Vec::new();
+    for msg in all_messages() {
+        let n = encode(&msg, &mut buf);
+        assert_eq!(encoded_len(&msg), n, "analytic length must match encode");
+    }
+}
+
+#[test]
+fn batched_frames_decode_individually_through_both_paths() {
+    // Batch contract (DESIGN.md §9): a batch is N independent frames
+    // back-to-back — no envelope. Peel them with the per-frame header and
+    // check view/decode parity on each.
+    let msgs = all_messages();
+    let mut batch = Vec::new();
+    for m in &msgs {
+        let n = encode_append(m, &mut batch);
+        assert_eq!(n, encoded_len(m));
+    }
+    let mut off = 0;
+    for m in &msgs {
+        let len = u32::from_le_bytes(batch[off + 1..off + 5].try_into().unwrap()) as usize;
+        let frame = &batch[off..off + 5 + len];
+        assert_eq!(&view(frame).unwrap().to_owned(), m);
+        assert_eq!(&decode(frame).unwrap(), m);
+        off += 5 + len;
+    }
+    assert_eq!(off, batch.len(), "batch must contain exactly the encoded frames");
+}
+
+#[test]
 fn every_truncation_is_an_error_not_a_panic() {
     let mut buf = Vec::new();
     for msg in all_messages() {
@@ -223,6 +346,8 @@ fn legacy_pre_registry_frame_decodes_as_default_app() {
     assert_eq!(img.constraint.privacy, PrivacyClass::Open);
     assert_eq!(img.constraint.priority, 0);
     assert!(img.constraint.is_default_descriptor());
+    // The borrowed path accepts the hand-assembled legacy layout too.
+    assert_eq!(view(&frame).expect("legacy frame must view").to_owned(), msg);
 
     let mut reencoded = Vec::new();
     encode(&msg, &mut reencoded);
@@ -247,6 +372,7 @@ fn legacy_pre_registry_frame_decodes_as_default_app() {
     };
     assert_eq!(img.constraint.pinned_node, Some(NodeId(3)));
     assert!(img.constraint.is_default_descriptor());
+    assert_eq!(view(&frame).unwrap().to_owned(), Message::Image(img));
 }
 
 #[test]
@@ -290,6 +416,11 @@ fn versioned_routing_sections_roundtrip_and_degrade_to_legacy() {
             }
             other => panic!("unexpected variant {other:?}"),
         }
+        // Both decode paths agree at the legacy boundary.
+        assert_eq!(
+            view(&legacy).expect("legacy boundary must view").to_owned(),
+            decode(&legacy).unwrap()
+        );
         // Rule 3: every cut strictly inside the section is an error.
         for cut in boundary + 1..buf.len() {
             let mut bad = buf[..cut].to_vec();
