@@ -5,7 +5,7 @@
 //! numbers in EXPERIMENTS.md.
 //!
 //! Besides the console report, the run writes a machine-readable summary
-//! (decide/dispatch ns/op) to `$BENCH_JSON` (default `BENCH_6.json`) so
+//! (decide/dispatch ns/op) to `$BENCH_JSON` (default `BENCH_7.json`) so
 //! the perf trajectory is recorded across PRs; CI uploads it as an
 //! artifact and `scripts/bench_check` gates the decode-path numbers
 //! against the committed baseline.
@@ -204,6 +204,61 @@ fn main() {
     r.print_throughput(EDGE_BATCH as f64, "decisions");
     json.push((r.clone(), Some(per_op_ns(&r, EDGE_BATCH as f64))));
 
+    // Incremental snapshot maintenance (DESIGN.md §3): a UP push lands
+    // between decisions, so every prepare sees a moved table version.
+    // The delta path patches the one changed entry in place; with
+    // incremental maintenance off the same miss pays the full table
+    // scan + link resolution. `scripts/bench_check` gates the delta
+    // number — it must stay under the rebuild.
+    let push = |table: &mut ProfileTable, i: u32| {
+        let n = 2 + (i % 4);
+        table.apply(&ProfileUpdate {
+            node: NodeId(n),
+            busy_containers: i % 2,
+            warm_containers: 2,
+            queued_images: i % 3,
+            cpu_load_pct: 10.0 * n as f64,
+            battery_pct: None,
+            sent_ms: 5.0,
+        });
+    };
+    let r = bench("snapshot delta (profile push) x10k", 3, 30, || {
+        for i in 0..EDGE_BATCH {
+            push(&mut table, i);
+            black_box(pipe.prepare(
+                &table,
+                &peers,
+                &no_suspects,
+                0,
+                &links,
+                frames[0].origin,
+                10.0,
+                200.0,
+            ));
+        }
+    });
+    r.print_throughput(EDGE_BATCH as f64, "patches");
+    json.push((r.clone(), Some(per_op_ns(&r, EDGE_BATCH as f64))));
+    pipe.set_incremental(false);
+    let r = bench("snapshot rebuild (profile push) x10k", 3, 30, || {
+        for i in 0..EDGE_BATCH {
+            push(&mut table, i);
+            black_box(pipe.prepare(
+                &table,
+                &peers,
+                &no_suspects,
+                0,
+                &links,
+                frames[0].origin,
+                10.0,
+                200.0,
+            ));
+        }
+    });
+    r.print_throughput(EDGE_BATCH as f64, "rebuilds");
+    json.push((r.clone(), Some(per_op_ns(&r, EDGE_BATCH as f64))));
+    pipe.set_incremental(true);
+
     // Device-level decision on a device-local frame: the privacy
     // short-circuit is the cheapest path and must stay that way.
     let mut dds_dev = PolicyKind::Dds.build(1);
@@ -364,7 +419,7 @@ fn main() {
         json.push((r.clone(), Some(per_op_ns(&r, events))));
     }
 
-    let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_6.json".to_string());
+    let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_7.json".to_string());
     match write_bench_json(&out, "hotpath", &json) {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => eprintln!("\nfailed to write {out}: {e}"),

@@ -12,10 +12,11 @@
 //! [edge]           single-cell edge pool (shim for cell 0)
 //! [[device]]       end devices: class, containers, camera, cell = N
 //! [[cell]]         federation cells (edge pool per cell)
-//! [federation]     backhaul link, gossip period,
-//!                  topology = "mesh"|"line", max_forward_hops
+//! [federation]     backhaul link, gossip period, max_forward_hops,
+//!                  topology = "mesh"|"line"|"ring"|"tree"|"hier[:N]"
 //! [[app]]          QoS registry: deadline, privacy, priority, weight, …
-//! [admission]      edge admission (rate, burst, ceiling, deadline_shed)
+//! [admission]      admission (rate, burst, ceiling, deadline_shed,
+//!                  device_intake = also enforce at device intake)
 //! [[churn]]        scripted fail/recover/join events
 //! [churn_random]   seeded MTBF/MTTR device cycles
 //! [failure]        detector thresholds + heartbeat period
@@ -166,6 +167,12 @@ pub struct AdmissionConfig {
     /// Enable the Overload stage's deadline-aware shed of best-effort
     /// frames at enqueue (`deadline_shed = true`).
     pub deadline_shed: bool,
+    /// Also enforce the token bucket at *device* intake
+    /// (`device_intake = true`): each device runs the same per-app Admit
+    /// stage on its own camera frames, refusing overload where frames are
+    /// born instead of after they spend the uplink. Off by default —
+    /// legacy configs (and plain `[admission]` sections) are untouched.
+    pub device_intake: bool,
 }
 
 impl Default for AdmissionConfig {
@@ -175,6 +182,7 @@ impl Default for AdmissionConfig {
             burst: 8.0,
             queue_ceiling: 16,
             deadline_shed: false,
+            device_intake: false,
         }
     }
 }
@@ -251,8 +259,10 @@ pub struct FederationConfig {
     /// Inter-edge MP-summary gossip period.
     pub gossip_period_ms: f64,
     /// Backhaul wiring between the edge servers (`topology = "mesh"` |
-    /// `"line"`, DESIGN.md §Hierarchical routing). Mesh is the classic
-    /// default.
+    /// `"line"` | `"ring"` | `"tree"` | `"hier[:N]"`, DESIGN.md
+    /// §Hierarchical routing). Mesh is the classic default; `hier:N`
+    /// groups cells into regions of `N` and turns on region-aggregated
+    /// gossip (DESIGN.md §Hierarchical gossip).
     pub topology: FederationShape,
     /// Backhaul-hop budget granted to fresh frames (`max_forward_hops`).
     /// 1 (the default) is the classic single-hop federation; a line of
@@ -724,6 +734,7 @@ impl SystemConfig {
                 burst: doc.f64_or("admission", "burst", ad.burst),
                 queue_ceiling: ceiling as u32,
                 deadline_shed: doc.bool_or("admission", "deadline_shed", ad.deadline_shed),
+                device_intake: doc.bool_or("admission", "device_intake", ad.device_intake),
             })
         } else {
             None
@@ -732,7 +743,7 @@ impl SystemConfig {
         let fd = FederationConfig::default();
         let shape_name = doc.str_or("federation", "topology", fd.topology.as_str());
         let Some(topology) = FederationShape::parse(shape_name) else {
-            bail!("unknown federation.topology `{shape_name}` (mesh|line)");
+            bail!("unknown federation.topology `{shape_name}` (mesh|line|ring|tree|hier[:N])");
         };
         let max_forward_hops = doc.i64_or("federation", "max_forward_hops", fd.max_forward_hops as i64);
         if !(1..=16).contains(&max_forward_hops) {
@@ -857,6 +868,19 @@ impl SystemConfig {
             deadline_shed: ad.deadline_shed,
             per_app_rate: self.effective_apps().iter().map(|a| a.admit_rate_per_s).collect(),
         })
+    }
+
+    /// Admit-stage parameters for *devices*: the same resolved bucket as
+    /// [`SystemConfig::admission_params`], but only when
+    /// `[admission] device_intake = true`. `None` (the default) keeps
+    /// devices admission-free — structurally inert for legacy configs.
+    /// Shared by the sim and live drivers — one derivation, two drivers.
+    pub fn device_admission_params(&self) -> Option<AdmissionParams> {
+        if self.admission.is_some_and(|ad| ad.device_intake) {
+            self.admission_params()
+        } else {
+            None
+        }
     }
 
     /// Edge pool size of cell `c`: the `[[cell]]` entry if present, else
@@ -1586,6 +1610,24 @@ camera = true
         assert!(ad.rate_per_s.is_infinite());
         assert_eq!(ad.queue_ceiling, 16);
         assert!(!ad.deadline_shed);
+        // Device intake is opt-in: a plain [admission] section keeps the
+        // devices admission-free.
+        assert!(!ad.device_intake);
+        assert!(c.device_admission_params().is_none());
+        let text = r#"
+[admission]
+rate_per_s = 4.0
+device_intake = true
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert!(c.admission.unwrap().device_intake);
+        let p = c.device_admission_params().unwrap();
+        assert_eq!(p.default_rate_per_s, 4.0);
+        assert_eq!(p, c.admission_params().unwrap());
         // Weight keys alone flip the discipline, admission stays off.
         let text = r#"
 [[app]]
@@ -1674,9 +1716,24 @@ cell = 0
         let d = SystemConfig::default();
         assert_eq!(d.federation.topology, FederationShape::Mesh);
         assert_eq!(d.federation.max_forward_hops, 1);
+        // The city-scale shapes parse, including the region-size suffix.
+        for (spelling, shape) in [
+            ("ring", FederationShape::Ring),
+            ("tree", FederationShape::Tree),
+            ("hier:4", FederationShape::Hier { region_size: 4 }),
+        ] {
+            let toml = format!(
+                "[federation]\ntopology = \"{spelling}\"\n\n[[device]]\nclass = \"rpi\"\ncamera = true"
+            );
+            assert_eq!(SystemConfig::from_toml(&toml).unwrap().federation.topology, shape);
+        }
         // Unknown shapes and zero/huge budgets are rejected.
         assert!(SystemConfig::from_toml(
-            "[federation]\ntopology = \"ring\"\n\n[[device]]\nclass = \"rpi\"\ncamera = true"
+            "[federation]\ntopology = \"torus\"\n\n[[device]]\nclass = \"rpi\"\ncamera = true"
+        )
+        .is_err());
+        assert!(SystemConfig::from_toml(
+            "[federation]\ntopology = \"hier:0\"\n\n[[device]]\nclass = \"rpi\"\ncamera = true"
         )
         .is_err());
         assert!(SystemConfig::from_toml(

@@ -15,8 +15,8 @@ use crate::core::message::{Message, ProfileUpdate};
 use crate::core::{DropReason, ImageMeta, NodeId, Placement, TaskId};
 use crate::energy::Battery;
 use crate::profile::Predictor;
-use crate::scheduler::pipeline::{device_intake, DeviceIntake};
-use crate::scheduler::{DeviceCtx, FailureDetector, LocalSnapshot, SchedulerPolicy};
+use crate::scheduler::pipeline::{device_intake, AdmitStage, AdmitVerdict, DeviceIntake};
+use crate::scheduler::{AdmissionParams, DeviceCtx, FailureDetector, LocalSnapshot, SchedulerPolicy};
 
 /// Effects a node handler requests from its driver.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +88,10 @@ pub struct DeviceNode {
     /// Last time any message arrived from the edge (JoinAck, Result, Ping…).
     /// Star topology: every inbound message is from the cell's edge.
     last_edge_heard_ms: f64,
+    /// Device-intake Admit stage (`[admission] device_intake = true`,
+    /// DESIGN.md §3): the same per-app token bucket the edge runs,
+    /// enforced where frames are born. `None` (legacy) admits everything.
+    admit: Option<AdmitStage>,
 }
 
 impl DeviceNode {
@@ -111,7 +115,16 @@ impl DeviceNode {
             battery: None,
             detector: None,
             last_edge_heard_ms: 0.0,
+            admit: None,
         }
+    }
+
+    /// Enable the device-intake Admit stage (builder style;
+    /// `[admission] device_intake = true` — DESIGN.md §3). Without it the
+    /// device admits every camera frame, as it always has.
+    pub fn with_admission(mut self, params: AdmissionParams) -> Self {
+        self.admit = Some(AdmitStage::new(params));
+        self
     }
 
     /// Attach a battery model (builder style).
@@ -141,6 +154,10 @@ impl DeviceNode {
         self.inflight.clear();
         self.awaiting.clear();
         self.sent_to_edge.clear();
+        // A crashed device loses its admission buckets with the rest.
+        if let Some(a) = self.admit.as_mut() {
+            a.reset();
+        }
     }
 
     /// Churn: the device restarted at `now_ms`. The caller (driver) sends
@@ -207,6 +224,23 @@ impl DeviceNode {
         debug_assert_eq!(img.origin, self.id);
         self.tick_battery(now_ms);
         self.awaiting.insert(img.task, img);
+        // Admit stage at the device intake (`[admission] device_intake`,
+        // DESIGN.md §3): the same per-app token bucket the edge enforces,
+        // applied where frames are born — overload is refused before it
+        // spends the camera-to-edge uplink. Structurally absent (legacy
+        // behaviour) unless the knob is set, so the per-app queue scan is
+        // only paid when a verdict will actually be used.
+        if let Some(stage) = self.admit.as_mut() {
+            let queued = self.pool.queued_for_app(img.constraint.app);
+            if stage.admit(&img, now_ms, queued) != AdmitVerdict::Admit {
+                self.awaiting.remove(&img.task);
+                out.push(Action::RecordDropped {
+                    task: img.task,
+                    reason: DropReason::Rejected,
+                });
+                return;
+            }
+        }
         // Filter stage (shared clamp logic, DESIGN.md §Constraints & QoS),
         // enforced at the node layer for *every* policy: a device-local
         // frame never leaves its origin — not for a policy verdict, not
@@ -574,6 +608,39 @@ mod tests {
         assert_eq!(up.busy_containers, 1);
         assert_eq!(up.warm_containers, 2);
         assert_eq!(up.sent_ms, 20.0);
+    }
+
+    #[test]
+    fn device_intake_admission_rejects_over_rate() {
+        // Burst 1, negligible refill: frame 1 drains the bucket, frame 2
+        // (10 ms later) is refused at intake — dropped with the Rejected
+        // reason before any placement, send, or pool work happens.
+        let mut d = device(PolicyKind::Aoe, 1).with_admission(AdmissionParams {
+            default_rate_per_s: 0.5,
+            burst: 1.0,
+            queue_ceiling: 1_000,
+            deadline_shed: false,
+            per_app_rate: Vec::new(),
+        });
+        let mut out = Vec::new();
+        d.on_camera_frame(frame(1, 5_000.0), 0.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordDropped { .. })));
+        assert!(out.iter().any(|a| matches!(a, Action::Send { .. })));
+        out.clear();
+        d.on_camera_frame(frame(2, 5_000.0), 10.0, &mut out);
+        assert_eq!(
+            out,
+            vec![Action::RecordDropped {
+                task: TaskId(2),
+                reason: DropReason::Rejected
+            }]
+        );
+        // A crash clears the bucket with the rest of the volatile state:
+        // the refilled (fresh) bucket admits again after restart.
+        d.fail();
+        out.clear();
+        d.on_camera_frame(frame(3, 5_000.0), 20.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, Action::RecordDropped { .. })));
     }
 
     // ---- churn (DESIGN.md §Churn) ------------------------------------

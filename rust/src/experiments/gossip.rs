@@ -2,16 +2,19 @@
 //! follow-up): staleness vs. overhead of the hierarchical federation.
 //!
 //! The sweep crosses gossip period × backhaul bandwidth × federation size
-//! (2/4/8 cells) × wiring shape (full mesh vs. line). All load originates
-//! in cell 0 under the Fig. 8 100% edge stress, so deadline satisfaction
-//! depends on how quickly capacity knowledge propagates (gossip period,
-//! relay damping) and how expensive it is to exploit (backhaul bandwidth,
-//! hop count). The per-hop counters — `forward_hops`, `loops_rejected`,
-//! `ttl_expired` — quantify the routing work itself: a line topology pays
-//! multi-hop forwarding where a mesh pays broadcast gossip.
+//! (2/4/8 cells) × wiring shape (mesh vs. line vs. ring vs. tree — one
+//! sweep, one grid). All load originates in cell 0 under the Fig. 8 100%
+//! edge stress, so deadline satisfaction depends on how quickly capacity
+//! knowledge propagates (gossip period, relay damping) and how expensive
+//! it is to exploit (backhaul bandwidth, hop count). The per-hop
+//! counters — `forward_hops`, `loops_rejected`, `ttl_expired` — quantify
+//! the routing work itself: sparse shapes pay multi-hop forwarding where
+//! a mesh pays broadcast gossip.
 //!
-//! Line federations get `max_forward_hops = cells - 1` (the far end is
-//! reachable); meshes keep the classic single hop.
+//! Each shape gets the hop budget that makes every cell reachable
+//! ([`shape_hops`]): its wiring diameter for line/ring/tree, the classic
+//! single hop for meshes. (The `hier` shape belongs to the city-scale
+//! experiment, which owns region sizing — see `--exp city`.)
 
 use crate::config::{CellConfig, DeviceConfig, SystemConfig, WorkloadConfig};
 use crate::core::NodeClass;
@@ -27,12 +30,42 @@ pub const GOSSIP_PERIODS_MS: [f64; 3] = [25.0, 100.0, 400.0];
 /// Backhaul bandwidths swept (Mbit/s): metro fiber vs. congested uplink.
 pub const GOSSIP_BACKHAUL_MBPS: [f64; 2] = [1_000.0, 100.0];
 
+/// Wiring shapes crossed by the sweep (hier rides with `--exp city`).
+pub const GOSSIP_SHAPES: [FederationShape; 4] = [
+    FederationShape::Mesh,
+    FederationShape::Line,
+    FederationShape::Ring,
+    FederationShape::Tree,
+];
+
+/// Hop budget that makes every cell reachable on `shape`, clamped to 16:
+/// the wiring diameter for line/ring/tree, the classic single hop for a
+/// mesh, and the member→leader→leader→member relay (4) for `hier`.
+pub fn shape_hops(n_cells: usize, shape: FederationShape) -> u8 {
+    let hops = match shape {
+        FederationShape::Mesh => 1,
+        FederationShape::Line => n_cells.saturating_sub(1),
+        FederationShape::Ring => n_cells / 2,
+        FederationShape::Tree => {
+            // Cell c hangs off (c-1)/2 — a binary tree whose diameter is
+            // at most twice its depth.
+            let mut depth = 0usize;
+            while (1usize << (depth + 1)) <= n_cells {
+                depth += 1;
+            }
+            2 * depth
+        }
+        FederationShape::Hier { .. } => 4,
+    };
+    hops.clamp(1, 16) as u8
+}
+
 /// One sweep cell's outcome.
 #[derive(Debug, Clone)]
 pub struct GossipRow {
     /// Number of federation cells.
     pub n_cells: usize,
-    /// Backhaul wiring shape (mesh or line).
+    /// Backhaul wiring shape.
     pub shape: FederationShape,
     /// Inter-edge gossip period (ms).
     pub gossip_period_ms: f64,
@@ -71,10 +104,7 @@ pub fn gossip_config(n_cells: usize, shape: FederationShape) -> SystemConfig {
         })
         .collect();
     cfg.federation.topology = shape;
-    cfg.federation.max_forward_hops = match shape {
-        FederationShape::Mesh => 1,
-        FederationShape::Line => (n_cells.saturating_sub(1)).clamp(1, 16) as u8,
-    };
+    cfg.federation.max_forward_hops = shape_hops(n_cells, shape);
     cfg
 }
 
@@ -126,7 +156,7 @@ pub fn gossip_run(
 /// The full sweep: shapes × cell counts × gossip periods × bandwidths.
 pub fn gossip(seed: u64, n_images: u32) -> Vec<GossipRow> {
     let mut rows = Vec::new();
-    for shape in [FederationShape::Mesh, FederationShape::Line] {
+    for shape in GOSSIP_SHAPES {
         for &n_cells in &GOSSIP_CELLS {
             for &period in &GOSSIP_PERIODS_MS {
                 for &bw in &GOSSIP_BACKHAUL_MBPS {
@@ -172,7 +202,7 @@ mod tests {
 
     #[test]
     fn gossip_configs_validate() {
-        for shape in [FederationShape::Mesh, FederationShape::Line] {
+        for shape in GOSSIP_SHAPES {
             for &n in &GOSSIP_CELLS {
                 let c = gossip_config(n, shape);
                 c.validate().unwrap();
@@ -182,6 +212,54 @@ mod tests {
         }
         assert_eq!(gossip_config(4, FederationShape::Line).federation.max_forward_hops, 3);
         assert_eq!(gossip_config(4, FederationShape::Mesh).federation.max_forward_hops, 1);
+    }
+
+    #[test]
+    fn shape_hops_cover_each_wiring_diameter() {
+        // Mesh: direct links everywhere. Line/ring/tree: the budget is at
+        // least the wiring diameter, capped at 16. Hier: the fixed
+        // member→leader→leader→member relay length.
+        assert_eq!(shape_hops(8, FederationShape::Mesh), 1);
+        assert_eq!(shape_hops(8, FederationShape::Line), 7);
+        assert_eq!(shape_hops(64, FederationShape::Line), 16);
+        assert_eq!(shape_hops(2, FederationShape::Ring), 1);
+        assert_eq!(shape_hops(8, FederationShape::Ring), 4);
+        assert_eq!(shape_hops(2, FederationShape::Tree), 2);
+        assert_eq!(shape_hops(8, FederationShape::Tree), 6);
+        assert_eq!(shape_hops(64, FederationShape::Hier { region_size: 8 }), 4);
+        // Tree budget really covers the longest leaf-to-leaf path for the
+        // swept sizes (binary-heap parent wiring).
+        for &n in &GOSSIP_CELLS {
+            let diameter = (0..n)
+                .flat_map(|a| (0..n).map(move |b| (a, b)))
+                .map(|(a, b)| {
+                    let (mut a, mut b, mut d) = (a, b, 0);
+                    while a != b {
+                        if a > b {
+                            a = (a - 1) / 2;
+                        } else {
+                            b = (b - 1) / 2;
+                        }
+                        d += 1;
+                    }
+                    d
+                })
+                .max()
+                .unwrap();
+            assert!(usize::from(shape_hops(n, FederationShape::Tree)) >= diameter);
+        }
+    }
+
+    #[test]
+    fn ring_and_tree_sweep_cells_route_without_loops() {
+        // The two new shapes forward under cell-0 stress and never loop;
+        // the ring's closing link keeps its hop trail at or under n/2.
+        for shape in [FederationShape::Ring, FederationShape::Tree] {
+            let r = gossip_run(4, shape, 25.0, 1_000.0, 7, 160);
+            assert!(r.forwarded > 0, "{shape:?} must forward under stress");
+            assert_eq!(r.loops_rejected, 0, "{shape:?} must not loop");
+            assert!(r.forward_hops >= r.forwarded);
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! numbers so reports can print paper-vs-measured side by side.
 
 pub mod churn;
+pub mod city;
 pub mod federation;
 pub mod figures;
 pub mod gossip;
@@ -18,10 +19,14 @@ pub use churn::{
     apply_scenario, churn, churn_config, churn_run, churnsweep, churnsweep_run, render_churn,
     render_churnsweep, ChurnRow, ChurnScenario, ChurnSweepRow, SWEEP_MTBF_MS,
 };
+pub use city::{
+    city, city_config, city_run, render_city, CityRow, CITY_MAX_EVENTS, CITY_REGION_SIZE,
+    CITY_SWEEP,
+};
 pub use federation::{fed, fed_config, fed_run, render_fed, FedRow};
 pub use gossip::{
-    gossip, gossip_config, gossip_run, render_gossip, GossipRow, GOSSIP_BACKHAUL_MBPS,
-    GOSSIP_CELLS, GOSSIP_PERIODS_MS,
+    gossip, gossip_config, gossip_run, render_gossip, shape_hops, GossipRow,
+    GOSSIP_BACKHAUL_MBPS, GOSSIP_CELLS, GOSSIP_PERIODS_MS, GOSSIP_SHAPES,
 };
 pub use overload::{
     overload, overload_config, overload_run, render_overload, OverloadRow, OVERLOAD_MULTS,

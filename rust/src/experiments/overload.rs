@@ -93,6 +93,7 @@ pub fn overload_config(mult: u32, fair: bool, n_images: u32) -> SystemConfig {
             burst: 4.0,
             queue_ceiling: 8,
             deadline_shed: true,
+            device_intake: false,
         });
     }
     cfg

@@ -567,6 +567,9 @@ impl LiveCluster {
             if cfg.churn.enabled() {
                 node = node.with_detector(cfg.churn.detector());
             }
+            if let Some(params) = cfg.device_admission_params() {
+                node = node.with_admission(params);
+            }
 
             let clock = clock.clone();
             let recorder = recorder.clone();
@@ -750,6 +753,7 @@ impl LiveCluster {
             let e = e.lock().unwrap();
             summary.snapshot_rebuilds += e.pipeline().snapshot_rebuilds;
             summary.snapshot_reuses += e.pipeline().snapshot_reuses;
+            summary.snapshot_deltas += e.pipeline().snapshot_deltas;
         }
         // Frame-buffer pool counters: in steady state misses stop growing,
         // the acceptance signal for the allocation-free receive path.

@@ -8,7 +8,7 @@
 //! edge-dds sweep  [--config cfg.toml] [--images N] [--interval MS]
 //!                 [--deadline MS]                  # all paper policies
 //! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|
-//!                       fed|churn|churnsweep|slo|overload|gossip|all
+//!                       fed|churn|churnsweep|slo|overload|gossip|city|all
 //! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
 //!                 [--interval MS] [--deadline MS] [--side PX]
 //! ```
@@ -81,13 +81,14 @@ fn print_usage() {
          \x20 edge-dds sim    [--config F] [--policy P] [--images N] [--interval MS]\n\
          \x20                 [--deadline MS] [--seed S] [--csv OUT]\n\
          \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
-         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|churnsweep|slo|overload|gossip|all\n\
+         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|churnsweep|slo|overload|gossip|city|all\n\
+         \x20                 [--images N] [--cells N]   # city/gossip/overload/slo scale knobs\n\
          \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
          \x20                 [--interval MS] [--deadline MS] [--side PX]\n\
          \n\
          POLICIES: aor aoe eods dds dds-no-avail dds-energy round-robin random\n\
          FEDERATION: [[cell]] tables + device `cell = N` + [federation] in --config\n\
-         \x20           (topology = mesh|line, max_forward_hops = N for multi-hop routing)\n\
+         \x20           (topology = mesh|line|ring|tree|hier[:N], max_forward_hops = N)\n\
          CHURN: [[churn]] events + [churn_random] + [failure] thresholds in --config\n\
          APPS: [[app]] tables (name, deadline_ms, privacy, priority, rate, weight) in --config\n\
          OVERLOAD: [admission] (rate_per_s, burst, queue_ceiling, deadline_shed) in --config"
@@ -257,6 +258,17 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
             flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(200);
         let rows = experiments::gossip(seed, n_images);
         println!("{}", experiments::render_gossip(&rows));
+    }
+    if all || exp == "city" {
+        matched = true;
+        // --images scales each cell's diurnal stream; --cells caps the
+        // sweep's city sizes (the CI smoke step runs a small city).
+        let n_images: u32 =
+            flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(24);
+        let max_cells: usize =
+            flags.get("cells").map(|s| s.parse()).transpose().context("--cells")?.unwrap_or(256);
+        let rows = experiments::city(seed, n_images, max_cells);
+        println!("{}", experiments::render_city(&rows));
     }
     if all || exp == "slo" {
         matched = true;

@@ -101,6 +101,9 @@ pub struct RunSummary {
     pub snapshot_rebuilds: u64,
     /// Candidate-snapshot cache hits across every edge pipeline.
     pub snapshot_reuses: u64,
+    /// Candidate-snapshot incremental patches — table version bumps
+    /// absorbed without a full rescan (DESIGN.md §3).
+    pub snapshot_deltas: u64,
     /// `EdgeSummary` (gossip) bytes sent per originating edge — the
     /// byte-budget meter the city-scale work sizes gossip periods with.
     /// Empty outside a federation (gated `gossip_bytes` JSON key).

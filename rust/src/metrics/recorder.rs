@@ -371,6 +371,7 @@ impl Recorder {
             ttl_expired: self.ttl_expired,
             snapshot_rebuilds: 0,
             snapshot_reuses: 0,
+            snapshot_deltas: 0,
             gossip_bytes: self.gossip_bytes.clone(),
             pool_hits: 0,
             pool_misses: 0,

@@ -148,10 +148,10 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
     // Snapshot-cache counters (DESIGN.md §3) appear once any edge
     // decision ran — AOR-style runs whose frames never reach an edge
     // serialize unchanged.
-    let snapshot = if s.snapshot_rebuilds > 0 || s.snapshot_reuses > 0 {
+    let snapshot = if s.snapshot_rebuilds > 0 || s.snapshot_reuses > 0 || s.snapshot_deltas > 0 {
         format!(
-            r#","snapshot_rebuilds":{},"snapshot_reuses":{}"#,
-            s.snapshot_rebuilds, s.snapshot_reuses
+            r#","snapshot_rebuilds":{},"snapshot_reuses":{},"snapshot_deltas":{}"#,
+            s.snapshot_rebuilds, s.snapshot_reuses, s.snapshot_deltas
         )
     } else {
         String::new()
@@ -374,10 +374,11 @@ mod tests {
         assert_eq!(s.loops_rejected, 0);
         s.snapshot_rebuilds = 7;
         s.snapshot_reuses = 3;
+        s.snapshot_deltas = 2;
         let js = summary_json("routed", &s);
         assert!(js.contains(r#""forward_hops":2,"loops_rejected":0,"ttl_expired":1"#));
         assert!(js.contains(r#""hop_wait_ms":{"mean":3.250"#));
-        assert!(js.contains(r#""snapshot_rebuilds":7,"snapshot_reuses":3"#));
+        assert!(js.contains(r#""snapshot_rebuilds":7,"snapshot_reuses":3,"snapshot_deltas":2"#));
         // The CSV line carries the per-task hop count and the
         // semicolon-joined per-hop waits before the verdict.
         let line = csv_line(&rec.records()[0]);

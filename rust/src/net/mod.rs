@@ -11,7 +11,7 @@ pub mod topology;
 pub mod transport;
 
 pub use buf_pool::{BufPool, PooledBuf};
-pub use topology::{CellSpec, FederationShape, Topology};
+pub use topology::{CellSpec, FederationShape, RegionMap, Topology};
 
 /// A point-to-point link's timing/loss model.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -36,8 +36,10 @@ pub struct NodeSpec {
 }
 
 /// Backhaul wiring between a federation's edge servers (DESIGN.md
-/// §Hierarchical routing). The gossip experiment compares the two: a mesh
-/// needs only single-hop forwarding, a line is the multi-hop stress case.
+/// §Hierarchical routing). The gossip experiment compares them: a mesh
+/// needs only single-hop forwarding, a line is the multi-hop stress case,
+/// ring/tree sit in between, and `hier` is the city-scale two-level shape
+/// whose region leaders aggregate gossip (DESIGN.md §Hierarchical gossip).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum FederationShape {
     /// Full mesh: every pair of edge servers shares a backhaul link (the
@@ -47,24 +49,120 @@ pub enum FederationShape {
     /// Line: only adjacent cells (`c` ↔ `c+1`) are linked — reaching a
     /// distant cell requires transitive gossip and multi-hop forwarding.
     Line,
+    /// Ring: a line with the two endpoint cells also linked — halves the
+    /// worst-case hop distance of the line at one extra link.
+    Ring,
+    /// Balanced binary tree: cell `c > 0` links to its parent
+    /// `(c - 1) / 2` — logarithmic diameter at `n - 1` links.
+    Tree,
+    /// Two-level hierarchy: cells are grouped into consecutive regions of
+    /// `region_size`; the edges of a region form a full mesh and the first
+    /// edge of each region (the *leader*) joins a full mesh of leaders.
+    /// This is the wiring the hierarchical gossip aggregation rides on.
+    Hier {
+        /// Cells per region (≥ 1). One region degenerates to a mesh.
+        region_size: u32,
+    },
 }
 
+/// Default cells-per-region for the bare `"hier"` config spelling.
+pub const DEFAULT_REGION_SIZE: u32 = 8;
+
 impl FederationShape {
-    /// Parse a `[federation] topology` config value.
+    /// Parse a `[federation] topology` config value
+    /// (`mesh|line|ring|tree|hier[:N]` — `hier:N` sets cells per region,
+    /// bare `hier` means `hier:8`).
     pub fn parse(s: &str) -> Option<FederationShape> {
         match s {
             "mesh" => Some(FederationShape::Mesh),
             "line" => Some(FederationShape::Line),
-            _ => None,
+            "ring" => Some(FederationShape::Ring),
+            "tree" => Some(FederationShape::Tree),
+            "hier" => Some(FederationShape::Hier { region_size: DEFAULT_REGION_SIZE }),
+            _ => {
+                let n: u32 = s.strip_prefix("hier:")?.parse().ok()?;
+                (n >= 1).then_some(FederationShape::Hier { region_size: n })
+            }
         }
     }
 
-    /// Stable config spelling.
+    /// Stable config spelling (the `hier` spelling drops the region size —
+    /// use [`FederationShape::config_str`] for a lossless round-trip).
     pub fn as_str(&self) -> &'static str {
         match self {
             FederationShape::Mesh => "mesh",
             FederationShape::Line => "line",
+            FederationShape::Ring => "ring",
+            FederationShape::Tree => "tree",
+            FederationShape::Hier { .. } => "hier",
         }
+    }
+
+    /// Lossless config spelling (`hier:N` keeps the region size).
+    pub fn config_str(&self) -> String {
+        match self {
+            FederationShape::Hier { region_size } => format!("hier:{region_size}"),
+            other => other.as_str().to_string(),
+        }
+    }
+}
+
+/// Region assignment for hierarchical gossip (DESIGN.md §Hierarchical
+/// gossip): which region each edge server belongs to and which edge leads
+/// each region. Built from the same grouping
+/// [`Topology::multi_cell_shaped`] wires for [`FederationShape::Hier`], so
+/// the gossip protocol and the link table always agree.
+#[derive(Debug, Clone, Default)]
+pub struct RegionMap {
+    /// `region_of[edge]` for every edge server in the federation.
+    region_of: HashMap<NodeId, u32>,
+    /// `leaders[r]` = the edge leading region `r` (its first cell).
+    leaders: Vec<NodeId>,
+}
+
+impl RegionMap {
+    /// Group `edge_ids` (cell order) into consecutive regions of
+    /// `region_size`; the first edge of each region is its leader.
+    pub fn grouped(edge_ids: &[NodeId], region_size: u32) -> RegionMap {
+        assert!(region_size >= 1, "region_size must be >= 1");
+        let mut region_of = HashMap::with_capacity(edge_ids.len());
+        let mut leaders = Vec::new();
+        for (c, &e) in edge_ids.iter().enumerate() {
+            let r = c as u32 / region_size;
+            region_of.insert(e, r);
+            if c as u32 % region_size == 0 {
+                leaders.push(e);
+            }
+        }
+        RegionMap { region_of, leaders }
+    }
+
+    /// The region `edge` belongs to (None for a node outside the map).
+    pub fn region_of(&self, edge: NodeId) -> Option<u32> {
+        self.region_of.get(&edge).copied()
+    }
+
+    /// The leader of region `r` (panics on an out-of-range region).
+    pub fn leader_of(&self, r: u32) -> NodeId {
+        self.leaders[r as usize]
+    }
+
+    /// Whether `edge` leads its region.
+    pub fn is_leader(&self, edge: NodeId) -> bool {
+        self.region_of(edge).is_some_and(|r| self.leaders[r as usize] == edge)
+    }
+
+    /// Whether two edges share a region (false if either is unknown).
+    pub fn same_region(&self, a: NodeId, b: NodeId) -> bool {
+        match (self.region_of(a), self.region_of(b)) {
+            (Some(ra), Some(rb)) => ra == rb,
+            _ => false,
+        }
+    }
+
+    /// Number of regions.
+    pub fn region_count(&self) -> usize {
+        self.leaders.len()
     }
 }
 
@@ -370,6 +468,37 @@ impl Topology {
                     t.add_link(w[0], w[1], backhaul);
                 }
             }
+            FederationShape::Ring => {
+                for w in edge_ids.windows(2) {
+                    t.add_link(w[0], w[1], backhaul);
+                }
+                // Close the loop (a 2-cell ring is just the line).
+                if edge_ids.len() > 2 {
+                    t.add_link(edge_ids[edge_ids.len() - 1], edge_ids[0], backhaul);
+                }
+            }
+            FederationShape::Tree => {
+                for (c, &e) in edge_ids.iter().enumerate().skip(1) {
+                    t.add_link(edge_ids[(c - 1) / 2], e, backhaul);
+                }
+            }
+            FederationShape::Hier { region_size } => {
+                let regions = RegionMap::grouped(&edge_ids, region_size);
+                // Full mesh inside every region.
+                for (i, &a) in edge_ids.iter().enumerate() {
+                    for &b in &edge_ids[i + 1..] {
+                        if regions.same_region(a, b) {
+                            t.add_link(a, b, backhaul);
+                        }
+                    }
+                }
+                // Full mesh of region leaders.
+                for r in 0..regions.region_count() {
+                    for q in r + 1..regions.region_count() {
+                        t.add_link(regions.leader_of(r as u32), regions.leader_of(q as u32), backhaul);
+                    }
+                }
+            }
         }
         t
     }
@@ -621,11 +750,112 @@ mod tests {
             mesh.linked_peer_edges(NodeId(0)).collect::<Vec<_>>(),
             mesh.peer_edges(NodeId(0)).collect::<Vec<_>>()
         );
-        // Shape parsing round-trips.
-        for s in [FederationShape::Mesh, FederationShape::Line] {
-            assert_eq!(FederationShape::parse(s.as_str()), Some(s));
+        // Shape parsing round-trips (lossless via config_str).
+        for s in [
+            FederationShape::Mesh,
+            FederationShape::Line,
+            FederationShape::Ring,
+            FederationShape::Tree,
+            FederationShape::Hier { region_size: 4 },
+        ] {
+            assert_eq!(FederationShape::parse(&s.config_str()), Some(s));
         }
-        assert_eq!(FederationShape::parse("ring"), None);
+        assert_eq!(
+            FederationShape::parse("hier"),
+            Some(FederationShape::Hier { region_size: DEFAULT_REGION_SIZE })
+        );
+        assert_eq!(FederationShape::parse("hier:0"), None);
+        assert_eq!(FederationShape::parse("torus"), None);
+    }
+
+    #[test]
+    fn ring_topology_closes_the_loop() {
+        let cell = CellSpec::new(2, &[(NodeClass::RaspberryPi, 1, true)], LinkModel::wifi());
+        let t = Topology::multi_cell_shaped(
+            &[cell.clone(), cell.clone(), cell.clone(), cell],
+            LinkModel::new(5.0, 1000.0, 0.0),
+            FederationShape::Ring,
+        );
+        let edges: Vec<NodeId> = t.edges().collect();
+        assert_eq!(edges, vec![NodeId(0), NodeId(2), NodeId(4), NodeId(6)]);
+        // The line links plus the closing link; no diagonals.
+        assert!(t.link(NodeId(0), NodeId(2)).is_some());
+        assert!(t.link(NodeId(2), NodeId(4)).is_some());
+        assert!(t.link(NodeId(4), NodeId(6)).is_some());
+        assert!(t.link(NodeId(6), NodeId(0)).is_some());
+        assert!(t.link(NodeId(0), NodeId(4)).is_none());
+        assert!(t.link(NodeId(2), NodeId(6)).is_none());
+        // Every edge has exactly two backhaul neighbors.
+        for &e in &edges {
+            assert_eq!(t.linked_peer_edges(e).count(), 2, "ring degree at {e}");
+        }
+    }
+
+    #[test]
+    fn tree_topology_links_to_binary_parent() {
+        let cell = CellSpec::new(2, &[(NodeClass::RaspberryPi, 1, true)], LinkModel::wifi());
+        let cells: Vec<CellSpec> = std::iter::repeat(cell).take(6).collect();
+        let t = Topology::multi_cell_shaped(
+            &cells,
+            LinkModel::new(5.0, 1000.0, 0.0),
+            FederationShape::Tree,
+        );
+        let edges: Vec<NodeId> = t.edges().collect();
+        assert_eq!(edges.len(), 6);
+        // Cell c links to parent (c-1)/2: 1,2 -> 0; 3,4 -> 1; 5 -> 2.
+        for (c, p) in [(1usize, 0usize), (2, 0), (3, 1), (4, 1), (5, 2)] {
+            assert!(t.link(edges[c], edges[p]).is_some(), "cell {c} -> parent {p}");
+        }
+        // n-1 links total: no sibling or cross-branch shortcuts.
+        assert!(t.link(edges[1], edges[2]).is_none());
+        assert!(t.link(edges[3], edges[5]).is_none());
+        let degree_sum: usize = edges.iter().map(|&e| t.linked_peer_edges(e).count()).sum();
+        assert_eq!(degree_sum, 2 * (edges.len() - 1));
+    }
+
+    #[test]
+    fn hier_topology_wires_regions_and_leader_mesh() {
+        let cell = CellSpec::new(2, &[(NodeClass::RaspberryPi, 1, true)], LinkModel::wifi());
+        let cells: Vec<CellSpec> = std::iter::repeat(cell).take(6).collect();
+        let t = Topology::multi_cell_shaped(
+            &cells,
+            LinkModel::new(5.0, 1000.0, 0.0),
+            FederationShape::Hier { region_size: 2 },
+        );
+        let edges: Vec<NodeId> = t.edges().collect();
+        let regions = RegionMap::grouped(&edges, 2);
+        assert_eq!(regions.region_count(), 3);
+        // Region mates are linked; leaders (cells 0, 2, 4) form a mesh.
+        assert!(t.link(edges[0], edges[1]).is_some());
+        assert!(t.link(edges[2], edges[3]).is_some());
+        assert!(t.link(edges[4], edges[5]).is_some());
+        assert!(t.link(edges[0], edges[2]).is_some());
+        assert!(t.link(edges[0], edges[4]).is_some());
+        assert!(t.link(edges[2], edges[4]).is_some());
+        // Non-leader cross-region pairs are not linked.
+        assert!(t.link(edges[1], edges[2]).is_none());
+        assert!(t.link(edges[1], edges[3]).is_none());
+        assert!(t.link(edges[3], edges[5]).is_none());
+        // Region map agrees with the wiring.
+        assert!(regions.is_leader(edges[0]));
+        assert!(!regions.is_leader(edges[1]));
+        assert_eq!(regions.region_of(edges[3]), Some(1));
+        assert_eq!(regions.leader_of(2), edges[4]);
+        assert!(regions.same_region(edges[4], edges[5]));
+        assert!(!regions.same_region(edges[0], edges[5]));
+        // A single region degenerates to the full mesh.
+        let one = Topology::multi_cell_shaped(
+            &[
+                CellSpec::new(2, &[], LinkModel::wifi()),
+                CellSpec::new(2, &[], LinkModel::wifi()),
+                CellSpec::new(2, &[], LinkModel::wifi()),
+            ],
+            LinkModel::new(5.0, 1000.0, 0.0),
+            FederationShape::Hier { region_size: 8 },
+        );
+        for &a in &one.edges().collect::<Vec<_>>() {
+            assert_eq!(one.linked_peer_edges(a).count(), 2);
+        }
     }
 
     #[test]

@@ -7,10 +7,54 @@
 //! decisions". Decisions therefore run on *snapshots that may be slightly
 //! stale* — staleness is first-class here (`age_ms`, `fresh_within`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::core::message::{EdgeSummary, ProfileUpdate};
 use crate::core::{NodeClass, NodeId};
+
+/// Entries kept in a table's [`ChangeLog`] before the window scrolls.
+/// Generous for the hot path (a gossip tick or an arrival burst touches a
+/// handful of entries between decisions) yet small enough to be free.
+const CHANGE_LOG_CAP: usize = 64;
+
+/// Bounded mutation journal backing incremental candidate-snapshot
+/// maintenance (DESIGN.md §3): every version bump records which node it
+/// touched, so a snapshot built at version `v` can be patched forward by
+/// re-resolving just those nodes instead of rescanning the whole table.
+///
+/// The log keeps the last [`CHANGE_LOG_CAP`] changes; asking for a window
+/// that has scrolled away yields `None` (the caller falls back to a full
+/// rebuild — correctness never depends on the log).
+#[derive(Debug, Clone, Default)]
+struct ChangeLog {
+    /// Version the journal starts after: `entries[i]` is the mutation
+    /// that took the table from `base_version + i` to `base_version + i + 1`.
+    base_version: u64,
+    entries: VecDeque<NodeId>,
+}
+
+impl ChangeLog {
+    /// Record the node touched by the mutation that just bumped the
+    /// version. Exactly one push per bump keeps
+    /// `base_version + entries.len() == version` invariant.
+    fn push(&mut self, node: NodeId) {
+        if self.entries.len() == CHANGE_LOG_CAP {
+            self.entries.pop_front();
+            self.base_version += 1;
+        }
+        self.entries.push_back(node);
+    }
+
+    /// Nodes touched after `version`, oldest first; `None` when the
+    /// window no longer reaches back that far.
+    fn changes_since(&self, version: u64) -> Option<impl Iterator<Item = NodeId> + '_> {
+        if version < self.base_version {
+            return None;
+        }
+        let skip = (version - self.base_version) as usize;
+        Some(self.entries.iter().skip(skip).copied())
+    }
+}
 
 /// Last-known state of one device, as seen by the MP table.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -53,6 +97,8 @@ pub struct ProfileTable {
     /// the scheduling pipeline's candidate-snapshot cache — a snapshot
     /// built against version v is valid exactly while the version stays v.
     version: u64,
+    /// Which node each version bump touched (incremental snapshots).
+    log: ChangeLog,
 }
 
 impl ProfileTable {
@@ -66,9 +112,17 @@ impl ProfileTable {
         self.version
     }
 
+    /// Nodes touched by mutations after `version`, oldest first; `None`
+    /// when the bounded journal no longer reaches back that far (the
+    /// caller rebuilds from scratch).
+    pub fn changes_since(&self, version: u64) -> Option<impl Iterator<Item = NodeId> + '_> {
+        self.log.changes_since(version)
+    }
+
     /// Register a device at Join time.
     pub fn register(&mut self, node: NodeId, class: NodeClass, warm: u32, now_ms: f64) {
         self.version += 1;
+        self.log.push(node);
         if !self.devices.contains_key(&node) {
             self.order.push(node);
         }
@@ -90,6 +144,7 @@ impl ProfileTable {
     /// Remove a device (churn / failure injection).
     pub fn deregister(&mut self, node: NodeId) {
         self.version += 1;
+        self.log.push(node);
         self.devices.remove(&node);
         self.order.retain(|&n| n != node);
     }
@@ -98,6 +153,7 @@ impl ProfileTable {
     /// the paper requires certification before participation).
     pub fn apply(&mut self, update: &ProfileUpdate) {
         self.version += 1;
+        self.log.push(update.node);
         if let Some(s) = self.devices.get_mut(&update.node) {
             s.busy_containers = update.busy_containers;
             s.warm_containers = update.warm_containers;
@@ -187,6 +243,8 @@ pub struct PeerTable {
     order: Vec<NodeId>,
     /// Mutation counter (see [`ProfileTable::version`]).
     version: u64,
+    /// Which edge each version bump touched (incremental snapshots).
+    log: ChangeLog,
 }
 
 impl PeerTable {
@@ -200,9 +258,17 @@ impl PeerTable {
         self.version
     }
 
+    /// Edges touched by mutations after `version`, oldest first; `None`
+    /// when the bounded journal no longer reaches back that far (see
+    /// [`ProfileTable::changes_since`]).
+    pub fn changes_since(&self, version: u64) -> Option<impl Iterator<Item = NodeId> + '_> {
+        self.log.changes_since(version)
+    }
+
     /// Register a peer edge with no state yet (its first gossip fills it).
     pub fn register(&mut self, edge: NodeId, now_ms: f64) {
         self.version += 1;
+        self.log.push(edge);
         if !self.peers.contains_key(&edge) {
             self.order.push(edge);
             self.peers.insert(
@@ -247,6 +313,7 @@ impl PeerTable {
             self.order.push(s.edge);
         }
         self.version += 1;
+        self.log.push(s.edge);
         self.peers.insert(
             s.edge,
             PeerEdgeState {
@@ -268,6 +335,7 @@ impl PeerTable {
     /// re-registers automatically on its next gossip after recovery.
     pub fn evict(&mut self, edge: NodeId) {
         self.version += 1;
+        self.log.push(edge);
         self.peers.remove(&edge);
         self.order.retain(|&n| n != edge);
     }
@@ -276,6 +344,7 @@ impl PeerTable {
     /// burst from all picking the same peer before its next gossip.
     pub fn bump_busy(&mut self, edge: NodeId) {
         self.version += 1;
+        self.log.push(edge);
         if let Some(p) = self.peers.get_mut(&edge) {
             p.busy_containers += 1;
         }
@@ -472,6 +541,40 @@ mod tests {
         assert!(v3 > v2);
         p.evict(NodeId(3));
         assert!(p.version() > v3);
+    }
+
+    #[test]
+    fn change_log_tracks_touched_nodes_and_scrolls() {
+        let mut t = ProfileTable::new();
+        t.register(NodeId(1), NodeClass::RaspberryPi, 2, 0.0);
+        let v1 = t.version();
+        t.apply(&up(1, 1, 2, 10.0));
+        t.register(NodeId(2), NodeClass::RaspberryPi, 2, 0.0);
+        // Changes after v1: the apply on node 1 and the register of node 2.
+        let delta: Vec<u32> = t.changes_since(v1).unwrap().map(|n| n.0).collect();
+        assert_eq!(delta, vec![1, 2]);
+        // The current version has no pending changes.
+        assert_eq!(t.changes_since(t.version()).unwrap().count(), 0);
+        // Scroll the window past v1: the old window is gone, recent
+        // versions still resolve.
+        for _ in 0..2 * CHANGE_LOG_CAP {
+            t.apply(&up(1, 1, 2, 11.0));
+        }
+        assert!(t.changes_since(v1).is_none(), "scrolled window must refuse");
+        let recent = t.version() - 3;
+        assert_eq!(t.changes_since(recent).unwrap().count(), 3);
+
+        // PeerTable journals every mutating path too — including the
+        // not-applied case, which does NOT bump and must not log.
+        let mut p = PeerTable::new();
+        p.apply(&gossip(3, 0, 4, 0, 100.0));
+        let v = p.version();
+        assert!(!p.apply(&gossip(3, 9, 4, 0, 50.0)), "stale copy not applied");
+        assert_eq!(p.changes_since(v).unwrap().count(), 0);
+        p.bump_busy(NodeId(3));
+        p.evict(NodeId(3));
+        let delta: Vec<u32> = p.changes_since(v).unwrap().map(|n| n.0).collect();
+        assert_eq!(delta, vec![3, 3]);
     }
 
     #[test]

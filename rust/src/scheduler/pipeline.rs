@@ -42,7 +42,7 @@
 //!
 //! [`SchedulerPolicy::decide_device`]: super::SchedulerPolicy::decide_device
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::container::ContainerPool;
 use crate::core::{AppId, ImageMeta, NodeId, Placement, PrivacyClass};
@@ -159,6 +159,12 @@ pub struct PeerCandidate {
 pub struct CandidateSnapshot {
     devices: Vec<DeviceCandidate>,
     peers: Vec<PeerCandidate>,
+    /// Node → index into `devices`, maintained by `rebuild` so table
+    /// deltas can patch one entry without rescanning (incremental
+    /// maintenance — the city-scale hot path).
+    device_pos: HashMap<NodeId, usize>,
+    /// Subject edge → index into `peers` (see `device_pos`).
+    peer_pos: HashMap<NodeId, usize>,
 }
 
 impl CandidateSnapshot {
@@ -193,11 +199,14 @@ impl CandidateSnapshot {
     ) {
         self.devices.clear();
         self.peers.clear();
+        self.device_pos.clear();
+        self.peer_pos.clear();
         for s in table.iter() {
             if s.node == origin {
                 continue;
             }
             let Some(link) = link_to(s.node) else { continue };
+            self.device_pos.insert(s.node, self.devices.len());
             self.devices.push(DeviceCandidate {
                 state: *s,
                 link,
@@ -210,6 +219,7 @@ impl CandidateSnapshot {
             // multi-hop subject has no direct backhaul link on a line
             // topology, but its `via` neighbor does.
             let Some(link) = link_to(p.via) else { continue };
+            self.peer_pos.insert(p.edge, self.peers.len());
             self.peers.push(PeerCandidate {
                 state: *p,
                 link,
@@ -218,6 +228,86 @@ impl CandidateSnapshot {
                 // suspected subject.
                 suspect: suspects.contains(&p.edge) || suspects.contains(&p.via),
             });
+        }
+    }
+
+    /// Re-resolve every candidate's staleness flag at a new instant — the
+    /// only per-entry field that depends on `now` alone.
+    fn refresh_staleness(&mut self, now_ms: f64, max_staleness_ms: f64) {
+        for c in &mut self.devices {
+            c.fresh = now_ms - c.state.updated_ms <= max_staleness_ms;
+        }
+        for c in &mut self.peers {
+            c.fresh = now_ms - c.state.updated_ms <= max_staleness_ms;
+        }
+    }
+
+    /// Patch one device candidate in place from its current table entry.
+    /// Returns `false` on a *structural* change — an entry would have to
+    /// be inserted or removed — which the caller resolves with a full
+    /// rebuild (candidate order is registration order; splicing in place
+    /// cannot reproduce it in general).
+    fn patch_device(
+        &mut self,
+        node: NodeId,
+        table: &ProfileTable,
+        suspects: &BTreeSet<NodeId>,
+        origin: NodeId,
+        now_ms: f64,
+        max_staleness_ms: f64,
+        link_to: impl Fn(NodeId) -> Option<LinkModel>,
+    ) -> bool {
+        if node == origin {
+            return true; // the origin is never a candidate
+        }
+        match (table.get(node), self.device_pos.get(&node)) {
+            (Some(s), Some(&i)) => {
+                let Some(link) = link_to(node) else { return false };
+                self.devices[i] = DeviceCandidate {
+                    state: *s,
+                    link,
+                    fresh: now_ms - s.updated_ms <= max_staleness_ms,
+                    suspect: suspects.contains(&node),
+                };
+                true
+            }
+            // In the table but not the snapshot: fine as long as it could
+            // never be a candidate (link-less); an insertion otherwise.
+            (Some(_), None) => link_to(node).is_none(),
+            // Deregistered since the snapshot was built: a removal.
+            (None, Some(_)) => false,
+            // A mutation on a node the snapshot never held (e.g. a UP push
+            // from an unregistered sender): nothing to patch.
+            (None, None) => true,
+        }
+    }
+
+    /// Patch one peer candidate in place (see [`Self::patch_device`]).
+    fn patch_peer(
+        &mut self,
+        edge: NodeId,
+        peers: &PeerTable,
+        suspects: &BTreeSet<NodeId>,
+        now_ms: f64,
+        max_staleness_ms: f64,
+        link_to: impl Fn(NodeId) -> Option<LinkModel>,
+    ) -> bool {
+        match (peers.get(edge), self.peer_pos.get(&edge)) {
+            (Some(p), Some(&i)) => {
+                // The entry's `via` may have moved to a link-less next hop
+                // (relayed copy applied): the candidate must disappear.
+                let Some(link) = link_to(p.via) else { return false };
+                self.peers[i] = PeerCandidate {
+                    state: *p,
+                    link,
+                    fresh: now_ms - p.updated_ms <= max_staleness_ms,
+                    suspect: suspects.contains(&p.edge) || suspects.contains(&p.via),
+                };
+                true
+            }
+            (Some(p), None) => link_to(p.via).is_none(),
+            (None, Some(_)) => false,
+            (None, None) => true,
         }
     }
 
@@ -378,18 +468,28 @@ pub fn should_shed(img: &ImageMeta, pool: &ContainerPool, now_ms: f64) -> bool {
 // The edge pipeline: Admit state + snapshot cache, owned by EdgeNode.
 // ---------------------------------------------------------------------
 
-/// Per-edge pipeline state. `DeviceNode` needs no state (its Admit and
-/// Overload stages are structurally absent — admission guards the cell
-/// ingest point), so the device side drives the stage *functions* only.
+/// Per-edge pipeline state. `DeviceNode` carries no pipeline struct (it
+/// drives the stage *functions* only), though it may hold its own
+/// [`AdmitStage`] when `[admission] device_intake = true` pushes the
+/// token bucket to the point where frames are born; by default admission
+/// guards the cell ingest point alone.
 #[derive(Debug, Clone)]
 pub struct EdgePipeline {
     admit: Option<AdmitStage>,
     snapshot: CandidateSnapshot,
     cache_key: Option<SnapshotKey>,
+    /// Incremental snapshot maintenance (on by default): patch the cached
+    /// snapshot forward from the tables' change journals instead of
+    /// rebuilding on every version bump. Switched off only by tests that
+    /// prove patched and rebuilt runs emit identical action streams.
+    incremental: bool,
     /// Lifetime counters for the perf trajectory (BENCH json, tests).
     pub snapshot_rebuilds: u64,
     /// Lifetime count of cache hits (see `snapshot_rebuilds`).
     pub snapshot_reuses: u64,
+    /// Lifetime count of incremental patches — version bumps absorbed
+    /// without a full table rescan (see `snapshot_rebuilds`).
+    pub snapshot_deltas: u64,
 }
 
 impl EdgePipeline {
@@ -399,9 +499,18 @@ impl EdgePipeline {
             admit: admission.map(AdmitStage::new),
             snapshot: CandidateSnapshot::new(),
             cache_key: None,
+            incremental: true,
             snapshot_rebuilds: 0,
             snapshot_reuses: 0,
+            snapshot_deltas: 0,
         }
+    }
+
+    /// Enable/disable incremental snapshot maintenance. With it off every
+    /// cache miss is a full rebuild — the twin-test lever proving the
+    /// delta path is behaviour-preserving.
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
     }
 
     /// Whether an Admit stage is configured at all. Callers gate the
@@ -428,7 +537,13 @@ impl EdgePipeline {
 
     /// The shared per-decision candidate snapshot, reused verbatim while
     /// nothing it derives from has changed (same instant, same origin,
-    /// unmutated tables/suspects) — the `decide_edge` hot-path win.
+    /// unmutated tables/suspects) — the `decide_edge` hot-path win. A
+    /// changed key first tries an *incremental* patch: same origin and
+    /// suspect set, every intervening mutation still in the tables'
+    /// bounded change journals, and no structural change — then only the
+    /// touched entries (plus the staleness flags, if the instant moved)
+    /// are re-resolved. Anything else falls back to a full rebuild, so
+    /// the snapshot is always byte-identical to a fresh one.
     #[allow(clippy::too_many_arguments)]
     pub fn prepare(
         &mut self,
@@ -448,16 +563,76 @@ impl EdgePipeline {
             peers_version: peers.version(),
             suspects_version,
         };
-        if self.cache_key != Some(key) {
+        if self.cache_key == Some(key) {
+            self.snapshot_reuses += 1;
+            return &self.snapshot;
+        }
+        let patched = match self.cache_key {
+            Some(old)
+                if self.incremental
+                    && old.origin == key.origin
+                    && old.suspects_version == key.suspects_version =>
+            {
+                self.try_patch(&old, table, peers, suspects, links, origin, now_ms, max_staleness_ms)
+            }
+            _ => false,
+        };
+        if patched {
+            self.snapshot_deltas += 1;
+        } else {
             self.snapshot.rebuild(table, peers, suspects, origin, now_ms, max_staleness_ms, |n| {
                 links.get(n.0 as usize).copied().flatten()
             });
-            self.cache_key = Some(key);
             self.snapshot_rebuilds += 1;
-        } else {
-            self.snapshot_reuses += 1;
         }
+        self.cache_key = Some(key);
         &self.snapshot
+    }
+
+    /// Patch the cached snapshot forward from `old` to the tables' current
+    /// versions. `false` (journal scrolled, or a structural change) means
+    /// the caller must rebuild — a partially patched snapshot is then
+    /// overwritten wholesale, so bailing mid-way is safe.
+    #[allow(clippy::too_many_arguments)]
+    fn try_patch(
+        &mut self,
+        old: &SnapshotKey,
+        table: &ProfileTable,
+        peers: &PeerTable,
+        suspects: &BTreeSet<NodeId>,
+        links: &[Option<LinkModel>],
+        origin: NodeId,
+        now_ms: f64,
+        max_staleness_ms: f64,
+    ) -> bool {
+        let link_to = |n: NodeId| links.get(n.0 as usize).copied().flatten();
+        let Some(dev_changes) = table.changes_since(old.table_version) else { return false };
+        let Some(peer_changes) = peers.changes_since(old.peers_version) else { return false };
+        if old.now_bits != now_ms.to_bits() {
+            self.snapshot.refresh_staleness(now_ms, max_staleness_ms);
+        }
+        for node in dev_changes {
+            if !self.snapshot.patch_device(
+                node,
+                table,
+                suspects,
+                origin,
+                now_ms,
+                max_staleness_ms,
+                link_to,
+            ) {
+                return false;
+            }
+        }
+        for edge in peer_changes {
+            if !self
+                .snapshot
+                .patch_peer(edge, peers, suspects, now_ms, max_staleness_ms, link_to)
+            {
+                return false;
+            }
+        }
+        true
     }
 
     /// Drop the cached snapshot (and key). Called on churn `fail()` —
@@ -625,10 +800,11 @@ mod tests {
         // Identical inputs → cache hit.
         p.prepare(&table, &peers, &suspects, 0, &links, NodeId(1), 5.0, 200.0);
         assert_eq!((p.snapshot_rebuilds, p.snapshot_reuses), (1, 1));
-        // Different origin → rebuild.
+        // Different origin → full rebuild (the exclusion set changed).
         p.prepare(&table, &peers, &suspects, 0, &links, NodeId(3), 5.0, 200.0);
         assert_eq!(p.snapshot_rebuilds, 2);
-        // Table mutation (version bump) → rebuild.
+        // In-place table mutation (UP push) → incremental patch, and the
+        // patched entry carries the new state.
         table.apply(&ProfileUpdate {
             node: NodeId(2),
             busy_containers: 1,
@@ -638,14 +814,135 @@ mod tests {
             battery_pct: None,
             sent_ms: 6.0,
         });
-        p.prepare(&table, &peers, &suspects, 0, &links, NodeId(3), 5.0, 200.0);
-        assert_eq!(p.snapshot_rebuilds, 3);
+        let s = p.prepare(&table, &peers, &suspects, 0, &links, NodeId(3), 5.0, 200.0);
+        assert_eq!(s.devices()[0].state.busy_containers, 1);
+        assert_eq!((p.snapshot_rebuilds, p.snapshot_deltas), (2, 1));
         // Suspects version bump → rebuild; explicit invalidate → rebuild.
         p.prepare(&table, &peers, &suspects, 1, &links, NodeId(3), 5.0, 200.0);
-        assert_eq!(p.snapshot_rebuilds, 4);
+        assert_eq!(p.snapshot_rebuilds, 3);
         p.invalidate();
         p.prepare(&table, &peers, &suspects, 1, &links, NodeId(3), 5.0, 200.0);
+        assert_eq!(p.snapshot_rebuilds, 4);
+        // A structural change (new registration) cannot be patched in.
+        table.register(NodeId(2), NodeClass::RaspberryPi, 2, 0.0); // re-register: in place
+        p.prepare(&table, &peers, &suspects, 1, &links, NodeId(3), 6.0, 200.0);
+        assert_eq!((p.snapshot_rebuilds, p.snapshot_deltas), (4, 2));
+        table.deregister(NodeId(2));
+        p.prepare(&table, &peers, &suspects, 1, &links, NodeId(3), 6.0, 200.0);
         assert_eq!(p.snapshot_rebuilds, 5);
+        // With incremental maintenance off, every miss is a rebuild.
+        p.set_incremental(false);
+        table.register(NodeId(2), NodeClass::RaspberryPi, 2, 0.0);
+        table.apply(&ProfileUpdate {
+            node: NodeId(2),
+            busy_containers: 0,
+            warm_containers: 2,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            battery_pct: None,
+            sent_ms: 7.0,
+        });
+        p.prepare(&table, &peers, &suspects, 1, &links, NodeId(3), 7.0, 200.0);
+        table.apply(&ProfileUpdate {
+            node: NodeId(2),
+            busy_containers: 1,
+            warm_containers: 2,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            battery_pct: None,
+            sent_ms: 8.0,
+        });
+        p.prepare(&table, &peers, &suspects, 1, &links, NodeId(3), 8.0, 200.0);
+        assert_eq!((p.snapshot_rebuilds, p.snapshot_deltas), (7, 2));
+    }
+
+    #[test]
+    fn patched_snapshot_equals_fresh_rebuild_under_churny_mutations() {
+        use crate::core::message::{EdgeSummary, ProfileUpdate};
+        let up = |node: u32, busy: u32, sent: f64| ProfileUpdate {
+            node: NodeId(node),
+            busy_containers: busy,
+            warm_containers: 2,
+            queued_images: busy,
+            cpu_load_pct: 5.0 * busy as f64,
+            battery_pct: None,
+            sent_ms: sent,
+        };
+        let summary = |edge: u32, busy: u32, sent: f64, hops: u8, via: u32| EdgeSummary {
+            edge: NodeId(edge),
+            busy_containers: busy,
+            warm_containers: 4,
+            queued_images: 0,
+            cpu_load_pct: 0.0,
+            device_idle_containers: 2,
+            sent_ms: sent,
+            hops,
+            via: NodeId(via),
+        };
+        let mut table = ProfileTable::new();
+        for n in [2u32, 3, 4] {
+            table.register(NodeId(n), NodeClass::RaspberryPi, 2, 0.0);
+        }
+        let mut peers = PeerTable::new();
+        peers.apply(&summary(9, 0, 0.0, 0, 9));
+        peers.apply(&summary(10, 0, 0.0, 1, 9));
+        let suspects = BTreeSet::new();
+        // Links for devices 2..4 and next hop 9; subject 10 is link-less
+        // (reachable only via 9) and node 4 is link-less entirely.
+        let mut links = vec![None; 11];
+        for n in [2usize, 3, 9] {
+            links[n] = Some(LinkModel::wifi());
+        }
+        let mut p = EdgePipeline::new(None);
+        p.prepare(&table, &peers, &suspects, 0, &links, NodeId(1), 10.0, 200.0);
+
+        // A churn-flavoured mutation burst: UP pushes, gossip refreshes,
+        // an optimistic bump, a stale-by-now device, and a time step —
+        // everything short of membership change.
+        table.apply(&up(2, 1, 20.0));
+        table.apply(&up(3, 2, 25.0));
+        table.apply(&up(4, 1, 25.0)); // link-less: patch is a no-op
+        table.apply(&up(7, 1, 25.0)); // unregistered sender: ignored
+        peers.apply(&summary(9, 3, 30.0, 0, 9));
+        peers.apply(&summary(10, 1, 28.0, 1, 9));
+        peers.bump_busy(NodeId(9));
+        let now = 240.0; // device 2's 20.0 push is now stale (cap 200)
+        let patched =
+            p.prepare(&table, &peers, &suspects, 0, &links, NodeId(1), now, 200.0).clone();
+        assert_eq!(p.snapshot_deltas, 1, "the burst must patch, not rebuild");
+        let fresh = CandidateSnapshot::build(&table, &peers, &suspects, NodeId(1), now, 200.0, |n| {
+            links.get(n.0 as usize).copied().flatten()
+        });
+        assert_eq!(patched.devices(), fresh.devices());
+        assert_eq!(patched.peers(), fresh.peers());
+        assert!(!patched.devices()[0].fresh, "device 2 must have gone stale");
+        assert_eq!(patched.peers()[0].state.busy_containers, 4, "bump visible");
+    }
+
+    #[test]
+    fn scrolled_change_journal_forces_rebuild() {
+        use crate::core::message::ProfileUpdate;
+        let mut table = ProfileTable::new();
+        table.register(NodeId(2), NodeClass::RaspberryPi, 2, 0.0);
+        let peers = PeerTable::new();
+        let suspects = BTreeSet::new();
+        let links = vec![None, None, Some(LinkModel::wifi())];
+        let mut p = EdgePipeline::new(None);
+        p.prepare(&table, &peers, &suspects, 0, &links, NodeId(1), 5.0, 200.0);
+        // Push the journal far past its window.
+        for i in 0..200u32 {
+            table.apply(&ProfileUpdate {
+                node: NodeId(2),
+                busy_containers: i % 2,
+                warm_containers: 2,
+                queued_images: 0,
+                cpu_load_pct: 0.0,
+                battery_pct: None,
+                sent_ms: 5.0 + i as f64,
+            });
+        }
+        p.prepare(&table, &peers, &suspects, 0, &links, NodeId(1), 6.0, 200.0);
+        assert_eq!((p.snapshot_rebuilds, p.snapshot_deltas), (2, 0));
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::container::ContainerPool;
 use crate::core::message::{EdgeSummary, ForwardRoute, Message, UserRequest};
 use crate::core::{DropReason, ImageMeta, NodeClass, NodeId, Placement, TaskId};
 use crate::device::Action;
-use crate::net::{LinkModel, Topology};
+use crate::net::{LinkModel, RegionMap, Topology};
 use crate::profile::{PeerTable, ProfileTable};
 use crate::scheduler::pipeline::{self, AdmitVerdict, EdgeIntake};
 use crate::scheduler::{
@@ -78,6 +78,10 @@ pub struct EdgeNode {
     /// 1 when unset / out of range) — the federation level's queue-depth
     /// discount.
     app_weights: Vec<u32>,
+    /// Region assignment for hierarchical gossip aggregation (DESIGN.md
+    /// §Hierarchical gossip). `None` (the default) keeps classic
+    /// transitive gossip — [`EdgeNode::gossip_out`] — byte-identical.
+    regions: Option<RegionMap>,
 }
 
 impl EdgeNode {
@@ -111,7 +115,23 @@ impl EdgeNode {
             pipeline: EdgePipeline::new(None),
             max_forward_hops: 1,
             app_weights: Vec::new(),
+            regions: None,
         }
+    }
+
+    /// Enable region-aggregated gossip (builder style; wired by the
+    /// scenario builder for [`crate::net::FederationShape::Hier`]
+    /// federations — DESIGN.md §Hierarchical gossip). The map must agree
+    /// with the backhaul wiring ([`Topology::multi_cell_shaped`] builds
+    /// both from the same grouping).
+    pub fn with_regions(mut self, regions: RegionMap) -> Self {
+        self.regions = Some(regions);
+        self
+    }
+
+    /// The region map, when hierarchical gossip is enabled.
+    pub fn regions(&self) -> Option<&RegionMap> {
+        self.regions.as_ref()
     }
 
     /// Enable heartbeat-based failure detection (builder style; churn
@@ -155,6 +175,13 @@ impl EdgeNode {
     /// cache-less runs emit identical action streams).
     pub fn invalidate_snapshot_cache(&mut self) {
         self.pipeline.invalidate();
+    }
+
+    /// Toggle incremental snapshot maintenance (see
+    /// [`EdgePipeline::set_incremental`]). On by default; twin tests
+    /// switch it off to prove the delta path is behaviour-preserving.
+    pub fn set_snapshot_incremental(&mut self, on: bool) {
+        self.pipeline.set_incremental(on);
     }
 
     /// Nodes currently suspected down by the failure detector.
@@ -251,6 +278,94 @@ impl EdgeNode {
             ));
         }
         out
+    }
+
+    /// Destination-specific gossip for region-aggregated mode (DESIGN.md
+    /// §Hierarchical gossip; requires [`EdgeNode::with_regions`]). Unlike
+    /// [`EdgeNode::gossip_out`] — one batch fanned out to every neighbor —
+    /// the hierarchical protocol shapes each message set by where the link
+    /// points:
+    ///
+    /// * **In-region neighbor**: the full-resolution own summary, exactly
+    ///   as classic gossip sends it. A region *leader* additionally relays
+    ///   the foreign-region aggregates it holds, damped one hop, so
+    ///   members learn remote capacity as one entry per foreign region
+    ///   instead of one per cell.
+    /// * **Cross-region neighbor** (leader mesh): a single aggregate
+    ///   summarizing this whole region — own pool plus every fresh,
+    ///   unsuspected region-mate entry summed. This is what cuts gossip
+    ///   volume from O(cells²) toward O(cells · regions): cell-level
+    ///   detail never crosses a region boundary.
+    ///
+    /// Split horizon is applied here (the caller sends everything
+    /// returned): a relay is never sent to its subject or to the neighbor
+    /// it was learned from. Aggregates are ordinary [`EdgeSummary`]
+    /// messages — the receive path, wire format and scoring are untouched.
+    pub fn gossip_for_peer(&self, peer: NodeId, now_ms: f64) -> Vec<EdgeSummary> {
+        let Some(regions) = &self.regions else {
+            return Vec::new();
+        };
+        if !regions.same_region(self.id, peer) {
+            return vec![self.region_aggregate(now_ms, regions)];
+        }
+        let mut out = vec![self.summary(now_ms)];
+        if regions.is_leader(self.id) {
+            for p in self.peers.iter() {
+                if now_ms - p.updated_ms > self.max_staleness_ms {
+                    continue;
+                }
+                if self.suspects.contains(&p.edge) || p.hops >= Self::GOSSIP_RELAY_HORIZON {
+                    continue;
+                }
+                // Only foreign-leader aggregates travel inward; a member
+                // entry would duplicate the intra-region mesh gossip.
+                if regions.same_region(p.edge, self.id) || !regions.is_leader(p.edge) {
+                    continue;
+                }
+                // Split horizon (mirrors the classic caller's checks).
+                if p.edge == peer || p.via == peer {
+                    continue;
+                }
+                // Same damping as classic relays: idle capacity halves,
+                // the subject timestamp is preserved.
+                let idle = p.warm_containers.saturating_sub(p.busy_containers);
+                out.push(EdgeSummary {
+                    edge: p.edge,
+                    busy_containers: p.busy_containers,
+                    warm_containers: p.busy_containers + idle / 2,
+                    queued_images: p.queued_images,
+                    cpu_load_pct: p.cpu_load_pct,
+                    device_idle_containers: p.device_idle_containers / 2,
+                    sent_ms: p.updated_ms,
+                    hops: p.hops + 1,
+                    via: self.id,
+                });
+            }
+        }
+        out
+    }
+
+    /// One [`EdgeSummary`] describing this edge's *whole region*: own pool
+    /// state plus every fresh, unsuspected region-mate entry, summed.
+    /// Advertised across the leader mesh under the leader's own id
+    /// (`hops = 0`, fresh timestamp) — to the rest of the federation a
+    /// region looks like one big cell, and forwards toward it route
+    /// through its leader.
+    fn region_aggregate(&self, now_ms: f64, regions: &RegionMap) -> EdgeSummary {
+        let mut agg = self.summary(now_ms);
+        for p in self.peers.iter() {
+            if now_ms - p.updated_ms > self.max_staleness_ms {
+                continue;
+            }
+            if self.suspects.contains(&p.edge) || !regions.same_region(p.edge, self.id) {
+                continue;
+            }
+            agg.busy_containers += p.busy_containers;
+            agg.warm_containers += p.warm_containers;
+            agg.queued_images += p.queued_images;
+            agg.device_idle_containers += p.device_idle_containers;
+        }
+        agg
     }
 
     fn snapshot(&self) -> LocalSnapshot {

@@ -38,6 +38,11 @@ pub enum Ev {
     NodeRecover { node: NodeId },
     /// Change a node's background CPU load (stress schedule, Fig. 8).
     SetLoad { node: NodeId, pct: f64 },
+    /// Next frame of a *coalesced* stream arrives (city-scale hardening):
+    /// large streams keep one pending arrival event per stream instead of
+    /// one per frame, so a 10⁶-frame sweep doesn't front-load a 10⁶-entry
+    /// heap. `stream` indexes the engine's lazy-stream table.
+    StreamArrival { stream: usize },
 }
 
 /// Typed failure of workload injection — a malformed scenario (frame
@@ -136,6 +141,19 @@ pub struct Engine {
     created: usize,
     resolved: HashSet<TaskId>,
     events_processed: u64,
+    /// Hard cap on `events_processed` — a runaway-run abort guard for
+    /// city-scale sweeps (default `u64::MAX`: no cap). The run breaks with
+    /// an error log when exceeded; unresolved tasks summarize as dropped,
+    /// exactly like a horizon break.
+    max_events: u64,
+    /// Coalesced streams: `(frames, next-index-to-arrive)` per stream fed
+    /// through [`Engine::push_stream`] at or above the coalesce threshold.
+    lazy_streams: Vec<(Vec<ImageMeta>, usize)>,
+    /// Streams with at least this many frames schedule arrivals lazily
+    /// (one [`Ev::StreamArrival`] in flight per stream). Below it the
+    /// classic pre-scheduled path runs, keeping existing replays
+    /// bit-identical.
+    coalesce_threshold: usize,
     /// Reusable per-event action buffer (perf: avoids one Vec allocation
     /// per event — EXPERIMENTS.md §Perf change 2).
     scratch: Vec<Action>,
@@ -178,8 +196,30 @@ impl Engine {
             created: 0,
             resolved: HashSet::new(),
             events_processed: 0,
+            max_events: u64::MAX,
+            lazy_streams: Vec::new(),
+            coalesce_threshold: Self::DEFAULT_COALESCE_THRESHOLD,
             scratch: Vec::with_capacity(16),
         }
+    }
+
+    /// Streams of at least this many frames arrive lazily (see
+    /// [`Ev::StreamArrival`]). High enough that every classic experiment
+    /// takes the pre-scheduled path unchanged.
+    pub const DEFAULT_COALESCE_THRESHOLD: usize = 10_000;
+
+    /// Override the per-stream coalesce threshold (tests exercise the lazy
+    /// path with tiny streams).
+    pub fn set_coalesce_threshold(&mut self, frames: usize) {
+        self.coalesce_threshold = frames;
+    }
+
+    /// Cap the total number of events this run may process (abort guard
+    /// for city-scale sweeps; default unlimited). Exceeding the cap breaks
+    /// the run loop with an error log — unresolved tasks summarize as
+    /// dropped, like a horizon break.
+    pub fn set_max_events(&mut self, cap: u64) {
+        self.max_events = cap;
     }
 
     /// Is `node` currently failed (churn)?
@@ -206,19 +246,32 @@ impl Engine {
     }
 
     /// Lifetime candidate-snapshot cache counters summed over every edge
-    /// server: `(rebuilds, reuses)`. Surfaced in
+    /// server: `(rebuilds, reuses, deltas)`. Surfaced in
     /// [`crate::metrics::RunSummary`] for the perf dashboards (ROADMAP
     /// PR-4 follow-up; keying documented in DESIGN.md §3).
-    pub fn snapshot_counters(&self) -> (u64, u64) {
+    pub fn snapshot_counters(&self) -> (u64, u64, u64) {
         self.nodes
             .iter()
             .filter_map(|n| match n {
-                SimNode::Edge(e) => {
-                    Some((e.pipeline().snapshot_rebuilds, e.pipeline().snapshot_reuses))
-                }
+                SimNode::Edge(e) => Some((
+                    e.pipeline().snapshot_rebuilds,
+                    e.pipeline().snapshot_reuses,
+                    e.pipeline().snapshot_deltas,
+                )),
                 SimNode::Device(_) => None,
             })
-            .fold((0, 0), |(rb, ru), (r, u)| (rb + r, ru + u))
+            .fold((0, 0, 0), |(rb, ru, rd), (r, u, d)| (rb + r, ru + u, rd + d))
+    }
+
+    /// Toggle incremental candidate-snapshot maintenance on every edge
+    /// pipeline. On by default; determinism twin tests switch it off to
+    /// prove patched and rebuilt runs replay byte-identically.
+    pub fn set_snapshot_incremental(&mut self, on: bool) {
+        for n in &mut self.nodes {
+            if let SimNode::Edge(e) = n {
+                e.set_snapshot_incremental(on);
+            }
+        }
     }
 
     /// Battery state of every battery-powered device:
@@ -257,6 +310,22 @@ impl Engine {
                     return Err(SimError::UnknownOrigin { node: img.origin, task: img.task })
                 }
             }
+        }
+        if !frames.is_empty() && frames.len() >= self.coalesce_threshold {
+            // City-scale hardening: register the whole stream with the
+            // recorder up front (row order and `created` accounting are
+            // identical to the classic path) but keep only ONE pending
+            // arrival event in the heap; each arrival schedules the next.
+            // The heap stays O(active events) instead of O(total frames).
+            for img in frames {
+                self.recorder.created(img);
+                self.created += 1;
+            }
+            let stream = self.lazy_streams.len();
+            let first_at = frames[0].created_ms;
+            self.lazy_streams.push((frames.to_vec(), 0));
+            self.schedule(first_at, Ev::StreamArrival { stream });
+            return Ok(());
         }
         // Perf (EXPERIMENTS.md §Perf change 1): pre-reserve the event heap
         // for the whole stream plus per-image follow-on events, avoiding
@@ -346,6 +415,14 @@ impl Engine {
             if self.now_ms > self.horizon_ms {
                 break;
             }
+            if self.events_processed > self.max_events {
+                log::error!(
+                    "aborting run: event budget {} exhausted at {:.1} ms",
+                    self.max_events,
+                    self.now_ms
+                );
+                break;
+            }
             self.handle(ev);
             if self.created > 0 && self.resolved.len() == self.created {
                 // All workload resolved; drain nothing further.
@@ -380,6 +457,36 @@ impl Engine {
                     }
                 }
                 self.apply(node, out);
+            }
+            Ev::StreamArrival { stream } => {
+                // Coalesced stream: materialize exactly one frame, then
+                // re-arm the stream's single pending arrival event. The
+                // frame handling mirrors `Ev::CameraFrame` byte for byte.
+                let (img, next_at) = {
+                    let (frames, next) = &mut self.lazy_streams[stream];
+                    let img = frames[*next];
+                    *next += 1;
+                    (img, frames.get(*next).map(|f| f.created_ms))
+                };
+                let node = img.origin;
+                if self.dead[node.0 as usize] {
+                    log::debug!("camera frame {} lost: origin {node} is down", img.task);
+                    self.resolved.insert(img.task);
+                } else {
+                    match &mut self.nodes[node.0 as usize] {
+                        SimNode::Device(d) => d.on_camera_frame(img, now, &mut out),
+                        SimNode::Edge(_) => {
+                            log::error!("{}", SimError::CameraAtEdge { node, task: img.task });
+                            self.resolved.insert(img.task);
+                        }
+                    }
+                }
+                self.apply(node, out);
+                if let Some(at) = next_at {
+                    // Streams are generated time-ordered; clamp defends a
+                    // hand-built unordered stream from asserting.
+                    self.schedule(at.max(now), Ev::StreamArrival { stream });
+                }
             }
             Ev::Deliver { to, msg } => {
                 if self.dead[to.0 as usize] {
@@ -426,31 +533,52 @@ impl Engine {
             Ev::GossipTick { edge } => {
                 if !self.dead[edge.0 as usize] {
                     if let SimNode::Edge(e) = &mut self.nodes[edge.0 as usize] {
-                        // Transitive gossip (DESIGN.md §Hierarchical
-                        // routing): own summary plus damped relays, to
-                        // *linked* neighbors only (a line topology has no
-                        // backhaul between non-adjacent edges), with
-                        // split horizon (never advertise a subject to
-                        // itself).
-                        let msgs = e.gossip_out(now);
-                        for peer in self.topology.linked_peer_edges(edge) {
-                            for (s, learned_from) in &msgs {
-                                // Split horizon, both directions: never
-                                // advertise a subject to itself, and never
-                                // echo an entry back to the neighbor it
-                                // was learned from (guaranteed-stale).
-                                if s.edge == peer || *learned_from == peer {
-                                    continue;
+                        if e.regions().is_some() {
+                            // Region-aggregated gossip (DESIGN.md
+                            // §Hierarchical gossip): each linked neighbor
+                            // gets a destination-shaped batch — full
+                            // detail inside the region, one aggregate
+                            // across the leader mesh. Split horizon is
+                            // applied inside `gossip_for_peer`.
+                            for peer in self.topology.linked_peer_edges(edge) {
+                                for s in e.gossip_for_peer(peer, now) {
+                                    let msg = Message::EdgeSummary(s);
+                                    self.recorder.gossip_bytes(
+                                        edge,
+                                        crate::core::wire::encoded_len(&msg) as u64,
+                                    );
+                                    out.push(Action::Send { to: peer, msg, reliable: true });
                                 }
-                                let msg = Message::EdgeSummary(*s);
-                                // Gossip byte-budget meter: account the
-                                // frame's wire size to the sending edge
-                                // (same analytic length live mode counts).
-                                self.recorder.gossip_bytes(
-                                    edge,
-                                    crate::core::wire::encoded_len(&msg) as u64,
-                                );
-                                out.push(Action::Send { to: peer, msg, reliable: true });
+                            }
+                        } else {
+                            // Transitive gossip (DESIGN.md §Hierarchical
+                            // routing): own summary plus damped relays, to
+                            // *linked* neighbors only (a line topology has
+                            // no backhaul between non-adjacent edges),
+                            // with split horizon (never advertise a
+                            // subject to itself).
+                            let msgs = e.gossip_out(now);
+                            for peer in self.topology.linked_peer_edges(edge) {
+                                for (s, learned_from) in &msgs {
+                                    // Split horizon, both directions:
+                                    // never advertise a subject to itself,
+                                    // and never echo an entry back to the
+                                    // neighbor it was learned from
+                                    // (guaranteed-stale).
+                                    if s.edge == peer || *learned_from == peer {
+                                        continue;
+                                    }
+                                    let msg = Message::EdgeSummary(*s);
+                                    // Gossip byte-budget meter: account
+                                    // the frame's wire size to the sending
+                                    // edge (same analytic length live mode
+                                    // counts).
+                                    self.recorder.gossip_bytes(
+                                        edge,
+                                        crate::core::wire::encoded_len(&msg) as u64,
+                                    );
+                                    out.push(Action::Send { to: peer, msg, reliable: true });
+                                }
                             }
                         }
                     }
@@ -595,6 +723,16 @@ use crate::config::WorkloadConfig;
     use crate::sim::workload::ImageStream;
 
     fn build(policy: PolicyKind, n_images: u32, interval: f64, deadline: f64) -> Engine {
+        build_thresh(policy, n_images, interval, deadline, None)
+    }
+
+    fn build_thresh(
+        policy: PolicyKind,
+        n_images: u32,
+        interval: f64,
+        deadline: f64,
+        coalesce: Option<usize>,
+    ) -> Engine {
         let topo = Topology::paper_testbed(4, 2);
         let edge = EdgeNode::new(
             NodeId(0),
@@ -634,6 +772,9 @@ use crate::config::WorkloadConfig;
             SplitMix64::new(1),
         )
         .generate();
+        if let Some(t) = coalesce {
+            eng.set_coalesce_threshold(t);
+        }
         eng.push_stream(&frames).unwrap();
         eng
     }
@@ -721,6 +862,44 @@ use crate::config::WorkloadConfig;
         eng.horizon_ms = 1_000.0;
         eng.run();
         assert!(eng.now_ms() <= 1_100.0);
+    }
+
+    #[test]
+    fn event_budget_aborts_runaway() {
+        // City-scale abort guard: the run breaks on the event after the
+        // budget, regardless of how much workload is still pending.
+        let mut eng = build(PolicyKind::Aor, 50, 10.0, 1e9);
+        eng.set_max_events(10);
+        let n = eng.run();
+        assert_eq!(n, 11, "breaks on the first event past the budget");
+        // Everything unprocessed still summarizes (as dropped), so an
+        // aborted sweep reports instead of wedging.
+        assert_eq!(eng.recorder.summarize().total, 50);
+    }
+
+    #[test]
+    fn coalesced_stream_resolves_everything_and_replays() {
+        // Lazy (one-arrival-in-flight) scheduling is its own replay
+        // universe — same-timestamp interleaving with timer events can
+        // differ from the pre-scheduled path — but within the universe it
+        // must resolve the full workload and replay exactly.
+        let run = || {
+            let mut eng = build_thresh(PolicyKind::Dds, 50, 50.0, 2000.0, Some(1));
+            eng.run();
+            let s = eng.recorder.summarize();
+            (s.met, s.missed, s.dropped, s.total)
+        };
+        let a = run();
+        assert_eq!(a.3, 50);
+        assert_eq!(a.0 + a.1 + a.2, 50, "every coalesced frame resolves");
+        assert_eq!(a, run(), "coalesced replay is deterministic");
+        // Below the threshold the classic path is untouched: the default
+        // threshold keeps this exact workload pre-scheduled.
+        let mut classic = build(PolicyKind::Dds, 50, 50.0, 2000.0);
+        assert!(classic.lazy_streams.is_empty());
+        classic.run();
+        let s = classic.recorder.summarize();
+        assert_eq!(s.met + s.missed + s.dropped, 50);
     }
 
     // ---- churn (DESIGN.md §Churn) ------------------------------------

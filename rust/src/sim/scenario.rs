@@ -6,7 +6,7 @@ use crate::container::ContainerPool;
 use crate::core::{ImageMeta, NodeClass, NodeId};
 use crate::device::DeviceNode;
 use crate::metrics::{RunSummary, TaskRecord};
-use crate::net::{CellSpec, Topology};
+use crate::net::{CellSpec, FederationShape, RegionMap, Topology};
 use crate::profile::{profile_for, Predictor};
 use crate::scheduler::PolicyKind;
 use crate::server::EdgeNode;
@@ -47,12 +47,15 @@ pub struct ScenarioBuilder {
     cfg: SystemConfig,
     /// Background-load schedule: (at_ms, node, pct).
     load_schedule: Vec<(f64, NodeId, f64)>,
+    /// Event-budget abort guard for city-scale runs
+    /// ([`Engine::set_max_events`]). `None` = unbounded (classic).
+    max_events: Option<u64>,
 }
 
 impl ScenarioBuilder {
     /// Build a scenario around a config.
     pub fn new(cfg: SystemConfig) -> Self {
-        Self { cfg, load_schedule: Vec::new() }
+        Self { cfg, load_schedule: Vec::new(), max_events: None }
     }
 
     /// The paper's Fig. 4 testbed with a given policy.
@@ -99,6 +102,13 @@ impl ScenarioBuilder {
     /// Schedule a load change mid-run.
     pub fn load_at(mut self, at_ms: f64, node: NodeId, pct: f64) -> Self {
         self.load_schedule.push((at_ms, node, pct));
+        self
+    }
+
+    /// Cap the engine's processed-event count (city-scale runaway guard —
+    /// a mis-sized sweep aborts with an error instead of spinning).
+    pub fn max_events(mut self, cap: u64) -> Self {
+        self.max_events = Some(cap);
         self
     }
 
@@ -273,6 +283,19 @@ impl ScenarioBuilder {
         // discipline and absent admission are structural no-ops.
         let discipline = cfg.queue_discipline();
         let admission = cfg.admission_params();
+        // Device-intake admission (`[admission] device_intake`): same
+        // bucket parameters, enforced where frames are born. `None` for
+        // legacy configs — structurally inert.
+        let device_admission = cfg.device_admission_params();
+        // Region-aggregated gossip rides on the `hier` wiring — the same
+        // grouping that shaped the backhaul links (DESIGN.md §Hierarchical
+        // gossip). Every other shape keeps classic transitive gossip.
+        let regions = match cfg.federation.topology {
+            FederationShape::Hier { region_size } => {
+                Some(RegionMap::grouped(&edge_ids, region_size))
+            }
+            _ => None,
+        };
 
         // Nodes in NodeId order: per cell, the edge then its devices.
         let mut nodes = Vec::with_capacity(topo.len());
@@ -305,6 +328,9 @@ impl ScenarioBuilder {
             if let Some(params) = admission.clone() {
                 edge_node = edge_node.with_admission(params);
             }
+            if let Some(r) = &regions {
+                edge_node = edge_node.with_regions(r.clone());
+            }
             nodes.push(SimNode::Edge(edge_node));
             for (i, d) in cfg.devices.iter().enumerate() {
                 if d.cell != c as u32 {
@@ -329,6 +355,9 @@ impl ScenarioBuilder {
                 }
                 if churn_on {
                     node = node.with_detector(cfg.churn.detector());
+                }
+                if let Some(params) = device_admission.clone() {
+                    node = node.with_admission(params);
                 }
                 nodes.push(SimNode::Device(node));
             }
@@ -356,6 +385,9 @@ impl ScenarioBuilder {
         };
 
         let mut eng = Engine::new(nodes, topo, cfg.seed, cfg.profile_period_ms, horizon);
+        if let Some(cap) = self.max_events {
+            eng.set_max_events(cap);
+        }
         // Mid-run joiners exist only after their scheduled join.
         for n in Self::joiners(cfg, &device_ids, &edge_ids) {
             eng.set_dead_from_start(n);
@@ -394,10 +426,11 @@ impl ScenarioBuilder {
         // Pipeline cache counters ride in the summary for the perf
         // dashboards (ROADMAP PR-4 follow-up): deterministic in virtual
         // mode, so seeded-replay comparisons cover them too.
-        let (snapshot_rebuilds, snapshot_reuses) = eng.snapshot_counters();
+        let (snapshot_rebuilds, snapshot_reuses, snapshot_deltas) = eng.snapshot_counters();
         let mut summary = eng.recorder.summarize();
         summary.snapshot_rebuilds = snapshot_rebuilds;
         summary.snapshot_reuses = snapshot_reuses;
+        summary.snapshot_deltas = snapshot_deltas;
         RunReport {
             policy: self.cfg.policy,
             summary,

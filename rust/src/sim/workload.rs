@@ -18,18 +18,40 @@ pub enum ArrivalPattern {
     /// Bursts of `burst` back-to-back frames (1 ms apart), bursts spaced so
     /// the long-run rate matches `interval_ms` — motion-triggered cameras.
     Bursty { burst: u32 },
+    /// Sinusoidal day/night rate modulation with the given period: the
+    /// instantaneous rate swings ±80% around `1/interval_ms` across one
+    /// cycle (city-scale diurnal traffic). Deterministic — no RNG draw.
+    Diurnal {
+        /// One full day/night cycle, in ms of virtual time.
+        period_ms: f64,
+    },
+    /// Flash crowd: uniform baseline, except the middle fifth of the
+    /// stream arrives at `mult ×` the baseline rate (a stadium letting
+    /// out, a viral event). Deterministic — no RNG draw.
+    FlashCrowd {
+        /// Rate multiplier inside the crowd window (≥ 1).
+        mult: u32,
+    },
 }
 
 impl ArrivalPattern {
-    /// Parse a config spelling (`uniform` | `poisson` | `bursty:N`).
+    /// Parse a config spelling
+    /// (`uniform` | `poisson` | `bursty:N` | `diurnal:PERIOD_MS` | `flash:MULT`).
     pub fn parse(s: &str) -> Option<ArrivalPattern> {
         match s {
             "uniform" => Some(ArrivalPattern::Uniform),
             "poisson" => Some(ArrivalPattern::Poisson),
-            _ => s
-                .strip_prefix("bursty:")
-                .and_then(|n| n.parse().ok())
-                .map(|burst| ArrivalPattern::Bursty { burst }),
+            _ => {
+                if let Some(n) = s.strip_prefix("bursty:") {
+                    return n.parse().ok().map(|burst| ArrivalPattern::Bursty { burst });
+                }
+                if let Some(p) = s.strip_prefix("diurnal:") {
+                    let period_ms: f64 = p.parse().ok()?;
+                    return (period_ms > 0.0).then_some(ArrivalPattern::Diurnal { period_ms });
+                }
+                let m: u32 = s.strip_prefix("flash:")?.parse().ok()?;
+                (m >= 1).then_some(ArrivalPattern::FlashCrowd { mult: m })
+            }
         }
     }
 }
@@ -135,6 +157,29 @@ impl ImageStream {
                         in_burst = 0;
                         t += burst as f64 * i;
                     }
+                }
+            }
+            ArrivalPattern::Diurnal { period_ms } => {
+                // Gap = interval / rate-factor, where the factor follows a
+                // sine over the cycle: 1.8× the base rate at midday, 0.2×
+                // at night. Integrating gap-by-gap keeps it deterministic
+                // and strictly increasing.
+                let mut t = 0.0;
+                for _ in 0..n {
+                    times.push(t);
+                    let phase = std::f64::consts::TAU * t / period_ms;
+                    t += i / (1.0 + 0.8 * phase.sin());
+                }
+            }
+            ArrivalPattern::FlashCrowd { mult } => {
+                // Uniform at `interval`, except frames in [0.4n, 0.6n)
+                // arrive `mult`× faster — the crowd window.
+                let mult = mult.max(1) as f64;
+                let (lo, hi) = (2 * n / 5, 3 * n / 5);
+                let mut t = 0.0;
+                for k in 0..n {
+                    times.push(t);
+                    t += if (lo..hi).contains(&k) { i / mult } else { i };
                 }
             }
         }
@@ -273,7 +318,63 @@ mod tests {
             Some(ArrivalPattern::Bursty { burst: 8 })
         );
         assert_eq!(ArrivalPattern::parse("bursty:x"), None);
+        assert_eq!(
+            ArrivalPattern::parse("diurnal:60000"),
+            Some(ArrivalPattern::Diurnal { period_ms: 60_000.0 })
+        );
+        assert_eq!(ArrivalPattern::parse("diurnal:0"), None);
+        assert_eq!(
+            ArrivalPattern::parse("flash:5"),
+            Some(ArrivalPattern::FlashCrowd { mult: 5 })
+        );
+        assert_eq!(ArrivalPattern::parse("flash:0"), None);
         assert_eq!(ArrivalPattern::parse("nope"), None);
+    }
+
+    #[test]
+    fn diurnal_modulates_rate_and_preserves_order() {
+        let s = ImageStream::new(cfg(400, 50.0), NodeId(1), SplitMix64::new(3))
+            .pattern(ArrivalPattern::Diurnal { period_ms: 10_000.0 });
+        let imgs = s.generate();
+        // Strictly increasing — a sim event stream needs monotone arrivals.
+        assert!(imgs.windows(2).all(|w| w[1].created_ms > w[0].created_ms));
+        // The rate actually swings: the shortest gap is well below the
+        // base interval and the longest well above it.
+        let gaps: Vec<f64> =
+            imgs.windows(2).map(|w| w[1].created_ms - w[0].created_ms).collect();
+        let min = gaps.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = gaps.iter().cloned().fold(0.0, f64::max);
+        assert!(min < 40.0, "peak-rate gap {min} should be < 40 ms");
+        assert!(max > 100.0, "night-rate gap {max} should be > 100 ms");
+        // Deterministic: no RNG is drawn, so replays are trivially equal.
+        let again = ImageStream::new(cfg(400, 50.0), NodeId(1), SplitMix64::new(999))
+            .pattern(ArrivalPattern::Diurnal { period_ms: 10_000.0 })
+            .generate();
+        let t: Vec<f64> = imgs.iter().map(|i| i.created_ms).collect();
+        let u: Vec<f64> = again.iter().map(|i| i.created_ms).collect();
+        assert_eq!(t, u);
+    }
+
+    #[test]
+    fn flash_crowd_compresses_the_middle_fifth() {
+        let s = ImageStream::new(cfg(100, 50.0), NodeId(1), SplitMix64::new(3))
+            .pattern(ArrivalPattern::FlashCrowd { mult: 5 });
+        let imgs = s.generate();
+        assert!(imgs.windows(2).all(|w| w[1].created_ms > w[0].created_ms));
+        // Before the window: uniform 50 ms gaps.
+        assert_eq!(imgs[1].created_ms - imgs[0].created_ms, 50.0);
+        // Inside the window [40, 60): 10 ms gaps.
+        assert_eq!(imgs[41].created_ms - imgs[40].created_ms, 10.0);
+        assert_eq!(imgs[59].created_ms - imgs[58].created_ms, 10.0);
+        // After the window: back to the baseline.
+        assert_eq!(imgs[61].created_ms - imgs[60].created_ms, 50.0);
+        // mult = 1 is exactly uniform.
+        let flat = ImageStream::new(cfg(100, 50.0), NodeId(1), SplitMix64::new(3))
+            .pattern(ArrivalPattern::FlashCrowd { mult: 1 })
+            .generate();
+        for (k, img) in flat.iter().enumerate() {
+            assert_eq!(img.created_ms, k as f64 * 50.0);
+        }
     }
 
     #[test]

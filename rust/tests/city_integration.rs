@@ -1,0 +1,99 @@
+//! Integration: city-scale federation (DESIGN.md §Hierarchical gossip) —
+//! seeded 64-cell replay determinism, regional-gossip equivalence with
+//! classic placement on a degenerate single-region city, and
+//! incremental-vs-rebuilt candidate-snapshot equality under churn.
+
+use edge_dds::config::{ChurnEvent, ChurnKind, ChurnTarget};
+use edge_dds::experiments::city_config;
+use edge_dds::metrics::csv_line;
+use edge_dds::metrics::writer::summary_json;
+use edge_dds::net::FederationShape;
+use edge_dds::sim::ScenarioBuilder;
+
+#[test]
+fn seeded_city_run_replays_byte_identically() {
+    // The headline determinism claim: a 64-cell hierarchical city —
+    // regional gossip, diurnal + flash-crowd arrivals, mixed districts —
+    // replays byte-identical CSV and JSON from the same seed.
+    let cfg = city_config(64, FederationShape::Hier { region_size: 8 }, 4);
+    let run = || ScenarioBuilder::new(cfg.clone()).seed(0xC17).run();
+    let (a, b) = (run(), run());
+    // 64 cameras × (4 diurnal + 2 flash + 2 batch) frames.
+    assert_eq!(a.summary.total, 64 * 8);
+    assert_eq!(a.summary.met + a.summary.missed + a.summary.dropped, a.summary.total);
+    assert_eq!(a.summary.privacy_violations, 0, "cell_local flash frames must not leak");
+    assert!(a.summary.forwarded > 0, "downtown cells must overflow across the backhaul");
+    assert!(a.summary.gossip_bytes.values().sum::<u64>() > 0);
+    assert_eq!(summary_json("city", &a.summary), summary_json("city", &b.summary));
+    let csv_a: Vec<String> = a.records.iter().map(csv_line).collect();
+    let csv_b: Vec<String> = b.records.iter().map(csv_line).collect();
+    assert_eq!(csv_a, csv_b);
+    assert_eq!(a.virtual_ms, b.virtual_ms);
+    assert_eq!(a.events, b.events);
+}
+
+#[test]
+fn single_region_hier_matches_classic_mesh_placement() {
+    // Degenerate hierarchy: one region spanning the whole city makes the
+    // hier wiring a full mesh, and regional gossip degenerates to "own
+    // summary to every neighbor". Classic mesh gossip additionally sends
+    // damped relays — but in a full mesh every receiver already holds a
+    // same-tick direct copy, so freshest-wins (ties broken toward fewer
+    // hops) rejects every relay and both modes converge to identical peer
+    // tables at identical times. Placement must therefore be identical;
+    // only the bytes moved differ (that is the aggregation's whole point).
+    let one = |shape| {
+        let mut cfg = city_config(8, shape, 8);
+        cfg.federation.max_forward_hops = 1;
+        ScenarioBuilder::new(cfg).seed(11).run()
+    };
+    let classic = one(FederationShape::Mesh);
+    let regional = one(FederationShape::Hier { region_size: 8 });
+    assert!(
+        regional.summary.gossip_bytes.values().sum::<u64>()
+            < classic.summary.gossip_bytes.values().sum::<u64>(),
+        "regional gossip must move fewer bytes than classic relaying"
+    );
+    let mut c = classic.summary.clone();
+    let mut r = regional.summary.clone();
+    // Gossip metering is the one intended difference; everything else —
+    // placements, latencies, per-app rows, hop counters — must match.
+    c.gossip_bytes = Default::default();
+    r.gossip_bytes = Default::default();
+    assert_eq!(c, r);
+    let csv_c: Vec<String> = classic.records.iter().map(csv_line).collect();
+    let csv_r: Vec<String> = regional.records.iter().map(csv_line).collect();
+    assert_eq!(csv_c, csv_r);
+}
+
+#[test]
+fn incremental_snapshots_match_full_rebuilds_under_churn() {
+    // The PR-4 candidate-snapshot cache, now maintained by in-place
+    // deltas: a run with incremental maintenance must place every frame
+    // exactly as a run that rebuilds from scratch on every version bump.
+    // Scripted churn forces the structural-change fallback (devices leave
+    // and rejoin the MP table) on top of the steady delta stream.
+    let mut cfg = city_config(4, FederationShape::Hier { region_size: 2 }, 10);
+    cfg.churn.events = vec![
+        ChurnEvent { at_ms: 800.0, target: ChurnTarget::Device(1), kind: ChurnKind::Fail },
+        ChurnEvent { at_ms: 2_000.0, target: ChurnTarget::Device(1), kind: ChurnKind::Recover },
+        ChurnEvent { at_ms: 1_200.0, target: ChurnTarget::Device(3), kind: ChurnKind::Fail },
+        ChurnEvent { at_ms: 2_600.0, target: ChurnTarget::Device(3), kind: ChurnKind::Recover },
+    ];
+    let run = |incremental: bool| {
+        let mut eng = ScenarioBuilder::new(cfg.clone()).seed(42).build();
+        eng.set_snapshot_incremental(incremental);
+        eng.run();
+        let (rebuilds, reuses, deltas) = eng.snapshot_counters();
+        let summary = eng.recorder.summarize();
+        let csv: Vec<String> = eng.recorder.records().iter().map(csv_line).collect();
+        (summary, csv, rebuilds, reuses, deltas)
+    };
+    let (inc_sum, inc_csv, _, _, inc_deltas) = run(true);
+    let (full_sum, full_csv, full_rebuilds, _, full_deltas) = run(false);
+    assert!(inc_deltas > 0, "churning city must exercise the delta path");
+    assert_eq!(full_deltas, 0, "rebuild mode must never patch in place");
+    assert!(full_rebuilds > 1, "rebuild mode rebuilds on every version bump");
+    assert_eq!(inc_sum, full_sum);
+    assert_eq!(inc_csv, full_csv);
+}

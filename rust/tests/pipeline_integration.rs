@@ -42,6 +42,7 @@ fn admission_rejects_are_counted_not_silently_dropped() {
         burst: 2.0,
         queue_ceiling: 1_000,
         deadline_shed: false,
+        device_intake: false,
     });
     let r = ScenarioBuilder::new(cfg).seed(7).run();
     assert_eq!(r.summary.total, 60);
@@ -71,6 +72,7 @@ fn overload_shed_records_distinct_reason() {
         burst: 8.0,
         queue_ceiling: 1_000,
         deadline_shed: true,
+        device_intake: false,
     });
     let r = ScenarioBuilder::new(cfg).seed(7).run();
     assert_eq!(r.summary.total, 40);
@@ -168,6 +170,7 @@ fn admission_applies_per_app_overrides_end_to_end() {
         burst: 2.0,
         queue_ceiling: 1_000,
         deadline_shed: false,
+        device_intake: false,
     });
     let r = ScenarioBuilder::new(cfg).seed(7).run();
     assert_eq!(r.summary.total, 150);
@@ -176,4 +179,39 @@ fn admission_applies_per_app_overrides_end_to_end() {
     assert_eq!(strict_row.dropped, 0, "unlimited-rate tenant must never be rejected");
     assert!(be_row.dropped > 0, "rate-limited tenant must see rejects");
     assert_eq!(r.summary.rejected, be_row.dropped);
+}
+
+#[test]
+fn device_intake_admission_fires_and_replays_deterministically() {
+    // `device_intake = true` pushes the same token bucket to where frames
+    // are born (PR-7 satellite): under a 50 fps flood with a 5/s bucket
+    // most frames are refused at the device before crossing the uplink.
+    // The counters are identical in kind to edge-side rejects, and seeded
+    // replay stays byte-identical with the device bucket in play.
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Aoe;
+    cfg.workload.n_images = 60;
+    cfg.workload.interval_ms = 20.0;
+    cfg.workload.deadline_ms = 5_000.0;
+    cfg.admission = Some(AdmissionConfig {
+        rate_per_s: 5.0,
+        burst: 2.0,
+        queue_ceiling: 1_000,
+        deadline_shed: false,
+        device_intake: true,
+    });
+    assert_eq!(cfg.device_admission_params(), cfg.admission_params());
+    let run = || ScenarioBuilder::new(cfg.clone()).seed(7).run();
+    let (a, b) = (run(), run());
+    assert_eq!(a.summary.total, 60);
+    assert_eq!(a.summary.met + a.summary.missed + a.summary.dropped, 60);
+    assert!(a.summary.rejected > 0, "the device bucket must reject under a 10x flood");
+    assert!(a.summary.met > 0, "admitted frames still complete");
+    let rejected_lines =
+        a.records.iter().filter(|rec| csv_line(rec).ends_with(",rejected")).count();
+    assert_eq!(rejected_lines, a.summary.rejected);
+    assert_eq!(a.summary, b.summary);
+    let csv_a: Vec<String> = a.records.iter().map(csv_line).collect();
+    let csv_b: Vec<String> = b.records.iter().map(csv_line).collect();
+    assert_eq!(csv_a, csv_b);
 }
