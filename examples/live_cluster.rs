@@ -66,6 +66,11 @@ fn main() -> anyhow::Result<()> {
     println!("starting live cluster (edge + {} devices) ...", cfg.devices.len());
     let cluster = LiveCluster::start(&cfg, runtime)?;
     println!("edge server listening on {}", cluster.edge_addr);
+    // Each cell serves a plaintext introspection exposition over TCP
+    // (DESIGN.md §Observability) — scrape it with curl or any client.
+    for (edge, addr) in cluster.introspect_addrs() {
+        println!("introspection: {edge} http://{addr}/metrics");
+    }
 
     // A mobile user connects over a real TCP socket, like the paper's
     // Android client, and requests the face-detection application.
@@ -95,6 +100,15 @@ fn main() -> anyhow::Result<()> {
     // Per-app rows — identical columns to the sim writer's SLO table.
     let names: Vec<String> = cfg.effective_apps().iter().map(|a| a.name.clone()).collect();
     print!("{}", render_per_app(&summary, &names));
+
+    // One end-of-run scrape of cell 0's introspection endpoint.
+    if let Some((edge, addr)) = cluster.introspect_addrs().first() {
+        use std::io::Read;
+        let mut text = String::new();
+        std::net::TcpStream::connect(addr)?.read_to_string(&mut text)?;
+        let body = text.split("\r\n\r\n").nth(1).unwrap_or(&text);
+        println!("\nintrospection scrape of {edge}:\n{body}");
+    }
 
     // Non-blocking read of anything the edge pushed to the user.
     drop(user);

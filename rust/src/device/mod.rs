@@ -14,6 +14,7 @@ use crate::container::ContainerPool;
 use crate::core::message::{Message, ProfileUpdate};
 use crate::core::{DropReason, ImageMeta, NodeId, Placement, TaskId};
 use crate::energy::Battery;
+use crate::metrics::trace::{admit_verdict_str, placement_str, SharedTrace, TraceEvent};
 use crate::profile::Predictor;
 use crate::scheduler::pipeline::{device_intake, AdmitStage, AdmitVerdict, DeviceIntake};
 use crate::scheduler::{AdmissionParams, DeviceCtx, FailureDetector, LocalSnapshot, SchedulerPolicy};
@@ -92,6 +93,9 @@ pub struct DeviceNode {
     /// DESIGN.md §3): the same per-app token bucket the edge runs,
     /// enforced where frames are born. `None` (legacy) admits everything.
     admit: Option<AdmitStage>,
+    /// Run-wide trace sink; `None` (the default) emits nothing, so
+    /// untraced runs stay byte-identical (DESIGN.md §Observability).
+    trace: Option<SharedTrace>,
 }
 
 impl DeviceNode {
@@ -116,6 +120,20 @@ impl DeviceNode {
             detector: None,
             last_edge_heard_ms: 0.0,
             admit: None,
+            trace: None,
+        }
+    }
+
+    /// Attach a run-wide trace sink. Called by the drivers *after* node
+    /// construction; survives churn — `fail()` drops scheduling state,
+    /// not observability.
+    pub fn set_trace(&mut self, sink: SharedTrace) {
+        self.trace = Some(sink);
+    }
+
+    fn emit_trace(&self, at_ms: f64, ev: TraceEvent) {
+        if let Some(t) = &self.trace {
+            t.lock().unwrap().emit(at_ms, &ev);
         }
     }
 
@@ -232,7 +250,16 @@ impl DeviceNode {
         // only paid when a verdict will actually be used.
         if let Some(stage) = self.admit.as_mut() {
             let queued = self.pool.queued_for_app(img.constraint.app);
-            if stage.admit(&img, now_ms, queued) != AdmitVerdict::Admit {
+            let verdict = stage.admit(&img, now_ms, queued);
+            self.emit_trace(
+                now_ms,
+                TraceEvent::Admit {
+                    node: self.id,
+                    task: img.task,
+                    verdict: admit_verdict_str(verdict),
+                },
+            );
+            if verdict != AdmitVerdict::Admit {
                 self.awaiting.remove(&img.task);
                 out.push(Action::RecordDropped {
                     task: img.task,
@@ -251,6 +278,10 @@ impl DeviceNode {
         let depleted = self.battery.as_ref().is_some_and(|b| b.depleted());
         match device_intake(img.constraint.privacy, depleted) {
             DeviceIntake::ClampLocal { infeasible } => {
+                self.emit_trace(
+                    now_ms,
+                    TraceEvent::Filter { node: self.id, task: img.task, outcome: "clamp_local" },
+                );
                 out.push(Action::RecordPlaced { task: img.task, placement: Placement::Local });
                 if infeasible {
                     self.awaiting.remove(&img.task);
@@ -264,6 +295,10 @@ impl DeviceNode {
                 return;
             }
             DeviceIntake::ForceForward => {
+                self.emit_trace(
+                    now_ms,
+                    TraceEvent::Filter { node: self.id, task: img.task, outcome: "force_forward" },
+                );
                 out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
                 self.sent_to_edge.insert(img.task);
                 out.push(Action::Send {
@@ -286,6 +321,21 @@ impl DeviceNode {
             };
             self.policy.decide_device(&ctx)
         };
+        if self.trace.is_some() {
+            // Gated: `placement_str` allocates. Spell the effective
+            // placement (devices normalize everything non-local to the
+            // edge), matching the record stream.
+            let effective =
+                if placement == Placement::Local { Placement::Local } else { Placement::ToEdge };
+            self.emit_trace(
+                now_ms,
+                TraceEvent::Place {
+                    node: self.id,
+                    task: img.task,
+                    placement: placement_str(effective),
+                },
+            );
+        }
         match placement {
             Placement::Local => {
                 out.push(Action::RecordPlaced { task: img.task, placement: Placement::Local });

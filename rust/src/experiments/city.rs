@@ -32,10 +32,11 @@
 
 use crate::config::{AppSpec, CellConfig, DeviceConfig, SystemConfig};
 use crate::core::{NodeClass, PrivacyClass};
+use crate::metrics::trace::SharedTrace;
 use crate::net::FederationShape;
 use crate::scheduler::PolicyKind;
 use crate::sim::workload::ArrivalPattern;
-use crate::sim::ScenarioBuilder;
+use crate::sim::{RunReport, ScenarioBuilder};
 
 use super::gossip::shape_hops;
 
@@ -78,6 +79,16 @@ pub struct CityRow {
     pub privacy_violations: usize,
     /// Total `EdgeSummary` bytes sent, all edges (gossip metering).
     pub gossip_bytes: u64,
+    /// Candidate-snapshot full rebuilds across the run's pipelines.
+    pub snapshot_rebuilds: u64,
+    /// Candidate-snapshot cache reuses.
+    pub snapshot_reuses: u64,
+    /// Candidate-snapshot incremental delta applications.
+    pub snapshot_deltas: u64,
+    /// Warm-container pool hits.
+    pub pool_hits: u64,
+    /// Container cold starts (pool misses).
+    pub pool_misses: u64,
     /// Engine events processed.
     pub events: u64,
     /// Wall-clock duration (ms).
@@ -190,9 +201,38 @@ pub fn city_run(shape: FederationShape, n_cells: usize, seed: u64, n_images: u32
         forwarded: report.summary.forwarded,
         privacy_violations: report.summary.privacy_violations,
         gossip_bytes: report.summary.gossip_bytes.values().sum(),
+        snapshot_rebuilds: report.summary.snapshot_rebuilds,
+        snapshot_reuses: report.summary.snapshot_reuses,
+        snapshot_deltas: report.summary.snapshot_deltas,
+        pool_hits: report.summary.pool_hits,
+        pool_misses: report.summary.pool_misses,
         events: report.events,
         wall_ms: report.wall_us as f64 / 1e3,
     }
+}
+
+/// One *observed* city run (`repro --exp city --trace/--timeline`): the
+/// `hier` shape at `cells` with the observability knobs attached, so the
+/// flash-crowd dip and recovery can be plotted over time. Separate from
+/// the sweep so [`city`] itself stays knob-free (and byte-identical).
+pub fn city_observed(
+    seed: u64,
+    n_images: u32,
+    cells: usize,
+    trace: Option<SharedTrace>,
+    timeline_window_ms: Option<f64>,
+) -> RunReport {
+    let cells = cells.clamp(2, 256);
+    let shape = FederationShape::Hier { region_size: CITY_REGION_SIZE };
+    let cfg = city_config(cells, shape, n_images);
+    let mut b = ScenarioBuilder::new(cfg).seed(seed).max_events(CITY_MAX_EVENTS);
+    if let Some(t) = trace {
+        b = b.trace(t);
+    }
+    if let Some(w) = timeline_window_ms {
+        b = b.timeline(w);
+    }
+    b.run()
 }
 
 /// The full sweep, capped at `max_cells` (the CI smoke step shrinks the
@@ -218,12 +258,23 @@ pub fn render_city(rows: &[CityRow]) -> String {
         "## City-scale federation: per-district load, 64-256 cells, hierarchical gossip\n",
     );
     out.push_str(&format!(
-        "{:>6} {:>6} {:>5} {:>8} {:>8} {:>10} {:>10} {:>8} {:>10} {:>9}\n",
-        "shape", "cells", "hops", "met", "total", "forwarded", "gossip_kb", "B/cell", "events", "wall_ms"
+        "{:>6} {:>6} {:>5} {:>8} {:>8} {:>10} {:>10} {:>8} {:>14} {:>10} {:>10} {:>9}\n",
+        "shape",
+        "cells",
+        "hops",
+        "met",
+        "total",
+        "forwarded",
+        "gossip_kb",
+        "B/cell",
+        "snap(r/u/d)",
+        "pool(h/m)",
+        "events",
+        "wall_ms"
     ));
     for r in rows {
         out.push_str(&format!(
-            "{:>6} {:>6} {:>5} {:>8} {:>8} {:>10} {:>10} {:>8} {:>10} {:>9.1}\n",
+            "{:>6} {:>6} {:>5} {:>8} {:>8} {:>10} {:>10} {:>8} {:>14} {:>10} {:>10} {:>9.1}\n",
             r.shape.as_str(),
             r.n_cells,
             r.hops,
@@ -232,6 +283,8 @@ pub fn render_city(rows: &[CityRow]) -> String {
             r.forwarded,
             r.gossip_bytes / 1024,
             r.gossip_bytes_per_cell(),
+            format!("{}/{}/{}", r.snapshot_rebuilds, r.snapshot_reuses, r.snapshot_deltas),
+            format!("{}/{}", r.pool_hits, r.pool_misses),
             r.events,
             r.wall_ms,
         ));
@@ -267,6 +320,19 @@ pub fn render_city(rows: &[CityRow]) -> String {
     let forwarded: usize = rows.iter().map(|r| r.forwarded).sum();
     out.push_str(&format!("City privacy violations (all runs): {violations}\n"));
     out.push_str(&format!("City forwarded frames (all runs): {forwarded}\n"));
+    // Pipeline-cache and container-pool economics across the sweep — the
+    // perf counters the dashboards track (ROADMAP PR-4 follow-up).
+    let (snap_r, snap_u, snap_d) = rows.iter().fold((0, 0, 0), |acc, r| {
+        (acc.0 + r.snapshot_rebuilds, acc.1 + r.snapshot_reuses, acc.2 + r.snapshot_deltas)
+    });
+    out.push_str(&format!(
+        "City snapshot maintenance (all runs): {snap_r} rebuilds / {snap_u} reuses / {snap_d} deltas\n"
+    ));
+    let hits: u64 = rows.iter().map(|r| r.pool_hits).sum();
+    let misses: u64 = rows.iter().map(|r| r.pool_misses).sum();
+    out.push_str(&format!(
+        "City container pool (all runs): {hits} warm hits / {misses} cold starts\n"
+    ));
     out
 }
 
@@ -323,8 +389,28 @@ mod tests {
         let rows = city(7, 6, 8);
         let s = render_city(&rows);
         assert!(s.contains("shape"));
+        assert!(s.contains("snap(r/u/d)"));
+        assert!(s.contains("pool(h/m)"));
         assert!(s.contains("Hier gossip bytes/cell growth:"));
         assert!(s.contains("City privacy violations (all runs): 0"));
         assert!(s.contains("City forwarded frames (all runs):"));
+        assert!(s.contains("City snapshot maintenance (all runs):"));
+        assert!(s.contains("City container pool (all runs):"));
+    }
+
+    #[test]
+    fn observed_city_run_traces_and_samples() {
+        use crate::metrics::trace::{shared, JsonlTrace, SharedBuf};
+        let buf = SharedBuf::new();
+        let sink = shared(JsonlTrace::new(Box::new(buf.clone())));
+        let r = city_observed(7, 8, 4, Some(sink), Some(1_000.0));
+        let tl = r.timeline.expect("timeline was enabled");
+        assert!(!tl.rows().is_empty());
+        let text = String::from_utf8(buf.contents()).unwrap();
+        assert!(text.contains(r#""kind":"place""#));
+        assert!(text.contains(r#""kind":"gossip_send""#));
+        // Knob-free sweep results are untouched by an observed run having
+        // happened (the knobs live on a separate builder).
+        assert_eq!(r.summary.total, 4 * 16);
     }
 }

@@ -20,8 +20,8 @@ pub use churn::{
     render_churnsweep, ChurnRow, ChurnScenario, ChurnSweepRow, SWEEP_MTBF_MS,
 };
 pub use city::{
-    city, city_config, city_run, render_city, CityRow, CITY_MAX_EVENTS, CITY_REGION_SIZE,
-    CITY_SWEEP,
+    city, city_config, city_observed, city_run, render_city, CityRow, CITY_MAX_EVENTS,
+    CITY_REGION_SIZE, CITY_SWEEP,
 };
 pub use federation::{fed, fed_config, fed_run, render_fed, FedRow};
 pub use gossip::{

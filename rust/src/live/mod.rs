@@ -30,7 +30,8 @@ use crate::config::{ChurnEvent, ChurnKind, ChurnTarget, SystemConfig};
 use crate::container::ContainerPool;
 use crate::core::{wire, ImageMeta, Message, NodeClass, NodeId, TaskId};
 use crate::device::{Action, DeviceNode};
-use crate::metrics::{Recorder, RunSummary};
+use crate::metrics::trace::{trace_action, SharedTrace, TraceEvent};
+use crate::metrics::{Recorder, RunSummary, Timeline};
 use crate::net::transport::{serve_pooled, FramedConn, Server};
 use crate::net::BufPool;
 use crate::profile::{profile_for, Predictor};
@@ -115,6 +116,19 @@ struct EdgeHandle {
     writers: Arc<Mutex<HashMap<NodeId, FramedConn>>>,
 }
 
+/// Observability knobs for a live cluster (DESIGN.md §Observability).
+/// Everything defaults off; [`LiveCluster::start`] uses the defaults, so
+/// existing callers see no behaviour change.
+#[derive(Default)]
+pub struct LiveObservability {
+    /// Structured trace sink shared by every node and driver thread
+    /// (wall-clock timestamps — live traces are *not* replay-stable).
+    pub trace: Option<SharedTrace>,
+    /// Timeline sampling window (ms): a sampler thread closes one window
+    /// per period across all cells ([`LiveCluster::take_timeline`]).
+    pub timeline_window_ms: Option<f64>,
+}
+
 /// A full in-process cluster: one or more edge cells + devices + workers.
 pub struct LiveCluster {
     /// Cell 0's edge address (user clients connect here).
@@ -135,11 +149,17 @@ pub struct LiveCluster {
     /// loops, backhaul dialers, device dialers); its hit/miss counters are
     /// surfaced in the run summary.
     pool: Arc<BufPool>,
+    /// Windowed per-cell time-series, fed by the sampler thread; `None`
+    /// inside unless [`LiveObservability::timeline_window_ms`] was set.
+    timeline: Arc<Mutex<Option<Timeline>>>,
+    /// Per-cell introspection endpoints: (edge id, listener address).
+    introspect: Vec<(NodeId, std::net::SocketAddr)>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 /// Apply one edge-side action: sends go through the cell's writer table
 /// (devices and peer edges alike), container starts through the job queue.
+#[allow(clippy::too_many_arguments)]
 fn apply_edge_action(
     a: Action,
     edge_id: NodeId,
@@ -148,7 +168,14 @@ fn apply_edge_action(
     job_tx: &mpsc::Sender<Job>,
     clock: &Clock,
     sides: &SideMap,
+    trace: &Option<SharedTrace>,
 ) {
+    // Driver-owned trace events (dispatch/drop/forward/loop/ttl) come off
+    // the action stream — the same `trace_action` vocabulary the sim
+    // driver uses, stamped with the wall run clock.
+    if let Some(t) = trace {
+        trace_action(t, clock.now_ms(), edge_id, &a);
+    }
     match a {
         Action::Send { to, msg, .. } => {
             let mut ws = writers.lock().unwrap();
@@ -205,6 +232,17 @@ fn apply_edge_action(
 impl LiveCluster {
     /// Start the cluster described by `cfg` with the compiled model.
     pub fn start(cfg: &SystemConfig, runtime: RuntimeService) -> Result<Self> {
+        Self::start_observed(cfg, runtime, LiveObservability::default())
+    }
+
+    /// [`LiveCluster::start`] with observability knobs (`--trace`,
+    /// `--timeline`): the trace sink fans out to every node and driver
+    /// thread, and a sampler thread feeds the windowed timeline.
+    pub fn start_observed(
+        cfg: &SystemConfig,
+        runtime: RuntimeService,
+        obs: LiveObservability,
+    ) -> Result<Self> {
         let clock = Clock::start();
         let recorder = SharedRecorder::new();
         let stop = Arc::new(AtomicBool::new(false));
@@ -237,6 +275,7 @@ impl LiveCluster {
         let mut handles: Vec<EdgeHandle> = Vec::new();
         let mut edge_nodes: Vec<Arc<Mutex<EdgeNode>>> = Vec::new();
         let mut appliers: Vec<Arc<dyn Fn(Vec<Action>) + Send + Sync>> = Vec::new();
+        let mut introspect: Vec<(NodeId, std::net::SocketAddr)> = Vec::new();
 
         // Pipeline stage parameters shared with the sim driver — one
         // derivation, two drivers (DESIGN.md §3).
@@ -269,6 +308,9 @@ impl LiveCluster {
             if let Some(params) = admission.clone() {
                 edge = edge.with_admission(params);
             }
+            if let Some(t) = &obs.trace {
+                edge.set_trace(t.clone());
+            }
             let edge_node = Arc::new(Mutex::new(edge));
 
             // Writers to devices and peer edges, filled in as they join.
@@ -298,10 +340,11 @@ impl LiveCluster {
                 let job_tx = job_tx.clone();
                 let clock = clock.clone();
                 let sides = sides.clone();
+                let trace = obs.trace.clone();
                 Arc::new(move |actions: Vec<Action>| {
                     for a in actions {
                         apply_edge_action(
-                            a, edge_id, &writers, &recorder, &job_tx, &clock, &sides,
+                            a, edge_id, &writers, &recorder, &job_tx, &clock, &sides, &trace,
                         );
                     }
                 })
@@ -374,6 +417,20 @@ impl LiveCluster {
                     }
                 }));
             }
+
+            // Introspection endpoint for this cell (DESIGN.md
+            // §Observability): dependency-free plaintext exposition of
+            // queue depth, containers, peer freshness, admission tokens
+            // and buffer-pool counters, scraped over plain TCP.
+            let (intro_addr, intro_thread) = serve_introspection(
+                edge_id,
+                edge_node.clone(),
+                pool.clone(),
+                clock.clone(),
+                stop.clone(),
+            )?;
+            threads.push(intro_thread);
+            introspect.push((edge_id, intro_addr));
 
             handles.push(EdgeHandle { id: edge_id, addr: server.local_addr, writers });
             servers.push(server);
@@ -448,6 +505,7 @@ impl LiveCluster {
                 let recorder = recorder.clone();
                 let clock = clock.clone();
                 let stop = stop.clone();
+                let trace = obs.trace.clone();
                 threads.push(
                     std::thread::Builder::new()
                         .name(format!("gossip-{i}"))
@@ -498,6 +556,20 @@ impl LiveCluster {
                                             .lock()
                                             .unwrap()
                                             .gossip_bytes(edge_id, bytes);
+                                        // One event per peer per round —
+                                        // live gossip is batched, so the
+                                        // bytes cover the whole batch
+                                        // (the sim emits per summary).
+                                        if let Some(t) = &trace {
+                                            t.lock().unwrap().emit(
+                                                clock.now_ms(),
+                                                &TraceEvent::GossipSend {
+                                                    node: edge_id,
+                                                    peer: *p,
+                                                    bytes,
+                                                },
+                                            );
+                                        }
                                     }
                                 }
                             }
@@ -540,6 +612,56 @@ impl LiveCluster {
             }
         }
 
+        // ---------- Timeline sampler (observability only) ----------
+        // The live twin of the sim's `Ev::MetricsTick`: one thread closes
+        // a window per period across every cell, sampling queue depth and
+        // draining the placement-staleness accumulators.
+        let timeline: Arc<Mutex<Option<Timeline>>> =
+            Arc::new(Mutex::new(obs.timeline_window_ms.map(|w| {
+                let cell_of = topo
+                    .nodes()
+                    .iter()
+                    .filter_map(|s| topo.cell_edge_of(s.id).map(|e| (s.id, e)))
+                    .collect();
+                Timeline::new(w, cell_of)
+            })));
+        if let Some(w) = obs.timeline_window_ms {
+            let period = Duration::from_secs_f64(w / 1e3);
+            let nodes = edge_nodes.clone();
+            let ids = edge_ids.clone();
+            let tl = timeline.clone();
+            let clock = clock.clone();
+            let stop = stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("timeline-sampler".into())
+                    .spawn(move || {
+                        while !stop.load(Ordering::SeqCst) {
+                            // Stepped sleep so shutdown is prompt.
+                            let mut slept = Duration::ZERO;
+                            while slept < period && !stop.load(Ordering::SeqCst) {
+                                let step = Duration::from_millis(20).min(period - slept);
+                                std::thread::sleep(step);
+                                slept += step;
+                            }
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            let now = clock.now_ms();
+                            let mut guard = tl.lock().unwrap();
+                            let Some(t) = guard.as_mut() else { break };
+                            for (node, &id) in nodes.iter().zip(&ids) {
+                                let mut e = node.lock().unwrap();
+                                let (stale_sum, stale_n) = e.take_placement_staleness();
+                                let depth = e.pool().queued_count();
+                                t.sample(now, id, depth, stale_sum, stale_n);
+                            }
+                        }
+                    })
+                    .context("spawning timeline sampler")?,
+            );
+        }
+
         // ---------- Devices ----------
         let mut device_txs = Vec::new();
         let mut camera_tx: Option<mpsc::Sender<LiveEvent>> = None;
@@ -570,6 +692,9 @@ impl LiveCluster {
             if let Some(params) = cfg.device_admission_params() {
                 node = node.with_admission(params);
             }
+            if let Some(t) = &obs.trace {
+                node.set_trace(t.clone());
+            }
 
             let clock = clock.clone();
             let recorder = recorder.clone();
@@ -578,13 +703,14 @@ impl LiveCluster {
             let pool = pool.clone();
             let profile_period = Duration::from_secs_f64(cfg.profile_period_ms / 1e3);
             let warm = dcfg.warm_containers;
+            let trace = obs.trace.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("device-{}", id.0))
                     .spawn(move || {
                         if let Err(e) = device_main(
                             node, id, cell_edge_addr, rx, tx, clock, recorder, runtime,
-                            stop, pool, profile_period, warm,
+                            stop, pool, profile_period, warm, trace,
                         ) {
                             log::error!("device {id} failed: {e:#}");
                         }
@@ -604,6 +730,8 @@ impl LiveCluster {
             peer_conns,
             edge_nodes,
             pool,
+            timeline,
+            introspect,
             threads,
         })
     }
@@ -767,6 +895,24 @@ impl LiveCluster {
         self.recorder.clone()
     }
 
+    /// Per-cell introspection endpoints: (edge id, TCP address). Scrape
+    /// with any HTTP client — the response is a plaintext Prometheus-style
+    /// exposition (`edge_queue_depth{node="n0"} 3`).
+    pub fn introspect_addrs(&self) -> &[(NodeId, std::net::SocketAddr)] {
+        &self.introspect
+    }
+
+    /// Take the finalized timeline out of the cluster (`None` unless
+    /// [`LiveObservability::timeline_window_ms`] enabled it). Call after
+    /// [`LiveCluster::wait`] — the counting columns come from the
+    /// recorder's finished task records.
+    pub fn take_timeline(&self) -> Option<Timeline> {
+        let mut tl = self.timeline.lock().unwrap().take()?;
+        let records = self.recorder.inner.lock().unwrap().records();
+        tl.finalize(&records);
+        Some(tl)
+    }
+
     /// Stop every thread and close every socket (blocking join).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
@@ -785,6 +931,84 @@ impl LiveCluster {
             let _ = t.join();
         }
     }
+}
+
+/// Render one edge's introspection exposition: dependency-free plaintext
+/// in the Prometheus text format (`name{node="n0"} value`), one gauge per
+/// line. Everything is read under the edge lock at scrape time — a scrape
+/// observes one consistent instant.
+fn introspection_body(
+    edge_id: NodeId,
+    edge: &Arc<Mutex<EdgeNode>>,
+    pool: &Arc<BufPool>,
+    clock: &Clock,
+) -> String {
+    let now = clock.now_ms();
+    let e = edge.lock().unwrap();
+    let label = format!("{{node=\"{edge_id}\"}}");
+    let mut s = String::new();
+    let p = e.pool();
+    s.push_str(&format!("edge_queue_depth{label} {}\n", p.queued_count()));
+    s.push_str(&format!("edge_busy_containers{label} {}\n", p.busy_count()));
+    s.push_str(&format!("edge_warm_containers{label} {}\n", p.warm_count()));
+    s.push_str(&format!("edge_idle_containers{label} {}\n", p.idle_count()));
+    s.push_str(&format!("edge_mp_entries{label} {}\n", e.table().len()));
+    s.push_str(&format!("edge_peer_entries{label} {}\n", e.peers().len()));
+    let max_stale =
+        e.peers().iter().map(|pe| (now - pe.updated_ms).max(0.0)).fold(0.0, f64::max);
+    s.push_str(&format!("edge_peer_max_staleness_ms{label} {max_stale:.1}\n"));
+    // Gauge only exists when the Admit stage is configured (same
+    // structural gating as the pipeline itself).
+    if let Some(tokens) = e.pipeline().admission_tokens() {
+        s.push_str(&format!("edge_admission_tokens{label} {tokens:.3}\n"));
+    }
+    s.push_str(&format!("pool_buf_hits{label} {}\n", pool.hits()));
+    s.push_str(&format!("pool_buf_misses{label} {}\n", pool.misses()));
+    s
+}
+
+/// Serve one cell's introspection endpoint: a nonblocking TCP accept loop
+/// that answers every connection with an HTTP/1.0 plaintext exposition
+/// and closes. No HTTP parsing, no dependencies — `curl` and the live
+/// smoke test read to EOF.
+fn serve_introspection(
+    edge_id: NodeId,
+    edge: Arc<Mutex<EdgeNode>>,
+    pool: Arc<BufPool>,
+    clock: Clock,
+    stop: Arc<AtomicBool>,
+) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener =
+        std::net::TcpListener::bind("127.0.0.1:0").context("introspection bind")?;
+    listener.set_nonblocking(true).context("introspection nonblocking")?;
+    let addr = listener.local_addr().context("introspection addr")?;
+    let handle = std::thread::Builder::new()
+        .name(format!("introspect-{}", edge_id.0))
+        .spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        let body = introspection_body(edge_id, &edge, &pool, &clock);
+                        let resp = format!(
+                            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\n\r\n{}",
+                            body.len(),
+                            body
+                        );
+                        let _ = std::io::Write::write_all(&mut stream, resp.as_bytes());
+                        // Drop closes the socket; scrapers read to EOF.
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => {
+                        log::warn!("introspection accept failed on {edge_id}: {e}");
+                        break;
+                    }
+                }
+            }
+        })
+        .context("spawning introspection listener")?;
+    Ok((addr, handle))
 }
 
 /// Container worker: real model execution on synthetic content-addressed
@@ -835,6 +1059,7 @@ fn device_main(
     pool: Arc<BufPool>,
     profile_period: Duration,
     warm: u32,
+    trace: Option<SharedTrace>,
 ) -> Result<()> {
     let mut conn =
         FramedConn::connect_pooled(edge_addr, &pool).context("device dialing edge")?;
@@ -894,6 +1119,9 @@ fn device_main(
                     log::info!("churn: device {id} fails at {now:.1} ms");
                     failed = true;
                     node.fail();
+                    if let Some(t) = &trace {
+                        t.lock().unwrap().emit(now, &TraceEvent::Churn { node: id, up: false });
+                    }
                 }
             }
             LiveEvent::Recover => {
@@ -901,6 +1129,9 @@ fn device_main(
                     log::info!("churn: device {id} recovers at {now:.1} ms");
                     failed = false;
                     node.recover(now);
+                    if let Some(t) = &trace {
+                        t.lock().unwrap().emit(now, &TraceEvent::Churn { node: id, up: true });
+                    }
                     // Re-join: the edge evicted us (or restarted itself).
                     if let Err(e) = conn.send(&node.join_message()) {
                         log::warn!("{id}: rejoin send failed: {e}");
@@ -934,6 +1165,11 @@ fn device_main(
             }
         }
         for a in out {
+            // Driver-owned trace events off the device's action stream —
+            // the same shared vocabulary as the sim driver.
+            if let Some(t) = &trace {
+                trace_action(t, clock.now_ms(), id, &a);
+            }
             match a {
                 Action::Send { msg, .. } => {
                     // Star topology inside the cell: every device send

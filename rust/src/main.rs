@@ -5,13 +5,25 @@
 //! ```text
 //! edge-dds sim    [--config cfg.toml] [--policy dds] [--images N]
 //!                 [--interval MS] [--deadline MS] [--seed S] [--csv out.csv]
+//!                 [--trace t.jsonl] [--timeline t.csv] [--window MS] [--stage-timing]
 //! edge-dds sweep  [--config cfg.toml] [--images N] [--interval MS]
 //!                 [--deadline MS]                  # all paper policies
 //! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|
 //!                       fed|churn|churnsweep|slo|overload|gossip|city|all
+//!                 [--trace t.jsonl] [--timeline t.csv]  # city: one observed run
 //! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
 //!                 [--interval MS] [--deadline MS] [--side PX]
+//!                 [--trace t.jsonl] [--timeline t.csv] [--window MS]
 //! ```
+//!
+//! Observability (DESIGN.md §Observability): `--trace` writes one JSONL
+//! `TraceEvent` line per scheduler event
+//! (deterministic under `--seed` in sim mode); `--timeline` writes a
+//! windowed per-cell CSV time-series (`--window` ms per row, default
+//! 1000); `--stage-timing` prints wall-clock per-stage histograms as a
+//! `stage_ns` JSON line (sim only; never part of summaries or CSVs).
+//! All knobs default off, and off means byte-identical output to builds
+//! that predate them.
 //!
 //! Multi-cell federations are configured with `[[cell]]` tables plus a
 //! per-device `cell = N` key and an optional `[federation]` section
@@ -80,11 +92,18 @@ fn print_usage() {
          USAGE:\n\
          \x20 edge-dds sim    [--config F] [--policy P] [--images N] [--interval MS]\n\
          \x20                 [--deadline MS] [--seed S] [--csv OUT]\n\
+         \x20                 [--trace OUT.jsonl] [--timeline OUT.csv] [--window MS] [--stage-timing]\n\
          \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
          \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|churnsweep|slo|overload|gossip|city|all\n\
          \x20                 [--images N] [--cells N]   # city/gossip/overload/slo scale knobs\n\
+         \x20                 [--trace OUT.jsonl] [--timeline OUT.csv]  # city: adds one observed run\n\
          \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
          \x20                 [--interval MS] [--deadline MS] [--side PX]\n\
+         \x20                 [--trace OUT.jsonl] [--timeline OUT.csv] [--window MS]\n\
+         \n\
+         OBSERVABILITY: --trace JSONL events (deterministic under --seed in sim),\n\
+         \x20           --timeline windowed per-cell CSV, --stage-timing wall-clock\n\
+         \x20           stage histograms; all off by default (byte-identical output)\n\
          \n\
          POLICIES: aor aoe eods dds dds-no-avail dds-energy round-robin random\n\
          FEDERATION: [[cell]] tables + device `cell = N` + [federation] in --config\n\
@@ -99,17 +118,76 @@ type Flags = HashMap<String, String>;
 
 fn parse_flags(args: &[String]) -> Result<Flags> {
     let mut flags = Flags::new();
-    let mut it = args.iter();
+    let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         let Some(key) = a.strip_prefix("--") else {
             bail!("expected --flag, got `{a}`");
         };
-        let Some(val) = it.next() else {
-            bail!("flag --{key} needs a value");
+        // A flag is boolean (`--stage-timing`) exactly when the next
+        // token is another flag or the end of the line; it parses as
+        // "true". Everything else keeps the strict `--key value` shape.
+        let val = match it.peek() {
+            Some(v) if !v.starts_with("--") => it.next().expect("peeked").clone(),
+            _ => "true".to_string(),
         };
-        flags.insert(key.to_string(), val.clone());
+        flags.insert(key.to_string(), val);
     }
     Ok(flags)
+}
+
+/// The observability knobs shared by `sim`, `repro --exp city` and `live`
+/// (DESIGN.md §Observability): trace/timeline output paths, the timeline
+/// sampling window, and the stage-timing switch.
+struct ObsFlags {
+    trace_path: Option<String>,
+    timeline_path: Option<String>,
+    window_ms: f64,
+    stage_timing: bool,
+}
+
+impl ObsFlags {
+    fn parse(flags: &Flags) -> Result<Self> {
+        Ok(Self {
+            trace_path: flags.get("trace").cloned(),
+            timeline_path: flags.get("timeline").cloned(),
+            window_ms: flags
+                .get("window")
+                .map(|s| s.parse())
+                .transpose()
+                .context("--window")?
+                .unwrap_or(1_000.0),
+            stage_timing: flags.contains_key("stage-timing"),
+        })
+    }
+
+    /// Open the `--trace` sink, if any.
+    fn open_trace(&self) -> Result<Option<edge_dds::metrics::trace::SharedTrace>> {
+        Ok(match &self.trace_path {
+            Some(p) => Some(
+                edge_dds::metrics::trace::JsonlTrace::to_file(std::path::Path::new(p))
+                    .with_context(|| format!("--trace {p}"))?,
+            ),
+            None => None,
+        })
+    }
+
+    /// Flush the trace and write the timeline CSV after a run.
+    fn finish(
+        &self,
+        trace: Option<edge_dds::metrics::trace::SharedTrace>,
+        timeline: Option<&edge_dds::metrics::Timeline>,
+    ) -> Result<()> {
+        if let (Some(sink), Some(path)) = (trace, &self.trace_path) {
+            sink.lock().unwrap().flush();
+            println!("wrote {path}");
+        }
+        if let Some(path) = &self.timeline_path {
+            let tl = timeline.context("timeline was enabled but the run produced none")?;
+            tl.write(std::path::Path::new(path)).with_context(|| format!("--timeline {path}"))?;
+            println!("wrote {path}");
+        }
+        Ok(())
+    }
 }
 
 fn load_config(flags: &Flags) -> Result<SystemConfig> {
@@ -143,7 +221,19 @@ fn cmd_sim(flags: &Flags) -> Result<()> {
     if cfg.mode == RunMode::Live {
         return cmd_live(flags);
     }
-    let report = ScenarioBuilder::new(cfg).run();
+    let obs = ObsFlags::parse(flags)?;
+    let trace = obs.open_trace()?;
+    let mut builder = ScenarioBuilder::new(cfg);
+    if let Some(t) = &trace {
+        builder = builder.trace(t.clone());
+    }
+    if obs.timeline_path.is_some() {
+        builder = builder.timeline(obs.window_ms);
+    }
+    if obs.stage_timing {
+        builder = builder.stage_timing(true);
+    }
+    let report = builder.run();
     println!("{}", summary_json(report.policy.as_str(), &report.summary));
     println!(
         "virtual time: {:.1} ms | events: {} | wall: {:.1} ms",
@@ -151,10 +241,16 @@ fn cmd_sim(flags: &Flags) -> Result<()> {
         report.events,
         report.wall_us as f64 / 1e3
     );
+    if let Some(js) = &report.stage_ns {
+        // Wall-clock stage histograms: a side channel by construction —
+        // never part of the summary JSON replay compares.
+        println!("{{\"stage_ns\":{js}}}");
+    }
     if let Some(path) = flags.get("csv") {
         write_csv(std::path::Path::new(path), &report.records)?;
         println!("wrote {path}");
     }
+    obs.finish(trace, report.timeline.as_ref())?;
     Ok(())
 }
 
@@ -269,6 +365,22 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
             flags.get("cells").map(|s| s.parse()).transpose().context("--cells")?.unwrap_or(256);
         let rows = experiments::city(seed, n_images, max_cells);
         println!("{}", experiments::render_city(&rows));
+        // Observability knobs add one dedicated *observed* run (the hier
+        // shape at the sweep cap) — the sweep above stays knob-free.
+        let obs = ObsFlags::parse(flags)?;
+        if obs.trace_path.is_some() || obs.timeline_path.is_some() {
+            let trace = obs.open_trace()?;
+            let window = obs.timeline_path.is_some().then_some(obs.window_ms);
+            let report =
+                experiments::city_observed(seed, n_images, max_cells, trace.clone(), window);
+            println!(
+                "Observed city run (hier, {} cells): met {}/{}",
+                max_cells.clamp(2, 256),
+                report.summary.met,
+                report.summary.total
+            );
+            obs.finish(trace, report.timeline.as_ref())?;
+        }
     }
     if all || exp == "slo" {
         matched = true;
@@ -295,7 +407,16 @@ fn cmd_live(flags: &Flags) -> Result<()> {
         cfg.devices.len(),
         runtime.sides()
     );
-    let cluster = LiveCluster::start(&cfg, runtime)?;
+    let obs = ObsFlags::parse(flags)?;
+    let trace = obs.open_trace()?;
+    let live_obs = edge_dds::live::LiveObservability {
+        trace: trace.clone(),
+        timeline_window_ms: obs.timeline_path.is_some().then_some(obs.window_ms),
+    };
+    let cluster = LiveCluster::start_observed(&cfg, runtime, live_obs)?;
+    for (edge, addr) in cluster.introspect_addrs() {
+        println!("introspection: {edge} http://{addr}/metrics");
+    }
     // Session setup settles (joins + first profile pushes).
     std::thread::sleep(Duration::from_millis(100));
 
@@ -323,6 +444,8 @@ fn cmd_live(flags: &Flags) -> Result<()> {
     let names: Vec<String> = cfg.effective_apps().iter().map(|a| a.name.clone()).collect();
     print!("{}", edge_dds::metrics::render_per_app(&summary, &names));
     println!("streamed {n} frames; met {}/{}", summary.met, summary.total);
+    let timeline = cluster.take_timeline();
     cluster.shutdown();
+    obs.finish(trace, timeline.as_ref())?;
     Ok(())
 }

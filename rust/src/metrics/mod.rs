@@ -2,9 +2,13 @@
 //! and CSV/JSON writers for the experiment harness.
 
 pub mod recorder;
+pub mod timeline;
+pub mod trace;
 pub mod writer;
 
 pub use recorder::{Recorder, TaskRecord};
+pub use timeline::{Timeline, TimelineRow, TIMELINE_HEADER};
+pub use trace::{shared, JsonlTrace, SharedBuf, SharedTrace, TraceEvent, TraceSink};
 pub use writer::{csv_line, render_per_app, write_csv, write_json_summary};
 
 use std::collections::BTreeMap;

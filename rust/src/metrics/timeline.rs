@@ -1,0 +1,312 @@
+//! Windowed per-cell run timelines (DESIGN.md §Observability).
+//!
+//! A [`Timeline`] turns one run into a time-series: per `window_ms` ×
+//! cell, the arrivals, completions, met fraction, admission rejects,
+//! sampled queue depth and mean peer-staleness-at-placement. Arrivals,
+//! completions, met counts and rejects are derived **post-run** from the
+//! recorder's task records — identical logic for both drivers — while
+//! queue depth and placement staleness are the only live-sampled
+//! columns (the sim's `Ev::MetricsTick`, a sampler thread in live
+//! mode). The sim only schedules ticks when a timeline was requested,
+//! so default runs stay byte-identical; with one attached, a seeded run
+//! emits a byte-identical CSV on replay.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::core::{DropReason, NodeId, Verdict};
+
+use super::recorder::TaskRecord;
+
+/// CSV header of [`Timeline::to_csv`].
+pub const TIMELINE_HEADER: &str =
+    "window_start_ms,cell,arrivals,completions,met_fraction,queue_depth,admission_rejects,staleness_ms";
+
+/// Accumulated state of one (window, cell) bucket.
+#[derive(Debug, Clone, PartialEq, Default)]
+struct WindowSample {
+    /// Edge queue depth sampled at the window's closing tick (0 when the
+    /// run ended before the tick fired — completions still accrue).
+    queue_depth: u32,
+    /// Sum of peer-entry staleness at each cross-cell placement decision
+    /// made in the window (ms).
+    stale_sum_ms: f64,
+    /// Number of staleness observations behind `stale_sum_ms`.
+    stale_n: u64,
+    arrivals: usize,
+    completions: usize,
+    met: usize,
+    rejects: usize,
+}
+
+/// One rendered row of the time-series (a (window, cell) bucket).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineRow {
+    /// Window start on the run clock (ms).
+    pub window_start_ms: f64,
+    /// The cell's edge server.
+    pub cell: NodeId,
+    /// Frames created in the window by the cell's devices.
+    pub arrivals: usize,
+    /// Frames completed in the window that originated in the cell.
+    pub completions: usize,
+    /// Of those completions, how many met their deadline.
+    pub met: usize,
+    /// Edge queue depth at the window's closing sample.
+    pub queue_depth: u32,
+    /// Admission rejects of frames created in the window.
+    pub admission_rejects: usize,
+    /// Mean peer-entry staleness at cross-cell placement (ms; 0 when the
+    /// cell made no forward decision in the window).
+    pub staleness_ms: f64,
+}
+
+impl TimelineRow {
+    /// Met fraction over the window's completions (0 when none).
+    pub fn met_fraction(&self) -> f64 {
+        if self.completions == 0 {
+            0.0
+        } else {
+            self.met as f64 / self.completions as f64
+        }
+    }
+}
+
+/// A run's windowed per-cell time-series. Construct with the node→cell
+/// map, feed live samples during the run, then [`Timeline::finalize`]
+/// with the recorder's records; rows come out dense ((every window) ×
+/// (every cell), both sorted) so plots need no gap handling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timeline {
+    window_ms: f64,
+    cell_of: BTreeMap<NodeId, NodeId>,
+    cells: Vec<NodeId>,
+    samples: BTreeMap<(u64, NodeId), WindowSample>,
+    rows: Vec<TimelineRow>,
+}
+
+impl Timeline {
+    /// A timeline sampling every `window_ms`, over the cells named as
+    /// values of `cell_of` (node → its cell's edge; both drivers derive
+    /// it from the topology, like the recorder's violation map).
+    pub fn new(window_ms: f64, cell_of: BTreeMap<NodeId, NodeId>) -> Self {
+        assert!(window_ms > 0.0, "timeline window must be positive");
+        let mut cells: Vec<NodeId> = cell_of.values().copied().collect();
+        cells.sort_unstable();
+        cells.dedup();
+        Self { window_ms, cell_of, cells, samples: BTreeMap::new(), rows: Vec::new() }
+    }
+
+    /// The sampling window (ms) — drivers re-arm their tick with it.
+    pub fn window_ms(&self) -> f64 {
+        self.window_ms
+    }
+
+    /// The window holding instant `t` (arrivals/completions attribution).
+    fn window_of(&self, t_ms: f64) -> u64 {
+        (t_ms.max(0.0) / self.window_ms) as u64
+    }
+
+    /// Record one cell's closing sample for the window ending at `at_ms`
+    /// (the driver ticks at `window_ms`, `2·window_ms`, …; the half-window
+    /// shift keeps float error from sliding a boundary tick forward).
+    pub fn sample(
+        &mut self,
+        at_ms: f64,
+        cell: NodeId,
+        queue_depth: u32,
+        stale_sum_ms: f64,
+        stale_n: u64,
+    ) {
+        let idx = ((at_ms / self.window_ms) - 0.5).floor().max(0.0) as u64;
+        let s = self.samples.entry((idx, cell)).or_default();
+        s.queue_depth = queue_depth;
+        s.stale_sum_ms += stale_sum_ms;
+        s.stale_n += stale_n;
+    }
+
+    /// Derive the record-based columns and build the dense row grid.
+    /// Arrivals (and admission rejects) attribute to the frame's creation
+    /// window; completions and met counts to the completion window. Both
+    /// key on the *origin's* cell — the cell whose users experience the
+    /// outcome, whoever executed the frame.
+    pub fn finalize(&mut self, records: &[TaskRecord]) {
+        for r in records {
+            let Some(&cell) = self.cell_of.get(&r.origin) else { continue };
+            let wa = self.window_of(r.created_ms);
+            let a = self.samples.entry((wa, cell)).or_default();
+            a.arrivals += 1;
+            if r.drop_reason == Some(DropReason::Rejected) {
+                a.rejects += 1;
+            }
+            if let Some(done) = r.completed_ms {
+                let wc = self.window_of(done);
+                let c = self.samples.entry((wc, cell)).or_default();
+                c.completions += 1;
+                if r.verdict == Verdict::Met {
+                    c.met += 1;
+                }
+            }
+        }
+        let max_window = self.samples.keys().map(|&(w, _)| w).max().unwrap_or(0);
+        self.rows.clear();
+        for w in 0..=max_window {
+            for &cell in &self.cells {
+                let s = self.samples.get(&(w, cell)).cloned().unwrap_or_default();
+                self.rows.push(TimelineRow {
+                    window_start_ms: w as f64 * self.window_ms,
+                    cell,
+                    arrivals: s.arrivals,
+                    completions: s.completions,
+                    met: s.met,
+                    queue_depth: s.queue_depth,
+                    admission_rejects: s.rejects,
+                    staleness_ms: if s.stale_n == 0 {
+                        0.0
+                    } else {
+                        s.stale_sum_ms / s.stale_n as f64
+                    },
+                });
+            }
+        }
+    }
+
+    /// The dense (window × cell) rows — empty before [`Timeline::finalize`].
+    pub fn rows(&self) -> &[TimelineRow] {
+        &self.rows
+    }
+
+    /// Render the finalized rows as CSV (see [`TIMELINE_HEADER`]). Fixed
+    /// float formats keep seeded replays byte-identical.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(TIMELINE_HEADER);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:.1},{},{},{},{:.4},{},{},{:.3}\n",
+                r.window_start_ms,
+                r.cell.0,
+                r.arrivals,
+                r.completions,
+                r.met_fraction(),
+                r.queue_depth,
+                r.admission_rejects,
+                r.staleness_ms,
+            ));
+        }
+        out
+    }
+
+    /// Write the CSV to `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{AppId, Placement, PrivacyClass, TaskId};
+
+    fn cellmap() -> BTreeMap<NodeId, NodeId> {
+        // Cell A: edge 0, device 1; cell B: edge 3, device 4.
+        [(0u32, 0u32), (1, 0), (3, 3), (4, 3)]
+            .into_iter()
+            .map(|(n, e)| (NodeId(n), NodeId(e)))
+            .collect()
+    }
+
+    fn record(task: u64, origin: u32, created: f64, done: Option<f64>, met: bool) -> TaskRecord {
+        TaskRecord {
+            task: TaskId(task),
+            origin: NodeId(origin),
+            app: AppId(0),
+            privacy: PrivacyClass::Open,
+            size_kb: 29.0,
+            deadline_ms: 1_000.0,
+            created_ms: created,
+            placement: Placement::Local,
+            executed_on: None,
+            started_ms: None,
+            completed_ms: done,
+            process_ms: done.map(|_| 100.0),
+            requeues: 0,
+            hops: 0,
+            hop_ms: Vec::new(),
+            violations: 0,
+            drop_reason: if done.is_none() { Some(DropReason::Rejected) } else { None },
+            verdict: match (done, met) {
+                (Some(_), true) => Verdict::Met,
+                (Some(_), false) => Verdict::Missed,
+                (None, _) => Verdict::Dropped,
+            },
+        }
+    }
+
+    #[test]
+    fn finalize_buckets_arrivals_and_completions_by_window_and_cell() {
+        let mut tl = Timeline::new(100.0, cellmap());
+        // Closing tick for window 0 at t=100 samples cell 0's queue.
+        tl.sample(100.0, NodeId(0), 5, 30.0, 2);
+        let records = vec![
+            record(1, 1, 10.0, Some(50.0), true),    // cell 0, window 0 → 0
+            record(2, 1, 20.0, Some(250.0), false),  // cell 0, window 0 → 2
+            record(3, 4, 110.0, None, false),        // cell 3, window 1, rejected
+        ];
+        tl.finalize(&records);
+        // Dense grid: 3 windows × 2 cells.
+        assert_eq!(tl.rows().len(), 6);
+        let row = |w: usize, cell: u32| {
+            tl.rows()
+                .iter()
+                .find(|r| r.window_start_ms == w as f64 * 100.0 && r.cell == NodeId(cell))
+                .unwrap()
+        };
+        let r00 = row(0, 0);
+        assert_eq!((r00.arrivals, r00.completions, r00.met), (2, 1, 1));
+        assert_eq!(r00.queue_depth, 5);
+        assert_eq!(r00.staleness_ms, 15.0);
+        assert_eq!(r00.met_fraction(), 1.0);
+        let r20 = row(2, 0);
+        assert_eq!((r20.arrivals, r20.completions, r20.met), (0, 1, 0));
+        let r13 = row(1, 3);
+        assert_eq!((r13.arrivals, r13.admission_rejects), (1, 1));
+        // Whole-run accounting: every arrival and completion lands once.
+        assert_eq!(tl.rows().iter().map(|r| r.arrivals).sum::<usize>(), 3);
+        assert_eq!(tl.rows().iter().map(|r| r.completions).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn csv_is_dense_sorted_and_stable() {
+        let mk = || {
+            let mut tl = Timeline::new(100.0, cellmap());
+            tl.sample(100.0, NodeId(3), 2, 0.0, 0);
+            tl.finalize(&[record(1, 1, 10.0, Some(150.0), true)]);
+            tl.to_csv()
+        };
+        let csv = mk();
+        assert_eq!(csv, mk(), "same inputs must serialize byte-identically");
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], TIMELINE_HEADER);
+        assert_eq!(lines.len(), 1 + 2 * 2); // 2 windows × 2 cells
+        assert_eq!(lines[1], "0.0,0,1,0,0.0000,0,0,0.000");
+        assert_eq!(lines[2], "0.0,3,0,0,0.0000,2,0,0.000");
+        assert_eq!(lines[3], "100.0,0,0,1,1.0000,0,0,0.000");
+    }
+
+    #[test]
+    fn boundary_ticks_close_the_right_window() {
+        let tl = Timeline::new(500.0, cellmap());
+        assert_eq!(tl.window_of(0.0), 0);
+        assert_eq!(tl.window_of(499.999), 0);
+        assert_eq!(tl.window_of(500.0), 1);
+        let mut tl = tl;
+        // Ticks at k·window close window k−1, float error notwithstanding.
+        tl.sample(500.0, NodeId(0), 7, 0.0, 0);
+        tl.sample(1_000.0000000001, NodeId(0), 9, 0.0, 0);
+        tl.finalize(&[]);
+        assert_eq!(tl.rows()[0].queue_depth, 7);
+        let w1 = tl.rows().iter().find(|r| r.window_start_ms == 500.0 && r.cell == NodeId(0));
+        assert_eq!(w1.unwrap().queue_depth, 9);
+    }
+}

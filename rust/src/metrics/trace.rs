@@ -1,0 +1,418 @@
+//! Structured event tracing (DESIGN.md §Observability).
+//!
+//! Every stage outcome the scheduler produces — admit verdicts, filter
+//! clamps, placements, dispatches, drops, forward hops, gossip rounds,
+//! churn transitions, snapshot maintenance — can be emitted as a
+//! [`TraceEvent`] into a [`TraceSink`]. Nodes and drivers hold an
+//! `Option<SharedTrace>` that defaults to `None`, so untraced runs pay
+//! nothing and stay byte-identical; with a sink attached, the simulator
+//! emits events in deterministic handler order with virtual-clock
+//! timestamps, so a seeded run's JSONL trace replays byte-identically
+//! (live mode traces too, on the wall clock, without that guarantee).
+//!
+//! Emission ownership (no event is emitted twice):
+//! - **nodes** (`server/`, `device/`): `admit`, `filter`, `place`,
+//!   `gossip_apply`;
+//! - **pipeline** (`scheduler/pipeline.rs`): `snapshot` (rebuild/delta);
+//! - **drivers** (`sim/`, `live/`): `dispatch`, `drop`, `forward_hop`,
+//!   `loop_rejected`, `ttl_expired` (via [`trace_action`], shared so the
+//!   two drivers' vocabulary cannot diverge), plus `gossip_send` and
+//!   `churn`, which only the drivers observe.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::core::{DropReason, NodeId, Placement, TaskId};
+use crate::device::Action;
+use crate::scheduler::pipeline::AdmitVerdict;
+
+/// One observable scheduler event. Node and task ids serialize as bare
+/// integers; timestamps ride next to the event in the sink call.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// The Admit stage ruled on a frame (edge or device intake).
+    Admit {
+        /// Node running the Admit stage.
+        node: NodeId,
+        /// The frame ruled on.
+        task: TaskId,
+        /// `"admit"`, `"reject_rate"` or `"reject_queue"`.
+        verdict: &'static str,
+    },
+    /// The Filter stage clamped or bounced a frame (privacy/battery).
+    Filter {
+        /// Node running the Filter stage.
+        node: NodeId,
+        /// The frame filtered.
+        task: TaskId,
+        /// `"clamp_local"`, `"force_forward"` or `"return_to_origin"`.
+        outcome: &'static str,
+    },
+    /// A Place decision (device- or edge-level), post privacy clamp.
+    Place {
+        /// Deciding node.
+        node: NodeId,
+        /// The frame placed.
+        task: TaskId,
+        /// CSV-style placement spelling (`local`, `edge`, `offload:n2`,
+        /// `peer-edge:n3`).
+        placement: String,
+    },
+    /// A container started executing a task (Dispatch stage).
+    Dispatch {
+        /// Executing node.
+        node: NodeId,
+        /// The dispatched task.
+        task: TaskId,
+    },
+    /// A node deliberately gave up on a frame (Admit reject, Overload
+    /// shed, infeasible privacy/battery collision).
+    Drop {
+        /// Dropping node.
+        node: NodeId,
+        /// The dropped frame.
+        task: TaskId,
+        /// `"rejected"`, `"shed"` or `"infeasible"`.
+        reason: &'static str,
+    },
+    /// A frame crossed one backhaul hop (hierarchical routing).
+    ForwardHop {
+        /// Forwarding edge.
+        node: NodeId,
+        /// The forwarded frame.
+        task: TaskId,
+    },
+    /// A `Forward` arrived at an edge already on its visited path.
+    LoopRejected {
+        /// Rejecting edge.
+        node: NodeId,
+        /// The looping frame.
+        task: TaskId,
+    },
+    /// A forwarded frame's hop budget ran out at a saturated cell.
+    TtlExpired {
+        /// The edge where the budget expired.
+        node: NodeId,
+        /// The frame that queued here anyway.
+        task: TaskId,
+    },
+    /// An edge put one gossip summary on the backhaul.
+    GossipSend {
+        /// Sending edge.
+        node: NodeId,
+        /// Destination peer edge.
+        peer: NodeId,
+        /// Encoded wire bytes of the summary.
+        bytes: u64,
+    },
+    /// A received gossip summary was applied — or rejected as stale
+    /// (freshest-wins, DESIGN.md §4d).
+    GossipApply {
+        /// Receiving edge.
+        node: NodeId,
+        /// The edge the summary describes.
+        subject: NodeId,
+        /// Whether the copy replaced the current entry.
+        applied: bool,
+    },
+    /// A node failed (`up = false`) or recovered (`up = true`) — churn.
+    Churn {
+        /// The transitioning node.
+        node: NodeId,
+        /// New liveness.
+        up: bool,
+    },
+    /// The candidate snapshot was maintained (DESIGN.md §3).
+    Snapshot {
+        /// The edge whose pipeline maintained its snapshot.
+        node: NodeId,
+        /// `"rebuild"` or `"delta"` (reuses are silent — too hot).
+        op: &'static str,
+    },
+}
+
+/// Render one event as its canonical JSONL line (no trailing newline).
+/// Key order is fixed and floats use `{:.3}`, so a deterministic event
+/// stream serializes byte-identically.
+pub fn jsonl(at_ms: f64, ev: &TraceEvent) -> String {
+    let head = |kind: &str| format!(r#"{{"t_ms":{at_ms:.3},"kind":"{kind}""#);
+    match ev {
+        TraceEvent::Admit { node, task, verdict } => {
+            format!(
+                r#"{},"node":{},"task":{},"verdict":"{}"}}"#,
+                head("admit"),
+                node.0,
+                task.0,
+                verdict
+            )
+        }
+        TraceEvent::Filter { node, task, outcome } => {
+            format!(
+                r#"{},"node":{},"task":{},"outcome":"{}"}}"#,
+                head("filter"),
+                node.0,
+                task.0,
+                outcome
+            )
+        }
+        TraceEvent::Place { node, task, placement } => {
+            format!(
+                r#"{},"node":{},"task":{},"placement":"{}"}}"#,
+                head("place"),
+                node.0,
+                task.0,
+                placement
+            )
+        }
+        TraceEvent::Dispatch { node, task } => {
+            format!(r#"{},"node":{},"task":{}}}"#, head("dispatch"), node.0, task.0)
+        }
+        TraceEvent::Drop { node, task, reason } => {
+            format!(
+                r#"{},"node":{},"task":{},"reason":"{}"}}"#,
+                head("drop"),
+                node.0,
+                task.0,
+                reason
+            )
+        }
+        TraceEvent::ForwardHop { node, task } => {
+            format!(r#"{},"node":{},"task":{}}}"#, head("forward_hop"), node.0, task.0)
+        }
+        TraceEvent::LoopRejected { node, task } => {
+            format!(r#"{},"node":{},"task":{}}}"#, head("loop_rejected"), node.0, task.0)
+        }
+        TraceEvent::TtlExpired { node, task } => {
+            format!(r#"{},"node":{},"task":{}}}"#, head("ttl_expired"), node.0, task.0)
+        }
+        TraceEvent::GossipSend { node, peer, bytes } => {
+            format!(
+                r#"{},"node":{},"peer":{},"bytes":{}}}"#,
+                head("gossip_send"),
+                node.0,
+                peer.0,
+                bytes
+            )
+        }
+        TraceEvent::GossipApply { node, subject, applied } => {
+            format!(
+                r#"{},"node":{},"subject":{},"applied":{}}}"#,
+                head("gossip_apply"),
+                node.0,
+                subject.0,
+                applied
+            )
+        }
+        TraceEvent::Churn { node, up } => {
+            format!(r#"{},"node":{},"up":{}}}"#, head("churn"), node.0, up)
+        }
+        TraceEvent::Snapshot { node, op } => {
+            format!(r#"{},"node":{},"op":"{}"}}"#, head("snapshot"), node.0, op)
+        }
+    }
+}
+
+/// Consumer of trace events. Implementations must tolerate being called
+/// from several threads through the [`SharedTrace`] mutex (live mode).
+pub trait TraceSink: Send {
+    /// Consume one event stamped `at_ms` (virtual or wall run clock).
+    fn emit(&mut self, at_ms: f64, ev: &TraceEvent);
+    /// Flush any buffered output (end of run). Default: no-op.
+    fn flush(&mut self) {}
+}
+
+/// The shape every node/driver holds: a shared, locked sink. `None`
+/// (the default everywhere) means tracing is structurally off.
+pub type SharedTrace = Arc<Mutex<dyn TraceSink>>;
+
+/// Wrap a sink for sharing across nodes and drivers.
+pub fn shared<S: TraceSink + 'static>(sink: S) -> SharedTrace {
+    Arc::new(Mutex::new(sink))
+}
+
+/// JSONL-writing sink: one [`jsonl`] line per event.
+pub struct JsonlTrace {
+    out: Box<dyn Write + Send>,
+}
+
+impl JsonlTrace {
+    /// Write events into `out` (a file, a [`SharedBuf`], …).
+    pub fn new(out: Box<dyn Write + Send>) -> Self {
+        Self { out }
+    }
+
+    /// Buffered-file convenience for the CLI's `--trace <path>`.
+    pub fn to_file(path: &Path) -> std::io::Result<SharedTrace> {
+        let f = std::fs::File::create(path)?;
+        Ok(shared(JsonlTrace::new(Box::new(std::io::BufWriter::new(f)))))
+    }
+}
+
+impl TraceSink for JsonlTrace {
+    fn emit(&mut self, at_ms: f64, ev: &TraceEvent) {
+        // Sink I/O errors must not unwind through a scheduler decision;
+        // a truncated trace is the observable symptom.
+        let _ = writeln!(self.out, "{}", jsonl(at_ms, ev));
+    }
+
+    fn flush(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// A shareable in-memory byte buffer implementing [`Write`] — the
+/// byte-equality determinism tests capture JSONL traces through it.
+#[derive(Debug, Clone, Default)]
+pub struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    /// An empty shared buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot the accumulated bytes.
+    pub fn contents(&self) -> Vec<u8> {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The trace spelling of a drop reason.
+pub fn drop_reason_str(reason: DropReason) -> &'static str {
+    match reason {
+        DropReason::Rejected => "rejected",
+        DropReason::Shed => "shed",
+        DropReason::Infeasible => "infeasible",
+    }
+}
+
+/// The trace spelling of an Admit verdict (shared by both node classes).
+pub fn admit_verdict_str(v: AdmitVerdict) -> &'static str {
+    match v {
+        AdmitVerdict::Admit => "admit",
+        AdmitVerdict::RejectRate => "reject_rate",
+        AdmitVerdict::RejectQueue => "reject_queue",
+    }
+}
+
+/// The trace spelling of a placement — deliberately the CSV column's
+/// spelling, so traces and record CSVs join without a mapping table.
+pub fn placement_str(p: Placement) -> String {
+    match p {
+        Placement::Local => "local".to_string(),
+        Placement::ToEdge => "edge".to_string(),
+        Placement::Offload(n) => format!("offload:{n}"),
+        Placement::ToPeerEdge(n) => format!("peer-edge:{n}"),
+    }
+}
+
+/// Emit the trace events implied by one node [`Action`] — `dispatch`,
+/// `drop`, `forward_hop`, `loop_rejected`, `ttl_expired`. Both drivers
+/// route their action streams through this one function so their
+/// per-action trace vocabulary cannot diverge. `node` is the acting
+/// node (the action's emitter).
+pub fn trace_action(sink: &SharedTrace, at_ms: f64, node: NodeId, action: &Action) {
+    let ev = match action {
+        Action::ContainerBusyUntil { task, .. } => TraceEvent::Dispatch { node, task: *task },
+        Action::RecordDropped { task, reason } => {
+            TraceEvent::Drop { node, task: *task, reason: drop_reason_str(*reason) }
+        }
+        Action::RecordForwardHop { task, .. } => TraceEvent::ForwardHop { node, task: *task },
+        Action::RecordLoopRejected { task } => TraceEvent::LoopRejected { node, task: *task },
+        Action::RecordTtlExpired { task } => TraceEvent::TtlExpired { node, task: *task },
+        _ => return,
+    };
+    sink.lock().unwrap().emit(at_ms, &ev);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_lines_are_stable() {
+        let lines = [
+            (
+                TraceEvent::Admit { node: NodeId(3), task: TaskId(7), verdict: "admit" },
+                r#"{"t_ms":1.500,"kind":"admit","node":3,"task":7,"verdict":"admit"}"#,
+            ),
+            (
+                TraceEvent::Place {
+                    node: NodeId(0),
+                    task: TaskId(9),
+                    placement: "peer-edge:n4".into(),
+                },
+                r#"{"t_ms":1.500,"kind":"place","node":0,"task":9,"placement":"peer-edge:n4"}"#,
+            ),
+            (
+                TraceEvent::GossipApply { node: NodeId(2), subject: NodeId(5), applied: false },
+                r#"{"t_ms":1.500,"kind":"gossip_apply","node":2,"subject":5,"applied":false}"#,
+            ),
+            (
+                TraceEvent::Snapshot { node: NodeId(1), op: "delta" },
+                r#"{"t_ms":1.500,"kind":"snapshot","node":1,"op":"delta"}"#,
+            ),
+            (
+                TraceEvent::Churn { node: NodeId(6), up: true },
+                r#"{"t_ms":1.500,"kind":"churn","node":6,"up":true}"#,
+            ),
+        ];
+        for (ev, want) in lines {
+            assert_eq!(jsonl(1.5, &ev), want);
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_line_per_event() {
+        let buf = SharedBuf::new();
+        let sink = shared(JsonlTrace::new(Box::new(buf.clone())));
+        {
+            let mut s = sink.lock().unwrap();
+            s.emit(0.0, &TraceEvent::Dispatch { node: NodeId(1), task: TaskId(2) });
+            s.emit(4.25, &TraceEvent::GossipSend { node: NodeId(0), peer: NodeId(3), bytes: 41 });
+            s.flush();
+        }
+        let text = String::from_utf8(buf.contents()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], r#"{"t_ms":0.000,"kind":"dispatch","node":1,"task":2}"#);
+        assert_eq!(lines[1], r#"{"t_ms":4.250,"kind":"gossip_send","node":0,"peer":3,"bytes":41}"#);
+    }
+
+    #[test]
+    fn trace_action_maps_driver_actions() {
+        let buf = SharedBuf::new();
+        let sink = shared(JsonlTrace::new(Box::new(buf.clone())));
+        let node = NodeId(4);
+        trace_action(
+            &sink,
+            1.0,
+            node,
+            &Action::ContainerBusyUntil { container: 0, task: TaskId(1), at_ms: 5.0 },
+        );
+        trace_action(
+            &sink,
+            2.0,
+            node,
+            &Action::RecordDropped { task: TaskId(2), reason: DropReason::Shed },
+        );
+        // Non-trace actions are silent.
+        trace_action(&sink, 3.0, node, &Action::RecordStarted { task: TaskId(3), at_ms: 3.0 });
+        let text = String::from_utf8(buf.contents()).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains(r#""kind":"dispatch""#));
+        assert!(text.contains(r#""reason":"shed""#));
+    }
+}

@@ -26,7 +26,7 @@ pub mod policies;
 
 use anyhow::{bail, Result};
 
-pub use pipeline::{AdmissionParams, AdmitVerdict, CandidateSnapshot, EdgePipeline};
+pub use pipeline::{AdmissionParams, AdmitVerdict, CandidateSnapshot, EdgePipeline, StageTimers};
 pub use policies::{Aoe, Aor, Dds, DdsEnergy, DdsNoAvail, Eods, RandomPolicy, RoundRobin};
 
 use crate::core::{ImageMeta, NodeClass, NodeId, Placement};

@@ -43,10 +43,13 @@
 //! [`SchedulerPolicy::decide_device`]: super::SchedulerPolicy::decide_device
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::fmt;
 
 use crate::container::ContainerPool;
 use crate::core::{AppId, ImageMeta, NodeId, Placement, PrivacyClass};
+use crate::metrics::trace::{SharedTrace, TraceEvent};
 use crate::net::LinkModel;
+use crate::util::Hist;
 use crate::profile::{DeviceState, PeerEdgeState, PeerTable, ProfileTable};
 
 // ---------------------------------------------------------------------
@@ -442,6 +445,13 @@ impl AdmitStage {
         }
     }
 
+    /// Sum of tokens currently banked across the app buckets — the live
+    /// introspection gauge. Buckets refill lazily at each admit, so this
+    /// reads each app's balance as of its last arrival.
+    pub fn tokens_banked(&self) -> f64 {
+        self.buckets.values().map(|b| b.tokens).sum()
+    }
+
     /// Churn: a crashed edge loses its admission state with the rest.
     pub fn reset(&mut self) {
         self.buckets.clear();
@@ -490,6 +500,24 @@ pub struct EdgePipeline {
     /// Lifetime count of incremental patches — version bumps absorbed
     /// without a full table rescan (see `snapshot_rebuilds`).
     pub snapshot_deltas: u64,
+    /// Observability hook: `Snapshot{op}` events for every rebuild/delta
+    /// (reuses stay silent — they are the steady state). `None` (the
+    /// default) emits nothing, so untraced runs take no lock.
+    trace: Option<PipelineTrace>,
+}
+
+/// The pipeline's slice of a run-wide trace: the shared sink plus the
+/// owning edge's id (the pipeline itself doesn't know whose it is).
+#[derive(Clone)]
+struct PipelineTrace {
+    sink: SharedTrace,
+    node: NodeId,
+}
+
+impl fmt::Debug for PipelineTrace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PipelineTrace").field("node", &self.node).finish_non_exhaustive()
+    }
 }
 
 impl EdgePipeline {
@@ -503,6 +531,20 @@ impl EdgePipeline {
             snapshot_rebuilds: 0,
             snapshot_reuses: 0,
             snapshot_deltas: 0,
+            trace: None,
+        }
+    }
+
+    /// Attach a run-wide trace sink; `node` is the owning edge (stamped
+    /// into every `Snapshot` event). Survives `reset_on_fail` — churn
+    /// resets scheduling state, not observability.
+    pub fn set_trace(&mut self, sink: SharedTrace, node: NodeId) {
+        self.trace = Some(PipelineTrace { sink, node });
+    }
+
+    fn trace_snapshot(&self, now_ms: f64, op: &'static str) {
+        if let Some(t) = &self.trace {
+            t.sink.lock().unwrap().emit(now_ms, &TraceEvent::Snapshot { node: t.node, op });
         }
     }
 
@@ -533,6 +575,12 @@ impl EdgePipeline {
     /// Whether the Overload stage's deadline shed is enabled.
     pub fn deadline_shed(&self) -> bool {
         self.admit.as_ref().is_some_and(AdmitStage::deadline_shed)
+    }
+
+    /// Tokens banked across the Admit stage's app buckets (`None` without
+    /// an `[admission]` config) — the introspection gauge.
+    pub fn admission_tokens(&self) -> Option<f64> {
+        self.admit.as_ref().map(AdmitStage::tokens_banked)
     }
 
     /// The shared per-decision candidate snapshot, reused verbatim while
@@ -579,11 +627,13 @@ impl EdgePipeline {
         };
         if patched {
             self.snapshot_deltas += 1;
+            self.trace_snapshot(now_ms, "delta");
         } else {
             self.snapshot.rebuild(table, peers, suspects, origin, now_ms, max_staleness_ms, |n| {
                 links.get(n.0 as usize).copied().flatten()
             });
             self.snapshot_rebuilds += 1;
+            self.trace_snapshot(now_ms, "rebuild");
         }
         self.cache_key = Some(key);
         &self.snapshot
@@ -648,6 +698,50 @@ impl EdgePipeline {
         if let Some(a) = &mut self.admit {
             a.reset();
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage timing (opt-in; wall clock — never part of the replay surface).
+// ---------------------------------------------------------------------
+
+/// Per-stage wall-clock histograms (`--stage-timing`, nanoseconds).
+/// Wall time is nondeterministic by nature, so these live only in
+/// [`crate::sim::RunReport`]'s gated `stage_ns` side channel — never in
+/// `RunSummary`, which determinism tests compare whole (DESIGN.md
+/// §Observability).
+#[derive(Debug, Clone, Default)]
+pub struct StageTimers {
+    /// Admit stage: token-bucket + ceiling ruling per fresh arrival.
+    pub admit: Hist,
+    /// Place stage: candidate-snapshot prepare + the policy's edge-level
+    /// decision (the scheduling hot path the snapshot cache exists for).
+    pub place: Hist,
+    /// Dispatch stage: local pool submit/enqueue for frames placed here.
+    pub dispatch: Hist,
+}
+
+impl StageTimers {
+    /// Fold another edge's timers into this one (run-wide aggregation).
+    pub fn merge(&mut self, other: &StageTimers) {
+        self.admit.merge(&other.admit);
+        self.place.merge(&other.place);
+        self.dispatch.merge(&other.dispatch);
+    }
+
+    /// Whether any stage recorded a sample.
+    pub fn is_empty(&self) -> bool {
+        self.admit.is_empty() && self.place.is_empty() && self.dispatch.is_empty()
+    }
+
+    /// Hand-rolled JSON object keyed by stage (see [`Hist::json`]).
+    pub fn json(&self) -> String {
+        format!(
+            r#"{{"admit":{},"place":{},"dispatch":{}}}"#,
+            self.admit.json(),
+            self.place.json(),
+            self.dispatch.json()
+        )
     }
 }
 

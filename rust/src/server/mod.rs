@@ -14,18 +14,21 @@
 //! results for forwarded work back through the originating edge.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::time::Instant;
 
 use crate::container::ContainerPool;
 use crate::core::message::{EdgeSummary, ForwardRoute, Message, UserRequest};
 use crate::core::{DropReason, ImageMeta, NodeClass, NodeId, Placement, TaskId};
 use crate::device::Action;
+use crate::metrics::trace::{admit_verdict_str, placement_str, SharedTrace, TraceEvent};
 use crate::net::{LinkModel, RegionMap, Topology};
 use crate::profile::{PeerTable, ProfileTable};
 use crate::scheduler::pipeline::{self, AdmitVerdict, EdgeIntake};
 use crate::scheduler::{
     AdmissionParams, EdgeCtx, EdgePipeline, FailureDetector, LocalSnapshot, PredictorSet,
-    SchedulerPolicy,
+    SchedulerPolicy, StageTimers,
 };
+use crate::util::Hist;
 
 /// The edge server state machine.
 pub struct EdgeNode {
@@ -82,6 +85,18 @@ pub struct EdgeNode {
     /// §Hierarchical gossip). `None` (the default) keeps classic
     /// transitive gossip — [`EdgeNode::gossip_out`] — byte-identical.
     regions: Option<RegionMap>,
+    /// Run-wide trace sink; `None` (the default) emits nothing, so
+    /// untraced runs stay byte-identical (DESIGN.md §Observability).
+    trace: Option<SharedTrace>,
+    /// Opt-in wall-clock stage timers (`--stage-timing`); `None` keeps
+    /// `Instant` reads entirely off the decision path.
+    timers: Option<StageTimers>,
+    /// Rolling sum of peer-entry staleness (now − gossip vintage) at each
+    /// cross-cell placement — the timeline's `staleness_ms` column.
+    /// Drained per sampling window by [`EdgeNode::take_placement_staleness`].
+    stale_sum_ms: f64,
+    /// Observation count behind `stale_sum_ms`.
+    stale_n: u64,
 }
 
 impl EdgeNode {
@@ -116,6 +131,10 @@ impl EdgeNode {
             max_forward_hops: 1,
             app_weights: Vec::new(),
             regions: None,
+            trace: None,
+            timers: None,
+            stale_sum_ms: 0.0,
+            stale_n: 0,
         }
     }
 
@@ -167,6 +186,54 @@ impl EdgeNode {
     /// Pipeline introspection (tests / benches: snapshot reuse counters).
     pub fn pipeline(&self) -> &EdgePipeline {
         &self.pipeline
+    }
+
+    /// Attach a run-wide trace sink. Called by the drivers *after* full
+    /// node construction (so it is orthogonal to the `with_*` builders)
+    /// and never cleared by churn — a crashed edge loses its scheduling
+    /// state, not its observability.
+    pub fn set_trace(&mut self, sink: SharedTrace) {
+        self.pipeline.set_trace(sink.clone(), self.id);
+        self.trace = Some(sink);
+    }
+
+    /// Enable wall-clock stage timing (`--stage-timing`).
+    pub fn enable_stage_timing(&mut self) {
+        self.timers = Some(StageTimers::default());
+    }
+
+    /// Drain this edge's stage timers (end of run; the driver folds every
+    /// edge's into one run-wide set). `None` when timing is off.
+    pub fn take_stage_timers(&mut self) -> Option<StageTimers> {
+        self.timers.take()
+    }
+
+    /// Drain the placement-staleness accumulator (timeline tick): the sum
+    /// of `now − peer-entry vintage` over every cross-cell placement since
+    /// the last drain, plus the observation count.
+    pub fn take_placement_staleness(&mut self) -> (f64, u64) {
+        let out = (self.stale_sum_ms, self.stale_n);
+        self.stale_sum_ms = 0.0;
+        self.stale_n = 0;
+        out
+    }
+
+    fn emit_trace(&self, at_ms: f64, ev: TraceEvent) {
+        if let Some(t) = &self.trace {
+            t.lock().unwrap().emit(at_ms, &ev);
+        }
+    }
+
+    /// Record `t0`'s elapsed wall time into the stage picked by `pick`
+    /// (no-ops unless `--stage-timing` armed both the timer and `t0`).
+    fn record_stage(
+        timers: &mut Option<StageTimers>,
+        t0: Option<Instant>,
+        pick: impl FnOnce(&mut StageTimers) -> &mut Hist,
+    ) {
+        if let (Some(timers), Some(t0)) = (timers.as_mut(), t0) {
+            pick(timers).record(t0.elapsed().as_nanos() as u64);
+        }
     }
 
     /// Drop the cached candidate snapshot so the next decision rebuilds
@@ -421,7 +488,12 @@ impl EdgeNode {
                 // Applied gossip (fresher than what we hold) also clears
                 // any suspicion of that peer; a stale relayed copy is not
                 // evidence of life.
-                if self.peers.apply(&s) && self.suspects.remove(&s.edge) {
+                let applied = self.peers.apply(&s);
+                self.emit_trace(
+                    now_ms,
+                    TraceEvent::GossipApply { node: self.id, subject: s.edge, applied },
+                );
+                if applied && self.suspects.remove(&s.edge) {
                     self.suspects_version += 1;
                 }
             }
@@ -530,6 +602,10 @@ impl EdgeNode {
                 img.task,
                 img.origin
             );
+            self.emit_trace(
+                now_ms,
+                TraceEvent::Filter { node: self.id, task: img.task, outcome: "return_to_origin" },
+            );
             if !forwarded {
                 out.push(Action::RecordPlaced {
                     task: img.task,
@@ -545,8 +621,19 @@ impl EdgeNode {
         // legacy hot path must not pay it. Rejects are counted, not
         // silently dropped: the record resolves as Dropped/Rejected.
         if admit && self.pipeline.admission_enabled() {
+            let t0 = self.timers.as_ref().map(|_| Instant::now());
             let queued = self.pool.queued_for_app(img.constraint.app);
-            if self.pipeline.admit(&img, now_ms, queued) != AdmitVerdict::Admit {
+            let verdict = self.pipeline.admit(&img, now_ms, queued);
+            Self::record_stage(&mut self.timers, t0, |t| &mut t.admit);
+            self.emit_trace(
+                now_ms,
+                TraceEvent::Admit {
+                    node: self.id,
+                    task: img.task,
+                    verdict: admit_verdict_str(verdict),
+                },
+            );
+            if verdict != AdmitVerdict::Admit {
                 out.push(Action::RecordDropped { task: img.task, reason: DropReason::Rejected });
                 self.nack(&img, out);
                 return;
@@ -556,6 +643,7 @@ impl EdgeNode {
         // shared per-decision candidate snapshot (built once, cached
         // while tables/suspects/instant are unchanged).
         let edge_snapshot = self.snapshot();
+        let place_t0 = self.timers.as_ref().map(|_| Instant::now());
         let placement = {
             let candidates = self.pipeline.prepare(
                 &self.table,
@@ -585,10 +673,38 @@ impl EdgeNode {
             };
             self.policy.decide_edge(&ctx)
         };
+        Self::record_stage(&mut self.timers, place_t0, |t| &mut t.place);
         // Filter stage, part 2, enforced for every policy — including the
         // churn requeue path, which re-enters here: a cell-local frame
         // never crosses the backhaul, whatever the Place stage decided.
-        let placement = pipeline::clamp_placement(img.constraint.privacy, placement);
+        let clamped = pipeline::clamp_placement(img.constraint.privacy, placement);
+        if clamped != placement {
+            self.emit_trace(
+                now_ms,
+                TraceEvent::Filter { node: self.id, task: img.task, outcome: "clamp_local" },
+            );
+        }
+        let placement = clamped;
+        if self.trace.is_some() {
+            // Gated twice: `placement_str` allocates, and the untraced hot
+            // path must not. Spell the *effective* placement — the same
+            // normalization the record stream applies below (edge-pool
+            // `Local` and hop-exhausted `ToPeerEdge` both execute here as
+            // `edge`) — so traces join record CSVs without a mapping.
+            let effective = match placement {
+                Placement::Offload(_) => placement,
+                Placement::ToPeerEdge(_) if hops_left > 0 => placement,
+                _ => Placement::ToEdge,
+            };
+            self.emit_trace(
+                now_ms,
+                TraceEvent::Place {
+                    node: self.id,
+                    task: img.task,
+                    placement: placement_str(effective),
+                },
+            );
+        }
 
         match placement {
             Placement::Offload(target) => {
@@ -612,8 +728,18 @@ impl EdgeNode {
                 }
                 // Route to the *next hop* toward the subject: a multi-hop
                 // subject has no direct backhaul link (line topologies) —
-                // its `via` neighbor re-decides from there.
-                let next_hop = self.peers.get(peer).map_or(peer, |p| p.via);
+                // its `via` neighbor re-decides from there. The entry's
+                // vintage at this instant is the timeline's
+                // staleness-at-placement signal — how old the knowledge
+                // behind every cross-cell decision actually was.
+                let next_hop = match self.peers.get(peer) {
+                    Some(p) => {
+                        self.stale_sum_ms += (now_ms - p.updated_ms).max(0.0);
+                        self.stale_n += 1;
+                        p.via
+                    }
+                    None => peer,
+                };
                 // Track for the result relayed back over the backhaul.
                 // The requeue target is the *next hop* — the direct
                 // neighbor this frame is physically handed to, the only
@@ -668,7 +794,9 @@ impl EdgeNode {
                 if forwarded && hops_left == 0 && self.pool.idle_count() == 0 {
                     out.push(Action::RecordTtlExpired { task: img.task });
                 }
+                let t0 = self.timers.as_ref().map(|_| Instant::now());
                 self.run_local(img, now_ms, out);
+                Self::record_stage(&mut self.timers, t0, |t| &mut t.dispatch);
             }
         }
     }

@@ -5,8 +5,10 @@ use std::collections::{BinaryHeap, HashSet};
 
 use crate::core::{ImageMeta, Message, NodeId, TaskId};
 use crate::device::{Action, DeviceNode};
-use crate::metrics::Recorder;
+use crate::metrics::trace::{trace_action, SharedTrace, TraceEvent};
+use crate::metrics::{Recorder, Timeline};
 use crate::net::Topology;
+use crate::scheduler::StageTimers;
 use crate::server::EdgeNode;
 use crate::util::SplitMix64;
 
@@ -43,6 +45,12 @@ pub enum Ev {
     /// one per frame, so a 10⁶-frame sweep doesn't front-load a 10⁶-entry
     /// heap. `stream` indexes the engine's lazy-stream table.
     StreamArrival { stream: usize },
+    /// Timeline sampling tick (DESIGN.md §Observability): close the
+    /// current window by sampling every edge's queue depth and draining
+    /// its placement-staleness accumulator. Only ever scheduled by
+    /// [`Engine::enable_timeline`] — default runs never see this event,
+    /// so their event stream (and replay) is untouched.
+    MetricsTick,
 }
 
 /// Typed failure of workload injection — a malformed scenario (frame
@@ -157,6 +165,13 @@ pub struct Engine {
     /// Reusable per-event action buffer (perf: avoids one Vec allocation
     /// per event — EXPERIMENTS.md §Perf change 2).
     scratch: Vec<Action>,
+    /// Run-wide trace sink (DESIGN.md §Observability). `None` (default)
+    /// emits nothing; set via [`Engine::set_trace`], which also fans the
+    /// sink out to every node.
+    trace: Option<SharedTrace>,
+    /// Windowed per-cell time-series, fed by [`Ev::MetricsTick`] samples
+    /// and finalized by the scenario driver from the recorder's records.
+    timeline: Option<Timeline>,
 }
 
 impl Engine {
@@ -200,7 +215,67 @@ impl Engine {
             lazy_streams: Vec::new(),
             coalesce_threshold: Self::DEFAULT_COALESCE_THRESHOLD,
             scratch: Vec::with_capacity(16),
+            trace: None,
+            timeline: None,
         }
+    }
+
+    /// Attach a run-wide trace sink and fan it out to every node (their
+    /// Admit/Filter/Place/gossip-apply emissions) and this driver (the
+    /// dispatch/drop/forward/gossip-send/churn emissions — see
+    /// `metrics::trace` for the ownership split). Untraced engines skip
+    /// all of it structurally.
+    pub fn set_trace(&mut self, sink: SharedTrace) {
+        for n in &mut self.nodes {
+            match n {
+                SimNode::Edge(e) => e.set_trace(sink.clone()),
+                SimNode::Device(d) => d.set_trace(sink.clone()),
+            }
+        }
+        self.trace = Some(sink);
+    }
+
+    /// Enable the windowed per-cell timeline and schedule its first
+    /// sampling tick at `window_ms` (then every `window_ms` until the
+    /// horizon). Call before [`Engine::run`].
+    pub fn enable_timeline(&mut self, window_ms: f64) {
+        let cell_of = self
+            .topology
+            .nodes()
+            .iter()
+            .filter_map(|s| self.topology.cell_edge_of(s.id).map(|e| (s.id, e)))
+            .collect();
+        self.timeline = Some(Timeline::new(window_ms, cell_of));
+        self.schedule(window_ms, Ev::MetricsTick);
+    }
+
+    /// Take the (live-sampled, un-finalized) timeline out of the engine —
+    /// the scenario driver finalizes it against the recorder's records.
+    pub fn take_timeline(&mut self) -> Option<Timeline> {
+        self.timeline.take()
+    }
+
+    /// Enable wall-clock stage timing on every edge (`--stage-timing`).
+    pub fn enable_stage_timing(&mut self) {
+        for n in &mut self.nodes {
+            if let SimNode::Edge(e) = n {
+                e.enable_stage_timing();
+            }
+        }
+    }
+
+    /// Drain and fold every edge's stage timers into one run-wide set.
+    /// `None` unless [`Engine::enable_stage_timing`] armed them.
+    pub fn take_stage_timers(&mut self) -> Option<StageTimers> {
+        let mut folded: Option<StageTimers> = None;
+        for n in &mut self.nodes {
+            if let SimNode::Edge(e) = n {
+                if let Some(t) = e.take_stage_timers() {
+                    folded.get_or_insert_with(StageTimers::default).merge(&t);
+                }
+            }
+        }
+        folded
     }
 
     /// Streams of at least this many frames arrive lazily (see
@@ -543,10 +618,14 @@ impl Engine {
                             for peer in self.topology.linked_peer_edges(edge) {
                                 for s in e.gossip_for_peer(peer, now) {
                                     let msg = Message::EdgeSummary(s);
-                                    self.recorder.gossip_bytes(
-                                        edge,
-                                        crate::core::wire::encoded_len(&msg) as u64,
-                                    );
+                                    let bytes = crate::core::wire::encoded_len(&msg) as u64;
+                                    self.recorder.gossip_bytes(edge, bytes);
+                                    if let Some(t) = &self.trace {
+                                        t.lock().unwrap().emit(
+                                            now,
+                                            &TraceEvent::GossipSend { node: edge, peer, bytes },
+                                        );
+                                    }
                                     out.push(Action::Send { to: peer, msg, reliable: true });
                                 }
                             }
@@ -573,10 +652,14 @@ impl Engine {
                                     // the frame's wire size to the sending
                                     // edge (same analytic length live mode
                                     // counts).
-                                    self.recorder.gossip_bytes(
-                                        edge,
-                                        crate::core::wire::encoded_len(&msg) as u64,
-                                    );
+                                    let bytes = crate::core::wire::encoded_len(&msg) as u64;
+                                    self.recorder.gossip_bytes(edge, bytes);
+                                    if let Some(t) = &self.trace {
+                                        t.lock().unwrap().emit(
+                                            now,
+                                            &TraceEvent::GossipSend { node: edge, peer, bytes },
+                                        );
+                                    }
                                     out.push(Action::Send { to: peer, msg, reliable: true });
                                 }
                             }
@@ -609,6 +692,9 @@ impl Engine {
                         SimNode::Device(d) => d.fail(),
                         SimNode::Edge(e) => e.fail(),
                     }
+                    if let Some(t) = &self.trace {
+                        t.lock().unwrap().emit(now, &TraceEvent::Churn { node, up: false });
+                    }
                 }
                 self.apply(node, out);
             }
@@ -630,6 +716,9 @@ impl Engine {
                         }
                         SimNode::Edge(e) => e.recover(now),
                     }
+                    if let Some(t) = &self.trace {
+                        t.lock().unwrap().emit(now, &TraceEvent::Churn { node, up: true });
+                    }
                 }
                 self.apply(node, out);
             }
@@ -640,11 +729,38 @@ impl Engine {
                 }
                 self.apply(node, out);
             }
+            Ev::MetricsTick => {
+                // Close the window ending at `now`: the queue depth is a
+                // point-in-time gauge, the staleness accumulator drains
+                // everything placed since the previous tick. Dead edges
+                // sample too (their pool reset to empty on fail, which is
+                // exactly what an operator plot should show).
+                if let Some(tl) = self.timeline.as_mut() {
+                    for n in &mut self.nodes {
+                        if let SimNode::Edge(e) = n {
+                            let (stale_sum, stale_n) = e.take_placement_staleness();
+                            let depth = e.pool().queued_count();
+                            tl.sample(now, e.id, depth, stale_sum, stale_n);
+                        }
+                    }
+                }
+                if let Some(w) = self.timeline.as_ref().map(|t| t.window_ms()) {
+                    if now + w <= self.horizon_ms {
+                        self.schedule(now + w, Ev::MetricsTick);
+                    }
+                }
+                self.scratch = out;
+            }
         }
     }
 
     fn apply(&mut self, from: NodeId, mut actions: Vec<Action>) {
         for a in actions.drain(..) {
+            // Driver-owned trace events (dispatch/drop/forward/loop/ttl)
+            // come off the action stream, before the consuming match.
+            if let Some(t) = &self.trace {
+                trace_action(t, self.now_ms, from, &a);
+            }
             match a {
                 Action::Send { to, msg, reliable } => {
                     let Some(link) = self.topology.link(from, to) else {

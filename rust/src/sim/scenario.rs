@@ -5,7 +5,8 @@ use crate::config::{ChurnKind, ChurnTarget, SystemConfig, WorkloadConfig};
 use crate::container::ContainerPool;
 use crate::core::{ImageMeta, NodeClass, NodeId};
 use crate::device::DeviceNode;
-use crate::metrics::{RunSummary, TaskRecord};
+use crate::metrics::trace::SharedTrace;
+use crate::metrics::{RunSummary, TaskRecord, Timeline};
 use crate::net::{CellSpec, FederationShape, RegionMap, Topology};
 use crate::profile::{profile_for, Predictor};
 use crate::scheduler::PolicyKind;
@@ -32,12 +33,33 @@ pub struct RunReport {
     /// Battery state per battery-powered device at run end:
     /// (node, remaining %, consumed mWh).
     pub batteries: Vec<(NodeId, f64, f64)>,
+    /// Windowed per-cell time-series (DESIGN.md §Observability).
+    /// `None` unless the builder enabled [`ScenarioBuilder::timeline`] —
+    /// a side channel, deliberately outside [`RunSummary`] so replay
+    /// comparisons of summaries are untouched by the knob.
+    pub timeline: Option<Timeline>,
+    /// Wall-clock per-stage histograms as a JSON object string. `None`
+    /// unless [`ScenarioBuilder::stage_timing`] armed them — wall times
+    /// are nondeterministic by nature, so they never enter the summary
+    /// or records (excluded from replay comparisons by construction).
+    pub stage_ns: Option<String>,
 }
 
 impl RunReport {
     /// Frames that met their deadline (shorthand).
     pub fn met(&self) -> usize {
         self.summary.met
+    }
+}
+
+/// Clone-able trace handle that keeps `ScenarioBuilder: Debug` (the
+/// sink itself is an opaque `dyn TraceSink`).
+#[derive(Clone)]
+struct TraceHandle(SharedTrace);
+
+impl std::fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceHandle").finish_non_exhaustive()
     }
 }
 
@@ -50,12 +72,25 @@ pub struct ScenarioBuilder {
     /// Event-budget abort guard for city-scale runs
     /// ([`Engine::set_max_events`]). `None` = unbounded (classic).
     max_events: Option<u64>,
+    /// Observability knobs (DESIGN.md §Observability) — all default off,
+    /// and off means structurally absent: no sink, no `MetricsTick`
+    /// events, no `Instant::now()` calls anywhere on the hot path.
+    trace: Option<TraceHandle>,
+    timeline_window_ms: Option<f64>,
+    stage_timing: bool,
 }
 
 impl ScenarioBuilder {
     /// Build a scenario around a config.
     pub fn new(cfg: SystemConfig) -> Self {
-        Self { cfg, load_schedule: Vec::new(), max_events: None }
+        Self {
+            cfg,
+            load_schedule: Vec::new(),
+            max_events: None,
+            trace: None,
+            timeline_window_ms: None,
+            stage_timing: false,
+        }
     }
 
     /// The paper's Fig. 4 testbed with a given policy.
@@ -109,6 +144,28 @@ impl ScenarioBuilder {
     /// a mis-sized sweep aborts with an error instead of spinning).
     pub fn max_events(mut self, cap: u64) -> Self {
         self.max_events = Some(cap);
+        self
+    }
+
+    /// Attach a structured trace sink (`--trace`): every scheduler event
+    /// of the run lands in `sink` as sim-time-stamped [`crate::metrics::trace::TraceEvent`]s,
+    /// deterministic under the seed.
+    pub fn trace(mut self, sink: SharedTrace) -> Self {
+        self.trace = Some(TraceHandle(sink));
+        self
+    }
+
+    /// Record a windowed per-cell timeline (`--timeline`), sampled every
+    /// `window_ms` of virtual time and finalized against the task records.
+    pub fn timeline(mut self, window_ms: f64) -> Self {
+        self.timeline_window_ms = Some(window_ms);
+        self
+    }
+
+    /// Collect wall-clock per-stage histograms (`--stage-timing`). The
+    /// result rides in [`RunReport::stage_ns`], never in the summary.
+    pub fn stage_timing(mut self, on: bool) -> Self {
+        self.stage_timing = on;
         self
     }
 
@@ -415,6 +472,20 @@ impl ScenarioBuilder {
         for &(at, node, pct) in &self.load_schedule {
             eng.schedule(at, Ev::SetLoad { node, pct });
         }
+        // Observability knobs last (DESIGN.md §Observability): a trace
+        // fans out to every node, a timeline schedules its first sampling
+        // tick, stage timing arms the per-edge histograms. All three are
+        // structurally absent when off — the event stream and every node
+        // decision are bit-identical to an unobserved run.
+        if let Some(t) = &self.trace {
+            eng.set_trace(t.0.clone());
+        }
+        if let Some(w) = self.timeline_window_ms {
+            eng.enable_timeline(w);
+        }
+        if self.stage_timing {
+            eng.enable_stage_timing();
+        }
         eng
     }
 
@@ -431,14 +502,25 @@ impl ScenarioBuilder {
         summary.snapshot_rebuilds = snapshot_rebuilds;
         summary.snapshot_reuses = snapshot_reuses;
         summary.snapshot_deltas = snapshot_deltas;
+        let records = eng.recorder.records();
+        // The timeline's counting columns (arrivals/completions/met/
+        // rejects) come from the finished record stream — the live
+        // samples only carried the gauges (queue depth, staleness).
+        let timeline = eng.take_timeline().map(|mut t| {
+            t.finalize(&records);
+            t
+        });
+        let stage_ns = eng.take_stage_timers().map(|t| t.json());
         RunReport {
             policy: self.cfg.policy,
             summary,
-            records: eng.recorder.records(),
+            records,
             virtual_ms: eng.now_ms(),
             events,
             wall_us: start.elapsed().as_micros(),
             batteries: eng.battery_report(),
+            timeline,
+            stage_ns,
         }
     }
 

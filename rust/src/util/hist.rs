@@ -1,0 +1,147 @@
+//! Log-bucket histogram for opt-in stage timing (no deps).
+//!
+//! Stage-timing samples are wall-clock nanoseconds, so they must never
+//! enter the deterministic replay surface (DESIGN.md §Observability) —
+//! the histogram lives in [`crate::sim::RunReport`]'s gated `stage_ns`
+//! side channel, never in `RunSummary`. Power-of-two buckets keep the
+//! footprint fixed (65 counters) whatever the sample volume.
+
+/// A power-of-two bucketed histogram of `u64` samples (nanoseconds).
+///
+/// Bucket `i` holds samples in `[2^(i-1), 2^i)` (bucket 0 holds zeros),
+/// so quantiles are upper bounds accurate to 2×: good enough to tell a
+/// 100 ns Place stage from a 10 µs one, which is all stage timing needs.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    buckets: [u64; 65],
+    count: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self { buckets: [0; 65], count: 0, max: 0 }
+    }
+}
+
+impl Hist {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        let idx = if v == 0 { 0 } else { 64 - v.leading_zeros() as usize };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.max = self.max.max(v);
+    }
+
+    /// Merge another histogram into this one (per-edge timers fold into
+    /// one run-wide histogram after the run).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Largest recorded sample (exact, not bucketed).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`) as a bucket upper bound,
+    /// clamped to the exact max. 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let upper = if i >= 64 { u64::MAX } else { (1u64 << i) - 1 };
+                return upper.min(self.max).max(if i == 0 { 0 } else { 1 << (i - 1) });
+            }
+        }
+        self.max
+    }
+
+    /// Hand-rolled JSON object: `{"count":…,"p50":…,"p90":…,"p99":…,"max":…}`
+    /// (nanoseconds; the `stage_ns` report surface).
+    pub fn json(&self) -> String {
+        format!(
+            r#"{{"count":{},"p50":{},"p90":{},"p99":{},"max":{}}}"#,
+            self.count,
+            self.quantile(0.50),
+            self.quantile(0.90),
+            self.quantile(0.99),
+            self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist_is_zeroes() {
+        let h = Hist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.json(), r#"{"count":0,"p50":0,"p90":0,"p99":0,"max":0}"#);
+    }
+
+    #[test]
+    fn buckets_cover_powers_of_two() {
+        let mut h = Hist::new();
+        for v in [0u64, 1, 2, 3, 4, 1023, 1024, u64::MAX] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max(), u64::MAX);
+        // The median upper bound lands in the single-digit buckets.
+        assert!(h.quantile(0.5) <= 7, "p50 bound {}", h.quantile(0.5));
+    }
+
+    #[test]
+    fn quantile_bounds_bracket_samples() {
+        let mut h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        // Nearest-rank p50 of 1..=1000 is 500; the bucket bound is within
+        // a factor of two above and never below the true value's bucket.
+        assert!((256..=1023).contains(&p50), "p50 bound {p50}");
+        assert_eq!(h.quantile(1.0), 1000, "top quantile clamps to exact max");
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        a.record(10);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 1_000_000);
+    }
+}

@@ -5,9 +5,11 @@
 //! experiments are a deliverable — every figure regenerates bit-identically
 //! for a given config seed).
 
+pub mod hist;
 pub mod logger;
 pub mod rng;
 pub mod stats;
 
+pub use hist::Hist;
 pub use rng::SplitMix64;
 pub use stats::Summary;

@@ -19,6 +19,9 @@ pub struct Summary {
     pub p90: f64,
     /// 99th percentile.
     pub p99: f64,
+    /// 99.9th percentile — the city-scale tail signal (with 10⁴–10⁶
+    /// frames per run, p99 alone hides hundreds of stragglers).
+    pub p999: f64,
 }
 
 impl Summary {
@@ -28,7 +31,10 @@ impl Summary {
             return None;
         }
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        // total_cmp, not partial_cmp().expect: a single NaN sample (e.g.
+        // a 0/0 in a future derived metric) must not panic mid-run. IEEE
+        // total order sorts NaNs last, so they surface in `max`.
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -41,6 +47,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 50.0),
             p90: percentile_sorted(&sorted, 90.0),
             p99: percentile_sorted(&sorted, 99.0),
+            p999: percentile_sorted(&sorted, 99.9),
         })
     }
 }
@@ -121,6 +128,30 @@ mod tests {
         assert_eq!(percentile_sorted(&v, 90.0), 90.0);
         assert_eq!(percentile_sorted(&v, 99.0), 99.0);
         assert_eq!(percentile_sorted(&v, 100.0), 100.0);
+    }
+
+    #[test]
+    fn p999_resolves_the_far_tail() {
+        // 999 fast samples and one straggler: p99 misses it, p999 must not.
+        let mut v: Vec<f64> = vec![1.0; 999];
+        v.push(10_000.0);
+        let s = Summary::of(&v).unwrap();
+        assert_eq!(s.p99, 1.0);
+        assert_eq!(s.p999, 1.0); // rank ⌈0.999·1000⌉ = 999 → still 1.0
+        v.push(20_000.0); // now two stragglers in 1001 samples
+        let s = Summary::of(&v).unwrap();
+        assert_eq!(s.p999, 10_000.0);
+        assert_eq!(s.max, 20_000.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        let s = Summary::of(&[1.0, f64::NAN, 2.0]).unwrap();
+        // IEEE total order sorts the NaN last: min stays finite and the
+        // poison shows up in max instead of aborting the run.
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(s.p50, 2.0);
     }
 
     #[test]

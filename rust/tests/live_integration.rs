@@ -62,6 +62,79 @@ fn live_cluster_serves_stream_dds() {
 }
 
 #[test]
+fn introspection_endpoint_serves_metrics() {
+    // Stub runtime: no artifacts needed — the endpoint reads node state,
+    // not model outputs.
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    cfg.workload = small_workload(4);
+    let cluster = LiveCluster::start(&cfg, RuntimeService::spawn_stub()).expect("start");
+    std::thread::sleep(Duration::from_millis(200));
+
+    let addrs = cluster.introspect_addrs().to_vec();
+    assert_eq!(addrs.len(), 1, "single-cell config serves one endpoint");
+    let (edge, addr) = addrs[0];
+    use std::io::Read;
+    let mut text = String::new();
+    std::net::TcpStream::connect(addr)
+        .expect("connect to introspection endpoint")
+        .read_to_string(&mut text)
+        .expect("read exposition");
+    cluster.shutdown();
+
+    assert!(text.starts_with("HTTP/1.0 200 OK"), "got: {text}");
+    let body = text.split("\r\n\r\n").nth(1).expect("exposition body");
+    let needle = format!("edge_queue_depth{{node=\"{edge}\"}} ");
+    assert!(body.contains(&needle), "missing `{needle}` in:\n{body}");
+    for metric in [
+        "edge_busy_containers",
+        "edge_warm_containers",
+        "edge_mp_entries",
+        "edge_peer_entries",
+        "edge_peer_max_staleness_ms",
+        "pool_buf_hits",
+        "pool_buf_misses",
+    ] {
+        assert!(body.contains(metric), "missing `{metric}` in:\n{body}");
+    }
+}
+
+#[test]
+fn live_observability_produces_trace_and_timeline() {
+    use edge_dds::live::LiveObservability;
+    use edge_dds::metrics::trace::{shared, JsonlTrace, SharedBuf};
+    use edge_dds::sim::ScenarioBuilder;
+
+    let mut cfg = SystemConfig::default();
+    cfg.policy = PolicyKind::Dds;
+    cfg.workload = small_workload(6);
+    let buf = SharedBuf::new();
+    let obs = LiveObservability {
+        trace: Some(shared(JsonlTrace::new(Box::new(buf.clone())))),
+        timeline_window_ms: Some(100.0),
+    };
+    let cluster =
+        LiveCluster::start_observed(&cfg, RuntimeService::spawn_stub(), obs).expect("start");
+    std::thread::sleep(Duration::from_millis(200));
+    for (i, frames) in ScenarioBuilder::camera_streams(&cfg) {
+        cluster.stream_to(i, frames).expect("stream");
+    }
+    let summary = cluster.wait(Duration::from_secs(60));
+    let timeline = cluster.take_timeline().expect("timeline was enabled");
+    cluster.shutdown();
+
+    assert_eq!(summary.total, 6);
+    let text = String::from_utf8(buf.contents()).unwrap();
+    assert!(text.contains(r#""kind":"admit""#), "trace missing admits:\n{text}");
+    assert!(text.contains(r#""kind":"place""#), "trace missing places:\n{text}");
+    assert!(text.contains(r#""kind":"dispatch""#), "trace missing dispatches:\n{text}");
+    let csv = timeline.to_csv();
+    assert!(csv.starts_with(edge_dds::metrics::TIMELINE_HEADER));
+    let arrivals: usize = timeline.rows().iter().map(|r| r.arrivals).sum();
+    assert_eq!(arrivals, 6, "every frame lands in some window:\n{csv}");
+}
+
+#[test]
 fn live_cluster_aoe_routes_to_edge() {
     let Some(dir) = artifacts_dir() else { return };
     let mut cfg = SystemConfig::default();
