@@ -5,17 +5,18 @@
 //! numbers in EXPERIMENTS.md.
 //!
 //! Besides the console report, the run writes a machine-readable summary
-//! (decide/dispatch ns/op) to `$BENCH_JSON` (default `BENCH_7.json`) so
+//! (decide/dispatch ns/op) to `$BENCH_JSON` (default `BENCH_9.json`) so
 //! the perf trajectory is recorded across PRs; CI uploads it as an
-//! artifact and `scripts/bench_check` gates the decode-path numbers
-//! against the committed baseline.
+//! artifact and `scripts/bench_check` gates the decode-path, queue and
+//! record-store numbers against the committed baseline.
 //!
 //! Run: `cargo bench --bench hotpath`
 
 #[path = "common/mod.rs"]
 mod common;
 
-use std::collections::BTreeSet;
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, HashMap};
 
 use common::{bench, black_box, per_op_ns, section, write_bench_json, BenchResult};
 use edge_dds::config::WorkloadConfig;
@@ -302,6 +303,76 @@ fn main() {
     r.print_throughput(1_000.0, "cycles");
     json.push((r.clone(), Some(per_op_ns(&r, 1_000.0))));
 
+    section("pending-event queue (calendar wheel vs binary heap)");
+    // The engine-twin structures under the engine's own key discipline:
+    // `(at_ms, seq)` with same-timestamp events in insertion order.
+    // Timestamps spread over 2× the wheel's in-window span so the
+    // overflow level and the window jump are both on the measured path.
+    for &n in &[1_000usize, 100_000] {
+        let at = |i: usize| (i % 4096) as f64 * 0.5;
+        let r = bench(&format!("wheel push+pop x{n}"), 2, 10, || {
+            let mut q = edge_dds::sim::CalendarQueue::new(1.0, 1024);
+            for i in 0..n {
+                q.push(at(i), i as u64, i as u32);
+            }
+            while let Some(e) = q.pop() {
+                black_box(e);
+            }
+        });
+        r.print_throughput(n as f64, "push+pop");
+        json.push((r.clone(), Some(per_op_ns(&r, n as f64))));
+        let r = bench(&format!("heap push+pop x{n}"), 2, 10, || {
+            // f64 keys are non-negative here, so the bit pattern orders
+            // like the float — the classic heap's comparator in miniature.
+            let mut q: BinaryHeap<Reverse<(u64, u64, u32)>> = BinaryHeap::new();
+            for i in 0..n {
+                q.push(Reverse((at(i).to_bits(), i as u64, i as u32)));
+            }
+            while let Some(e) = q.pop() {
+                black_box(e);
+            }
+        });
+        r.print_throughput(n as f64, "push+pop");
+        json.push((r.clone(), Some(per_op_ns(&r, n as f64))));
+    }
+
+    section("record store (dense slab vs hashmap)");
+    // The per-frame record lookup that every placed/started/completed
+    // transition pays. The dense slab indexes by TaskId directly; the
+    // hashmap baseline is the pre-PR-9 cost model (hash + probe per
+    // touch).
+    const REC_N: u64 = 100_000;
+    let mut rec = edge_dds::metrics::Recorder::new();
+    for t in 0..REC_N {
+        rec.created(&img(t));
+    }
+    let r = bench("record lookup dense x100k", 2, 10, || {
+        let mut live = 0u64;
+        for t in 0..REC_N {
+            if rec.get(TaskId(t)).is_some() {
+                live += 1;
+            }
+        }
+        black_box(live);
+    });
+    r.print_throughput(REC_N as f64, "lookups");
+    json.push((r.clone(), Some(per_op_ns(&r, REC_N as f64))));
+    let mut map: HashMap<u64, u64> = HashMap::new();
+    for t in 0..REC_N {
+        map.insert(t, t);
+    }
+    let r = bench("record lookup hashmap x100k (baseline)", 2, 10, || {
+        let mut live = 0u64;
+        for t in 0..REC_N {
+            if map.contains_key(&t) {
+                live += 1;
+            }
+        }
+        black_box(live);
+    });
+    r.print_throughput(REC_N as f64, "lookups");
+    json.push((r.clone(), Some(per_op_ns(&r, REC_N as f64))));
+
     section("wire codec");
     let msg = Message::Image(img(42));
     let mut buf = Vec::with_capacity(256);
@@ -419,7 +490,35 @@ fn main() {
         json.push((r.clone(), Some(per_op_ns(&r, events))));
     }
 
-    let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_7.json".to_string());
+    section("city-scale throughput (million-frame engine pass)");
+    // 16 cells × (31 250 diurnal + 2 × 15 625 flash/batch) = exactly 10⁶
+    // frames, streamed through the coalesced lazy-arrival path (each
+    // per-cell stream is far above the coalesce threshold). One timed
+    // run — the entry records frames/s for the trajectory, it is NOT in
+    // the bench_check gate (whole-sim numbers carry scheduler jitter).
+    // `CITY_BENCH_IMAGES` scales the diurnal stream down for quick local
+    // runs; the recorded name always reflects the actual frame count.
+    let city_images: u32 = std::env::var("CITY_BENCH_IMAGES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(31_250);
+    let city = ScenarioBuilder::new(edge_dds::experiments::city_config(
+        16,
+        edge_dds::net::FederationShape::Mesh,
+        city_images,
+    ))
+    .seed(42)
+    .max_events(edge_dds::experiments::CITY_MAX_EVENTS);
+    let probe = city.run();
+    let frames = probe.summary.total as f64;
+    println!("city probe: {} frames, {} events", probe.summary.total, probe.events);
+    let r = bench(&format!("city 16-cell {} frames", probe.summary.total), 0, 1, || {
+        black_box(city.run());
+    });
+    r.print_throughput(frames, "frames");
+    json.push((r.clone(), Some(per_op_ns(&r, frames))));
+
+    let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_9.json".to_string());
     match write_bench_json(&out, "hotpath", &json) {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => eprintln!("\nfailed to write {out}: {e}"),

@@ -17,6 +17,7 @@
 //! [[app]]          QoS registry: deadline, privacy, priority, weight, …
 //! [admission]      admission (rate, burst, ceiling, deadline_shed,
 //!                  device_intake = also enforce at device intake)
+//! [dispatch]       work_stealing = deepest-backlog stealing dispatch
 //! [[churn]]        scripted fail/recover/join events
 //! [churn_random]   seeded MTBF/MTTR device cycles
 //! [failure]        detector thresholds + heartbeat period
@@ -476,6 +477,11 @@ pub struct SystemConfig {
     /// Edge-side admission control (`[admission]`, DESIGN.md §3).
     /// `None` = the Admit stage is a structural no-op (legacy).
     pub admission: Option<AdmissionConfig>,
+    /// `[dispatch] work_stealing = true`: freed containers steal the
+    /// EDF-front of the deepest per-app backlog
+    /// ([`QueueDiscipline::WorkStealing`]). Off by default; takes
+    /// precedence over `[[app]] weight` DRR when both are set.
+    pub work_stealing: bool,
 }
 
 impl Default for SystemConfig {
@@ -515,6 +521,7 @@ impl Default for SystemConfig {
             churn: ChurnConfig::default(),
             apps: Vec::new(),
             admission: None,
+            work_stealing: false,
         }
     }
 }
@@ -783,6 +790,7 @@ impl SystemConfig {
             churn,
             apps,
             admission,
+            work_stealing: doc.bool_or("dispatch", "work_stealing", false),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -845,7 +853,9 @@ impl SystemConfig {
     /// declares a `weight`, in which case DRR with weightless apps at 1.
     /// Shared by the sim and live drivers — one derivation, two drivers.
     pub fn queue_discipline(&self) -> QueueDiscipline {
-        if self.apps.iter().any(|a| a.weight.is_some()) {
+        if self.work_stealing {
+            QueueDiscipline::WorkStealing
+        } else if self.apps.iter().any(|a| a.weight.is_some()) {
             QueueDiscipline::WeightedFair {
                 weights: self.effective_apps().iter().map(|a| a.weight.unwrap_or(1)).collect(),
             }
@@ -1644,6 +1654,38 @@ camera = true
             c.queue_discipline(),
             QueueDiscipline::WeightedFair { weights: vec![3] }
         );
+    }
+
+    #[test]
+    fn dispatch_work_stealing_knob() {
+        // Default off: absent section keeps the strict discipline.
+        assert!(!SystemConfig::default().work_stealing);
+        let text = r#"
+[dispatch]
+work_stealing = true
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        let c = SystemConfig::from_toml(text).unwrap();
+        assert!(c.work_stealing);
+        assert_eq!(c.queue_discipline(), QueueDiscipline::WorkStealing);
+        // Stealing takes precedence over [[app]] weights when both are set.
+        let both = r#"
+[dispatch]
+work_stealing = true
+
+[[app]]
+name = "a"
+weight = 3
+
+[[device]]
+class = "rpi"
+camera = true
+"#;
+        let c = SystemConfig::from_toml(both).unwrap();
+        assert_eq!(c.queue_discipline(), QueueDiscipline::WorkStealing);
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub enum QueueDiscipline {
     /// saturation instead of strict priority. Enabled by `[[app]] weight`
     /// keys in the config.
     WeightedFair { weights: Vec<u32> },
+    /// Backlog-stealing over per-app EDF queues: each freed (idle warm)
+    /// container "steals" the EDF-front frame of the *deepest* sibling
+    /// app queue (ties toward the lowest app id). Under skewed overload
+    /// this drains the most backlogged tenant first — a latency-variance
+    /// reducer rather than a share guarantee. Off by default; enabled by
+    /// `[dispatch] work_stealing = true`.
+    WorkStealing,
 }
 
 /// DRR state for [`QueueDiscipline::WeightedFair`]: per-app queues (EDF
@@ -82,6 +89,9 @@ struct DrrQueues {
     queues: Vec<VecDeque<ImageMeta>>,
     credit: Vec<u32>,
     cursor: usize,
+    /// [`QueueDiscipline::WorkStealing`]: ignore weights/credit/cursor and
+    /// pop the EDF-front of the deepest queue instead of rotating.
+    steal: bool,
 }
 
 impl DrrQueues {
@@ -94,7 +104,13 @@ impl DrrQueues {
             credit: vec![0; n],
             weights,
             cursor: 0,
+            steal: false,
         }
+    }
+
+    /// Per-app queues in stealing mode ([`QueueDiscipline::WorkStealing`]).
+    fn new_steal() -> Self {
+        Self { steal: true, ..Self::new(Vec::new()) }
     }
 
     /// Grow to cover an app id beyond the registry (robustness against
@@ -124,6 +140,9 @@ impl DrrQueues {
     }
 
     fn pop_next(&mut self) -> Option<ImageMeta> {
+        if self.steal {
+            return self.steal_next();
+        }
         let n = self.queues.len();
         let mut visited = 0;
         while visited < n {
@@ -148,6 +167,19 @@ impl DrrQueues {
             return img;
         }
         None
+    }
+
+    /// Stealing pop: the EDF-front of the deepest backlog, ties toward
+    /// the lowest app id — total and deterministic like the other
+    /// disciplines (queue depths and EDF order are replay state).
+    fn steal_next(&mut self) -> Option<ImageMeta> {
+        let mut best: Option<usize> = None;
+        for (i, q) in self.queues.iter().enumerate() {
+            if !q.is_empty() && best.map_or(true, |b| q.len() > self.queues[b].len()) {
+                best = Some(i);
+            }
+        }
+        self.queues[best?].pop_front()
     }
 
     fn len(&self) -> usize {
@@ -207,6 +239,7 @@ impl ContainerPool {
         self.fair = match discipline {
             QueueDiscipline::PriorityEdf => None,
             QueueDiscipline::WeightedFair { weights } => Some(DrrQueues::new(weights)),
+            QueueDiscipline::WorkStealing => Some(DrrQueues::new_steal()),
         };
         self
     }
@@ -713,6 +746,55 @@ mod tests {
         assert_eq!(assigns[0].task.0, 100);
         assert_eq!(assigns[1].task.0, 101);
         assert_eq!(p.queued_count(), 4);
+    }
+
+    // ---- work stealing (PR-9 satellite, DESIGN.md §Engine internals) ----
+
+    fn steal_pool() -> ContainerPool {
+        ContainerPool::new(profile_for(NodeClass::EdgeServer), 1)
+            .with_discipline(QueueDiscipline::WorkStealing)
+    }
+
+    #[test]
+    fn stealing_drains_the_deepest_app_queue_first() {
+        let mut p = steal_pool();
+        p.submit(img(0, 29.0), 0.0).unwrap(); // occupy the container
+        // App 0: one frame; app 1: three frames — the backlog.
+        p.submit(app_img(100, 0, 1e6), 1.0);
+        for t in 0..3u64 {
+            p.submit(app_img(200 + t, 1, 1e6), 1.0);
+        }
+        let mut order = Vec::new();
+        let mut running = p_busy_task(&p);
+        while let Some(next) = p.complete(0, running, 10.0) {
+            order.push(next.task.0);
+            running = next.task;
+        }
+        // Deepest-first: app 1 until its depth drops to app 0's (3, 2,
+        // then tie at 1-vs-1 → lowest app id), EDF order within the app.
+        assert_eq!(order, vec![200, 201, 100, 202]);
+    }
+
+    #[test]
+    fn stealing_tie_breaks_toward_the_lowest_app_id() {
+        let mut p = steal_pool();
+        p.submit(img(0, 29.0), 0.0).unwrap();
+        // Equal depths: app 2 enqueued first must not win the tie.
+        p.submit(app_img(300, 2, 1e6), 1.0);
+        p.submit(app_img(100, 0, 1e6), 1.0);
+        let next = p.complete(0, p_busy_task(&p), 10.0).unwrap();
+        assert_eq!(next.task.0, 100);
+    }
+
+    #[test]
+    fn stealing_pops_edf_front_within_the_stolen_queue() {
+        let mut p = steal_pool();
+        p.submit(img(0, 29.0), 0.0).unwrap();
+        // Later-submitted frame has the earlier absolute deadline.
+        p.submit(app_img(201, 1, 1e6), 1.0);
+        p.submit(app_img(200, 1, 5_000.0), 1.0);
+        let next = p.complete(0, p_busy_task(&p), 10.0).unwrap();
+        assert_eq!(next.task.0, 200, "EDF front, not FIFO front");
     }
 
     #[test]

@@ -211,15 +211,23 @@ pub fn churn_run(
 
 /// The full sweep: cell counts × scenarios × the paper's four policies.
 pub fn churn(seed: u64) -> Vec<ChurnRow> {
-    let mut rows = Vec::new();
+    churn_jobs(seed, 1)
+}
+
+/// [`churn`] over `jobs` worker threads; rows return in the sequential
+/// sweep's enumeration order (`jobs = 1` is the classic loop).
+pub fn churn_jobs(seed: u64, jobs: usize) -> Vec<ChurnRow> {
+    let mut points = Vec::new();
     for &n_cells in &CHURN_CELLS {
         for scenario in ChurnScenario::ALL {
             for policy in PolicyKind::PAPER {
-                rows.push(churn_run(n_cells, scenario, policy, seed, 200, 5_000.0));
+                points.push((n_cells, scenario, policy));
             }
         }
     }
-    rows
+    super::run_indexed(jobs, points, |(n_cells, scenario, policy)| {
+        churn_run(n_cells, scenario, policy, seed, 200, 5_000.0)
+    })
 }
 
 /// Render the sweep as an aligned text grid: one block per scenario, one
@@ -320,13 +328,19 @@ pub fn churnsweep_run(mtbf_ms: f64, policy: PolicyKind, seed: u64, n_images: u32
 
 /// The full sweep: MTBF points × the paper's four policies.
 pub fn churnsweep(seed: u64) -> Vec<ChurnSweepRow> {
-    let mut rows = Vec::new();
+    churnsweep_jobs(seed, 1)
+}
+
+/// [`churnsweep`] over `jobs` worker threads; rows return in the
+/// sequential sweep's enumeration order (`jobs = 1` is the classic loop).
+pub fn churnsweep_jobs(seed: u64, jobs: usize) -> Vec<ChurnSweepRow> {
+    let mut points = Vec::new();
     for &mtbf in &SWEEP_MTBF_MS {
         for policy in PolicyKind::PAPER {
-            rows.push(churnsweep_run(mtbf, policy, seed, 150));
+            points.push((mtbf, policy));
         }
     }
-    rows
+    super::run_indexed(jobs, points, |(mtbf, policy)| churnsweep_run(mtbf, policy, seed, 150))
 }
 
 /// Render the sweep: met fraction per policy as MTBF shrinks, plus the

@@ -238,17 +238,21 @@ pub fn city_observed(
 /// The full sweep, capped at `max_cells` (the CI smoke step shrinks the
 /// city; duplicate post-clamp points collapse to one run).
 pub fn city(seed: u64, n_images: u32, max_cells: usize) -> Vec<CityRow> {
-    let mut rows: Vec<CityRow> = Vec::new();
-    let mut seen: Vec<(FederationShape, usize)> = Vec::new();
+    city_jobs(seed, n_images, max_cells, 1)
+}
+
+/// [`city`] over `jobs` worker threads. Point enumeration stays
+/// sequential (it is the ordering contract); only the runs fan out, and
+/// rows come back in enumeration order — `jobs = 1` is the classic loop.
+pub fn city_jobs(seed: u64, n_images: u32, max_cells: usize, jobs: usize) -> Vec<CityRow> {
+    let mut points: Vec<(FederationShape, usize)> = Vec::new();
     for (shape, cells) in CITY_SWEEP {
         let cells = cells.min(max_cells).max(2);
-        if seen.contains(&(shape, cells)) {
-            continue;
+        if !points.contains(&(shape, cells)) {
+            points.push((shape, cells));
         }
-        seen.push((shape, cells));
-        rows.push(city_run(shape, cells, seed, n_images));
     }
-    rows
+    super::run_indexed(jobs, points, |(shape, cells)| city_run(shape, cells, seed, n_images))
 }
 
 /// Render the sweep plus the gossip-sublinearity and privacy lines the

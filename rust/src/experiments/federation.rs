@@ -83,13 +83,19 @@ pub fn fed_run(n_cells: usize, load: f64, seed: u64, n_images: u32, deadline_ms:
 
 /// The full sweep: cell counts × Fig. 8 load levels.
 pub fn fed(seed: u64) -> Vec<FedRow> {
-    let mut rows = Vec::new();
+    fed_jobs(seed, 1)
+}
+
+/// [`fed`] over `jobs` worker threads; rows return in the sequential
+/// sweep's enumeration order (`jobs = 1` is the classic loop).
+pub fn fed_jobs(seed: u64, jobs: usize) -> Vec<FedRow> {
+    let mut points = Vec::new();
     for &n_cells in &FED_CELLS {
         for &load in &FIG8_LOADS {
-            rows.push(fed_run(n_cells, load, seed, 1_000, 5_000.0));
+            points.push((n_cells, load));
         }
     }
-    rows
+    super::run_indexed(jobs, points, |(n_cells, load)| fed_run(n_cells, load, seed, 1_000, 5_000.0))
 }
 
 /// Render the sweep as an aligned text grid (one line per load level,

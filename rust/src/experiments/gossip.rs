@@ -155,17 +155,25 @@ pub fn gossip_run(
 
 /// The full sweep: shapes × cell counts × gossip periods × bandwidths.
 pub fn gossip(seed: u64, n_images: u32) -> Vec<GossipRow> {
-    let mut rows = Vec::new();
+    gossip_jobs(seed, n_images, 1)
+}
+
+/// [`gossip`] over `jobs` worker threads; rows return in the sequential
+/// sweep's enumeration order (`jobs = 1` is the classic loop).
+pub fn gossip_jobs(seed: u64, n_images: u32, jobs: usize) -> Vec<GossipRow> {
+    let mut points = Vec::new();
     for shape in GOSSIP_SHAPES {
         for &n_cells in &GOSSIP_CELLS {
             for &period in &GOSSIP_PERIODS_MS {
                 for &bw in &GOSSIP_BACKHAUL_MBPS {
-                    rows.push(gossip_run(n_cells, shape, period, bw, seed, n_images));
+                    points.push((shape, n_cells, period, bw));
                 }
             }
         }
     }
-    rows
+    super::run_indexed(jobs, points, |(shape, n_cells, period, bw)| {
+        gossip_run(n_cells, shape, period, bw, seed, n_images)
+    })
 }
 
 /// Render the sweep as an aligned text grid.

@@ -12,26 +12,30 @@ pub mod federation;
 pub mod figures;
 pub mod gossip;
 pub mod overload;
+pub mod parallel;
 pub mod slo;
 pub mod tables;
 
 pub use churn::{
-    apply_scenario, churn, churn_config, churn_run, churnsweep, churnsweep_run, render_churn,
-    render_churnsweep, ChurnRow, ChurnScenario, ChurnSweepRow, SWEEP_MTBF_MS,
+    apply_scenario, churn, churn_config, churn_jobs, churn_run, churnsweep, churnsweep_jobs,
+    churnsweep_run, render_churn, render_churnsweep, ChurnRow, ChurnScenario, ChurnSweepRow,
+    SWEEP_MTBF_MS,
 };
 pub use city::{
-    city, city_config, city_observed, city_run, render_city, CityRow, CITY_MAX_EVENTS,
+    city, city_config, city_jobs, city_observed, city_run, render_city, CityRow, CITY_MAX_EVENTS,
     CITY_REGION_SIZE, CITY_SWEEP,
 };
-pub use federation::{fed, fed_config, fed_run, render_fed, FedRow};
+pub use federation::{fed, fed_config, fed_jobs, fed_run, render_fed, FedRow};
 pub use gossip::{
-    gossip, gossip_config, gossip_run, render_gossip, shape_hops, GossipRow,
+    gossip, gossip_config, gossip_jobs, gossip_run, render_gossip, shape_hops, GossipRow,
     GOSSIP_BACKHAUL_MBPS, GOSSIP_CELLS, GOSSIP_PERIODS_MS, GOSSIP_SHAPES,
 };
 pub use overload::{
-    overload, overload_config, overload_run, render_overload, OverloadRow, OVERLOAD_MULTS,
+    overload, overload_config, overload_jobs, overload_run, render_overload, OverloadMode,
+    OverloadRow, OVERLOAD_MODES, OVERLOAD_MULTS,
 };
-pub use slo::{render_slo, slo, slo_config, slo_run, SloRow, SLO_CELLS};
+pub use parallel::{default_jobs, run_indexed};
+pub use slo::{render_slo, slo, slo_config, slo_jobs, slo_run, SloRow, SLO_CELLS};
 pub use figures::{fig5, fig6, fig7, fig8, Fig5Row, Fig7Row, Fig8Row};
 pub use tables::{table2, table3, table4, table5, table6, TableRow};
 

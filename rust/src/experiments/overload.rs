@@ -10,13 +10,20 @@
 //!   frame rate. The tenant strict priority starves: its unbounded queue
 //!   grows without limit, so almost every frame waits past its deadline.
 //!
-//! Two pipeline modes per load point:
+//! Three pipeline modes per load point:
 //!
 //! - **strict** — no `[admission]`, no weights: PR-3 behaviour (strict
 //!   priority + EDF dispatch, admit everything, never shed).
 //! - **fair** — `[admission]` (best-effort rate-limited to roughly its
 //!   fair-share service rate, per-app queue ceiling, deadline shed) plus
 //!   DRR weights 2:1 (strict:besteffort).
+//! - **steal** — the fair mode's admission surface, but DRR dispatch
+//!   replaced by [`QueueDiscipline::WorkStealing`]: every freed warm
+//!   container steals the EDF-front of the *deepest* sibling app queue.
+//!   Same admitted workload as fair, different service order — isolates
+//!   the dispatch discipline from the admission controls.
+//!
+//! [`QueueDiscipline::WorkStealing`]: crate::container::QueueDiscipline
 //!
 //! The arrival multiplier sweeps 1×→4× by shrinking both inter-frame
 //! intervals. Expected shape (the acceptance claim): past 2× saturation
@@ -37,14 +44,44 @@ use super::churn::churn_config;
 /// Arrival-rate multipliers swept past saturation.
 pub const OVERLOAD_MULTS: [u32; 4] = [1, 2, 3, 4];
 
+/// Pipeline mode for one overload run (see the module doc).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadMode {
+    /// Strict priority + EDF dispatch; admit everything, never shed.
+    Strict,
+    /// Admission controls + DRR weighted fair sharing (2:1).
+    Fair,
+    /// Admission controls + deepest-backlog work-stealing dispatch.
+    Steal,
+}
+
+/// The three modes, in sweep/render order.
+pub const OVERLOAD_MODES: [OverloadMode; 3] =
+    [OverloadMode::Strict, OverloadMode::Fair, OverloadMode::Steal];
+
+impl OverloadMode {
+    /// Column label in the rendered report.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OverloadMode::Strict => "strict",
+            OverloadMode::Fair => "admit+fair",
+            OverloadMode::Steal => "admit+steal",
+        }
+    }
+
+    /// Whether this mode turns the admission + weights surface on.
+    fn admits(self) -> bool {
+        !matches!(self, OverloadMode::Strict)
+    }
+}
+
 /// One (multiplier × mode × policy) run.
 #[derive(Debug, Clone)]
 pub struct OverloadRow {
     /// Arrival-rate multiplier (1× = the base scenario).
     pub mult: u32,
-    /// Admission + weighted-fair sharing on (vs. strict-priority PR-3
-    /// behaviour).
-    pub fair: bool,
+    /// The pipeline mode (strict priority, admit+fair, admit+steal).
+    pub mode: OverloadMode,
     /// The policy under test.
     pub policy: PolicyKind,
     /// Full run summary (rejected/shed counters included).
@@ -54,8 +91,9 @@ pub struct OverloadRow {
 /// The two-tenant single-cell config at arrival multiplier `mult`.
 /// `n_images` scales the strict stream (best-effort floods at 4× the
 /// frame count on a 4×-faster clock, so both spans coincide).
-pub fn overload_config(mult: u32, fair: bool, n_images: u32) -> SystemConfig {
+pub fn overload_config(mult: u32, mode: OverloadMode, n_images: u32) -> SystemConfig {
     let mut cfg = churn_config(1);
+    let fair = mode.admits();
     let m = mult as f64;
     cfg.apps = vec![
         AppSpec {
@@ -96,34 +134,46 @@ pub fn overload_config(mult: u32, fair: bool, n_images: u32) -> SystemConfig {
             device_intake: false,
         });
     }
+    // Steal keeps fair's admission surface but swaps DRR for
+    // deepest-backlog work stealing (takes precedence over the weights).
+    cfg.work_stealing = mode == OverloadMode::Steal;
     cfg
 }
 
 /// Run one sweep cell.
 pub fn overload_run(
     mult: u32,
-    fair: bool,
+    mode: OverloadMode,
     policy: PolicyKind,
     seed: u64,
     n_images: u32,
 ) -> OverloadRow {
-    let mut cfg = overload_config(mult, fair, n_images);
+    let mut cfg = overload_config(mult, mode, n_images);
     cfg.policy = policy;
     let report = ScenarioBuilder::new(cfg).seed(seed).run();
-    OverloadRow { mult, fair, policy, summary: report.summary }
+    OverloadRow { mult, mode, policy, summary: report.summary }
 }
 
-/// The full sweep: multipliers × strict/fair × the paper's four policies.
+/// The full sweep: multipliers × strict/fair/steal × the paper's four
+/// policies.
 pub fn overload(seed: u64, n_images: u32) -> Vec<OverloadRow> {
-    let mut rows = Vec::new();
+    overload_jobs(seed, n_images, 1)
+}
+
+/// [`overload`] over `jobs` worker threads; rows return in the
+/// sequential sweep's enumeration order (`jobs = 1` is the classic loop).
+pub fn overload_jobs(seed: u64, n_images: u32, jobs: usize) -> Vec<OverloadRow> {
+    let mut points = Vec::new();
     for &mult in &OVERLOAD_MULTS {
-        for fair in [false, true] {
+        for mode in OVERLOAD_MODES {
             for policy in PolicyKind::PAPER {
-                rows.push(overload_run(mult, fair, policy, seed, n_images));
+                points.push((mult, mode, policy));
             }
         }
     }
-    rows
+    super::run_indexed(jobs, points, |(mult, mode, policy)| {
+        overload_run(mult, mode, policy, seed, n_images)
+    })
 }
 
 /// Render the sweep: one block per load multiplier, per-app met fractions
@@ -140,10 +190,10 @@ pub fn render_overload(rows: &[OverloadRow]) -> String {
             "policy", "mode", "strictMF", "beMF", "met", "miss", "rejected", "shed"
         ));
         for policy in PolicyKind::PAPER {
-            for fair in [false, true] {
+            for mode in OVERLOAD_MODES {
                 let Some(row) = rows
                     .iter()
-                    .find(|r| r.mult == mult && r.fair == fair && r.policy == policy)
+                    .find(|r| r.mult == mult && r.mode == mode && r.policy == policy)
                 else {
                     continue;
                 };
@@ -155,7 +205,7 @@ pub fn render_overload(rows: &[OverloadRow]) -> String {
                 out.push_str(&format!(
                     "{:>10} {:>12} {:>10.3} {:>10.3} {:>9} {:>6} {:>8} {:>8}\n",
                     policy.as_str(),
-                    if fair { "admit+fair" } else { "strict" },
+                    mode.as_str(),
                     frac(0),
                     frac(1),
                     row.summary.met,
@@ -178,20 +228,32 @@ mod tests {
 
     #[test]
     fn overload_config_shape() {
-        for fair in [false, true] {
-            let c = overload_config(2, fair, 40);
+        for mode in OVERLOAD_MODES {
+            let admits = mode != OverloadMode::Strict;
+            let c = overload_config(2, mode, 40);
             c.validate().unwrap();
             assert_eq!(c.apps.len(), 2);
             // Spans coincide: 40×200 = 160×50 (at 2×).
             assert_eq!(c.span_ms(), 8_000.0);
-            assert_eq!(c.admission.is_some(), fair);
-            assert_eq!(c.apps[0].weight.is_some(), fair);
-            if fair {
+            assert_eq!(c.admission.is_some(), admits);
+            assert_eq!(c.apps[0].weight.is_some(), admits);
+            assert_eq!(c.work_stealing, mode == OverloadMode::Steal);
+            if admits {
                 let p = c.admission_params().unwrap();
                 assert_eq!(p.per_app_rate, vec![None, Some(3.0)]);
                 assert!(p.deadline_shed);
             }
         }
+        // Steal swaps the dispatch discipline, not the admission surface.
+        use crate::container::QueueDiscipline;
+        assert_eq!(
+            overload_config(2, OverloadMode::Steal, 40).queue_discipline(),
+            QueueDiscipline::WorkStealing
+        );
+        assert!(matches!(
+            overload_config(2, OverloadMode::Fair, 40).queue_discipline(),
+            QueueDiscipline::WeightedFair { .. }
+        ));
     }
 
     #[test]
@@ -199,8 +261,8 @@ mod tests {
         // The acceptance claim, at 2× saturation (AOE: pure pool
         // dynamics — every frame reaches the edge pool, so the comparison
         // isolates the pipeline's Admit/Dispatch/Overload stages).
-        let strict = overload_run(2, false, PolicyKind::Aoe, 7, 60);
-        let fair = overload_run(2, true, PolicyKind::Aoe, 7, 60);
+        let strict = overload_run(2, OverloadMode::Strict, PolicyKind::Aoe, 7, 60);
+        let fair = overload_run(2, OverloadMode::Fair, PolicyKind::Aoe, 7, 60);
         let mf = |r: &OverloadRow, app: u16| {
             r.summary.app(AppId(app)).map_or(0.0, |a| a.met_fraction())
         };
@@ -235,13 +297,38 @@ mod tests {
     }
 
     #[test]
+    fn steal_mode_runs_and_accounts_every_frame() {
+        // The work-stealing dispatch satellite: same admission surface as
+        // fair, dispatch by deepest-backlog stealing. It must run to
+        // completion with the accounting identity intact and the
+        // admission surface still firing under the 2× flood.
+        let steal = overload_run(2, OverloadMode::Steal, PolicyKind::Aoe, 7, 60);
+        let s = &steal.summary;
+        assert_eq!(s.met + s.missed + s.dropped, s.total);
+        assert!(s.total > 0);
+        assert!(s.rejected > 0, "admission must still reject under 2x flood");
+        assert_eq!(s.privacy_violations, 0);
+        // And it is genuinely a different service order from DRR fair
+        // share: under the skewed flood the two modes cannot dispatch
+        // identically, which shows up in the per-app met counts.
+        let fair = overload_run(2, OverloadMode::Fair, PolicyKind::Aoe, 7, 60);
+        assert_ne!(
+            (steal.summary.met, steal.summary.missed),
+            (fair.summary.met, fair.summary.missed),
+            "steal dispatch should not be byte-identical to DRR under skewed overload"
+        );
+    }
+
+    #[test]
     fn render_has_modes_and_privacy_line() {
         let rows = vec![
-            overload_run(1, false, PolicyKind::Aoe, 7, 12),
-            overload_run(1, true, PolicyKind::Aoe, 7, 12),
+            overload_run(1, OverloadMode::Strict, PolicyKind::Aoe, 7, 12),
+            overload_run(1, OverloadMode::Fair, PolicyKind::Aoe, 7, 12),
+            overload_run(1, OverloadMode::Steal, PolicyKind::Aoe, 7, 12),
         ];
         let s = render_overload(&rows);
         assert!(s.contains("admit+fair"));
+        assert!(s.contains("admit+steal"));
         assert!(s.contains("strictMF"));
         assert!(s.contains("Overload privacy violations (all runs): 0"));
     }

@@ -1,0 +1,103 @@
+//! Scoped-thread sweep runner (DESIGN.md §Engine internals, sweep-runner
+//! determinism): every experiment sweep is an embarrassingly parallel
+//! grid of independent seeded runs, so the harness fans the points out
+//! over `--jobs N` OS threads and reassembles the rows **in input index
+//! order**. Determinism scope:
+//!
+//! * each point is one single-threaded engine run keyed only by its
+//!   parameters and seed — thread assignment cannot leak into results;
+//! * rows come back in the same order the sweep enumerated them, so
+//!   rendered reports are byte-identical for every `N`;
+//! * `--jobs 1` does not spawn at all — it is literally the sequential
+//!   loop, which is how the equality tests pin the contract.
+//!
+//! Plain `std::thread::scope` + an atomic work index: no dependencies, no
+//! channels, no unsafe.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default worker count for `--jobs`: the machine's available
+/// parallelism, 1 when that cannot be determined.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over every item, `jobs` at a time, returning results in input
+/// order. `jobs <= 1` (or a single item) runs inline on the caller's
+/// thread — no spawn, bit-identical to the classic sequential sweep.
+pub fn run_indexed<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if jobs <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Work slots are claimed exactly once via the atomic cursor; the
+    // mutexes are uncontended by construction (each index is touched by
+    // one worker) and exist only to hand `T`/`R` across the scope safely.
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..jobs.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("slot claimed once");
+                let out = f(item);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every slot filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order_at_any_width() {
+        let items: Vec<usize> = (0..37).collect();
+        let seq = run_indexed(1, items.clone(), |i| i * i);
+        for jobs in [2, 3, 8, 64] {
+            assert_eq!(run_indexed(jobs, items.clone(), |i| i * i), seq);
+        }
+    }
+
+    #[test]
+    fn width_above_item_count_is_fine() {
+        assert_eq!(run_indexed(16, vec![1, 2], |i| i + 1), vec![2, 3]);
+        assert_eq!(run_indexed(4, Vec::<u32>::new(), |i| i), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn parallel_sweeps_match_sequential_rendering() {
+        // The `--jobs N ≡ --jobs 1` contract on real sweeps: rendered
+        // reports (the CLI's observable output) must be byte-identical.
+        use crate::experiments::{
+            churnsweep_jobs, overload_jobs, render_churnsweep, render_overload,
+        };
+        let seq = render_overload(&overload_jobs(7, 6, 1));
+        let par = render_overload(&overload_jobs(7, 6, 3));
+        assert_eq!(seq, par);
+        let seq = render_churnsweep(&churnsweep_jobs(7, 1));
+        let par = render_churnsweep(&churnsweep_jobs(7, 2));
+        assert_eq!(seq, par);
+    }
+}

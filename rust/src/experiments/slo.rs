@@ -126,15 +126,23 @@ pub fn slo_run(
 
 /// The full sweep: cells × churn off/on × the paper's four policies.
 pub fn slo(seed: u64, n_images: u32) -> Vec<SloRow> {
-    let mut rows = Vec::new();
+    slo_jobs(seed, n_images, 1)
+}
+
+/// [`slo`] over `jobs` worker threads; rows return in the sequential
+/// sweep's enumeration order (`jobs = 1` is the classic loop).
+pub fn slo_jobs(seed: u64, n_images: u32, jobs: usize) -> Vec<SloRow> {
+    let mut points = Vec::new();
     for &n_cells in &SLO_CELLS {
         for churn in [false, true] {
             for policy in PolicyKind::PAPER {
-                rows.push(slo_run(n_cells, policy, churn, seed, n_images));
+                points.push((n_cells, churn, policy));
             }
         }
     }
-    rows
+    super::run_indexed(jobs, points, |(n_cells, churn, policy)| {
+        slo_run(n_cells, policy, churn, seed, n_images)
+    })
 }
 
 /// Render the sweep: one block per (cells, churn), one line per policy ×

@@ -908,8 +908,9 @@ impl LiveCluster {
     /// recorder's finished task records.
     pub fn take_timeline(&self) -> Option<Timeline> {
         let mut tl = self.timeline.lock().unwrap().take()?;
-        let records = self.recorder.inner.lock().unwrap().records();
-        tl.finalize(&records);
+        let rec = self.recorder.inner.lock().unwrap();
+        tl.finalize(rec.records());
+        drop(rec);
         Some(tl)
     }
 

@@ -10,6 +10,7 @@
 //!                 [--deadline MS]                  # all paper policies
 //! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|
 //!                       fed|churn|churnsweep|slo|overload|gossip|city|all
+//!                 [--jobs N]                            # parallel sweep points
 //!                 [--trace t.jsonl] [--timeline t.csv]  # city: one observed run
 //! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
 //!                 [--interval MS] [--deadline MS] [--side PX]
@@ -96,6 +97,7 @@ fn print_usage() {
          \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
          \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|churnsweep|slo|overload|gossip|city|all\n\
          \x20                 [--images N] [--cells N]   # city/gossip/overload/slo scale knobs\n\
+         \x20                 [--jobs N]                 # sweep points in parallel (default: cores; 1 = classic)\n\
          \x20                 [--trace OUT.jsonl] [--timeline OUT.csv]  # city: adds one observed run\n\
          \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
          \x20                 [--interval MS] [--deadline MS] [--side PX]\n\
@@ -266,6 +268,16 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
 fn cmd_repro(flags: &Flags) -> Result<()> {
     let exp = flags.get("exp").map(String::as_str).unwrap_or("all");
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    // Sweep-point parallelism (DESIGN.md §Engine internals): each point is
+    // an independent seeded run, rows reassemble in enumeration order, so
+    // every N renders byte-identically and `--jobs 1` is the classic loop.
+    let jobs: usize = flags
+        .get("jobs")
+        .map(|s| s.parse())
+        .transpose()
+        .context("--jobs")?
+        .unwrap_or_else(experiments::default_jobs)
+        .max(1);
     let all = exp == "all";
     let mut matched = all;
 
@@ -324,17 +336,17 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
     }
     if all || exp == "fed" {
         matched = true;
-        let rows = experiments::fed(seed);
+        let rows = experiments::fed_jobs(seed, jobs);
         println!("{}", experiments::render_fed(&rows));
     }
     if all || exp == "churn" {
         matched = true;
-        let rows = experiments::churn(seed);
+        let rows = experiments::churn_jobs(seed, jobs);
         println!("{}", experiments::render_churn(&rows));
     }
     if all || exp == "churnsweep" {
         matched = true;
-        let rows = experiments::churnsweep(seed);
+        let rows = experiments::churnsweep_jobs(seed, jobs);
         println!("{}", experiments::render_churnsweep(&rows));
     }
     if all || exp == "overload" {
@@ -343,7 +355,7 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
         // runs a reduced scenario); best-effort floods at 4× that count.
         let n_images: u32 =
             flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(60);
-        let rows = experiments::overload(seed, n_images);
+        let rows = experiments::overload_jobs(seed, n_images, jobs);
         println!("{}", experiments::render_overload(&rows));
     }
     if all || exp == "gossip" {
@@ -352,7 +364,7 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
         // runs a reduced scenario).
         let n_images: u32 =
             flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(200);
-        let rows = experiments::gossip(seed, n_images);
+        let rows = experiments::gossip_jobs(seed, n_images, jobs);
         println!("{}", experiments::render_gossip(&rows));
     }
     if all || exp == "city" {
@@ -363,7 +375,7 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
             flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(24);
         let max_cells: usize =
             flags.get("cells").map(|s| s.parse()).transpose().context("--cells")?.unwrap_or(256);
-        let rows = experiments::city(seed, n_images, max_cells);
+        let rows = experiments::city_jobs(seed, n_images, max_cells, jobs);
         println!("{}", experiments::render_city(&rows));
         // Observability knobs add one dedicated *observed* run (the hier
         // shape at the sweep cap) — the sweep above stays knob-free.
@@ -388,7 +400,7 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
         // runs a reduced scenario); default mirrors the other sweeps.
         let n_images: u32 =
             flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(120);
-        let rows = experiments::slo(seed, n_images);
+        let rows = experiments::slo_jobs(seed, n_images, jobs);
         println!("{}", experiments::render_slo(&rows));
     }
     if !matched {

@@ -68,11 +68,34 @@ impl TaskRecord {
     }
 }
 
+/// TaskIds below this bound index the dense slot table directly; ids at
+/// or above it spill to a hash map. Generated workloads allocate
+/// contiguous per-stream id blocks from 0 (`camera_streams`), so every
+/// experiment id is dense; the spill only sees hand-built scenarios.
+/// The bound caps the slot table at 16 MiB even if a stray large-but-
+/// sub-bound id arrives.
+const DENSE_ID_LIMIT: u64 = 1 << 22;
+
+/// Sentinel for "no record" in the dense slot table.
+const NO_SLOT: u32 = u32::MAX;
+
 /// Collects task records during a run; finalizes into a [`RunSummary`].
+///
+/// Storage is a dense slab: records live in one creation-ordered `Vec`
+/// (so [`Recorder::records`] is a free borrow, no clone and no sort),
+/// and per-task lookup goes through a direct-indexed slot table for the
+/// dense TaskId blocks the workload generator allocates — no hashing on
+/// the per-frame hot path. Out-of-range ids fall back to a spill map,
+/// keeping hand-built scenarios untouched.
 #[derive(Debug, Default)]
 pub struct Recorder {
-    records: HashMap<TaskId, TaskRecord>,
-    order: Vec<TaskId>,
+    /// The records themselves, in creation order.
+    records: Vec<TaskRecord>,
+    /// TaskId.0 → index into `records` for ids < [`DENSE_ID_LIMIT`];
+    /// grown on demand, [`NO_SLOT`] where no record exists.
+    dense: Vec<u32>,
+    /// Slot lookup for ids ≥ [`DENSE_ID_LIMIT`].
+    spill: HashMap<TaskId, u32>,
     /// Node → its cell's edge server, for the cell-local violation check.
     /// Empty (unset) disables the cell check — the device check still runs.
     node_cells: BTreeMap<NodeId, NodeId>,
@@ -83,6 +106,21 @@ pub struct Recorder {
     ttl_expired: usize,
     /// Gossip (`EdgeSummary`) bytes sent, per originating edge.
     gossip_bytes: BTreeMap<NodeId, u64>,
+}
+
+/// Slot of `task` in the record slab, if known. A free function over
+/// the two index fields so callers can keep disjoint borrows of
+/// `records` and the index (Rust tracks per-field borrows only through
+/// direct field access).
+fn slot(dense: &[u32], spill: &HashMap<TaskId, u32>, task: TaskId) -> Option<usize> {
+    if task.0 < DENSE_ID_LIMIT {
+        match dense.get(task.0 as usize) {
+            Some(&i) if i != NO_SLOT => Some(i as usize),
+            _ => None,
+        }
+    } else {
+        spill.get(&task).map(|&i| i as usize)
+    }
 }
 
 impl Recorder {
@@ -102,30 +140,36 @@ impl Recorder {
     /// privacy descriptor ride along so the per-app tables and violation
     /// checks need no registry access.
     pub fn created(&mut self, img: &ImageMeta) {
-        self.order.push(img.task);
-        self.records.insert(
-            img.task,
-            TaskRecord {
-                task: img.task,
-                origin: img.origin,
-                app: img.constraint.app,
-                privacy: img.constraint.privacy,
-                size_kb: img.size_kb,
-                deadline_ms: img.constraint.deadline_ms,
-                created_ms: img.created_ms,
-                placement: Placement::Local,
-                executed_on: None,
-                started_ms: None,
-                completed_ms: None,
-                process_ms: None,
-                requeues: 0,
-                hops: 0,
-                hop_ms: Vec::new(),
-                violations: 0,
-                drop_reason: None,
-                verdict: Verdict::Dropped, // until completed
-            },
-        );
+        let idx = self.records.len() as u32;
+        self.records.push(TaskRecord {
+            task: img.task,
+            origin: img.origin,
+            app: img.constraint.app,
+            privacy: img.constraint.privacy,
+            size_kb: img.size_kb,
+            deadline_ms: img.constraint.deadline_ms,
+            created_ms: img.created_ms,
+            placement: Placement::Local,
+            executed_on: None,
+            started_ms: None,
+            completed_ms: None,
+            process_ms: None,
+            requeues: 0,
+            hops: 0,
+            hop_ms: Vec::new(),
+            violations: 0,
+            drop_reason: None,
+            verdict: Verdict::Dropped, // until completed
+        });
+        if img.task.0 < DENSE_ID_LIMIT {
+            let i = img.task.0 as usize;
+            if i >= self.dense.len() {
+                self.dense.resize(i + 1, NO_SLOT);
+            }
+            self.dense[i] = idx;
+        } else {
+            self.spill.insert(img.task, idx);
+        }
     }
 
     /// The task crossed one backhaul hop (a `Forward` send, initial or
@@ -134,7 +178,8 @@ impl Recorder {
     /// instant also yields the per-hop wait (`TaskRecord::hop_ms`): time
     /// since the previous forward, or since creation for the first hop.
     pub fn forward_hop(&mut self, task: TaskId, at_ms: f64) {
-        if let Some(r) = self.records.get_mut(&task) {
+        if let Some(i) = slot(&self.dense, &self.spill, task) {
+            let r = &mut self.records[i];
             let prev = r.created_ms + r.hop_ms.iter().sum::<f64>();
             r.hop_ms.push(at_ms - prev);
             r.hops += 1;
@@ -170,7 +215,7 @@ impl Recorder {
     /// the first resolution — live mode's resolution counter gates on it,
     /// mirroring [`Recorder::completed`].
     pub fn dropped(&mut self, task: TaskId, reason: DropReason) -> bool {
-        match self.records.get_mut(&task) {
+        match slot(&self.dense, &self.spill, task).map(|i| &mut self.records[i]) {
             Some(r) if r.completed_ms.is_none() && r.drop_reason.is_none() => {
                 r.drop_reason = Some(reason);
                 true
@@ -199,7 +244,8 @@ impl Recorder {
 
     /// Record the placement decision (and check its privacy scope).
     pub fn placed(&mut self, task: TaskId, placement: Placement) {
-        if let Some(r) = self.records.get_mut(&task) {
+        if let Some(i) = slot(&self.dense, &self.spill, task) {
+            let r = &mut self.records[i];
             r.placement = placement;
             // Placement itself is an observation: ToEdge ships the bytes
             // off-device, ToPeerEdge ships them off-cell.
@@ -224,7 +270,8 @@ impl Recorder {
     /// drop or completion won first) are not counted — they are replays of
     /// frames whose outcome can no longer change.
     pub fn requeued(&mut self, task: TaskId) {
-        if let Some(r) = self.records.get_mut(&task) {
+        if let Some(i) = slot(&self.dense, &self.spill, task) {
+            let r = &mut self.records[i];
             if r.completed_ms.is_none() && r.drop_reason.is_none() {
                 r.requeues += 1;
             }
@@ -233,7 +280,8 @@ impl Recorder {
 
     /// Record execution start on `on` (and check its privacy scope).
     pub fn started(&mut self, task: TaskId, on: NodeId, at_ms: f64) {
-        if let Some(r) = self.records.get_mut(&task) {
+        if let Some(i) = slot(&self.dense, &self.spill, task) {
+            let r = &mut self.records[i];
             r.executed_on = Some(on);
             r.started_ms = Some(at_ms);
             // Execution site check: the strongest observation of all.
@@ -256,7 +304,7 @@ impl Recorder {
     /// counter must not double-count a task that already resolved at the
     /// drop.
     pub fn completed(&mut self, task: TaskId, at_ms: f64, process_ms: f64) -> bool {
-        match self.records.get_mut(&task) {
+        match slot(&self.dense, &self.spill, task).map(|i| &mut self.records[i]) {
             Some(r) if r.drop_reason.is_none() => {
                 r.completed_ms = Some(at_ms);
                 r.process_ms = Some(process_ms);
@@ -273,28 +321,41 @@ impl Recorder {
 
     /// The record of one task, if known.
     pub fn get(&self, task: TaskId) -> Option<&TaskRecord> {
-        self.records.get(&task)
+        slot(&self.dense, &self.spill, task).map(|i| &self.records[i])
     }
 
     /// Number of created tasks.
     pub fn len(&self) -> usize {
-        self.order.len()
+        self.records.len()
     }
 
     /// Whether no task was created.
     pub fn is_empty(&self) -> bool {
-        self.order.is_empty()
+        self.records.is_empty()
     }
 
-    /// Records in creation order.
-    pub fn records(&self) -> Vec<TaskRecord> {
-        self.order.iter().filter_map(|t| self.records.get(t)).cloned().collect()
+    /// Records in creation order — a borrow of the slab itself. The
+    /// dense store keeps creation order by construction, so this is
+    /// free: no clone, no sort-on-read (the PR-9 bugfix — finalize
+    /// paths share this one borrow instead of three clones).
+    pub fn records(&self) -> &[TaskRecord] {
+        &self.records
+    }
+
+    /// Move the records out of the recorder (creation order), leaving it
+    /// empty. The zero-copy way to hand the record stream to a
+    /// [`crate::sim::RunReport`] once the run is over; per-task lookups
+    /// stop resolving afterwards.
+    pub fn take_records(&mut self) -> Vec<TaskRecord> {
+        self.dense.clear();
+        self.spill.clear();
+        std::mem::take(&mut self.records)
     }
 
     /// Finalize into an aggregate summary.
     pub fn summarize(&self) -> RunSummary {
-        let records = self.records();
-        let (met, missed, dropped) = super::count_verdicts(&records);
+        let records: &[TaskRecord] = &self.records;
+        let (met, missed, dropped) = super::count_verdicts(records);
         let latencies: Vec<f64> = records.iter().filter_map(|r| r.e2e_ms()).collect();
         let processes: Vec<f64> = records.iter().filter_map(|r| r.process_ms).collect();
         let completed = records.iter().filter(|r| r.completed_ms.is_some());
@@ -324,16 +385,23 @@ impl Recorder {
             records.iter().flat_map(|r| r.hop_ms.iter().copied()).collect();
 
         // Per-app tables, AppId-sorted (BTreeMap — deterministic rows).
-        // Partitioning into owned vectors lets the run-level verdict
-        // counter be reused verbatim.
-        let mut by_app: BTreeMap<AppId, Vec<TaskRecord>> = BTreeMap::new();
-        for r in &records {
-            by_app.entry(r.app).or_default().push(r.clone());
+        // Partitioned by reference: the per-record clone the old
+        // HashMap-backed layout needed is gone.
+        let mut by_app: BTreeMap<AppId, Vec<&TaskRecord>> = BTreeMap::new();
+        for r in records {
+            by_app.entry(r.app).or_default().push(r);
         }
         let per_app = by_app
             .into_iter()
             .map(|(app, recs)| {
-                let (met, missed, dropped) = super::count_verdicts(&recs);
+                let (mut met, mut missed, mut dropped) = (0, 0, 0);
+                for r in &recs {
+                    match r.verdict {
+                        Verdict::Met => met += 1,
+                        Verdict::Missed => missed += 1,
+                        Verdict::Dropped => dropped += 1,
+                    }
+                }
                 let lats: Vec<f64> = recs.iter().filter_map(|r| r.e2e_ms()).collect();
                 AppSummary {
                     app,
@@ -576,6 +644,40 @@ mod tests {
         }
         let ids: Vec<u64> = rec.records().iter().map(|r| r.task.0).collect();
         assert_eq!(ids, vec![5, 2, 9]);
+    }
+
+    #[test]
+    fn spill_ids_beyond_dense_limit_still_record() {
+        // Hand-built ids past the dense slot table land in the spill map
+        // with full lifecycle support, interleaved with dense ids.
+        let mut rec = Recorder::new();
+        let big = DENSE_ID_LIMIT + 7;
+        create(&mut rec, big, 1, 29.0, 1_000.0, 0.0);
+        create(&mut rec, 1, 1, 29.0, 1_000.0, 0.0);
+        rec.started(TaskId(big), NodeId(1), 1.0);
+        rec.completed(TaskId(big), 2.0, 1.0);
+        assert_eq!(rec.get(TaskId(big)).unwrap().verdict, Verdict::Met);
+        assert_eq!(rec.get(TaskId(1)).unwrap().verdict, Verdict::Dropped);
+        // Creation order is the slab order, dense and spilled alike.
+        let ids: Vec<u64> = rec.records().iter().map(|r| r.task.0).collect();
+        assert_eq!(ids, vec![big, 1]);
+        let s = rec.summarize();
+        assert_eq!((s.total, s.met, s.dropped), (2, 1, 1));
+    }
+
+    #[test]
+    fn take_records_moves_the_slab_out() {
+        let mut rec = Recorder::new();
+        create(&mut rec, 1, 1, 29.0, 1_000.0, 0.0);
+        create(&mut rec, DENSE_ID_LIMIT + 1, 1, 29.0, 1_000.0, 0.0);
+        rec.completed(TaskId(1), 2.0, 1.0);
+        let recs = rec.take_records();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].verdict, Verdict::Met);
+        // The recorder is finished: empty slab, no lookups resolve.
+        assert!(rec.is_empty());
+        assert!(rec.get(TaskId(1)).is_none());
+        assert!(rec.get(TaskId(DENSE_ID_LIMIT + 1)).is_none());
     }
 
     #[test]

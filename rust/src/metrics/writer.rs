@@ -240,7 +240,7 @@ mod tests {
         rec.placed(TaskId(1), Placement::Offload(NodeId(2)));
         rec.started(TaskId(1), NodeId(2), 10.0);
         rec.completed(TaskId(1), 500.0, 400.0);
-        rec.records().remove(0)
+        rec.records()[0].clone()
     }
 
     #[test]

@@ -97,6 +97,12 @@ pub struct EdgeNode {
     stale_sum_ms: f64,
     /// Observation count behind `stale_sum_ms`.
     stale_n: u64,
+    /// Reusable buffers for the heartbeat sweep (dead devices, dead peers,
+    /// tasks to requeue). Empty between calls; they exist so a sweep that
+    /// finds nothing allocates nothing (DESIGN.md §Engine internals).
+    scratch_dead: Vec<NodeId>,
+    scratch_dead_peers: Vec<NodeId>,
+    scratch_tasks: Vec<TaskId>,
 }
 
 impl EdgeNode {
@@ -135,6 +141,9 @@ impl EdgeNode {
             timers: None,
             stale_sum_ms: 0.0,
             stale_n: 0,
+            scratch_dead: Vec::new(),
+            scratch_dead_peers: Vec::new(),
+            scratch_tasks: Vec::new(),
         }
     }
 
@@ -318,7 +327,17 @@ impl EdgeNode {
     /// a summary to its own subject, and never echo an entry back to the
     /// neighbor it came from (the copy is guaranteed stale there).
     pub fn gossip_out(&self, now_ms: f64) -> Vec<(EdgeSummary, NodeId)> {
-        let mut out = vec![(self.summary(now_ms), self.id)];
+        let mut out = Vec::new();
+        self.gossip_out_into(now_ms, &mut out);
+        out
+    }
+
+    /// Allocation-lean form of [`EdgeNode::gossip_out`]: clears `out` and
+    /// fills it in place, so a caller ticking every edge every period can
+    /// hold one buffer for the whole run (the sim engine does).
+    pub fn gossip_out_into(&self, now_ms: f64, out: &mut Vec<(EdgeSummary, NodeId)>) {
+        out.clear();
+        out.push((self.summary(now_ms), self.id));
         for p in self.peers.iter() {
             if now_ms - p.updated_ms > self.max_staleness_ms {
                 continue;
@@ -344,7 +363,6 @@ impl EdgeNode {
                 p.via,
             ));
         }
-        out
     }
 
     /// Destination-specific gossip for region-aggregated mode (DESIGN.md
@@ -369,13 +387,24 @@ impl EdgeNode {
     /// it was learned from. Aggregates are ordinary [`EdgeSummary`]
     /// messages — the receive path, wire format and scoring are untouched.
     pub fn gossip_for_peer(&self, peer: NodeId, now_ms: f64) -> Vec<EdgeSummary> {
+        let mut out = Vec::new();
+        self.gossip_for_peer_into(peer, now_ms, &mut out);
+        out
+    }
+
+    /// Allocation-lean form of [`EdgeNode::gossip_for_peer`]: clears `out`
+    /// and fills it in place (one engine-held buffer serves every peer of
+    /// every edge, every tick).
+    pub fn gossip_for_peer_into(&self, peer: NodeId, now_ms: f64, out: &mut Vec<EdgeSummary>) {
+        out.clear();
         let Some(regions) = &self.regions else {
-            return Vec::new();
+            return;
         };
         if !regions.same_region(self.id, peer) {
-            return vec![self.region_aggregate(now_ms, regions)];
+            out.push(self.region_aggregate(now_ms, regions));
+            return;
         }
-        let mut out = vec![self.summary(now_ms)];
+        out.push(self.summary(now_ms));
         if regions.is_leader(self.id) {
             for p in self.peers.iter() {
                 if now_ms - p.updated_ms > self.max_staleness_ms {
@@ -409,7 +438,6 @@ impl EdgeNode {
                 });
             }
         }
-        out
     }
 
     /// One [`EdgeSummary`] describing this edge's *whole region*: own pool
@@ -900,7 +928,7 @@ impl EdgeNode {
 
         // Every suspect-set mutation bumps `suspects_version` — the
         // pipeline's snapshot cache keys on it.
-        let mut dead: Vec<NodeId> = Vec::new();
+        let mut dead = std::mem::take(&mut self.scratch_dead);
         for s in self.table.iter() {
             let age = now_ms - s.updated_ms;
             if age > det.dead_after_ms {
@@ -913,7 +941,7 @@ impl EdgeNode {
                 self.suspects_version += 1;
             }
         }
-        let mut dead_peers: Vec<NodeId> = Vec::new();
+        let mut dead_peers = std::mem::take(&mut self.scratch_dead_peers);
         for p in self.peers.iter() {
             // Registered-but-never-gossiped peers are born maximally stale
             // (live join handshake); they are not evidence of death.
@@ -944,7 +972,7 @@ impl EdgeNode {
             }
         }
 
-        for n in dead {
+        for &n in &dead {
             log::info!("{}: device {n} heartbeat-dead — evicting + requeueing", self.id);
             self.table.deregister(n);
             if self.suspects.remove(&n) {
@@ -952,7 +980,7 @@ impl EdgeNode {
             }
             self.requeue_from(n, now_ms, out);
         }
-        for e in dead_peers {
+        for &e in &dead_peers {
             log::info!("{}: peer edge {e} heartbeat-dead — evicting + requeueing", self.id);
             self.peers.evict(e);
             if self.suspects.remove(&e) {
@@ -960,13 +988,19 @@ impl EdgeNode {
             }
             self.requeue_from(e, now_ms, out);
         }
+        dead.clear();
+        dead_peers.clear();
+        self.scratch_dead = dead;
+        self.scratch_dead_peers = dead_peers;
 
         // Liveness pings toward every registered device (reliable control
         // traffic; devices use inter-ping silence to suspect this edge).
-        let targets: Vec<NodeId> = self.table.iter().map(|s| s.node).collect();
-        for t in targets {
+        // `out` is the engine's own scratch, not borrowed from `self`, so
+        // the pings stream straight off the MP iterator — no intermediate
+        // target list.
+        for s in self.table.iter() {
             out.push(Action::Send {
-                to: t,
+                to: s.node,
                 msg: Message::Ping { from: self.id, sent_ms: now_ms },
                 reliable: true,
             });
@@ -979,13 +1013,17 @@ impl EdgeNode {
     fn requeue_from(&mut self, node: NodeId, now_ms: f64, out: &mut Vec<Action>) {
         // BTreeMap iteration is TaskId-ordered — the requeue order (and
         // through it the record stream) is deterministic by construction.
-        let tasks: Vec<TaskId> = self
-            .offload_target
-            .iter()
-            .filter(|&(_, &target)| target == node)
-            .map(|(&task, _)| task)
-            .collect();
-        for task in tasks {
+        // The side list is unavoidable (the loop body mutates the map),
+        // but its backing storage is reused across sweeps.
+        let mut tasks = std::mem::take(&mut self.scratch_tasks);
+        tasks.extend(
+            self.offload_target
+                .iter()
+                .filter(|&(_, &target)| target == node)
+                .map(|(&task, _)| task),
+        );
+        for i in 0..tasks.len() {
+            let task = tasks[i];
             self.offload_target.remove(&task);
             let Some(img) = self.inflight.remove(&task) else { continue };
             out.push(Action::RecordRequeued { task });
@@ -999,6 +1037,8 @@ impl EdgeNode {
             let budget = if forwarded { 0 } else { self.max_forward_hops };
             self.schedule_image(img, now_ms, forwarded, false, budget, &[], out);
         }
+        tasks.clear();
+        self.scratch_tasks = tasks;
     }
 
     /// Churn: this edge server crashed. Pool, MP table, peer table and all

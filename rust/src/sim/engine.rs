@@ -3,6 +3,7 @@
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashSet};
 
+use crate::core::message::EdgeSummary;
 use crate::core::{ImageMeta, Message, NodeId, TaskId};
 use crate::device::{Action, DeviceNode};
 use crate::metrics::trace::{trace_action, SharedTrace, TraceEvent};
@@ -10,6 +11,7 @@ use crate::metrics::{Recorder, Timeline};
 use crate::net::Topology;
 use crate::scheduler::StageTimers;
 use crate::server::EdgeNode;
+use crate::sim::queue::CalendarQueue;
 use crate::util::SplitMix64;
 
 /// Event payloads.
@@ -108,6 +110,60 @@ impl Ord for Scheduled {
     }
 }
 
+/// Which pending-event structure the engine runs on
+/// ([`Engine::set_queue`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// The classic `BinaryHeap<Scheduled>` — O(log n) per operation.
+    /// Kept as the reference implementation and twin-test baseline.
+    Classic,
+    /// The bucketed calendar queue ([`CalendarQueue`]) — O(1) amortized
+    /// insert/pop with an overflow level for far-future events. The
+    /// default. Pop order is byte-identical to `Classic` by the
+    /// `(at_ms, seq)` tie-break contract.
+    Wheel,
+}
+
+/// The engine's pending-event set: either structure, one pop contract —
+/// strictly ascending `(at_ms, seq)`. The engine-twin test pins the two
+/// to byte-identical replays.
+enum EventQueue {
+    Classic(BinaryHeap<Scheduled>),
+    Wheel(CalendarQueue<Ev>),
+}
+
+impl EventQueue {
+    fn push(&mut self, at_ms: f64, seq: u64, ev: Ev) {
+        match self {
+            EventQueue::Classic(h) => h.push(Scheduled { at_ms, seq, ev }),
+            EventQueue::Wheel(w) => w.push(at_ms, seq, ev),
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, u64, Ev)> {
+        match self {
+            EventQueue::Classic(h) => h.pop().map(|s| (s.at_ms, s.seq, s.ev)),
+            EventQueue::Wheel(w) => w.pop(),
+        }
+    }
+
+    /// Pre-reserve for a scheduling burst. The wheel allocates per
+    /// bucket on demand, so only the heap benefits.
+    fn reserve(&mut self, additional: usize) {
+        if let EventQueue::Classic(h) = self {
+            h.reserve(additional);
+        }
+    }
+
+    /// Tear down into unordered entries (queue migration).
+    fn drain_unordered(&mut self) -> Vec<(f64, u64, Ev)> {
+        match self {
+            EventQueue::Classic(h) => h.drain().map(|s| (s.at_ms, s.seq, s.ev)).collect(),
+            EventQueue::Wheel(w) => w.drain_unordered(),
+        }
+    }
+}
+
 /// One simulated node.
 pub enum SimNode {
     /// A cell's edge server.
@@ -119,7 +175,7 @@ pub enum SimNode {
 /// The discrete-event simulator.
 pub struct Engine {
     now_ms: f64,
-    heap: BinaryHeap<Scheduled>,
+    queue: EventQueue,
     seq: u64,
     nodes: Vec<SimNode>,
     topology: Topology,
@@ -165,6 +221,12 @@ pub struct Engine {
     /// Reusable per-event action buffer (perf: avoids one Vec allocation
     /// per event — EXPERIMENTS.md §Perf change 2).
     scratch: Vec<Action>,
+    /// Reusable transitive-gossip batch ([`EdgeNode::gossip_out_into`]):
+    /// one buffer serves every edge's tick for the whole run.
+    gossip_scratch: Vec<(EdgeSummary, NodeId)>,
+    /// Reusable per-peer batch for region-aggregated gossip
+    /// ([`EdgeNode::gossip_for_peer_into`]).
+    gossip_peer_scratch: Vec<EdgeSummary>,
     /// Run-wide trace sink (DESIGN.md §Observability). `None` (default)
     /// emits nothing; set via [`Engine::set_trace`], which also fans the
     /// sink out to every node.
@@ -196,7 +258,7 @@ impl Engine {
         );
         Self {
             now_ms: 0.0,
-            heap: BinaryHeap::new(),
+            queue: EventQueue::Wheel(CalendarQueue::default()),
             seq: 0,
             nodes,
             topology,
@@ -215,6 +277,8 @@ impl Engine {
             lazy_streams: Vec::new(),
             coalesce_threshold: Self::DEFAULT_COALESCE_THRESHOLD,
             scratch: Vec::with_capacity(16),
+            gossip_scratch: Vec::new(),
+            gossip_peer_scratch: Vec::new(),
             trace: None,
             timeline: None,
         }
@@ -297,6 +361,28 @@ impl Engine {
         self.max_events = cap;
     }
 
+    /// Switch the pending-event structure ([`QueueKind`]). Already-
+    /// scheduled events migrate with their `(at_ms, seq)` keys intact,
+    /// so the replay is unchanged whenever the switch happens — the
+    /// engine-twin test relies on exactly that to compare full runs.
+    pub fn set_queue(&mut self, kind: QueueKind) {
+        let same = matches!(
+            (&self.queue, kind),
+            (EventQueue::Classic(_), QueueKind::Classic) | (EventQueue::Wheel(_), QueueKind::Wheel)
+        );
+        if same {
+            return;
+        }
+        let entries = self.queue.drain_unordered();
+        self.queue = match kind {
+            QueueKind::Classic => EventQueue::Classic(BinaryHeap::with_capacity(entries.len())),
+            QueueKind::Wheel => EventQueue::Wheel(CalendarQueue::default()),
+        };
+        for (at_ms, seq, ev) in entries {
+            self.queue.push(at_ms, seq, ev);
+        }
+    }
+
     /// Is `node` currently failed (churn)?
     pub fn is_dead(&self, node: NodeId) -> bool {
         self.dead[node.0 as usize]
@@ -367,7 +453,7 @@ impl Engine {
     pub fn schedule(&mut self, at_ms: f64, ev: Ev) {
         debug_assert!(at_ms >= self.now_ms, "cannot schedule into the past");
         self.seq += 1;
-        self.heap.push(Scheduled { at_ms, seq: self.seq, ev });
+        self.queue.push(at_ms, self.seq, ev);
     }
 
     /// Seed the workload: register every frame with the recorder and
@@ -402,10 +488,11 @@ impl Engine {
             self.schedule(first_at, Ev::StreamArrival { stream });
             return Ok(());
         }
-        // Perf (EXPERIMENTS.md §Perf change 1): pre-reserve the event heap
-        // for the whole stream plus per-image follow-on events, avoiding
-        // repeated reallocation during the arrival burst.
-        self.heap.reserve(frames.len() * 4);
+        // Perf (EXPERIMENTS.md §Perf change 1): pre-reserve the event
+        // queue for the whole stream plus per-image follow-on events,
+        // avoiding repeated reallocation during the arrival burst (a
+        // no-op for the wheel, which allocates per bucket on demand).
+        self.queue.reserve(frames.len() * 4);
         for img in frames {
             self.recorder.created(img);
             self.created += 1;
@@ -483,7 +570,7 @@ impl Engine {
     /// Run until every task resolves or the horizon passes. Returns the
     /// number of events processed.
     pub fn run(&mut self) -> u64 {
-        while let Some(Scheduled { at_ms, ev, .. }) = self.heap.pop() {
+        while let Some((at_ms, _, ev)) = self.queue.pop() {
             debug_assert!(at_ms + 1e-9 >= self.now_ms);
             self.now_ms = at_ms;
             self.events_processed += 1;
@@ -616,8 +703,9 @@ impl Engine {
                             // across the leader mesh. Split horizon is
                             // applied inside `gossip_for_peer`.
                             for peer in self.topology.linked_peer_edges(edge) {
-                                for s in e.gossip_for_peer(peer, now) {
-                                    let msg = Message::EdgeSummary(s);
+                                e.gossip_for_peer_into(peer, now, &mut self.gossip_peer_scratch);
+                                for s in &self.gossip_peer_scratch {
+                                    let msg = Message::EdgeSummary(*s);
                                     let bytes = crate::core::wire::encoded_len(&msg) as u64;
                                     self.recorder.gossip_bytes(edge, bytes);
                                     if let Some(t) = &self.trace {
@@ -636,9 +724,9 @@ impl Engine {
                             // no backhaul between non-adjacent edges),
                             // with split horizon (never advertise a
                             // subject to itself).
-                            let msgs = e.gossip_out(now);
+                            e.gossip_out_into(now, &mut self.gossip_scratch);
                             for peer in self.topology.linked_peer_edges(edge) {
-                                for (s, learned_from) in &msgs {
+                                for (s, learned_from) in &self.gossip_scratch {
                                     // Split horizon, both directions:
                                     // never advertise a subject to itself,
                                     // and never echo an entry back to the
@@ -1016,6 +1104,35 @@ use crate::config::WorkloadConfig;
         classic.run();
         let s = classic.recorder.summarize();
         assert_eq!(s.met + s.missed + s.dropped, 50);
+    }
+
+    #[test]
+    fn wheel_and_classic_replay_identically() {
+        // Engine-level twin: same seed, same workload, both queue kinds —
+        // identical summary, event count, and end time. (The full
+        // CSV/JSON twin over fed/churn/slo/city lives in
+        // tests/engine_twin.rs.)
+        let run = |kind: QueueKind| {
+            let mut eng = build(PolicyKind::Dds, 60, 50.0, 2_000.0);
+            eng.set_queue(kind);
+            let events = eng.run();
+            (eng.recorder.summarize(), events, eng.now_ms())
+        };
+        assert_eq!(run(QueueKind::Classic), run(QueueKind::Wheel));
+    }
+
+    #[test]
+    fn queue_migration_preserves_pending_events() {
+        // Events were scheduled on the default wheel; migrating them to
+        // the heap afterwards must not change the replay.
+        let mut migrated = build(PolicyKind::Dds, 30, 50.0, 2_000.0);
+        migrated.set_queue(QueueKind::Classic);
+        migrated.set_queue(QueueKind::Classic); // same-kind switch: no-op
+        let ev_a = migrated.run();
+        let mut stock = build(PolicyKind::Dds, 30, 50.0, 2_000.0);
+        let ev_b = stock.run();
+        assert_eq!(ev_a, ev_b);
+        assert_eq!(migrated.recorder.summarize(), stock.recorder.summarize());
     }
 
     // ---- churn (DESIGN.md §Churn) ------------------------------------

@@ -11,9 +11,11 @@
 //! sequence; all randomness flows from the scenario seed.
 
 pub mod engine;
+pub mod queue;
 pub mod scenario;
 pub mod workload;
 
-pub use engine::{Engine, SimError};
+pub use engine::{Engine, QueueKind, SimError};
+pub use queue::CalendarQueue;
 pub use scenario::{RunReport, ScenarioBuilder};
 pub use workload::{ArrivalPattern, ImageStream};

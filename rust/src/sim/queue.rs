@@ -1,0 +1,298 @@
+//! Bucketed calendar queue for the discrete-event engine (DESIGN.md
+//! §Engine internals).
+//!
+//! A [`CalendarQueue`] is a rotating array of fixed-width time buckets
+//! plus one *overflow* level for events beyond the current window
+//! (gossip ticks, churn MTBF cycles, pre-scheduled far-future frames).
+//! Insert hashes the timestamp into its bucket — O(1) amortized — and
+//! pop scans the cursor bucket for the minimum `(at_ms, seq)` key, so
+//! the cost per operation is O(bucket occupancy), not O(log n) over the
+//! whole pending set like the classic binary heap.
+//!
+//! **Tie-break contract** (the determinism pin the engine-twin test
+//! enforces): events pop in strictly ascending `(at_ms, seq)` order —
+//! earliest timestamp first, insertion order within a timestamp —
+//! byte-identical to the `BinaryHeap<Scheduled>` ordering it replaces.
+//! `seq` is unique per queue lifetime, so the order is total.
+//!
+//! Window rotation: when every bucket up to the window edge has
+//! drained, the window advances and overflow events that now fall
+//! inside it are re-bucketed. An all-empty window with a non-empty
+//! overflow jumps straight to the earliest overflow timestamp instead
+//! of rotating through dead air one window span at a time.
+
+/// One queued entry: the ordering key plus the caller's payload.
+#[derive(Debug, Clone)]
+struct Slot<T> {
+    at_ms: f64,
+    seq: u64,
+    item: T,
+}
+
+/// A bucketed timer wheel / calendar queue keyed on `(at_ms, seq)`.
+///
+/// Generic over the payload so benches can drive it with unit payloads;
+/// the engine instantiates it with `Ev`.
+#[derive(Debug, Clone)]
+pub struct CalendarQueue<T> {
+    /// Rotating window of `width_ms`-wide buckets starting at `start_ms`.
+    buckets: Vec<Vec<Slot<T>>>,
+    /// Events at or beyond the window edge.
+    overflow: Vec<Slot<T>>,
+    /// Timestamp of bucket 0's left edge.
+    start_ms: f64,
+    /// Bucket width (ms).
+    width_ms: f64,
+    /// First possibly-non-empty bucket (all earlier buckets drained).
+    cursor: usize,
+    /// Total queued entries across buckets and overflow.
+    len: usize,
+}
+
+/// Default bucket width: 1 ms. Frame service times and tick periods in
+/// this simulator are tens to hundreds of ms, so a 1 ms bucket holds a
+/// handful of events even at city event rates.
+pub const DEFAULT_BUCKET_MS: f64 = 1.0;
+
+/// Default bucket count: a ~1 s window at the default width — wide
+/// enough that container completions (~hundreds of ms out) and gossip /
+/// heartbeat ticks (≤ 400 ms) land in-window, narrow enough that the
+/// wheel stays cache-resident.
+pub const DEFAULT_N_BUCKETS: usize = 1024;
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new(DEFAULT_BUCKET_MS, DEFAULT_N_BUCKETS)
+    }
+}
+
+impl<T> CalendarQueue<T> {
+    /// An empty queue with `n_buckets` buckets of `width_ms` each.
+    pub fn new(width_ms: f64, n_buckets: usize) -> Self {
+        assert!(width_ms > 0.0, "bucket width must be positive");
+        assert!(n_buckets > 0, "need at least one bucket");
+        let mut buckets = Vec::with_capacity(n_buckets);
+        buckets.resize_with(n_buckets, Vec::new);
+        Self { buckets, overflow: Vec::new(), start_ms: 0.0, width_ms, cursor: 0, len: 0 }
+    }
+
+    /// Number of queued events.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The window span (ms) covered by the bucket array.
+    fn span_ms(&self) -> f64 {
+        self.width_ms * self.buckets.len() as f64
+    }
+
+    /// Insert an event. `seq` must be unique and increasing per push —
+    /// the engine's scheduling sequence number — so same-timestamp
+    /// events keep insertion order. O(1) amortized.
+    pub fn push(&mut self, at_ms: f64, seq: u64, item: T) {
+        debug_assert!(at_ms.is_finite(), "NaN/inf event time");
+        let slot = Slot { at_ms, seq, item };
+        let rel = at_ms - self.start_ms;
+        if rel >= 0.0 && rel < self.span_ms() {
+            let idx = (rel / self.width_ms) as usize;
+            // Float edge: rel/width can round up to n on the last sliver.
+            let idx = idx.min(self.buckets.len() - 1);
+            self.buckets[idx].push(slot);
+        } else {
+            // Past-window pushes (possible only before the first pop,
+            // when start_ms has jumped ahead of a caller-held clock that
+            // never popped) and far-future events share the overflow.
+            self.overflow.push(slot);
+        }
+        self.len += 1;
+    }
+
+    /// Remove and return the earliest event by `(at_ms, seq)`.
+    /// O(occupancy of the cursor bucket), amortizing the window sweep.
+    pub fn pop(&mut self) -> Option<(f64, u64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            // Scan forward from the cursor to the first non-empty bucket.
+            while self.cursor < self.buckets.len() {
+                let b = &mut self.buckets[self.cursor];
+                if b.is_empty() {
+                    self.cursor += 1;
+                    continue;
+                }
+                // In-bucket min by the (at_ms, seq) contract. Events in
+                // later buckets have strictly larger timestamps, and the
+                // overflow lies beyond the window edge, so this is the
+                // global minimum.
+                let mut best = 0;
+                for i in 1..b.len() {
+                    let (bi, bb) = (&b[i], &b[best]);
+                    if bi.at_ms < bb.at_ms || (bi.at_ms == bb.at_ms && bi.seq < bb.seq) {
+                        best = i;
+                    }
+                }
+                let slot = b.swap_remove(best);
+                self.len -= 1;
+                return Some((slot.at_ms, slot.seq, slot.item));
+            }
+            // Window drained: rotate. With an empty overflow the queue is
+            // empty (len == 0 was excluded above only if overflow held
+            // something, so overflow must be non-empty here).
+            debug_assert!(!self.overflow.is_empty());
+            // Jump the window to the earliest overflow event instead of
+            // rotating span by span through dead air.
+            let next = self.start_ms + self.span_ms();
+            let min_t = self
+                .overflow
+                .iter()
+                .map(|s| s.at_ms)
+                .fold(f64::INFINITY, f64::min);
+            self.start_ms = if min_t > next { min_t } else { next };
+            self.cursor = 0;
+            // Re-bucket everything that now falls inside the window.
+            let span = self.span_ms();
+            let start = self.start_ms;
+            let width = self.width_ms;
+            let n = self.buckets.len();
+            let mut i = 0;
+            while i < self.overflow.len() {
+                let rel = self.overflow[i].at_ms - start;
+                if rel < span {
+                    let slot = self.overflow.swap_remove(i);
+                    let idx = ((slot.at_ms - start) / width) as usize;
+                    self.buckets[idx.min(n - 1)].push(slot);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Drain every queued event in an arbitrary order (queue migration —
+    /// the receiving queue re-establishes the order on push).
+    pub fn drain_unordered(&mut self) -> Vec<(f64, u64, T)> {
+        let mut out = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            out.extend(b.drain(..).map(|s| (s.at_ms, s.seq, s.item)));
+        }
+        out.extend(self.overflow.drain(..).map(|s| (s.at_ms, s.seq, s.item)));
+        self.len = 0;
+        self.cursor = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = CalendarQueue::new(1.0, 8);
+        q.push(5.0, 1, "a");
+        q.push(2.0, 2, "b");
+        q.push(2.0, 3, "c");
+        q.push(0.5, 4, "d");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, _, v)| v)).collect();
+        assert_eq!(order, vec!["d", "b", "c", "a"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_timestamp_keeps_insertion_order() {
+        let mut q = CalendarQueue::new(1.0, 4);
+        for seq in 1..=50u64 {
+            q.push(3.25, seq, seq);
+        }
+        let popped: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(_, s, _)| s)).collect();
+        assert_eq!(popped, (1..=50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn overflow_events_rotate_into_the_window() {
+        // Window spans 8 ms; events at 100 ms and 1e6 ms live in overflow
+        // until the wheel reaches them (the far one via the jump path).
+        let mut q = CalendarQueue::new(1.0, 8);
+        q.push(100.0, 1, 100);
+        q.push(1_000_000.0, 2, 1_000_000);
+        q.push(3.0, 3, 3);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().map(|(t, _, _)| t), Some(3.0));
+        assert_eq!(q.pop().map(|(t, _, _)| t), Some(100.0));
+        assert_eq!(q.pop().map(|(t, _, _)| t), Some(1_000_000.0));
+        assert_eq!(q.pop().map(|(t, _, _)| t), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_sorted() {
+        // Deterministic pseudo-random workload compared against a sorted
+        // model: the queue must emit a globally non-decreasing stream even
+        // while new (later) events arrive mid-drain.
+        let mut q = CalendarQueue::new(1.0, 16);
+        let mut seq = 0u64;
+        let mut x = 0x9E37u64;
+        let mut step = |q: &mut CalendarQueue<u64>, now: f64| {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let dt = (x >> 33) % 500;
+            seq += 1;
+            q.push(now + dt as f64 * 0.25, seq, seq);
+        };
+        for _ in 0..64 {
+            step(&mut q, 0.0);
+        }
+        let mut last = f64::NEG_INFINITY;
+        let mut popped = 0;
+        while let Some((t, _, _)) = q.pop() {
+            assert!(t >= last, "pop went backwards: {t} after {last}");
+            last = t;
+            popped += 1;
+            if popped % 3 == 0 && popped < 200 {
+                step(&mut q, t);
+            }
+        }
+        assert!(popped > 64);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn matches_binary_heap_order_exactly() {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        // Twin-model test at the queue level: identical (at_ms, seq)
+        // streams out of the wheel and a reference min-heap.
+        let mut wheel = CalendarQueue::default();
+        let mut heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+        let mut x = 7u64;
+        for seq in 1..=2_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let t_q = (x >> 40) as f64 * 0.125; // quantized, so ties occur
+            wheel.push(t_q, seq, ());
+            heap.push(Reverse((t_q.to_bits(), seq)));
+        }
+        while let Some(Reverse((tb, seq))) = heap.pop() {
+            let (wt, wseq, ()) = wheel.pop().expect("wheel drained early");
+            assert_eq!((wt.to_bits(), wseq), (tb, seq));
+        }
+        assert!(wheel.is_empty());
+    }
+
+    #[test]
+    fn drain_unordered_empties_and_preserves_every_entry() {
+        let mut q = CalendarQueue::new(2.0, 4);
+        for seq in 1..=20u64 {
+            q.push(seq as f64 * 3.0, seq, seq);
+        }
+        let mut drained = q.drain_unordered();
+        assert_eq!(drained.len(), 20);
+        assert!(q.is_empty());
+        drained.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        assert_eq!(drained.first().map(|e| e.1), Some(1));
+        assert_eq!(drained.last().map(|e| e.1), Some(20));
+    }
+}

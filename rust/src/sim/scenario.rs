@@ -11,7 +11,7 @@ use crate::net::{CellSpec, FederationShape, RegionMap, Topology};
 use crate::profile::{profile_for, Predictor};
 use crate::scheduler::PolicyKind;
 use crate::server::EdgeNode;
-use crate::sim::engine::{Engine, Ev, SimNode};
+use crate::sim::engine::{Engine, Ev, QueueKind, SimNode};
 use crate::sim::workload::ImageStream;
 use crate::util::SplitMix64;
 
@@ -78,6 +78,14 @@ pub struct ScenarioBuilder {
     trace: Option<TraceHandle>,
     timeline_window_ms: Option<f64>,
     stage_timing: bool,
+    /// Pending-event structure override ([`Engine::set_queue`]). `None`
+    /// keeps the engine default (the bucketed wheel); the engine-twin
+    /// test pins `Classic` and `Wheel` to byte-identical replays.
+    queue_kind: Option<QueueKind>,
+    /// Per-stream coalesce-threshold override
+    /// ([`Engine::set_coalesce_threshold`]); applied before the streams
+    /// are pushed so small test workloads can take the lazy-arrival path.
+    coalesce_threshold: Option<usize>,
 }
 
 impl ScenarioBuilder {
@@ -90,6 +98,8 @@ impl ScenarioBuilder {
             trace: None,
             timeline_window_ms: None,
             stage_timing: false,
+            queue_kind: None,
+            coalesce_threshold: None,
         }
     }
 
@@ -166,6 +176,23 @@ impl ScenarioBuilder {
     /// result rides in [`RunReport::stage_ns`], never in the summary.
     pub fn stage_timing(mut self, on: bool) -> Self {
         self.stage_timing = on;
+        self
+    }
+
+    /// Pin the engine's pending-event structure (builder style). Replays
+    /// are byte-identical under either kind; the knob exists for the
+    /// engine-twin test and as a classic-heap fallback.
+    pub fn queue(mut self, kind: QueueKind) -> Self {
+        self.queue_kind = Some(kind);
+        self
+    }
+
+    /// Override the engine's per-stream coalesce threshold (builder
+    /// style): streams at or above `frames` frames schedule arrivals
+    /// lazily (one in flight per stream). The engine-twin test uses a
+    /// tiny threshold to replay the lazy path under both queue kinds.
+    pub fn coalesce(mut self, frames: usize) -> Self {
+        self.coalesce_threshold = Some(frames);
         self
     }
 
@@ -442,8 +469,18 @@ impl ScenarioBuilder {
         };
 
         let mut eng = Engine::new(nodes, topo, cfg.seed, cfg.profile_period_ms, horizon);
+        // Queue choice first: switching before anything is scheduled
+        // avoids the (order-preserving, but wasteful) migration.
+        if let Some(kind) = self.queue_kind {
+            eng.set_queue(kind);
+        }
         if let Some(cap) = self.max_events {
             eng.set_max_events(cap);
+        }
+        // Coalesce override must precede `push_stream` (the threshold is
+        // consulted as each stream is pushed).
+        if let Some(frames) = self.coalesce_threshold {
+            eng.set_coalesce_threshold(frames);
         }
         // Mid-run joiners exist only after their scheduled join.
         for n in Self::joiners(cfg, &device_ids, &edge_ids) {
@@ -502,7 +539,11 @@ impl ScenarioBuilder {
         summary.snapshot_rebuilds = snapshot_rebuilds;
         summary.snapshot_reuses = snapshot_reuses;
         summary.snapshot_deltas = snapshot_deltas;
-        let records = eng.recorder.records();
+        // One record stream, zero clones (PR-9 bugfix): `summarize`
+        // borrowed the slab above, and the slab itself now moves out of
+        // the recorder to be shared by the timeline finalize, the CSV
+        // writer, and the report.
+        let records = eng.recorder.take_records();
         // The timeline's counting columns (arrivals/completions/met/
         // rejects) come from the finished record stream — the live
         // samples only carried the gauges (queue depth, staleness).
