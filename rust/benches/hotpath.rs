@@ -172,6 +172,7 @@ fn main() {
                 hops_left: 1,
                 visited: &[],
                 app_weight: 1,
+                cloud: None,
             };
             black_box(dds_edge.decide_edge(&ctx));
         }
@@ -198,6 +199,49 @@ fn main() {
                 hops_left: 1,
                 visited: &[],
                 app_weight: 1,
+                cloud: None,
+            };
+            black_box(dds_edge.decide_edge(&ctx));
+        }
+    });
+    r.print_throughput(EDGE_BATCH as f64, "decisions");
+    json.push((r.clone(), Some(per_op_ns(&r, EDGE_BATCH as f64))));
+
+    // Cloud-tail decision (DESIGN.md §4e): an exhausted edge with no MP
+    // or peer candidates, so every decision walks the full fallback tail
+    // (device offload → federation → cloud) and prices the WAN uplink.
+    // New entry for the trajectory — not in the bench_check gate.
+    let cloud_cc = edge_dds::scheduler::CloudCandidate {
+        node: NodeId(42),
+        uplink: LinkModel::new(40.0, 10_000.0, 0.0),
+    };
+    let empty_table = ProfileTable::new();
+    let empty_peers = PeerTable::new();
+    let mut pipe_cloud = EdgePipeline::new(None);
+    let open_frame = &frames[0]; // privacy `open`: the only cloud-eligible class
+    let r = bench("decide_edge(cloud tail) x10k", 3, 30, || {
+        for _ in 0..EDGE_BATCH {
+            let candidates = pipe_cloud.prepare(
+                &empty_table,
+                &empty_peers,
+                &no_suspects,
+                0,
+                &links,
+                open_frame.origin,
+                10.0,
+                200.0,
+            );
+            let ctx = EdgeCtx {
+                now_ms: 10.0,
+                img: black_box(open_frame),
+                edge: edge_snapshot, // saturated: the cloud tail is live
+                predictors: &predictors,
+                candidates,
+                forwarded: false,
+                hops_left: 1,
+                visited: &[],
+                app_weight: 1,
+                cloud: Some(cloud_cc),
             };
             black_box(dds_edge.decide_edge(&ctx));
         }

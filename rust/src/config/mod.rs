@@ -11,7 +11,7 @@ pub mod toml_lite;
 
 pub use schema::{
     AdmissionConfig, AppSpec, CellConfig, ChurnConfig, ChurnEvent, ChurnKind, ChurnTarget,
-    DeviceConfig, FederationConfig, NetworkConfig, RandomChurnConfig, RunMode, SystemConfig,
-    WorkloadConfig,
+    CloudConfig, DeviceConfig, FederationConfig, NetworkConfig, RandomChurnConfig, RunMode,
+    SystemConfig, WorkloadConfig,
 };
 pub use toml_lite::{parse_document, Document, Value};

@@ -284,6 +284,34 @@ impl Default for FederationConfig {
     }
 }
 
+/// Elastic cloud tier behind the federation (`[cloud]` in config files,
+/// DESIGN.md §4e): one cloud node reachable from every edge server over a
+/// WAN uplink. Absent = no cloud node, no uplinks, no new events — legacy
+/// configs replay byte-identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CloudConfig {
+    /// WAN uplink between each edge server and the cloud. Loss is always
+    /// 0: uplink traffic (offloads, results) is sent over reliable
+    /// transport — wired infrastructure, TCP in live mode — mirroring the
+    /// backhaul rule.
+    pub uplink: NetworkConfig,
+    /// Warm containers on the cloud node. Effectively unbounded pay-per-use
+    /// capacity: the default (1024) far exceeds anything a federation can
+    /// ship up one uplink, so offloads never queue behind each other.
+    pub warm_containers: u32,
+}
+
+impl Default for CloudConfig {
+    fn default() -> Self {
+        CloudConfig {
+            // Metro → region WAN: an order of magnitude more latency than
+            // the backhaul, but a fat pipe.
+            uplink: NetworkConfig { latency_ms: 40.0, bandwidth_mbps: 10_000.0, loss_prob: 0.0 },
+            warm_containers: 1024,
+        }
+    }
+}
+
 /// What a scheduled churn event does to its target node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ChurnKind {
@@ -482,6 +510,10 @@ pub struct SystemConfig {
     /// ([`QueueDiscipline::WorkStealing`]). Off by default; takes
     /// precedence over `[[app]] weight` DRR when both are set.
     pub work_stealing: bool,
+    /// Elastic cloud tier (`[cloud]`, DESIGN.md §4e). `None` = no cloud
+    /// node exists anywhere in the run — structurally inert for legacy
+    /// configs.
+    pub cloud: Option<CloudConfig>,
 }
 
 impl Default for SystemConfig {
@@ -522,6 +554,7 @@ impl Default for SystemConfig {
             apps: Vec::new(),
             admission: None,
             work_stealing: false,
+            cloud: None,
         }
     }
 }
@@ -584,6 +617,9 @@ impl SystemConfig {
                 };
                 if class == NodeClass::EdgeServer {
                     bail!("device[{i}]: edge-server belongs in [edge], not [[device]]");
+                }
+                if class == NodeClass::CloudServer {
+                    bail!("device[{i}]: cloud-server belongs in [cloud], not [[device]]");
                 }
                 devices.push(DeviceConfig {
                     class,
@@ -747,6 +783,30 @@ impl SystemConfig {
             None
         };
 
+        let cloud = if doc.tables.contains_key("cloud") {
+            let cd = CloudConfig::default();
+            let warm = doc.i64_or("cloud", "warm_containers", cd.warm_containers as i64);
+            if !(1..=u32::MAX as i64).contains(&warm) {
+                bail!("cloud.warm_containers {warm} out of range 1..=2^32-1");
+            }
+            Some(CloudConfig {
+                uplink: NetworkConfig {
+                    latency_ms: doc.f64_or("cloud", "uplink_latency_ms", cd.uplink.latency_ms),
+                    bandwidth_mbps: doc.f64_or(
+                        "cloud",
+                        "uplink_bandwidth_mbps",
+                        cd.uplink.bandwidth_mbps,
+                    ),
+                    // Uplink traffic is reliable end to end (see
+                    // CloudConfig docs) — no loss knob.
+                    loss_prob: 0.0,
+                },
+                warm_containers: warm as u32,
+            })
+        } else {
+            None
+        };
+
         let fd = FederationConfig::default();
         let shape_name = doc.str_or("federation", "topology", fd.topology.as_str());
         let Some(topology) = FederationShape::parse(shape_name) else {
@@ -791,6 +851,7 @@ impl SystemConfig {
             apps,
             admission,
             work_stealing: doc.bool_or("dispatch", "work_stealing", false),
+            cloud,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1008,6 +1069,17 @@ impl SystemConfig {
             }
             if a.admit_rate_per_s.is_some_and(|r| !(r.is_finite() && r > 0.0)) {
                 bail!("app[{i}] `{}`: admit_rate_per_s must be positive and finite", a.name);
+            }
+        }
+        if let Some(cl) = self.cloud {
+            if !(cl.uplink.latency_ms.is_finite() && cl.uplink.latency_ms >= 0.0) {
+                bail!("cloud.uplink_latency_ms must be non-negative and finite");
+            }
+            if !(cl.uplink.bandwidth_mbps.is_finite() && cl.uplink.bandwidth_mbps > 0.0) {
+                bail!("cloud.uplink_bandwidth_mbps must be positive and finite");
+            }
+            if cl.warm_containers == 0 {
+                bail!("cloud.warm_containers must be >= 1");
             }
         }
         if let Some(ad) = self.admission {

@@ -167,6 +167,14 @@ pub enum Message {
     /// reverse direction needs no ping because UP pushes already act as
     /// device→edge heartbeats.
     Ping { from: NodeId, sent_ms: f64 },
+    /// Edge → cloud: an image shipped up the WAN uplink because the whole
+    /// federation was exhausted (elastic tier, DESIGN.md §4e). `from_edge`
+    /// is the uploading edge, which relays the cloud's `Result` back to
+    /// the frame's origin. Privacy `open` only — the clamp functions
+    /// guarantee constrained frames never reach the encoder. The wire body
+    /// leads with a flags byte reserved at 0; decoders reject any set bit
+    /// (a future layout must define them explicitly).
+    CloudOffload { img: ImageMeta, from_edge: NodeId },
 }
 
 impl Message {
@@ -183,6 +191,7 @@ impl Message {
             Message::Forward { .. } => 0x08,
             Message::EdgeSummary(_) => 0x09,
             Message::Ping { .. } => 0x0A,
+            Message::CloudOffload { .. } => 0x0B,
         }
     }
 
@@ -192,6 +201,7 @@ impl Message {
         match self {
             Message::Image(meta) => meta.size_kb,
             Message::Forward { img, .. } => img.size_kb,
+            Message::CloudOffload { img, .. } => img.size_kb,
             Message::Result { .. } => 1.0,
             _ => 0.25,
         }
@@ -248,6 +258,7 @@ mod tests {
                 via: NodeId(0),
             }),
             Message::Ping { from: NodeId(0), sent_ms: 120.0 },
+            Message::CloudOffload { img: meta(), from_edge: NodeId(0) },
         ];
         let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
         tags.sort_unstable();
@@ -271,6 +282,9 @@ mod tests {
             route: ForwardRoute::first_hop(NodeId(0), 3),
         };
         assert_eq!(f.wire_kb(), 87.0);
+        // The uplink pays the payload too.
+        let c = Message::CloudOffload { img: meta(), from_edge: NodeId(0) };
+        assert_eq!(c.wire_kb(), 87.0);
     }
 
     #[test]

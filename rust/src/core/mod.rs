@@ -64,6 +64,9 @@ pub enum NodeClass {
     RaspberryPi,
     /// Octa-core big.LITTLE, 4 GB (Samsung-class phone).
     SmartPhone,
+    /// Elastic cloud tier behind the federation (DESIGN.md §4e):
+    /// effectively unbounded pay-per-use capacity behind a WAN uplink.
+    CloudServer,
 }
 
 impl NodeClass {
@@ -75,6 +78,10 @@ impl NodeClass {
             NodeClass::EdgeServer => 4,
             NodeClass::RaspberryPi => 4,
             NodeClass::SmartPhone => 4,
+            // "Unbounded" pay-per-use: the cloud never queues on cores —
+            // capacity modeling happens in the elastic container pool, so
+            // the core count only needs to be positive.
+            NodeClass::CloudServer => 64,
         }
     }
 
@@ -84,6 +91,7 @@ impl NodeClass {
             NodeClass::EdgeServer => "edge-server",
             NodeClass::RaspberryPi => "raspberry-pi",
             NodeClass::SmartPhone => "smart-phone",
+            NodeClass::CloudServer => "cloud-server",
         }
     }
 
@@ -93,6 +101,7 @@ impl NodeClass {
             "edge-server" | "edge" => Some(NodeClass::EdgeServer),
             "raspberry-pi" | "rpi" => Some(NodeClass::RaspberryPi),
             "smart-phone" | "phone" => Some(NodeClass::SmartPhone),
+            "cloud-server" | "cloud" => Some(NodeClass::CloudServer),
             _ => None,
         }
     }
@@ -272,6 +281,11 @@ pub enum Placement {
     /// exhausted — forward the image across the backhaul to this peer edge
     /// server, which schedules it inside its own cell.
     ToPeerEdge(NodeId),
+    /// Edge-level decision, elastic tier (DESIGN.md §4e): the whole
+    /// federation is exhausted — ship the frame up the WAN uplink to the
+    /// cloud node. Privacy `open` only; the clamp functions rewrite any
+    /// other class back to `Local` before dispatch.
+    ToCloud(NodeId),
 }
 
 /// Outcome record for one completed (or dropped) task.
@@ -321,10 +335,16 @@ mod tests {
 
     #[test]
     fn node_class_roundtrip() {
-        for c in [NodeClass::EdgeServer, NodeClass::RaspberryPi, NodeClass::SmartPhone] {
+        for c in [
+            NodeClass::EdgeServer,
+            NodeClass::RaspberryPi,
+            NodeClass::SmartPhone,
+            NodeClass::CloudServer,
+        ] {
             assert_eq!(NodeClass::parse(c.as_str()), Some(c));
         }
         assert_eq!(NodeClass::parse("rpi"), Some(NodeClass::RaspberryPi));
+        assert_eq!(NodeClass::parse("cloud"), Some(NodeClass::CloudServer));
         assert_eq!(NodeClass::parse("toaster"), None);
     }
 
@@ -383,7 +403,12 @@ mod tests {
 
     #[test]
     fn cores_positive() {
-        for c in [NodeClass::EdgeServer, NodeClass::RaspberryPi, NodeClass::SmartPhone] {
+        for c in [
+            NodeClass::EdgeServer,
+            NodeClass::RaspberryPi,
+            NodeClass::SmartPhone,
+            NodeClass::CloudServer,
+        ] {
             assert!(c.cores() >= 1);
         }
     }

@@ -37,6 +37,11 @@ const SUM_RELAY_V1: u8 = 0x01;
 /// default app (legacy decode).
 const CF_DESCRIPTOR: u8 = 0x02;
 const CF_KNOWN: u8 = CF_PINNED | CF_DESCRIPTOR;
+/// Flags byte leading every CloudOffload body (elastic tier, DESIGN.md
+/// §4e/§9). All bits are reserved at 0 in v1; decoders reject any set bit
+/// so a future layout must define its flags explicitly rather than being
+/// silently misparsed by old receivers.
+const CLOUD_FLAGS_V1: u8 = 0x00;
 
 /// Encode `msg` into `buf` (cleared first). Returns the frame length.
 pub fn encode(msg: &Message, buf: &mut Vec<u8>) -> usize {
@@ -123,6 +128,11 @@ pub fn encode_append(msg: &Message, buf: &mut Vec<u8>) -> usize {
             put_u32(buf, from.0);
             put_f64(buf, *sent_ms);
         }
+        Message::CloudOffload { img, from_edge } => {
+            buf.push(CLOUD_FLAGS_V1);
+            put_image(buf, img);
+            put_u32(buf, from_edge.0);
+        }
     }
     let body_len = (buf.len() - start - 5) as u32;
     buf[start + 1..start + 5].copy_from_slice(&body_len.to_le_bytes());
@@ -164,6 +174,7 @@ pub fn encoded_len(msg: &Message) -> usize {
             20 + 16 + if s.hops != 0 || s.via != s.edge { 1 + 1 + 4 } else { 0 }
         }
         Message::Ping { .. } => 4 + 8,
+        Message::CloudOffload { img, .. } => 1 + image_len(img) + 4,
     };
     5 + body
 }
@@ -268,6 +279,13 @@ pub enum MessageView<'a> {
         /// Send time (ms).
         sent_ms: f64,
     },
+    /// Tag 0x0B — see [`Message::CloudOffload`].
+    CloudOffload {
+        /// The offloaded frame's metadata.
+        img: ImageMeta,
+        /// Edge that shipped it up the uplink.
+        from_edge: NodeId,
+    },
 }
 
 impl MessageView<'_> {
@@ -284,6 +302,7 @@ impl MessageView<'_> {
             MessageView::Forward { .. } => 0x08,
             MessageView::EdgeSummary(_) => 0x09,
             MessageView::Ping { .. } => 0x0A,
+            MessageView::CloudOffload { .. } => 0x0B,
         }
     }
 
@@ -294,6 +313,7 @@ impl MessageView<'_> {
         match self {
             MessageView::Image(m) => Some(m.task),
             MessageView::Forward { img, .. } => Some(img.task),
+            MessageView::CloudOffload { img, .. } => Some(img.task),
             MessageView::Result { task, .. } => Some(*task),
             _ => None,
         }
@@ -332,6 +352,9 @@ impl MessageView<'_> {
             MessageView::EdgeSummary(s) => Message::EdgeSummary(*s),
             MessageView::Ping { from, sent_ms } => {
                 Message::Ping { from: *from, sent_ms: *sent_ms }
+            }
+            MessageView::CloudOffload { img, from_edge } => {
+                Message::CloudOffload { img: *img, from_edge: *from_edge }
             }
         }
     }
@@ -440,6 +463,15 @@ pub fn view(frame: &[u8]) -> Result<MessageView<'_>> {
             })
         }
         0x0A => MessageView::Ping { from: NodeId(r.u32()?), sent_ms: r.f64()? },
+        0x0B => {
+            let flags = r.u8()?;
+            if flags != CLOUD_FLAGS_V1 {
+                bail!("unknown CloudOffload flag bits 0x{flags:02x}");
+            }
+            let img = get_image(&mut r)?;
+            let from_edge = NodeId(r.u32()?);
+            MessageView::CloudOffload { img, from_edge }
+        }
         t => bail!("unknown tag byte 0x{t:02x}"),
     };
     if r.off != body.len() {
@@ -707,6 +739,18 @@ mod tests {
             via: NodeId(3),
         }));
         roundtrip(Message::Ping { from: NodeId(0), sent_ms: 4_250.5 });
+        roundtrip(Message::CloudOffload {
+            img: ImageMeta {
+                task: TaskId(13),
+                origin: NodeId(4),
+                size_kb: 29.0,
+                side_px: 64,
+                created_ms: 21.0,
+                constraint: Constraint::deadline(5_000.0),
+                seq: 13,
+            },
+            from_edge: NodeId(0),
+        });
     }
 
     #[test]
@@ -984,6 +1028,45 @@ mod tests {
         let mut bad = buf.clone();
         bad[v_off] = 0x7E;
         assert!(decode(&bad).is_err(), "unknown relay version must be rejected");
+    }
+
+    #[test]
+    fn cloud_offload_layout_and_flag_rejection() {
+        // Body layout: [flags u8 = 0][image body][from_edge u32]. The
+        // flags byte is reserved at 0; any set bit must be rejected so a
+        // future layout cannot be misparsed by v1 receivers.
+        let msg = Message::CloudOffload {
+            img: ImageMeta {
+                task: TaskId(7),
+                origin: NodeId(4),
+                size_kb: 29.0,
+                side_px: 64,
+                created_ms: 10.0,
+                constraint: Constraint::deadline(5_000.0),
+                seq: 7,
+            },
+            from_edge: NodeId(0),
+        };
+        let mut buf = Vec::new();
+        let n = encode(&msg, &mut buf);
+        assert_eq!(n, encoded_len(&msg));
+        // header + flags + image body (54 - 5 = 49) + u32 from_edge.
+        assert_eq!(buf.len(), 5 + 1 + 49 + 4);
+        assert_eq!(buf[0], 0x0B);
+        assert_eq!(buf[5], 0x00, "v1 flags byte is reserved at 0");
+        for bad_flags in [0x01u8, 0x02, 0x80, 0xFF] {
+            let mut bad = buf.clone();
+            bad[5] = bad_flags;
+            assert!(
+                decode(&bad).is_err(),
+                "flag bits 0x{bad_flags:02x} must be rejected"
+            );
+        }
+        // The borrowed view agrees with the owned decode.
+        let v = view(&buf).expect("view");
+        assert_eq!(v.tag(), 0x0B);
+        assert_eq!(v.task_id(), Some(TaskId(7)));
+        assert_eq!(v.to_owned(), msg);
     }
 
     #[test]

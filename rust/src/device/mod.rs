@@ -341,10 +341,13 @@ impl DeviceNode {
                 out.push(Action::RecordPlaced { task: img.task, placement: Placement::Local });
                 self.run_local(img, now_ms, out);
             }
-            Placement::ToEdge | Placement::Offload(_) | Placement::ToPeerEdge(_) => {
-                // Devices never target other nodes directly (Offload and
-                // ToPeerEdge are edge-level verdicts): anything non-local
-                // goes to the cell's edge server.
+            Placement::ToEdge
+            | Placement::Offload(_)
+            | Placement::ToPeerEdge(_)
+            | Placement::ToCloud(_) => {
+                // Devices never target other nodes directly (Offload,
+                // ToPeerEdge and ToCloud are edge-level verdicts):
+                // anything non-local goes to the cell's edge server.
                 out.push(Action::RecordPlaced { task: img.task, placement: Placement::ToEdge });
                 self.sent_to_edge.insert(img.task);
                 // Image push is UDP-like in the paper ("we use UDP to send
@@ -482,6 +485,9 @@ impl DeviceNode {
                 crate::core::NodeClass::EdgeServer => 0,
                 crate::core::NodeClass::RaspberryPi => 1,
                 crate::core::NodeClass::SmartPhone => 2,
+                // Never constructed as a Device; the tag is reserved so
+                // the edge's Join handler can tell the tiers apart.
+                crate::core::NodeClass::CloudServer => 3,
             },
             warm_containers: self.pool.warm_count(),
         }

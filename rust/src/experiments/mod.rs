@@ -15,6 +15,7 @@ pub mod overload;
 pub mod parallel;
 pub mod slo;
 pub mod tables;
+pub mod tier;
 
 pub use churn::{
     apply_scenario, churn, churn_config, churn_jobs, churn_run, churnsweep, churnsweep_jobs,
@@ -36,6 +37,10 @@ pub use overload::{
 };
 pub use parallel::{default_jobs, run_indexed};
 pub use slo::{render_slo, slo, slo_config, slo_jobs, slo_run, SloRow, SLO_CELLS};
+pub use tier::{
+    render_tier, tier, tier_config, tier_jobs, tier_run, TierRow, TIER_CELLS, TIER_MULTS,
+    TIER_UPLINKS_MS,
+};
 pub use figures::{fig5, fig6, fig7, fig8, Fig5Row, Fig7Row, Fig8Row};
 pub use tables::{table2, table3, table4, table5, table6, TableRow};
 

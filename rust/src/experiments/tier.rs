@@ -1,0 +1,271 @@
+//! Tier experiment (DESIGN.md §4e): when does offload-to-cloud beat
+//! peer-federation under overload?
+//!
+//! Cell 0's camera runs two equal-rate tenants — **open** (privacy
+//! `open`, cloud-eligible) and **scoped** (privacy `cell_local`, pinned
+//! inside its cell by the clamp) — and the arrival multiplier sweeps the
+//! pair past cell capacity. The federation's other cells contribute no
+//! workload: they are idle peer capacity reachable over the backhaul,
+//! exactly as in the federation experiment. Each sweep point then runs
+//! four arms:
+//!
+//! - **fed** — no `[cloud]`: peer-federation is the only relief valve
+//!   (the PR-6 baseline, byte-identical to a cloud-blind config).
+//! - **one arm per swept uplink latency** — `[cloud]` behind every edge
+//!   at that WAN latency; DDS spills exhausted open frames up the
+//!   uplink, paying the latency toll but never queueing.
+//!
+//! Expected shape (the acceptance narrative): with one cell there are no
+//! peers, so the cloud is the only relief and wins big at any sane
+//! uplink; at 16 cells the idle federation absorbs the same overload and
+//! the slow-uplink cloud arms converge back to the fed arm. The scoped
+//! tenant's met fraction never benefits from the cloud — and the
+//! privacy-violation total printed at the end stays 0, which the CI
+//! smoke step asserts at saturation.
+//!
+//! Baselines (AOR/AOE/EODS) never consult the cloud candidate, so their
+//! cloud arms reproduce their fed arm run-for-run — the paper
+//! comparisons are untouched by the new tier (asserted in tests).
+
+use crate::config::{AppSpec, CloudConfig, SystemConfig};
+use crate::core::{AppId, PrivacyClass};
+use crate::metrics::RunSummary;
+use crate::scheduler::PolicyKind;
+use crate::sim::workload::ArrivalPattern;
+use crate::sim::ScenarioBuilder;
+
+use super::federation::fed_config;
+
+/// Swept one-way WAN uplink latencies (ms). The spread brackets the
+/// crossover: metro-area (20), continental (80), and intercontinental
+/// (320) round trips.
+pub const TIER_UPLINKS_MS: [f64; 3] = [20.0, 80.0, 320.0];
+
+/// Arrival-rate multipliers swept past cell-0 saturation.
+pub const TIER_MULTS: [u32; 3] = [1, 2, 4];
+
+/// Federation sizes compared (1 cell = no peers, the cloud's best case).
+pub const TIER_CELLS: [usize; 3] = [1, 4, 16];
+
+/// One (cells × multiplier × policy × arm) run.
+#[derive(Debug, Clone)]
+pub struct TierRow {
+    /// Federation size.
+    pub cells: usize,
+    /// Arrival-rate multiplier (1× = the base two-tenant scenario).
+    pub mult: u32,
+    /// The policy under test.
+    pub policy: PolicyKind,
+    /// `None` = the fed arm (no `[cloud]`); `Some(ms)` = a cloud arm at
+    /// that one-way uplink latency.
+    pub uplink_ms: Option<f64>,
+    /// Full run summary (cloud cost counters included).
+    pub summary: RunSummary,
+}
+
+/// The two-tenant federation config at arrival multiplier `mult`, with
+/// an optional cloud tier at `uplink_ms`. `n_images` scales each
+/// tenant's stream.
+pub fn tier_config(
+    cells: usize,
+    mult: u32,
+    uplink_ms: Option<f64>,
+    n_images: u32,
+) -> SystemConfig {
+    let mut cfg = fed_config(cells);
+    let m = mult as f64;
+    let app = |name: &str, privacy| AppSpec {
+        name: name.into(),
+        deadline_ms: 1_500.0,
+        privacy,
+        priority: 1,
+        n_images,
+        interval_ms: 100.0 / m,
+        size_kb: 29.0,
+        side_px: 64,
+        pattern: ArrivalPattern::Uniform,
+        weight: None,
+        admit_rate_per_s: None,
+    };
+    cfg.apps = vec![
+        app("open", PrivacyClass::Open),
+        app("scoped", PrivacyClass::CellLocal),
+    ];
+    if let Some(ms) = uplink_ms {
+        let mut cl = CloudConfig::default();
+        cl.uplink.latency_ms = ms;
+        cfg.cloud = Some(cl);
+    }
+    cfg
+}
+
+/// Run one sweep cell.
+pub fn tier_run(
+    cells: usize,
+    mult: u32,
+    policy: PolicyKind,
+    uplink_ms: Option<f64>,
+    seed: u64,
+    n_images: u32,
+) -> TierRow {
+    let mut cfg = tier_config(cells, mult, uplink_ms, n_images);
+    cfg.policy = policy;
+    let report = ScenarioBuilder::new(cfg).seed(seed).run();
+    TierRow { cells, mult, policy, uplink_ms, summary: report.summary }
+}
+
+/// The full sweep: cells × multipliers × the paper's four policies ×
+/// (fed + one arm per uplink latency).
+pub fn tier(seed: u64, n_images: u32) -> Vec<TierRow> {
+    tier_jobs(seed, n_images, 1)
+}
+
+/// [`tier`] over `jobs` worker threads; rows return in the sequential
+/// sweep's enumeration order (`jobs = 1` is the classic loop).
+pub fn tier_jobs(seed: u64, n_images: u32, jobs: usize) -> Vec<TierRow> {
+    let mut points = Vec::new();
+    for &cells in &TIER_CELLS {
+        for &mult in &TIER_MULTS {
+            for policy in PolicyKind::PAPER {
+                points.push((cells, mult, policy, None));
+                for &ms in &TIER_UPLINKS_MS {
+                    points.push((cells, mult, policy, Some(ms)));
+                }
+            }
+        }
+    }
+    super::run_indexed(jobs, points, |(cells, mult, policy, uplink)| {
+        tier_run(cells, mult, policy, uplink, seed, n_images)
+    })
+}
+
+/// Column label for one arm.
+fn arm_label(uplink_ms: Option<f64>) -> String {
+    match uplink_ms {
+        None => "fed".to_string(),
+        Some(ms) => format!("cloud@{ms}ms"),
+    }
+}
+
+/// Render the sweep: one block per (cells, multiplier), per-tenant met
+/// fractions and the cloud cost columns per arm, ending with the
+/// privacy line the CI smoke step asserts on. `cloud_s` is the
+/// cloud-seconds column — the pay-per-use bill of the run.
+pub fn render_tier(rows: &[TierRow]) -> String {
+    let mut out = String::from(
+        "## Tier: offload-to-cloud vs peer-federation under overload\n",
+    );
+    for &cells in &TIER_CELLS {
+        for &mult in &TIER_MULTS {
+            out.push_str(&format!("### {cells} cell(s), arrival rate {mult}x\n"));
+            out.push_str(&format!(
+                "{:>10} {:>12} {:>8} {:>9} {:>9} {:>6} {:>11} {:>9}\n",
+                "policy", "arm", "openMF", "scopedMF", "met", "miss", "cloud_tasks", "cloud_s"
+            ));
+            for policy in PolicyKind::PAPER {
+                for arm in std::iter::once(None).chain(TIER_UPLINKS_MS.iter().copied().map(Some))
+                {
+                    let Some(row) = rows.iter().find(|r| {
+                        r.cells == cells
+                            && r.mult == mult
+                            && r.policy == policy
+                            && r.uplink_ms == arm
+                    }) else {
+                        continue;
+                    };
+                    let frac = |i: u16| {
+                        row.summary.app(AppId(i)).map_or(0.0, |a| a.met_fraction())
+                    };
+                    out.push_str(&format!(
+                        "{:>10} {:>12} {:>8.3} {:>9.3} {:>9} {:>6} {:>11} {:>9.2}\n",
+                        policy.as_str(),
+                        arm_label(arm),
+                        frac(0),
+                        frac(1),
+                        row.summary.met,
+                        row.summary.missed,
+                        row.summary.cloud_tasks,
+                        row.summary.cloud_seconds,
+                    ));
+                }
+            }
+        }
+    }
+    let violations: usize = rows.iter().map(|r| r.summary.privacy_violations).sum();
+    out.push_str(&format!("Tier privacy violations (all runs): {violations}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_config_shape() {
+        let fed = tier_config(4, 2, None, 40);
+        fed.validate().unwrap();
+        assert_eq!(fed.n_cells(), 4);
+        assert_eq!(fed.apps.len(), 2);
+        assert!(fed.cloud.is_none(), "fed arm must be cloud-blind");
+        // Tenants stream in lockstep: same count, same clock.
+        assert_eq!(fed.span_ms(), 40.0 * 50.0);
+        let cl = tier_config(1, 2, Some(320.0), 40);
+        cl.validate().unwrap();
+        let cloud = cl.cloud.expect("cloud arm must configure [cloud]");
+        assert_eq!(cloud.uplink.latency_ms, 320.0);
+    }
+
+    #[test]
+    fn cloud_rescues_a_saturated_lone_cell() {
+        // 1 cell at 4×: no peers exist, so the fed arm drowns while the
+        // metro-latency cloud arm absorbs the open tenant's spill — and
+        // bills for it.
+        let fed = tier_run(1, 4, PolicyKind::Dds, None, 7, 60);
+        let cloud = tier_run(1, 4, PolicyKind::Dds, Some(20.0), 7, 60);
+        assert_eq!(fed.summary.cloud_tasks, 0);
+        assert_eq!(fed.summary.cloud_seconds, 0.0);
+        assert!(cloud.summary.cloud_tasks > 0, "saturated lone cell must spill");
+        assert!(cloud.summary.cloud_seconds > 0.0, "cloud work must be billed");
+        assert!(
+            cloud.summary.met > fed.summary.met,
+            "cloud {} must beat fed {} with no peers at 4x",
+            cloud.summary.met,
+            fed.summary.met
+        );
+        // The privacy wall holds on both arms.
+        assert_eq!(fed.summary.privacy_violations, 0);
+        assert_eq!(cloud.summary.privacy_violations, 0);
+        // Accounting identity holds with the new placement level in play.
+        for r in [&fed, &cloud] {
+            assert_eq!(
+                r.summary.met + r.summary.missed + r.summary.dropped,
+                r.summary.total
+            );
+        }
+    }
+
+    #[test]
+    fn baselines_reproduce_their_fed_arm_exactly() {
+        // Paper comparisons stay intact: a cloud-blind policy's cloud arm
+        // is the same run as its fed arm — same summary, zero cloud use.
+        for policy in [PolicyKind::Aor, PolicyKind::Aoe, PolicyKind::Eods] {
+            let fed = tier_run(1, 2, policy, None, 7, 30);
+            let cloud = tier_run(1, 2, policy, Some(20.0), 7, 30);
+            assert_eq!(cloud.summary.cloud_tasks, 0, "{policy} must stay cloud-blind");
+            assert_eq!(fed.summary, cloud.summary, "{policy} perturbed by [cloud]");
+        }
+    }
+
+    #[test]
+    fn render_has_cost_columns_and_privacy_line() {
+        let rows = vec![
+            tier_run(1, 1, PolicyKind::Dds, None, 7, 10),
+            tier_run(1, 1, PolicyKind::Dds, Some(20.0), 7, 10),
+        ];
+        let s = render_tier(&rows);
+        assert!(s.contains("cloud_tasks"));
+        assert!(s.contains("cloud_s"));
+        assert!(s.contains("cloud@20ms"));
+        assert!(s.contains("Tier privacy violations (all runs): 0"));
+    }
+}

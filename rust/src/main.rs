@@ -9,7 +9,7 @@
 //! edge-dds sweep  [--config cfg.toml] [--images N] [--interval MS]
 //!                 [--deadline MS]                  # all paper policies
 //! edge-dds repro  --exp table2|table3|table4|table5|table6|fig5|fig6|fig7|fig8|
-//!                       fed|churn|churnsweep|slo|overload|gossip|city|all
+//!                       fed|churn|churnsweep|slo|overload|gossip|city|tier|all
 //!                 [--jobs N]                            # parallel sweep points
 //!                 [--trace t.jsonl] [--timeline t.csv]  # city: one observed run
 //! edge-dds live   [--artifacts DIR] [--policy dds] [--images N]
@@ -44,6 +44,13 @@
 //! `weight` keys (weighted-fair DRR dispatch) drive the pipeline's
 //! Admit/Dispatch/Overload stages; `repro --exp overload` sweeps arrival
 //! rate past saturation comparing strict priority vs. admission+fair.
+//!
+//! Elastic cloud tier (DESIGN.md §4e): the `[cloud]` section puts one
+//! pay-per-use cloud node behind every edge server over a WAN uplink;
+//! DDS spills exhausted privacy-`open` frames up the uplink and the run
+//! bills their cloud-seconds. `repro --exp tier` sweeps uplink latency ×
+//! arrival rate × federation size comparing offload-to-cloud against
+//! peer-federation under overload.
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -95,8 +102,8 @@ fn print_usage() {
          \x20                 [--deadline MS] [--seed S] [--csv OUT]\n\
          \x20                 [--trace OUT.jsonl] [--timeline OUT.csv] [--window MS] [--stage-timing]\n\
          \x20 edge-dds sweep  [--config F] [--images N] [--interval MS] [--deadline MS]\n\
-         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|churnsweep|slo|overload|gossip|city|all\n\
-         \x20                 [--images N] [--cells N]   # city/gossip/overload/slo scale knobs\n\
+         \x20 edge-dds repro  --exp table2..table6|fig5..fig8|fed|churn|churnsweep|slo|overload|gossip|city|tier|all\n\
+         \x20                 [--images N] [--cells N]   # city/gossip/overload/slo/tier scale knobs\n\
          \x20                 [--jobs N]                 # sweep points in parallel (default: cores; 1 = classic)\n\
          \x20                 [--trace OUT.jsonl] [--timeline OUT.csv]  # city: adds one observed run\n\
          \x20 edge-dds live   [--artifacts DIR] [--policy P] [--images N]\n\
@@ -402,6 +409,16 @@ fn cmd_repro(flags: &Flags) -> Result<()> {
             flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(120);
         let rows = experiments::slo_jobs(seed, n_images, jobs);
         println!("{}", experiments::render_slo(&rows));
+    }
+    if all || exp == "tier" {
+        matched = true;
+        // --images scales each tenant's stream (the CI smoke step runs a
+        // reduced scenario); the sweep saturates cell 0 at the top
+        // multiplier regardless of the count.
+        let n_images: u32 =
+            flags.get("images").map(|s| s.parse()).transpose().context("--images")?.unwrap_or(40);
+        let rows = experiments::tier_jobs(seed, n_images, jobs);
+        println!("{}", experiments::render_tier(&rows));
     }
     if !matched {
         bail!("unknown experiment `{exp}`");

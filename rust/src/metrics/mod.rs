@@ -34,6 +34,10 @@ pub struct AppSummary {
     pub latency: Option<Summary>,
     /// Privacy-scope violations observed on the app's frames (must be 0).
     pub violations: usize,
+    /// Pay-per-use cloud compute the app's frames consumed, in
+    /// cloud-container-seconds (DESIGN.md §4e). 0.0 without a `[cloud]`
+    /// tier — the cost column every tier-experiment row bills against.
+    pub cloud_seconds: f64,
 }
 
 impl AppSummary {
@@ -119,6 +123,13 @@ pub struct RunSummary {
     /// steady state this stops growing — the acceptance signal for the
     /// zero-allocation receive path.
     pub pool_misses: u64,
+    /// Tasks placed on the elastic cloud tier (placement `ToCloud`) —
+    /// always 0 without a `[cloud]` config (DESIGN.md §4e).
+    pub cloud_tasks: usize,
+    /// Pay-per-use cloud compute consumed, in cloud-container-seconds
+    /// (the sum of cloud `process_ms` over completed cloud placements).
+    /// The tier experiment's cost axis; 0.0 when `cloud_tasks` is 0.
+    pub cloud_seconds: f64,
     /// Per-application outcome tables, AppId-sorted (a registry-less run
     /// has exactly one row, the default app).
     pub per_app: Vec<AppSummary>,

@@ -254,6 +254,12 @@ impl Recorder {
                 (PrivacyClass::DeviceLocal, Placement::Offload(n)) => n != r.origin,
                 (PrivacyClass::DeviceLocal, Placement::ToPeerEdge(_)) => true,
                 (PrivacyClass::CellLocal, Placement::ToPeerEdge(_)) => true,
+                // The WAN uplink leaves both device and cell scope — a
+                // scoped frame placed on the cloud is a violation however
+                // it got there (DESIGN.md §4e). `clamp_placement` makes
+                // this structurally unreachable; the arm is the proof.
+                (PrivacyClass::DeviceLocal, Placement::ToCloud(_)) => true,
+                (PrivacyClass::CellLocal, Placement::ToCloud(_)) => true,
                 (PrivacyClass::CellLocal, Placement::Offload(n)) => {
                     Self::out_of_scope(&self.node_cells, r.privacy, r.origin, n)
                 }
@@ -368,6 +374,18 @@ impl Recorder {
             .iter()
             .filter(|r| matches!(r.placement, Placement::ToPeerEdge(_)))
             .count();
+        // Cloud cost accounting (DESIGN.md §4e): pay-per-use compute is
+        // billed per completed cloud placement, container-seconds.
+        let cloud_tasks = records
+            .iter()
+            .filter(|r| matches!(r.placement, Placement::ToCloud(_)))
+            .count();
+        let cloud_seconds = records
+            .iter()
+            .filter(|r| matches!(r.placement, Placement::ToCloud(_)))
+            .filter_map(|r| r.process_ms)
+            .sum::<f64>()
+            / 1_000.0;
         let requeued = records.iter().filter(|r| r.requeues > 0).count();
         let replaced = records
             .iter()
@@ -411,6 +429,12 @@ impl Recorder {
                     dropped,
                     latency: Summary::of(&lats),
                     violations: recs.iter().map(|r| r.violations as usize).sum(),
+                    cloud_seconds: recs
+                        .iter()
+                        .filter(|r| matches!(r.placement, Placement::ToCloud(_)))
+                        .filter_map(|r| r.process_ms)
+                        .sum::<f64>()
+                        / 1_000.0,
                 }
             })
             .collect();
@@ -443,6 +467,8 @@ impl Recorder {
             gossip_bytes: self.gossip_bytes.clone(),
             pool_hits: 0,
             pool_misses: 0,
+            cloud_tasks,
+            cloud_seconds,
             per_app,
         }
     }
@@ -744,6 +770,68 @@ mod tests {
         assert_eq!(app1.violations, 2);
         let app2 = s.per_app.iter().find(|a| a.app == AppId(2)).unwrap();
         assert_eq!(app2.violations, 2);
+    }
+
+    #[test]
+    fn cloud_cost_accounting_and_scope_violations() {
+        let mut rec = Recorder::new();
+        // Two completed cloud placements for app 0, one for app 1.
+        create(&mut rec, 1, 1, 29.0, 10_000.0, 0.0);
+        rec.placed(TaskId(1), Placement::ToCloud(NodeId(9)));
+        rec.started(TaskId(1), NodeId(9), 50.0);
+        rec.completed(TaskId(1), 300.0, 200.0);
+        create(&mut rec, 2, 1, 29.0, 10_000.0, 0.0);
+        rec.placed(TaskId(2), Placement::ToCloud(NodeId(9)));
+        rec.started(TaskId(2), NodeId(9), 60.0);
+        rec.completed(TaskId(2), 400.0, 300.0);
+        create_app(&mut rec, 3, 1, 29.0, 10_000.0, 0.0,
+            Constraint::for_app(AppId(1), 10_000.0, PrivacyClass::Open, 0));
+        rec.placed(TaskId(3), Placement::ToCloud(NodeId(9)));
+        rec.completed(TaskId(3), 500.0, 150.0);
+        // A cloud placement that never completed bills nothing.
+        create(&mut rec, 4, 1, 29.0, 10_000.0, 0.0);
+        rec.placed(TaskId(4), Placement::ToCloud(NodeId(9)));
+        // A non-cloud completion never bills.
+        create(&mut rec, 5, 1, 29.0, 10_000.0, 0.0);
+        rec.placed(TaskId(5), Placement::ToEdge);
+        rec.completed(TaskId(5), 300.0, 999.0);
+        let s = rec.summarize();
+        assert_eq!(s.cloud_tasks, 4);
+        assert!((s.cloud_seconds - 0.65).abs() < 1e-12);
+        assert_eq!(s.privacy_violations, 0, "open frames may use the cloud");
+        let app0 = s.app(AppId(0)).unwrap();
+        assert!((app0.cloud_seconds - 0.5).abs() < 1e-12);
+        let app1 = s.app(AppId(1)).unwrap();
+        assert!((app1.cloud_seconds - 0.15).abs() < 1e-12);
+        // A cloud-blind run reports exact zeros (structural inertness).
+        let blind = Recorder::new().summarize();
+        assert_eq!(blind.cloud_tasks, 0);
+        assert_eq!(blind.cloud_seconds, 0.0);
+    }
+
+    #[test]
+    fn scoped_frames_on_the_cloud_are_violations() {
+        let mut rec = Recorder::new();
+        create_app(&mut rec, 1, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(1), 1_000.0, PrivacyClass::DeviceLocal, 0));
+        rec.placed(TaskId(1), Placement::ToCloud(NodeId(9)));
+        assert_eq!(rec.get(TaskId(1)).unwrap().violations, 1);
+        create_app(&mut rec, 2, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(2), 1_000.0, PrivacyClass::CellLocal, 0));
+        rec.placed(TaskId(2), Placement::ToCloud(NodeId(9)));
+        assert_eq!(rec.get(TaskId(2)).unwrap().violations, 1);
+        // With the node→cell map (cloud self-governed, as the topology
+        // builds it), *execution* at the cloud is also caught.
+        let mut cells = BTreeMap::new();
+        for (n, e) in [(0u32, 0u32), (1, 0), (9, 9)] {
+            cells.insert(NodeId(n), NodeId(e));
+        }
+        let mut rec2 = Recorder::new();
+        rec2.set_node_cells(cells);
+        create_app(&mut rec2, 3, 1, 29.0, 1_000.0, 0.0,
+            Constraint::for_app(AppId(2), 1_000.0, PrivacyClass::CellLocal, 0));
+        rec2.started(TaskId(3), NodeId(9), 10.0);
+        assert_eq!(rec2.get(TaskId(3)).unwrap().violations, 1);
     }
 
     #[test]

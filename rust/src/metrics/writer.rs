@@ -21,6 +21,7 @@ pub fn csv_line(r: &TaskRecord) -> String {
         Placement::ToEdge => "edge".to_string(),
         Placement::Offload(n) => format!("offload:{n}"),
         Placement::ToPeerEdge(n) => format!("peer-edge:{n}"),
+        Placement::ToCloud(n) => format!("cloud:{n}"),
     };
     // Rejected/shed drops carry their pipeline reason in the verdict
     // column; every other drop (loss, churn, infeasible) keeps the legacy
@@ -94,8 +95,16 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         .per_app
         .iter()
         .map(|a| {
+            // Per-app cloud billing appears only when the app actually
+            // consumed cloud compute — cloud-blind runs serialize
+            // byte-identically (DESIGN.md §4e).
+            let cloud = if a.cloud_seconds > 0.0 {
+                format!(r#","cloud_seconds":{:.3}"#, a.cloud_seconds)
+            } else {
+                String::new()
+            };
             format!(
-                r#"{{"app":{},"total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"violations":{},"latency":{}}}"#,
+                r#"{{"app":{},"total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"violations":{}{},"latency":{}}}"#,
                 a.app.0,
                 a.total,
                 a.met,
@@ -103,6 +112,7 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
                 a.dropped,
                 a.met_fraction(),
                 a.violations,
+                cloud,
                 latency_json(&a.latency)
             )
         })
@@ -156,8 +166,16 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
     } else {
         String::new()
     };
+    // Cloud-tier cost meter (DESIGN.md §4e): appears only when something
+    // was placed on the cloud — cloud-blind and legacy runs serialize
+    // byte-identically.
+    let cloud = if s.cloud_tasks > 0 {
+        format!(r#","cloud_tasks":{},"cloud_seconds":{:.3}"#, s.cloud_tasks, s.cloud_seconds)
+    } else {
+        String::new()
+    };
     format!(
-        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{}{}{}{}{}{},"latency":{},"apps":[{}]}}"#,
+        r#"{{"name":"{}","total":{},"met":{},"missed":{},"dropped":{},"met_fraction":{:.4},"local_fraction":{:.4},"forwarded":{},"requeued":{},"replaced":{},"privacy_violations":{}{}{}{}{}{}{},"latency":{},"apps":[{}]}}"#,
         name,
         s.total,
         s.met,
@@ -174,6 +192,7 @@ pub fn summary_json(name: &str, s: &RunSummary) -> String {
         snapshot,
         gossip,
         pool,
+        cloud,
         latency_json(&s.latency),
         apps.join(",")
     )
@@ -349,6 +368,36 @@ mod tests {
         assert!(!js.contains("snapshot_rebuilds"));
         assert!(!js.contains("gossip_bytes"));
         assert!(!js.contains("pool_hits"));
+        // The cloud cost meter is gated the same way: a cloud-blind run
+        // carries no cloud keys at all (DESIGN.md §4e).
+        assert!(!js.contains("cloud"));
+    }
+
+    #[test]
+    fn cloud_counters_serialize_when_nonzero() {
+        let mut rec = Recorder::new();
+        rec.created(&ImageMeta {
+            task: TaskId(1),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(10_000.0),
+            seq: 1,
+        });
+        rec.placed(TaskId(1), Placement::ToCloud(NodeId(9)));
+        rec.started(TaskId(1), NodeId(9), 50.0);
+        rec.completed(TaskId(1), 300.0, 250.0);
+        let s = rec.summarize();
+        let js = summary_json("tiered", &s);
+        assert!(js.contains(r#""cloud_tasks":1,"cloud_seconds":0.250"#));
+        // The per-app row bills its own share.
+        assert!(js.contains(r#""cloud_seconds":0.250,"latency""#));
+        // And the record CSV spells the placement.
+        let line = csv_line(&rec.records()[0]);
+        let fields: Vec<&str> = line.split(',').collect();
+        assert_eq!(fields[7], "cloud:n9");
+        assert_eq!(fields[fields.len() - 1], "met");
     }
 
     #[test]

@@ -216,7 +216,13 @@ impl Topology {
             self.nodes.len(),
             "node ids must be added densely in order"
         );
-        let cell = if spec.class == NodeClass::EdgeServer {
+        let cell = if spec.class == NodeClass::EdgeServer
+            || spec.class == NodeClass::CloudServer
+        {
+            // Edges open their own cell; the cloud node self-governs too
+            // (it belongs to no edge's cell — `cell_edge_of(cloud)` =
+            // cloud, which is how the recorder detects a `cell_local`
+            // frame that wrongly resolved at the cloud).
             spec.id
         } else {
             // Devices default into the last-opened cell (builders add the
@@ -285,9 +291,20 @@ impl Topology {
         self.nodes.is_empty()
     }
 
-    /// All end devices (non-edge nodes), across every cell.
+    /// All end devices (non-edge, non-cloud nodes), across every cell.
     pub fn devices(&self) -> impl Iterator<Item = &NodeSpec> {
-        self.nodes.iter().filter(|n| n.class != NodeClass::EdgeServer)
+        self.nodes.iter().filter(|n| {
+            n.class != NodeClass::EdgeServer && n.class != NodeClass::CloudServer
+        })
+    }
+
+    /// The cloud node, if the topology has one (elastic tier, DESIGN.md
+    /// §4e). At most one cloud node exists per topology.
+    pub fn cloud(&self) -> Option<NodeId> {
+        self.nodes
+            .iter()
+            .find(|n| n.class == NodeClass::CloudServer)
+            .map(|n| n.id)
     }
 
     /// The first edge server, or `None` for a deviceless/edgeless mesh.
@@ -328,7 +345,9 @@ impl Topology {
     /// End devices belonging to the cell governed by `edge`.
     pub fn devices_in_cell(&self, edge: NodeId) -> impl Iterator<Item = &NodeSpec> {
         self.nodes.iter().filter(move |n| {
-            n.class != NodeClass::EdgeServer && self.cell_edge[n.id.0 as usize] == edge
+            n.class != NodeClass::EdgeServer
+                && n.class != NodeClass::CloudServer
+                && self.cell_edge[n.id.0 as usize] == edge
         })
     }
 

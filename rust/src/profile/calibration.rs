@@ -195,6 +195,19 @@ pub fn profile_for(class: NodeClass) -> ClassProfile {
             cold_new: TABLE4_RPI_COLD_NEW.to_vec(),
             cold_existing: TABLE4_RPI_COLD_EXISTING.to_vec(),
         },
+        NodeClass::CloudServer => ClassProfile {
+            class,
+            // Elastic tier (DESIGN.md §4e): server-grade silicon, a bit
+            // faster than the paper's edge box, with the edge's cold-start
+            // curves. Contention is flat — pay-per-use capacity scales out
+            // instead of queueing, so concurrent offloads do not slow each
+            // other down.
+            speed_factor: 0.8,
+            contention: vec![(1.0, 1.0)],
+            load,
+            cold_new: TABLE3_EDGE_COLD_NEW.to_vec(),
+            cold_existing: TABLE3_EDGE_COLD_EXISTING.to_vec(),
+        },
     }
 }
 

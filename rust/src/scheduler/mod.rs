@@ -30,6 +30,7 @@ pub use pipeline::{AdmissionParams, AdmitVerdict, CandidateSnapshot, EdgePipelin
 pub use policies::{Aoe, Aor, Dds, DdsEnergy, DdsNoAvail, Eods, RandomPolicy, RoundRobin};
 
 use crate::core::{ImageMeta, NodeClass, NodeId, Placement};
+use crate::net::LinkModel;
 use crate::profile::{profile_for, Predictor};
 use crate::util::SplitMix64;
 
@@ -58,6 +59,7 @@ pub struct PredictorSet {
     edge: Predictor,
     rpi: Predictor,
     phone: Predictor,
+    cloud: Predictor,
 }
 
 impl PredictorSet {
@@ -67,6 +69,7 @@ impl PredictorSet {
             edge: Predictor::new(profile_for(NodeClass::EdgeServer)),
             rpi: Predictor::new(profile_for(NodeClass::RaspberryPi)),
             phone: Predictor::new(profile_for(NodeClass::SmartPhone)),
+            cloud: Predictor::new(profile_for(NodeClass::CloudServer)),
         }
     }
 
@@ -76,6 +79,7 @@ impl PredictorSet {
             NodeClass::EdgeServer => &self.edge,
             NodeClass::RaspberryPi => &self.rpi,
             NodeClass::SmartPhone => &self.phone,
+            NodeClass::CloudServer => &self.cloud,
         }
     }
 }
@@ -162,6 +166,22 @@ pub struct EdgeCtx<'a> {
     /// depth ÷ this weight, so heavier tenants tolerate deeper remote
     /// queues before a cell is ruled out.
     pub app_weight: u32,
+    /// The elastic cloud tier behind this edge's WAN uplink, when one is
+    /// configured (DESIGN.md §4e). `None` — the legacy shape — keeps every
+    /// policy cloud-blind: the tier level never fires. Static for the
+    /// whole run (the cloud neither gossips nor churns), so it lives
+    /// outside the candidate snapshot's cache machinery.
+    pub cloud: Option<CloudCandidate>,
+}
+
+/// The edge's static view of the cloud tier: the node to address and the
+/// uplink to cost offloads with (DESIGN.md §4e).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CloudCandidate {
+    /// The cloud node's identity.
+    pub node: NodeId,
+    /// The WAN uplink between this edge and the cloud.
+    pub uplink: LinkModel,
 }
 
 impl EdgeCtx<'_> {

@@ -111,9 +111,14 @@ pub fn edge_intake(privacy: PrivacyClass) -> EdgeIntake {
 /// Edge-level post-place clamp, enforced for *every* policy — including
 /// the churn requeue path, which re-enters the pipeline: a `cell_local`
 /// frame never crosses the backhaul, whatever the Place stage decided.
+/// The cloud uplink (DESIGN.md §4e) is open-only: both constrained
+/// classes clamp `ToCloud` back to `Local`, so no policy bug — present or
+/// future — can leak a constrained frame up the WAN.
 pub fn clamp_placement(privacy: PrivacyClass, placement: Placement) -> Placement {
     match (privacy, placement) {
         (PrivacyClass::CellLocal, Placement::ToPeerEdge(_)) => Placement::Local,
+        (PrivacyClass::CellLocal, Placement::ToCloud(_)) => Placement::Local,
+        (PrivacyClass::DeviceLocal, Placement::ToCloud(_)) => Placement::Local,
         (_, p) => p,
     }
 }
@@ -802,6 +807,19 @@ mod tests {
         assert_eq!(
             clamp_placement(PrivacyClass::CellLocal, Placement::Offload(NodeId(2))),
             Placement::Offload(NodeId(2))
+        );
+        // The cloud uplink is open-only: both constrained classes clamp.
+        assert_eq!(
+            clamp_placement(PrivacyClass::CellLocal, Placement::ToCloud(NodeId(9))),
+            Placement::Local
+        );
+        assert_eq!(
+            clamp_placement(PrivacyClass::DeviceLocal, Placement::ToCloud(NodeId(9))),
+            Placement::Local
+        );
+        assert_eq!(
+            clamp_placement(PrivacyClass::Open, Placement::ToCloud(NodeId(9))),
+            Placement::ToCloud(NodeId(9))
         );
     }
 

@@ -122,6 +122,43 @@ fn peer_fallback(ctx: &EdgeCtx) -> Option<Placement> {
 }
 
 // ---------------------------------------------------------------------
+// Tier-level fallback shared by the DDS family (DESIGN.md §4e): when the
+// whole federation is exhausted — no device candidate, no feasible peer —
+// consider shipping the frame up the WAN uplink to the elastic cloud.
+// Last resort by construction (it runs after `peer_fallback` declined)
+// because the uplink's latency dwarfs the backhaul's; the cloud's
+// unbounded capacity is only worth that toll when the frame would
+// otherwise queue past its deadline. Baselines never call this.
+// ---------------------------------------------------------------------
+
+fn cloud_fallback(ctx: &EdgeCtx) -> Option<Placement> {
+    // Privacy hard filter (DESIGN.md §Constraints & QoS): only `open`
+    // frames may traverse the uplink. `clamp_placement` backstops this on
+    // every dispatch path; deciding it here too keeps the policy honest.
+    if ctx.img.constraint.privacy != PrivacyClass::Open {
+        return None;
+    }
+    let cc = ctx.cloud?;
+    // Same exhaustion rule as the federation level: while the edge pool
+    // has an idle container, local is the cheaper choice.
+    if ctx.edge.busy_containers < ctx.edge.warm_containers {
+        return None;
+    }
+    // Predict uplink transfer + cloud execution. The cloud never queues
+    // (elastic capacity): no busy containers, no backlog, a bare pool.
+    let inp = PredictInput {
+        size_kb: ctx.img.size_kb,
+        link: Some(cc.uplink),
+        busy_containers: 0,
+        warm_containers: 1,
+        queued_images: 0,
+        cpu_load_pct: 0.0,
+    };
+    let t = ctx.predictors.for_class(NodeClass::CloudServer).predict_total_ms(&inp);
+    (t <= ctx.remaining_ms()).then_some(Placement::ToCloud(cc.node))
+}
+
+// ---------------------------------------------------------------------
 // AOR — All On the Raspberry Pi (comparison group 1).
 // ---------------------------------------------------------------------
 
@@ -307,6 +344,11 @@ impl SchedulerPolicy for Dds {
         if let Some(p) = peer_fallback(ctx) {
             return p;
         }
+        // Tier level (DESIGN.md §4e): the whole federation declined —
+        // the elastic cloud is the last resort before queueing locally.
+        if let Some(p) = cloud_fallback(ctx) {
+            return p;
+        }
         Placement::Local
     }
 
@@ -441,6 +483,10 @@ impl SchedulerPolicy for DdsEnergy {
         if let Some(p) = peer_fallback(ctx) {
             return p;
         }
+        // The cloud is mains-powered too — same tier-level last resort.
+        if let Some(p) = cloud_fallback(ctx) {
+            return p;
+        }
         Placement::Local
     }
 
@@ -547,7 +593,7 @@ mod tests {
     use crate::core::{Constraint, ImageMeta, NodeClass, NodeId, TaskId};
     use crate::net::LinkModel;
     use crate::profile::{profile_for, PeerTable, Predictor, ProfileTable};
-    use crate::scheduler::{CandidateSnapshot, LocalSnapshot, PredictorSet};
+    use crate::scheduler::{CandidateSnapshot, CloudCandidate, LocalSnapshot, PredictorSet};
     use once_cell::sync::Lazy;
     use std::collections::BTreeSet;
 
@@ -632,6 +678,7 @@ mod tests {
             hops_left: 1,
             visited: &[],
             app_weight: 1,
+            cloud: None,
         }
     }
 
@@ -658,6 +705,7 @@ mod tests {
             hops_left: 1,
             visited: &[],
             app_weight: 1,
+            cloud: None,
         }
     }
 
@@ -1126,6 +1174,100 @@ mod tests {
         // The energy variant applies the same backhaul filter.
         let mut e = DdsEnergy::new(20.0);
         assert_eq!(e.decide_edge(&fed_ctx(&bound, &s, 4)), Placement::Local);
+    }
+
+    // ---- elastic cloud tier (DESIGN.md §4e) --------------------------
+
+    /// The default §4e uplink: 40 ms WAN RTT share, 10 Gbps, lossless.
+    fn cloud9() -> CloudCandidate {
+        CloudCandidate { node: NodeId(9), uplink: LinkModel::new(40.0, 10_000.0, 0.0) }
+    }
+
+    #[test]
+    fn cloud_is_last_resort_after_federation() {
+        let mut p = Dds::new();
+        let im = img(0, 5_000.0);
+        // No peers, pool exhausted, cloud present → ToCloud.
+        let t = ProfileTable::new();
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let mut ctx = fed_ctx(&im, &s, 4);
+        ctx.cloud = Some(cloud9());
+        assert_eq!(p.decide_edge(&ctx), Placement::ToCloud(NodeId(9)));
+        // A feasible idle peer outranks the cloud — federation first.
+        let mut peers = PeerTable::new();
+        peers.apply(&peer(3, 0, 4, 0.0));
+        let s2 = snap(&t, &peers, &NO_SUSPECTS, im.origin);
+        let mut ctx2 = fed_ctx(&im, &s2, 4);
+        ctx2.cloud = Some(cloud9());
+        assert_eq!(p.decide_edge(&ctx2), Placement::ToPeerEdge(NodeId(3)));
+        // Pool not exhausted → local, never cloud.
+        let mut ctx3 = fed_ctx(&im, &s, 2);
+        ctx3.cloud = Some(cloud9());
+        assert_eq!(p.decide_edge(&ctx3), Placement::Local);
+        // The energy variant sheds to the cloud under the same rule.
+        let mut e = DdsEnergy::new(20.0);
+        let mut ctx4 = fed_ctx(&im, &s, 4);
+        ctx4.cloud = Some(cloud9());
+        assert_eq!(e.decide_edge(&ctx4), Placement::ToCloud(NodeId(9)));
+    }
+
+    #[test]
+    fn cloud_respects_privacy_scopes() {
+        use crate::core::AppId;
+        let t = ProfileTable::new();
+        let mut p = Dds::new();
+        for privacy in [crate::core::PrivacyClass::CellLocal, crate::core::PrivacyClass::DeviceLocal]
+        {
+            let mut im = img(1, 5_000.0);
+            im.constraint = Constraint::for_app(AppId(2), 5_000.0, privacy, 0);
+            let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+            let mut ctx = fed_ctx(&im, &s, 4);
+            ctx.cloud = Some(cloud9());
+            assert_eq!(
+                p.decide_edge(&ctx),
+                Placement::Local,
+                "{privacy:?} frames must never traverse the uplink"
+            );
+        }
+    }
+
+    #[test]
+    fn cloud_declines_when_budget_too_tight() {
+        // 100 ms budget < 40 ms uplink + ~178 ms cloud execution: the
+        // frame queues locally rather than missing in flight.
+        let im = img(0, 100.0);
+        let t = ProfileTable::new();
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let mut ctx = fed_ctx(&im, &s, 4);
+        ctx.cloud = Some(cloud9());
+        let mut p = Dds::new();
+        assert_eq!(p.decide_edge(&ctx), Placement::Local);
+    }
+
+    #[test]
+    fn baselines_are_cloud_blind() {
+        let im = img(2, 5_000.0);
+        let t = ProfileTable::new();
+        let s = snap(&t, &NO_PEERS, &NO_SUSPECTS, im.origin);
+        let mut baselines: Vec<Box<dyn SchedulerPolicy>> = vec![
+            Box::new(Aor),
+            Box::new(Aoe),
+            Box::new(Eods),
+            Box::new(RoundRobin::default()),
+            Box::new(RandomPolicy::new(SplitMix64::new(7))),
+        ];
+        for b in baselines.iter_mut() {
+            for _ in 0..8 {
+                let mut ctx = fed_ctx(&im, &s, 4);
+                ctx.cloud = Some(cloud9());
+                let got = b.decide_edge(&ctx);
+                assert!(
+                    !matches!(got, Placement::ToCloud(_)),
+                    "{} must not use the cloud tier",
+                    b.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -25,8 +25,8 @@ use crate::net::{LinkModel, RegionMap, Topology};
 use crate::profile::{PeerTable, ProfileTable};
 use crate::scheduler::pipeline::{self, AdmitVerdict, EdgeIntake};
 use crate::scheduler::{
-    AdmissionParams, EdgeCtx, EdgePipeline, FailureDetector, LocalSnapshot, PredictorSet,
-    SchedulerPolicy, StageTimers,
+    AdmissionParams, CloudCandidate, EdgeCtx, EdgePipeline, FailureDetector, LocalSnapshot,
+    PredictorSet, SchedulerPolicy, StageTimers,
 };
 use crate::util::Hist;
 
@@ -103,6 +103,11 @@ pub struct EdgeNode {
     scratch_dead: Vec<NodeId>,
     scratch_dead_peers: Vec<NodeId>,
     scratch_tasks: Vec<TaskId>,
+    /// The elastic cloud tier behind the federation, when `[cloud]` is
+    /// configured (DESIGN.md §4e). Static for the run: the cloud neither
+    /// gossips nor churns, so it lives outside every table and snapshot.
+    /// `None` (the default) keeps cloud-blind configs byte-identical.
+    cloud: Option<CloudCandidate>,
 }
 
 impl EdgeNode {
@@ -144,7 +149,17 @@ impl EdgeNode {
             scratch_dead: Vec::new(),
             scratch_dead_peers: Vec::new(),
             scratch_tasks: Vec::new(),
+            cloud: None,
         }
+    }
+
+    /// Attach the elastic cloud tier (builder style; `[cloud]` config —
+    /// DESIGN.md §4e). The DDS family's tier-level fallback may then ship
+    /// `open` frames up the WAN uplink when the whole federation is
+    /// exhausted; baselines and cloud-blind configs never see it.
+    pub fn with_cloud(mut self, cloud: CloudCandidate) -> Self {
+        self.cloud = Some(cloud);
+        self
     }
 
     /// Enable region-aggregated gossip (builder style; wired by the
@@ -495,6 +510,12 @@ impl EdgeNode {
                     // dials peers explicitly; virtual mode auto-registers
                     // on first gossip instead).
                     self.peers.register(node, now_ms);
+                } else if class_tag == 3 {
+                    // The cloud tier announcing itself: static wired
+                    // infrastructure, not an MP device — nothing to
+                    // register (it must never become an Offload
+                    // candidate), but the ack below still settles the
+                    // dialer.
                 } else {
                     let class = match class_tag {
                         2 => NodeClass::SmartPhone,
@@ -698,6 +719,7 @@ impl EdgeNode {
                     .copied()
                     .unwrap_or(1)
                     .max(1),
+                cloud: self.cloud,
             };
             self.policy.decide_edge(&ctx)
         };
@@ -722,6 +744,7 @@ impl EdgeNode {
             let effective = match placement {
                 Placement::Offload(_) => placement,
                 Placement::ToPeerEdge(_) if hops_left > 0 => placement,
+                Placement::ToCloud(_) => placement,
                 _ => Placement::ToEdge,
             };
             self.emit_trace(
@@ -747,6 +770,29 @@ impl EdgeNode {
                 // prevents a burst from all picking the same device.
                 self.bump_busy(target);
                 out.push(Action::Send { to: target, msg: Message::Image(img), reliable: false });
+            }
+            Placement::ToCloud(target) => {
+                // Tier level (DESIGN.md §4e). Only an `open` frame reaches
+                // this arm — `clamp_placement` above rewrote every other
+                // scope back to Local on every path (fresh, requeue,
+                // forwarded terminus alike). Relays keep the originating
+                // edge's record, mirroring the peer-forward rule.
+                if !forwarded {
+                    out.push(Action::RecordPlaced { task: img.task, placement });
+                }
+                // Track for result relay; the uplink target feeds the same
+                // requeue map as any offload, though the cloud is never
+                // suspected (it is in no heartbeat table).
+                self.inflight.insert(img.task, img);
+                self.offload_target.insert(img.task, target);
+                // The WAN uplink is wired infrastructure: send reliably,
+                // like the backhaul (the access hop already carried the
+                // UDP-loss risk).
+                out.push(Action::Send {
+                    to: target,
+                    msg: Message::CloudOffload { img, from_edge: self.id },
+                    reliable: true,
+                });
             }
             Placement::ToPeerEdge(peer) if hops_left > 0 => {
                 // Only the originating edge records the placement; relays
@@ -1330,6 +1376,66 @@ mod tests {
             !out.iter().any(|a| matches!(a, Action::Send { msg: Message::Forward { .. }, .. })),
             "peer capacity exhausted, must fall back to the local queue"
         );
+    }
+
+    #[test]
+    fn exhausted_cell_ships_open_frames_to_cloud_not_scoped_ones() {
+        // No peers gossiped, pool saturated, cloud attached: the fifth
+        // open frame climbs the tier; a cell-local one queues instead.
+        let mut e = fed_edge(PolicyKind::Dds).with_cloud(CloudCandidate {
+            node: NodeId(9),
+            uplink: LinkModel::new(40.0, 10_000.0, 0.0),
+        });
+        let mut out = Vec::new();
+        for t in 1..=4 {
+            e.on_message(Message::Image(img(t, 5_000.0, 1)), 1.0, &mut out);
+        }
+        assert_eq!(e.pool().busy_count(), 4);
+        out.clear();
+        e.on_message(Message::Image(img(5, 5_000.0, 1)), 2.0, &mut out);
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send {
+                to: NodeId(9),
+                msg: Message::CloudOffload { from_edge: NodeId(0), .. },
+                reliable: true
+            }
+        )));
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordPlaced { placement: Placement::ToCloud(NodeId(9)), .. }
+        )));
+        // The privacy clamp holds whatever the Place stage wanted.
+        out.clear();
+        let mut scoped = img(6, 5_000.0, 1);
+        scoped.constraint =
+            Constraint::for_app(crate::core::AppId(0), 5_000.0, PrivacyClass::CellLocal, 0);
+        e.on_message(Message::Image(scoped), 3.0, &mut out);
+        assert!(
+            !out.iter().any(|a| matches!(a, Action::Send { msg: Message::CloudOffload { .. }, .. })),
+            "cell-local frames must never traverse the uplink"
+        );
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::RecordPlaced { placement: Placement::ToEdge, .. }
+        )));
+        // The cloud's result relays home through this edge.
+        out.clear();
+        e.on_message(
+            Message::Result {
+                task: TaskId(5),
+                processed_by: NodeId(9),
+                detections: 0,
+                max_score: 0.0,
+                process_ms: 178.0,
+            },
+            300.0,
+            &mut out,
+        );
+        assert!(out.iter().any(|a| matches!(
+            a,
+            Action::Send { to: NodeId(1), msg: Message::Result { task: TaskId(5), .. }, .. }
+        )));
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! The elastic cloud node (DESIGN.md §4e): a sans-IO state machine for
+//! the pay-per-use tier behind the federation.
+//!
+//! The cloud is deliberately simple compared to an edge: it has no MP
+//! table, no gossip, no failure detector, and no finite pool. Every
+//! `CloudOffload` that arrives over the WAN uplink gets a fresh synthetic
+//! container immediately — elastic capacity scales out instead of
+//! queueing — and the result relays back through the edge that shipped
+//! the frame (origin devices are unreachable from outside their cell).
+//! Cost is accounted downstream by the recorder: each completed cloud
+//! placement bills its `process_ms` as cloud-container-seconds.
+
+use std::collections::HashMap;
+
+use crate::core::{Message, NodeClass, NodeId, TaskId};
+use crate::device::Action;
+use crate::profile::{profile_for, ClassProfile};
+
+/// The cloud tier's node state machine (virtual mode).
+pub struct CloudNode {
+    /// The cloud's node id (last node of a `[cloud]` topology).
+    pub id: NodeId,
+    /// Calibrated timing profile (`NodeClass::CloudServer`): server-grade
+    /// speed, flat contention — concurrent offloads never slow each other.
+    profile: ClassProfile,
+    /// task → the edge that shipped it; results return through it.
+    inflight: HashMap<TaskId, NodeId>,
+    /// Synthetic container index counter. Monotonic and unbounded: each
+    /// offload "provisions" a fresh container, which is exactly the
+    /// pay-per-use model the cost meter bills for.
+    next_container: usize,
+}
+
+impl CloudNode {
+    /// Build the cloud node.
+    pub fn new(id: NodeId) -> Self {
+        Self {
+            id,
+            profile: profile_for(NodeClass::CloudServer),
+            inflight: HashMap::new(),
+            next_container: 0,
+        }
+    }
+
+    /// Network delivery. Only `CloudOffload` means anything here; every
+    /// other tag is ignored (the cloud neither gossips nor joins).
+    pub fn on_message(&mut self, msg: Message, now_ms: f64, out: &mut Vec<Action>) {
+        match msg {
+            Message::CloudOffload { img, from_edge } => {
+                self.inflight.insert(img.task, from_edge);
+                // Elastic capacity: one fresh container per frame, no
+                // queueing (n_busy pinned to 1) and no background load.
+                let process_ms = self.profile.process_ms(img.size_kb, 1, 0.0);
+                let container = self.next_container;
+                self.next_container += 1;
+                out.push(Action::ContainerBusyUntil {
+                    container,
+                    task: img.task,
+                    at_ms: now_ms + process_ms,
+                });
+            }
+            other => log::debug!("cloud: ignoring message tag {}", other.tag()),
+        }
+    }
+
+    /// A synthetic container finished: relay the result back over the
+    /// uplink through the edge that shipped the frame.
+    pub fn on_container_done(
+        &mut self,
+        _container: usize,
+        task: TaskId,
+        process_ms: f64,
+        _now_ms: f64,
+        out: &mut Vec<Action>,
+    ) {
+        let Some(from_edge) = self.inflight.remove(&task) else {
+            log::warn!("cloud: completion for unknown task {task}");
+            return;
+        };
+        out.push(Action::Send {
+            to: from_edge,
+            msg: Message::Result {
+                task,
+                processed_by: self.id,
+                detections: 0,
+                max_score: 0.0,
+                process_ms,
+            },
+            reliable: true,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Constraint, ImageMeta};
+
+    fn img(task: u64) -> ImageMeta {
+        ImageMeta {
+            task: TaskId(task),
+            origin: NodeId(1),
+            size_kb: 29.0,
+            side_px: 64,
+            created_ms: 0.0,
+            constraint: Constraint::deadline(10_000.0),
+            seq: task,
+        }
+    }
+
+    #[test]
+    fn offloads_never_queue_and_results_relay_back() {
+        let mut c = CloudNode::new(NodeId(9));
+        let mut out = Vec::new();
+        // Ten concurrent offloads: each gets its own container and the
+        // same (flat-contention) completion latency — 29 KB at the 0.8×
+        // edge speed factor is 178.4 ms regardless of concurrency.
+        for t in 1..=10u64 {
+            c.on_message(
+                Message::CloudOffload { img: img(t), from_edge: NodeId(0) },
+                100.0,
+                &mut out,
+            );
+        }
+        assert_eq!(out.len(), 10);
+        for (i, a) in out.iter().enumerate() {
+            let Action::ContainerBusyUntil { container, at_ms, .. } = a else {
+                panic!("expected a container assignment, got {a:?}")
+            };
+            assert_eq!(*container, i, "fresh synthetic container per frame");
+            assert!((*at_ms - (100.0 + 223.0 * 0.8)).abs() < 1e-9);
+        }
+        out.clear();
+        c.on_container_done(0, TaskId(1), 178.4, 278.4, &mut out);
+        assert!(matches!(
+            out.as_slice(),
+            [Action::Send {
+                to: NodeId(0),
+                msg: Message::Result { task: TaskId(1), processed_by: NodeId(9), .. },
+                reliable: true
+            }]
+        ));
+        // Unknown completions are ignored, and a drained task stays gone.
+        out.clear();
+        c.on_container_done(0, TaskId(1), 178.4, 300.0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn non_offload_messages_are_ignored() {
+        let mut c = CloudNode::new(NodeId(9));
+        let mut out = Vec::new();
+        c.on_message(Message::Ping { from: NodeId(0), sent_ms: 0.0 }, 0.0, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -11,6 +11,7 @@ use crate::metrics::{Recorder, Timeline};
 use crate::net::Topology;
 use crate::scheduler::StageTimers;
 use crate::server::EdgeNode;
+use crate::sim::cloud::CloudNode;
 use crate::sim::queue::CalendarQueue;
 use crate::util::SplitMix64;
 
@@ -170,6 +171,9 @@ pub enum SimNode {
     Edge(EdgeNode),
     /// An end device.
     Device(DeviceNode),
+    /// The elastic cloud tier behind the federation (at most one per run;
+    /// only built when `[cloud]` is configured — DESIGN.md §4e).
+    Cloud(CloudNode),
 }
 
 /// The discrete-event simulator.
@@ -294,6 +298,9 @@ impl Engine {
             match n {
                 SimNode::Edge(e) => e.set_trace(sink.clone()),
                 SimNode::Device(d) => d.set_trace(sink.clone()),
+                // The cloud emits no node-side events; the driver-owned
+                // dispatch/completion trace covers its lifecycle.
+                SimNode::Cloud(_) => {}
             }
         }
         self.trace = Some(sink);
@@ -419,7 +426,7 @@ impl Engine {
                     e.pipeline().snapshot_reuses,
                     e.pipeline().snapshot_deltas,
                 )),
-                SimNode::Device(_) => None,
+                _ => None,
             })
             .fold((0, 0, 0), |(rb, ru, rd), (r, u, d)| (rb + r, ru + u, rd + d))
     }
@@ -444,7 +451,7 @@ impl Engine {
                 SimNode::Device(d) => {
                     d.battery().map(|b| (d.id, b.pct(), b.consumed_mwh()))
                 }
-                SimNode::Edge(_) => None,
+                _ => None,
             })
             .collect()
     }
@@ -464,7 +471,8 @@ impl Engine {
         for img in frames {
             match self.nodes.get(img.origin.0 as usize) {
                 Some(SimNode::Device(_)) => {}
-                Some(SimNode::Edge(_)) => {
+                // Neither an edge server nor the cloud has a camera.
+                Some(SimNode::Edge(_)) | Some(SimNode::Cloud(_)) => {
                     return Err(SimError::CameraAtEdge { node: img.origin, task: img.task })
                 }
                 None => {
@@ -508,7 +516,7 @@ impl Engine {
             .iter()
             .filter_map(|n| match n {
                 SimNode::Device(d) => Some(d.id),
-                SimNode::Edge(_) => None,
+                _ => None,
             })
             .collect();
         for id in ids {
@@ -609,7 +617,7 @@ impl Engine {
                 } else {
                     match &mut self.nodes[node.0 as usize] {
                         SimNode::Device(d) => d.on_camera_frame(img, now, &mut out),
-                        SimNode::Edge(_) => {
+                        SimNode::Edge(_) | SimNode::Cloud(_) => {
                             // push_stream rejects these up front; a hand-
                             // built schedule degrades gracefully instead
                             // of panicking.
@@ -637,7 +645,7 @@ impl Engine {
                 } else {
                     match &mut self.nodes[node.0 as usize] {
                         SimNode::Device(d) => d.on_camera_frame(img, now, &mut out),
-                        SimNode::Edge(_) => {
+                        SimNode::Edge(_) | SimNode::Cloud(_) => {
                             log::error!("{}", SimError::CameraAtEdge { node, task: img.task });
                             self.resolved.insert(img.task);
                         }
@@ -660,6 +668,7 @@ impl Engine {
                     match &mut self.nodes[to.0 as usize] {
                         SimNode::Device(d) => d.on_message(msg, now, &mut out),
                         SimNode::Edge(e) => e.on_message(msg, now, &mut out),
+                        SimNode::Cloud(c) => c.on_message(msg, now, &mut out),
                     }
                 }
                 self.apply(to, out);
@@ -674,6 +683,9 @@ impl Engine {
                         }
                         SimNode::Edge(e) => {
                             e.on_container_done(container, task, process_ms, now, &mut out)
+                        }
+                        SimNode::Cloud(c) => {
+                            c.on_container_done(container, task, process_ms, now, &mut out)
                         }
                     }
                 }
@@ -779,6 +791,10 @@ impl Engine {
                     match &mut self.nodes[idx] {
                         SimNode::Device(d) => d.fail(),
                         SimNode::Edge(e) => e.fail(),
+                        // Managed-region infrastructure: churn scenarios
+                        // never schedule cloud failures; a hand-built one
+                        // blackholes traffic via `dead` alone.
+                        SimNode::Cloud(_) => {}
                     }
                     if let Some(t) = &self.trace {
                         t.lock().unwrap().emit(now, &TraceEvent::Churn { node, up: false });
@@ -803,6 +819,7 @@ impl Engine {
                             });
                         }
                         SimNode::Edge(e) => e.recover(now),
+                        SimNode::Cloud(_) => {}
                     }
                     if let Some(t) = &self.trace {
                         t.lock().unwrap().emit(now, &TraceEvent::Churn { node, up: true });
@@ -814,6 +831,8 @@ impl Engine {
                 match &mut self.nodes[node.0 as usize] {
                     SimNode::Device(d) => d.pool_mut().set_bg_load(pct),
                     SimNode::Edge(e) => e.pool_mut().set_bg_load(pct),
+                    // Elastic capacity has no meaningful background load.
+                    SimNode::Cloud(_) => {}
                 }
                 self.apply(node, out);
             }

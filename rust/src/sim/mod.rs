@@ -10,11 +10,13 @@
 //! Determinism: events at equal timestamps are ordered by insertion
 //! sequence; all randomness flows from the scenario seed.
 
+pub mod cloud;
 pub mod engine;
 pub mod queue;
 pub mod scenario;
 pub mod workload;
 
+pub use cloud::CloudNode;
 pub use engine::{Engine, QueueKind, SimError};
 pub use queue::CalendarQueue;
 pub use scenario::{RunReport, ScenarioBuilder};

@@ -7,10 +7,11 @@ use crate::core::{ImageMeta, NodeClass, NodeId};
 use crate::device::DeviceNode;
 use crate::metrics::trace::SharedTrace;
 use crate::metrics::{RunSummary, TaskRecord, Timeline};
-use crate::net::{CellSpec, FederationShape, RegionMap, Topology};
+use crate::net::{CellSpec, FederationShape, NodeSpec, RegionMap, Topology};
 use crate::profile::{profile_for, Predictor};
-use crate::scheduler::PolicyKind;
+use crate::scheduler::{CloudCandidate, PolicyKind};
 use crate::server::EdgeNode;
+use crate::sim::cloud::CloudNode;
 use crate::sim::engine::{Engine, Ev, QueueKind, SimNode};
 use crate::sim::workload::ImageStream;
 use crate::util::SplitMix64;
@@ -351,6 +352,28 @@ impl ScenarioBuilder {
             topo.node_mut(id).location =
                 (100.0 * d.cell as f64 + d.location.0, d.location.1);
         }
+        // Elastic cloud tier (DESIGN.md §4e): one cloud node, appended
+        // LAST so every legacy NodeId is unchanged, with a WAN uplink to
+        // every edge server. `[cloud]` absent ⇒ none of this exists — the
+        // topology is bit-identical to before.
+        if let Some(cl) = &self.cfg.cloud {
+            let uplink = cl.uplink.link();
+            let edges: Vec<NodeId> = topo.edges().collect();
+            let cloud = topo.add_node(NodeSpec {
+                id: NodeId(topo.len() as u32),
+                class: NodeClass::CloudServer,
+                warm_containers: cl.warm_containers,
+                cpu_load_pct: 0.0,
+                // Far outside every cell's coordinate band: the cloud is
+                // never a nearest-device candidate (and `devices()`
+                // excludes it anyway).
+                location: (-1_000.0, -1_000.0),
+                has_camera: false,
+            });
+            for e in edges {
+                topo.add_link(e, cloud, uplink);
+            }
+        }
         topo
     }
 
@@ -380,6 +403,21 @@ impl ScenarioBuilder {
             }
             _ => None,
         };
+
+        // Cloud candidate handed to every edge: static for the whole run
+        // (the cloud is managed infrastructure — no gossip, no failure
+        // detection), so it rides outside the snapshot tables. `None`
+        // keeps every legacy decision bit-identical.
+        let cloud = topo.cloud().map(|id| CloudCandidate {
+            node: id,
+            uplink: self
+                .cfg
+                .cloud
+                .as_ref()
+                .expect("topology has a cloud node only when [cloud] is configured")
+                .uplink
+                .link(),
+        });
 
         // Nodes in NodeId order: per cell, the edge then its devices.
         let mut nodes = Vec::with_capacity(topo.len());
@@ -415,6 +453,9 @@ impl ScenarioBuilder {
             if let Some(r) = &regions {
                 edge_node = edge_node.with_regions(r.clone());
             }
+            if let Some(cc) = cloud {
+                edge_node = edge_node.with_cloud(cc);
+            }
             nodes.push(SimNode::Edge(edge_node));
             for (i, d) in cfg.devices.iter().enumerate() {
                 if d.cell != c as u32 {
@@ -445,6 +486,10 @@ impl ScenarioBuilder {
                 }
                 nodes.push(SimNode::Device(node));
             }
+        }
+        // The cloud node goes LAST, matching its topology id.
+        if let Some(cc) = cloud {
+            nodes.push(SimNode::Cloud(CloudNode::new(cc.node)));
         }
 
         // Per-cell workload streams: one per cell with a camera.
@@ -874,6 +919,38 @@ mod tests {
         assert_eq!(r.summary.total, 30);
         let ids = ScenarioBuilder::device_ids(&SystemConfig::default());
         assert!(r.records.iter().all(|rec| rec.origin == ids[0]));
+    }
+
+    #[test]
+    fn cloud_tier_engages_under_overload_without_violations() {
+        // Saturate the single-cell testbed hard: with `[cloud]` configured
+        // the DDS tail spills exhausted open frames over the uplink, bills
+        // cloud-seconds for them, and never ships a scoped frame.
+        let mut cfg = SystemConfig::default();
+        cfg.policy = PolicyKind::Dds;
+        cfg.cloud = Some(crate::config::CloudConfig::default());
+        let r =
+            ScenarioBuilder::new(cfg).workload(wl(200, 2.0, 1_500.0)).seed(3).run();
+        assert_eq!(r.summary.total, 200);
+        assert!(r.summary.cloud_tasks > 0, "saturated cell must spill to the cloud");
+        assert!(r.summary.cloud_seconds > 0.0, "completed cloud work must be billed");
+        assert_eq!(r.summary.privacy_violations, 0);
+        assert_eq!(r.summary.met + r.summary.missed + r.summary.dropped, 200);
+    }
+
+    #[test]
+    fn cloud_node_rides_last_with_uplinks_to_every_edge() {
+        let mut cfg = crate::experiments::fed_config(2);
+        cfg.cloud = Some(crate::config::CloudConfig::default());
+        let topo = ScenarioBuilder::new(cfg).topology();
+        let cloud = topo.cloud().expect("[cloud] configured");
+        assert_eq!(cloud.0 as usize, topo.len() - 1, "cloud id is last");
+        for e in topo.edges() {
+            assert!(topo.link(e, cloud).is_some(), "edge {e} needs an uplink");
+            assert!(topo.link(cloud, e).is_some(), "uplink is symmetric");
+        }
+        // Self-governed cell: scoped frames resolving here are detectable.
+        assert_eq!(topo.cell_edge_of(cloud), cloud);
     }
 
     #[test]

@@ -14,7 +14,8 @@
 
 use edge_dds::config::{SystemConfig, WorkloadConfig};
 use edge_dds::experiments::{
-    apply_scenario, churn_config, city_config, fed_config, slo_config, ChurnScenario,
+    apply_scenario, churn_config, city_config, fed_config, slo_config, tier_config,
+    ChurnScenario,
 };
 use edge_dds::metrics::{csv_line, writer::summary_json};
 use edge_dds::net::FederationShape;
@@ -100,6 +101,20 @@ fn city_twin_is_byte_identical() {
     assert_twin("city mesh-4", || {
         ScenarioBuilder::new(city_config(4, FederationShape::Mesh, 12)).seed(3)
     });
+}
+
+#[test]
+fn tier_twin_is_byte_identical() {
+    // Cloud uplink events in flight (DESIGN.md §4e): a saturated lone
+    // cell spills its open tenant over the WAN uplink, so CloudOffload
+    // sends, synthetic cloud-container completions and Result relays all
+    // ride the pending-event structure under test.
+    assert_twin("tier cloud 1-cell 4x", || {
+        ScenarioBuilder::new(tier_config(1, 4, Some(20.0), 40)).seed(7)
+    });
+    // The twin is only meaningful if the uplink actually carried frames.
+    let r = ScenarioBuilder::new(tier_config(1, 4, Some(20.0), 40)).seed(7).run();
+    assert!(r.summary.cloud_tasks > 0, "twin scenario must put uplink events in flight");
 }
 
 #[test]

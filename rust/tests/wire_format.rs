@@ -1,5 +1,5 @@
 //! Wire-format coverage: exhaustive roundtrips over every message tag
-//! (0x01–0x0A) — including the versioned app/privacy/priority constraint
+//! (0x01–0x0B) — including the versioned app/privacy/priority constraint
 //! descriptor — plus corrupted/truncated-frame rejection (a malformed
 //! frame must yield a decode error, never a panic) and a legacy-decode
 //! proof that pre-registry frames decode as the default app.
@@ -124,6 +124,12 @@ fn all_messages() -> Vec<Message> {
         }),
         // 0x0A
         Message::Ping { from: NodeId(0), sent_ms: 4_250.5 },
+        // 0x0B (flag-versioned: the leading CLOUD_FLAGS_V1 byte is
+        // all-zero today; full descriptor + pinned constraint aboard).
+        Message::CloudOffload {
+            img: app_image(103, PrivacyClass::Open),
+            from_edge: NodeId(0),
+        },
     ]
 }
 
@@ -135,7 +141,7 @@ fn roundtrip_every_tag() {
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
     tags.sort_unstable();
     tags.dedup();
-    assert_eq!(tags, (0x01..=0x0A).collect::<Vec<u8>>(), "a wire tag is untested");
+    assert_eq!(tags, (0x01..=0x0B).collect::<Vec<u8>>(), "a wire tag is untested");
 
     let mut buf = Vec::new();
     for msg in msgs {
@@ -153,7 +159,7 @@ fn view_matches_owned_decode_for_every_tag() {
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
     tags.sort_unstable();
     tags.dedup();
-    assert_eq!(tags, (0x01..=0x0A).collect::<Vec<u8>>(), "a wire tag is untested");
+    assert_eq!(tags, (0x01..=0x0B).collect::<Vec<u8>>(), "a wire tag is untested");
 
     let mut buf = Vec::new();
     for msg in msgs {
@@ -453,6 +459,43 @@ fn descriptor_corruption_is_rejected() {
 }
 
 #[test]
+fn cloud_offload_unknown_flags_are_rejected() {
+    // Tag 0x0B leads with a version/flags byte (DESIGN.md §9). V1 is
+    // all-zero; a frame from a future sender with ANY unknown bit set
+    // must be refused by both decode paths, never silently misparsed.
+    let msg = Message::CloudOffload { img: sample_image(60), from_edge: NodeId(4) };
+    let mut buf = Vec::new();
+    encode(&msg, &mut buf);
+    assert_eq!(buf[0], 0x0B);
+    assert_eq!(buf[5], 0x00, "CLOUD_FLAGS_V1 must encode as all-zero");
+    for bit in 0..8 {
+        let mut bad = buf.clone();
+        bad[5] |= 1 << bit;
+        assert!(decode(&bad).is_err(), "unknown cloud flag bit {bit} must be rejected");
+        assert!(view(&bad).is_err(), "view must reject cloud flag bit {bit} too");
+    }
+    // The all-zero frame still roundtrips through both paths.
+    assert_eq!(decode(&buf).unwrap(), msg);
+    assert_eq!(view(&buf).unwrap().to_owned(), msg);
+}
+
+#[test]
+fn legacy_tags_encode_unchanged_by_the_cloud_tag() {
+    // Adding 0x0B must not shift a single byte of any pre-cloud frame:
+    // hand-assemble the classic Ping layout (the newest pre-cloud tag)
+    // and pin it against today's encoder.
+    let msg = Message::Ping { from: NodeId(7), sent_ms: 1_234.5 };
+    let mut expected = vec![0x0Au8];
+    expected.extend_from_slice(&12u32.to_le_bytes());
+    expected.extend_from_slice(&7u32.to_le_bytes());
+    expected.extend_from_slice(&1_234.5f64.to_le_bytes());
+    let mut buf = Vec::new();
+    encode(&msg, &mut buf);
+    assert_eq!(buf, expected, "pre-cloud frames must be byte-identical");
+    assert_eq!(decode(&expected).unwrap(), msg);
+}
+
+#[test]
 fn read_frame_rejects_oversized_bodies() {
     // A hostile header advertising a 65 MiB body must be refused before
     // allocation.
@@ -527,7 +570,7 @@ fn arb_user(r: &mut SplitMix64) -> UserRequest {
 }
 
 fn arb_message(r: &mut SplitMix64) -> Message {
-    match r.randint(1, 10) {
+    match r.randint(1, 11) {
         1 => Message::User(arb_user(r)),
         2 => Message::Activate { request: arb_user(r), reply_to: arb_node(r) },
         3 => Message::Image(arb_image_meta(r)),
@@ -582,7 +625,10 @@ fn arb_message(r: &mut SplitMix64) -> Message {
                 via,
             })
         }
-        _ => Message::Ping { from: arb_node(r), sent_ms: r.range(0.0, 1e7) },
+        10 => Message::Ping { from: arb_node(r), sent_ms: r.range(0.0, 1e7) },
+        // Any constraint rides the uplink at the wire layer — the privacy
+        // clamp is a scheduler invariant, not a codec one.
+        _ => Message::CloudOffload { img: arb_image_meta(r), from_edge: arb_node(r) },
     }
 }
 
@@ -590,7 +636,7 @@ fn arb_message(r: &mut SplitMix64) -> Message {
 fn property_arbitrary_valid_messages_roundtrip_with_parity() {
     let mut r = SplitMix64::new(0xC17F_EED5);
     let mut buf = Vec::new();
-    let mut tags_seen = [false; 11];
+    let mut tags_seen = [false; 12];
     for _ in 0..500 {
         let msg = arb_message(&mut r);
         tags_seen[msg.tag() as usize] = true;
